@@ -1,0 +1,252 @@
+"""AOT export: lower every Layer-2 graph to HLO text + write the manifest.
+
+Interchange format is HLO *text*, not a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the rust ``xla`` crate) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See ``/opt/xla-example/README.md``.
+
+Artifacts produced (``make artifacts``):
+
+* ``fwdbwd_<preset>.hlo.txt``   — (params…, tokens) → (loss, grads…)
+* ``eval_<preset>.hlo.txt``     — (params…, tokens) → (loss,)
+* ``trion_<R>x<C>_r<r>.hlo.txt``      — per distinct linear-layer shape
+* ``dctadamw_<R>x<C>_r<r>.hlo.txt``   — per distinct linear-layer shape
+* ``dion_<R>x<C>_r<r>.hlo.txt``       — baseline graph (cross-checks)
+* ``kernel_*.hlo.txt``          — L1 kernel smoke artifacts for rust tests
+* ``manifest.json``             — shapes/dtypes/order for every artifact
+
+The manifest is the contract with ``rust/src/runtime/artifacts.rs``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import optim_graphs as OG
+from .kernels import ref
+
+F32 = "f32"
+I32 = "i32"
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _io(name, shape, dtype=F32):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+class Exporter:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.entries = []
+        os.makedirs(out_dir, exist_ok=True)
+
+    def export(self, name: str, fn, arg_specs, inputs, outputs, kind: str,
+               meta=None):
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        self.entries.append({
+            "name": name, "file": fname, "kind": kind,
+            "inputs": inputs, "outputs": outputs, "meta": meta or {},
+        })
+        print(f"  [{time.time()-t0:6.1f}s] {fname}  ({len(text)//1024} KiB)",
+              flush=True)
+
+    def write_manifest(self, extra):
+        path = os.path.join(self.out_dir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump({"artifacts": self.entries, **extra}, f, indent=1)
+        print(f"wrote {path} ({len(self.entries)} artifacts)")
+
+
+def export_model_graphs(ex: Exporter, preset: str, batch_per_worker: int):
+    cfg = M.PRESETS[preset]
+    specs = M.param_specs(cfg)
+    p_specs = [spec(s.shape) for s in specs]
+    tok = spec((batch_per_worker, cfg.seq_len), jnp.int32)
+    p_io = [_io(s.name, s.shape) for s in specs]
+    tok_io = _io("tokens", (batch_per_worker, cfg.seq_len), I32)
+    grads_io = [_io("grad." + s.name, s.shape) for s in specs]
+    meta = {
+        "preset": preset,
+        "d_model": cfg.d_model, "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads, "d_ff": cfg.d_ff, "seq_len": cfg.seq_len,
+        "vocab": cfg.vocab, "num_params": M.num_params(cfg),
+        "batch_per_worker": batch_per_worker,
+        "params": [
+            {"name": s.name, "shape": list(s.shape), "kind": s.kind}
+            for s in specs
+        ],
+    }
+    ex.export(
+        f"fwdbwd_{preset}",
+        lambda *a: M.train_step(list(a[:-1]), a[-1], cfg),
+        p_specs + [tok],
+        p_io + [tok_io],
+        [_io("loss", ())] + grads_io,
+        "fwdbwd", meta)
+    ex.export(
+        f"eval_{preset}",
+        lambda *a: M.eval_loss(list(a[:-1]), a[-1], cfg),
+        p_specs + [tok],
+        p_io + [tok_io],
+        [_io("loss", ())],
+        "eval", meta)
+    ex.export(
+        f"predict_{preset}",
+        lambda *a: M.predict(list(a[:-1]), a[-1], cfg),
+        p_specs + [tok],
+        p_io + [tok_io],
+        [_io("argmax", (batch_per_worker, cfg.seq_len), I32)],
+        "predict", meta)
+
+
+def linear_shapes(preset: str):
+    """Distinct (R, C) shapes of low-rank-eligible params, oriented so the
+    projected (column) side is the smaller one — transposition to this
+    orientation happens on the rust side."""
+    cfg = M.PRESETS[preset]
+    shapes = set()
+    for s in M.param_specs(cfg):
+        if s.kind != "linear":
+            continue
+        r, c = s.shape
+        if c > r:
+            r, c = c, r  # project the smaller dim; rust feeds Gᵀ
+        shapes.add((r, c))
+    return sorted(shapes)
+
+
+def export_optimizer_graphs(ex: Exporter, preset: str, rank: int,
+                            lr: float, mu: float):
+    for (R, C) in linear_shapes(preset):
+        r = min(rank, C)
+        q_io = _io("dct_q", (C, C))
+        ex.export(
+            f"trion_{R}x{C}_r{r}",
+            lambda m, g, q, _r=r: OG.trion_update(m, g, q, rank=_r, mu=mu),
+            [spec((R, C)), spec((R, C)), spec((C, C))],
+            [_io("m_prev", (R, C)), _io("grad", (R, C)), q_io],
+            [_io("m_new", (R, C)), _io("o_full", (R, C)),
+             _io("o_low", (R, r)), _io("idx", (r,), I32)],
+            "trion_update",
+            {"preset": preset, "R": R, "C": C, "rank": r, "mu": mu})
+        ex.export(
+            f"dctadamw_{R}x{C}_r{r}",
+            lambda g, q, m, v, e, i, t, _r=r: OG.dct_adamw_update(
+                g, q, m, v, e, i, t, rank=_r, lr=lr),
+            [spec((R, C)), spec((C, C)), spec((R, r)), spec((R, r)),
+             spec((R, C)), spec((r,), jnp.int32), spec((), jnp.float32)],
+            [_io("grad", (R, C)), q_io, _io("m", (R, r)), _io("v", (R, r)),
+             _io("ef", (R, C)), _io("idx_prev", (r,), I32),
+             _io("step", ())],
+            [_io("update_full", (R, C)), _io("m_new", (R, r)),
+             _io("v_new", (R, r)), _io("ef_new", (R, C)),
+             _io("idx", (r,), I32)],
+            "dctadamw_update",
+            {"preset": preset, "R": R, "C": C, "rank": r, "lr": lr})
+        ex.export(
+            f"dion_{R}x{C}_r{r}",
+            lambda m, g, p: OG.dion_update(m, g, p, mu=mu),
+            [spec((R, C)), spec((R, C)), spec((C, r))],
+            [_io("m_prev", (R, C)), _io("grad", (R, C)), _io("q_prev", (C, r))],
+            [_io("m_new", (R, C)), _io("o_full", (R, C)),
+             _io("q_new", (C, r))],
+            "dion_update",
+            {"preset": preset, "R": R, "C": C, "rank": r, "mu": mu})
+
+
+def export_kernel_smoke(ex: Exporter):
+    """Small L1-kernel artifacts the rust integration tests execute to prove
+    the pallas→HLO→PJRT path end to end."""
+    from .kernels import dct as k_dct
+    from .kernels import newton_schulz as k_ns
+    R, C, r = 48, 32, 8
+    ex.export(
+        "kernel_dct_similarity_norms",
+        lambda g, q: k_dct.dct_similarity_norms(g, q, "l2"),
+        [spec((R, C)), spec((C, C))],
+        [_io("g", (R, C)), _io("q", (C, C))],
+        [_io("s", (R, C)), _io("norms", (C,))],
+        "kernel", {"R": R, "C": C})
+    ex.export(
+        "kernel_newton_schulz",
+        lambda x: (k_ns.newton_schulz(x, steps=5),),
+        [spec((R, r))],
+        [_io("x", (R, r))],
+        [_io("o", (R, r))],
+        "kernel", {"R": R, "r": r})
+    ex.export(
+        "kernel_makhoul_dct2",
+        lambda g: (ref.makhoul_dct2(g),),
+        [spec((R, C))],
+        [_io("g", (R, C))],
+        [_io("s", (R, C))],
+        "kernel", {"R": R, "C": C})
+    ex.export(
+        "kernel_dct2_matrix",
+        lambda: (ref.dct2_matrix(C),),
+        [],
+        [],
+        [_io("q", (C, C))],
+        "kernel", {"C": C})
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--presets", default="nano,micro,small,base")
+    ap.add_argument("--opt-presets", default="nano,micro",
+                    help="presets to export per-layer optimizer graphs for")
+    ap.add_argument("--rank", type=int, default=32)
+    ap.add_argument("--batch-per-worker", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--mu", type=float, default=0.95)
+    args = ap.parse_args()
+
+    ex = Exporter(args.out_dir)
+    t0 = time.time()
+    for preset in args.presets.split(","):
+        print(f"== model graphs: {preset} "
+              f"({M.num_params(M.PRESETS[preset])/1e6:.2f}M params)")
+        export_model_graphs(ex, preset, args.batch_per_worker)
+    for preset in args.opt_presets.split(","):
+        print(f"== optimizer graphs: {preset} rank={args.rank}")
+        export_optimizer_graphs(ex, preset, args.rank, args.lr, args.mu)
+    print("== kernel smoke artifacts")
+    export_kernel_smoke(ex)
+    ex.write_manifest({
+        "version": 1,
+        "defaults": {"rank": args.rank, "lr": args.lr, "mu": args.mu,
+                     "batch_per_worker": args.batch_per_worker},
+    })
+    print(f"total {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,197 @@
+"""Layer-1 Pallas kernels for the DCT similarity hot-spot.
+
+The paper's per-step hot path is ``S = G·Q`` (the row-wise DCT of the
+gradient/momentum) followed by a column-norm ranking. On GPU the authors use
+cuBLAS / cuFFT; on TPU the natural mapping (DESIGN.md §Hardware-Adaptation)
+is an MXU-tiled matmul whose epilogue *fuses the column-norm accumulation*,
+so the similarity matrix is written once to HBM and the ranking statistics
+never require a second pass.
+
+Kernels:
+
+* ``dct_similarity``        — tiled ``S = G·Q`` (bm×bn×bk MXU tiles).
+* ``dct_similarity_norms``  — same matmul with a fused ℓ1/ℓ2 column-norm
+                              accumulator epilogue.
+* ``gather_columns``        — ``S[:, idx]`` / ``Q[:, idx]`` tile-wise gather.
+
+All kernels run under ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); block shapes are still chosen as if for real TPU VMEM/MXU —
+see DESIGN.md §Perf for the footprint/utilization estimates.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# MXU-shaped default tiles. For the paper's shapes (C = d_model ≤ 4096,
+# R up to 25600) this keeps the VMEM working set at
+# bm·bk + bk·bn + bm·bn floats = 3·128² ·4B = 196KB ≪ 16MB.
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _matmul_kernel(g_ref, q_ref, s_ref, acc_ref, *, n_k: int):
+    """Grid (i, j, k): accumulate ``G[i,k]·Q[k,j]`` into an f32 VMEM scratch,
+    flushing to the output tile on the last k-step."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        g_ref[...], q_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        s_ref[...] = acc_ref[...].astype(s_ref.dtype)
+
+
+def _pad_dim(n: int, b: int) -> int:
+    return (n + b - 1) // b * b
+
+
+def _padded(x: jnp.ndarray, rows: int, cols: int) -> jnp.ndarray:
+    pr, pc = rows - x.shape[0], cols - x.shape[1]
+    if pr == 0 and pc == 0:
+        return x
+    return jnp.pad(x, ((0, pr), (0, pc)))
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def dct_similarity(g: jnp.ndarray, q: jnp.ndarray,
+                   bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+                   bk: int = DEFAULT_BK) -> jnp.ndarray:
+    """Tiled Pallas matmul ``S = G·Q`` (the row-wise DCT of ``G`` when ``Q``
+    is the DCT-II matrix). Pads to tile multiples and slices back."""
+    m, kdim = g.shape
+    k2, n = q.shape
+    assert kdim == k2, (g.shape, q.shape)
+    bm, bn, bk = min(bm, _pad_dim(m, 8)), min(bn, _pad_dim(n, 8)), min(bk, _pad_dim(kdim, 8))
+    mp, np_, kp = _pad_dim(m, bm), _pad_dim(n, bn), _pad_dim(kdim, bk)
+    gp, qp = _padded(g, mp, kp), _padded(q, kp, np_)
+    n_k = kp // bk
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=(mp // bm, np_ // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), g.dtype),
+        # f32 accumulator tile lives in VMEM across the k-loop
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=True,
+    )(gp, qp)
+    return out[:m, :n]
+
+
+def _matmul_norms_kernel(g_ref, q_ref, s_ref, norms_ref, acc_ref,
+                         *, n_k: int, n_i: int, norm: str):
+    """Fused epilogue: on the final k-step of each (i, j) tile, add the
+    tile's per-column ℓ1 (or squared-ℓ2) partials into the norm vector.
+
+    The grid iterates k fastest, then j, then i — so tile (i, j) is final
+    exactly once; ``norms`` is initialized on the first visit of each j.
+    """
+    i, k = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        g_ref[...], q_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        tile = acc_ref[...]
+        s_ref[...] = tile.astype(s_ref.dtype)
+        if norm == "l1":
+            part = jnp.sum(jnp.abs(tile), axis=0)
+        else:  # squared-l2 partials; sqrt applied by the caller
+            part = jnp.sum(tile * tile, axis=0)
+
+        @pl.when(i == 0)
+        def _first_row_of_tiles():
+            norms_ref[...] = part[None, :]
+
+        @pl.when(i != 0)
+        def _accumulate():
+            norms_ref[...] += part[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("norm", "bm", "bn", "bk"))
+def dct_similarity_norms(g: jnp.ndarray, q: jnp.ndarray, norm: str = "l2",
+                         bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+                         bk: int = DEFAULT_BK):
+    """Fused ``S = G·Q`` + per-column norms in a single HBM pass.
+
+    Returns ``(S, col_norms)`` — the inputs to dynamic column selection.
+    """
+    m, kdim = g.shape
+    _, n = q.shape
+    bm, bn, bk = min(bm, _pad_dim(m, 8)), min(bn, _pad_dim(n, 8)), min(bk, _pad_dim(kdim, 8))
+    mp, np_, kp = _pad_dim(m, bm), _pad_dim(n, bn), _pad_dim(kdim, bk)
+    gp, qp = _padded(g, mp, kp), _padded(q, kp, np_)
+    n_k, n_i = kp // bk, mp // bm
+    s, norms = pl.pallas_call(
+        functools.partial(_matmul_norms_kernel, n_k=n_k, n_i=n_i, norm=norm),
+        grid=(n_i, np_ // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mp, np_), g.dtype),
+            jax.ShapeDtypeStruct((1, np_), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=True,
+    )(gp, qp)
+    norms = norms[0, :n]
+    if norm == "l2":
+        norms = jnp.sqrt(norms)
+    return s[:m, :n], norms
+
+
+def _gather_kernel(src_ref, idx_ref, out_ref):
+    """Gather selected columns: each grid row-tile copies ``src[:, idx]``."""
+    idx = idx_ref[...]
+    out_ref[...] = jnp.take(src_ref[...], idx, axis=1)
+
+
+@jax.jit
+def gather_columns(src: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """``src[:, idx]`` as a row-tiled Pallas gather (used for ``S[:, i_t]``
+    and ``Q[:, i_t]``)."""
+    m, n = src.shape
+    r = idx.shape[0]
+    bm = min(DEFAULT_BM, _pad_dim(m, 8))
+    mp = _pad_dim(m, bm)
+    srcp = _padded(src, mp, n)
+    out = pl.pallas_call(
+        _gather_kernel,
+        grid=(mp // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((r,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, r), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, r), src.dtype),
+        interpret=True,
+    )(srcp, idx)
+    return out[:m]

@@ -1,0 +1,63 @@
+"""Layer-1 Pallas kernel: quintic Newton–Schulz orthogonalization.
+
+Trion's key structural saving (Algorithm 1, line 11) is that Newton–Schulz
+runs on the *low-rank* momentum ``b_t ∈ R^{R×r}`` rather than the full
+``B_t ∈ R^{R×C}``; the Gram matrix is only ``r×r``. For the ranks the paper
+uses (r ≤ 512) the whole iteration state fits in VMEM:
+
+    X (R×r) + A (r×r) + poly (r×r)  ≤  1024·512·4B + 2·512²·4B ≈ 4.2 MB
+
+so the kernel holds ``X`` resident and performs all ``steps`` iterations
+without touching HBM — every matmul is MXU-shaped (r is a multiple of 128
+in the paper's configurations).
+
+On GPU the authors call Muon's triton kernels; this is the TPU rethink
+(DESIGN.md §Hardware-Adaptation): one kernel, one HBM read, one HBM write.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import ref
+
+# Keep single-block NS inputs within a conservative VMEM budget.
+VMEM_BUDGET_FLOATS = 2 * 1024 * 1024  # 8 MB of f32
+
+
+def _ns_kernel(x_ref, o_ref, *, steps: int, eps: float, transposed: bool):
+    """All-in-VMEM quintic Newton–Schulz; ``transposed`` handles wide inputs
+    (R < r) by iterating on ``Xᵀ`` so the Gram side stays the small one."""
+    a, b, c = ref.NS_COEFFS
+    x = x_ref[...]
+    if transposed:
+        x = x.T
+    x = x / (jnp.sqrt(jnp.sum(x * x)) + eps)
+    for _ in range(steps):
+        gram = jnp.dot(x.T, x, preferred_element_type=jnp.float32)
+        poly = b * gram + c * jnp.dot(gram, gram,
+                                      preferred_element_type=jnp.float32)
+        x = a * x + jnp.dot(x, poly, preferred_element_type=jnp.float32)
+    if transposed:
+        x = x.T
+    o_ref[...] = x.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("steps",))
+def newton_schulz(x: jnp.ndarray, steps: int = 5, eps: float = 1e-7) -> jnp.ndarray:
+    """Pallas single-block Newton–Schulz. Falls back to the jnp reference
+    when the input exceeds the VMEM budget (never the case for the paper's
+    low-rank inputs)."""
+    m, n = x.shape
+    if m * n > VMEM_BUDGET_FLOATS:
+        return ref.newton_schulz(x, steps=steps, eps=eps)
+    return pl.pallas_call(
+        functools.partial(_ns_kernel, steps=steps, eps=eps, transposed=m < n),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x)

@@ -1,0 +1,293 @@
+"""Pure-jnp reference oracle for every Layer-1 kernel and Layer-2 graph.
+
+This file is the single source of numerical truth for the whole repo:
+
+* the Pallas kernels in this package are pytest-compared against it,
+* the AOT optimizer graphs in ``optim_graphs.py`` are built from it,
+* the rust-native implementations (``rust/src/{fft,linalg,projection,optim}``)
+  are integration-tested against HLO artifacts lowered from these functions.
+
+Everything here follows the paper:
+
+* DCT-II/III matrices per Appendix A,
+* Makhoul's N-point fast DCT-II per Appendix D,
+* dynamic column selection per §2.1 / Appendix B,
+* Trion per Algorithm 1, DCT-AdamW per Algorithms 2–3,
+* Newton–Schulz with the Muon quintic coefficients.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+# Muon's quintic Newton–Schulz coefficients (Jordan et al., 2024).
+NS_COEFFS = (3.4445, -4.7750, 2.0315)
+
+
+# ---------------------------------------------------------------------------
+# DCT matrices (Appendix A)
+# ---------------------------------------------------------------------------
+
+def dct3_matrix(n: int, dtype=jnp.float32) -> jnp.ndarray:
+    """Orthogonal DCT-III matrix ``D`` with ``D[i,j] = sqrt(2/n)·cos(i(2j+1)π/2n)``
+    and the first row divided by ``sqrt(2)`` (Appendix A).
+
+    Built exactly as the paper describes: an index column vector ``L`` is
+    broadcast into ``I`` and the integer products ``i·(2j+1)`` are formed
+    elementwise before a single ``cos``.
+    """
+    i = jnp.arange(n, dtype=jnp.float32)[:, None]          # I (replicated L)
+    j = jnp.arange(n, dtype=jnp.float32)[None, :]          # I^T
+    q = jnp.sqrt(2.0 / n) * jnp.cos(i * (2.0 * j + 1.0) * jnp.pi / (2.0 * n))
+    q = q.at[0, :].divide(jnp.sqrt(2.0))
+    return q.astype(dtype)
+
+
+def dct2_matrix(n: int, dtype=jnp.float32) -> jnp.ndarray:
+    """Orthogonal DCT-II matrix: the transpose of DCT-III (Appendix A).
+
+    With ``Q = dct2_matrix(C)``, the similarity matrix of §2.1 is ``S = G·Q``
+    and ``S[:, k]`` is the k-th DCT-II coefficient of every row of ``G`` —
+    i.e. ``S`` *is* the row-wise type-II DCT of ``G``.
+    """
+    return dct3_matrix(n, dtype=dtype).T
+
+
+# ---------------------------------------------------------------------------
+# Makhoul's N-point fast DCT-II (Appendix D)
+# ---------------------------------------------------------------------------
+
+def makhoul_permute(x: jnp.ndarray) -> jnp.ndarray:
+    """Step 1: ``[a,b,c,d,e,f] -> [a,c,e,f,d,b]`` — even indices ascending,
+    odd indices descending, applied to the last axis."""
+    even = x[..., 0::2]
+    odd = x[..., 1::2]
+    return jnp.concatenate([even, odd[..., ::-1]], axis=-1)
+
+
+def makhoul_dct2(g: jnp.ndarray) -> jnp.ndarray:
+    """Row-wise orthonormal DCT-II of ``g`` via Makhoul's N-point algorithm.
+
+    Steps (Appendix D): permute -> FFT -> multiply by the Fourier
+    coefficients ``W_k = exp(-iπk/2N)`` -> real part -> orthonormal scaling.
+    Equivalent to ``g @ dct2_matrix(N)`` (the matmul "embeds" all of these
+    steps in the DCT matrix itself, at O(n³) instead of O(n² log n)).
+    """
+    n = g.shape[-1]
+    v = makhoul_permute(g)
+    vf = jnp.fft.fft(v.astype(jnp.complex64), axis=-1)
+    k = jnp.arange(n, dtype=jnp.float32)
+    w = jnp.exp(-1j * jnp.pi * k / (2.0 * n))
+    x = jnp.real(vf * w)                                    # unnormalized DCT-II
+    scale = jnp.full((n,), jnp.sqrt(2.0 / n), dtype=jnp.float32)
+    scale = scale.at[0].set(jnp.sqrt(1.0 / n))
+    return (x * scale).astype(g.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dynamic column selection (§2.1, Appendix B)
+# ---------------------------------------------------------------------------
+
+def column_norms(s: jnp.ndarray, norm: str = "l2") -> jnp.ndarray:
+    """Per-column ℓ1 or ℓ2 norms of the similarity matrix ``S``."""
+    if norm == "l1":
+        return jnp.sum(jnp.abs(s), axis=0)
+    if norm == "l2":
+        return jnp.sqrt(jnp.sum(s * s, axis=0))
+    raise ValueError(f"unknown norm {norm!r}")
+
+
+def dynamic_column_selection(s: jnp.ndarray, r: int, norm: str = "l2") -> jnp.ndarray:
+    """Indices of the ``r`` columns of ``S`` with the largest norm,
+    returned in ascending index order (deterministic tie-break by index).
+
+    Implemented with a stable argsort rather than ``lax.top_k``: the AOT
+    path needs HLO the rust-side XLA (0.5.1) text parser accepts, and the
+    newer ``topk`` op is not in its grammar — ``sort`` is.
+    """
+    scores = column_norms(s, norm)
+    order = jnp.argsort(-scores, stable=True)   # descending, ties → low index
+    return jnp.sort(order[:r])
+
+
+def dct_project(g: jnp.ndarray, q: jnp.ndarray, r: int, norm: str = "l2"):
+    """Two-step procedure of §2.1: similarities + column selection.
+
+    Returns ``(idx, low_rank, q_r)`` where ``low_rank = S[:, idx] = G·Q_r``.
+    """
+    s = g @ q
+    idx = dynamic_column_selection(s, r, norm)
+    return idx, s[:, idx], q[:, idx]
+
+
+# ---------------------------------------------------------------------------
+# Newton–Schulz orthogonalization (Muon / §2.3)
+# ---------------------------------------------------------------------------
+
+def newton_schulz(x: jnp.ndarray, steps: int = 5, eps: float = 1e-7) -> jnp.ndarray:
+    """Quintic Newton–Schulz iteration pushing singular values of ``x`` to 1.
+
+    Operates in the economical orientation: for a tall ``R×r`` input the
+    Gram matrix ``A = XᵀX`` is only ``r×r`` — this is exactly the saving
+    Trion exploits by feeding the *low-rank* momentum ``b_t`` instead of the
+    full ``B_t`` (Algorithm 1, line 11).
+    """
+    a, b, c = NS_COEFFS
+    transposed = x.shape[0] < x.shape[1]
+    if transposed:
+        x = x.T
+    x = x / (jnp.linalg.norm(x) + eps)
+    for _ in range(steps):
+        gram = x.T @ x                       # r×r
+        poly = b * gram + c * (gram @ gram)  # bA + cA²
+        x = a * x + x @ poly
+    return x.T if transposed else x
+
+
+# ---------------------------------------------------------------------------
+# AdamW (fused update kernel oracle)
+# ---------------------------------------------------------------------------
+
+def adamw_update(p, g, m, v, *, lr, beta1=0.9, beta2=0.999, eps=1e-8,
+                 weight_decay=0.0, step=1):
+    """One decoupled-weight-decay Adam step; returns ``(p', m', v')``."""
+    m = beta1 * m + (1.0 - beta1) * g
+    v = beta2 * v + (1.0 - beta2) * g * g
+    mhat = m / (1.0 - beta1 ** step)
+    vhat = v / (1.0 - beta2 ** step)
+    p = (1.0 - lr * weight_decay) * p - lr * mhat / (jnp.sqrt(vhat) + eps)
+    return p, m, v
+
+
+# ---------------------------------------------------------------------------
+# Trion per-layer update (Algorithm 1, lines 4–13)
+# ---------------------------------------------------------------------------
+
+def trion_layer_update(m_prev, g, q, *, rank: int, mu: float = 0.95,
+                       ns_steps: int = 5, norm: str = "l2"):
+    """One Trion step for a single layer with right-projection.
+
+    Returns ``(m_new, o_full, idx)``:
+    ``B_t = M_{t-1} + G_t``; ``S_t = B_t·Q``; top-r columns ``i_t``;
+    ``b_t = S[:, i_t]``, ``Q_t = Q[:, i_t]``; error-feedback momentum
+    ``M_t = B_t − (1−μ)·b_t·Q_tᵀ``; update ``O_t = NS(b_t)·Q_tᵀ``.
+    The caller applies ``θ ← (1−λη)θ − η·max(1, sqrt(R/C))·O_t``.
+    """
+    b_full = m_prev + g
+    s = b_full @ q
+    idx = dynamic_column_selection(s, rank, norm)
+    b_low = s[:, idx]
+    q_r = q[:, idx]
+    m_new = b_full - (1.0 - mu) * (b_low @ q_r.T)
+    o_low = newton_schulz(b_low, steps=ns_steps)
+    o_full = o_low @ q_r.T
+    return m_new, o_full, idx
+
+
+def mgs_qr(z: jnp.ndarray) -> jnp.ndarray:
+    """Orthonormal basis of ``z``'s columns via modified Gram–Schmidt.
+
+    Pure-jnp so the lowered HLO contains only elementwise/dot ops:
+    ``jnp.linalg.qr`` lowers to a typed-FFI LAPACK custom-call that the
+    rust-side XLA 0.5.1 cannot execute. Spans (hence Dion's trajectory,
+    which is column-sign-invariant) match Householder QR.
+    """
+    n, r = z.shape
+    cols = []
+    for j in range(r):
+        v = z[:, j]
+        for qv in cols:
+            v = v - qv * jnp.dot(qv, v)
+        cols.append(v / (jnp.linalg.norm(v) + 1e-8))
+    return jnp.stack(cols, axis=1)
+
+
+def dion_layer_update(m_prev, g, q_prev, *, mu: float = 0.95):
+    """One Dion step (Ahn et al., 2025) — the baseline Trion replaces.
+
+    Power-iteration with QR: ``P_t = QR(B_t·Q_{t-1})`` (left basis, R×r),
+    ``R_t = B_tᵀ·P_t`` (C×r), error feedback
+    ``M_t = B_t − (1−μ)·P_t·R_tᵀ``, update
+    ``O_t = P_t·column_normalize(R_t)ᵀ``, and the *persistent state* is the
+    column-normalized right factor ``Q_t = colnorm(R_t) ∈ R^{C×r}`` fed to
+    the next power-iteration. Returns ``(m_new, o_full, q_new)``.
+    """
+    b_full = m_prev + g
+    z = b_full @ q_prev                       # R×r
+    p_new = mgs_qr(z)                         # orthonormal R×r basis (left)
+    r_mat = b_full.T @ p_new                  # C×r
+    m_new = b_full - (1.0 - mu) * (p_new @ r_mat.T)
+    q_new = r_mat / (jnp.linalg.norm(r_mat, axis=0, keepdims=True) + 1e-8)
+    o_full = p_new @ q_new.T
+    return m_new, o_full, q_new
+
+
+# ---------------------------------------------------------------------------
+# DCT-AdamW per-layer update (Algorithms 2–3, right projection, T_u = 1)
+# ---------------------------------------------------------------------------
+
+def dct_adamw_layer_update(g, q, m, v, ef, idx_prev, *, rank: int,
+                           lr: float, beta1=0.9, beta2=0.999, eps=1e-8,
+                           step=1, norm: str = "l2", first: bool = False):
+    """One DCT-AdamW step for a single layer (subspace updated every step).
+
+    ``G ← G + Ξ``; select new subspace from ``S = G·Q``; rotate the moment
+    buffers with ``R = Q_prevᵀ·Q_crt`` (computed directly in the
+    r-dimensional space); AdamW math in the subspace; back-project the
+    update; store the projection residual in the error-feedback buffer.
+
+    Returns ``(update_full, m', v', Ξ', idx')`` — the caller applies
+    ``θ ← (1 − λη)θ − update_full``.
+    """
+    g = g + ef
+    s = g @ q
+    idx = dynamic_column_selection(s, rank, norm)
+    q_crt = q[:, idx]
+    if first:
+        rot = jnp.eye(rank, dtype=g.dtype)
+    else:
+        rot = q[:, idx_prev].T @ q_crt        # r×r rotation between subspaces
+    g_low = s[:, idx]                         # G·Q_crt
+    ef_new = g - g_low @ q_crt.T
+    m = beta1 * (m @ rot) + (1.0 - beta1) * g_low
+    v = beta2 * jnp.abs(v @ rot) + (1.0 - beta2) * g_low * g_low
+    mhat = m / (1.0 - beta1 ** step)
+    vhat = v / (1.0 - beta2 ** step)
+    u_low = lr * mhat / (jnp.sqrt(vhat) + eps)
+    update_full = u_low @ q_crt.T
+    return update_full, m, v, ef_new, idx
+
+
+# ---------------------------------------------------------------------------
+# 8-bit error-feedback quantization oracle (§2.4 / MicroAdam-style)
+# ---------------------------------------------------------------------------
+
+def quantize_ef_u8(x: jnp.ndarray):
+    """Symmetric per-tensor 8-bit quantization: returns ``(q_u8, scale)``."""
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_ef_u8(q: jnp.ndarray, scale) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# Reconstruction error (§4.1) — used by the contractiveness tests
+# ---------------------------------------------------------------------------
+
+def reconstruction_error_sq(g: jnp.ndarray, q_r: jnp.ndarray) -> jnp.ndarray:
+    """``‖G − Q_r·Q_rᵀ·G‖²_F`` for a left-projection (orthonormal ``Q_r``)."""
+    proj = q_r @ (q_r.T @ g)
+    d = g - proj
+    return jnp.sum(d * d)
+
+
+@functools.lru_cache(maxsize=32)
+def cached_dct2(n: int):
+    """Build-time convenience cache for repeated test shapes."""
+    return dct2_matrix(n)

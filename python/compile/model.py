@@ -1,0 +1,211 @@
+"""Layer-2: Llama-style transformer forward/backward in JAX.
+
+This is the compute graph the rust coordinator trains. It is authored here,
+AOT-lowered once by ``aot.py`` to HLO text per preset, and executed from
+rust through PJRT — Python never runs on the training path.
+
+Architecture (matches the paper's Llama family at reduced scale —
+see DESIGN.md §Hardware-Adaptation for the scale substitution):
+
+* byte-level vocab (256 + pad), untied LM head,
+* pre-norm blocks: RMSNorm → causal multi-head attention with RoPE →
+  RMSNorm → SwiGLU MLP,
+* next-token cross-entropy loss averaged over all positions.
+
+Parameters are handled as a *flat ordered list* of arrays so the rust side
+can feed PJRT literals positionally; ``param_specs`` is the single source
+of ordering truth and is serialized into ``artifacts/manifest.json``.
+Each spec carries a ``kind`` tag that the rust optimizer uses for its
+projection policy (2-D ``linear`` tensors get low-rank treatment; ``embed``
+/ ``head`` / 1-D ``norm`` tensors always take full AdamW, as in GaLore /
+LDAdam / Dion practice).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+VOCAB = 257  # 256 bytes + <pad>
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    seq_len: int
+    vocab: int = VOCAB
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+# Presets sized for a 1-core-CPU testbed; the paper's 350M/800M/1.3B trio
+# maps onto nano/micro/small with the same d_model-doubling progression,
+# and `base` is the end-to-end example model.
+PRESETS = {
+    "nano": ModelConfig("nano", d_model=64, n_layers=2, n_heads=4, d_ff=176, seq_len=64),
+    "micro": ModelConfig("micro", d_model=128, n_layers=4, n_heads=4, d_ff=344, seq_len=64),
+    "small": ModelConfig("small", d_model=256, n_layers=6, n_heads=8, d_ff=688, seq_len=64),
+    "base": ModelConfig("base", d_model=384, n_layers=8, n_heads=8, d_ff=1024, seq_len=128),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    name: str
+    shape: Tuple[int, ...]
+    kind: str  # embed | head | norm | linear
+
+
+def param_specs(cfg: ModelConfig) -> List[ParamSpec]:
+    """Flat, ordered parameter inventory. Order here == literal order in the
+    AOT artifact == buffer order on the rust side."""
+    specs = [ParamSpec("embed", (cfg.vocab, cfg.d_model), "embed")]
+    for l in range(cfg.n_layers):
+        p = f"block{l}."
+        specs += [
+            ParamSpec(p + "attn_norm", (cfg.d_model,), "norm"),
+            ParamSpec(p + "wq", (cfg.d_model, cfg.d_model), "linear"),
+            ParamSpec(p + "wk", (cfg.d_model, cfg.d_model), "linear"),
+            ParamSpec(p + "wv", (cfg.d_model, cfg.d_model), "linear"),
+            ParamSpec(p + "wo", (cfg.d_model, cfg.d_model), "linear"),
+            ParamSpec(p + "mlp_norm", (cfg.d_model,), "norm"),
+            ParamSpec(p + "w_gate", (cfg.d_model, cfg.d_ff), "linear"),
+            ParamSpec(p + "w_up", (cfg.d_model, cfg.d_ff), "linear"),
+            ParamSpec(p + "w_down", (cfg.d_ff, cfg.d_model), "linear"),
+        ]
+    specs += [
+        ParamSpec("final_norm", (cfg.d_model,), "norm"),
+        ParamSpec("lm_head", (cfg.d_model, cfg.vocab), "head"),
+    ]
+    return specs
+
+
+def num_params(cfg: ModelConfig) -> int:
+    return sum(math.prod(s.shape) for s in param_specs(cfg))
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> List[jnp.ndarray]:
+    """Scaled-normal init (0.02 embed/linear, zeros-safe norms)."""
+    params = []
+    for spec in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if spec.kind == "norm":
+            params.append(jnp.ones(spec.shape, jnp.float32))
+        else:
+            fan_in = spec.shape[0] if len(spec.shape) == 2 else cfg.d_model
+            std = 0.02 if spec.kind in ("embed", "head") else 1.0 / math.sqrt(fan_in)
+            params.append(std * jax.random.normal(sub, spec.shape, jnp.float32))
+    return params
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * w
+
+
+def rope_tables(seq_len: int, head_dim: int):
+    """RoPE cos/sin tables, (S, head_dim/2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (10000.0 ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    t = jnp.arange(seq_len, dtype=jnp.float32)
+    ang = jnp.outer(t, freqs)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, H, S, D). Rotates interleaved half-pairs."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[None, None, :, :]
+    s = sin[None, None, :, :]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+
+
+def _unpack(params: List[jnp.ndarray], cfg: ModelConfig):
+    it = iter(params)
+    embed = next(it)
+    blocks = []
+    for _ in range(cfg.n_layers):
+        blocks.append({
+            "attn_norm": next(it), "wq": next(it), "wk": next(it),
+            "wv": next(it), "wo": next(it), "mlp_norm": next(it),
+            "w_gate": next(it), "w_up": next(it), "w_down": next(it),
+        })
+    final_norm = next(it)
+    lm_head = next(it)
+    return embed, blocks, final_norm, lm_head
+
+
+def forward(params: List[jnp.ndarray], tokens: jnp.ndarray,
+            cfg: ModelConfig) -> jnp.ndarray:
+    """Logits (B, S, V) for int32 tokens (B, S)."""
+    embed, blocks, final_norm, lm_head = _unpack(params, cfg)
+    b, s = tokens.shape
+    h = embed[tokens]                                     # (B, S, d)
+    cos, sin = rope_tables(s, cfg.head_dim)
+    mask = jnp.tril(jnp.ones((s, s), jnp.float32))
+    neg = jnp.finfo(jnp.float32).min
+    for blk in blocks:
+        x = rmsnorm(h, blk["attn_norm"])
+        q = (x @ blk["wq"]).reshape(b, s, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+        k = (x @ blk["wk"]).reshape(b, s, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+        v = (x @ blk["wv"]).reshape(b, s, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / math.sqrt(cfg.head_dim)
+        att = jnp.where(mask[None, None] > 0, att, neg)
+        att = jax.nn.softmax(att, axis=-1)
+        ctx = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+        ctx = ctx.transpose(0, 2, 1, 3).reshape(b, s, cfg.d_model)
+        h = h + ctx @ blk["wo"]
+        x = rmsnorm(h, blk["mlp_norm"])
+        gate = jax.nn.silu(x @ blk["w_gate"])
+        up = x @ blk["w_up"]
+        h = h + (gate * up) @ blk["w_down"]
+    h = rmsnorm(h, final_norm)
+    return h @ lm_head
+
+
+def loss_fn(params: List[jnp.ndarray], tokens: jnp.ndarray,
+            cfg: ModelConfig) -> jnp.ndarray:
+    """Mean next-token cross-entropy over positions 0..S-2."""
+    logits = forward(params, tokens, cfg)[:, :-1, :]
+    targets = tokens[:, 1:]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def train_step(params: List[jnp.ndarray], tokens: jnp.ndarray,
+               cfg: ModelConfig):
+    """(loss, grads...) — the pure function lowered per preset to HLO.
+
+    The rust coordinator owns parameters and optimizer state; this graph is
+    stateless so the same artifact serves every optimizer and every DDP
+    worker (each worker feeds its own microbatch shard).
+    """
+    loss, grads = jax.value_and_grad(lambda p: loss_fn(p, tokens, cfg))(params)
+    return (loss, *grads)
+
+
+def eval_loss(params: List[jnp.ndarray], tokens: jnp.ndarray,
+              cfg: ModelConfig):
+    """(loss,) — forward-only artifact for validation perplexity."""
+    return (loss_fn(params, tokens, cfg),)
+
+
+def predict(params: List[jnp.ndarray], tokens: jnp.ndarray,
+            cfg: ModelConfig):
+    """(argmax,) — per-position greedy predictions (B, S) int32, for the
+    fine-tuning exact-match metric (Tables 7–8 analog)."""
+    logits = forward(params, tokens, cfg)
+    return (jnp.argmax(logits, axis=-1).astype(jnp.int32),)

@@ -1,0 +1,99 @@
+"""Layer-2: per-layer optimizer update graphs (Trion / DCT-AdamW).
+
+These are the paper's *contribution* compiled as standalone HLO artifacts:
+one graph per distinct layer shape of a preset, calling the Layer-1 Pallas
+kernels (fused DCT similarity + norms, single-block Newton–Schulz, fused
+AdamW). The rust coordinator owns all state buffers and threads them
+through these pure functions; the ZeRO owner of a layer executes the graph
+and broadcasts the low-rank result (§2.3 "Communication in Distributed
+Training").
+
+Projection side is chosen per shape exactly as the paper prescribes —
+compress the *smallest* dimension:
+
+* ``C ≤ R``  → right-projection (similarities ``S = B·Q``, ``Q ∈ R^{C×C}``)
+* ``C > R``  → left-projection (applied to ``Bᵀ``; rust transposes at the
+               call boundary so the graphs below only implement the right
+               case — this mirrors Dion's per-layer shard orientation
+               decision).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import adamw as k_adamw
+from .kernels import dct as k_dct
+from .kernels import newton_schulz as k_ns
+from .kernels import ref
+
+
+def _select(sim: jnp.ndarray, norms: jnp.ndarray, r: int) -> jnp.ndarray:
+    """Top-r column indices by pre-computed norms (ascending order).
+
+    argsort-based (not ``lax.top_k``) so the lowered HLO stays within the
+    XLA-0.5.1 text grammar the rust loader parses — see ref.py.
+    """
+    order = jnp.argsort(-norms, stable=True)
+    return jnp.sort(order[:r])
+
+
+def trion_update(m_prev, g, q, *, rank: int, mu: float = 0.95,
+                 ns_steps: int = 5, norm: str = "l2"):
+    """Algorithm 1 lines 4–12 for one layer (right-projection).
+
+    Inputs:  ``m_prev (R×C)``, ``g (R×C)``, ``q (C×C)`` DCT-II matrix.
+    Outputs: ``(m_new (R×C), o_full (R×C), o_low (R×r), idx (r,))``.
+
+    ``o_low``/``idx`` are what the ZeRO owner broadcasts (r·(R+1) values
+    instead of R·C); receivers reconstruct ``O = o_low · Q[:, idx]ᵀ``
+    locally from their DCT replica.
+    """
+    b_full = m_prev + g
+    s, norms = k_dct.dct_similarity_norms(b_full, q, norm)      # L1 kernel
+    idx = _select(s, norms, rank)
+    b_low = k_dct.gather_columns(s, idx)                        # L1 kernel
+    q_r = k_dct.gather_columns(q, idx)                          # L1 kernel
+    m_new = b_full - (1.0 - mu) * (b_low @ q_r.T)
+    o_low = k_ns.newton_schulz(b_low, steps=ns_steps)           # L1 kernel
+    o_full = o_low @ q_r.T
+    return m_new, o_full, o_low, idx.astype(jnp.int32)
+
+
+def dct_adamw_update(g, q, m, v, ef, idx_prev, step, *, rank: int,
+                     lr: float, beta1: float = 0.9, beta2: float = 0.999,
+                     eps: float = 1e-8, norm: str = "l2"):
+    """Algorithms 2–3 for one layer (right-projection, T_u = 1).
+
+    Inputs:  ``g (R×C)``, ``q (C×C)``, subspace moments ``m, v (R×r)``,
+             error-feedback ``ef (R×C)``, ``idx_prev (r,) int32``,
+             ``step`` scalar f32 (1-based; step==1 ⇒ identity rotation).
+    Outputs: ``(update_full (R×C), m', v', ef', idx')``.
+    """
+    g = g + ef
+    s, norms = k_dct.dct_similarity_norms(g, q, norm)           # L1 kernel
+    idx = _select(s, norms, rank)
+    q_crt = k_dct.gather_columns(q, idx)
+    q_prev = k_dct.gather_columns(q, idx_prev)
+    rot = q_prev.T @ q_crt                                      # r×r
+    eye = jnp.eye(rank, dtype=g.dtype)
+    rot = jnp.where(step <= 1.0, eye, rot)
+    g_low = k_dct.gather_columns(s, idx)
+    ef_new = g - g_low @ q_crt.T
+    m = m @ rot
+    v = jnp.abs(v @ rot)
+    # Fused AdamW on the r-dimensional subspace buffers (params start at 0:
+    # the kernel returns the *negative displacement* we need).
+    zero_p = jnp.zeros_like(g_low)
+    p_new, m_new, v_new = k_adamw.adamw_update(
+        zero_p, g_low, m, v, step,
+        lr=lr, beta1=beta1, beta2=beta2, eps=eps, weight_decay=0.0)
+    u_low = -p_new                                              # lr·m̂/(√v̂+ε)
+    update_full = u_low @ q_crt.T
+    return update_full, m_new, v_new, ef_new, idx.astype(jnp.int32)
+
+
+def dion_update(m_prev, g, p_prev, *, mu: float = 0.95):
+    """Dion baseline (power-iteration + QR) as an AOT graph, for the
+    artifact-level Trion-vs-Dion comparison. Mirrors ``ref.dion_layer_update``."""
+    return ref.dion_layer_update(m_prev, g, p_prev, mu=mu)

@@ -1,0 +1,227 @@
+"""Layer-1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+hypothesis sweeps shapes (including non-tile-multiple and degenerate ones)
+and dtypes; assert_allclose against the oracle is the core signal.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import adamw as k_adamw
+from compile.kernels import dct as k_dct
+from compile.kernels import newton_schulz as k_ns
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", False)
+
+dims = st.integers(min_value=2, max_value=160)
+small_dims = st.integers(min_value=2, max_value=64)
+
+
+def rand(rng, *shape):
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# DCT matrix properties
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [2, 3, 5, 8, 17, 64, 96, 128, 257])
+def test_dct_matrix_orthogonal(n):
+    q = np.asarray(ref.dct2_matrix(n))
+    np.testing.assert_allclose(q.T @ q, np.eye(n), atol=2e-5)
+    np.testing.assert_allclose(q @ q.T, np.eye(n), atol=2e-5)
+
+
+def test_dct2_is_dct3_transpose():
+    np.testing.assert_array_equal(
+        np.asarray(ref.dct2_matrix(32)), np.asarray(ref.dct3_matrix(32)).T)
+
+
+def test_dct3_matches_closed_form():
+    n = 16
+    q = np.asarray(ref.dct3_matrix(n))
+    for i in range(n):
+        for j in range(n):
+            v = np.sqrt(2.0 / n) * np.cos(i * (2 * j + 1) * np.pi / (2 * n))
+            if i == 0:
+                v /= np.sqrt(2.0)
+            assert abs(q[i, j] - v) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Makhoul fast DCT == matmul DCT (Appendix D)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(r=small_dims, c=small_dims)
+def test_makhoul_equals_matmul(r, c):
+    rng = np.random.default_rng(r * 1000 + c)
+    g = rand(rng, r, c)
+    want = g @ np.asarray(ref.dct2_matrix(c))
+    got = np.asarray(ref.makhoul_dct2(jnp.asarray(g)))
+    np.testing.assert_allclose(got, want, atol=5e-4)
+
+
+def test_makhoul_permutation():
+    x = jnp.asarray([[1., 2., 3., 4., 5., 6.]])
+    got = np.asarray(ref.makhoul_permute(x))[0]
+    np.testing.assert_array_equal(got, [1, 3, 5, 6, 4, 2])
+
+
+def test_makhoul_odd_length():
+    x = jnp.asarray([[1., 2., 3., 4., 5.]])
+    got = np.asarray(ref.makhoul_permute(x))[0]
+    np.testing.assert_array_equal(got, [1, 3, 5, 4, 2])
+
+
+# ---------------------------------------------------------------------------
+# Pallas DCT similarity kernels vs oracle
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(r=dims, c=dims)
+def test_pallas_similarity(r, c):
+    rng = np.random.default_rng(r * 7 + c)
+    g, q = rand(rng, r, c), rand(rng, c, c)
+    want = g @ q
+    got = np.asarray(k_dct.dct_similarity(jnp.asarray(g), jnp.asarray(q)))
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(r=dims, c=dims, norm=st.sampled_from(["l1", "l2"]))
+def test_pallas_similarity_norms_fused(r, c, norm):
+    rng = np.random.default_rng(r * 13 + c)
+    g, q = rand(rng, r, c), rand(rng, c, c)
+    s, nrm = k_dct.dct_similarity_norms(jnp.asarray(g), jnp.asarray(q), norm)
+    want_s = g @ q
+    want_n = np.asarray(ref.column_norms(jnp.asarray(want_s), norm))
+    np.testing.assert_allclose(np.asarray(s), want_s, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(nrm), want_n, atol=3e-3, rtol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(r=dims, c=st.integers(min_value=8, max_value=96),
+       k=st.integers(min_value=1, max_value=8))
+def test_pallas_gather_columns(r, c, k):
+    k = min(k, c)
+    rng = np.random.default_rng(r + c + k)
+    src = rand(rng, r, c)
+    idx = rng.choice(c, size=k, replace=False).astype(np.int32)
+    got = np.asarray(k_dct.gather_columns(jnp.asarray(src), jnp.asarray(idx)))
+    np.testing.assert_array_equal(got, src[:, idx])
+
+
+# ---------------------------------------------------------------------------
+# Dynamic column selection (§2.1) + §4.1 contractiveness
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(min_value=4, max_value=64),
+       m=st.integers(min_value=4, max_value=64),
+       frac=st.sampled_from([0.25, 0.5]))
+def test_selection_contractive(n, m, frac):
+    """‖G − Q_r Q_rᵀ G‖²_F ≤ (1 − r/n)·‖G‖²_F for norm-based selection."""
+    r = max(1, int(n * frac))
+    rng = np.random.default_rng(n * 100 + m)
+    g = rand(rng, n, m)
+    q = np.asarray(ref.dct2_matrix(n))
+    # left-projection: select columns of Q by alignment with rows of Gᵀ
+    idx = np.asarray(ref.dynamic_column_selection(jnp.asarray(g.T @ q), r))
+    q_r = q[:, idx]
+    err = float(ref.reconstruction_error_sq(jnp.asarray(g), jnp.asarray(q_r)))
+    bound = (1.0 - r / n) * float(np.sum(g * g))
+    assert err <= bound + 1e-3
+
+
+def test_selection_optimal_among_subsets():
+    """Norm-based top-r is the optimal column subset (§4.1): brute-force all
+    subsets on a small instance and compare reconstruction errors."""
+    from itertools import combinations
+    rng = np.random.default_rng(0)
+    n, m, r = 6, 5, 3
+    g = rand(rng, n, m)
+    q = np.asarray(ref.dct2_matrix(n))
+    sel = np.asarray(ref.dynamic_column_selection(jnp.asarray(g.T @ q), r))
+    err_sel = float(ref.reconstruction_error_sq(
+        jnp.asarray(g), jnp.asarray(q[:, sel])))
+    best = min(
+        float(ref.reconstruction_error_sq(jnp.asarray(g), jnp.asarray(q[:, list(c)])))
+        for c in combinations(range(n), r))
+    assert err_sel <= best + 1e-5
+
+
+def test_selection_deterministic_sorted():
+    rng = np.random.default_rng(3)
+    s = rand(rng, 10, 12)
+    idx = np.asarray(ref.dynamic_column_selection(jnp.asarray(s), 5))
+    assert list(idx) == sorted(idx)
+    assert len(set(idx.tolist())) == 5
+
+
+# ---------------------------------------------------------------------------
+# Newton–Schulz kernel vs oracle + orthogonalization property
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(r=st.integers(min_value=8, max_value=96),
+       c=st.integers(min_value=2, max_value=16))
+def test_pallas_newton_schulz_matches_ref(r, c):
+    rng = np.random.default_rng(r * 31 + c)
+    x = rand(rng, r, c)
+    want = np.asarray(ref.newton_schulz(jnp.asarray(x)))
+    got = np.asarray(k_ns.newton_schulz(jnp.asarray(x)))
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+
+def test_newton_schulz_pushes_singular_values_to_one():
+    rng = np.random.default_rng(7)
+    x = rand(rng, 64, 8)
+    o = np.asarray(ref.newton_schulz(jnp.asarray(x), steps=10))
+    sv = np.linalg.svd(o, compute_uv=False)
+    assert np.all(sv > 0.6) and np.all(sv < 1.4)
+
+
+def test_newton_schulz_wide_input():
+    rng = np.random.default_rng(8)
+    x = rand(rng, 8, 64)  # wide: kernel must transpose internally
+    want = np.asarray(ref.newton_schulz(jnp.asarray(x)))
+    got = np.asarray(k_ns.newton_schulz(jnp.asarray(x)))
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Fused AdamW kernel vs oracle
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(r=dims, c=small_dims, step=st.integers(min_value=1, max_value=1000))
+def test_pallas_adamw_matches_ref(r, c, step):
+    rng = np.random.default_rng(r + c + step)
+    p, g, m, v = rand(rng, r, c), rand(rng, r, c), rand(rng, r, c), np.abs(rand(rng, r, c))
+    kw = dict(lr=1e-3, beta1=0.9, beta2=0.999, eps=1e-8, weight_decay=0.1)
+    want = ref.adamw_update(jnp.asarray(p), jnp.asarray(g), jnp.asarray(m),
+                            jnp.asarray(v), step=step, **kw)
+    got = k_adamw.adamw_update(jnp.asarray(p), jnp.asarray(g), jnp.asarray(m),
+                               jnp.asarray(v), jnp.asarray(float(step)), **kw)
+    for w, g_ in zip(want, got):
+        np.testing.assert_allclose(np.asarray(g_), np.asarray(w),
+                                   atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# EF quantization round-trip
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(r=small_dims, c=small_dims)
+def test_ef_quantization_bounded_error(r, c):
+    rng = np.random.default_rng(r * c)
+    x = rand(rng, r, c)
+    q, scale = ref.quantize_ef_u8(jnp.asarray(x))
+    back = np.asarray(ref.dequantize_ef_u8(q, scale))
+    assert np.abs(back - x).max() <= float(scale) * 0.5 + 1e-6

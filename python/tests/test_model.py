@@ -1,0 +1,190 @@
+"""Layer-2 correctness: model shapes, loss sanity, grads, optimizer graphs."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile import optim_graphs as OG
+from compile.kernels import ref
+
+
+@pytest.fixture(scope="module")
+def nano():
+    cfg = M.PRESETS["nano"]
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def tokens_for(cfg, batch=2, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, 256, size=(batch, cfg.seq_len)),
+                       dtype=jnp.int32)
+
+
+def test_param_specs_cover_init(nano):
+    cfg, params = nano
+    specs = M.param_specs(cfg)
+    assert len(specs) == len(params)
+    for s, p in zip(specs, params):
+        assert tuple(p.shape) == s.shape
+
+
+def test_num_params_matches(nano):
+    cfg, params = nano
+    assert M.num_params(cfg) == sum(int(np.prod(p.shape)) for p in params)
+
+
+def test_forward_shapes(nano):
+    cfg, params = nano
+    toks = tokens_for(cfg)
+    logits = M.forward(params, toks, cfg)
+    assert logits.shape == (2, cfg.seq_len, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_initial_loss_near_uniform(nano):
+    """Random init ⇒ loss ≈ log(vocab)."""
+    cfg, params = nano
+    loss = float(M.loss_fn(params, tokens_for(cfg), cfg))
+    assert abs(loss - np.log(cfg.vocab)) < 1.0
+
+
+def test_train_step_outputs(nano):
+    cfg, params = nano
+    outs = M.train_step(params, tokens_for(cfg), cfg)
+    assert len(outs) == 1 + len(params)
+    for g, p in zip(outs[1:], params):
+        assert g.shape == p.shape
+        assert np.isfinite(np.asarray(g)).all()
+
+
+def test_gradient_descends(nano):
+    """A few SGD steps on a fixed batch must reduce the loss."""
+    cfg, params = nano
+    toks = tokens_for(cfg)
+    step = jax.jit(lambda ps: M.train_step(ps, toks, cfg))
+    loss0 = None
+    ps = list(params)
+    for _ in range(5):
+        outs = step(ps)
+        loss = float(outs[0])
+        if loss0 is None:
+            loss0 = loss
+        ps = [p - 0.05 * g for p, g in zip(ps, outs[1:])]
+    assert float(M.loss_fn(ps, toks, cfg)) < loss0 - 0.05
+
+
+def test_rope_preserves_norm():
+    cos, sin = M.rope_tables(16, 8)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((1, 2, 16, 8)),
+                    dtype=jnp.float32)
+    y = M.apply_rope(x, cos, sin)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-5)
+
+
+def test_causality(nano):
+    """Changing a future token must not change past logits."""
+    cfg, params = nano
+    toks = tokens_for(cfg, batch=1)
+    logits_a = np.asarray(M.forward(params, toks, cfg))
+    toks_b = toks.at[0, -1].set((toks[0, -1] + 1) % 256)
+    logits_b = np.asarray(M.forward(params, toks_b, cfg))
+    np.testing.assert_allclose(logits_a[0, :-1], logits_b[0, :-1], atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer graphs vs oracle
+# ---------------------------------------------------------------------------
+
+def test_trion_graph_matches_ref():
+    rng = np.random.default_rng(0)
+    R, C, r = 40, 24, 6
+    m = rng.standard_normal((R, C)).astype(np.float32)
+    g = rng.standard_normal((R, C)).astype(np.float32)
+    q = np.asarray(ref.dct2_matrix(C))
+    m_new, o_full, o_low, idx = OG.trion_update(
+        jnp.asarray(m), jnp.asarray(g), jnp.asarray(q), rank=r)
+    want_m, want_o, want_idx = ref.trion_layer_update(
+        jnp.asarray(m), jnp.asarray(g), jnp.asarray(q), rank=r)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(want_idx))
+    np.testing.assert_allclose(np.asarray(m_new), np.asarray(want_m),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(o_full), np.asarray(want_o),
+                               atol=1e-4, rtol=1e-4)
+    # broadcast identity: O == o_low · Q[:, idx]ᵀ
+    np.testing.assert_allclose(
+        np.asarray(o_full),
+        np.asarray(o_low) @ q[:, np.asarray(idx)].T, atol=1e-4, rtol=1e-4)
+
+
+def test_dct_adamw_graph_matches_ref():
+    rng = np.random.default_rng(1)
+    R, C, r = 32, 20, 5
+    g = rng.standard_normal((R, C)).astype(np.float32)
+    q = np.asarray(ref.dct2_matrix(C))
+    m = rng.standard_normal((R, r)).astype(np.float32)
+    v = np.abs(rng.standard_normal((R, r))).astype(np.float32)
+    ef = rng.standard_normal((R, C)).astype(np.float32)
+    idx_prev = np.sort(rng.choice(C, r, replace=False)).astype(np.int32)
+    kw = dict(rank=r, lr=1e-3)
+    got = OG.dct_adamw_update(jnp.asarray(g), jnp.asarray(q), jnp.asarray(m),
+                              jnp.asarray(v), jnp.asarray(ef),
+                              jnp.asarray(idx_prev),
+                              jnp.asarray(7.0, jnp.float32), **kw)
+    want = ref.dct_adamw_layer_update(
+        jnp.asarray(g), jnp.asarray(q), jnp.asarray(m), jnp.asarray(v),
+        jnp.asarray(ef), jnp.asarray(idx_prev), rank=r, lr=1e-3, step=7,
+        first=False)
+    names = ["update", "m", "v", "ef", "idx"]
+    for n, a, b in zip(names, got, want):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-4, rtol=2e-4, err_msg=n)
+
+
+def test_dct_adamw_graph_first_step_identity_rotation():
+    rng = np.random.default_rng(2)
+    R, C, r = 16, 12, 4
+    g = rng.standard_normal((R, C)).astype(np.float32)
+    q = np.asarray(ref.dct2_matrix(C))
+    m = np.zeros((R, r), np.float32)
+    v = np.zeros((R, r), np.float32)
+    ef = np.zeros((R, C), np.float32)
+    idx_prev = np.zeros((r,), np.int32)
+    got = OG.dct_adamw_update(jnp.asarray(g), jnp.asarray(q), jnp.asarray(m),
+                              jnp.asarray(v), jnp.asarray(ef),
+                              jnp.asarray(idx_prev),
+                              jnp.asarray(1.0, jnp.float32), rank=r, lr=1e-2)
+    want = ref.dct_adamw_layer_update(
+        jnp.asarray(g), jnp.asarray(q), jnp.asarray(m), jnp.asarray(v),
+        jnp.asarray(ef), jnp.asarray(idx_prev), rank=r, lr=1e-2, step=1,
+        first=True)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-5, rtol=2e-5)
+
+
+def test_dion_graph_error_feedback_shrinks_momentum():
+    rng = np.random.default_rng(3)
+    R, C, r = 24, 16, 4
+    m = np.zeros((R, C), np.float32)
+    g = rng.standard_normal((R, C)).astype(np.float32)
+    p = np.linalg.qr(rng.standard_normal((C, r)))[0].astype(np.float32)
+    m_new, o_full, q_new = OG.dion_update(
+        jnp.asarray(m), jnp.asarray(g), jnp.asarray(p))
+    # persistent state: unit-norm columns, shape C×r
+    qn = np.asarray(q_new)
+    assert qn.shape == (C, r)
+    np.testing.assert_allclose(np.linalg.norm(qn, axis=0), np.ones(r),
+                               atol=1e-4)
+    # momentum keeps the projection residual plus mu-weighted captured part
+    assert np.linalg.norm(np.asarray(m_new)) < np.linalg.norm(g) * 1.01
+
+
+def test_linear_shapes_orientation():
+    from compile import aot
+    for (R, C) in aot.linear_shapes("micro"):
+        assert R >= C

@@ -1,0 +1,53 @@
+//! Collectives bench: ring all-reduce and ZeRO broadcast volume/time across
+//! world sizes — the communication side of §2.3 (Trion broadcasts low-rank
+//! `o_t` + indices instead of the full update).
+
+use fft_subspace::bench::measure;
+use fft_subspace::coordinator::{CommModel, Communicator, ZeroSchedule};
+use fft_subspace::optim::{
+    build_optimizer, LayerMeta, OptimizerConfig, OptimizerKind, ParamKind,
+};
+use fft_subspace::tensor::Matrix;
+use fft_subspace::util::{human, Pcg64};
+
+fn main() {
+    println!("== bench_collectives ==\n");
+    let n = 256 * 1024; // 1 MiB gradient
+    for world in [2usize, 4, 8] {
+        let mut rng = Pcg64::seed(0);
+        let make = |rng: &mut Pcg64| -> Vec<Matrix> {
+            (0..world).map(|_| Matrix::randn(1, n, 1.0, rng)).collect()
+        };
+        let mut bufs = make(&mut rng);
+        let mut comm = Communicator::new(world, CommModel::default());
+        let stats = measure(&format!("ring_allreduce 1MiB W={world}"), 1, 8, || {
+            comm.all_reduce_mean(&mut bufs);
+        });
+        println!(
+            "{}  (modeled NVLink: {:.1} µs/call)",
+            stats.report(),
+            comm.stats.modeled_secs / comm.stats.calls.max(1) as f64 * 1e6
+        );
+    }
+    println!();
+
+    // ZeRO broadcast volume per optimizer step (micro-like model, rank 32)
+    let metas: Vec<LayerMeta> = (0..24)
+        .map(|i| LayerMeta::new(&format!("w{i}"), 128, 128, ParamKind::Linear))
+        .collect();
+    let cfg = OptimizerConfig { rank: 32, ..Default::default() };
+    println!("ZeRO post-update broadcast volume (24 layers 128x128, W=8, r=32):");
+    for kind in [OptimizerKind::AdamW, OptimizerKind::Dion, OptimizerKind::Trion] {
+        let opt = build_optimizer(&kind, &metas, &cfg);
+        let sched = ZeroSchedule::round_robin(metas.len(), 8);
+        let mut comm = Communicator::new(8, CommModel::default());
+        let z = sched.account_step(&metas, opt.as_ref(), &mut comm);
+        println!(
+            "  {:<8} update={:<12} full-equivalent={:<12} saving={:.1}x",
+            kind.name(),
+            human::bytes(z.update_broadcast_bytes),
+            human::bytes(z.full_broadcast_bytes),
+            z.full_broadcast_bytes as f64 / z.update_broadcast_bytes.max(1) as f64
+        );
+    }
+}

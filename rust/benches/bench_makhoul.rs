@@ -1,0 +1,102 @@
+//! **Tables 4 & 5 + Appendix C/D**: Makhoul's FFT-based DCT vs matmul DCT.
+//!
+//! Paper shapes: (4096,4096) Llama-2-7B, (25600,5120) and (5120,25600)
+//! Qwen3-32B, fp32 (Table 4) and bf16-storage matmul vs fp32 Makhoul
+//! (Table 5). A scaled replica of each shape (÷8 per side, keeping the
+//! aspect ratios and the R<C / R≥C split) runs by default so the bench
+//! finishes on one CPU core; pass --full for the paper's exact shapes.
+//!
+//! Expected *shape* of the result (the claim under test): the FFT path
+//! wins asymptotically and most dramatically when R < C (many short rows →
+//! O(R·C log C) vs O(R·C²)), and a complexity fit over n confirms
+//! O(n² log n) vs O(n³) growth.
+
+use fft_subspace::bench::{fmt_secs, measure};
+use fft_subspace::fft::{dct2_matrix, MakhoulPlan};
+use fft_subspace::tensor::bf16::{matmul_bf16, Bf16Matrix};
+use fft_subspace::tensor::{matmul, Matrix};
+use fft_subspace::util::Pcg64;
+
+fn bench_shape(rows: usize, cols: usize, label: &str) {
+    let mut rng = Pcg64::seed(42);
+    let g = Matrix::randn(rows, cols, 1.0, &mut rng);
+    let q = dct2_matrix(cols);
+    let plan = MakhoulPlan::new(cols);
+
+    let iters = if rows * cols > 1_000_000 { 3 } else { 10 };
+    let mm = measure(&format!("matmul_f32 {label}"), 1, iters, || matmul(&g, &q));
+    let mk = measure(&format!("makhoul_f32 {label}"), 1, iters, || plan.run(&g));
+    println!("{}", mm.report());
+    println!("{}", mk.report());
+
+    // Table 5: bf16-stored matmul with modeled 2× bf16 ALU throughput
+    // (this CPU has no bf16 units; see DESIGN.md §Hardware-Adaptation).
+    let gb = Bf16Matrix::from_f32(&g);
+    let qb = Bf16Matrix::from_f32(&q);
+    let mmb = measure(&format!("matmul_bf16 {label}"), 1, iters.min(3), || {
+        matmul_bf16(&gb, &qb)
+    });
+    let bf16_speedup = 2.0;
+    let mmb_modeled = mm.median_secs / bf16_speedup;
+    println!(
+        "{:<44} modeled {:>12} (storage-emulated raw {})",
+        format!("matmul_bf16(modeled 2x) {label}"),
+        fmt_secs(mmb_modeled),
+        fmt_secs(mmb.median_secs)
+    );
+    println!(
+        "  Table4 ratio (matmul_f32 / makhoul):        {:>8.2}x {}",
+        mm.median_secs / mk.median_secs,
+        if mm.median_secs > mk.median_secs { "(makhoul wins)" } else { "(matmul wins)" }
+    );
+    println!(
+        "  Table5 ratio (matmul_bf16-modeled / makhoul): {:>6.2}x\n",
+        mmb_modeled / mk.median_secs
+    );
+}
+
+fn complexity_fit() {
+    println!("complexity fit over n (Appendix C):");
+    let mut rng = Pcg64::seed(1);
+    let mut prev: Option<(f64, f64)> = None;
+    for n in [128usize, 256, 512, 1024] {
+        let g = Matrix::randn(64, n, 1.0, &mut rng);
+        let q = dct2_matrix(n);
+        let plan = MakhoulPlan::new(n);
+        let mm = measure(&format!("matmul n={n}"), 1, 5, || matmul(&g, &q));
+        let mk = measure(&format!("makhoul n={n}"), 1, 5, || plan.run(&g));
+        let note = match prev {
+            Some((pm, pk)) => format!(
+                "growth: matmul {:.2}x (O(n²)→4x/double), makhoul {:.2}x (O(n log n)→~2.2x)",
+                mm.median_secs / pm,
+                mk.median_secs / pk
+            ),
+            None => String::new(),
+        };
+        println!(
+            "  n={n:<5} matmul {:>11}  makhoul {:>11}  ratio {:>6.2}x  {note}",
+            fmt_secs(mm.median_secs),
+            fmt_secs(mk.median_secs),
+            mm.median_secs / mk.median_secs
+        );
+        prev = Some((mm.median_secs, mk.median_secs));
+    }
+    println!();
+}
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    println!("== bench_makhoul (Tables 4-5, Appendix C/D) ==\n");
+    complexity_fit();
+    if full {
+        // the paper's exact shapes — minutes on one core
+        bench_shape(4096, 4096, "(4096,4096) Llama-2-7B");
+        bench_shape(25600, 5120, "(25600,5120) Qwen3-32B");
+        bench_shape(5120, 25600, "(5120,25600) Qwen3-32B");
+    } else {
+        // 1/8-scale replicas with identical aspect ratios
+        bench_shape(512, 512, "(512,512) ~ Llama-2-7B/8");
+        bench_shape(3200, 640, "(3200,640) ~ Qwen3-32B/8  R>C");
+        bench_shape(640, 3200, "(640,3200) ~ Qwen3-32B/8  R<C");
+    }
+}

@@ -1,0 +1,42 @@
+//! Newton–Schulz cost: full-size (Muon) vs low-rank (Trion) — the paper's
+//! "first to reduce Newton–Schulz complexity via a low-rank momentum"
+//! claim. Also sweeps NS steps for the accuracy/cost tradeoff.
+
+use fft_subspace::bench::measure;
+use fft_subspace::linalg::{newton_schulz, svd_thin};
+use fft_subspace::tensor::Matrix;
+use fft_subspace::util::Pcg64;
+
+fn main() {
+    println!("== bench_newton_schulz (full vs low-rank momentum) ==\n");
+    let mut rng = Pcg64::seed(0);
+    let (rows, cols) = (1024, 512);
+    let full = Matrix::randn(rows, cols, 1.0, &mut rng);
+
+    let full_stats = measure("NS(full 1024x512)  — Muon", 1, 5, || {
+        newton_schulz(&full, 5)
+    });
+    println!("{}", full_stats.report());
+    for rank in [32usize, 64, 128, 256] {
+        let low = Matrix::randn(rows, rank, 1.0, &mut rng);
+        let s = measure(&format!("NS(low  1024x{rank:<4}) — Trion"), 1, 5, || {
+            newton_schulz(&low, 5)
+        });
+        println!(
+            "{}  speedup vs full: {:.1}x",
+            s.report(),
+            full_stats.median_secs / s.median_secs
+        );
+    }
+
+    println!("\nNS steps vs orthogonality (singular-value spread):");
+    let x = Matrix::randn(256, 64, 1.0, &mut rng);
+    for steps in [1usize, 3, 5, 8] {
+        let o = newton_schulz(&x, steps);
+        let sv = svd_thin(&o).s;
+        let (lo, hi) = sv.iter().fold((f32::MAX, 0f32), |(l, h), &v| {
+            (l.min(v), h.max(v))
+        });
+        println!("  steps={steps}: singular values in [{lo:.3}, {hi:.3}]");
+    }
+}

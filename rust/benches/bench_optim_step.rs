@@ -1,0 +1,62 @@
+//! End-to-end optimizer-step bench across the whole family at a fixed
+//! synthetic model: the per-step optimizer cost columns behind Tables 1/2/6
+//! (compute only — comm is bench_collectives, fwd/bwd is bench_runtime).
+
+use fft_subspace::bench::measure;
+use fft_subspace::optim::{
+    build_optimizer, LayerMeta, OptimizerConfig, OptimizerKind, ParamKind,
+};
+use fft_subspace::tensor::Matrix;
+use fft_subspace::util::Pcg64;
+
+fn model(d: usize, layers: usize) -> Vec<LayerMeta> {
+    let ff = d * 11 / 4;
+    let mut metas = vec![LayerMeta::new("embed", 257, d, ParamKind::Embed)];
+    for l in 0..layers {
+        for w in ["wq", "wk", "wv", "wo"] {
+            metas.push(LayerMeta::new(&format!("b{l}.{w}"), d, d, ParamKind::Linear));
+        }
+        metas.push(LayerMeta::new(&format!("b{l}.gate"), d, ff, ParamKind::Linear));
+        metas.push(LayerMeta::new(&format!("b{l}.down"), ff, d, ParamKind::Linear));
+    }
+    metas.push(LayerMeta::new("head", d, 257, ParamKind::Head));
+    metas
+}
+
+fn main() {
+    println!("== bench_optim_step (per-step optimizer cost, d=128, 4 blocks) ==\n");
+    let metas = model(128, 4);
+    let mut rng = Pcg64::seed(0);
+    let grads: Vec<Matrix> = metas
+        .iter()
+        .map(|m| Matrix::randn(m.rows, m.cols, 0.02, &mut rng))
+        .collect();
+
+    for rank in [16usize, 64] {
+        println!("rank {rank}:");
+        for kind in [
+            OptimizerKind::AdamW,
+            OptimizerKind::Muon,
+            OptimizerKind::Dion,
+            OptimizerKind::Trion,
+            OptimizerKind::GaLore,
+            OptimizerKind::LdAdamW,
+            OptimizerKind::DctAdamW,
+            OptimizerKind::Frugal,
+            OptimizerKind::Fira,
+        ] {
+            let cfg = OptimizerConfig { rank, ..Default::default() };
+            let mut opt = build_optimizer(&kind, &metas, &cfg);
+            let mut params: Vec<Matrix> = metas
+                .iter()
+                .map(|m| Matrix::zeros(m.rows, m.cols))
+                .collect();
+            let stats = measure(&format!("{} r={rank}", kind.name()), 2, 8, || {
+                opt.step(&mut params, &grads, 1e-3);
+            });
+            let mem = opt.memory_report().total();
+            println!("{}  state={}", stats.report(), fft_subspace::util::human::bytes(mem));
+        }
+        println!();
+    }
+}

@@ -1,0 +1,47 @@
+//! Projection-builder microbench: the per-step cost of each low-rank
+//! projection family at fixed layer shape across ranks — the mechanism
+//! behind Table 1's "Trion runtime is rank-independent, Dion's is not".
+
+use fft_subspace::bench::measure;
+use fft_subspace::linalg::{block_power_iter, power_iter_qr, qr_thin};
+use fft_subspace::projection::{select_top_columns, RankNorm, SharedDct};
+use fft_subspace::tensor::Matrix;
+use fft_subspace::util::Pcg64;
+
+fn main() {
+    println!("== bench_projection (rank-(in)dependence of the subspace step) ==\n");
+    let (rows, cols) = (1024, 256);
+    let mut rng = Pcg64::seed(0);
+    let g = Matrix::randn(rows, cols, 1.0, &mut rng);
+    let shared = SharedDct::new(cols);
+
+    for rank in [16usize, 32, 64, 128] {
+        // DCT dynamic column selection (Makhoul similarities + norm ranking):
+        // the cost does NOT depend on rank.
+        let dct = measure(&format!("dct_select r={rank}"), 1, 10, || {
+            let s = shared.similarities(&g, true);
+            select_top_columns(&s, rank, RankNorm::L2)
+        });
+        // Dion's power-iteration + QR: cost grows with rank.
+        let q0 = {
+            let z = Matrix::randn(cols, rank, 1.0, &mut rng);
+            qr_thin(&z).0
+        };
+        let dion = measure(&format!("power_iter_qr r={rank}"), 1, 10, || {
+            power_iter_qr(&g, &q0)
+        });
+        // LDAdam's block power iteration (2 inner iters).
+        let bpi = measure(&format!("block_power r={rank}"), 1, 5, || {
+            block_power_iter(&g, rank, 2, None)
+        });
+        // GaLore's full SVD (rank-independent but far more expensive).
+        let svd = measure(&format!("jacobi_svd r={rank}"), 1, 2, || {
+            fft_subspace::linalg::svd_thin(&g)
+        });
+        println!("{}", dct.report());
+        println!("{}", dion.report());
+        println!("{}", bpi.report());
+        println!("{}", svd.report());
+        println!();
+    }
+}

@@ -1,0 +1,78 @@
+//! Runtime bench: PJRT fwd/bwd step time per preset, per-phase breakdown,
+//! and AOT-optimizer-graph vs rust-native optimizer step — the L2/L3
+//! numbers in EXPERIMENTS.md §Perf.
+
+use fft_subspace::bench::measure;
+use fft_subspace::optim::Optimizer; // trait method `step` on AotOptimizer
+use fft_subspace::optim::{build_optimizer, OptimizerKind};
+use fft_subspace::runtime::client::Value;
+use fft_subspace::runtime::{Manifest, Runtime};
+use fft_subspace::tensor::Matrix;
+use fft_subspace::train::aot_optim::AotOptimizer;
+use fft_subspace::train::trainer::init_params;
+use fft_subspace::train::TrainConfig;
+use fft_subspace::util::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    println!("== bench_runtime (PJRT fwd/bwd + AOT optimizer graphs) ==\n");
+    let manifest = Manifest::load(
+        std::env::var("FFT_SUBSPACE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    )?;
+    let rt = Runtime::new()?;
+    let mut rng = Pcg64::seed(0);
+
+    for preset in ["nano", "micro", "small"] {
+        let spec = manifest.model_spec(preset)?;
+        let exe = rt.load(manifest.find(&format!("fwdbwd_{preset}"))?)?;
+        let params = init_params(&spec, 42);
+        let tokens: Vec<i32> = (0..spec.batch_per_worker * spec.seq_len)
+            .map(|_| rng.below(256) as i32)
+            .collect();
+        let shape = vec![spec.batch_per_worker, spec.seq_len];
+        let stats = measure(&format!("fwdbwd_{preset} (B=8)"), 2, 8, || {
+            let mut inputs: Vec<Value> =
+                params.iter().map(|p| Value::F32(p.clone())).collect();
+            inputs.push(Value::tokens(tokens.clone(), shape.clone()));
+            exe.run(&inputs).unwrap()
+        });
+        let toks = (spec.batch_per_worker * spec.seq_len) as f64;
+        println!(
+            "{}  ({:.0} tok/s, {:.1}M params)",
+            stats.report(),
+            toks / stats.median_secs,
+            spec.num_params as f64 / 1e6
+        );
+    }
+
+    // AOT optimizer graph vs rust-native Trion on the micro shapes.
+    println!("\nAOT trion graph vs rust-native trion (micro linear layers):");
+    let spec = manifest.model_spec("micro")?;
+    let metas: Vec<_> = spec.params.iter().map(|p| p.layer_meta()).collect();
+    let mut cfg = TrainConfig::default();
+    cfg.preset = "micro".into();
+    cfg.optimizer = OptimizerKind::Trion;
+    cfg.opt.rank = 32;
+    let grads: Vec<Matrix> = metas
+        .iter()
+        .map(|m| Matrix::randn(m.rows, m.cols, 0.02, &mut rng))
+        .collect();
+
+    let mut aot = AotOptimizer::new(&metas, &cfg, &manifest, &rt, "trion")?;
+    let mut p1: Vec<Matrix> = metas.iter().map(|m| Matrix::zeros(m.rows, m.cols)).collect();
+    let s_aot = measure("trion step (AOT graphs via PJRT)", 1, 5, || {
+        aot.step(&mut p1, &grads, 1e-3);
+    });
+    println!("{}  ({} layers on the AOT path)", s_aot.report(), aot.aot_layer_count());
+
+    let mut native = build_optimizer(&OptimizerKind::Trion, &metas, &cfg.opt);
+    let mut p2: Vec<Matrix> = metas.iter().map(|m| Matrix::zeros(m.rows, m.cols)).collect();
+    let s_nat = measure("trion step (rust-native)", 1, 5, || {
+        native.step(&mut p2, &grads, 1e-3);
+    });
+    println!("{}", s_nat.report());
+    println!(
+        "native/AOT ratio: {:.2}x",
+        s_aot.median_secs / s_nat.median_secs
+    );
+    Ok(())
+}

@@ -1,0 +1,103 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! `measure` runs warmup + timed iterations and reports median / p10 / p90
+//! wall time; benches print criterion-style lines so `cargo bench` output
+//! stays familiar.
+
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub median_secs: f64,
+    pub p10_secs: f64,
+    pub p90_secs: f64,
+    pub mean_secs: f64,
+}
+
+impl BenchStats {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} median {:>12} (p10 {}, p90 {}, n={})",
+            self.name,
+            fmt_secs(self.median_secs),
+            fmt_secs(self.p10_secs),
+            fmt_secs(self.p90_secs),
+            self.iters
+        )
+    }
+}
+
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+/// Time `f` with `warmup` throwaway calls and `iters` measured calls.
+/// The closure's return value is black-boxed to keep the work alive.
+pub fn measure<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchStats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| times[((times.len() - 1) as f64 * p) as usize];
+    BenchStats {
+        name: name.to_string(),
+        iters,
+        median_secs: pct(0.5),
+        p10_secs: pct(0.1),
+        p90_secs: pct(0.9),
+        mean_secs: times.iter().sum::<f64>() / times.len() as f64,
+    }
+}
+
+/// Pick an iteration count so a bench takes roughly `budget_secs`.
+pub fn auto_iters<T>(f: &mut impl FnMut() -> T, budget_secs: f64) -> usize {
+    let t0 = Instant::now();
+    std::hint::black_box(f());
+    let one = t0.elapsed().as_secs_f64().max(1e-9);
+    ((budget_secs / one) as usize).clamp(3, 200)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_orders_percentiles() {
+        let s = measure("noop", 2, 20, || 1 + 1);
+        assert!(s.p10_secs <= s.median_secs);
+        assert!(s.median_secs <= s.p90_secs);
+        assert_eq!(s.iters, 20);
+        assert!(s.report().contains("noop"));
+    }
+
+    #[test]
+    fn fmt_scales() {
+        assert!(fmt_secs(5e-9).contains("ns"));
+        assert!(fmt_secs(5e-5).contains("µs"));
+        assert!(fmt_secs(5e-2).contains("ms"));
+        assert!(fmt_secs(5.0).contains(" s"));
+    }
+
+    #[test]
+    fn auto_iters_bounded() {
+        let mut f = || std::thread::sleep(std::time::Duration::from_micros(10));
+        let n = auto_iters(&mut f, 0.001);
+        assert!((3..=200).contains(&n));
+    }
+}

@@ -1,0 +1,270 @@
+//! Collectives over simulated workers with exact byte accounting.
+//!
+//! Ring all-reduce (reduce-scatter + all-gather), tree broadcast and ring
+//! all-gather are implemented chunk-for-chunk as on a real interconnect;
+//! [`CommStats`] records the bytes each primitive moved and the α–β time
+//! estimate (`t = hops·α + bytes/β`), which the experiment harness uses to
+//! model the paper's 8×H100 NVLink numbers.
+
+use crate::tensor::Matrix;
+
+/// α–β interconnect model. Defaults approximate intra-node NVLink
+/// (α = 5 µs/hop, β = 200 GB/s effective per direction).
+#[derive(Clone, Copy, Debug)]
+pub struct CommModel {
+    pub alpha_us: f64,
+    pub beta_gbps: f64,
+}
+
+impl Default for CommModel {
+    fn default() -> Self {
+        CommModel { alpha_us: 5.0, beta_gbps: 200.0 }
+    }
+}
+
+impl CommModel {
+    pub fn time_secs(&self, hops: u64, bytes: u64) -> f64 {
+        hops as f64 * self.alpha_us * 1e-6
+            + bytes as f64 / (self.beta_gbps * 1e9)
+    }
+}
+
+/// Accumulated communication statistics.
+#[derive(Clone, Debug, Default)]
+pub struct CommStats {
+    pub all_reduce_bytes: u64,
+    pub broadcast_bytes: u64,
+    pub all_gather_bytes: u64,
+    pub hops: u64,
+    pub modeled_secs: f64,
+    pub calls: u64,
+}
+
+impl CommStats {
+    pub fn total_bytes(&self) -> u64 {
+        self.all_reduce_bytes + self.broadcast_bytes + self.all_gather_bytes
+    }
+}
+
+/// A simulated communicator over `world` workers.
+pub struct Communicator {
+    pub world: usize,
+    model: CommModel,
+    pub stats: CommStats,
+}
+
+impl Communicator {
+    pub fn new(world: usize, model: CommModel) -> Self {
+        assert!(world >= 1);
+        Communicator { world, model, stats: CommStats::default() }
+    }
+
+    /// Ring all-reduce (average) over per-worker gradient replicas.
+    /// `buffers[w]` is worker w's copy; on return all copies hold the mean.
+    ///
+    /// Implements reduce-scatter + all-gather over `world` chunks: each
+    /// phase moves `(W−1)/W · N` elements per worker — the standard
+    /// `2·(W−1)/W·N` total that the stats record.
+    pub fn all_reduce_mean(&mut self, buffers: &mut [Matrix]) {
+        let w = buffers.len();
+        assert_eq!(w, self.world);
+        if w == 1 {
+            self.stats.calls += 1;
+            return;
+        }
+        let n = buffers[0].data.len();
+        for b in buffers.iter() {
+            assert_eq!(b.data.len(), n, "all_reduce shape mismatch");
+        }
+        let chunk = n.div_ceil(w);
+        let bounds: Vec<(usize, usize)> = (0..w)
+            .map(|c| (c * chunk, ((c + 1) * chunk).min(n)))
+            .collect();
+
+        // Phase 1: reduce-scatter. Step s: worker i sends chunk (i−s) to
+        // worker i+1, which accumulates. After W−1 steps worker i owns the
+        // fully-reduced chunk (i+1 mod W).
+        for s in 0..w - 1 {
+            for i in 0..w {
+                let src = i;
+                let dst = (i + 1) % w;
+                let c = (i + w - s) % w;
+                let (lo, hi) = bounds[c];
+                if lo >= hi {
+                    continue;
+                }
+                // move src's partial chunk into dst's accumulator
+                let (a, b) = if src < dst {
+                    let (l, r) = buffers.split_at_mut(dst);
+                    (&l[src], &mut r[0])
+                } else {
+                    let (l, r) = buffers.split_at_mut(src);
+                    (&r[0], &mut l[dst])
+                };
+                for k in lo..hi {
+                    b.data[k] += a.data[k];
+                }
+                self.account_ar((hi - lo) as u64 * 4);
+            }
+        }
+        // Scale owned chunks to the mean and phase 2: all-gather them.
+        let inv = 1.0 / w as f32;
+        for i in 0..w {
+            let c = (i + 1) % w;
+            let (lo, hi) = bounds[c];
+            for k in lo..hi {
+                buffers[i].data[k] *= inv;
+            }
+        }
+        for s in 0..w - 1 {
+            for i in 0..w {
+                let src = i;
+                let dst = (i + 1) % w;
+                let c = (i + 1 + w - s) % w;
+                let (lo, hi) = bounds[c];
+                if lo >= hi {
+                    continue;
+                }
+                let (a, b) = if src < dst {
+                    let (l, r) = buffers.split_at_mut(dst);
+                    (&l[src], &mut r[0])
+                } else {
+                    let (l, r) = buffers.split_at_mut(src);
+                    (&r[0], &mut l[dst])
+                };
+                b.data[lo..hi].copy_from_slice(&a.data[lo..hi]);
+                self.account_ar((hi - lo) as u64 * 4);
+            }
+        }
+        self.stats.calls += 1;
+    }
+
+    /// Broadcast `src`'s buffer to all workers (binomial tree: log₂W rounds).
+    pub fn broadcast(&mut self, buffers: &mut [Matrix], src: usize) {
+        let w = buffers.len();
+        assert!(src < w);
+        let bytes = (buffers[src].data.len() * 4) as u64;
+        // tree: in round k, 2^k holders each send to one new worker
+        let mut holders = 1u64;
+        let mut rounds = 0u64;
+        while holders < w as u64 {
+            let sending = holders.min(w as u64 - holders);
+            self.stats.broadcast_bytes += bytes * sending;
+            holders += sending;
+            rounds += 1;
+        }
+        self.stats.hops += rounds;
+        self.stats.modeled_secs += self.model.time_secs(rounds, bytes * rounds);
+        let src_data = buffers[src].data.clone();
+        for (i, b) in buffers.iter_mut().enumerate() {
+            if i != src {
+                b.data.copy_from_slice(&src_data);
+            }
+        }
+        self.stats.calls += 1;
+    }
+
+    /// Account a broadcast that the caller applied itself (e.g. ZeRO sends
+    /// low-rank `o_t` and the receivers reconstruct locally — the payload
+    /// is smaller than the parameter, so the caller reports bytes).
+    pub fn account_broadcast_payload(&mut self, payload_bytes: u64) {
+        let w = self.world as u64;
+        if w > 1 {
+            let rounds = (w as f64).log2().ceil() as u64;
+            self.stats.broadcast_bytes += payload_bytes * (w - 1);
+            self.stats.hops += rounds;
+            self.stats.modeled_secs +=
+                self.model.time_secs(rounds, payload_bytes * rounds);
+        }
+        self.stats.calls += 1;
+    }
+
+    fn account_ar(&mut self, bytes: u64) {
+        self.stats.all_reduce_bytes += bytes;
+        self.stats.hops += 1;
+        self.stats.modeled_secs += self.model.time_secs(1, bytes);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{proptest, Pcg64};
+
+    #[test]
+    fn prop_all_reduce_computes_exact_mean() {
+        proptest::check("ring-allreduce==mean", 10, |rng| {
+            let w = proptest::size(rng, 1, 8);
+            let n = proptest::size(rng, 1, 300);
+            let bufs: Vec<Matrix> =
+                (0..w).map(|_| Matrix::randn(1, n, 1.0, rng)).collect();
+            let mut want = Matrix::zeros(1, n);
+            for b in &bufs {
+                want.axpy(1.0 / w as f32, b);
+            }
+            let mut got = bufs;
+            let mut comm = Communicator::new(w, CommModel::default());
+            comm.all_reduce_mean(&mut got);
+            for b in &got {
+                assert!(
+                    b.max_abs_diff(&want) < 1e-5,
+                    "w={w} n={n} diff={}",
+                    b.max_abs_diff(&want)
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn all_reduce_volume_matches_ring_formula() {
+        let w = 4;
+        let n = 1000usize;
+        let mut rng = Pcg64::seed(0);
+        let mut bufs: Vec<Matrix> =
+            (0..w).map(|_| Matrix::randn(1, n, 1.0, &mut rng)).collect();
+        let mut comm = Communicator::new(w, CommModel::default());
+        comm.all_reduce_mean(&mut bufs);
+        // 2·(W−1)·(N/W) per worker · W workers · 4 bytes ≈ 2·(W−1)·N·4
+        let want = 2 * (w as u64 - 1) * n as u64 * 4;
+        let got = comm.stats.all_reduce_bytes;
+        let tol = want / 10; // chunk rounding
+        assert!(got.abs_diff(want) <= tol, "got={got} want≈{want}");
+    }
+
+    #[test]
+    fn broadcast_replicates_and_accounts() {
+        let mut rng = Pcg64::seed(1);
+        let src = Matrix::randn(4, 4, 1.0, &mut rng);
+        let mut bufs = vec![
+            Matrix::zeros(4, 4),
+            src.clone(),
+            Matrix::zeros(4, 4),
+            Matrix::zeros(4, 4),
+        ];
+        let mut comm = Communicator::new(4, CommModel::default());
+        comm.broadcast(&mut bufs, 1);
+        for b in &bufs {
+            assert_eq!(b, &src);
+        }
+        // 3 receivers × 64 bytes
+        assert_eq!(comm.stats.broadcast_bytes, 3 * 64);
+    }
+
+    #[test]
+    fn single_worker_is_free() {
+        let mut rng = Pcg64::seed(2);
+        let mut bufs = vec![Matrix::randn(2, 2, 1.0, &mut rng)];
+        let before = bufs[0].clone();
+        let mut comm = Communicator::new(1, CommModel::default());
+        comm.all_reduce_mean(&mut bufs);
+        assert_eq!(bufs[0], before);
+        assert_eq!(comm.stats.total_bytes(), 0);
+    }
+
+    #[test]
+    fn comm_model_time_monotone_in_bytes() {
+        let m = CommModel::default();
+        assert!(m.time_secs(1, 1000) < m.time_secs(1, 10_000_000));
+        assert!(m.time_secs(1, 0) > 0.0); // latency floor
+    }
+}

@@ -1,0 +1,16 @@
+//! Distributed-training coordinator (simulated DDP + ZeRO).
+//!
+//! The paper runs 8×H100 DDP with the ZeRO-redundancy trick: each layer's
+//! optimizer update is computed on one owner GPU and broadcast; Trion
+//! broadcasts only the low-rank `o_t` + indices (§2.3). This testbed has
+//! one CPU core and an `Rc`-backed PJRT client, so workers are *simulated*:
+//! each worker has its own data shard, gradient buffer and RNG stream, and
+//! collectives run the real ring/tree algorithms chunk by chunk with exact
+//! byte accounting and an α–β time model — the communication *volume* and
+//! *schedule* are faithful even though the transport is a memcpy.
+
+pub mod collectives;
+pub mod zero;
+
+pub use collectives::{CommModel, CommStats, Communicator};
+pub use zero::{ZeroSchedule, ZeroStats};

@@ -1,0 +1,15 @@
+//! Data substrate: synthetic corpora + batch loading.
+//!
+//! The paper trains on C4 (unavailable offline); we substitute a
+//! Zipf–Markov byte corpus whose statistics give informative loss curves
+//! (DESIGN.md §Hardware-Adaptation), and a structured arithmetic "task"
+//! corpus for the fine-tuning experiments (Tables 7–8) where exact-match
+//! accuracy is measurable.
+
+pub mod corpus;
+pub mod loader;
+pub mod task;
+
+pub use corpus::{SyntheticCorpus, CorpusConfig};
+pub use loader::BatchLoader;
+pub use task::{TaskCorpus, TaskExample};

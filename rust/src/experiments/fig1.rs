@@ -1,0 +1,98 @@
+//! **Figure 1 + Appendix F**: per-layer projection errors ‖B_t − O_t‖ for
+//! Dion vs Trion over training, on the first transformer block's linear
+//! layers. Claim under test: Trion's dynamic selection yields a lower (and
+//! for some layers decreasing) projection error, Dion's stays flat.
+
+use anyhow::Result;
+
+use crate::optim::OptimizerKind;
+use crate::runtime::{Manifest, Runtime};
+use crate::train::{TrainConfig, Trainer};
+use crate::util::json::Json;
+
+use super::{render_table, write_csv, ExpOptions};
+
+pub fn run(manifest: &Manifest, rt: &Runtime, opts: &ExpOptions) -> Result<()> {
+    let steps = if opts.quick { 20 } else { 120 };
+    let mut rows = Vec::new();
+    let mut per_run = Vec::new();
+    for kind in [OptimizerKind::Dion, OptimizerKind::Trion] {
+        let mut cfg = TrainConfig {
+            preset: "nano".into(),
+            optimizer: kind.clone(),
+            steps,
+            seed: opts.seed,
+            out_dir: opts.out_dir.clone(),
+            run_name: format!("fig1_{}", kind.name()),
+            workers: 2,
+            ..Default::default()
+        };
+        cfg.opt.rank = 16; // r/d = 1/4 on nano, mirroring d=640, r=128
+        cfg.opt.instrument = true;
+        cfg.opt.seed = opts.seed;
+        let mut tr = Trainer::new(manifest, rt, cfg)?;
+        let sum = tr.run(manifest, rt)?;
+        per_run.push(sum.metrics_path.clone());
+
+        // pull the block-0 projection-error series out of metrics.jsonl
+        let text = std::fs::read_to_string(&sum.metrics_path)?;
+        let mut first: Option<(f64, Vec<(String, f64)>)> = None;
+        let mut last: Option<(f64, Vec<(String, f64)>)> = None;
+        for line in text.lines() {
+            let j = Json::parse(line)?;
+            let (Some(step), Some(errs)) = (j.get("step"), j.get("proj_errors")) else {
+                continue;
+            };
+            let mut layer_errs = Vec::new();
+            if let Json::Obj(m) = errs {
+                for (k, v) in m {
+                    if k.starts_with("block0.") {
+                        layer_errs.push((k.clone(), v.as_f64()?));
+                    }
+                }
+            }
+            if layer_errs.is_empty() {
+                continue;
+            }
+            let entry = (step.as_f64()?, layer_errs);
+            if first.is_none() {
+                first = Some(entry.clone());
+            }
+            last = Some(entry);
+        }
+        if let (Some((s0, e0)), Some((s1, e1))) = (first, last) {
+            for ((name, v0), (_, v1)) in e0.iter().zip(&e1) {
+                rows.push(vec![
+                    kind.name().to_string(),
+                    name.clone(),
+                    format!("{s0}"),
+                    format!("{v0:.4}"),
+                    format!("{s1}"),
+                    format!("{v1:.4}"),
+                ]);
+            }
+        }
+    }
+    let headers = ["optimizer", "layer", "step_first", "err_first", "step_last", "err_last"];
+    println!("\nFigure 1 (projection errors, block 0):\n{}", render_table(&headers, &rows));
+    let path = write_csv(opts, "fig1", &headers, &rows)?;
+    println!(
+        "csv: {} — full per-step series in {:?}",
+        path.display(),
+        per_run
+    );
+
+    // Headline check: Trion's mean final error ≤ Dion's.
+    let mean = |opt: &str| -> f64 {
+        let sel: Vec<f64> = rows
+            .iter()
+            .filter(|r| r[0] == opt)
+            .filter_map(|r| r[5].parse().ok())
+            .collect();
+        sel.iter().sum::<f64>() / sel.len().max(1) as f64
+    };
+    let (t, d) = (mean("trion"), mean("dion"));
+    println!("mean final projection error: trion={t:.4} dion={d:.4} ({})",
+             if t <= d { "trion lower — matches the paper" } else { "dion lower" });
+    Ok(())
+}

@@ -1,0 +1,120 @@
+//! Experiment harness: one module per table/figure of the paper.
+//!
+//! Every experiment prints the paper-shaped rows, writes a CSV under
+//! `runs/experiments/`, and the loss-curve figures fall out of the
+//! per-run `metrics.jsonl` files. `--quick` shrinks step counts so the
+//! whole battery fits a CI budget; full mode is the EXPERIMENTS.md record.
+
+pub mod table1;
+pub mod table2;
+pub mod table3;
+pub mod table6;
+pub mod table7;
+pub mod table8;
+pub mod fig1;
+
+use anyhow::Result;
+
+use crate::runtime::{Manifest, Runtime};
+
+/// Shared experiment options.
+#[derive(Clone, Debug)]
+pub struct ExpOptions {
+    pub quick: bool,
+    pub out_dir: String,
+    pub seed: u64,
+}
+
+impl Default for ExpOptions {
+    fn default() -> Self {
+        ExpOptions { quick: false, out_dir: "runs".into(), seed: 42 }
+    }
+}
+
+pub fn run(name: &str, manifest: &Manifest, rt: &Runtime, opts: &ExpOptions) -> Result<()> {
+    match name {
+        "table1" | "fig3" => table1::run(manifest, rt, opts),
+        "table2" | "fig2" => table2::run(manifest, rt, opts),
+        "table3" => table3::run(),
+        "table6" | "fig4" => table6::run(manifest, rt, opts),
+        "table7" => table7::run(manifest, rt, opts),
+        "table8" => table8::run(manifest, rt, opts),
+        "fig1" => fig1::run(manifest, rt, opts),
+        "all" => {
+            for e in ["table1", "table2", "table3", "table6", "table7", "table8", "fig1"] {
+                println!("\n================ {e} ================");
+                run(e, manifest, rt, opts)?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!(
+            "unknown experiment {other:?} (table1|table2|table3|table6|table7|table8|fig1|all)"
+        ),
+    }
+}
+
+/// Render an aligned text table.
+pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, c) in row.iter().enumerate() {
+            widths[i] = widths[i].max(c.len());
+        }
+    }
+    let line = |cells: Vec<String>| -> String {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| crate::util::human::pad(c, widths[i]))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    let mut out = String::new();
+    out.push_str(&line(headers.iter().map(|s| s.to_string()).collect()));
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&line(row.clone()));
+        out.push('\n');
+    }
+    out
+}
+
+/// Write rows to `runs/experiments/<name>.csv`.
+pub fn write_csv(
+    opts: &ExpOptions,
+    name: &str,
+    headers: &[&str],
+    rows: &[Vec<String>],
+) -> Result<std::path::PathBuf> {
+    let path = std::path::PathBuf::from(&opts.out_dir)
+        .join("experiments")
+        .join(format!("{name}.csv"));
+    let mut w = crate::util::csv::CsvWriter::create(&path, headers)?;
+    for row in rows {
+        w.row(row)?;
+    }
+    w.flush()?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let t = render_table(
+            &["a", "metric"],
+            &[
+                vec!["x".into(), "1.0".into()],
+                vec!["longer".into(), "2.25".into()],
+            ],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("a     "));
+        assert!(lines[3].starts_with("longer"));
+    }
+}

@@ -1,0 +1,114 @@
+//! **Table 1 + Figure 3**: Trion vs Dion across model sizes and ranks —
+//! train/val loss & ppl, optimizer memory, wall time, and the
+//! rank-(in)dependence of the optimizer step.
+//!
+//! Paper: Llama 350M/800M/1.3B (d = 1024/2048/2048), r ∈ {128, 256, 512},
+//! i.e. r/d ∈ {1/16 … 1/2}. Here: nano/micro/small (d = 64/128/256) with
+//! the same r/d grid — the claims under test (Trion ≤ Dion loss, ~10% less
+//! optimizer memory, rank-independent runtime) are ratio claims.
+
+use anyhow::Result;
+
+use crate::optim::OptimizerKind;
+use crate::runtime::{Manifest, Runtime};
+use crate::train::{TrainConfig, Trainer};
+use crate::util::human;
+
+use super::{render_table, write_csv, ExpOptions};
+
+pub fn run(manifest: &Manifest, rt: &Runtime, opts: &ExpOptions) -> Result<()> {
+    // `small` (the 1.3B analog) triples the battery's wall time on one
+    // core; include it with FFT_SUBSPACE_TABLE1_SMALL=1.
+    let with_small = std::env::var("FFT_SUBSPACE_TABLE1_SMALL").is_ok();
+    let presets: &[(&str, usize)] = if opts.quick {
+        &[("nano", 64)]
+    } else if with_small {
+        &[("nano", 64), ("micro", 128), ("small", 256)]
+    } else {
+        &[("nano", 64), ("micro", 128)]
+    };
+    // r/d sweep matching the paper's 1/16..1/2 grid
+    let ratios: &[(usize, usize)] = if opts.quick {
+        &[(1, 8), (1, 2)]
+    } else {
+        &[(1, 16), (1, 8), (1, 4), (1, 2)]
+    };
+    let steps = if opts.quick { 30 } else { 200 };
+
+    let mut rows = Vec::new();
+    for &(preset, d) in presets {
+        for &(num, den) in ratios {
+            let rank = (d * num / den).max(2);
+            for kind in [OptimizerKind::Trion, OptimizerKind::Dion] {
+                let mut cfg = TrainConfig {
+                    preset: preset.into(),
+                    optimizer: kind.clone(),
+                    steps,
+                    seed: opts.seed,
+                    out_dir: opts.out_dir.clone(),
+                    workers: 2, // 1-core testbed: 2 simulated workers keep DDP exercised
+                    ..Default::default()
+                };
+                cfg.opt.rank = rank;
+                cfg.opt.seed = opts.seed;
+                let mut tr = Trainer::new(manifest, rt, cfg)?;
+                let sum = tr.run(manifest, rt)?;
+                println!(
+                    "  {preset} r={rank} {}: train {:.3} val {:.3} (ppl {:.2}) mem {} wall {} opt {:.1}s",
+                    sum.optimizer,
+                    sum.mean_tail_loss,
+                    sum.val_loss,
+                    sum.val_ppl,
+                    human::bytes(sum.optimizer_state_bytes),
+                    human::duration(sum.wall_secs),
+                    sum.optimizer_secs,
+                );
+                rows.push(vec![
+                    preset.to_string(),
+                    format!("{num}/{den}"),
+                    rank.to_string(),
+                    sum.optimizer.clone(),
+                    format!("{:.4}", sum.mean_tail_loss),
+                    format!("{:.2}", sum.train_ppl()),
+                    format!("{:.4}", sum.val_loss),
+                    format!("{:.2}", sum.val_ppl),
+                    sum.optimizer_state_bytes.to_string(),
+                    format!("{:.2}", sum.wall_secs),
+                    format!("{:.3}", sum.optimizer_secs),
+                    sum.update_broadcast_bytes.to_string(),
+                    sum.metrics_path.display().to_string(),
+                ]);
+            }
+        }
+    }
+    let headers = [
+        "preset", "r/d", "rank", "optimizer", "train_loss", "train_ppl",
+        "val_loss", "val_ppl", "opt_state_bytes", "wall_secs",
+        "optimizer_secs", "update_bcast_bytes", "metrics",
+    ];
+    println!("\nTable 1 (Trion vs Dion):\n{}", render_table(&headers, &rows));
+    let path = write_csv(opts, "table1", &headers, &rows)?;
+    println!("csv: {} (fig3 series: per-run metrics.jsonl)", path.display());
+
+    // Rank-independence check (the paper's runtime claim): Trion's
+    // optimizer time should be ~flat in rank; Dion's should grow.
+    summarize_rank_dependence(&rows);
+    Ok(())
+}
+
+fn summarize_rank_dependence(rows: &[Vec<String>]) {
+    let mut by_opt: std::collections::BTreeMap<String, Vec<(usize, f64)>> =
+        Default::default();
+    for r in rows {
+        let rank: usize = r[2].parse().unwrap_or(0);
+        let secs: f64 = r[10].parse().unwrap_or(0.0);
+        by_opt.entry(r[3].clone()).or_default().push((rank, secs));
+    }
+    println!("optimizer-time vs rank (rank-independence claim):");
+    for (opt, mut v) in by_opt {
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        let series: Vec<String> =
+            v.iter().map(|(r, s)| format!("r{r}:{s:.3}s")).collect();
+        println!("  {opt}: {}", series.join("  "));
+    }
+}

@@ -1,0 +1,78 @@
+//! **Table 2 + Figure 2**: AdamW vs LDAdamW vs DCT-AdamW pre-training.
+//! Paper: Llama-800M, 100 tokens/param, rank ~d/2, DCT-AdamW with 8-bit
+//! EF + ZeRO. Here: micro preset with an extended token budget, same
+//! three-way comparison; the claims under test are DCT-AdamW ≤ LDAdamW
+//! loss, much lower memory, and ~25% faster optimizer time.
+
+use anyhow::Result;
+
+use crate::optim::common::EfMode;
+use crate::optim::OptimizerKind;
+use crate::runtime::{Manifest, Runtime};
+use crate::train::{TrainConfig, Trainer};
+use crate::util::human;
+
+use super::{render_table, write_csv, ExpOptions};
+
+pub fn run(manifest: &Manifest, rt: &Runtime, opts: &ExpOptions) -> Result<()> {
+    let steps = if opts.quick { 30 } else { 250 };
+    let preset = if opts.quick { "nano" } else { "micro" };
+    let rank = if opts.quick { 16 } else { 64 };
+
+    let mut rows = Vec::new();
+    for kind in [
+        OptimizerKind::AdamW,
+        OptimizerKind::LdAdamW,
+        OptimizerKind::DctAdamW,
+    ] {
+        let mut cfg = TrainConfig {
+            preset: preset.into(),
+            optimizer: kind.clone(),
+            steps,
+            lr: 3e-3, // Adam-family lr
+            seed: opts.seed,
+            out_dir: opts.out_dir.clone(),
+            workers: 2,
+            ..Default::default()
+        };
+        cfg.opt.rank = rank;
+        cfg.opt.seed = opts.seed;
+        cfg.opt.ef_mode = EfMode::Q8; // the paper's 8-bit EF
+        cfg.opt.update_interval = 1;
+        let mut tr = Trainer::new(manifest, rt, cfg)?;
+        let sum = tr.run(manifest, rt)?;
+        println!(
+            "  {}: train ppl {:.2} val ppl {:.2} mem {} wall {} opt {:.1}s",
+            sum.optimizer,
+            sum.train_ppl(),
+            sum.val_ppl,
+            human::bytes(sum.optimizer_state_bytes),
+            human::duration(sum.wall_secs),
+            sum.optimizer_secs,
+        );
+        rows.push(vec![
+            sum.optimizer.clone(),
+            format!("{:.4}", sum.mean_tail_loss),
+            format!("{:.2}", sum.train_ppl()),
+            format!("{:.4}", sum.val_loss),
+            format!("{:.2}", sum.val_ppl),
+            sum.optimizer_state_bytes.to_string(),
+            sum.per_worker_state_bytes.to_string(),
+            format!("{:.2}", sum.wall_secs),
+            format!("{:.3}", sum.optimizer_secs),
+            sum.metrics_path.display().to_string(),
+        ]);
+    }
+    let headers = [
+        "optimizer", "train_loss", "train_ppl", "val_loss", "val_ppl",
+        "opt_state_bytes", "zero_per_worker_bytes", "wall_secs",
+        "optimizer_secs", "metrics",
+    ];
+    println!(
+        "\nTable 2 (AdamW / LDAdamW / DCT-AdamW, {preset}, rank {rank}):\n{}",
+        render_table(&headers, &rows)
+    );
+    let path = write_csv(opts, "table2", &headers, &rows)?;
+    println!("csv: {} (fig2 curve: per-run metrics.jsonl)", path.display());
+    Ok(())
+}

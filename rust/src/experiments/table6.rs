@@ -1,0 +1,89 @@
+//! **Table 6 + Figure 4**: FRUGAL × {SVD, DCT, RandPerm, Random} and
+//! FIRA × {SVD, DCT} pre-training, with AdamW for reference.
+//! Claims under test: DCT ≈ SVD quality at lower runtime/memory; DCT beats
+//! RandPerm/Random by ~1 ppl; FIRA+DCT slightly better than FIRA+SVD.
+
+use anyhow::Result;
+
+use crate::optim::OptimizerKind;
+use crate::projection::{ProjectionKind, RankNorm};
+use crate::runtime::{Manifest, Runtime};
+use crate::train::{TrainConfig, Trainer};
+use crate::util::human;
+
+use super::{render_table, write_csv, ExpOptions};
+
+pub fn run(manifest: &Manifest, rt: &Runtime, opts: &ExpOptions) -> Result<()> {
+    // micro (the 800M analog) costs ~2 min/run on one core; opt in with
+    // FFT_SUBSPACE_TABLE6_MICRO=1 — nano preserves the same orderings.
+    let micro = std::env::var("FFT_SUBSPACE_TABLE6_MICRO").is_ok();
+    let steps = if opts.quick { 30 } else { 250 };
+    let preset = if micro && !opts.quick { "micro" } else { "nano" };
+    let rank = if opts.quick || !micro { 16 } else { 32 };
+    let dct = ProjectionKind::Dct { norm: RankNorm::L2, use_makhoul: true };
+
+    let mut cases: Vec<(OptimizerKind, Option<ProjectionKind>)> = vec![
+        (OptimizerKind::AdamW, None),
+        (OptimizerKind::Frugal, Some(ProjectionKind::Svd)),
+        (OptimizerKind::Frugal, Some(dct.clone())),
+        (OptimizerKind::Frugal, Some(ProjectionKind::RandPerm)),
+        (OptimizerKind::Frugal, Some(ProjectionKind::Random)),
+        (OptimizerKind::Fira, Some(ProjectionKind::Svd)),
+        (OptimizerKind::Fira, Some(dct)),
+    ];
+    if opts.quick {
+        cases.truncate(5);
+    }
+
+    let mut rows = Vec::new();
+    for (kind, proj) in cases {
+        let mut cfg = TrainConfig {
+            preset: preset.into(),
+            optimizer: kind.clone(),
+            steps,
+            lr: 3e-3,
+            seed: opts.seed,
+            out_dir: opts.out_dir.clone(),
+            workers: 2,
+            ..Default::default()
+        };
+        cfg.opt.rank = rank;
+        cfg.opt.seed = opts.seed;
+        cfg.opt.update_interval = 50; // FRUGAL/FIRA refresh cadence (paper: 200)
+        if let Some(p) = proj {
+            cfg.opt.projection = p;
+        }
+        let mut tr = Trainer::new(manifest, rt, cfg)?;
+        let sum = tr.run(manifest, rt)?;
+        println!(
+            "  {}: train ppl {:.2} val ppl {:.2} mem {} wall {}",
+            sum.optimizer,
+            sum.train_ppl(),
+            sum.val_ppl,
+            human::bytes(sum.optimizer_state_bytes),
+            human::duration(sum.wall_secs),
+        );
+        rows.push(vec![
+            sum.optimizer.clone(),
+            format!("{:.4}", sum.mean_tail_loss),
+            format!("{:.2}", sum.train_ppl()),
+            format!("{:.4}", sum.val_loss),
+            format!("{:.2}", sum.val_ppl),
+            sum.optimizer_state_bytes.to_string(),
+            format!("{:.2}", sum.wall_secs),
+            format!("{:.3}", sum.optimizer_secs),
+            sum.metrics_path.display().to_string(),
+        ]);
+    }
+    let headers = [
+        "optimizer", "train_loss", "train_ppl", "val_loss", "val_ppl",
+        "opt_state_bytes", "wall_secs", "optimizer_secs", "metrics",
+    ];
+    println!(
+        "\nTable 6 (FRUGAL/FIRA projection sweep, {preset}, rank {rank}):\n{}",
+        render_table(&headers, &rows)
+    );
+    let path = write_csv(opts, "table6", &headers, &rows)?;
+    println!("csv: {} (fig4 curves: per-run metrics.jsonl)", path.display());
+    Ok(())
+}

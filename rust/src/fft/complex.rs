@@ -1,0 +1,279 @@
+//! Complex FFT: iterative radix-2 Cooley–Tukey with precomputed twiddles,
+//! plus Bluestein's chirp-z algorithm so *any* length (odd `d_model`s
+//! included) runs in O(n log n).
+
+/// Minimal complex number (no `num-complex` offline).
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub struct Complex {
+    pub re: f64,
+    pub im: f64,
+}
+
+impl Complex {
+    pub const ZERO: Complex = Complex { re: 0.0, im: 0.0 };
+
+    #[inline]
+    pub fn new(re: f64, im: f64) -> Self {
+        Complex { re, im }
+    }
+
+    #[inline]
+    pub fn from_polar(r: f64, theta: f64) -> Self {
+        Complex { re: r * theta.cos(), im: r * theta.sin() }
+    }
+
+    #[inline]
+    pub fn conj(self) -> Self {
+        Complex { re: self.re, im: -self.im }
+    }
+
+    #[inline]
+    pub fn mul(self, o: Complex) -> Self {
+        Complex {
+            re: self.re * o.re - self.im * o.im,
+            im: self.re * o.im + self.im * o.re,
+        }
+    }
+
+    #[inline]
+    pub fn add(self, o: Complex) -> Self {
+        Complex { re: self.re + o.re, im: self.im + o.im }
+    }
+
+    #[inline]
+    pub fn sub(self, o: Complex) -> Self {
+        Complex { re: self.re - o.re, im: self.im - o.im }
+    }
+
+    #[inline]
+    pub fn scale(self, s: f64) -> Self {
+        Complex { re: self.re * s, im: self.im * s }
+    }
+
+    pub fn abs(self) -> f64 {
+        self.re.hypot(self.im)
+    }
+}
+
+/// Reusable FFT plan: twiddle factors for a fixed power-of-two length, or a
+/// Bluestein embedding for non-power-of-two lengths.
+pub struct FftPlan {
+    pub n: usize,
+    twiddles: Vec<Complex>,      // radix-2 stage twiddles (size n/2), for pow2 n
+    bluestein: Option<Box<BluesteinPlan>>,
+}
+
+struct BluesteinPlan {
+    m: usize,                 // padded power-of-two length ≥ 2n-1
+    chirp: Vec<Complex>,      // a_k = exp(-iπk²/n)
+    b_fft: Vec<Complex>,      // FFT of the chirp filter
+    inner: FftPlan,           // radix-2 plan of length m
+}
+
+impl FftPlan {
+    pub fn new(n: usize) -> Self {
+        assert!(n > 0);
+        if n.is_power_of_two() {
+            let twiddles = (0..n / 2)
+                .map(|k| {
+                    Complex::from_polar(1.0, -2.0 * std::f64::consts::PI * k as f64 / n as f64)
+                })
+                .collect();
+            FftPlan { n, twiddles, bluestein: None }
+        } else {
+            let m = (2 * n - 1).next_power_of_two();
+            let inner = FftPlan::new(m);
+            // chirp a_k = exp(-iπ k²/n); filter b_k = exp(+iπ k²/n)
+            let chirp: Vec<Complex> = (0..n)
+                .map(|k| {
+                    let ang = -std::f64::consts::PI * ((k as u128 * k as u128) % (2 * n as u128)) as f64
+                        / n as f64;
+                    Complex::from_polar(1.0, ang)
+                })
+                .collect();
+            let mut b = vec![Complex::ZERO; m];
+            for k in 0..n {
+                let v = chirp[k].conj();
+                b[k] = v;
+                if k != 0 {
+                    b[m - k] = v;
+                }
+            }
+            inner.forward(&mut b);
+            FftPlan {
+                n,
+                twiddles: Vec::new(),
+                bluestein: Some(Box::new(BluesteinPlan { m, chirp, b_fft: b, inner })),
+            }
+        }
+    }
+
+    /// In-place forward DFT of `buf` (`buf.len() == self.n`).
+    pub fn forward(&self, buf: &mut [Complex]) {
+        assert_eq!(buf.len(), self.n);
+        match &self.bluestein {
+            None => self.radix2(buf),
+            Some(bp) => self.bluestein_forward(bp, buf),
+        }
+    }
+
+    fn radix2(&self, buf: &mut [Complex]) {
+        let n = self.n;
+        // bit-reversal permutation
+        let mut j = 0usize;
+        for i in 1..n {
+            let mut bit = n >> 1;
+            while j & bit != 0 {
+                j ^= bit;
+                bit >>= 1;
+            }
+            j |= bit;
+            if i < j {
+                buf.swap(i, j);
+            }
+        }
+        let mut len = 2;
+        while len <= n {
+            let step = n / len;
+            for start in (0..n).step_by(len) {
+                for k in 0..len / 2 {
+                    let w = self.twiddles[k * step];
+                    let u = buf[start + k];
+                    let v = buf[start + k + len / 2].mul(w);
+                    buf[start + k] = u.add(v);
+                    buf[start + k + len / 2] = u.sub(v);
+                }
+            }
+            len <<= 1;
+        }
+    }
+
+    fn bluestein_forward(&self, bp: &BluesteinPlan, buf: &mut [Complex]) {
+        let n = self.n;
+        let m = bp.m;
+        let mut a = vec![Complex::ZERO; m];
+        for k in 0..n {
+            a[k] = buf[k].mul(bp.chirp[k]);
+        }
+        bp.inner.forward(&mut a);
+        for (av, bv) in a.iter_mut().zip(&bp.b_fft) {
+            *av = av.mul(*bv);
+        }
+        inverse_given_forward(&bp.inner, &mut a);
+        for k in 0..n {
+            buf[k] = a[k].mul(bp.chirp[k]);
+        }
+    }
+}
+
+/// Inverse DFT via conjugation: `ifft(x) = conj(fft(conj(x)))/n`.
+fn inverse_given_forward(plan: &FftPlan, buf: &mut [Complex]) {
+    for v in buf.iter_mut() {
+        *v = v.conj();
+    }
+    plan.forward(buf);
+    let s = 1.0 / plan.n as f64;
+    for v in buf.iter_mut() {
+        *v = v.conj().scale(s);
+    }
+}
+
+/// One-shot forward FFT (plans a fresh transform; hot paths should hold a
+/// [`FftPlan`] / [`super::MakhoulPlan`] instead).
+pub fn fft_inplace(buf: &mut [Complex]) {
+    FftPlan::new(buf.len()).forward(buf);
+}
+
+/// One-shot inverse FFT.
+pub fn ifft_inplace(buf: &mut [Complex]) {
+    let plan = FftPlan::new(buf.len());
+    inverse_given_forward(&plan, buf);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{proptest, Pcg64};
+
+    fn naive_dft(x: &[Complex]) -> Vec<Complex> {
+        let n = x.len();
+        (0..n)
+            .map(|k| {
+                let mut acc = Complex::ZERO;
+                for (j, &v) in x.iter().enumerate() {
+                    let ang = -2.0 * std::f64::consts::PI * (k * j) as f64 / n as f64;
+                    acc = acc.add(v.mul(Complex::from_polar(1.0, ang)));
+                }
+                acc
+            })
+            .collect()
+    }
+
+    fn rand_signal(rng: &mut Pcg64, n: usize) -> Vec<Complex> {
+        (0..n).map(|_| Complex::new(rng.normal(), rng.normal())).collect()
+    }
+
+    #[test]
+    fn fft_matches_naive_dft_pow2() {
+        let mut rng = Pcg64::seed(0);
+        for n in [1usize, 2, 4, 8, 64, 256] {
+            let x = rand_signal(&mut rng, n);
+            let want = naive_dft(&x);
+            let mut got = x.clone();
+            fft_inplace(&mut got);
+            for (a, b) in got.iter().zip(&want) {
+                assert!(a.sub(*b).abs() < 1e-8 * (n as f64), "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn fft_matches_naive_dft_arbitrary_lengths() {
+        let mut rng = Pcg64::seed(1);
+        for n in [3usize, 5, 6, 7, 12, 17, 40, 96, 100, 257] {
+            let x = rand_signal(&mut rng, n);
+            let want = naive_dft(&x);
+            let mut got = x.clone();
+            fft_inplace(&mut got);
+            for (a, b) in got.iter().zip(&want) {
+                assert!(a.sub(*b).abs() < 1e-7 * (n as f64), "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn prop_fft_ifft_roundtrip() {
+        proptest::check("fft∘ifft=id", 16, |rng| {
+            let n = proptest::size(rng, 1, 200);
+            let x = rand_signal(rng, n);
+            let mut y = x.clone();
+            fft_inplace(&mut y);
+            ifft_inplace(&mut y);
+            for (a, b) in y.iter().zip(&x) {
+                assert!(a.sub(*b).abs() < 1e-9 * (n as f64 + 1.0));
+            }
+        });
+    }
+
+    #[test]
+    fn parseval_energy_preserved() {
+        let mut rng = Pcg64::seed(2);
+        let n = 128;
+        let x = rand_signal(&mut rng, n);
+        let ex: f64 = x.iter().map(|c| c.abs() * c.abs()).sum();
+        let mut y = x;
+        fft_inplace(&mut y);
+        let ey: f64 = y.iter().map(|c| c.abs() * c.abs()).sum::<f64>() / n as f64;
+        assert!((ex - ey).abs() < 1e-8 * ex);
+    }
+
+    #[test]
+    fn impulse_has_flat_spectrum() {
+        let mut x = vec![Complex::ZERO; 16];
+        x[0] = Complex::new(1.0, 0.0);
+        fft_inplace(&mut x);
+        for v in x {
+            assert!((v.re - 1.0).abs() < 1e-12 && v.im.abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,96 @@
+//! DCT-II / DCT-III orthogonal matrices (Appendix A).
+//!
+//! `dct3_matrix(n)[i][j] = sqrt(2/n) · cos(i(2j+1)π / 2n)` with the first
+//! row divided by `sqrt(2)`; DCT-II is its transpose. One `d×d` instance is
+//! materialized per device replica at training start (the paper's memory
+//! story: one matrix per GPU for the whole network + r indices per layer).
+
+use crate::tensor::Matrix;
+
+/// Orthogonal DCT-III matrix of order `n`.
+pub fn dct3_matrix(n: usize) -> Matrix {
+    let inv_sqrt2 = 1.0 / (2.0f64).sqrt();
+    let scale = (2.0 / n as f64).sqrt();
+    Matrix::from_fn(n, n, |i, j| {
+        let ang = (i as f64) * (2.0 * j as f64 + 1.0) * std::f64::consts::PI
+            / (2.0 * n as f64);
+        let mut v = scale * ang.cos();
+        if i == 0 {
+            v *= inv_sqrt2;
+        }
+        v as f32
+    })
+}
+
+/// Orthogonal DCT-II matrix of order `n` (= DCT-IIIᵀ). This is the `Q` in
+/// `S = G·Q`: column `k` is the k-th cosine basis vector, so `S` is the
+/// row-wise type-II DCT of `G`.
+pub fn dct2_matrix(n: usize) -> Matrix {
+    dct3_matrix(n).transpose()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::matmul;
+    use crate::util::proptest;
+
+    #[test]
+    fn orthogonality_various_orders() {
+        for n in [2usize, 3, 5, 8, 17, 64, 96, 128] {
+            let q = dct2_matrix(n);
+            let gram = matmul(&q.transpose(), &q);
+            let err = gram.max_abs_diff(&Matrix::eye(n));
+            assert!(err < 2e-5, "n={n} err={err}");
+        }
+    }
+
+    #[test]
+    fn closed_form_entries() {
+        let n = 16;
+        let d = dct3_matrix(n);
+        for i in 0..n {
+            for j in 0..n {
+                let mut want = (2.0 / n as f64).sqrt()
+                    * ((i as f64) * (2.0 * j as f64 + 1.0) * std::f64::consts::PI
+                        / (2.0 * n as f64))
+                        .cos();
+                if i == 0 {
+                    want /= (2.0f64).sqrt();
+                }
+                assert!((d.at(i, j) as f64 - want).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn dct2_is_transpose_of_dct3() {
+        let a = dct2_matrix(20);
+        let b = dct3_matrix(20).transpose();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn prop_projection_preserves_energy() {
+        // ‖G·Q‖F == ‖G‖F for orthogonal Q (basis change preserves energy).
+        proptest::check("dct-energy", 8, |rng| {
+            let m = proptest::size(rng, 1, 32);
+            let n = proptest::size(rng, 2, 48);
+            let g = Matrix::randn(m, n, 1.0, rng);
+            let q = dct2_matrix(n);
+            let s = matmul(&g, &q);
+            let rel = (s.fro_norm() - g.fro_norm()).abs() / g.fro_norm().max(1e-9);
+            assert!(rel < 1e-5, "rel={rel}");
+        });
+    }
+
+    #[test]
+    fn first_column_is_constant_vector() {
+        // Column 0 of DCT-II (row 0 of DCT-III) is the normalized DC basis.
+        let q = dct2_matrix(9);
+        let want = 1.0 / 3.0; // sqrt(1/9)
+        for i in 0..9 {
+            assert!((q.at(i, 0) - want).abs() < 1e-6);
+        }
+    }
+}

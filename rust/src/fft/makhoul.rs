@@ -1,0 +1,160 @@
+//! Makhoul's N-point fast DCT-II (Appendix D).
+//!
+//! For each row `x` of the input matrix:
+//!   1. permute: `[a,b,c,d,e,f] → [a,c,e,f,d,b]` (evens ascending, odds
+//!      descending, cached per length),
+//!   2. FFT of the permuted signal,
+//!   3. multiply by `W_k = exp(-iπk/2N)` (cached per length),
+//!   4. real part + orthonormal scaling (`sqrt(2/N)`, DC row `sqrt(1/N)`).
+//!
+//! Equivalent to `G · dct2_matrix(N)` at O(R·N log N) instead of O(R·N²) —
+//! the object of Tables 4–5 and the Appendix C speedup claim.
+
+use crate::tensor::Matrix;
+
+use super::complex::{Complex, FftPlan};
+
+/// Reusable plan: permutation, twiddle multipliers and the FFT plan are all
+/// computed once per length (the paper: "computed once at the start of
+/// training").
+pub struct MakhoulPlan {
+    pub n: usize,
+    perm: Vec<usize>,
+    w: Vec<Complex>,
+    scale: Vec<f64>,
+    fft: FftPlan,
+}
+
+impl MakhoulPlan {
+    pub fn new(n: usize) -> Self {
+        assert!(n > 0);
+        // evens ascending then odds descending
+        let mut perm = Vec::with_capacity(n);
+        perm.extend((0..n).step_by(2));
+        let mut odds: Vec<usize> = (1..n).step_by(2).collect();
+        odds.reverse();
+        perm.extend(odds);
+        let w = (0..n)
+            .map(|k| {
+                Complex::from_polar(
+                    1.0,
+                    -std::f64::consts::PI * k as f64 / (2.0 * n as f64),
+                )
+            })
+            .collect();
+        let base = (2.0 / n as f64).sqrt();
+        let mut scale = vec![base; n];
+        scale[0] = (1.0 / n as f64).sqrt();
+        MakhoulPlan { n, perm, w, scale, fft: FftPlan::new(n) }
+    }
+
+    /// DCT-II of one row into `out` (both length `n`), using `buf` as the
+    /// complex workspace.
+    pub fn run_row(&self, row: &[f32], out: &mut [f32], buf: &mut Vec<Complex>) {
+        debug_assert_eq!(row.len(), self.n);
+        buf.clear();
+        buf.extend(self.perm.iter().map(|&p| Complex::new(row[p] as f64, 0.0)));
+        self.fft.forward(buf);
+        for k in 0..self.n {
+            out[k] = (buf[k].mul(self.w[k]).re * self.scale[k]) as f32;
+        }
+    }
+
+    /// Row-wise DCT-II of a matrix (the `S = Makhoul(B)` of Algorithm 1).
+    pub fn run(&self, g: &Matrix) -> Matrix {
+        assert_eq!(g.cols, self.n);
+        let mut out = Matrix::zeros(g.rows, g.cols);
+        let mut buf = Vec::with_capacity(self.n);
+        for i in 0..g.rows {
+            let (src, dst) = (g.row(i), i);
+            // split borrow: copy row out via raw index range
+            let dst_slice =
+                &mut out.data[dst * g.cols..(dst + 1) * g.cols];
+            self.run_row(src, dst_slice, &mut buf);
+        }
+        out
+    }
+}
+
+/// One-shot row-wise fast DCT-II.
+pub fn dct2_rows(g: &Matrix) -> Matrix {
+    MakhoulPlan::new(g.cols).run(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::dct::dct2_matrix;
+    use crate::tensor::matmul;
+    use crate::util::{proptest, Pcg64};
+
+    #[test]
+    fn permutation_matches_paper_example() {
+        let plan = MakhoulPlan::new(6);
+        // [a,b,c,d,e,f] -> [a,c,e,f,d,b] == indices [0,2,4,5,3,1]
+        assert_eq!(plan.perm, vec![0, 2, 4, 5, 3, 1]);
+    }
+
+    #[test]
+    fn permutation_odd_length() {
+        let plan = MakhoulPlan::new(5);
+        assert_eq!(plan.perm, vec![0, 2, 4, 3, 1]);
+    }
+
+    #[test]
+    fn matches_matmul_dct_pow2() {
+        let mut rng = Pcg64::seed(0);
+        for n in [2usize, 8, 64, 128] {
+            let g = Matrix::randn(10, n, 1.0, &mut rng);
+            let want = matmul(&g, &dct2_matrix(n));
+            let got = dct2_rows(&g);
+            let err = want.max_abs_diff(&got);
+            assert!(err < 1e-4, "n={n} err={err}");
+        }
+    }
+
+    #[test]
+    fn matches_matmul_dct_arbitrary() {
+        let mut rng = Pcg64::seed(1);
+        for n in [3usize, 5, 7, 12, 17, 96, 100, 257] {
+            let g = Matrix::randn(6, n, 1.0, &mut rng);
+            let want = matmul(&g, &dct2_matrix(n));
+            let got = dct2_rows(&g);
+            let err = want.max_abs_diff(&got);
+            assert!(err < 1e-4, "n={n} err={err}");
+        }
+    }
+
+    #[test]
+    fn prop_makhoul_equals_matmul() {
+        proptest::check("makhoul==matmul", 10, |rng| {
+            let r = proptest::size(rng, 1, 24);
+            let c = proptest::size(rng, 2, 80);
+            let g = Matrix::randn(r, c, 1.0, rng);
+            let want = matmul(&g, &dct2_matrix(c));
+            let got = dct2_rows(&g);
+            assert!(want.max_abs_diff(&got) < 1e-4);
+        });
+    }
+
+    #[test]
+    fn plan_reuse_is_consistent() {
+        let mut rng = Pcg64::seed(2);
+        let plan = MakhoulPlan::new(40);
+        let a = Matrix::randn(4, 40, 1.0, &mut rng);
+        let b = Matrix::randn(4, 40, 1.0, &mut rng);
+        let got_a1 = plan.run(&a);
+        let _ = plan.run(&b);
+        let got_a2 = plan.run(&a);
+        assert_eq!(got_a1, got_a2);
+    }
+
+    #[test]
+    fn energy_preserved() {
+        let mut rng = Pcg64::seed(3);
+        let g = Matrix::randn(7, 33, 1.0, &mut rng);
+        let s = dct2_rows(&g);
+        let rel = (s.fro_norm() - g.fro_norm()).abs() / g.fro_norm();
+        assert!(rel < 1e-6, "rel={rel}");
+    }
+}

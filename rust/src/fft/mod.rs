@@ -1,0 +1,18 @@
+//! FFT / DCT substrate — the paper's O(n² log n) fast path.
+//!
+//! * [`complex`] — iterative radix-2 Cooley–Tukey + Bluestein chirp-z for
+//!   arbitrary lengths (the DCT side must work for any `d_model`).
+//! * [`dct`]     — DCT-II/III orthogonal matrices per Appendix A.
+//! * [`makhoul`] — Makhoul's N-point fast DCT-II (Appendix D): permute →
+//!   FFT → multiply by `W_k = exp(-iπk/2N)` → real part → orthonormal scale.
+//!
+//! `makhoul::dct2_rows(G)` is bit-for-bit checked against `G · dct::dct2(C)`
+//! in tests and raced against blocked matmul in `bench_makhoul` (Tables 4–5).
+
+pub mod complex;
+pub mod dct;
+pub mod makhoul;
+
+pub use complex::{fft_inplace, Complex};
+pub use dct::{dct2_matrix, dct3_matrix};
+pub use makhoul::{dct2_rows, MakhoulPlan};

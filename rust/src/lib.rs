@@ -1,0 +1,37 @@
+//! # fft-subspace
+//!
+//! Reproduction of **"FFT-based Dynamic Subspace Selection for Low-Rank
+//! Adaptive Optimization of Large Language Models"** (Modoranu et al., 2025)
+//! as a three-layer Rust + JAX + Pallas system:
+//!
+//! - **Layer 1 (Pallas, build time)** — fused DCT-similarity + column-norm
+//!   kernels, Newton–Schulz orthogonalization, AdamW update kernels
+//!   (`python/compile/kernels/`), validated against a pure-jnp oracle.
+//! - **Layer 2 (JAX, build time)** — Llama-style transformer forward/backward
+//!   and per-layer optimizer update graphs, AOT-lowered to HLO text
+//!   (`python/compile/model.py`, `python/compile/aot.py`).
+//! - **Layer 3 (Rust, run time)** — this crate: PJRT runtime that loads the
+//!   AOT artifacts, a simulated multi-worker DDP/ZeRO coordinator, native
+//!   implementations of all optimizers from the paper (Trion, DCT-AdamW) and
+//!   every baseline it compares against (AdamW, Muon, Dion, GaLore, LDAdamW,
+//!   FRUGAL, FIRA), and the full experiment/bench harness that regenerates
+//!   every table and figure of the paper.
+//!
+//! Python never runs on the training path: `make artifacts` lowers everything
+//! once, and the `fft-subspace` binary is self-contained afterwards.
+#![allow(clippy::needless_range_loop)]
+
+pub mod util;
+pub mod tensor;
+pub mod fft;
+pub mod linalg;
+pub mod projection;
+pub mod optim;
+pub mod data;
+pub mod runtime;
+pub mod coordinator;
+pub mod train;
+pub mod bench;
+pub mod experiments;
+
+pub use tensor::Matrix;

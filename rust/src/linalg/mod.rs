@@ -1,0 +1,14 @@
+//! Dense linear-algebra substrate for the baselines the paper compares
+//! against: Householder QR (Dion's power iteration), one-sided Jacobi SVD
+//! (GaLore / FRUGAL / FIRA projections), block power iteration (LDAdam) and
+//! the quintic Newton–Schulz orthogonalization (Muon / Trion).
+
+pub mod qr;
+pub mod svd;
+pub mod newton_schulz;
+pub mod power_iter;
+
+pub use newton_schulz::newton_schulz;
+pub use power_iter::{block_power_iter, power_iter_qr};
+pub use qr::qr_thin;
+pub use svd::{svd_thin, Svd};

@@ -1,0 +1,102 @@
+//! Quintic Newton–Schulz orthogonalization (Muon coefficients).
+//!
+//! Pushes the singular values of the input toward 1 with five iterations of
+//! `X ← aX + X(bA + cA²)`, `A = XᵀX`. Mirrors `kernels/ref.py::newton_schulz`
+//! exactly (same coefficients, same frobenius pre-normalization, same
+//! transpose trick for wide inputs) — the rust-native Trion path and the AOT
+//! pallas-kernel path must agree to float tolerance.
+
+use crate::tensor::{matmul, matmul_at_b, Matrix};
+
+/// Muon's quintic coefficients (Jordan et al., 2024).
+pub const NS_COEFFS: (f32, f32, f32) = (3.4445, -4.7750, 2.0315);
+
+/// Orthogonalize `x` with `steps` Newton–Schulz iterations.
+pub fn newton_schulz(x: &Matrix, steps: usize) -> Matrix {
+    let (a, b, c) = NS_COEFFS;
+    let transposed = x.rows < x.cols;
+    let mut w = if transposed { x.transpose() } else { x.clone() };
+    let norm = w.fro_norm() as f32 + 1e-7;
+    w.scale(1.0 / norm);
+    for _ in 0..steps {
+        let gram = matmul_at_b(&w, &w); // r×r
+        let gram2 = matmul(&gram, &gram);
+        // poly = b·A + c·A²
+        let mut poly = gram2;
+        poly.scale(c);
+        poly.axpy(b, &gram);
+        // w = a·w + w·poly
+        let w_poly = matmul(&w, &poly);
+        w.scale(a);
+        w.axpy(1.0, &w_poly);
+    }
+    if transposed {
+        w.transpose()
+    } else {
+        w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::svd::svd_thin;
+    use crate::util::{proptest, Pcg64};
+
+    #[test]
+    fn singular_values_pushed_toward_one() {
+        let mut rng = Pcg64::seed(0);
+        let x = Matrix::randn(48, 8, 1.0, &mut rng);
+        let o = newton_schulz(&x, 10);
+        let svd = svd_thin(&o);
+        for &s in &svd.s {
+            assert!(s > 0.5 && s < 1.5, "s={s}");
+        }
+    }
+
+    #[test]
+    fn preserves_singular_subspace_directions() {
+        // NS approximates UVᵀ of the input: column space must match.
+        let mut rng = Pcg64::seed(1);
+        let x = Matrix::randn(24, 4, 1.0, &mut rng);
+        let o = newton_schulz(&x, 8);
+        // project o's columns onto x's column space; residual should be ~0
+        let (qx, _) = crate::linalg::qr_thin(&x);
+        let coeff = matmul_at_b(&qx, &o);
+        let proj = matmul(&qx, &coeff);
+        let resid = o.sub(&proj).fro_norm() / o.fro_norm();
+        assert!(resid < 1e-3, "resid={resid}");
+    }
+
+    #[test]
+    fn wide_input_uses_transpose_trick() {
+        let mut rng = Pcg64::seed(2);
+        let x = Matrix::randn(6, 40, 1.0, &mut rng);
+        let o = newton_schulz(&x, 8);
+        assert_eq!(o.shape(), (6, 40));
+        let svd = svd_thin(&o);
+        for &s in svd.s.iter().take(6) {
+            assert!(s > 0.5 && s < 1.5, "s={s}");
+        }
+    }
+
+    #[test]
+    fn prop_output_norm_bounded() {
+        proptest::check("ns-bounded", 8, |rng| {
+            let m = proptest::size(rng, 4, 40);
+            let n = proptest::size(rng, 1, 12);
+            let x = Matrix::randn(m, n, 1.0, rng);
+            let o = newton_schulz(&x, 5);
+            // ‖O‖F ≤ sqrt(min(m,n)) · 1.5 (singular values near 1)
+            let bound = ((m.min(n)) as f64).sqrt() * 1.6;
+            assert!(o.fro_norm() <= bound, "norm={} bound={bound}", o.fro_norm());
+        });
+    }
+
+    #[test]
+    fn zero_input_stays_finite() {
+        let x = Matrix::zeros(8, 3);
+        let o = newton_schulz(&x, 5);
+        assert!(o.data.iter().all(|v| v.is_finite()));
+    }
+}

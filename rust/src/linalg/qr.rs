@@ -1,0 +1,147 @@
+//! Thin QR via Householder reflections.
+//!
+//! Used by Dion's power-iteration step (`P_t = QR(B_t P_{t-1})`) and to
+//! generate random semi-orthogonal baselines (FRUGAL's `Random` projection).
+//! Rank-revealing enough for our use: zero columns yield zero R diagonal and
+//! an orthonormal completion from the remaining reflectors.
+
+use crate::tensor::Matrix;
+
+/// Thin QR of `a (m×n)`, `m ≥ n`: returns `(Q (m×n), R (n×n))` with
+/// `Q·R == a` and `QᵀQ == I`.
+pub fn qr_thin(a: &Matrix) -> (Matrix, Matrix) {
+    let (m, n) = a.shape();
+    assert!(m >= n, "qr_thin needs m >= n, got {m}x{n}");
+    // Work in f64 for stability; the factors round back to f32.
+    let mut r: Vec<f64> = a.data.iter().map(|&v| v as f64).collect();
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n); // Householder vectors
+
+    for k in 0..n {
+        // norm of the k-th column below the diagonal
+        let mut norm2 = 0.0f64;
+        for i in k..m {
+            let v = r[i * n + k];
+            norm2 += v * v;
+        }
+        let norm = norm2.sqrt();
+        let mut v = vec![0.0f64; m - k];
+        if norm > 0.0 {
+            let alpha = if r[k * n + k] >= 0.0 { -norm } else { norm };
+            v[0] = r[k * n + k] - alpha;
+            for i in k + 1..m {
+                v[i - k] = r[i * n + k];
+            }
+            let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+            if vnorm2 > 1e-300 {
+                // apply H = I - 2vvᵀ/(vᵀv) to R[k.., k..]
+                for j in k..n {
+                    let mut dot = 0.0f64;
+                    for i in k..m {
+                        dot += v[i - k] * r[i * n + j];
+                    }
+                    let f = 2.0 * dot / vnorm2;
+                    for i in k..m {
+                        r[i * n + j] -= f * v[i - k];
+                    }
+                }
+            } else {
+                v = vec![0.0; m - k];
+            }
+        }
+        vs.push(v);
+    }
+
+    // Accumulate Q = H_0 H_1 ... H_{n-1} applied to the thin identity.
+    let mut q = vec![0.0f64; m * n];
+    for j in 0..n {
+        q[j * n + j] = 1.0;
+    }
+    for k in (0..n).rev() {
+        let v = &vs[k];
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm2 <= 1e-300 {
+            continue;
+        }
+        for j in 0..n {
+            let mut dot = 0.0f64;
+            for i in k..m {
+                dot += v[i - k] * q[i * n + j];
+            }
+            let f = 2.0 * dot / vnorm2;
+            for i in k..m {
+                q[i * n + j] -= f * v[i - k];
+            }
+        }
+    }
+
+    let q_m = Matrix::from_vec(m, n, q.iter().map(|&v| v as f32).collect());
+    let mut r_m = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            *r_m.at_mut(i, j) = r[i * n + j] as f32;
+        }
+    }
+    (q_m, r_m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{matmul, matmul_at_b};
+    use crate::util::proptest;
+
+    #[test]
+    fn reconstructs_and_orthogonal() {
+        proptest::check("qr: A=QR, QᵀQ=I", 12, |rng| {
+            let n = proptest::size(rng, 1, 24);
+            let m = n + proptest::size(rng, 0, 40);
+            let a = Matrix::randn(m, n, 1.0, rng);
+            let (q, r) = qr_thin(&a);
+            assert!(matmul(&q, &r).max_abs_diff(&a) < 1e-3);
+            let gram = matmul_at_b(&q, &q);
+            assert!(gram.max_abs_diff(&Matrix::eye(n)) < 1e-4);
+        });
+    }
+
+    #[test]
+    fn r_is_upper_triangular() {
+        let mut rng = crate::util::Pcg64::seed(0);
+        let a = Matrix::randn(10, 6, 1.0, &mut rng);
+        let (_, r) = qr_thin(&a);
+        for i in 0..6 {
+            for j in 0..i {
+                assert_eq!(r.at(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn handles_rank_deficiency() {
+        // two identical columns
+        let mut rng = crate::util::Pcg64::seed(1);
+        let col = Matrix::randn(12, 1, 1.0, &mut rng);
+        let mut a = Matrix::zeros(12, 2);
+        for i in 0..12 {
+            *a.at_mut(i, 0) = col.at(i, 0);
+            *a.at_mut(i, 1) = col.at(i, 0);
+        }
+        let (q, r) = qr_thin(&a);
+        assert!(matmul(&q, &r).max_abs_diff(&a) < 1e-4);
+        // R[1,1] ≈ 0 reveals the deficiency
+        assert!(r.at(1, 1).abs() < 1e-4);
+    }
+
+    #[test]
+    fn square_orthogonal_input_is_fixed_point_up_to_sign() {
+        let q0 = crate::fft::dct2_matrix(8);
+        let (q, r) = qr_thin(&q0);
+        // |diag(R)| == 1 and Q matches q0 up to column signs
+        for j in 0..8 {
+            assert!((r.at(j, j).abs() - 1.0).abs() < 1e-4);
+            let sign = r.at(j, j).signum();
+            for i in 0..8 {
+                assert!((q.at(i, j) * sign - q0.at(i, j)).abs() < 1e-4);
+            }
+        }
+    }
+}

@@ -1,0 +1,222 @@
+//! Thin SVD via one-sided Jacobi rotations.
+//!
+//! The GaLore / FRUGAL / FIRA baselines take the top-r left or right
+//! singular vectors of the gradient. One-sided Jacobi is simple, accurate
+//! (works column-by-column on AᵀA implicitly) and fast enough at the layer
+//! sizes we train; convergence is quadratic once rotations get small.
+
+use crate::tensor::Matrix;
+
+/// Thin SVD result: `a == u · diag(s) · vᵀ` with singular values sorted
+/// descending.
+pub struct Svd {
+    pub u: Matrix,      // m×k
+    pub s: Vec<f32>,    // k
+    pub vt: Matrix,     // k×n
+}
+
+/// One-sided Jacobi SVD of `a (m×n)`; `k = min(m, n)`.
+pub fn svd_thin(a: &Matrix) -> Svd {
+    let (m, n) = a.shape();
+    let transposed = m < n;
+    // Work on a tall matrix (m >= n) in f64.
+    let (wm, wn) = if transposed { (n, m) } else { (m, n) };
+    let mut u: Vec<f64> = if transposed {
+        let t = a.transpose();
+        t.data.iter().map(|&v| v as f64).collect()
+    } else {
+        a.data.iter().map(|&v| v as f64).collect()
+    };
+    // v accumulates the right rotations: starts as identity (wn×wn).
+    let mut v = vec![0.0f64; wn * wn];
+    for i in 0..wn {
+        v[i * wn + i] = 1.0;
+    }
+
+    let max_sweeps = 60;
+    let eps = 1e-12;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..wn {
+            for q in (p + 1)..wn {
+                // Compute the 2x2 Gram block for columns p, q.
+                let (mut app, mut aqq, mut apq) = (0.0f64, 0.0f64, 0.0f64);
+                for i in 0..wm {
+                    let up = u[i * wn + p];
+                    let uq = u[i * wn + q];
+                    app += up * up;
+                    aqq += uq * uq;
+                    apq += up * uq;
+                }
+                if apq.abs() <= eps * (app * aqq).sqrt() + 1e-300 {
+                    continue;
+                }
+                off += apq.abs();
+                // Jacobi rotation zeroing the off-diagonal.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..wm {
+                    let up = u[i * wn + p];
+                    let uq = u[i * wn + q];
+                    u[i * wn + p] = c * up - s * uq;
+                    u[i * wn + q] = s * up + c * uq;
+                }
+                for i in 0..wn {
+                    let vp = v[i * wn + p];
+                    let vq = v[i * wn + q];
+                    v[i * wn + p] = c * vp - s * vq;
+                    v[i * wn + q] = s * vp + c * vq;
+                }
+            }
+        }
+        if off < 1e-14 {
+            break;
+        }
+    }
+
+    // Singular values = column norms of the rotated U; normalize columns.
+    let mut s: Vec<f64> = (0..wn)
+        .map(|j| {
+            (0..wm)
+                .map(|i| u[i * wn + j] * u[i * wn + j])
+                .sum::<f64>()
+                .sqrt()
+        })
+        .collect();
+    // Sort descending by singular value.
+    let mut order: Vec<usize> = (0..wn).collect();
+    order.sort_by(|&a_, &b_| s[b_].partial_cmp(&s[a_]).unwrap());
+
+    let mut u_sorted = vec![0.0f64; wm * wn];
+    let mut v_sorted = vec![0.0f64; wn * wn];
+    let mut s_sorted = vec![0.0f64; wn];
+    for (newj, &oldj) in order.iter().enumerate() {
+        let sv = s[oldj];
+        s_sorted[newj] = sv;
+        let inv = if sv > 1e-300 { 1.0 / sv } else { 0.0 };
+        for i in 0..wm {
+            u_sorted[i * wn + newj] = u[i * wn + oldj] * inv;
+        }
+        for i in 0..wn {
+            v_sorted[i * wn + newj] = v[i * wn + oldj];
+        }
+    }
+    s = s_sorted;
+
+    let uf = Matrix::from_vec(wm, wn, u_sorted.iter().map(|&x| x as f32).collect());
+    let vf = Matrix::from_vec(wn, wn, v_sorted.iter().map(|&x| x as f32).collect());
+    let sf: Vec<f32> = s.iter().map(|&x| x as f32).collect();
+
+    if transposed {
+        // a = (u' s v'ᵀ)ᵀ = v' s u'ᵀ → U = v', Vᵀ = u'ᵀ
+        Svd { u: vf, s: sf, vt: uf.transpose() }
+    } else {
+        Svd { u: uf, s: sf, vt: vf.transpose() }
+    }
+}
+
+impl Svd {
+    /// Top-r left singular vectors (m×r) — GaLore's left projector.
+    pub fn left_vectors(&self, r: usize) -> Matrix {
+        let r = r.min(self.u.cols);
+        self.u.select_columns(&(0..r).collect::<Vec<_>>())
+    }
+
+    /// Top-r right singular vectors (n×r) — GaLore's right projector.
+    pub fn right_vectors(&self, r: usize) -> Matrix {
+        let r = r.min(self.vt.rows);
+        let v = self.vt.transpose();
+        v.select_columns(&(0..r).collect::<Vec<_>>())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{matmul, matmul_at_b};
+    use crate::util::proptest;
+
+    fn reconstruct(svd: &Svd) -> Matrix {
+        let k = svd.s.len();
+        let mut us = svd.u.clone();
+        for i in 0..us.rows {
+            for j in 0..k {
+                *us.at_mut(i, j) *= svd.s[j];
+            }
+        }
+        matmul(&us, &svd.vt)
+    }
+
+    #[test]
+    fn prop_reconstruction_and_orthogonality() {
+        proptest::check("svd: A=USVᵀ", 10, |rng| {
+            let m = proptest::size(rng, 2, 40);
+            let n = proptest::size(rng, 2, 40);
+            let a = Matrix::randn(m, n, 1.0, rng);
+            let svd = svd_thin(&a);
+            let err = reconstruct(&svd).max_abs_diff(&a);
+            assert!(err < 1e-3, "{m}x{n} err={err}");
+            let k = m.min(n);
+            let gram_u = matmul_at_b(&svd.u, &svd.u);
+            assert!(gram_u.max_abs_diff(&Matrix::eye(k)) < 1e-3);
+            let v = svd.vt.transpose();
+            let gram_v = matmul_at_b(&v, &v);
+            assert!(gram_v.max_abs_diff(&Matrix::eye(k)) < 1e-3);
+        });
+    }
+
+    #[test]
+    fn singular_values_sorted_nonnegative() {
+        let mut rng = crate::util::Pcg64::seed(0);
+        let a = Matrix::randn(20, 12, 1.0, &mut rng);
+        let svd = svd_thin(&a);
+        for w in svd.s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-6);
+        }
+        assert!(svd.s.iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn known_diagonal_case() {
+        let a = Matrix::from_vec(3, 3, vec![3.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 2.0]);
+        let svd = svd_thin(&a);
+        assert!((svd.s[0] - 3.0).abs() < 1e-5);
+        assert!((svd.s[1] - 2.0).abs() < 1e-5);
+        assert!((svd.s[2] - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn low_rank_matrix_has_small_tail() {
+        let mut rng = crate::util::Pcg64::seed(1);
+        let u = Matrix::randn(30, 3, 1.0, &mut rng);
+        let v = Matrix::randn(3, 18, 1.0, &mut rng);
+        let a = matmul(&u, &v);
+        let svd = svd_thin(&a);
+        assert!(svd.s[3] < 1e-3 * svd.s[0]);
+    }
+
+    #[test]
+    fn top_r_projection_is_best_approximation() {
+        // Eckart–Young sanity: SVD rank-2 error ≤ DCT-selection rank-2 error.
+        let mut rng = crate::util::Pcg64::seed(2);
+        let a = Matrix::randn(16, 10, 1.0, &mut rng);
+        let svd = svd_thin(&a);
+        let v2 = svd.right_vectors(2);
+        let proj = matmul(&matmul(&a, &v2), &v2.transpose());
+        let err_svd = a.sub(&proj).fro_norm_sq();
+        let tail: f64 = svd.s[2..].iter().map(|&s| (s as f64) * (s as f64)).sum();
+        assert!((err_svd - tail).abs() < 1e-3 * tail.max(1.0));
+    }
+
+    #[test]
+    fn wide_matrix_transposed_path() {
+        let mut rng = crate::util::Pcg64::seed(3);
+        let a = Matrix::randn(5, 24, 1.0, &mut rng);
+        let svd = svd_thin(&a);
+        assert_eq!(svd.u.shape(), (5, 5));
+        assert_eq!(svd.vt.shape(), (5, 24));
+        assert!(reconstruct(&svd).max_abs_diff(&a) < 1e-3);
+    }
+}

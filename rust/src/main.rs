@@ -1,0 +1,231 @@
+//! `fft-subspace` — CLI launcher for the FFT/DCT dynamic-subspace
+//! low-rank-optimization stack.
+//!
+//! ```text
+//! fft-subspace train [key=value …]         one training run
+//! fft-subspace finetune [key=value …]      one fine-tuning run
+//! fft-subspace experiment <id> [--quick]   regenerate a paper table/figure
+//! fft-subspace inspect                     list AOT artifacts
+//! fft-subspace info                        platform + presets + memory table
+//! ```
+//!
+//! (clap is unavailable offline; `key=value` overrides map 1:1 onto
+//! [`fft_subspace::train::TrainConfig::apply`].)
+
+use anyhow::{bail, Context, Result};
+
+use fft_subspace::experiments::{self, ExpOptions};
+use fft_subspace::optim::{build_optimizer, OptimizerConfig, OptimizerKind};
+use fft_subspace::runtime::{Manifest, Runtime};
+use fft_subspace::train::finetune::Finetuner;
+use fft_subspace::train::{checkpoint, TrainConfig, Trainer};
+use fft_subspace::util::human;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn artifacts_dir() -> String {
+    std::env::var("FFT_SUBSPACE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into())
+}
+
+fn run() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    match cmd.as_str() {
+        "train" => cmd_train(&args[1..], false),
+        "finetune" => cmd_train(&args[1..], true),
+        "experiment" => cmd_experiment(&args[1..]),
+        "inspect" => cmd_inspect(),
+        "info" => cmd_info(),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command {other:?} — try `fft-subspace help`"),
+    }
+}
+
+fn print_usage() {
+    println!("{}", include_str!("usage.txt"));
+}
+
+fn parse_overrides(args: &[String], cfg: &mut TrainConfig) -> Result<Vec<(String, String)>> {
+    let mut extra = Vec::new();
+    for a in args {
+        if let Some(flag) = a.strip_prefix("--") {
+            let (k, v) = flag.split_once('=').unwrap_or((flag, "true"));
+            if cfg.apply(k, v).is_err() {
+                extra.push((k.to_string(), v.to_string()));
+            }
+        } else if let Some((k, v)) = a.split_once('=') {
+            if cfg.apply(k, v).is_err() {
+                extra.push((k.to_string(), v.to_string()));
+            }
+        } else {
+            bail!("unrecognized argument {a:?} (use key=value)");
+        }
+    }
+    Ok(extra)
+}
+
+fn cmd_train(args: &[String], finetune: bool) -> Result<()> {
+    let mut cfg = TrainConfig::default();
+    let extra = parse_overrides(args, &mut cfg)?;
+    let mut from_checkpoint: Option<String> = None;
+    let mut save_checkpoint: Option<String> = None;
+    for (k, v) in extra {
+        match k.as_str() {
+            "from-checkpoint" | "from_checkpoint" => from_checkpoint = Some(v),
+            "save-checkpoint" | "save_checkpoint" => save_checkpoint = Some(v),
+            other => bail!("unknown option {other:?}"),
+        }
+    }
+
+    let manifest = Manifest::load(artifacts_dir())?;
+    let rt = Runtime::new()?;
+    println!(
+        "platform={} preset={} optimizer={} rank={} steps={} workers={}",
+        rt.platform(),
+        cfg.preset,
+        cfg.optimizer.name(),
+        cfg.opt.rank,
+        cfg.steps,
+        cfg.workers
+    );
+
+    if finetune {
+        let base = match &from_checkpoint {
+            Some(p) => Some(checkpoint::load(p).context("loading --from-checkpoint")?),
+            None => None,
+        };
+        let mut ft = Finetuner::new(&manifest, &rt, cfg, base)?;
+        let sum = ft.run(&manifest, &rt)?;
+        println!(
+            "finetune done: optimizer={} loss={:.4} accuracy={:.2}% mem={} wall={}",
+            sum.optimizer,
+            sum.final_train_loss,
+            sum.accuracy * 100.0,
+            human::bytes(sum.optimizer_state_bytes),
+            human::duration(sum.wall_secs),
+        );
+        if let Some(p) = save_checkpoint {
+            checkpoint::save(&p, &ft.params)?;
+            println!("checkpoint: {p}");
+        }
+    } else {
+        let mut tr = Trainer::new(&manifest, &rt, cfg)?;
+        if let Some(p) = &from_checkpoint {
+            tr.params = checkpoint::load(p)?;
+        }
+        let sum = tr.run(&manifest, &rt)?;
+        println!(
+            "train done: optimizer={} train_loss={:.4} val_loss={:.4} (ppl {:.2}) \
+             opt_mem={} (zero/worker {}) comm={} wall={}",
+            sum.optimizer,
+            sum.mean_tail_loss,
+            sum.val_loss,
+            sum.val_ppl,
+            human::bytes(sum.optimizer_state_bytes),
+            human::bytes(sum.per_worker_state_bytes),
+            human::bytes(sum.comm_bytes),
+            human::duration(sum.wall_secs),
+        );
+        println!("phases: {}", sum.phase_summary);
+        println!("metrics: {}", sum.metrics_path.display());
+        if let Some(p) = save_checkpoint {
+            checkpoint::save(&p, &tr.params)?;
+            println!("checkpoint: {p}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_experiment(args: &[String]) -> Result<()> {
+    let Some(name) = args.first() else {
+        bail!("usage: fft-subspace experiment <table1|table2|table3|table6|table7|table8|fig1|all> [--quick]");
+    };
+    let mut opts = ExpOptions::default();
+    for a in &args[1..] {
+        match a.as_str() {
+            "--quick" => opts.quick = true,
+            other => {
+                if let Some(v) = other.strip_prefix("--seed=") {
+                    opts.seed = v.parse()?;
+                } else if let Some(v) = other.strip_prefix("--out-dir=") {
+                    opts.out_dir = v.into();
+                } else {
+                    bail!("unknown experiment option {other:?}");
+                }
+            }
+        }
+    }
+    let manifest = Manifest::load(artifacts_dir())?;
+    let rt = Runtime::new()?;
+    experiments::run(name, &manifest, &rt, &opts)
+}
+
+fn cmd_inspect() -> Result<()> {
+    let manifest = Manifest::load(artifacts_dir())?;
+    println!("{} artifacts in {}:", manifest.artifacts.len(), manifest.dir.display());
+    for a in &manifest.artifacts {
+        let outs: Vec<String> = a
+            .outputs
+            .iter()
+            .map(|o| format!("{}:{:?}", o.name, o.shape))
+            .collect();
+        println!(
+            "  {:<34} [{}]  in({}) -> out({})",
+            a.name,
+            a.kind,
+            a.inputs.len(),
+            outs.join(", ")
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let manifest = Manifest::load(artifacts_dir())?;
+    let rt = Runtime::new()?;
+    println!("platform: {}", rt.platform());
+    println!("presets:");
+    for preset in manifest.presets() {
+        let spec = manifest.model_spec(&preset)?;
+        println!(
+            "  {:<6} d_model={:<4} layers={} seq={} params={}",
+            preset,
+            spec.d_model,
+            spec.n_layers,
+            spec.seq_len,
+            human::params(spec.num_params as u64),
+        );
+    }
+    // optimizer memory table for the default preset (paper's memory story)
+    let spec = manifest.model_spec("micro")?;
+    let metas: Vec<_> = spec.params.iter().map(|p| p.layer_meta()).collect();
+    let cfg = OptimizerConfig { rank: 32, ..Default::default() };
+    println!("\noptimizer state @ micro, rank 32:");
+    for kind in [
+        OptimizerKind::AdamW,
+        OptimizerKind::Muon,
+        OptimizerKind::Dion,
+        OptimizerKind::Trion,
+        OptimizerKind::GaLore,
+        OptimizerKind::LdAdamW,
+        OptimizerKind::DctAdamW,
+        OptimizerKind::Frugal,
+        OptimizerKind::Fira,
+    ] {
+        let opt = build_optimizer(&kind, &metas, &cfg);
+        let rep = opt.memory_report();
+        println!("  {:<10} {}", kind.name(), human::bytes(rep.total()));
+    }
+    Ok(())
+}

@@ -1,0 +1,132 @@
+//! Dense AdamW (Loshchilov & Hutter, 2019) — the full-rank reference in
+//! every table of the paper.
+
+use std::collections::BTreeMap;
+
+use crate::tensor::Matrix;
+
+use super::common::{AdamState, LayerMeta, MemoryReport, Optimizer, OptimizerConfig};
+
+pub struct AdamW {
+    states: Vec<AdamState>,
+    metas: Vec<LayerMeta>,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    weight_decay: f32,
+    step: u64,
+}
+
+impl AdamW {
+    pub fn new(metas: &[LayerMeta], cfg: &OptimizerConfig) -> Self {
+        AdamW {
+            states: metas.iter().map(|m| AdamState::new(m.rows, m.cols)).collect(),
+            metas: metas.to_vec(),
+            beta1: cfg.beta1,
+            beta2: cfg.beta2,
+            eps: cfg.eps,
+            weight_decay: cfg.weight_decay,
+            step: 0,
+        }
+    }
+}
+
+impl Optimizer for AdamW {
+    fn step(&mut self, params: &mut [Matrix], grads: &[Matrix], lr: f32) {
+        assert_eq!(params.len(), self.states.len());
+        self.step += 1;
+        for ((p, g), (st, meta)) in params
+            .iter_mut()
+            .zip(grads)
+            .zip(self.states.iter_mut().zip(&self.metas))
+        {
+            // Decoupled weight decay only on weight matrices, not norms.
+            let wd = if meta.kind == super::ParamKind::Norm {
+                0.0
+            } else {
+                self.weight_decay
+            };
+            st.update(p, g, lr, self.beta1, self.beta2, self.eps, wd, self.step);
+        }
+    }
+
+    fn memory_report(&self) -> MemoryReport {
+        let mut r = MemoryReport::default();
+        for st in &self.states {
+            r.add("adam_m", st.m.bytes());
+            r.add("adam_v", st.v.bytes());
+        }
+        r
+    }
+
+    fn name(&self) -> &'static str {
+        "adamw"
+    }
+
+    fn projection_errors(&self) -> Option<&BTreeMap<String, f64>> {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::common::ParamKind;
+    use crate::util::Pcg64;
+
+    fn quad_setup() -> (Vec<LayerMeta>, Vec<Matrix>, Matrix) {
+        // minimize ‖P − T‖² for a random target T; grad = 2(P − T)
+        let mut rng = Pcg64::seed(0);
+        let t = Matrix::randn(6, 6, 1.0, &mut rng);
+        let metas = vec![LayerMeta::new("w", 6, 6, ParamKind::Linear)];
+        let params = vec![Matrix::zeros(6, 6)];
+        (metas, params, t)
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        let (metas, mut params, t) = quad_setup();
+        let cfg = OptimizerConfig { weight_decay: 0.0, ..Default::default() };
+        let mut opt = AdamW::new(&metas, &cfg);
+        let mut last = f64::MAX;
+        for _ in 0..300 {
+            let g = params[0].sub(&t).scaled(2.0);
+            opt.step(&mut params, &[g], 0.05);
+            last = params[0].sub(&t).fro_norm_sq();
+        }
+        assert!(last < 1e-2, "final err {last}");
+    }
+
+    #[test]
+    fn weight_decay_shrinks_params() {
+        let metas = vec![LayerMeta::new("w", 3, 3, ParamKind::Linear)];
+        let cfg = OptimizerConfig { weight_decay: 0.5, ..Default::default() };
+        let mut opt = AdamW::new(&metas, &cfg);
+        let mut params = vec![Matrix::eye(3)];
+        let zero_g = vec![Matrix::zeros(3, 3)];
+        let before = params[0].fro_norm();
+        opt.step(&mut params, &zero_g, 0.1);
+        assert!(params[0].fro_norm() < before);
+    }
+
+    #[test]
+    fn norm_params_skip_weight_decay() {
+        let metas = vec![LayerMeta::new("n", 1, 4, ParamKind::Norm)];
+        let cfg = OptimizerConfig { weight_decay: 0.5, ..Default::default() };
+        let mut opt = AdamW::new(&metas, &cfg);
+        let mut params = vec![Matrix::from_vec(1, 4, vec![1.0; 4])];
+        opt.step(&mut params, &[Matrix::zeros(1, 4)], 0.1);
+        assert_eq!(params[0].data, vec![1.0; 4]);
+    }
+
+    #[test]
+    fn memory_is_two_buffers_per_param() {
+        let metas = vec![
+            LayerMeta::new("a", 4, 5, ParamKind::Linear),
+            LayerMeta::new("b", 2, 3, ParamKind::Norm),
+        ];
+        let opt = AdamW::new(&metas, &OptimizerConfig::default());
+        let rep = opt.memory_report();
+        assert_eq!(rep.total(), 2 * (4 * 5 * 4 + 2 * 3 * 4) as u64);
+    }
+}

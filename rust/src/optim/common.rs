@@ -1,0 +1,400 @@
+//! Shared optimizer infrastructure: the [`Optimizer`] trait, layer
+//! metadata, orientation handling (project the smaller dimension), memory
+//! reports and the optimizer factory.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::projection::{ProjectionKind, RankNorm, SharedDct};
+use crate::tensor::Matrix;
+
+/// What a parameter is; drives the low-rank policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ParamKind {
+    Embed,
+    Head,
+    Norm,
+    Linear,
+}
+
+impl ParamKind {
+    pub fn parse(s: &str) -> ParamKind {
+        match s {
+            "embed" => ParamKind::Embed,
+            "head" => ParamKind::Head,
+            "norm" => ParamKind::Norm,
+            _ => ParamKind::Linear,
+        }
+    }
+
+    /// Only hidden linear layers take the low-rank path.
+    pub fn low_rank_eligible(self) -> bool {
+        self == ParamKind::Linear
+    }
+}
+
+/// Per-parameter metadata (name + kind + shape), mirrored from the AOT
+/// manifest's `params` list.
+#[derive(Clone, Debug)]
+pub struct LayerMeta {
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+    pub kind: ParamKind,
+}
+
+impl LayerMeta {
+    pub fn new(name: &str, rows: usize, cols: usize, kind: ParamKind) -> Self {
+        LayerMeta { name: name.to_string(), rows, cols, kind }
+    }
+
+    /// Right-projection needs the column side to be the smaller one; wide
+    /// matrices are handled on their transpose (§2.1 "compress the smallest
+    /// dimension").
+    pub fn needs_transpose(&self) -> bool {
+        self.kind.low_rank_eligible() && self.cols > self.rows
+    }
+
+    /// (R, C) in the oriented frame.
+    pub fn oriented(&self) -> (usize, usize) {
+        if self.needs_transpose() {
+            (self.cols, self.rows)
+        } else {
+            (self.rows, self.cols)
+        }
+    }
+}
+
+/// Orient a gradient so its projected (column) dimension is the smaller one.
+pub fn orient(meta: &LayerMeta, g: &Matrix) -> Matrix {
+    if meta.needs_transpose() {
+        g.transpose()
+    } else {
+        g.clone()
+    }
+}
+
+/// Undo [`orient`] on an update.
+pub fn deorient(meta: &LayerMeta, u: Matrix) -> Matrix {
+    if meta.needs_transpose() {
+        u.transpose()
+    } else {
+        u
+    }
+}
+
+/// Exact persistent-memory accounting.
+#[derive(Clone, Debug, Default)]
+pub struct MemoryReport {
+    /// Per-layer state bytes, keyed by buffer family ("momentum", "ef", …).
+    pub per_layer: BTreeMap<String, u64>,
+    /// Per-device shared state, deduplicated by name ("dct_matrix").
+    pub shared: BTreeMap<String, u64>,
+}
+
+impl MemoryReport {
+    pub fn add(&mut self, family: &str, bytes: u64) {
+        *self.per_layer.entry(family.to_string()).or_default() += bytes;
+    }
+
+    pub fn share(&mut self, name: &str, bytes: u64) {
+        self.shared.insert(name.to_string(), bytes);
+    }
+
+    /// Total optimizer state bytes (per-layer + shared).
+    pub fn total(&self) -> u64 {
+        self.per_layer.values().sum::<u64>() + self.shared.values().sum::<u64>()
+    }
+
+    pub fn merge(&mut self, other: &MemoryReport) {
+        for (k, v) in &other.per_layer {
+            *self.per_layer.entry(k.clone()).or_default() += v;
+        }
+        for (k, v) in &other.shared {
+            self.shared.insert(k.clone(), *v);
+        }
+    }
+}
+
+/// Uniform optimizer interface. `lr` comes from the trainer's schedule.
+/// (Not `Send`: AOT-graph-backed optimizers hold PJRT executables, which
+/// are `Rc`-backed; the whole stack is single-threaded by design.)
+pub trait Optimizer {
+    /// Apply one step: update `params[i]` in place from `grads[i]`.
+    fn step(&mut self, params: &mut [Matrix], grads: &[Matrix], lr: f32);
+
+    /// Exact persistent state accounting.
+    fn memory_report(&self) -> MemoryReport;
+
+    fn name(&self) -> &'static str;
+
+    /// Figure-1 instrumentation: after a step, the projection error
+    /// `‖B_t − O_t‖₂` per low-rank layer (None for dense optimizers).
+    fn projection_errors(&self) -> Option<&BTreeMap<String, f64>> {
+        None
+    }
+
+    /// Bytes a ZeRO owner must broadcast for layer `i` after computing its
+    /// update (the paper's communication argument: low-rank `o_t` + indices
+    /// vs the full `O_t`).
+    fn broadcast_bytes(&self, meta: &LayerMeta) -> u64 {
+        (meta.rows * meta.cols * 4) as u64
+    }
+}
+
+/// Which optimizer to build.
+#[derive(Clone, Debug, PartialEq)]
+pub enum OptimizerKind {
+    AdamW,
+    Muon,
+    Dion,
+    Trion,
+    GaLore,
+    LdAdamW,
+    DctAdamW,
+    Frugal,
+    Fira,
+}
+
+impl OptimizerKind {
+    pub fn parse(s: &str) -> Option<OptimizerKind> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "adamw" => OptimizerKind::AdamW,
+            "muon" => OptimizerKind::Muon,
+            "dion" => OptimizerKind::Dion,
+            "trion" => OptimizerKind::Trion,
+            "galore" => OptimizerKind::GaLore,
+            "ldadamw" | "ldadam" => OptimizerKind::LdAdamW,
+            "dct-adamw" | "dct_adamw" | "dctadamw" => OptimizerKind::DctAdamW,
+            "frugal" => OptimizerKind::Frugal,
+            "fira" => OptimizerKind::Fira,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OptimizerKind::AdamW => "adamw",
+            OptimizerKind::Muon => "muon",
+            OptimizerKind::Dion => "dion",
+            OptimizerKind::Trion => "trion",
+            OptimizerKind::GaLore => "galore",
+            OptimizerKind::LdAdamW => "ldadamw",
+            OptimizerKind::DctAdamW => "dct-adamw",
+            OptimizerKind::Frugal => "frugal",
+            OptimizerKind::Fira => "fira",
+        }
+    }
+}
+
+/// Hyper-parameters shared across the optimizer family. Defaults follow the
+/// paper's experimental section.
+#[derive(Clone, Debug)]
+pub struct OptimizerConfig {
+    pub rank: usize,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    /// Trion/Dion/Muon momentum μ.
+    pub mu: f32,
+    /// Newton–Schulz iterations.
+    pub ns_steps: usize,
+    /// Subspace refresh interval T_u (1 for LDAdam/Dion/Trion; 200 GaLore).
+    pub update_interval: usize,
+    /// Projection used by the projection-pluggable optimizers
+    /// (FRUGAL / FIRA / GaLore-style).
+    pub projection: ProjectionKind,
+    /// Error feedback for DCT-AdamW: None | f32 | quantized-u8.
+    pub ef_mode: EfMode,
+    /// Record per-layer projection errors each step (Figure 1).
+    pub instrument: bool,
+    pub seed: u64,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EfMode {
+    None,
+    F32,
+    Q8,
+}
+
+impl Default for OptimizerConfig {
+    fn default() -> Self {
+        OptimizerConfig {
+            rank: 32,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: 0.01,
+            mu: 0.95,
+            ns_steps: 5,
+            update_interval: 1,
+            projection: ProjectionKind::Dct { norm: RankNorm::L2, use_makhoul: true },
+            ef_mode: EfMode::Q8,
+            instrument: false,
+            seed: 0,
+        }
+    }
+}
+
+/// Build a shared DCT registry covering every oriented column dimension of
+/// the model — "one DCT matrix per GPU" (per distinct dimension; the paper's
+/// models have a single d_model, ours add d_ff-oriented layers).
+pub fn shared_dct_registry(metas: &[LayerMeta]) -> BTreeMap<usize, Arc<SharedDct>> {
+    let mut map = BTreeMap::new();
+    for m in metas {
+        if m.kind.low_rank_eligible() {
+            let (_, c) = m.oriented();
+            map.entry(c).or_insert_with(|| Arc::new(SharedDct::new(c)));
+        }
+    }
+    map
+}
+
+/// Optimizer factory.
+pub fn build_optimizer(
+    kind: &OptimizerKind,
+    metas: &[LayerMeta],
+    cfg: &OptimizerConfig,
+) -> Box<dyn Optimizer> {
+    match kind {
+        OptimizerKind::AdamW => Box::new(crate::optim::AdamW::new(metas, cfg)),
+        OptimizerKind::Muon => Box::new(crate::optim::Muon::new(metas, cfg)),
+        OptimizerKind::Dion => Box::new(crate::optim::Dion::new(metas, cfg)),
+        OptimizerKind::Trion => Box::new(crate::optim::Trion::new(metas, cfg)),
+        OptimizerKind::GaLore => Box::new(crate::optim::GaLore::new(metas, cfg)),
+        OptimizerKind::LdAdamW => Box::new(crate::optim::LdAdamW::new(metas, cfg)),
+        OptimizerKind::DctAdamW => Box::new(crate::optim::DctAdamW::new(metas, cfg)),
+        OptimizerKind::Frugal => Box::new(crate::optim::Frugal::new(metas, cfg)),
+        OptimizerKind::Fira => Box::new(crate::optim::Fira::new(metas, cfg)),
+    }
+}
+
+/// Dense AdamW state for a single tensor — embedded by every low-rank
+/// optimizer for its non-eligible parameters.
+#[derive(Clone, Debug)]
+pub struct AdamState {
+    pub m: Matrix,
+    pub v: Matrix,
+}
+
+impl AdamState {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        AdamState { m: Matrix::zeros(rows, cols), v: Matrix::zeros(rows, cols) }
+    }
+
+    /// One decoupled-weight-decay Adam step on `p`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn update(
+        &mut self,
+        p: &mut Matrix,
+        g: &Matrix,
+        lr: f32,
+        beta1: f32,
+        beta2: f32,
+        eps: f32,
+        weight_decay: f32,
+        step: u64,
+    ) {
+        let bc1 = 1.0 - beta1.powi(step as i32);
+        let bc2 = 1.0 - beta2.powi(step as i32);
+        let wd = 1.0 - lr * weight_decay;
+        for i in 0..p.data.len() {
+            let gi = g.data[i];
+            let m = beta1 * self.m.data[i] + (1.0 - beta1) * gi;
+            let v = beta2 * self.v.data[i] + (1.0 - beta2) * gi * gi;
+            self.m.data[i] = m;
+            self.v.data[i] = v;
+            let mhat = m / bc1;
+            let vhat = v / bc2;
+            p.data[i] = wd * p.data[i] - lr * mhat / (vhat.sqrt() + eps);
+        }
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.m.bytes() + self.v.bytes()
+    }
+}
+
+/// `max(1, sqrt(R/C))` shape factor used by Muon/Dion/Trion updates.
+pub fn shape_factor(rows: usize, cols: usize) -> f32 {
+    (rows as f32 / cols as f32).sqrt().max(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn metas() -> Vec<LayerMeta> {
+        vec![
+            LayerMeta::new("embed", 257, 64, ParamKind::Embed),
+            LayerMeta::new("wq", 64, 64, ParamKind::Linear),
+            LayerMeta::new("w_gate", 64, 176, ParamKind::Linear), // wide
+            LayerMeta::new("w_down", 176, 64, ParamKind::Linear),
+            LayerMeta::new("norm", 1, 64, ParamKind::Norm),
+        ]
+    }
+
+    #[test]
+    fn orientation_projects_smaller_dim() {
+        for m in metas() {
+            let (r, c) = m.oriented();
+            if m.kind.low_rank_eligible() {
+                assert!(r >= c, "{}: {r}x{c}", m.name);
+            }
+        }
+    }
+
+    #[test]
+    fn orient_deorient_roundtrip() {
+        let meta = LayerMeta::new("w_gate", 4, 9, ParamKind::Linear);
+        let g = Matrix::from_fn(4, 9, |i, j| (i * 9 + j) as f32);
+        let o = orient(&meta, &g);
+        assert_eq!(o.shape(), (9, 4));
+        let back = deorient(&meta, o);
+        assert_eq!(back, g);
+    }
+
+    #[test]
+    fn dct_registry_one_matrix_per_dim() {
+        let reg = shared_dct_registry(&metas());
+        assert_eq!(reg.keys().copied().collect::<Vec<_>>(), vec![64]);
+    }
+
+    #[test]
+    fn memory_report_dedups_shared() {
+        let mut r = MemoryReport::default();
+        r.add("momentum", 100);
+        r.add("momentum", 50);
+        r.share("dct", 1000);
+        r.share("dct", 1000);
+        assert_eq!(r.total(), 1150);
+    }
+
+    #[test]
+    fn adam_state_matches_scalar_reference() {
+        // One parameter, hand-computed step.
+        let mut st = AdamState::new(1, 1);
+        let mut p = Matrix::from_vec(1, 1, vec![1.0]);
+        let g = Matrix::from_vec(1, 1, vec![0.5]);
+        st.update(&mut p, &g, 0.1, 0.9, 0.999, 1e-8, 0.0, 1);
+        // m=0.05, v=0.00025; mhat=0.5, vhat=0.25; p = 1 - 0.1*0.5/0.5 = 0.9
+        assert!((p.data[0] - 0.9).abs() < 1e-5, "{}", p.data[0]);
+        assert!((st.m.data[0] - 0.05).abs() < 1e-7);
+    }
+
+    #[test]
+    fn optimizer_kind_parsing() {
+        assert_eq!(OptimizerKind::parse("Trion"), Some(OptimizerKind::Trion));
+        assert_eq!(OptimizerKind::parse("dct-adamw"), Some(OptimizerKind::DctAdamW));
+        assert_eq!(OptimizerKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn shape_factor_wide_vs_tall() {
+        assert_eq!(shape_factor(64, 64), 1.0);
+        assert!((shape_factor(256, 64) - 2.0).abs() < 1e-6);
+        assert_eq!(shape_factor(64, 256), 1.0);
+    }
+}

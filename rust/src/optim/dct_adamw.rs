@@ -1,0 +1,314 @@
+//! **DCT-AdamW** (Algorithms 2–3) — the paper's second contribution.
+//!
+//! LDAdamW with the block power iteration replaced by DCT dynamic column
+//! selection. Because the basis is a *fixed* orthogonal matrix, the
+//! subspace rotation collapses to a 0/1 index-matching matrix:
+//! `R = Q_prevᵀ·Q_crt = I[idx_prev, idx_crt]` — rotating the moments is a
+//! permutation-with-drop, no matmul needed. Per-layer state is two sets of
+//! `r` indices (vs LDAdam's two `C×r` projectors) plus optional quantized
+//! error feedback (8-bit is the paper's lowest non-degrading resolution).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::projection::{DctSelect, Projection, RankNorm, SharedDct};
+use crate::tensor::Matrix;
+
+use super::common::{
+    deorient, orient, shared_dct_registry, AdamState, LayerMeta,
+    MemoryReport, Optimizer, OptimizerConfig,
+};
+use super::error_feedback::EfBuffer;
+
+enum LayerState {
+    LowRank {
+        select: DctSelect,
+        idx_prev: Vec<usize>,
+        m: Matrix, // R×r
+        v: Matrix, // R×r
+        ef: EfBuffer,
+        first: bool,
+    },
+    Adam(AdamState),
+}
+
+pub struct DctAdamW {
+    metas: Vec<LayerMeta>,
+    states: Vec<LayerState>,
+    shared: BTreeMap<usize, Arc<SharedDct>>,
+    update_interval: usize,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    weight_decay: f32,
+    step: u64,
+}
+
+/// Rotate subspace moments for a *fixed orthogonal basis*: since
+/// `QᵀQ = I`, `R[i][j] = 1 ⇔ idx_prev[i] == idx_crt[j]`, so `m·R` keeps the
+/// columns whose index survives and zeroes the rest.
+pub fn rotate_fixed_basis(m: &Matrix, idx_prev: &[usize], idx_crt: &[usize]) -> Matrix {
+    let mut out = Matrix::zeros(m.rows, idx_crt.len());
+    // Both index lists are sorted ascending — merge them.
+    let (mut a, mut b) = (0usize, 0usize);
+    while a < idx_prev.len() && b < idx_crt.len() {
+        match idx_prev[a].cmp(&idx_crt[b]) {
+            std::cmp::Ordering::Less => a += 1,
+            std::cmp::Ordering::Greater => b += 1,
+            std::cmp::Ordering::Equal => {
+                for i in 0..m.rows {
+                    *out.at_mut(i, b) = m.at(i, a);
+                }
+                a += 1;
+                b += 1;
+            }
+        }
+    }
+    out
+}
+
+impl DctAdamW {
+    pub fn new(metas: &[LayerMeta], cfg: &OptimizerConfig) -> Self {
+        let shared = shared_dct_registry(metas);
+        let (norm, use_makhoul) = match &cfg.projection {
+            crate::projection::ProjectionKind::Dct { norm, use_makhoul } => {
+                (*norm, *use_makhoul)
+            }
+            _ => (RankNorm::L2, true),
+        };
+        let states = metas
+            .iter()
+            .map(|meta| {
+                if meta.kind.low_rank_eligible() {
+                    let (rr, cc) = meta.oriented();
+                    let r = cfg.rank.min(cc);
+                    LayerState::LowRank {
+                        select: DctSelect::new(shared[&cc].clone(), r, norm, use_makhoul),
+                        idx_prev: (0..r).collect(),
+                        m: Matrix::zeros(rr, r),
+                        v: Matrix::zeros(rr, r),
+                        ef: EfBuffer::new(cfg.ef_mode, rr, cc),
+                        first: true,
+                    }
+                } else {
+                    LayerState::Adam(AdamState::new(meta.rows, meta.cols))
+                }
+            })
+            .collect();
+        DctAdamW {
+            metas: metas.to_vec(),
+            states,
+            shared,
+            update_interval: cfg.update_interval.max(1),
+            beta1: cfg.beta1,
+            beta2: cfg.beta2,
+            eps: cfg.eps,
+            weight_decay: cfg.weight_decay,
+            step: 0,
+        }
+    }
+}
+
+impl Optimizer for DctAdamW {
+    fn step(&mut self, params: &mut [Matrix], grads: &[Matrix], lr: f32) {
+        self.step += 1;
+        let t = self.step;
+        let refresh = t == 1 || t % self.update_interval as u64 == 0;
+        for i in 0..params.len() {
+            let meta = &self.metas[i];
+            match &mut self.states[i] {
+                LayerState::Adam(st) => st.update(
+                    &mut params[i], &grads[i], lr, self.beta1, self.beta2,
+                    self.eps, self.weight_decay, t,
+                ),
+                LayerState::LowRank { select, idx_prev, m, v, ef, first } => {
+                    let mut g = orient(meta, &grads[i]);
+                    ef.add_into(&mut g); // G ← G + Ξ
+                    let g_low = if refresh {
+                        let prev = select.indices().to_vec();
+                        let (_s, low) = select.refresh_full(&g);
+                        if !*first {
+                            // rotation = index matching (fixed basis!)
+                            *m = rotate_fixed_basis(m, &prev, select.indices());
+                            *v = rotate_fixed_basis(v, &prev, select.indices());
+                            // |v·R| — rotation here is 0/1 so abs is a no-op,
+                            // kept for parity with Algorithm 2
+                            for x in &mut v.data {
+                                *x = x.abs();
+                            }
+                        }
+                        *idx_prev = prev;
+                        *first = false;
+                        low
+                    } else {
+                        select.project(&g)
+                    };
+                    // Ξ ← G − g·Qᵀ
+                    let back = select.back(&g_low);
+                    ef.store(&g.sub(&back));
+                    // AdamW in the subspace
+                    let bc1 = 1.0 - self.beta1.powi(t as i32);
+                    let bc2 = 1.0 - self.beta2.powi(t as i32);
+                    let mut u_low = Matrix::zeros(g_low.rows, g_low.cols);
+                    for k in 0..g_low.data.len() {
+                        let gi = g_low.data[k];
+                        let mk = self.beta1 * m.data[k] + (1.0 - self.beta1) * gi;
+                        let vk = self.beta2 * v.data[k] + (1.0 - self.beta2) * gi * gi;
+                        m.data[k] = mk;
+                        v.data[k] = vk;
+                        u_low.data[k] = (mk / bc1) / ((vk / bc2).sqrt() + self.eps);
+                    }
+                    let u_full = deorient(meta, select.back(&u_low));
+                    params[i].scale(1.0 - lr * self.weight_decay);
+                    params[i].axpy(-lr, &u_full);
+                }
+            }
+        }
+    }
+
+    fn memory_report(&self) -> MemoryReport {
+        let mut r = MemoryReport::default();
+        for st in &self.states {
+            match st {
+                LayerState::LowRank { select, idx_prev, m, v, ef, .. } => {
+                    r.add("adam_m_low", m.bytes());
+                    r.add("adam_v_low", v.bytes());
+                    // two sets of r indices — the paper's memory claim
+                    r.add("indices", select.state_bytes());
+                    r.add("indices_prev", (idx_prev.len() * 4) as u64);
+                    r.add("ef", ef.bytes());
+                }
+                LayerState::Adam(a) => {
+                    r.add("adam_m", a.m.bytes());
+                    r.add("adam_v", a.v.bytes());
+                }
+            }
+        }
+        for (dim, dct) in &self.shared {
+            r.share(&format!("dct_matrix_{dim}"), dct.bytes());
+        }
+        r
+    }
+
+    fn name(&self) -> &'static str {
+        "dct-adamw"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::common::{EfMode, ParamKind};
+    use crate::util::Pcg64;
+
+    fn cfg(rank: usize) -> OptimizerConfig {
+        OptimizerConfig { rank, weight_decay: 0.0, ..Default::default() }
+    }
+
+    #[test]
+    fn rotation_matches_matmul_definition() {
+        // rotate_fixed_basis == m · (Q[:,prev]ᵀ Q[:,crt]) for orthogonal Q
+        let mut rng = Pcg64::seed(0);
+        let q = crate::fft::dct2_matrix(12);
+        let prev = vec![0, 3, 5, 9];
+        let crt = vec![3, 4, 9, 11];
+        let m = Matrix::randn(6, 4, 1.0, &mut rng);
+        let got = rotate_fixed_basis(&m, &prev, &crt);
+        let qp = q.select_columns(&prev);
+        let qc = q.select_columns(&crt);
+        let rot = crate::tensor::matmul_at_b(&qp, &qc);
+        let want = crate::tensor::matmul(&m, &rot);
+        assert!(got.max_abs_diff(&want) < 1e-5);
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        let mut rng = Pcg64::seed(1);
+        let t = Matrix::randn(10, 8, 0.5, &mut rng);
+        let metas = vec![LayerMeta::new("w", 10, 8, ParamKind::Linear)];
+        let mut opt = DctAdamW::new(&metas, &cfg(4));
+        let mut params = vec![Matrix::zeros(10, 8)];
+        for _ in 0..500 {
+            let g = params[0].sub(&t).scaled(2.0);
+            opt.step(&mut params, &[g], 0.05);
+        }
+        let err = params[0].sub(&t).fro_norm() / t.fro_norm();
+        assert!(err < 0.15, "rel err={err}");
+    }
+
+    #[test]
+    fn memory_far_below_ldadamw() {
+        let metas: Vec<LayerMeta> = (0..8)
+            .map(|i| LayerMeta::new(&format!("w{i}"), 128, 128, ParamKind::Linear))
+            .collect();
+        let c = OptimizerConfig { rank: 64, ef_mode: EfMode::Q8, ..Default::default() };
+        let dct = DctAdamW::new(&metas, &c).memory_report();
+        let ld = super::super::LdAdamW::new(&metas, &c).memory_report();
+        assert!(
+            dct.total() < ld.total(),
+            "dct={} ld={}",
+            dct.total(),
+            ld.total()
+        );
+        // index state is exactly 2·r·4 bytes per layer
+        assert_eq!(
+            dct.per_layer["indices"] + dct.per_layer["indices_prev"],
+            8 * 2 * 64 * 4
+        );
+    }
+
+    #[test]
+    fn t_u_respected_like_galore() {
+        let metas = vec![LayerMeta::new("w", 12, 10, ParamKind::Linear)];
+        let mut c = cfg(3);
+        c.update_interval = 4;
+        let mut opt = DctAdamW::new(&metas, &c);
+        let mut rng = Pcg64::seed(2);
+        let mut params = vec![Matrix::zeros(12, 10)];
+        let mut all_idx = Vec::new();
+        for _ in 0..5 {
+            let g = Matrix::randn(12, 10, 1.0, &mut rng);
+            opt.step(&mut params, &[g], 0.01);
+            if let LayerState::LowRank { select, .. } = &opt.states[0] {
+                all_idx.push(select.indices().to_vec());
+            }
+        }
+        // t=1 refreshes; t=2,3 reuse the same indices
+        assert_eq!(all_idx[0], all_idx[1]);
+        assert_eq!(all_idx[1], all_idx[2]);
+        // t=4 refreshed: idx_prev must now hold the pre-refresh indices
+        if let LayerState::LowRank { idx_prev, .. } = &opt.states[0] {
+            assert_eq!(idx_prev, &all_idx[2]);
+        }
+    }
+
+    #[test]
+    fn ef_q8_tracks_out_of_subspace_gradient() {
+        let metas = vec![LayerMeta::new("w", 8, 8, ParamKind::Linear)];
+        let mut c = cfg(1);
+        c.ef_mode = EfMode::Q8;
+        let mut opt = DctAdamW::new(&metas, &c);
+        let mut rng = Pcg64::seed(3);
+        let g0 = Matrix::randn(8, 8, 1.0, &mut rng);
+        let mut params = vec![Matrix::zeros(8, 8)];
+        for _ in 0..60 {
+            opt.step(&mut params, &[g0.clone()], 0.01);
+        }
+        let mut agree = 0;
+        for k in 0..64 {
+            if params[0].data[k] * g0.data[k] < 0.0 {
+                agree += 1;
+            }
+        }
+        assert!(agree > 45, "agree={agree}/64");
+    }
+
+    #[test]
+    fn no_ef_mode_allocates_nothing() {
+        let metas = vec![LayerMeta::new("w", 16, 16, ParamKind::Linear)];
+        let mut c = cfg(4);
+        c.ef_mode = EfMode::None;
+        let rep = DctAdamW::new(&metas, &c).memory_report();
+        assert_eq!(rep.per_layer["ef"], 0);
+    }
+}

@@ -1,0 +1,234 @@
+//! Dion (Ahn et al., 2025): low-rank orthonormal updates via one power
+//! iteration + QR per step, with error feedback into the momentum.
+//!
+//! The baseline Trion improves on. Runtime depends on the rank through the
+//! `QR(B·Q_{t-1})` factorization — the rank-dependence Table 1 measures —
+//! and a `C×r` projector is stored **per layer** (the memory overhead the
+//! DCT side of the paper removes).
+
+use std::collections::BTreeMap;
+
+use crate::linalg::qr_thin;
+use crate::tensor::{matmul, matmul_a_bt, matmul_at_b, Matrix};
+
+use super::common::{
+    deorient, orient, shape_factor, AdamState, LayerMeta, MemoryReport, Optimizer,
+    OptimizerConfig,
+};
+
+enum LayerState {
+    LowRank {
+        momentum: Matrix, // R×C (oriented)
+        q: Matrix,        // C×r right factor, column-normalized
+    },
+    Adam(AdamState),
+}
+
+pub struct Dion {
+    metas: Vec<LayerMeta>,
+    states: Vec<LayerState>,
+    mu: f32,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    weight_decay: f32,
+    step: u64,
+    instrument: bool,
+    errors: BTreeMap<String, f64>,
+}
+
+impl Dion {
+    pub fn new(metas: &[LayerMeta], cfg: &OptimizerConfig) -> Self {
+        let mut rng = crate::util::Pcg64::new(cfg.seed, 0xd1a0_abcd);
+        let states = metas
+            .iter()
+            .map(|m| {
+                if m.kind.low_rank_eligible() {
+                    let (rr, cc) = m.oriented();
+                    let r = cfg.rank.min(cc);
+                    // random orthonormal init for the right factor
+                    let g0 = Matrix::randn(cc, r, 1.0, &mut rng);
+                    let (q, _) = qr_thin(&g0);
+                    LayerState::LowRank { momentum: Matrix::zeros(rr, cc), q }
+                } else {
+                    LayerState::Adam(AdamState::new(m.rows, m.cols))
+                }
+            })
+            .collect();
+        Dion {
+            metas: metas.to_vec(),
+            states,
+            mu: cfg.mu,
+            beta1: cfg.beta1,
+            beta2: cfg.beta2,
+            eps: cfg.eps,
+            weight_decay: cfg.weight_decay,
+            step: 0,
+            instrument: cfg.instrument,
+            errors: BTreeMap::new(),
+        }
+    }
+}
+
+impl Optimizer for Dion {
+    fn step(&mut self, params: &mut [Matrix], grads: &[Matrix], lr: f32) {
+        self.step += 1;
+        for i in 0..params.len() {
+            let meta = &self.metas[i];
+            match &mut self.states[i] {
+                LayerState::Adam(st) => st.update(
+                    &mut params[i], &grads[i], lr, self.beta1, self.beta2,
+                    self.eps, 0.0, self.step,
+                ),
+                LayerState::LowRank { momentum, q } => {
+                    let g = orient(meta, &grads[i]);
+                    // B = M + G
+                    momentum.axpy(1.0, &g);
+                    let b = &*momentum;
+                    // P = QR(B·Q_prev)  (R×r, orthonormal) — rank-dependent
+                    let z = matmul(b, q);
+                    let (p, _) = qr_thin(&z);
+                    // R_t = Bᵀ·P  (C×r)
+                    let r_mat = matmul_at_b(b, &p);
+                    // error feedback: M = B − (1−μ)·P·R_tᵀ
+                    let p_rt = matmul_a_bt(&p, &r_mat);
+                    momentum.axpy(-(1.0 - self.mu), &p_rt);
+                    // column-normalize R_t → next right factor Q_t
+                    let mut q_new = r_mat;
+                    for j in 0..q_new.cols {
+                        let mut n2 = 0.0f64;
+                        for i2 in 0..q_new.rows {
+                            let v = q_new.at(i2, j) as f64;
+                            n2 += v * v;
+                        }
+                        let inv = 1.0 / (n2.sqrt() as f32 + 1e-8);
+                        for i2 in 0..q_new.rows {
+                            *q_new.at_mut(i2, j) *= inv;
+                        }
+                    }
+                    // O = P·Q_tᵀ
+                    let o = matmul_a_bt(&p, &q_new);
+                    if self.instrument {
+                        // Δ = ‖B_t − O_t‖ on the pre-EF accumulator
+                        let b_now = {
+                            let mut b2 = momentum.clone();
+                            b2.axpy(1.0 - self.mu, &p_rt); // restore B
+                            b2
+                        };
+                        self.errors
+                            .insert(meta.name.clone(), b_now.sub(&o).fro_norm());
+                    }
+                    *q = q_new;
+                    let (rr, cc) = o.shape();
+                    let o_full = deorient(meta, o);
+                    params[i].scale(1.0 - lr * self.weight_decay);
+                    params[i].axpy(-lr * shape_factor(rr, cc), &o_full);
+                }
+            }
+        }
+    }
+
+    fn memory_report(&self) -> MemoryReport {
+        let mut r = MemoryReport::default();
+        for st in &self.states {
+            match st {
+                LayerState::LowRank { momentum, q } => {
+                    r.add("momentum", momentum.bytes());
+                    r.add("projector", q.bytes()); // per-layer C×r — Dion's cost
+                }
+                LayerState::Adam(a) => {
+                    r.add("adam_m", a.m.bytes());
+                    r.add("adam_v", a.v.bytes());
+                }
+            }
+        }
+        r
+    }
+
+    fn name(&self) -> &'static str {
+        "dion"
+    }
+
+    fn projection_errors(&self) -> Option<&BTreeMap<String, f64>> {
+        if self.instrument {
+            Some(&self.errors)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::optim::common::ParamKind;
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn converges_on_quadratic() {
+        let mut rng = Pcg64::seed(0);
+        let t = Matrix::randn(10, 8, 0.5, &mut rng);
+        let metas = vec![LayerMeta::new("w", 10, 8, ParamKind::Linear)];
+        let cfg = OptimizerConfig {
+            rank: 4,
+            weight_decay: 0.0,
+            mu: 0.9,
+            ..Default::default()
+        };
+        let mut opt = Dion::new(&metas, &cfg);
+        let mut params = vec![Matrix::zeros(10, 8)];
+        for _ in 0..500 {
+            let g = params[0].sub(&t).scaled(2.0);
+            opt.step(&mut params, &[g], 0.02);
+        }
+        let err = params[0].sub(&t).fro_norm() / t.fro_norm();
+        assert!(err < 0.35, "rel err={err}");
+    }
+
+    #[test]
+    fn stores_projector_per_layer() {
+        let metas = vec![
+            LayerMeta::new("a", 16, 12, ParamKind::Linear),
+            LayerMeta::new("b", 16, 12, ParamKind::Linear),
+        ];
+        let cfg = OptimizerConfig { rank: 4, ..Default::default() };
+        let rep = Dion::new(&metas, &cfg).memory_report();
+        // two C×r projectors (this is Dion's overhead vs Trion's r ints)
+        assert_eq!(rep.per_layer["projector"], 2 * 12 * 4 * 4);
+    }
+
+    #[test]
+    fn wide_layer_is_transposed_internally() {
+        let metas = vec![LayerMeta::new("w", 6, 20, ParamKind::Linear)];
+        let cfg = OptimizerConfig { rank: 3, weight_decay: 0.0, ..Default::default() };
+        let mut opt = Dion::new(&metas, &cfg);
+        let mut rng = Pcg64::seed(1);
+        let mut params = vec![Matrix::zeros(6, 20)];
+        let g = Matrix::randn(6, 20, 1.0, &mut rng);
+        opt.step(&mut params, &[g], 0.01);
+        assert_eq!(params[0].shape(), (6, 20));
+        assert!(params[0].fro_norm() > 0.0);
+    }
+
+    #[test]
+    fn momentum_error_feedback_keeps_residual() {
+        // With μ=1 the captured part stays entirely in momentum: M = B.
+        let metas = vec![LayerMeta::new("w", 8, 6, ParamKind::Linear)];
+        let cfg = OptimizerConfig {
+            rank: 2,
+            mu: 1.0,
+            weight_decay: 0.0,
+            ..Default::default()
+        };
+        let mut opt = Dion::new(&metas, &cfg);
+        let mut rng = Pcg64::seed(2);
+        let mut params = vec![Matrix::zeros(8, 6)];
+        let g = Matrix::randn(8, 6, 1.0, &mut rng);
+        opt.step(&mut params, &[g.clone()], 0.01);
+        if let LayerState::LowRank { momentum, .. } = &opt.states[0] {
+            assert!(momentum.max_abs_diff(&g) < 1e-5);
+        } else {
+            panic!("expected low-rank state");
+        }
+    }
+}

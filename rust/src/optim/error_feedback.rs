@@ -1,0 +1,127 @@
+//! Error-feedback buffers (§2.4): full-precision f32 or 8-bit quantized
+//! (MicroAdam-style symmetric per-tensor quantization — the paper reports
+//! 8 bits as the lowest resolution that does not degrade the optimizer).
+
+use crate::optim::common::EfMode;
+use crate::tensor::Matrix;
+
+/// A single layer's EF buffer.
+pub enum EfBuffer {
+    None { rows: usize, cols: usize },
+    F32(Matrix),
+    /// int8 payload + per-tensor scale.
+    Q8 { q: Vec<i8>, scale: f32, rows: usize, cols: usize },
+}
+
+impl EfBuffer {
+    pub fn new(mode: EfMode, rows: usize, cols: usize) -> Self {
+        match mode {
+            EfMode::None => EfBuffer::None { rows, cols },
+            EfMode::F32 => EfBuffer::F32(Matrix::zeros(rows, cols)),
+            EfMode::Q8 => EfBuffer::Q8 {
+                q: vec![0; rows * cols],
+                scale: 0.0,
+                rows,
+                cols,
+            },
+        }
+    }
+
+    /// Add the stored error into `g` in place (`G ← G + Ξ`).
+    pub fn add_into(&self, g: &mut Matrix) {
+        match self {
+            EfBuffer::None { .. } => {}
+            EfBuffer::F32(e) => g.axpy(1.0, e),
+            EfBuffer::Q8 { q, scale, .. } => {
+                if *scale != 0.0 {
+                    for (gv, &qv) in g.data.iter_mut().zip(q.iter()) {
+                        *gv += qv as f32 * scale;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Store a new error (`Ξ ← err`), quantizing if configured.
+    pub fn store(&mut self, err: &Matrix) {
+        match self {
+            EfBuffer::None { .. } => {}
+            EfBuffer::F32(e) => e.data.copy_from_slice(&err.data),
+            EfBuffer::Q8 { q, scale, .. } => {
+                let max = err.abs_max();
+                let s = max / 127.0 + 1e-12;
+                *scale = s;
+                for (qv, &ev) in q.iter_mut().zip(err.data.iter()) {
+                    *qv = (ev / s).round().clamp(-127.0, 127.0) as i8;
+                }
+            }
+        }
+    }
+
+    /// Persistent bytes of this buffer.
+    pub fn bytes(&self) -> u64 {
+        match self {
+            EfBuffer::None { .. } => 0,
+            EfBuffer::F32(m) => m.bytes(),
+            EfBuffer::Q8 { q, .. } => q.len() as u64 + 4,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn f32_roundtrip_exact() {
+        let mut rng = Pcg64::seed(0);
+        let err = Matrix::randn(5, 7, 1.0, &mut rng);
+        let mut buf = EfBuffer::new(EfMode::F32, 5, 7);
+        buf.store(&err);
+        let mut g = Matrix::zeros(5, 7);
+        buf.add_into(&mut g);
+        assert_eq!(g, err);
+    }
+
+    #[test]
+    fn q8_roundtrip_bounded() {
+        let mut rng = Pcg64::seed(1);
+        let err = Matrix::randn(8, 9, 1.0, &mut rng);
+        let mut buf = EfBuffer::new(EfMode::Q8, 8, 9);
+        buf.store(&err);
+        let mut g = Matrix::zeros(8, 9);
+        buf.add_into(&mut g);
+        let max = err.abs_max();
+        let tol = max / 127.0 * 0.51 + 1e-6;
+        assert!(g.max_abs_diff(&err) <= tol, "{} > {tol}", g.max_abs_diff(&err));
+    }
+
+    #[test]
+    fn q8_uses_quarter_memory() {
+        let buf8 = EfBuffer::new(EfMode::Q8, 10, 10);
+        let buf32 = EfBuffer::new(EfMode::F32, 10, 10);
+        assert_eq!(buf32.bytes(), 400);
+        assert_eq!(buf8.bytes(), 104);
+        assert_eq!(EfBuffer::new(EfMode::None, 10, 10).bytes(), 0);
+    }
+
+    #[test]
+    fn none_mode_is_noop() {
+        let mut buf = EfBuffer::new(EfMode::None, 3, 3);
+        let mut rng = Pcg64::seed(2);
+        buf.store(&Matrix::randn(3, 3, 1.0, &mut rng));
+        let mut g = Matrix::zeros(3, 3);
+        buf.add_into(&mut g);
+        assert_eq!(g, Matrix::zeros(3, 3));
+    }
+
+    #[test]
+    fn zero_error_stores_cleanly() {
+        let mut buf = EfBuffer::new(EfMode::Q8, 4, 4);
+        buf.store(&Matrix::zeros(4, 4));
+        let mut g = Matrix::zeros(4, 4);
+        buf.add_into(&mut g);
+        assert!(g.data.iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,235 @@
+//! FRUGAL (Zmushko et al., 2024): the low-rank ("state-full") gradient goes
+//! through AdamW; the projection residual ("state-free") is fed to SignSGD
+//! instead of being discarded or buffered (Table 3). Projection family is
+//! pluggable — SVD / DCT / Random / RandPerm — which is exactly the sweep of
+//! Table 6 / Figure 4a.
+
+use crate::projection::{Projection, ProjectionKind};
+use crate::tensor::Matrix;
+
+use super::common::{
+    deorient, orient, AdamState, LayerMeta, MemoryReport, Optimizer,
+    OptimizerConfig,
+};
+
+enum LayerState {
+    LowRank {
+        proj: Box<dyn Projection>,
+        m: Matrix, // R×r
+        v: Matrix, // R×r
+    },
+    Adam(AdamState),
+}
+
+pub struct Frugal {
+    metas: Vec<LayerMeta>,
+    states: Vec<LayerState>,
+    update_interval: usize,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    weight_decay: f32,
+    /// state-free learning-rate multiplier for the SignSGD branch
+    sign_lr_scale: f32,
+    step: u64,
+    proj_name: &'static str,
+}
+
+impl Frugal {
+    pub fn new(metas: &[LayerMeta], cfg: &OptimizerConfig) -> Self {
+        Self::with_projection(metas, cfg, cfg.projection.clone())
+    }
+
+    pub fn with_projection(
+        metas: &[LayerMeta],
+        cfg: &OptimizerConfig,
+        kind: ProjectionKind,
+    ) -> Self {
+        let shared = super::common::shared_dct_registry(metas);
+        let states = metas
+            .iter()
+            .enumerate()
+            .map(|(i, meta)| {
+                if meta.kind.low_rank_eligible() {
+                    let (rr, cc) = meta.oriented();
+                    let r = cfg.rank.min(cc).min(rr);
+                    LayerState::LowRank {
+                        proj: kind.build(cc, r, shared.get(&cc).cloned(),
+                                         cfg.seed ^ ((i as u64) << 4)),
+                        m: Matrix::zeros(rr, r),
+                        v: Matrix::zeros(rr, r),
+                    }
+                } else {
+                    LayerState::Adam(AdamState::new(meta.rows, meta.cols))
+                }
+            })
+            .collect();
+        let proj_name = kind.name();
+        Frugal {
+            metas: metas.to_vec(),
+            states,
+            update_interval: cfg.update_interval.max(1),
+            beta1: cfg.beta1,
+            beta2: cfg.beta2,
+            eps: cfg.eps,
+            weight_decay: cfg.weight_decay,
+            sign_lr_scale: 1.0,
+            step: 0,
+            proj_name,
+        }
+    }
+}
+
+impl Optimizer for Frugal {
+    fn step(&mut self, params: &mut [Matrix], grads: &[Matrix], lr: f32) {
+        self.step += 1;
+        let t = self.step;
+        let refresh = t == 1 || t % self.update_interval as u64 == 0;
+        for i in 0..params.len() {
+            let meta = &self.metas[i];
+            match &mut self.states[i] {
+                LayerState::Adam(st) => st.update(
+                    &mut params[i], &grads[i], lr, self.beta1, self.beta2,
+                    self.eps, self.weight_decay, t,
+                ),
+                LayerState::LowRank { proj, m, v } => {
+                    let g = orient(meta, &grads[i]);
+                    let g_low = if refresh {
+                        proj.refresh_and_project(&g)
+                    } else {
+                        proj.project(&g)
+                    };
+                    // state-full branch: AdamW on the subspace gradient
+                    let bc1 = 1.0 - self.beta1.powi(t as i32);
+                    let bc2 = 1.0 - self.beta2.powi(t as i32);
+                    let mut u_low = Matrix::zeros(g_low.rows, g_low.cols);
+                    for k in 0..g_low.data.len() {
+                        let gi = g_low.data[k];
+                        let mk = self.beta1 * m.data[k] + (1.0 - self.beta1) * gi;
+                        let vk = self.beta2 * v.data[k] + (1.0 - self.beta2) * gi * gi;
+                        m.data[k] = mk;
+                        v.data[k] = vk;
+                        u_low.data[k] = (mk / bc1) / ((vk / bc2).sqrt() + self.eps);
+                    }
+                    let mut u = proj.back(&u_low);
+                    // state-free branch: SignSGD on the residual
+                    let back_g = proj.back(&g_low);
+                    let resid = g.sub(&back_g);
+                    for (uv, &rv) in u.data.iter_mut().zip(resid.data.iter()) {
+                        // rust's signum(0.0) == 1.0; SignSGD wants sign(0) = 0
+                        if rv != 0.0 {
+                            *uv += self.sign_lr_scale * rv.signum();
+                        }
+                    }
+                    let u_full = deorient(meta, u);
+                    params[i].scale(1.0 - lr * self.weight_decay);
+                    params[i].axpy(-lr, &u_full);
+                }
+            }
+        }
+    }
+
+    fn memory_report(&self) -> MemoryReport {
+        let mut r = MemoryReport::default();
+        let mut shared_max = 0u64;
+        for st in &self.states {
+            match st {
+                LayerState::LowRank { proj, m, v } => {
+                    r.add("adam_m_low", m.bytes());
+                    r.add("adam_v_low", v.bytes());
+                    r.add("projector", proj.state_bytes());
+                    shared_max = shared_max.max(proj.shared_bytes());
+                }
+                LayerState::Adam(a) => {
+                    r.add("adam_m", a.m.bytes());
+                    r.add("adam_v", a.v.bytes());
+                }
+            }
+        }
+        if shared_max > 0 {
+            r.share("shared_projection", shared_max);
+        }
+        r
+    }
+
+    fn name(&self) -> &'static str {
+        match self.proj_name {
+            "dct" => "frugal+dct",
+            "svd" => "frugal+svd",
+            "random" => "frugal+random",
+            "randperm" => "frugal+randperm",
+            _ => "frugal",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::optim::common::ParamKind;
+    use super::*;
+    use crate::projection::RankNorm;
+    use crate::util::Pcg64;
+
+    fn quad_converges(kind: ProjectionKind) -> f64 {
+        let mut rng = Pcg64::seed(0);
+        let t = Matrix::randn(10, 8, 0.5, &mut rng);
+        let metas = vec![LayerMeta::new("w", 10, 8, ParamKind::Linear)];
+        let cfg = OptimizerConfig {
+            rank: 3,
+            weight_decay: 0.0,
+            update_interval: 5,
+            ..Default::default()
+        };
+        let mut opt = Frugal::with_projection(&metas, &cfg, kind);
+        let mut params = vec![Matrix::zeros(10, 8)];
+        for _ in 0..400 {
+            let g = params[0].sub(&t).scaled(2.0);
+            opt.step(&mut params, &[g], 0.02);
+        }
+        params[0].sub(&t).fro_norm() / t.fro_norm()
+    }
+
+    #[test]
+    fn converges_with_every_projection() {
+        for kind in [
+            ProjectionKind::Svd,
+            ProjectionKind::Dct { norm: RankNorm::L2, use_makhoul: true },
+            ProjectionKind::Random,
+            ProjectionKind::RandPerm,
+        ] {
+            let err = quad_converges(kind.clone());
+            // the sign branch keeps full-rank progress: all variants converge
+            assert!(err < 0.3, "{:?} err={err}", kind.name());
+        }
+    }
+
+    #[test]
+    fn state_free_branch_moves_out_of_subspace_coords() {
+        // rank-1 subspace + constant residual: SignSGD must still move
+        // every coordinate from step one (no EF warm-up needed).
+        let metas = vec![LayerMeta::new("w", 6, 6, ParamKind::Linear)];
+        let cfg = OptimizerConfig {
+            rank: 1,
+            weight_decay: 0.0,
+            projection: ProjectionKind::Svd,
+            ..Default::default()
+        };
+        let mut opt = Frugal::new(&metas, &cfg);
+        let mut rng = Pcg64::seed(1);
+        let g = Matrix::randn(6, 6, 1.0, &mut rng);
+        let mut params = vec![Matrix::zeros(6, 6)];
+        opt.step(&mut params, &[g.clone()], 0.1);
+        let moved = params[0].data.iter().filter(|v| v.abs() > 1e-6).count();
+        assert!(moved > 30, "moved={moved}/36");
+    }
+
+    #[test]
+    fn memory_matches_galore_plus_nothing_extra() {
+        // FRUGAL's state-free branch is stateless: memory == GaLore's.
+        let metas = vec![LayerMeta::new("w", 32, 32, ParamKind::Linear)];
+        let cfg = OptimizerConfig { rank: 8, projection: ProjectionKind::Svd, ..Default::default() };
+        let f = Frugal::new(&metas, &cfg).memory_report().total();
+        let g = super::super::GaLore::new(&metas, &cfg).memory_report().total();
+        assert_eq!(f, g);
+    }
+}

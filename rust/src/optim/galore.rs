@@ -1,0 +1,246 @@
+//! GaLore (Zhao et al., 2024): AdamW on an SVD-projected gradient, subspace
+//! refreshed every `T_u` steps (default 200 — what made SVD-per-layer
+//! feasible), projection error *discarded* (Table 3).
+
+use std::collections::BTreeMap;
+
+use crate::projection::{Projection, ProjectionKind};
+use crate::tensor::Matrix;
+
+use super::common::{
+    deorient, orient, AdamState, LayerMeta, MemoryReport, Optimizer,
+    OptimizerConfig,
+};
+
+enum LayerState {
+    LowRank {
+        proj: Box<dyn Projection>,
+        m: Matrix, // R×r
+        v: Matrix, // R×r
+    },
+    Adam(AdamState),
+}
+
+pub struct GaLore {
+    metas: Vec<LayerMeta>,
+    states: Vec<LayerState>,
+    update_interval: usize,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    weight_decay: f32,
+    step: u64,
+    /// Which projection family to use — SVD for stock GaLore, DCT for the
+    /// Table-8 comparison (DCT-AdamW with T_u=200 ≈ "GaLore+DCT").
+    projection_name: &'static str,
+}
+
+impl GaLore {
+    pub fn new(metas: &[LayerMeta], cfg: &OptimizerConfig) -> Self {
+        Self::with_projection(metas, cfg, ProjectionKind::Svd)
+    }
+
+    pub fn with_projection(
+        metas: &[LayerMeta],
+        cfg: &OptimizerConfig,
+        kind: ProjectionKind,
+    ) -> Self {
+        let shared = super::common::shared_dct_registry(metas);
+        let states = metas
+            .iter()
+            .enumerate()
+            .map(|(i, meta)| {
+                if meta.kind.low_rank_eligible() {
+                    let (rr, cc) = meta.oriented();
+                    let r = cfg.rank.min(cc).min(rr);
+                    let proj = kind.build(
+                        cc,
+                        r,
+                        shared.get(&cc).cloned(),
+                        cfg.seed ^ (i as u64) << 8,
+                    );
+                    LayerState::LowRank {
+                        proj,
+                        m: Matrix::zeros(rr, r),
+                        v: Matrix::zeros(rr, r),
+                    }
+                } else {
+                    LayerState::Adam(AdamState::new(meta.rows, meta.cols))
+                }
+            })
+            .collect();
+        let projection_name = kind.name();
+        GaLore {
+            metas: metas.to_vec(),
+            states,
+            update_interval: cfg.update_interval.max(1),
+            beta1: cfg.beta1,
+            beta2: cfg.beta2,
+            eps: cfg.eps,
+            weight_decay: cfg.weight_decay,
+            step: 0,
+            projection_name,
+        }
+    }
+
+    fn refresh_due(&self) -> bool {
+        self.step == 1 || self.step % self.update_interval as u64 == 0
+    }
+}
+
+impl Optimizer for GaLore {
+    fn step(&mut self, params: &mut [Matrix], grads: &[Matrix], lr: f32) {
+        self.step += 1;
+        let refresh = self.refresh_due();
+        let t = self.step;
+        for i in 0..params.len() {
+            let meta = &self.metas[i];
+            match &mut self.states[i] {
+                LayerState::Adam(st) => st.update(
+                    &mut params[i], &grads[i], lr, self.beta1, self.beta2,
+                    self.eps, self.weight_decay, t,
+                ),
+                LayerState::LowRank { proj, m, v } => {
+                    let g = orient(meta, &grads[i]);
+                    let g_low = if refresh {
+                        proj.refresh_and_project(&g)
+                    } else {
+                        proj.project(&g)
+                    };
+                    // GaLore does NOT rotate m/v across refreshes (its T_u is
+                    // large precisely so stale-subspace mixing is rare).
+                    let bc1 = 1.0 - self.beta1.powi(t as i32);
+                    let bc2 = 1.0 - self.beta2.powi(t as i32);
+                    let mut u_low = Matrix::zeros(g_low.rows, g_low.cols);
+                    for k in 0..g_low.data.len() {
+                        let gi = g_low.data[k];
+                        let mk = self.beta1 * m.data[k] + (1.0 - self.beta1) * gi;
+                        let vk = self.beta2 * v.data[k] + (1.0 - self.beta2) * gi * gi;
+                        m.data[k] = mk;
+                        v.data[k] = vk;
+                        u_low.data[k] = (mk / bc1) / ((vk / bc2).sqrt() + self.eps);
+                    }
+                    let u_full = deorient(meta, proj.back(&u_low));
+                    params[i].scale(1.0 - lr * self.weight_decay);
+                    params[i].axpy(-lr, &u_full);
+                }
+            }
+        }
+    }
+
+    fn memory_report(&self) -> MemoryReport {
+        let mut r = MemoryReport::default();
+        let mut shared_seen: BTreeMap<u64, u64> = BTreeMap::new();
+        for st in &self.states {
+            match st {
+                LayerState::LowRank { proj, m, v } => {
+                    r.add("adam_m_low", m.bytes());
+                    r.add("adam_v_low", v.bytes());
+                    r.add("projector", proj.state_bytes());
+                    let sb = proj.shared_bytes();
+                    if sb > 0 {
+                        shared_seen.insert(sb, sb);
+                    }
+                }
+                LayerState::Adam(a) => {
+                    r.add("adam_m", a.m.bytes());
+                    r.add("adam_v", a.v.bytes());
+                }
+            }
+        }
+        for (i, (_, sb)) in shared_seen.into_iter().enumerate() {
+            r.share(&format!("shared_proj_{i}"), sb);
+        }
+        r
+    }
+
+    fn name(&self) -> &'static str {
+        if self.projection_name == "dct" {
+            "galore+dct"
+        } else {
+            "galore"
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::optim::common::ParamKind;
+    use super::*;
+    use crate::projection::RankNorm;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn converges_on_quadratic() {
+        let mut rng = Pcg64::seed(0);
+        let t = Matrix::randn(10, 8, 0.5, &mut rng);
+        let metas = vec![LayerMeta::new("w", 10, 8, ParamKind::Linear)];
+        let cfg = OptimizerConfig {
+            rank: 4,
+            weight_decay: 0.0,
+            update_interval: 10,
+            ..Default::default()
+        };
+        let mut opt = GaLore::new(&metas, &cfg);
+        let mut params = vec![Matrix::zeros(10, 8)];
+        for _ in 0..600 {
+            let g = params[0].sub(&t).scaled(2.0);
+            opt.step(&mut params, &[g], 0.05);
+        }
+        let err = params[0].sub(&t).fro_norm() / t.fro_norm();
+        assert!(err < 0.4, "rel err={err}");
+    }
+
+    #[test]
+    fn low_rank_state_is_smaller_than_adamw() {
+        let metas = vec![LayerMeta::new("w", 100, 100, ParamKind::Linear)];
+        let cfg = OptimizerConfig { rank: 10, ..Default::default() };
+        let galore = GaLore::new(&metas, &cfg).memory_report().total();
+        let adam = super::super::AdamW::new(&metas, &cfg).memory_report().total();
+        assert!(galore < adam / 2, "galore={galore} adam={adam}");
+    }
+
+    #[test]
+    fn dct_variant_has_smaller_projector_state() {
+        let metas = vec![
+            LayerMeta::new("a", 64, 64, ParamKind::Linear),
+            LayerMeta::new("b", 64, 64, ParamKind::Linear),
+        ];
+        let cfg = OptimizerConfig { rank: 16, ..Default::default() };
+        let svd = GaLore::new(&metas, &cfg).memory_report();
+        let dct = GaLore::with_projection(
+            &metas,
+            &cfg,
+            ProjectionKind::Dct { norm: RankNorm::L2, use_makhoul: true },
+        )
+        .memory_report();
+        assert!(dct.per_layer["projector"] < svd.per_layer["projector"]);
+    }
+
+    #[test]
+    fn subspace_refresh_interval_respected() {
+        // With interval 5, the basis must be identical between refreshes.
+        let metas = vec![LayerMeta::new("w", 12, 8, ParamKind::Linear)];
+        let cfg = OptimizerConfig {
+            rank: 3,
+            update_interval: 5,
+            ..Default::default()
+        };
+        let mut opt = GaLore::new(&metas, &cfg);
+        let mut rng = Pcg64::seed(1);
+        let mut params = vec![Matrix::zeros(12, 8)];
+        let mut bases = Vec::new();
+        for _ in 0..6 {
+            let g = Matrix::randn(12, 8, 1.0, &mut rng);
+            opt.step(&mut params, &[g], 0.01);
+            if let LayerState::LowRank { proj, .. } = &opt.states[0] {
+                bases.push(proj.basis());
+            }
+        }
+        // steps 2..4 (after the step-1 refresh) share the same basis
+        assert!(bases[1].max_abs_diff(&bases[2]) < 1e-7);
+        assert!(bases[2].max_abs_diff(&bases[3]) < 1e-7);
+        // step 5 (t=5, 5%5==0) refreshed
+        assert!(bases[3].max_abs_diff(&bases[4]) > 1e-6);
+    }
+}

@@ -1,0 +1,39 @@
+//! Optimizers: the paper's contributions (Trion, DCT-AdamW) and every
+//! baseline it evaluates against (AdamW, Muon, Dion, GaLore, LDAdamW,
+//! FRUGAL, FIRA).
+//!
+//! All optimizers implement [`Optimizer`]: they own per-layer state, consume
+//! the (already all-reduced) gradients and update the parameter buffers in
+//! place. Low-rank treatment applies to 2-D `linear` parameters; `embed` /
+//! `head` / `norm` parameters always take dense AdamW, matching the practice
+//! of GaLore/LDAdam/Dion ("hidden layers only").
+//!
+//! Memory accounting is exact: [`MemoryReport`] sums every persistent buffer
+//! byte, with shared per-device state (the DCT matrix) deduplicated — this
+//! regenerates the paper's memory columns without a GPU to read from.
+
+pub mod common;
+pub mod adamw;
+pub mod muon;
+pub mod dion;
+pub mod trion;
+pub mod galore;
+pub mod ldadamw;
+pub mod dct_adamw;
+pub mod frugal;
+pub mod fira;
+pub mod error_feedback;
+
+pub use adamw::AdamW;
+pub use common::{
+    build_optimizer, shared_dct_registry, LayerMeta, MemoryReport, Optimizer,
+    OptimizerConfig, OptimizerKind, ParamKind,
+};
+pub use dct_adamw::DctAdamW;
+pub use dion::Dion;
+pub use fira::Fira;
+pub use frugal::Frugal;
+pub use galore::GaLore;
+pub use ldadamw::LdAdamW;
+pub use muon::Muon;
+pub use trion::Trion;

@@ -1,0 +1,185 @@
+//! Muon (Jordan et al., 2024): SGD-momentum whose hidden-layer updates are
+//! orthogonalized with full-size Newton–Schulz. The "fast convergence at
+//! extra FLOPs" baseline — Trion's point of departure (§5): the NS here
+//! materializes and multiplies full `R×C` matrices every step.
+
+use std::collections::BTreeMap;
+
+use crate::linalg::newton_schulz;
+use crate::tensor::Matrix;
+
+use super::common::{
+    deorient, orient, shape_factor, AdamState, LayerMeta, MemoryReport, Optimizer,
+    OptimizerConfig,
+};
+
+enum LayerState {
+    /// Hidden linear layer: momentum buffer, NS-orthogonalized update.
+    Momentum(Matrix),
+    /// Everything else: dense AdamW.
+    Adam(AdamState),
+}
+
+pub struct Muon {
+    metas: Vec<LayerMeta>,
+    states: Vec<LayerState>,
+    mu: f32,
+    ns_steps: usize,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    weight_decay: f32,
+    step: u64,
+    instrument: bool,
+    errors: BTreeMap<String, f64>,
+}
+
+impl Muon {
+    pub fn new(metas: &[LayerMeta], cfg: &OptimizerConfig) -> Self {
+        let states = metas
+            .iter()
+            .map(|m| {
+                if m.kind.low_rank_eligible() {
+                    LayerState::Momentum(Matrix::zeros(m.rows, m.cols))
+                } else {
+                    LayerState::Adam(AdamState::new(m.rows, m.cols))
+                }
+            })
+            .collect();
+        Muon {
+            metas: metas.to_vec(),
+            states,
+            mu: cfg.mu,
+            ns_steps: cfg.ns_steps,
+            beta1: cfg.beta1,
+            beta2: cfg.beta2,
+            eps: cfg.eps,
+            weight_decay: cfg.weight_decay,
+            step: 0,
+            instrument: cfg.instrument,
+            errors: BTreeMap::new(),
+        }
+    }
+}
+
+impl Optimizer for Muon {
+    fn step(&mut self, params: &mut [Matrix], grads: &[Matrix], lr: f32) {
+        self.step += 1;
+        for i in 0..params.len() {
+            let meta = &self.metas[i];
+            match &mut self.states[i] {
+                LayerState::Adam(st) => {
+                    st.update(
+                        &mut params[i], &grads[i], lr, self.beta1, self.beta2,
+                        self.eps, 0.0, self.step,
+                    );
+                }
+                LayerState::Momentum(m) => {
+                    // Nesterov-style momentum accumulation: M ← μM + G
+                    m.scale(self.mu);
+                    m.axpy(1.0, &grads[i]);
+                    let b = orient(meta, m);
+                    let o = newton_schulz(&b, self.ns_steps);
+                    if self.instrument {
+                        self.errors
+                            .insert(meta.name.clone(), b.sub(&o).fro_norm());
+                    }
+                    let (rr, cc) = b.shape();
+                    let o_full = deorient(meta, o);
+                    // θ ← (1 − λη)θ − η·max(1, sqrt(R/C))·O
+                    params[i].scale(1.0 - lr * self.weight_decay);
+                    params[i].axpy(-lr * shape_factor(rr, cc), &o_full);
+                }
+            }
+        }
+    }
+
+    fn memory_report(&self) -> MemoryReport {
+        let mut r = MemoryReport::default();
+        for st in &self.states {
+            match st {
+                LayerState::Momentum(m) => r.add("momentum", m.bytes()),
+                LayerState::Adam(a) => {
+                    r.add("adam_m", a.m.bytes());
+                    r.add("adam_v", a.v.bytes());
+                }
+            }
+        }
+        r
+    }
+
+    fn name(&self) -> &'static str {
+        "muon"
+    }
+
+    fn projection_errors(&self) -> Option<&BTreeMap<String, f64>> {
+        if self.instrument {
+            Some(&self.errors)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::optim::common::ParamKind;
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn converges_on_quadratic() {
+        let mut rng = Pcg64::seed(0);
+        let t = Matrix::randn(8, 8, 0.5, &mut rng);
+        let metas = vec![LayerMeta::new("w", 8, 8, ParamKind::Linear)];
+        let cfg = OptimizerConfig { weight_decay: 0.0, mu: 0.9, ..Default::default() };
+        let mut opt = Muon::new(&metas, &cfg);
+        let mut params = vec![Matrix::zeros(8, 8)];
+        for _ in 0..400 {
+            let g = params[0].sub(&t).scaled(2.0);
+            opt.step(&mut params, &[g], 0.02);
+        }
+        let err = params[0].sub(&t).fro_norm();
+        assert!(err < 0.5, "err={err}");
+    }
+
+    #[test]
+    fn uses_half_the_state_of_adam_on_linear() {
+        let metas = vec![LayerMeta::new("w", 10, 10, ParamKind::Linear)];
+        let cfg = OptimizerConfig::default();
+        let muon = Muon::new(&metas, &cfg).memory_report().total();
+        let adam = super::super::AdamW::new(&metas, &cfg).memory_report().total();
+        assert_eq!(muon * 2, adam);
+    }
+
+    #[test]
+    fn update_is_orthogonalized() {
+        // after one step from zero momentum the applied update should have
+        // singular values near 1 (scaled by lr)
+        let mut rng = Pcg64::seed(1);
+        let metas = vec![LayerMeta::new("w", 16, 4, ParamKind::Linear)];
+        let cfg = OptimizerConfig { weight_decay: 0.0, ..Default::default() };
+        let mut opt = Muon::new(&metas, &cfg);
+        let mut params = vec![Matrix::zeros(16, 4)];
+        let g = Matrix::randn(16, 4, 1.0, &mut rng);
+        opt.step(&mut params, &[g], 1.0);
+        // params = -shape_factor * O; singular values of O ∈ [0.5, 1.5]
+        let sf = shape_factor(16, 4);
+        let svd = crate::linalg::svd_thin(&params[0]);
+        for &s in &svd.s {
+            assert!(s / sf > 0.3 && s / sf < 1.6, "s={s}");
+        }
+    }
+
+    #[test]
+    fn instrumentation_records_layers() {
+        let metas = vec![LayerMeta::new("w", 6, 6, ParamKind::Linear)];
+        let cfg = OptimizerConfig { instrument: true, ..Default::default() };
+        let mut opt = Muon::new(&metas, &cfg);
+        let mut rng = Pcg64::seed(2);
+        let mut params = vec![Matrix::zeros(6, 6)];
+        let g = Matrix::randn(6, 6, 1.0, &mut rng);
+        opt.step(&mut params, &[g], 0.01);
+        assert!(opt.projection_errors().unwrap().contains_key("w"));
+    }
+}

@@ -1,0 +1,272 @@
+//! Baseline projections the paper compares against: SVD (GaLore / FRUGAL /
+//! FIRA), block power iteration (LDAdam), random semi-orthogonal and random
+//! permutation (FRUGAL's ablations).
+
+use crate::linalg::{block_power_iter, qr_thin, svd_thin};
+use crate::tensor::{matmul, matmul_a_bt, Matrix};
+use crate::util::Pcg64;
+
+use super::Projection;
+
+/// Shared implementation for methods that materialize `Q_r (C×r)`.
+macro_rules! dense_basis_impl {
+    () => {
+        fn project(&self, g: &Matrix) -> Matrix {
+            matmul(g, &self.q_r)
+        }
+
+        fn back(&self, low: &Matrix) -> Matrix {
+            matmul_a_bt(low, &self.q_r)
+        }
+
+        fn basis(&self) -> Matrix {
+            self.q_r.clone()
+        }
+
+        fn state_bytes(&self) -> u64 {
+            self.q_r.bytes()
+        }
+
+        fn rank(&self) -> usize {
+            self.q_r.cols
+        }
+    };
+}
+
+/// Top-r right singular vectors (one-sided Jacobi SVD per refresh).
+pub struct SvdProj {
+    q_r: Matrix,
+}
+
+impl SvdProj {
+    pub fn new(cols: usize, rank: usize) -> Self {
+        let rank = rank.min(cols);
+        // Identity-prefix init; first refresh replaces it.
+        let mut q = Matrix::zeros(cols, rank);
+        for j in 0..rank {
+            *q.at_mut(j, j) = 1.0;
+        }
+        SvdProj { q_r: q }
+    }
+}
+
+impl Projection for SvdProj {
+    fn refresh_and_project(&mut self, g: &Matrix) -> Matrix {
+        let svd = svd_thin(g);
+        self.q_r = svd.right_vectors(self.q_r.cols);
+        self.project(g)
+    }
+
+    dense_basis_impl!();
+
+    fn name(&self) -> &'static str {
+        "svd"
+    }
+}
+
+/// LDAdam-style block power iteration, warm-started from the previous basis.
+pub struct BlockPower {
+    q_r: Matrix,
+    iters: usize,
+    warm: bool,
+}
+
+impl BlockPower {
+    pub fn new(cols: usize, rank: usize, iters: usize) -> Self {
+        let rank = rank.min(cols);
+        let mut q = Matrix::zeros(cols, rank);
+        for j in 0..rank {
+            *q.at_mut(j, j) = 1.0;
+        }
+        BlockPower { q_r: q, iters, warm: false }
+    }
+}
+
+impl Projection for BlockPower {
+    fn refresh_and_project(&mut self, g: &Matrix) -> Matrix {
+        let warm = if self.warm { Some(&self.q_r) } else { None };
+        self.q_r = block_power_iter(g, self.q_r.cols, self.iters, warm);
+        self.warm = true;
+        self.project(g)
+    }
+
+    dense_basis_impl!();
+
+    fn name(&self) -> &'static str {
+        "block_power"
+    }
+}
+
+/// Random semi-orthogonal basis (QR of a fresh Gaussian per refresh) —
+/// FRUGAL's `Random` projection.
+pub struct RandomSemiOrtho {
+    q_r: Matrix,
+    rng: Pcg64,
+}
+
+impl RandomSemiOrtho {
+    pub fn new(cols: usize, rank: usize, seed: u64) -> Self {
+        let rank = rank.min(cols);
+        let mut rng = Pcg64::new(seed, 0x7a11_5eed);
+        let g = Matrix::randn(cols, rank, 1.0, &mut rng);
+        let (q, _) = qr_thin(&g);
+        RandomSemiOrtho { q_r: q, rng }
+    }
+}
+
+impl Projection for RandomSemiOrtho {
+    fn refresh_and_project(&mut self, g: &Matrix) -> Matrix {
+        let fresh = Matrix::randn(self.q_r.rows, self.q_r.cols, 1.0, &mut self.rng);
+        let (q, _) = qr_thin(&fresh);
+        self.q_r = q;
+        self.project(g)
+    }
+
+    dense_basis_impl!();
+
+    fn name(&self) -> &'static str {
+        "random"
+    }
+}
+
+/// Random coordinate subset (FRUGAL's `RandPerm`): the basis is `r` distinct
+/// standard basis vectors, so project/back are gathers — no matmul at all.
+pub struct RandPerm {
+    cols: usize,
+    idx: Vec<usize>,
+    rng: Pcg64,
+}
+
+impl RandPerm {
+    pub fn new(cols: usize, rank: usize, seed: u64) -> Self {
+        let rank = rank.min(cols);
+        let mut rng = Pcg64::new(seed, 0x9e37_79b9);
+        let mut idx = rng.sample_indices(cols, rank);
+        idx.sort_unstable();
+        RandPerm { cols, idx, rng }
+    }
+}
+
+impl Projection for RandPerm {
+    fn refresh_and_project(&mut self, g: &Matrix) -> Matrix {
+        let mut idx = self.rng.sample_indices(self.cols, self.idx.len());
+        idx.sort_unstable();
+        self.idx = idx;
+        self.project(g)
+    }
+
+    fn project(&self, g: &Matrix) -> Matrix {
+        g.select_columns(&self.idx)
+    }
+
+    fn back(&self, low: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(low.rows, self.cols);
+        for i in 0..low.rows {
+            let src = low.row(i);
+            let dst = out.row_mut(i);
+            for (k, &j) in self.idx.iter().enumerate() {
+                dst[j] = src[k];
+            }
+        }
+        out
+    }
+
+    fn basis(&self) -> Matrix {
+        let mut q = Matrix::zeros(self.cols, self.idx.len());
+        for (k, &j) in self.idx.iter().enumerate() {
+            *q.at_mut(j, k) = 1.0;
+        }
+        q
+    }
+
+    fn state_bytes(&self) -> u64 {
+        (self.idx.len() * 4) as u64
+    }
+
+    fn rank(&self) -> usize {
+        self.idx.len()
+    }
+
+    fn name(&self) -> &'static str {
+        "randperm"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+
+    #[test]
+    fn svd_projection_minimizes_reconstruction_error() {
+        // SVD must beat (or tie) every other baseline on reconstruction.
+        let mut rng = Pcg64::seed(0);
+        let g = Matrix::randn(24, 16, 1.0, &mut rng);
+        let r = 4;
+        let errs: Vec<(String, f64)> = {
+            let mut out = Vec::new();
+            let mut svd = SvdProj::new(16, r);
+            let low = svd.refresh_and_project(&g);
+            out.push(("svd".into(), g.sub(&svd.back(&low)).fro_norm()));
+            let mut bp = BlockPower::new(16, r, 6);
+            let low = bp.refresh_and_project(&g);
+            out.push(("bp".into(), g.sub(&bp.back(&low)).fro_norm()));
+            let mut rnd = RandomSemiOrtho::new(16, r, 1);
+            let low = rnd.refresh_and_project(&g);
+            out.push(("rand".into(), g.sub(&rnd.back(&low)).fro_norm()));
+            let mut perm = RandPerm::new(16, r, 1);
+            let low = perm.refresh_and_project(&g);
+            out.push(("perm".into(), g.sub(&perm.back(&low)).fro_norm()));
+            out
+        };
+        let svd_err = errs[0].1;
+        for (name, e) in &errs[1..] {
+            assert!(svd_err <= e + 1e-4, "svd {svd_err} vs {name} {e}");
+        }
+    }
+
+    #[test]
+    fn block_power_approaches_svd_error() {
+        let mut rng = Pcg64::seed(1);
+        // low-rank + noise structure so the subspace is identifiable
+        let u = Matrix::randn(30, 3, 2.0, &mut rng);
+        let v = Matrix::randn(3, 20, 1.0, &mut rng);
+        let mut g = matmul(&u, &v);
+        g.axpy(1.0, &Matrix::randn(30, 20, 0.1, &mut rng));
+
+        let mut svd = SvdProj::new(20, 3);
+        let low = svd.refresh_and_project(&g);
+        let err_svd = g.sub(&svd.back(&low)).fro_norm();
+
+        let mut bp = BlockPower::new(20, 3, 8);
+        let low = bp.refresh_and_project(&g);
+        let err_bp = g.sub(&bp.back(&low)).fro_norm();
+        assert!(err_bp <= err_svd * 1.05, "bp={err_bp} svd={err_svd}");
+    }
+
+    #[test]
+    fn randperm_roundtrip_preserves_selected_coords() {
+        let mut rng = Pcg64::seed(2);
+        let g = Matrix::randn(6, 12, 1.0, &mut rng);
+        let mut p = RandPerm::new(12, 5, 3);
+        let low = p.refresh_and_project(&g);
+        let back = p.back(&low);
+        for (k, &j) in p.idx.iter().enumerate() {
+            for i in 0..6 {
+                assert_eq!(back.at(i, j), g.at(i, j), "coord {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn prop_random_semi_ortho_changes_every_refresh() {
+        proptest::check("random-refresh", 4, |rng| {
+            let g = Matrix::randn(8, 10, 1.0, rng);
+            let mut p = RandomSemiOrtho::new(10, 3, rng.next_u64());
+            let b0 = p.basis();
+            p.refresh_and_project(&g);
+            let b1 = p.basis();
+            assert!(b0.max_abs_diff(&b1) > 1e-3);
+        });
+    }
+}

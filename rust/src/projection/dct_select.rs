@@ -1,0 +1,230 @@
+//! DCT dynamic column selection (§2.1 + Appendix B) — the paper's method.
+//!
+//! One [`SharedDct`] per device holds the `C×C` DCT-II matrix and a Makhoul
+//! FFT plan, built once at training start. Each layer keeps only the `r`
+//! selected column indices; the effective projector `Q_r = Q[:, idx]` is
+//! re-gathered on demand.
+
+use std::sync::Arc;
+
+use crate::fft::{dct2_matrix, MakhoulPlan};
+use crate::tensor::{matmul, matmul_a_bt, Matrix};
+
+use super::{Projection, RankNorm};
+
+/// Per-device shared DCT state: the orthogonal matrix + the FFT plan.
+pub struct SharedDct {
+    q: Matrix,          // DCT-II, C×C
+    plan: MakhoulPlan,  // fast similarity path
+}
+
+impl SharedDct {
+    pub fn new(dim: usize) -> Self {
+        SharedDct { q: dct2_matrix(dim), plan: MakhoulPlan::new(dim) }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.q.rows
+    }
+
+    pub fn matrix(&self) -> &Matrix {
+        &self.q
+    }
+
+    /// Similarities `S = G·Q` — Makhoul FFT path or plain matmul.
+    pub fn similarities(&self, g: &Matrix, use_makhoul: bool) -> Matrix {
+        if use_makhoul {
+            self.plan.run(g)
+        } else {
+            matmul(g, &self.q)
+        }
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.q.bytes()
+    }
+}
+
+/// Rank the columns of `s` by norm and return the indices of the largest
+/// `r`, in ascending index order (deterministic tie-break by index — keeps
+/// the rust-native path bit-identical with the AOT graphs).
+pub fn select_top_columns(s: &Matrix, r: usize, norm: RankNorm) -> Vec<usize> {
+    let scores = match norm {
+        RankNorm::L1 => s.col_l1_norms(),
+        RankNorm::L2 => s.col_l2_norms(),
+    };
+    let mut order: Vec<usize> = (0..s.cols).collect();
+    order.sort_by(|&a, &b| {
+        scores[b]
+            .partial_cmp(&scores[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let mut idx = order[..r.min(order.len())].to_vec();
+    idx.sort_unstable();
+    idx
+}
+
+/// One layer's DCT-selection state: `r` column indices into the shared Q.
+pub struct DctSelect {
+    shared: Arc<SharedDct>,
+    rank: usize,
+    norm: RankNorm,
+    use_makhoul: bool,
+    idx: Vec<usize>,
+    basis_cache: Matrix, // Q[:, idx] (C×r) — transient, rebuilt on refresh
+}
+
+impl DctSelect {
+    pub fn new(shared: Arc<SharedDct>, rank: usize, norm: RankNorm,
+               use_makhoul: bool) -> Self {
+        let rank = rank.min(shared.dim());
+        let idx: Vec<usize> = (0..rank).collect();
+        let basis_cache = shared.matrix().select_columns(&idx);
+        DctSelect { shared, rank, norm, use_makhoul, idx, basis_cache }
+    }
+
+    pub fn indices(&self) -> &[usize] {
+        &self.idx
+    }
+
+    /// Refresh returning both the similarity matrix and the projection —
+    /// Trion consumes `S` for the momentum error feedback as well.
+    pub fn refresh_full(&mut self, g: &Matrix) -> (Matrix, Matrix) {
+        let s = self.shared.similarities(g, self.use_makhoul);
+        self.idx = select_top_columns(&s, self.rank, self.norm);
+        self.basis_cache = self.shared.matrix().select_columns(&self.idx);
+        let low = s.select_columns(&self.idx);
+        (s, low)
+    }
+}
+
+impl Projection for DctSelect {
+    fn refresh_and_project(&mut self, g: &Matrix) -> Matrix {
+        let (_, low) = self.refresh_full(g);
+        low
+    }
+
+    fn project(&self, g: &Matrix) -> Matrix {
+        // G·Q_r without forming full S: gather then multiply.
+        matmul(g, &self.basis_cache)
+    }
+
+    fn back(&self, low: &Matrix) -> Matrix {
+        matmul_a_bt(low, &self.basis_cache)
+    }
+
+    fn basis(&self) -> Matrix {
+        self.basis_cache.clone()
+    }
+
+    fn state_bytes(&self) -> u64 {
+        (self.idx.len() * 4) as u64 // r int32 indices — the paper's claim
+    }
+
+    fn shared_bytes(&self) -> u64 {
+        self.shared.bytes()
+    }
+
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn name(&self) -> &'static str {
+        "dct"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{proptest, Pcg64};
+
+    #[test]
+    fn selection_maximizes_column_norms() {
+        let mut rng = Pcg64::seed(0);
+        let s = Matrix::randn(10, 12, 1.0, &mut rng);
+        let idx = select_top_columns(&s, 4, RankNorm::L2);
+        let norms = s.col_l2_norms();
+        let min_selected = idx.iter().map(|&i| norms[i]).fold(f32::MAX, f32::min);
+        let max_rejected = (0..12)
+            .filter(|i| !idx.contains(i))
+            .map(|i| norms[i])
+            .fold(0.0f32, f32::max);
+        assert!(min_selected >= max_rejected);
+    }
+
+    #[test]
+    fn selection_indices_sorted_unique() {
+        let mut rng = Pcg64::seed(1);
+        let s = Matrix::randn(6, 20, 1.0, &mut rng);
+        for norm in [RankNorm::L1, RankNorm::L2] {
+            let idx = select_top_columns(&s, 7, norm);
+            assert_eq!(idx.len(), 7);
+            let mut sorted = idx.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted, idx);
+        }
+    }
+
+    #[test]
+    fn prop_contractive_bound_holds() {
+        // §4.1: ‖G − G·Q_r·Q_rᵀ‖²F ≤ (1 − r/n)·‖G‖²F
+        proptest::check("dct-contractive", 10, |rng| {
+            let rows = proptest::size(rng, 2, 20);
+            let cols = proptest::size(rng, 4, 40);
+            let r = proptest::size(rng, 1, cols - 1);
+            let g = Matrix::randn(rows, cols, 1.0, rng);
+            let shared = Arc::new(SharedDct::new(cols));
+            let mut p = DctSelect::new(shared, r, RankNorm::L2, false);
+            let low = p.refresh_and_project(&g);
+            let err_sq = g.sub(&p.back(&low)).fro_norm_sq();
+            let bound = (1.0 - r as f64 / cols as f64) * g.fro_norm_sq();
+            assert!(err_sq <= bound * (1.0 + 1e-4) + 1e-6,
+                    "err²={err_sq} bound={bound}");
+        });
+    }
+
+    #[test]
+    fn selection_beats_fixed_prefix() {
+        // Dynamic selection must be at least as good as always taking the
+        // first r DCT columns (the static strategy).
+        let mut rng = Pcg64::seed(3);
+        let g = Matrix::randn(16, 32, 1.0, &mut rng);
+        let shared = Arc::new(SharedDct::new(32));
+        let r = 8;
+        let mut dynamic = DctSelect::new(shared.clone(), r, RankNorm::L2, false);
+        let low = dynamic.refresh_and_project(&g);
+        let err_dyn = g.sub(&dynamic.back(&low)).fro_norm_sq();
+
+        let prefix: Vec<usize> = (0..r).collect();
+        let q_r = shared.matrix().select_columns(&prefix);
+        let low_fix = matmul(&g, &q_r);
+        let err_fix = g.sub(&matmul_a_bt(&low_fix, &q_r)).fro_norm_sq();
+        assert!(err_dyn <= err_fix + 1e-5);
+    }
+
+    #[test]
+    fn makhoul_and_matmul_paths_agree() {
+        let mut rng = Pcg64::seed(4);
+        let g = Matrix::randn(14, 24, 1.0, &mut rng);
+        let shared = Arc::new(SharedDct::new(24));
+        let mut a = DctSelect::new(shared.clone(), 6, RankNorm::L2, true);
+        let mut b = DctSelect::new(shared, 6, RankNorm::L2, false);
+        let la = a.refresh_and_project(&g);
+        let lb = b.refresh_and_project(&g);
+        assert_eq!(a.indices(), b.indices());
+        assert!(la.max_abs_diff(&lb) < 1e-4);
+    }
+
+    #[test]
+    fn full_rank_selection_is_lossless() {
+        let mut rng = Pcg64::seed(5);
+        let g = Matrix::randn(9, 16, 1.0, &mut rng);
+        let shared = Arc::new(SharedDct::new(16));
+        let mut p = DctSelect::new(shared, 16, RankNorm::L2, false);
+        let low = p.refresh_and_project(&g);
+        assert!(g.sub(&p.back(&low)).fro_norm() < 1e-4);
+    }
+}

@@ -1,0 +1,224 @@
+//! Low-rank projection substrate (§2.1 + every baseline the paper sweeps).
+//!
+//! A [`Projection`] owns one layer's subspace state and maps gradients
+//! between the full space `R^{R×C}` and the low-rank space `R^{R×r}`
+//! (right-projection; callers transpose for left-projection, exactly as the
+//! paper prescribes projecting the *smaller* dimension).
+//!
+//! Implementations:
+//!
+//! | name        | subspace source                        | per-layer state |
+//! |-------------|----------------------------------------|-----------------|
+//! | `DctSelect` | dynamic column selection over a shared  DCT matrix (Makhoul fast path) | `r` int32 indices |
+//! | `SvdProj`   | top-r right singular vectors (Jacobi)  | `C×r` floats |
+//! | `BlockPower`| LDAdam block power iteration            | `C×r` floats |
+//! | `RandomSemiOrtho` | QR of a fresh Gaussian             | `C×r` floats |
+//! | `RandPerm`  | random coordinate subset                | `r` int32 indices |
+//!
+//! The shared DCT matrix is counted once per device ([`SharedDct`]), which
+//! is the paper's memory argument: every other method stores a projector
+//! per layer.
+
+mod dct_select;
+mod baselines;
+
+use std::sync::Arc;
+
+use crate::tensor::Matrix;
+
+pub use baselines::{BlockPower, RandPerm, RandomSemiOrtho, SvdProj};
+pub use dct_select::{select_top_columns, DctSelect, SharedDct};
+
+/// Ranking norm for dynamic column selection (§2.1: ℓ1 or ℓ2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RankNorm {
+    L1,
+    L2,
+}
+
+/// Which projection family an optimizer should instantiate.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ProjectionKind {
+    /// DCT dynamic column selection; `use_makhoul` switches the similarity
+    /// computation between the FFT fast path and plain matmul.
+    Dct { norm: RankNorm, use_makhoul: bool },
+    Svd,
+    BlockPower { iters: usize },
+    Random,
+    RandPerm,
+}
+
+impl ProjectionKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ProjectionKind::Dct { .. } => "dct",
+            ProjectionKind::Svd => "svd",
+            ProjectionKind::BlockPower { .. } => "block_power",
+            ProjectionKind::Random => "random",
+            ProjectionKind::RandPerm => "randperm",
+        }
+    }
+
+    /// Construct one layer's projection state for a `R×C` layer at rank `r`.
+    /// `shared_dct` must cover dimension `C` for the DCT kind.
+    pub fn build(
+        &self,
+        cols: usize,
+        rank: usize,
+        shared_dct: Option<Arc<SharedDct>>,
+        seed: u64,
+    ) -> Box<dyn Projection> {
+        let rank = rank.min(cols);
+        match self {
+            ProjectionKind::Dct { norm, use_makhoul } => {
+                let shared = shared_dct.expect("DCT projection needs a SharedDct");
+                assert_eq!(shared.dim(), cols, "shared DCT dim mismatch");
+                Box::new(DctSelect::new(shared, rank, *norm, *use_makhoul))
+            }
+            ProjectionKind::Svd => Box::new(SvdProj::new(cols, rank)),
+            ProjectionKind::BlockPower { iters } => {
+                Box::new(BlockPower::new(cols, rank, *iters))
+            }
+            ProjectionKind::Random => Box::new(RandomSemiOrtho::new(cols, rank, seed)),
+            ProjectionKind::RandPerm => Box::new(RandPerm::new(cols, rank, seed)),
+        }
+    }
+}
+
+/// One layer's projection state.
+pub trait Projection: Send {
+    /// Recompute the subspace from the current gradient/accumulator and
+    /// return the projected matrix `G·Q_r (R×r)` (reusing the similarity
+    /// computation where the method allows — the DCT path selects columns
+    /// of `S` directly instead of re-multiplying).
+    fn refresh_and_project(&mut self, g: &Matrix) -> Matrix;
+
+    /// Project with the *current* subspace (no refresh).
+    fn project(&self, g: &Matrix) -> Matrix;
+
+    /// Back-project `low (R×r)` to the full space: `low · Q_rᵀ (R×C)`.
+    fn back(&self, low: &Matrix) -> Matrix;
+
+    /// Materialize the current basis `Q_r (C×r)`.
+    fn basis(&self) -> Matrix;
+
+    /// Subspace rotation `R = Q_prevᵀ·Q_crt (r×r)` between the previous
+    /// basis and the current one (LDAdam / DCT-AdamW momentum rotation).
+    fn rotation_from(&self, prev_basis: &Matrix) -> Matrix {
+        crate::tensor::matmul_at_b(prev_basis, &self.basis())
+    }
+
+    /// Persistent per-layer state bytes (what lives in optimizer memory
+    /// between steps — *not* transient compute buffers).
+    fn state_bytes(&self) -> u64;
+
+    /// Per-device shared state bytes (counted once across all layers).
+    fn shared_bytes(&self) -> u64 {
+        0
+    }
+
+    fn rank(&self) -> usize;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Reconstruction error `‖G − (G·Q_r)·Q_rᵀ‖F` — Figure 1's metric.
+pub fn reconstruction_error(g: &Matrix, proj: &dyn Projection) -> f64 {
+    let low = proj.project(g);
+    let back = proj.back(&low);
+    g.sub(&back).fro_norm()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{proptest, Pcg64};
+
+    fn all_kinds() -> Vec<ProjectionKind> {
+        vec![
+            ProjectionKind::Dct { norm: RankNorm::L2, use_makhoul: true },
+            ProjectionKind::Dct { norm: RankNorm::L1, use_makhoul: false },
+            ProjectionKind::Svd,
+            ProjectionKind::BlockPower { iters: 3 },
+            ProjectionKind::Random,
+            ProjectionKind::RandPerm,
+        ]
+    }
+
+    #[test]
+    fn prop_back_projection_is_contraction() {
+        // §4.1: for orthonormal bases, ‖G − QrQrᵀG‖ ≤ ‖G‖ (all kinds).
+        proptest::check("projection-contraction", 6, |rng| {
+            let rows = proptest::size(rng, 2, 24);
+            let cols = proptest::size(rng, 4, 32);
+            // SVD-family bases only exist up to min(rows, cols) vectors.
+            let r = proptest::size(rng, 1, cols.min(rows).min(8));
+            let g = Matrix::randn(rows, cols, 1.0, rng);
+            let shared = Arc::new(SharedDct::new(cols));
+            for kind in all_kinds() {
+                let mut p = kind.build(cols, r, Some(shared.clone()), 7);
+                let low = p.refresh_and_project(&g);
+                assert_eq!(low.shape(), (rows, r));
+                let err = reconstruction_error(&g, p.as_ref());
+                assert!(
+                    err <= g.fro_norm() * (1.0 + 1e-4),
+                    "{}: err={} > norm={}",
+                    kind.name(),
+                    err,
+                    g.fro_norm()
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn prop_projection_roundtrip_idempotent() {
+        // back(project(back(project(g)))) == back(project(g)) for
+        // orthonormal bases: projecting twice adds nothing.
+        proptest::check("projection-idempotent", 6, |rng| {
+            let g = Matrix::randn(12, 16, 1.0, rng);
+            let shared = Arc::new(SharedDct::new(16));
+            for kind in all_kinds() {
+                let mut p = kind.build(16, 5, Some(shared.clone()), 3);
+                let low = p.refresh_and_project(&g);
+                let once = p.back(&low);
+                let twice = p.back(&p.project(&once));
+                assert!(
+                    once.max_abs_diff(&twice) < 1e-4,
+                    "{} not idempotent",
+                    kind.name()
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn bases_are_orthonormal() {
+        let mut rng = Pcg64::seed(0);
+        let g = Matrix::randn(20, 24, 1.0, &mut rng);
+        let shared = Arc::new(SharedDct::new(24));
+        for kind in all_kinds() {
+            let mut p = kind.build(24, 6, Some(shared.clone()), 11);
+            p.refresh_and_project(&g);
+            let b = p.basis();
+            let gram = crate::tensor::matmul_at_b(&b, &b);
+            assert!(
+                gram.max_abs_diff(&Matrix::eye(6)) < 1e-3,
+                "{} basis not orthonormal",
+                kind.name()
+            );
+        }
+    }
+
+    #[test]
+    fn dct_memory_is_rank_indices_only() {
+        let shared = Arc::new(SharedDct::new(64));
+        let kind = ProjectionKind::Dct { norm: RankNorm::L2, use_makhoul: true };
+        let p = kind.build(64, 16, Some(shared), 0);
+        assert_eq!(p.state_bytes(), 16 * 4); // r int32 indices
+        assert_eq!(p.shared_bytes(), 64 * 64 * 4); // one DCT matrix
+        // while SVD stores the full projector per layer:
+        let svd = ProjectionKind::Svd.build(64, 16, None, 0);
+        assert_eq!(svd.state_bytes(), 64 * 16 * 4);
+    }
+}

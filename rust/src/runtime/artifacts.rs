@@ -1,0 +1,249 @@
+//! `artifacts/manifest.json` parsing: the contract between `compile/aot.py`
+//! and the rust runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::optim::{LayerMeta, ParamKind};
+use crate::util::json::Json;
+
+/// One tensor in an artifact signature.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "i32"
+}
+
+impl IoSpec {
+    fn parse(v: &Json) -> Result<IoSpec> {
+        Ok(IoSpec {
+            name: v.req("name")?.as_str()?.to_string(),
+            shape: v.req("shape")?.as_shape()?,
+            dtype: v.get("dtype").map(|d| d.as_str().map(str::to_string))
+                .transpose()?
+                .unwrap_or_else(|| "f32".to_string()),
+        })
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One model parameter (ordered) from a fwdbwd artifact's meta.
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub kind: ParamKind,
+}
+
+impl ParamSpec {
+    /// As optimizer layer metadata (1-D tensors become 1×n).
+    pub fn layer_meta(&self) -> LayerMeta {
+        let (rows, cols) = match self.shape.as_slice() {
+            [n] => (1, *n),
+            [r, c] => (*r, *c),
+            s => panic!("unsupported param rank: {s:?}"),
+        };
+        LayerMeta { name: self.name.clone(), rows, cols, kind: self.kind }
+    }
+}
+
+/// Model-level metadata attached to fwdbwd/eval artifacts.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub preset: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+    pub num_params: usize,
+    pub batch_per_worker: usize,
+    pub params: Vec<ParamSpec>,
+}
+
+/// One artifact entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub kind: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    pub meta: BTreeMap<String, Json>,
+}
+
+impl ArtifactSpec {
+    pub fn meta_usize(&self, key: &str) -> Result<usize> {
+        self.meta
+            .get(key)
+            .ok_or_else(|| anyhow!("artifact {} missing meta {key}", self.name))?
+            .as_usize()
+    }
+}
+
+/// The parsed manifest + artifact directory.
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+    pub default_rank: usize,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let root = Json::parse(&text)?;
+        let mut artifacts = Vec::new();
+        for a in root.req("artifacts")?.as_arr()? {
+            let inputs = a.req("inputs")?.as_arr()?.iter()
+                .map(IoSpec::parse).collect::<Result<Vec<_>>>()?;
+            let outputs = a.req("outputs")?.as_arr()?.iter()
+                .map(IoSpec::parse).collect::<Result<Vec<_>>>()?;
+            artifacts.push(ArtifactSpec {
+                name: a.req("name")?.as_str()?.to_string(),
+                file: dir.join(a.req("file")?.as_str()?),
+                kind: a.req("kind")?.as_str()?.to_string(),
+                inputs,
+                outputs,
+                meta: a.req("meta")?.as_obj()?.clone(),
+            });
+        }
+        let default_rank = root
+            .get("defaults")
+            .and_then(|d| d.get("rank"))
+            .map(|r| r.as_usize())
+            .transpose()?
+            .unwrap_or(32);
+        Ok(Manifest { dir, artifacts, default_rank })
+    }
+
+    pub fn find(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))
+    }
+
+    /// Model spec for a preset (from its fwdbwd artifact meta).
+    pub fn model_spec(&self, preset: &str) -> Result<ModelSpec> {
+        let art = self.find(&format!("fwdbwd_{preset}"))?;
+        let meta = &art.meta;
+        let get = |k: &str| -> Result<usize> {
+            meta.get(k)
+                .ok_or_else(|| anyhow!("missing meta {k}"))?
+                .as_usize()
+        };
+        let mut params = Vec::new();
+        for p in meta
+            .get("params")
+            .ok_or_else(|| anyhow!("missing params meta"))?
+            .as_arr()?
+        {
+            params.push(ParamSpec {
+                name: p.req("name")?.as_str()?.to_string(),
+                shape: p.req("shape")?.as_shape()?,
+                kind: ParamKind::parse(p.req("kind")?.as_str()?),
+            });
+        }
+        if params.is_empty() {
+            bail!("preset {preset} has no params");
+        }
+        Ok(ModelSpec {
+            preset: preset.to_string(),
+            d_model: get("d_model")?,
+            n_layers: get("n_layers")?,
+            seq_len: get("seq_len")?,
+            vocab: get("vocab")?,
+            num_params: get("num_params")?,
+            batch_per_worker: get("batch_per_worker")?,
+            params,
+        })
+    }
+
+    /// Per-layer optimizer update artifact for an oriented shape, if one
+    /// was exported (`trion_{R}x{C}_r{r}` / `dctadamw_…` / `dion_…`).
+    pub fn optimizer_graph(
+        &self,
+        family: &str,
+        rows: usize,
+        cols: usize,
+        rank: usize,
+    ) -> Option<&ArtifactSpec> {
+        let name = format!("{family}_{rows}x{cols}_r{rank}");
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    pub fn presets(&self) -> Vec<String> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == "fwdbwd")
+            .map(|a| a.name.trim_start_matches("fwdbwd_").to_string())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_dir() -> PathBuf {
+        // tests run from the crate root
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let m = Manifest::load(manifest_dir()).expect("make artifacts first");
+        assert!(m.artifacts.len() >= 10);
+        assert!(m.presets().contains(&"nano".to_string()));
+    }
+
+    #[test]
+    fn model_spec_roundtrip() {
+        let m = Manifest::load(manifest_dir()).unwrap();
+        let spec = m.model_spec("nano").unwrap();
+        assert_eq!(spec.d_model, 64);
+        assert_eq!(spec.params[0].name, "embed");
+        assert_eq!(spec.params[0].kind, ParamKind::Embed);
+        let total: usize = spec.params.iter().map(|p| p.shape.iter().product::<usize>()).sum();
+        assert_eq!(total, spec.num_params);
+    }
+
+    #[test]
+    fn fwdbwd_signature_consistent() {
+        let m = Manifest::load(manifest_dir()).unwrap();
+        let spec = m.model_spec("nano").unwrap();
+        let art = m.find("fwdbwd_nano").unwrap();
+        // inputs = params + tokens; outputs = loss + grads
+        assert_eq!(art.inputs.len(), spec.params.len() + 1);
+        assert_eq!(art.outputs.len(), spec.params.len() + 1);
+        assert_eq!(art.inputs.last().unwrap().dtype, "i32");
+        assert_eq!(art.outputs[0].shape, Vec::<usize>::new());
+    }
+
+    #[test]
+    fn optimizer_graph_lookup() {
+        let m = Manifest::load(manifest_dir()).unwrap();
+        let r = m.default_rank;
+        assert!(m.optimizer_graph("trion", 64, 64, r).is_some());
+        assert!(m.optimizer_graph("trion", 7, 7, r).is_none());
+    }
+
+    #[test]
+    fn layer_meta_from_param_spec() {
+        let p = ParamSpec {
+            name: "n".into(),
+            shape: vec![64],
+            kind: ParamKind::Norm,
+        };
+        let meta = p.layer_meta();
+        assert_eq!((meta.rows, meta.cols), (1, 64));
+    }
+}

@@ -1,0 +1,245 @@
+//! PJRT client wrapper: compile HLO text once, execute many times.
+//!
+//! One process-wide CPU client (PJRT client construction is expensive and
+//! the CPU plugin is a singleton anyway); [`Executable`]s are cheap handles
+//! around `PjRtLoadedExecutable` plus their manifest signature, with
+//! Matrix⇄Literal conversion and shape checking at the boundary.
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Matrix;
+
+use super::artifacts::{ArtifactSpec, IoSpec};
+
+/// PJRT CPU client handle.
+///
+/// `xla::PjRtClient` is `Rc`-backed (not `Send`), so the runtime — and
+/// everything holding executables — lives on one thread. The coordinator's
+/// "workers" are therefore *simulated* (cooperatively scheduled on the
+/// driver thread) rather than OS threads; on this 1-core testbed that is
+/// also the faster design (DESIGN.md §Hardware-Adaptation).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn new() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an artifact's HLO text into an executable.
+    pub fn load(&self, spec: &ArtifactSpec) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(&spec.file)
+            .with_context(|| format!("parsing HLO text {:?}", spec.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {}", spec.name))?;
+        Ok(Executable {
+            exe,
+            name: spec.name.clone(),
+            inputs: spec.inputs.clone(),
+            outputs: spec.outputs.clone(),
+        })
+    }
+}
+
+/// A runtime input value.
+pub enum Value {
+    F32(Matrix),
+    I32(Vec<i32>, Vec<usize>), // data + shape
+    Scalar(f32),
+}
+
+impl Value {
+    pub fn tokens(data: Vec<i32>, shape: Vec<usize>) -> Value {
+        Value::I32(data, shape)
+    }
+
+    fn to_literal(&self, spec: &IoSpec) -> Result<xla::Literal> {
+        match self {
+            Value::F32(m) => {
+                if m.len() != spec.elements() {
+                    bail!(
+                        "input {}: got {} elements, artifact wants {:?}",
+                        spec.name, m.len(), spec.shape
+                    );
+                }
+                let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+                Ok(xla::Literal::vec1(&m.data).reshape(&dims)?)
+            }
+            Value::I32(data, shape) => {
+                if data.len() != spec.elements() || shape != &spec.shape {
+                    bail!(
+                        "input {}: got shape {shape:?}, artifact wants {:?}",
+                        spec.name, spec.shape
+                    );
+                }
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                Ok(xla::Literal::vec1(data.as_slice()).reshape(&dims)?)
+            }
+            Value::Scalar(v) => Ok(xla::Literal::from(*v)),
+        }
+    }
+}
+
+/// A compiled artifact with typed execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+/// Outputs come back as matrices (scalars are 1×1; int32 outputs are
+/// converted to f32 matrices holding the integer values — index lists).
+pub struct Outputs {
+    pub values: Vec<Matrix>,
+}
+
+impl Outputs {
+    pub fn scalar(&self, i: usize) -> f32 {
+        self.values[i].data[0]
+    }
+
+    /// Interpret output `i` as an index list.
+    pub fn indices(&self, i: usize) -> Vec<usize> {
+        self.values[i].data.iter().map(|&v| v as usize).collect()
+    }
+}
+
+impl Executable {
+    /// Execute with positional inputs matching the manifest signature.
+    pub fn run(&self, inputs: &[Value]) -> Result<Outputs> {
+        if inputs.len() != self.inputs.len() {
+            bail!(
+                "{}: got {} inputs, artifact wants {}",
+                self.name, inputs.len(), self.inputs.len()
+            );
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .zip(&self.inputs)
+            .map(|(v, spec)| v.to_literal(spec))
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True → always a tuple.
+        let parts = result.to_tuple()?;
+        if parts.len() != self.outputs.len() {
+            bail!(
+                "{}: got {} outputs, manifest says {}",
+                self.name, parts.len(), self.outputs.len()
+            );
+        }
+        let mut values = Vec::with_capacity(parts.len());
+        for (lit, spec) in parts.into_iter().zip(&self.outputs) {
+            let (rows, cols) = match spec.shape.as_slice() {
+                [] => (1, 1),
+                [n] => (1, *n),
+                [r, c] => (*r, *c),
+                s => bail!("output {} has unsupported rank {s:?}", spec.name),
+            };
+            let data: Vec<f32> = if spec.dtype == "i32" {
+                lit.to_vec::<i32>()?.into_iter().map(|v| v as f32).collect()
+            } else {
+                lit.to_vec::<f32>()?
+            };
+            values.push(Matrix::from_vec(rows, cols, data));
+        }
+        Ok(Outputs { values })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+    use std::path::PathBuf;
+
+    fn manifest() -> Manifest {
+        Manifest::load(PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+            .expect("make artifacts first")
+    }
+
+    #[test]
+    fn kernel_dct2_matrix_matches_rust() {
+        let m = manifest();
+        let rt = Runtime::new().unwrap();
+        let exe = rt.load(m.find("kernel_dct2_matrix").unwrap()).unwrap();
+        let out = exe.run(&[]).unwrap();
+        let q_jax = &out.values[0];
+        let q_rust = crate::fft::dct2_matrix(q_jax.rows);
+        assert!(q_jax.max_abs_diff(&q_rust) < 1e-5);
+    }
+
+    #[test]
+    fn kernel_similarity_norms_matches_rust() {
+        let m = manifest();
+        let rt = Runtime::new().unwrap();
+        let spec = m.find("kernel_dct_similarity_norms").unwrap();
+        let (r, c) = (spec.inputs[0].shape[0], spec.inputs[0].shape[1]);
+        let mut rng = crate::util::Pcg64::seed(0);
+        let g = Matrix::randn(r, c, 1.0, &mut rng);
+        let q = crate::fft::dct2_matrix(c);
+        let exe = rt.load(spec).unwrap();
+        let out = exe
+            .run(&[Value::F32(g.clone()), Value::F32(q.clone())])
+            .unwrap();
+        // pallas kernel (AOT, via PJRT) vs rust-native matmul + norms
+        let s_rust = crate::tensor::matmul(&g, &q);
+        assert!(out.values[0].max_abs_diff(&s_rust) < 1e-4);
+        let norms_rust = s_rust.col_l2_norms();
+        for (a, b) in out.values[1].data.iter().zip(&norms_rust) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn kernel_makhoul_matches_rust_fft() {
+        let m = manifest();
+        let rt = Runtime::new().unwrap();
+        let spec = m.find("kernel_makhoul_dct2").unwrap();
+        let (r, c) = (spec.inputs[0].shape[0], spec.inputs[0].shape[1]);
+        let mut rng = crate::util::Pcg64::seed(1);
+        let g = Matrix::randn(r, c, 1.0, &mut rng);
+        let exe = rt.load(spec).unwrap();
+        let out = exe.run(&[Value::F32(g.clone())]).unwrap();
+        let s_rust = crate::fft::dct2_rows(&g);
+        assert!(out.values[0].max_abs_diff(&s_rust) < 1e-4);
+    }
+
+    #[test]
+    fn kernel_newton_schulz_matches_rust() {
+        let m = manifest();
+        let rt = Runtime::new().unwrap();
+        let spec = m.find("kernel_newton_schulz").unwrap();
+        let (r, k) = (spec.inputs[0].shape[0], spec.inputs[0].shape[1]);
+        let mut rng = crate::util::Pcg64::seed(2);
+        let x = Matrix::randn(r, k, 1.0, &mut rng);
+        let exe = rt.load(spec).unwrap();
+        let out = exe.run(&[Value::F32(x.clone())]).unwrap();
+        let o_rust = crate::linalg::newton_schulz(&x, 5);
+        assert!(
+            out.values[0].max_abs_diff(&o_rust) < 1e-3,
+            "err={}",
+            out.values[0].max_abs_diff(&o_rust)
+        );
+    }
+
+    #[test]
+    fn input_shape_mismatch_rejected() {
+        let m = manifest();
+        let rt = Runtime::new().unwrap();
+        let exe = rt.load(m.find("kernel_newton_schulz").unwrap()).unwrap();
+        let bad = Matrix::zeros(3, 3);
+        assert!(exe.run(&[Value::F32(bad)]).is_err());
+        assert!(exe.run(&[]).is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! PJRT runtime: load the AOT HLO-text artifacts and execute them from the
+//! rust training loop. Python never runs here — `artifacts/manifest.json`
+//! (written once by `python -m compile.aot`) is the entire contract.
+
+pub mod artifacts;
+pub mod client;
+
+pub use artifacts::{ArtifactSpec, Manifest, ModelSpec, ParamSpec};
+pub use client::{Executable, Runtime};

@@ -1,0 +1,129 @@
+//! bfloat16 storage emulation.
+//!
+//! The paper's Table 5 compares Makhoul-in-float32 against matmul-in-bfloat16
+//! (PyTorch lacks complex-bf16, so the FFT path is fp32-only). We reproduce
+//! the *storage* semantics exactly — round-to-nearest-even truncation of the
+//! mantissa — and model the bf16 throughput advantage in the bench harness
+//! (DESIGN.md §Hardware-Adaptation: no bf16 ALUs on this CPU).
+
+use super::Matrix;
+
+/// f32 → bf16 bits with round-to-nearest-even.
+#[inline]
+pub fn f32_to_bf16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) | 0x0040) as u16; // quiet the NaN
+    }
+    let lsb = (bits >> 16) & 1;
+    (bits.wrapping_add(0x0000_7FFF + lsb) >> 16) as u16
+}
+
+/// bf16 bits → f32 (exact).
+#[inline]
+pub fn bf16_bits_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// Round a value through bf16 storage.
+#[inline]
+pub fn round_bf16(x: f32) -> f32 {
+    bf16_bits_to_f32(f32_to_bf16_bits(x))
+}
+
+/// A matrix stored in bf16 (2 bytes/element) that computes in f32.
+#[derive(Clone, Debug)]
+pub struct Bf16Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<u16>,
+}
+
+impl Bf16Matrix {
+    pub fn from_f32(m: &Matrix) -> Self {
+        Bf16Matrix {
+            rows: m.rows,
+            cols: m.cols,
+            data: m.data.iter().map(|&v| f32_to_bf16_bits(v)).collect(),
+        }
+    }
+
+    pub fn to_f32(&self) -> Matrix {
+        Matrix::from_vec(
+            self.rows,
+            self.cols,
+            self.data.iter().map(|&b| bf16_bits_to_f32(b)).collect(),
+        )
+    }
+
+    pub fn bytes(&self) -> u64 {
+        (self.data.len() * 2) as u64
+    }
+}
+
+/// `A·B` where both operands are bf16-stored (computed in f32, result
+/// rounded back through bf16 — mirrors tensor-core accumulate-then-store).
+pub fn matmul_bf16(a: &Bf16Matrix, b: &Bf16Matrix) -> Matrix {
+    let af = a.to_f32();
+    let bf = b.to_f32();
+    let mut c = super::matmul(&af, &bf);
+    for v in &mut c.data {
+        *v = round_bf16(*v);
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn exact_for_representable_values() {
+        for v in [0.0f32, 1.0, -2.0, 0.5, 256.0, -0.125] {
+            assert_eq!(round_bf16(v), v);
+        }
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        let mut rng = Pcg64::seed(0);
+        for _ in 0..1000 {
+            let x = (rng.normal_f32()) * 100.0;
+            if x == 0.0 {
+                continue;
+            }
+            let r = round_bf16(x);
+            // bf16 has 8 significand bits → rel err ≤ 2^-8
+            assert!(((r - x) / x).abs() <= 1.0 / 256.0 + 1e-7, "x={x} r={r}");
+        }
+    }
+
+    #[test]
+    fn nan_and_inf_preserved() {
+        assert!(round_bf16(f32::NAN).is_nan());
+        assert_eq!(round_bf16(f32::INFINITY), f32::INFINITY);
+        assert_eq!(round_bf16(f32::NEG_INFINITY), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn roundtrip_matrix_halves_storage() {
+        let mut rng = Pcg64::seed(1);
+        let m = Matrix::randn(13, 17, 1.0, &mut rng);
+        let b = Bf16Matrix::from_f32(&m);
+        assert_eq!(b.bytes() * 2, m.bytes());
+        let back = b.to_f32();
+        assert!(m.max_abs_diff(&back) < 0.02);
+    }
+
+    #[test]
+    fn bf16_matmul_close_to_f32() {
+        let mut rng = Pcg64::seed(2);
+        let a = Matrix::randn(20, 30, 1.0, &mut rng);
+        let b = Matrix::randn(30, 10, 1.0, &mut rng);
+        let exact = super::super::matmul(&a, &b);
+        let approx = matmul_bf16(&Bf16Matrix::from_f32(&a), &Bf16Matrix::from_f32(&b));
+        let scale = exact.abs_max().max(1.0);
+        assert!(exact.max_abs_diff(&approx) / scale < 0.05);
+    }
+}

@@ -1,0 +1,245 @@
+//! Row-major f32 matrix with the small op surface the optimizers need.
+
+use crate::util::Pcg64;
+
+/// Dense row-major matrix. `data.len() == rows * cols`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        Self::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    pub fn randn(rows: usize, cols: usize, std: f32, rng: &mut Pcg64) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        rng.fill_normal(&mut m.data, std);
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness on big matrices.
+        const B: usize = 32;
+        for ib in (0..self.rows).step_by(B) {
+            for jb in (0..self.cols).step_by(B) {
+                for i in ib..(ib + B).min(self.rows) {
+                    for j in jb..(jb + B).min(self.cols) {
+                        out.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Select columns: `self[:, idx]`.
+    pub fn select_columns(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, idx.len());
+        for i in 0..self.rows {
+            let src = self.row(i);
+            let dst = out.row_mut(i);
+            for (k, &j) in idx.iter().enumerate() {
+                dst[k] = src[j];
+            }
+        }
+        out
+    }
+
+    // -- elementwise / reductions ---------------------------------------
+
+    pub fn scale(&mut self, a: f32) {
+        for v in &mut self.data {
+            *v *= a;
+        }
+    }
+
+    pub fn scaled(&self, a: f32) -> Matrix {
+        let mut out = self.clone();
+        out.scale(a);
+        out
+    }
+
+    /// `self += a * other`.
+    pub fn axpy(&mut self, a: f32, other: &Matrix) {
+        assert_eq!(self.shape(), other.shape());
+        for (x, y) in self.data.iter_mut().zip(&other.data) {
+            *x += a * y;
+        }
+    }
+
+    pub fn add(&self, other: &Matrix) -> Matrix {
+        let mut out = self.clone();
+        out.axpy(1.0, other);
+        out
+    }
+
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        let mut out = self.clone();
+        out.axpy(-1.0, other);
+        out
+    }
+
+    pub fn fro_norm_sq(&self) -> f64 {
+        self.data.iter().map(|&v| (v as f64) * (v as f64)).sum()
+    }
+
+    pub fn fro_norm(&self) -> f64 {
+        self.fro_norm_sq().sqrt()
+    }
+
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+    }
+
+    /// Per-column ℓ2 norms.
+    pub fn col_l2_norms(&self) -> Vec<f32> {
+        let mut acc = vec![0.0f64; self.cols];
+        for i in 0..self.rows {
+            let row = self.row(i);
+            for (a, &v) in acc.iter_mut().zip(row) {
+                *a += (v as f64) * (v as f64);
+            }
+        }
+        acc.into_iter().map(|v| v.sqrt() as f32).collect()
+    }
+
+    /// Per-column ℓ1 norms.
+    pub fn col_l1_norms(&self) -> Vec<f32> {
+        let mut acc = vec![0.0f64; self.cols];
+        for i in 0..self.rows {
+            let row = self.row(i);
+            for (a, &v) in acc.iter_mut().zip(row) {
+                *a += v.abs() as f64;
+            }
+        }
+        acc.into_iter().map(|v| v as f32).collect()
+    }
+
+    /// Max absolute elementwise difference (test helper).
+    pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0f32, |m, (&a, &b)| m.max((a - b).abs()))
+    }
+
+    /// Memory footprint of the buffer in bytes (for the memory reports).
+    pub fn bytes(&self) -> u64 {
+        (self.data.len() * std::mem::size_of::<f32>()) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_indexing() {
+        let m = Matrix::from_fn(2, 3, |i, j| (i * 10 + j) as f32);
+        assert_eq!(m.at(1, 2), 12.0);
+        assert_eq!(m.row(1), &[10.0, 11.0, 12.0]);
+        assert_eq!(m.shape(), (2, 3));
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Pcg64::seed(0);
+        let m = Matrix::randn(37, 53, 1.0, &mut rng);
+        let tt = m.transpose().transpose();
+        assert_eq!(m, tt);
+        assert_eq!(m.at(3, 7), m.transpose().at(7, 3));
+    }
+
+    #[test]
+    fn select_columns_matches_manual() {
+        let m = Matrix::from_fn(3, 5, |i, j| (i * 5 + j) as f32);
+        let s = m.select_columns(&[4, 0, 2]);
+        assert_eq!(s.row(1), &[9.0, 5.0, 7.0]);
+    }
+
+    #[test]
+    fn axpy_and_norms() {
+        let mut a = Matrix::from_vec(1, 3, vec![1.0, 2.0, 2.0]);
+        let b = Matrix::from_vec(1, 3, vec![1.0, 1.0, 1.0]);
+        a.axpy(2.0, &b);
+        assert_eq!(a.data, vec![3.0, 4.0, 4.0]);
+        assert!((a.fro_norm() - (41.0f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn column_norms() {
+        let m = Matrix::from_vec(2, 2, vec![3.0, -1.0, 4.0, 1.0]);
+        let l2 = m.col_l2_norms();
+        assert!((l2[0] - 5.0).abs() < 1e-6);
+        let l1 = m.col_l1_norms();
+        assert!((l1[1] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn eye_is_identity_under_select() {
+        let e = Matrix::eye(4);
+        let sel = e.select_columns(&[2, 3]);
+        assert_eq!(sel.at(2, 0), 1.0);
+        assert_eq!(sel.at(3, 1), 1.0);
+        assert_eq!(sel.at(0, 0), 0.0);
+    }
+}

@@ -1,0 +1,14 @@
+//! Dense row-major f32 matrix substrate.
+//!
+//! Everything numeric in the coordinator (optimizers, projections, FFT,
+//! collectives) operates on [`Matrix`]. The design goal is a small, fully
+//! owned BLAS-free kernel set whose hot paths (blocked matmul, axpy-style
+//! elementwise) are cache-tiled for the single-core testbed; see
+//! EXPERIMENTS.md §Perf for measured throughput.
+
+mod matrix;
+mod ops;
+pub mod bf16;
+
+pub use matrix::Matrix;
+pub use ops::{matmul, matmul_at_b, matmul_a_bt};

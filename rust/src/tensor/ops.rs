@@ -1,0 +1,179 @@
+//! Matmul kernels: blocked, transpose-aware, single-core cache-tiled.
+//!
+//! Three entry points cover every multiplication the optimizers perform
+//! without materializing transposes:
+//!
+//! * [`matmul`]      — `C = A·B`
+//! * [`matmul_at_b`] — `C = Aᵀ·B`   (e.g. Gram matrices `XᵀX`)
+//! * [`matmul_a_bt`] — `C = A·Bᵀ`   (e.g. back-projection `b_t·Q_rᵀ`)
+//!
+//! The inner loop is an i-k-j kernel over row-major data: the `k`-loop
+//! broadcasts `A[i,k]` and runs a unit-stride fused multiply-add over the
+//! `B` row, which autovectorizes well; blocking keeps the `B` panel in L2.
+
+use super::Matrix;
+
+/// Panel size (rows of A / rows of B per block). 64×cols f32 panels stay
+/// well inside L2 for the layer sizes we train (cols ≤ ~1k).
+const BLOCK_K: usize = 64;
+const BLOCK_I: usize = 64;
+
+/// `A (m×k) · B (k×n) → (m×n)`.
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows, "matmul shape mismatch: {:?}·{:?}", a.shape(), b.shape());
+    let (m, kdim, n) = (a.rows, a.cols, b.cols);
+    let mut c = Matrix::zeros(m, n);
+    for ib in (0..m).step_by(BLOCK_I) {
+        let i_end = (ib + BLOCK_I).min(m);
+        for kb in (0..kdim).step_by(BLOCK_K) {
+            let k_end = (kb + BLOCK_K).min(kdim);
+            for i in ib..i_end {
+                let a_row = a.row(i);
+                let c_row = &mut c.data[i * n..(i + 1) * n];
+                for k in kb..k_end {
+                    let aik = a_row[k];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let b_row = &b.data[k * n..(k + 1) * n];
+                    for (cv, bv) in c_row.iter_mut().zip(b_row) {
+                        *cv += aik * bv;
+                    }
+                }
+            }
+        }
+    }
+    c
+}
+
+/// `Aᵀ (k×m)ᵀ · B (k×n) → (m×n)` — A is stored (k×m); result is m×n.
+pub fn matmul_at_b(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.rows, b.rows, "matmul_at_b shape mismatch");
+    let (kdim, m, n) = (a.rows, a.cols, b.cols);
+    let mut c = Matrix::zeros(m, n);
+    // k is the outer loop: both A and B rows are unit-stride.
+    for k in 0..kdim {
+        let a_row = a.row(k);
+        let b_row = b.row(k);
+        for i in 0..m {
+            let aki = a_row[i];
+            if aki == 0.0 {
+                continue;
+            }
+            let c_row = &mut c.data[i * n..(i + 1) * n];
+            for (cv, bv) in c_row.iter_mut().zip(b_row) {
+                *cv += aki * bv;
+            }
+        }
+    }
+    c
+}
+
+/// `A (m×k) · Bᵀ (n×k)ᵀ → (m×n)` — B is stored (n×k).
+pub fn matmul_a_bt(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.cols, "matmul_a_bt shape mismatch");
+    let (m, kdim, n) = (a.rows, a.cols, b.rows);
+    let mut c = Matrix::zeros(m, n);
+    for i in 0..m {
+        let a_row = a.row(i);
+        let c_row = &mut c.data[i * n..(i + 1) * n];
+        for j in 0..n {
+            let b_row = b.row(j);
+            let mut acc = 0.0f32;
+            // dot product over unit-stride rows
+            let mut kk = 0;
+            while kk + 4 <= kdim {
+                acc += a_row[kk] * b_row[kk]
+                    + a_row[kk + 1] * b_row[kk + 1]
+                    + a_row[kk + 2] * b_row[kk + 2]
+                    + a_row[kk + 3] * b_row[kk + 3];
+                kk += 4;
+            }
+            while kk < kdim {
+                acc += a_row[kk] * b_row[kk];
+                kk += 1;
+            }
+            c_row[j] = acc;
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{proptest, Pcg64};
+
+    fn naive(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut acc = 0.0f64;
+                for k in 0..a.cols {
+                    acc += (a.at(i, k) as f64) * (b.at(k, j) as f64);
+                }
+                *c.at_mut(i, j) = acc as f32;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_matches_naive_small() {
+        let a = Matrix::from_fn(3, 4, |i, j| (i + j) as f32);
+        let b = Matrix::from_fn(4, 2, |i, j| (i as f32) - (j as f32));
+        assert_eq!(matmul(&a, &b), naive(&a, &b));
+    }
+
+    #[test]
+    fn prop_matmul_matches_naive() {
+        proptest::check("matmul==naive", 12, |rng| {
+            let m = proptest::size(rng, 1, 70);
+            let k = proptest::size(rng, 1, 70);
+            let n = proptest::size(rng, 1, 70);
+            let a = Matrix::randn(m, k, 1.0, rng);
+            let b = Matrix::randn(k, n, 1.0, rng);
+            let diff = matmul(&a, &b).max_abs_diff(&naive(&a, &b));
+            assert!(diff < 1e-3, "diff={diff}");
+        });
+    }
+
+    #[test]
+    fn prop_transposed_variants_consistent() {
+        proptest::check("at_b/a_bt==explicit", 12, |rng| {
+            let m = proptest::size(rng, 1, 40);
+            let k = proptest::size(rng, 1, 40);
+            let n = proptest::size(rng, 1, 40);
+            let a = Matrix::randn(k, m, 1.0, rng); // stored kxm
+            let b = Matrix::randn(k, n, 1.0, rng);
+            let got = matmul_at_b(&a, &b);
+            let want = matmul(&a.transpose(), &b);
+            assert!(got.max_abs_diff(&want) < 1e-3);
+
+            let a2 = Matrix::randn(m, k, 1.0, rng);
+            let b2 = Matrix::randn(n, k, 1.0, rng); // stored nxk
+            let got2 = matmul_a_bt(&a2, &b2);
+            let want2 = matmul(&a2, &b2.transpose());
+            assert!(got2.max_abs_diff(&want2) < 1e-3);
+        });
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Pcg64::seed(4);
+        let a = Matrix::randn(9, 9, 1.0, &mut rng);
+        assert!(matmul(&a, &Matrix::eye(9)).max_abs_diff(&a) < 1e-6);
+        assert!(matmul(&Matrix::eye(9), &a).max_abs_diff(&a) < 1e-6);
+    }
+
+    #[test]
+    fn associativity_within_tolerance() {
+        let mut rng = Pcg64::seed(5);
+        let a = Matrix::randn(12, 7, 1.0, &mut rng);
+        let b = Matrix::randn(7, 9, 1.0, &mut rng);
+        let c = Matrix::randn(9, 5, 1.0, &mut rng);
+        let left = matmul(&matmul(&a, &b), &c);
+        let right = matmul(&a, &matmul(&b, &c));
+        assert!(left.max_abs_diff(&right) < 1e-3);
+    }
+}

@@ -1,0 +1,86 @@
+//! Parameter checkpointing: a minimal binary format (magic, count, per-
+//! tensor rows/cols + f32 payload, little-endian) so the fine-tuning
+//! experiments can load the pre-trained weights the pre-training runs save.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Matrix;
+
+const MAGIC: &[u8; 8] = b"FFTSUBv1";
+
+pub fn save(path: impl AsRef<Path>, params: &[Matrix]) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&(params.len() as u32).to_le_bytes())?;
+    for p in params {
+        f.write_all(&(p.rows as u32).to_le_bytes())?;
+        f.write_all(&(p.cols as u32).to_le_bytes())?;
+        for &v in &p.data {
+            f.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+pub fn load(path: impl AsRef<Path>) -> Result<Vec<Matrix>> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path.as_ref())
+            .with_context(|| format!("opening checkpoint {:?}", path.as_ref()))?,
+    );
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("bad checkpoint magic");
+    }
+    let mut u32buf = [0u8; 4];
+    f.read_exact(&mut u32buf)?;
+    let count = u32::from_le_bytes(u32buf) as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        f.read_exact(&mut u32buf)?;
+        let rows = u32::from_le_bytes(u32buf) as usize;
+        f.read_exact(&mut u32buf)?;
+        let cols = u32::from_le_bytes(u32buf) as usize;
+        let mut data = vec![0f32; rows * cols];
+        let mut fbuf = [0u8; 4];
+        for v in &mut data {
+            f.read_exact(&mut fbuf)?;
+            *v = f32::from_le_bytes(fbuf);
+        }
+        out.push(Matrix::from_vec(rows, cols, data));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Pcg64::seed(0);
+        let params = vec![
+            Matrix::randn(3, 5, 1.0, &mut rng),
+            Matrix::randn(1, 7, 1.0, &mut rng),
+        ];
+        let path = std::env::temp_dir().join("fft_subspace_ckpt_test.bin");
+        save(&path, &params).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(params, back);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = std::env::temp_dir().join("fft_subspace_ckpt_bad.bin");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(load(&path).is_err());
+    }
+}

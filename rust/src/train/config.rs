@@ -1,0 +1,222 @@
+//! Run configuration: everything a training run needs, with paper-matching
+//! defaults. Parsed from CLI flags (no config-file dependency offline, but
+//! `to_json`/`from_json` round-trips so runs are recorded reproducibly).
+
+use anyhow::Result;
+
+use crate::optim::common::EfMode;
+use crate::optim::{OptimizerConfig, OptimizerKind};
+use crate::projection::{ProjectionKind, RankNorm};
+use crate::util::json::{num, obj, s, Json};
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub preset: String,
+    pub optimizer: OptimizerKind,
+    pub steps: usize,
+    pub lr: f32,
+    pub warmup: usize,
+    pub weight_decay: f32,
+    pub workers: usize,
+    pub batch_per_worker: usize,
+    pub grad_clip: f32,
+    pub seed: u64,
+    pub eval_every: usize,
+    pub eval_batches: usize,
+    pub corpus_tokens: usize,
+    pub out_dir: String,
+    pub run_name: String,
+    pub opt: OptimizerConfig,
+    /// Execute per-layer optimizer updates through the AOT HLO graphs where
+    /// a matching artifact exists (three-layer composition) instead of the
+    /// rust-native math.
+    pub use_aot_optimizer: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            preset: "nano".into(),
+            optimizer: OptimizerKind::Trion,
+            steps: 200,
+            lr: 0.01, // Dion/Trion optimum reported by the paper
+            warmup: 20,
+            weight_decay: 0.01,
+            workers: 4,
+            batch_per_worker: 8,
+            grad_clip: 1.0,
+            seed: 42,
+            eval_every: 50,
+            eval_batches: 8,
+            corpus_tokens: 1 << 20,
+            out_dir: "runs".into(),
+            run_name: String::new(),
+            opt: OptimizerConfig::default(),
+            use_aot_optimizer: false,
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn run_name(&self) -> String {
+        if self.run_name.is_empty() {
+            format!(
+                "{}_{}_r{}_s{}",
+                self.preset,
+                self.optimizer.name(),
+                self.opt.rank,
+                self.seed
+            )
+        } else {
+            self.run_name.clone()
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let proj = match &self.opt.projection {
+            ProjectionKind::Dct { norm, use_makhoul } => format!(
+                "dct:{}:{}",
+                if *norm == RankNorm::L1 { "l1" } else { "l2" },
+                if *use_makhoul { "fft" } else { "matmul" }
+            ),
+            ProjectionKind::Svd => "svd".into(),
+            ProjectionKind::BlockPower { iters } => format!("block_power:{iters}"),
+            ProjectionKind::Random => "random".into(),
+            ProjectionKind::RandPerm => "randperm".into(),
+        };
+        obj(vec![
+            ("preset", s(&self.preset)),
+            ("optimizer", s(self.optimizer.name())),
+            ("steps", num(self.steps as f64)),
+            ("lr", num(self.lr as f64)),
+            ("warmup", num(self.warmup as f64)),
+            ("weight_decay", num(self.weight_decay as f64)),
+            ("workers", num(self.workers as f64)),
+            ("batch_per_worker", num(self.batch_per_worker as f64)),
+            ("grad_clip", num(self.grad_clip as f64)),
+            ("seed", num(self.seed as f64)),
+            ("rank", num(self.opt.rank as f64)),
+            ("mu", num(self.opt.mu as f64)),
+            ("update_interval", num(self.opt.update_interval as f64)),
+            ("projection", s(&proj)),
+            (
+                "ef_mode",
+                s(match self.opt.ef_mode {
+                    EfMode::None => "none",
+                    EfMode::F32 => "f32",
+                    EfMode::Q8 => "q8",
+                }),
+            ),
+            ("use_aot_optimizer", Json::Bool(self.use_aot_optimizer)),
+        ])
+    }
+
+    /// Parse a `key=value` override (CLI plumbing).
+    pub fn apply(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "preset" => self.preset = value.into(),
+            "optimizer" => {
+                self.optimizer = OptimizerKind::parse(value)
+                    .ok_or_else(|| anyhow::anyhow!("unknown optimizer {value}"))?
+            }
+            "steps" => self.steps = value.parse()?,
+            "lr" => self.lr = value.parse()?,
+            "warmup" => self.warmup = value.parse()?,
+            "weight-decay" | "weight_decay" => self.weight_decay = value.parse()?,
+            "workers" => self.workers = value.parse()?,
+            "batch-per-worker" | "batch_per_worker" => {
+                self.batch_per_worker = value.parse()?
+            }
+            "grad-clip" | "grad_clip" => self.grad_clip = value.parse()?,
+            "seed" => {
+                self.seed = value.parse()?;
+                self.opt.seed = self.seed;
+            }
+            "eval-every" | "eval_every" => self.eval_every = value.parse()?,
+            "eval-batches" | "eval_batches" => self.eval_batches = value.parse()?,
+            "corpus-tokens" | "corpus_tokens" => self.corpus_tokens = value.parse()?,
+            "out-dir" | "out_dir" => self.out_dir = value.into(),
+            "run-name" | "run_name" => self.run_name = value.into(),
+            "rank" => self.opt.rank = value.parse()?,
+            "mu" => self.opt.mu = value.parse()?,
+            "ns-steps" | "ns_steps" => self.opt.ns_steps = value.parse()?,
+            "update-interval" | "update_interval" => {
+                self.opt.update_interval = value.parse()?
+            }
+            "instrument" => self.opt.instrument = value.parse()?,
+            "use-aot-optimizer" | "use_aot_optimizer" => {
+                self.use_aot_optimizer = value.parse()?
+            }
+            "projection" => {
+                self.opt.projection = match value {
+                    "svd" => ProjectionKind::Svd,
+                    "random" => ProjectionKind::Random,
+                    "randperm" => ProjectionKind::RandPerm,
+                    "block_power" | "block-power" => {
+                        ProjectionKind::BlockPower { iters: 2 }
+                    }
+                    "dct" | "dct:l2:fft" => ProjectionKind::Dct {
+                        norm: RankNorm::L2,
+                        use_makhoul: true,
+                    },
+                    "dct:l1" => ProjectionKind::Dct {
+                        norm: RankNorm::L1,
+                        use_makhoul: true,
+                    },
+                    "dct:l2:matmul" => ProjectionKind::Dct {
+                        norm: RankNorm::L2,
+                        use_makhoul: false,
+                    },
+                    _ => anyhow::bail!("unknown projection {value}"),
+                }
+            }
+            "ef-mode" | "ef_mode" => {
+                self.opt.ef_mode = match value {
+                    "none" => EfMode::None,
+                    "f32" => EfMode::F32,
+                    "q8" => EfMode::Q8,
+                    _ => anyhow::bail!("unknown ef mode {value}"),
+                }
+            }
+            _ => anyhow::bail!("unknown config key {key:?}"),
+        }
+        // keep optimizer-level mirrors in sync
+        self.opt.weight_decay = self.weight_decay;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn apply_overrides() {
+        let mut c = TrainConfig::default();
+        c.apply("optimizer", "dion").unwrap();
+        c.apply("rank", "64").unwrap();
+        c.apply("lr", "0.02").unwrap();
+        c.apply("projection", "svd").unwrap();
+        assert_eq!(c.optimizer, OptimizerKind::Dion);
+        assert_eq!(c.opt.rank, 64);
+        assert_eq!(c.opt.projection, ProjectionKind::Svd);
+        assert!(c.apply("bogus", "1").is_err());
+    }
+
+    #[test]
+    fn run_name_auto() {
+        let mut c = TrainConfig::default();
+        c.apply("optimizer", "trion").unwrap();
+        c.apply("rank", "16").unwrap();
+        assert_eq!(c.run_name(), "nano_trion_r16_s42");
+    }
+
+    #[test]
+    fn json_snapshot_parses() {
+        let c = TrainConfig::default();
+        let j = c.to_json().to_string();
+        let back = Json::parse(&j).unwrap();
+        assert_eq!(back.req("optimizer").unwrap().as_str().unwrap(), "trion");
+        assert_eq!(back.req("rank").unwrap().as_usize().unwrap(), 32);
+    }
+}

@@ -1,0 +1,14 @@
+//! Training stack: config, parameter store, LR schedules and the [`Trainer`]
+//! that drives PJRT fwd/bwd → simulated-DDP all-reduce → ZeRO-scheduled
+//! optimizer updates → metrics.
+
+pub mod aot_optim;
+pub mod checkpoint;
+pub mod config;
+pub mod finetune;
+pub mod schedule;
+pub mod trainer;
+
+pub use config::TrainConfig;
+pub use schedule::LrSchedule;
+pub use trainer::{RunSummary, Trainer};

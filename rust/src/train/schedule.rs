@@ -1,0 +1,56 @@
+//! Learning-rate schedules: linear warmup + cosine decay (the pre-training
+//! default in GaLore/LDAdam/Dion experiments) and constant (fine-tuning).
+
+#[derive(Clone, Copy, Debug)]
+pub enum LrSchedule {
+    Constant { lr: f32 },
+    /// Linear warmup to `lr`, then cosine decay to `lr·min_ratio`.
+    WarmupCosine { lr: f32, warmup: usize, total: usize, min_ratio: f32 },
+}
+
+impl LrSchedule {
+    pub fn at(&self, step: usize) -> f32 {
+        match *self {
+            LrSchedule::Constant { lr } => lr,
+            LrSchedule::WarmupCosine { lr, warmup, total, min_ratio } => {
+                if warmup > 0 && step < warmup {
+                    lr * (step as f32 + 1.0) / warmup as f32
+                } else {
+                    let t = (step.saturating_sub(warmup)) as f32
+                        / (total.saturating_sub(warmup)).max(1) as f32;
+                    let cos = 0.5 * (1.0 + (std::f32::consts::PI * t.min(1.0)).cos());
+                    lr * (min_ratio + (1.0 - min_ratio) * cos)
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let s = LrSchedule::WarmupCosine { lr: 1.0, warmup: 10, total: 100, min_ratio: 0.1 };
+        assert!((s.at(0) - 0.1).abs() < 1e-6);
+        assert!((s.at(4) - 0.5).abs() < 1e-6);
+        assert!((s.at(9) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cosine_decays_to_min() {
+        let s = LrSchedule::WarmupCosine { lr: 1.0, warmup: 0, total: 100, min_ratio: 0.1 };
+        assert!((s.at(0) - 1.0).abs() < 1e-5);
+        assert!(s.at(50) < s.at(10));
+        assert!((s.at(100) - 0.1).abs() < 1e-5);
+        assert!((s.at(500) - 0.1).abs() < 1e-5); // clamped past total
+    }
+
+    #[test]
+    fn constant_is_constant() {
+        let s = LrSchedule::Constant { lr: 0.3 };
+        assert_eq!(s.at(0), 0.3);
+        assert_eq!(s.at(10_000), 0.3);
+    }
+}

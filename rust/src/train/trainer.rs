@@ -1,0 +1,345 @@
+//! The training driver: PJRT fwd/bwd per simulated worker → ring
+//! all-reduce → (optionally AOT-graph) optimizer step under the ZeRO
+//! schedule → metrics/eval.
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{CommModel, Communicator, ZeroSchedule};
+use crate::data::{BatchLoader, CorpusConfig, SyntheticCorpus};
+use crate::optim::{build_optimizer, LayerMeta, Optimizer};
+use crate::runtime::{Executable, Manifest, ModelSpec, Runtime};
+use crate::runtime::client::Value;
+use crate::tensor::Matrix;
+use crate::train::aot_optim::maybe_wrap_aot;
+use crate::train::{LrSchedule, TrainConfig};
+use crate::util::csv::JsonlWriter;
+use crate::util::json::{num, obj, s};
+use crate::util::timer::PhaseTimes;
+use crate::util::{Pcg64, Timer};
+
+/// Everything a finished run reports (one row of a paper table).
+#[derive(Clone, Debug)]
+pub struct RunSummary {
+    pub run_name: String,
+    pub optimizer: String,
+    pub preset: String,
+    pub rank: usize,
+    pub steps: usize,
+    pub final_train_loss: f64,
+    pub mean_tail_loss: f64,
+    pub val_loss: f64,
+    pub val_ppl: f64,
+    pub wall_secs: f64,
+    pub optimizer_state_bytes: u64,
+    pub per_worker_state_bytes: u64,
+    pub params_bytes: u64,
+    pub comm_bytes: u64,
+    pub update_broadcast_bytes: u64,
+    pub full_broadcast_bytes: u64,
+    pub modeled_comm_secs: f64,
+    pub metrics_path: PathBuf,
+    pub phase_summary: String,
+    pub optimizer_secs: f64,
+}
+
+impl RunSummary {
+    pub fn train_ppl(&self) -> f64 {
+        self.mean_tail_loss.exp()
+    }
+}
+
+pub struct Trainer {
+    pub cfg: TrainConfig,
+    pub spec: ModelSpec,
+    pub metas: Vec<LayerMeta>,
+    fwdbwd: Executable,
+    eval: Executable,
+    pub params: Vec<Matrix>,
+    corpus: SyntheticCorpus,
+}
+
+impl Trainer {
+    pub fn new(manifest: &Manifest, rt: &Runtime, cfg: TrainConfig) -> Result<Self> {
+        let spec = manifest.model_spec(&cfg.preset)?;
+        anyhow::ensure!(
+            cfg.batch_per_worker == spec.batch_per_worker,
+            "artifact was lowered for batch_per_worker={}, config asks {} — \
+             re-run `make artifacts` with --batch-per-worker",
+            spec.batch_per_worker,
+            cfg.batch_per_worker
+        );
+        let fwdbwd = rt
+            .load(manifest.find(&format!("fwdbwd_{}", cfg.preset))?)
+            .context("loading fwdbwd artifact")?;
+        let eval = rt.load(manifest.find(&format!("eval_{}", cfg.preset))?)?;
+        let metas: Vec<LayerMeta> =
+            spec.params.iter().map(|p| p.layer_meta()).collect();
+        let params = init_params(&spec, cfg.seed);
+        let corpus = SyntheticCorpus::generate(&CorpusConfig {
+            vocab: 256,
+            tokens: cfg.corpus_tokens,
+            seed: 7_777,
+            ..Default::default()
+        });
+        Ok(Trainer { cfg, spec, metas, fwdbwd, eval, params, corpus })
+    }
+
+    /// Run the configured number of steps; streams metrics to
+    /// `{out_dir}/{run_name}/metrics.jsonl` and returns the summary row.
+    pub fn run(&mut self, manifest: &Manifest, rt: &Runtime) -> Result<RunSummary> {
+        let cfg = self.cfg.clone();
+        let run_name = cfg.run_name();
+        let run_dir = PathBuf::from(&cfg.out_dir).join(&run_name);
+        std::fs::create_dir_all(&run_dir)?;
+        std::fs::write(run_dir.join("config.json"), cfg.to_json().to_string())?;
+        let mut metrics = JsonlWriter::create(run_dir.join("metrics.jsonl"))?;
+
+        // optimizer (optionally AOT-graph-backed for the paper's methods)
+        let mut opt: Box<dyn Optimizer> =
+            build_optimizer(&cfg.optimizer, &self.metas, &cfg.opt);
+        if cfg.use_aot_optimizer {
+            opt = maybe_wrap_aot(opt, &self.metas, &cfg, manifest, rt)?;
+        }
+
+        let sched = LrSchedule::WarmupCosine {
+            lr: cfg.lr,
+            warmup: cfg.warmup,
+            total: cfg.steps,
+            min_ratio: 0.1,
+        };
+        let zero = ZeroSchedule::round_robin(self.metas.len(), cfg.workers);
+        let mut comm = Communicator::new(cfg.workers, CommModel::default());
+        let base_loader = BatchLoader::new(&self.corpus.train, self.spec.seq_len, cfg.seed);
+        let mut workers: Vec<BatchLoader> = (0..cfg.workers)
+            .map(|w| base_loader.worker(w, cfg.seed))
+            .collect();
+        let val_loader = BatchLoader::new(&self.corpus.val, self.spec.seq_len, cfg.seed);
+
+        let timer = Timer::start();
+        let mut phases = PhaseTimes::new();
+        let mut tail_losses: Vec<f64> = Vec::new();
+        let mut update_bytes = 0u64;
+        let mut full_bytes = 0u64;
+        let mut final_loss = f64::NAN;
+
+        for step in 0..cfg.steps {
+            // --- per-worker fwd/bwd through PJRT ------------------------
+            let mut worker_grads: Vec<Vec<Matrix>> = Vec::with_capacity(cfg.workers);
+            let mut step_loss = 0.0f64;
+            for wl in workers.iter_mut() {
+                let (tokens, shape) = wl.next_batch(cfg.batch_per_worker);
+                let outs = phases.time("fwdbwd", || {
+                    let mut inputs: Vec<Value> = self
+                        .params
+                        .iter()
+                        .map(|p| Value::F32(p.clone()))
+                        .collect();
+                    inputs.push(Value::tokens(tokens, shape));
+                    self.fwdbwd.run(&inputs)
+                })?;
+                step_loss += outs.scalar(0) as f64;
+                worker_grads.push(outs.values.into_iter().skip(1).collect());
+            }
+            step_loss /= cfg.workers as f64;
+            final_loss = step_loss;
+
+            // --- ring all-reduce per parameter --------------------------
+            let grads: Vec<Matrix> = phases.time("allreduce", || {
+                let n_params = self.params.len();
+                let mut reduced = Vec::with_capacity(n_params);
+                for pi in 0..n_params {
+                    let mut replicas: Vec<Matrix> = worker_grads
+                        .iter_mut()
+                        .map(|wg| std::mem::replace(&mut wg[pi], Matrix::zeros(0, 0)))
+                        .collect();
+                    comm.all_reduce_mean(&mut replicas);
+                    reduced.push(replicas.swap_remove(0));
+                }
+                reduced
+            });
+
+            // --- global gradient clipping -------------------------------
+            let grads = clip_grads(grads, cfg.grad_clip);
+
+            // --- optimizer step (ZeRO owner-computes + broadcast model) --
+            let lr = sched.at(step);
+            phases.time("optimizer", || {
+                opt.step(&mut self.params, &grads, lr);
+            });
+            let zstats = zero.account_step(&self.metas, opt.as_ref(), &mut comm);
+            update_bytes += zstats.update_broadcast_bytes;
+            full_bytes += zstats.full_broadcast_bytes;
+
+            if step < 5 || step % 10 == 0 || step + 1 == cfg.steps {
+                let mut rec = vec![
+                    ("step", num(step as f64)),
+                    ("loss", num(step_loss)),
+                    ("lr", num(lr as f64)),
+                    ("wall_secs", num(timer.elapsed_secs())),
+                    ("comm_bytes", num(comm.stats.total_bytes() as f64)),
+                ];
+                if let Some(errs) = opt.projection_errors() {
+                    for (k, v) in errs {
+                        // stable keys for the fig1 harness
+                        rec.push(("proj_err", obj(vec![("layer", s(k)), ("err", num(*v))])));
+                        break; // full map dumped separately below
+                    }
+                    let full: Vec<(String, f64)> =
+                        errs.iter().map(|(k, v)| (k.clone(), *v)).collect();
+                    let json_obj = crate::util::json::Json::Obj(
+                        full.into_iter()
+                            .map(|(k, v)| (k, num(v)))
+                            .collect(),
+                    );
+                    rec.push(("proj_errors", json_obj));
+                }
+                metrics.record(&obj(rec))?;
+            }
+            if cfg.steps >= 10 && step >= cfg.steps - cfg.steps / 10 {
+                tail_losses.push(step_loss);
+            }
+
+            // --- periodic eval ------------------------------------------
+            if cfg.eval_every > 0
+                && (step + 1) % cfg.eval_every == 0
+                && step + 1 != cfg.steps
+            {
+                let (vl, _) = self.evaluate(&val_loader, cfg.eval_batches, &mut phases)?;
+                metrics.record(&obj(vec![
+                    ("step", num(step as f64)),
+                    ("val_loss", num(vl)),
+                    ("wall_secs", num(timer.elapsed_secs())),
+                ]))?;
+            }
+        }
+
+        let (val_loss, val_ppl) =
+            self.evaluate(&val_loader, cfg.eval_batches.max(4), &mut phases)?;
+        let wall = timer.elapsed_secs();
+        let rep = opt.memory_report();
+        let mean_tail = if tail_losses.is_empty() {
+            final_loss
+        } else {
+            tail_losses.iter().sum::<f64>() / tail_losses.len() as f64
+        };
+        metrics.record(&obj(vec![
+            ("final", num(1.0)),
+            ("val_loss", num(val_loss)),
+            ("val_ppl", num(val_ppl)),
+            ("wall_secs", num(wall)),
+        ]))?;
+        metrics.flush()?;
+
+        Ok(RunSummary {
+            run_name,
+            optimizer: opt.name().to_string(),
+            preset: cfg.preset.clone(),
+            rank: cfg.opt.rank,
+            steps: cfg.steps,
+            final_train_loss: final_loss,
+            mean_tail_loss: mean_tail,
+            val_loss,
+            val_ppl,
+            wall_secs: wall,
+            optimizer_state_bytes: rep.total(),
+            per_worker_state_bytes: zero.per_worker_state_bytes(opt.as_ref()),
+            params_bytes: self.params.iter().map(|p| p.bytes()).sum(),
+            comm_bytes: comm.stats.total_bytes(),
+            update_broadcast_bytes: update_bytes,
+            full_broadcast_bytes: full_bytes,
+            modeled_comm_secs: comm.stats.modeled_secs,
+            metrics_path: run_dir.join("metrics.jsonl"),
+            phase_summary: phases.summary(),
+            optimizer_secs: phases.secs("optimizer"),
+        })
+    }
+
+    fn evaluate(
+        &self,
+        val_loader: &BatchLoader,
+        batches: usize,
+        phases: &mut PhaseTimes,
+    ) -> Result<(f64, f64)> {
+        let mut total = 0.0f64;
+        let eval_batches = val_loader.eval_batches(self.cfg.batch_per_worker, batches);
+        let n = eval_batches.len();
+        for (tokens, shape) in eval_batches {
+            let outs = phases.time("eval", || {
+                let mut inputs: Vec<Value> =
+                    self.params.iter().map(|p| Value::F32(p.clone())).collect();
+                inputs.push(Value::tokens(tokens, shape));
+                self.eval.run(&inputs)
+            })?;
+            total += outs.scalar(0) as f64;
+        }
+        let loss = total / n.max(1) as f64;
+        Ok((loss, loss.exp()))
+    }
+}
+
+/// Parameter init mirroring `model.py::init_params` semantics (norms = 1,
+/// embeds/heads std 0.02, linears 1/sqrt(fan_in)).
+pub fn init_params(spec: &ModelSpec, seed: u64) -> Vec<Matrix> {
+    let mut rng = Pcg64::new(seed, 0x1217);
+    spec.params
+        .iter()
+        .map(|p| {
+            let meta = p.layer_meta();
+            match p.kind {
+                crate::optim::ParamKind::Norm => {
+                    Matrix::from_vec(meta.rows, meta.cols, vec![1.0; meta.rows * meta.cols])
+                }
+                crate::optim::ParamKind::Embed | crate::optim::ParamKind::Head => {
+                    Matrix::randn(meta.rows, meta.cols, 0.02, &mut rng)
+                }
+                crate::optim::ParamKind::Linear => {
+                    let std = 1.0 / (meta.rows as f32).sqrt();
+                    Matrix::randn(meta.rows, meta.cols, std, &mut rng)
+                }
+            }
+        })
+        .collect()
+}
+
+/// Global-norm gradient clipping.
+pub fn clip_grads(mut grads: Vec<Matrix>, max_norm: f32) -> Vec<Matrix> {
+    if max_norm <= 0.0 {
+        return grads;
+    }
+    let total: f64 = grads.iter().map(|g| g.fro_norm_sq()).sum();
+    let norm = total.sqrt() as f32;
+    if norm > max_norm {
+        let scale = max_norm / norm;
+        for g in &mut grads {
+            g.scale(scale);
+        }
+    }
+    grads
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clip_caps_global_norm() {
+        let g = vec![
+            Matrix::from_vec(1, 2, vec![3.0, 0.0]),
+            Matrix::from_vec(1, 2, vec![0.0, 4.0]),
+        ];
+        let clipped = clip_grads(g, 1.0);
+        let norm: f64 = clipped.iter().map(|m| m.fro_norm_sq()).sum::<f64>().sqrt();
+        assert!((norm - 1.0).abs() < 1e-5);
+        // direction preserved
+        assert!((clipped[0].data[0] / clipped[1].data[1] - 0.75).abs() < 1e-5);
+    }
+
+    #[test]
+    fn clip_leaves_small_grads_alone() {
+        let g = vec![Matrix::from_vec(1, 2, vec![0.1, 0.1])];
+        let clipped = clip_grads(g.clone(), 1.0);
+        assert_eq!(clipped[0], g[0]);
+    }
+}

@@ -1,0 +1,109 @@
+//! CSV + JSONL metric sinks. Every experiment writes both: CSV for the
+//! table renderers, JSONL for loss-curve figures (step, wallclock, loss…).
+
+use std::fs::{self, File};
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use super::json::Json;
+
+/// Append-oriented CSV writer with a fixed header.
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    columns: usize,
+    pub path: PathBuf,
+}
+
+impl CsvWriter {
+    pub fn create(path: impl AsRef<Path>, header: &[&str]) -> Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir)?;
+        }
+        let mut out = BufWriter::new(File::create(&path)?);
+        writeln!(out, "{}", header.join(","))?;
+        Ok(CsvWriter { out, columns: header.len(), path })
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> Result<()> {
+        assert_eq!(cells.len(), self.columns, "csv row width mismatch");
+        let escaped: Vec<String> = cells
+            .iter()
+            .map(|c| {
+                if c.contains(',') || c.contains('"') || c.contains('\n') {
+                    format!("\"{}\"", c.replace('"', "\"\""))
+                } else {
+                    c.clone()
+                }
+            })
+            .collect();
+        writeln!(self.out, "{}", escaped.join(","))?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+/// JSONL sink for per-step metric records.
+pub struct JsonlWriter {
+    out: BufWriter<File>,
+    pub path: PathBuf,
+}
+
+impl JsonlWriter {
+    pub fn create(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir)?;
+        }
+        Ok(JsonlWriter { out: BufWriter::new(File::create(&path)?), path })
+    }
+
+    pub fn record(&mut self, v: &Json) -> Result<()> {
+        writeln!(self.out, "{}", v.to_string())?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::{num, obj, s};
+
+    #[test]
+    fn csv_escapes_and_counts() {
+        let dir = std::env::temp_dir().join("fft_subspace_csv_test");
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+        w.row(&["1".into(), "x,\"y\"".into()]).unwrap();
+        w.flush().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,\"x,\"\"y\"\"\"\n");
+    }
+
+    #[test]
+    fn jsonl_lines_parse_back() {
+        let dir = std::env::temp_dir().join("fft_subspace_jsonl_test");
+        let path = dir.join("t.jsonl");
+        let mut w = JsonlWriter::create(&path).unwrap();
+        w.record(&obj(vec![("step", num(1.0)), ("tag", s("ok"))])).unwrap();
+        w.record(&obj(vec![("step", num(2.0))])).unwrap();
+        w.flush().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for l in lines {
+            Json::parse(l).unwrap();
+        }
+    }
+}

@@ -1,0 +1,83 @@
+//! Human-readable formatting for the experiment tables (the paper reports
+//! "1h 53m", "42.42 GB", "15.29 PPL" style values).
+
+/// `6842s` → `"1h 54m"`, `95s` → `"1m 35s"`, `4.2s` → `"4.2s"`.
+pub fn duration(secs: f64) -> String {
+    if secs < 60.0 {
+        return format!("{secs:.1}s");
+    }
+    let total = secs.round() as u64;
+    let (h, m, s) = (total / 3600, (total % 3600) / 60, total % 60);
+    if h > 0 {
+        format!("{h}h {m}m")
+    } else {
+        format!("{m}m {s}s")
+    }
+}
+
+/// Bytes → MiB/GiB string.
+pub fn bytes(n: u64) -> String {
+    const MIB: f64 = 1024.0 * 1024.0;
+    const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
+    let x = n as f64;
+    if x >= GIB {
+        format!("{:.2} GiB", x / GIB)
+    } else if x >= MIB {
+        format!("{:.2} MiB", x / MIB)
+    } else {
+        format!("{:.1} KiB", x / 1024.0)
+    }
+}
+
+/// Parameter count → `"14.4M"` / `"1.3B"`.
+pub fn params(n: u64) -> String {
+    let x = n as f64;
+    if x >= 1e9 {
+        format!("{:.1}B", x / 1e9)
+    } else if x >= 1e6 {
+        format!("{:.1}M", x / 1e6)
+    } else {
+        format!("{:.0}k", x / 1e3)
+    }
+}
+
+/// Fixed-width table cell padding.
+pub fn pad(s: &str, width: usize) -> String {
+    if s.len() >= width {
+        s.to_string()
+    } else {
+        format!("{s}{}", " ".repeat(width - s.len()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn durations() {
+        assert_eq!(duration(4.23), "4.2s");
+        assert_eq!(duration(95.0), "1m 35s");
+        assert_eq!(duration(6840.0), "1h 54m");
+    }
+
+    #[test]
+    fn byte_sizes() {
+        assert_eq!(bytes(512), "0.5 KiB");
+        assert_eq!(bytes(3 * 1024 * 1024), "3.00 MiB");
+        assert_eq!(bytes(45_560_000_000), "42.43 GiB");
+    }
+
+    #[test]
+    fn param_counts() {
+        assert_eq!(params(860_000), "860k");
+        assert_eq!(params(14_360_000), "14.4M");
+        assert_eq!(params(1_300_000_000), "1.3B");
+    }
+
+    #[test]
+    fn padding() {
+        assert_eq!(pad("ab", 4), "ab  ");
+        assert_eq!(pad("abcdef", 4), "abcdef");
+    }
+}

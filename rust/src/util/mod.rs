@@ -1,0 +1,13 @@
+//! Infrastructure utilities the offline environment forces us to own:
+//! RNG (no `rand`), JSON (no `serde`), CSV/JSONL sinks, timers, human
+//! formatting and a tiny property-testing harness (no `proptest`).
+
+pub mod rng;
+pub mod json;
+pub mod csv;
+pub mod timer;
+pub mod human;
+pub mod proptest;
+
+pub use rng::Pcg64;
+pub use timer::Timer;

@@ -1,0 +1,78 @@
+//! Tiny property-testing harness (no `proptest` crate offline).
+//!
+//! `check(name, cases, |rng| { ... })` runs a closure over `cases` seeded
+//! RNGs; a panic inside the closure reports the failing case seed so the
+//! exact instance can be replayed with `replay(seed, f)`.
+
+use super::rng::Pcg64;
+
+/// Run `f` over `cases` independent seeded generators. On failure, re-raise
+/// with the offending seed in the message.
+pub fn check(name: &str, cases: u64, mut f: impl FnMut(&mut Pcg64)) {
+    for case in 0..cases {
+        let seed = 0x5eed_0000 + case;
+        let mut rng = Pcg64::seed(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng)
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property {name:?} failed at seed {seed:#x}: {msg}");
+        }
+    }
+}
+
+/// Replay one failing case.
+pub fn replay(seed: u64, mut f: impl FnMut(&mut Pcg64)) {
+    let mut rng = Pcg64::seed(seed);
+    f(&mut rng);
+}
+
+/// Uniform usize in `[lo, hi]`.
+pub fn size(rng: &mut Pcg64, lo: usize, hi: usize) -> usize {
+    lo + rng.usize_below(hi - lo + 1)
+}
+
+/// A random matrix buffer (row-major) with standard-normal entries.
+pub fn normal_vec(rng: &mut Pcg64, n: usize) -> Vec<f32> {
+    let mut v = vec![0.0f32; n];
+    rng.fill_normal(&mut v, 1.0);
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_when_property_holds() {
+        check("add-commutes", 16, |rng| {
+            let a = rng.next_f64();
+            let b = rng.next_f64();
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    fn reports_seed_on_failure() {
+        let r = std::panic::catch_unwind(|| {
+            check("always-fails", 1, |_| panic!("boom"));
+        });
+        let msg = *r.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("seed"), "{msg}");
+        assert!(msg.contains("boom"), "{msg}");
+    }
+
+    #[test]
+    fn size_respects_bounds() {
+        let mut rng = Pcg64::seed(0);
+        for _ in 0..100 {
+            let v = size(&mut rng, 3, 9);
+            assert!((3..=9).contains(&v));
+        }
+    }
+}

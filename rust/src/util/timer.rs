@@ -1,0 +1,122 @@
+//! Wall-clock timing + per-phase accumulators for the step-time breakdown
+//! (compute / collective / optimizer) reported by the experiment harness.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+/// Named phase accumulator: `phases.time("optimizer", || ...)`.
+#[derive(Default, Debug, Clone)]
+pub struct PhaseTimes {
+    totals: BTreeMap<&'static str, Duration>,
+    counts: BTreeMap<&'static str, u64>,
+}
+
+impl PhaseTimes {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn time<T>(&mut self, phase: &'static str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(phase, t0.elapsed());
+        out
+    }
+
+    pub fn add(&mut self, phase: &'static str, d: Duration) {
+        *self.totals.entry(phase).or_default() += d;
+        *self.counts.entry(phase).or_default() += 1;
+    }
+
+    pub fn total(&self, phase: &str) -> Duration {
+        self.totals.get(phase).copied().unwrap_or_default()
+    }
+
+    pub fn secs(&self, phase: &str) -> f64 {
+        self.total(phase).as_secs_f64()
+    }
+
+    pub fn merge(&mut self, other: &PhaseTimes) {
+        for (k, v) in &other.totals {
+            *self.totals.entry(k).or_default() += *v;
+        }
+        for (k, v) in &other.counts {
+            *self.counts.entry(k).or_default() += *v;
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        let mut rows: Vec<String> = self
+            .totals
+            .iter()
+            .map(|(k, v)| {
+                let n = self.counts[k].max(1);
+                format!(
+                    "{k}: {:.3}s total, {:.3}ms/call ×{n}",
+                    v.as_secs_f64(),
+                    v.as_secs_f64() * 1e3 / n as f64
+                )
+            })
+            .collect();
+        rows.sort();
+        rows.join(" | ")
+    }
+
+    pub fn phases(&self) -> impl Iterator<Item = (&'static str, Duration)> + '_ {
+        self.totals.iter().map(|(k, v)| (*k, *v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_phases() {
+        let mut p = PhaseTimes::new();
+        let x = p.time("a", || 40 + 2);
+        assert_eq!(x, 42);
+        p.time("a", || ());
+        p.time("b", || ());
+        assert!(p.total("a") >= Duration::ZERO);
+        assert_eq!(p.counts["a"], 2);
+        assert_eq!(p.counts["b"], 1);
+        assert!(p.summary().contains("a:"));
+    }
+
+    #[test]
+    fn merge_sums() {
+        let mut a = PhaseTimes::new();
+        a.add("x", Duration::from_millis(10));
+        let mut b = PhaseTimes::new();
+        b.add("x", Duration::from_millis(5));
+        a.merge(&b);
+        assert_eq!(a.total("x"), Duration::from_millis(15));
+        assert_eq!(a.counts["x"], 2);
+    }
+}

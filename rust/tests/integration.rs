@@ -1,0 +1,197 @@
+//! Cross-layer integration tests: full trainer runs through PJRT, AOT vs
+//! native optimizer equivalence over multiple steps, DDP + ZeRO wiring,
+//! checkpoint round-trips, and the fine-tuning accuracy pipeline.
+//!
+//! These need `make artifacts` to have run (CI order: artifacts → test).
+
+use fft_subspace::data::TaskCorpus;
+use fft_subspace::optim::OptimizerKind;
+use fft_subspace::projection::{ProjectionKind, RankNorm};
+use fft_subspace::runtime::{Manifest, Runtime};
+use fft_subspace::train::finetune::Finetuner;
+use fft_subspace::train::{checkpoint, TrainConfig, Trainer};
+
+fn manifest() -> Manifest {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Manifest::load(dir).expect("run `make artifacts` before `cargo test`")
+}
+
+fn out_dir() -> String {
+    std::env::temp_dir()
+        .join("fft_subspace_itest_runs")
+        .to_string_lossy()
+        .into_owned()
+}
+
+fn base_cfg(optimizer: OptimizerKind, steps: usize) -> TrainConfig {
+    let mut cfg = TrainConfig {
+        preset: "nano".into(),
+        optimizer,
+        steps,
+        workers: 2,
+        eval_every: 0,
+        eval_batches: 2,
+        corpus_tokens: 100_000,
+        out_dir: out_dir(),
+        ..Default::default()
+    };
+    cfg.opt.rank = 16;
+    cfg
+}
+
+#[test]
+fn trainer_learns_with_trion() {
+    let m = manifest();
+    let rt = Runtime::new().unwrap();
+    let mut cfg = base_cfg(OptimizerKind::Trion, 40);
+    cfg.run_name = "itest_trion".into();
+    let mut tr = Trainer::new(&m, &rt, cfg).unwrap();
+    let spec_vocab_loss = (tr.spec.vocab as f64).ln(); // ≈ 5.55
+    let sum = tr.run(&m, &rt).unwrap();
+    assert!(
+        sum.final_train_loss < spec_vocab_loss - 0.4,
+        "no learning: {} -> {}",
+        spec_vocab_loss,
+        sum.final_train_loss
+    );
+    assert!(sum.val_loss.is_finite() && sum.val_ppl > 1.0);
+    // metrics file exists and has records
+    let text = std::fs::read_to_string(&sum.metrics_path).unwrap();
+    assert!(text.lines().count() >= 5);
+}
+
+#[test]
+fn every_optimizer_survives_a_short_run() {
+    let m = manifest();
+    let rt = Runtime::new().unwrap();
+    for kind in [
+        OptimizerKind::AdamW,
+        OptimizerKind::Muon,
+        OptimizerKind::Dion,
+        OptimizerKind::Trion,
+        OptimizerKind::GaLore,
+        OptimizerKind::LdAdamW,
+        OptimizerKind::DctAdamW,
+        OptimizerKind::Frugal,
+        OptimizerKind::Fira,
+    ] {
+        let mut cfg = base_cfg(kind.clone(), 6);
+        cfg.run_name = format!("itest_all_{}", kind.name());
+        cfg.lr = 1e-3;
+        let mut tr = Trainer::new(&m, &rt, cfg).unwrap();
+        let sum = tr.run(&m, &rt).unwrap();
+        assert!(
+            sum.final_train_loss.is_finite(),
+            "{}: loss diverged",
+            kind.name()
+        );
+        assert!(sum.optimizer_state_bytes > 0);
+    }
+}
+
+#[test]
+fn aot_and_native_trion_train_identically() {
+    // The strongest three-layer check: a full multi-step *training* run
+    // (PJRT gradients, DDP all-reduce, ZeRO accounting) with the optimizer
+    // running through the AOT pallas-kernel graphs must match the rust-
+    // native optimizer to float tolerance on the final parameters.
+    let m = manifest();
+    let rt = Runtime::new().unwrap();
+    let mut final_losses = Vec::new();
+    for use_aot in [false, true] {
+        let mut cfg = base_cfg(OptimizerKind::Trion, 8);
+        cfg.run_name = format!("itest_aot_{use_aot}");
+        cfg.use_aot_optimizer = use_aot;
+        // match the lowered graphs: matmul similarities + L2 ranking
+        cfg.opt.projection = ProjectionKind::Dct { norm: RankNorm::L2, use_makhoul: false };
+        cfg.opt.rank = 32;
+        cfg.opt.mu = 0.95;
+        let mut tr = Trainer::new(&m, &rt, cfg).unwrap();
+        let sum = tr.run(&m, &rt).unwrap();
+        final_losses.push(sum.final_train_loss);
+    }
+    let diff = (final_losses[0] - final_losses[1]).abs();
+    assert!(
+        diff < 5e-3,
+        "native {} vs aot {} (diff {diff})",
+        final_losses[0],
+        final_losses[1]
+    );
+}
+
+#[test]
+fn worker_count_changes_only_throughput_not_correctness() {
+    // More workers = bigger effective batch from disjoint shards; loss must
+    // stay finite and broadly comparable, comm bytes must grow.
+    let m = manifest();
+    let rt = Runtime::new().unwrap();
+    let mut comm = Vec::new();
+    for workers in [1usize, 4] {
+        let mut cfg = base_cfg(OptimizerKind::Trion, 10);
+        cfg.workers = workers;
+        cfg.run_name = format!("itest_w{workers}");
+        let mut tr = Trainer::new(&m, &rt, cfg).unwrap();
+        let sum = tr.run(&m, &rt).unwrap();
+        assert!(sum.final_train_loss.is_finite());
+        comm.push(sum.comm_bytes);
+    }
+    assert_eq!(comm[0], 0, "single worker should move no bytes");
+    assert!(comm[1] > 0);
+}
+
+#[test]
+fn checkpoint_roundtrip_through_finetune() {
+    let m = manifest();
+    let rt = Runtime::new().unwrap();
+    let mut cfg = base_cfg(OptimizerKind::AdamW, 12);
+    cfg.run_name = "itest_ckpt_pretrain".into();
+    cfg.lr = 3e-3;
+    let mut tr = Trainer::new(&m, &rt, cfg).unwrap();
+    tr.run(&m, &rt).unwrap();
+    let path = std::env::temp_dir().join("fft_subspace_itest.ckpt");
+    checkpoint::save(&path, &tr.params).unwrap();
+    let loaded = checkpoint::load(&path).unwrap();
+    assert_eq!(loaded.len(), tr.params.len());
+
+    // fine-tune from the checkpoint and get a real accuracy number
+    let mut ft_cfg = base_cfg(OptimizerKind::DctAdamW, 15);
+    ft_cfg.lr = 1e-3;
+    let mut ft = Finetuner::new(&m, &rt, ft_cfg, Some(loaded)).unwrap();
+    let sum = ft.run(&m, &rt).unwrap();
+    assert!(sum.final_train_loss.is_finite());
+    assert!((0.0..=1.0).contains(&sum.accuracy));
+}
+
+#[test]
+fn task_corpus_oracle_matches_predict_artifact_shape() {
+    // The predict artifact must emit (B, S) argmax positions usable by the
+    // exact-match scorer.
+    let m = manifest();
+    let rt = Runtime::new().unwrap();
+    let spec = m.model_spec("nano").unwrap();
+    let exe = rt.load(m.find("predict_nano").unwrap()).unwrap();
+    let corpus = TaskCorpus::generate(4, 4, spec.seq_len, 0);
+    let params = fft_subspace::train::trainer::init_params(&spec, 0);
+    let mut data = Vec::new();
+    for ex in corpus.test.iter().take(spec.batch_per_worker) {
+        data.extend(ex.tokens.iter().map(|&t| t as i32));
+    }
+    while data.len() < spec.batch_per_worker * spec.seq_len {
+        data.extend(corpus.test[0].tokens.iter().map(|&t| t as i32));
+    }
+    let mut inputs: Vec<fft_subspace::runtime::client::Value> = params
+        .iter()
+        .map(|p| fft_subspace::runtime::client::Value::F32(p.clone()))
+        .collect();
+    inputs.push(fft_subspace::runtime::client::Value::tokens(
+        data,
+        vec![spec.batch_per_worker, spec.seq_len],
+    ));
+    let outs = exe.run(&inputs).unwrap();
+    assert_eq!(
+        outs.values[0].shape(),
+        (spec.batch_per_worker, spec.seq_len)
+    );
+    // argmax values are valid token ids
+    assert!(outs.values[0].data.iter().all(|&v| v >= 0.0 && v < spec.vocab as f32));
+}
