@@ -1,0 +1,38 @@
+# fft-subspace — build / test / bench entry points.
+#
+# The rust workspace lives in rust/ and is fully offline (vendored
+# anyhow/xla shims, no registry access). `make artifacts` needs the python
+# side (jax) and writes the AOT HLO artifacts the PJRT runtime consumes.
+
+CARGO ?= cargo
+RUST_DIR := rust
+
+.PHONY: build test bench bench-proj bench-makhoul bench-optim artifacts clean
+
+build:
+	cd $(RUST_DIR) && $(CARGO) build --release
+
+test:
+	cd $(RUST_DIR) && $(CARGO) test -q
+
+# Full microbench battery (each bench is a plain binary: harness = false).
+bench: bench-proj bench-makhoul bench-optim
+
+# Projection/subspace-step bench; writes rust/BENCH_PROJ.json
+# (override the path with BENCH_PROJ_OUT=...).
+bench-proj:
+	cd $(RUST_DIR) && $(CARGO) bench --bench bench_projection
+
+bench-makhoul:
+	cd $(RUST_DIR) && $(CARGO) bench --bench bench_makhoul
+
+bench-optim:
+	cd $(RUST_DIR) && $(CARGO) bench --bench bench_optim_step
+
+# Lower the JAX/Pallas graphs to HLO text + manifest (Layer 1+2 → Layer 3
+# contract). Requires jax; see python/compile/aot.py --help for presets.
+artifacts:
+	cd python && python -m compile.aot --out-dir ../$(RUST_DIR)/artifacts
+
+clean:
+	cd $(RUST_DIR) && $(CARGO) clean

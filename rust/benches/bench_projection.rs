@@ -1,27 +1,90 @@
 //! Projection-builder microbench: the per-step cost of each low-rank
-//! projection family at fixed layer shape across ranks — the mechanism
-//! behind Table 1's "Trion runtime is rank-independent, Dion's is not".
+//! subspace method across shapes and ranks — the mechanism behind Table 1's
+//! "Trion runtime is rank-independent, Dion's is not" and the Appendix C
+//! Makhoul-vs-matmul speedup.
+//!
+//! Emits `BENCH_PROJ.json` (override with `BENCH_PROJ_OUT=path`) so future
+//! PRs can track the perf trajectory numerically:
+//!
+//! * group `similarity` — Makhoul real-input FFT vs the pre-split
+//!   full-complex FFT vs blocked matmul, per shape (rank-independent).
+//! * group `selection`  — O(C) partition column selection, per rank.
+//! * group `dct_step`   — similarities + selection end to end (workspace
+//!   path, zero allocations at steady state).
+//! * groups `power_iter_qr` / `block_power` / `svd` — the rank-dependent
+//!   (or rank-independent-but-expensive) baselines.
 
-use fft_subspace::bench::measure;
+use fft_subspace::bench::{measure, write_bench_json, BenchRecord};
+use fft_subspace::fft::cached_plan;
 use fft_subspace::linalg::{block_power_iter, power_iter_qr, qr_thin};
-use fft_subspace::projection::{select_top_columns, RankNorm, SharedDct};
-use fft_subspace::tensor::Matrix;
+use fft_subspace::projection::{
+    select_top_columns_into, RankNorm, SharedDct,
+};
+use fft_subspace::tensor::{Matrix, Workspace};
 use fft_subspace::util::Pcg64;
 
 fn main() {
     println!("== bench_projection (rank-(in)dependence of the subspace step) ==\n");
-    let (rows, cols) = (1024, 256);
+    let mut records: Vec<BenchRecord> = Vec::new();
     let mut rng = Pcg64::seed(0);
-    let g = Matrix::randn(rows, cols, 1.0, &mut rng);
-    let shared = SharedDct::new(cols);
 
-    for rank in [16usize, 32, 64, 128] {
-        // DCT dynamic column selection (Makhoul similarities + norm ranking):
-        // the cost does NOT depend on rank.
-        let dct = measure(&format!("dct_select r={rank}"), 1, 10, || {
-            let s = shared.similarities(&g, true);
-            select_top_columns(&s, rank, RankNorm::L2)
+    // --- similarity transforms: rank-independent, shape-swept -----------
+    for &(rows, cols) in &[(256usize, 256usize), (1024, 512), (1024, 1024)] {
+        let g = Matrix::randn(rows, cols, 1.0, &mut rng);
+        let shared = SharedDct::new(cols);
+        let plan = cached_plan(cols);
+        let mut ws = Workspace::new();
+        let mut s_buf = ws.take(rows, cols);
+        // every variant writes into a preallocated buffer so the ratios
+        // compare transforms, not allocation behavior
+        let mut full_buf = ws.take(rows, cols);
+        let mut mm_buf = ws.take(rows, cols);
+
+        let iters = if rows * cols >= 1 << 20 { 5 } else { 10 };
+        let mk = measure(&format!("makhoul_real {rows}x{cols}"), 2, iters, || {
+            plan.run_into(&g, &mut s_buf);
         });
+        let mk_full = measure(&format!("makhoul_fullfft {rows}x{cols}"), 2, iters, || {
+            plan.run_full_complex_into(&g, &mut full_buf);
+        });
+        let mm = measure(&format!("matmul_sim {rows}x{cols}"), 1, iters, || {
+            shared.similarities_into(&g, false, &mut mm_buf);
+        });
+        println!("{}", mk.report());
+        println!("{}", mk_full.report());
+        println!("{}", mm.report());
+        println!(
+            "  real-input speedup vs full-complex FFT: {:.2}x, vs matmul: {:.2}x\n",
+            mk_full.median_secs / mk.median_secs,
+            mm.median_secs / mk.median_secs
+        );
+        records.push(BenchRecord::new("similarity", "makhoul", rows, cols, 0, mk.clone()));
+        records.push(BenchRecord::new("similarity", "makhoul_fullfft", rows, cols, 0, mk_full));
+        records.push(BenchRecord::new("similarity", "matmul", rows, cols, 0, mm));
+
+        // --- selection + full DCT step, per rank ------------------------
+        for &rank in &[16usize, 32, 64, 128] {
+            let mut idx = Vec::new();
+            let sel = measure(&format!("select_top r={rank} C={cols}"), 2, 20, || {
+                select_top_columns_into(&s_buf, rank, RankNorm::L2, &mut ws, &mut idx);
+            });
+            records.push(BenchRecord::new("selection", "partition", rows, cols, rank, sel.clone()));
+
+            let step = measure(&format!("dct_step r={rank} {rows}x{cols}"), 1, iters, || {
+                plan.run_into(&g, &mut s_buf);
+                select_top_columns_into(&s_buf, rank, RankNorm::L2, &mut ws, &mut idx);
+            });
+            println!("{}", sel.report());
+            println!("{}", step.report());
+            records.push(BenchRecord::new("dct_step", "makhoul+select", rows, cols, rank, step));
+        }
+        println!();
+    }
+
+    // --- rank-dependent baselines at the Table-1 shape ------------------
+    let (rows, cols) = (1024usize, 256usize);
+    let g = Matrix::randn(rows, cols, 1.0, &mut rng);
+    for &rank in &[16usize, 32, 64, 128] {
         // Dion's power-iteration + QR: cost grows with rank.
         let q0 = {
             let z = Matrix::randn(cols, rank, 1.0, &mut rng);
@@ -38,10 +101,18 @@ fn main() {
         let svd = measure(&format!("jacobi_svd r={rank}"), 1, 2, || {
             fft_subspace::linalg::svd_thin(&g)
         });
-        println!("{}", dct.report());
         println!("{}", dion.report());
         println!("{}", bpi.report());
         println!("{}", svd.report());
         println!();
+        records.push(BenchRecord::new("power_iter_qr", "dion", rows, cols, rank, dion));
+        records.push(BenchRecord::new("block_power", "ldadam", rows, cols, rank, bpi));
+        records.push(BenchRecord::new("svd", "galore", rows, cols, rank, svd));
+    }
+
+    let out = std::env::var("BENCH_PROJ_OUT").unwrap_or_else(|_| "BENCH_PROJ.json".into());
+    match write_bench_json(&out, &records) {
+        Ok(()) => println!("wrote {} records to {out}", records.len()),
+        Err(e) => eprintln!("failed to write {out}: {e}"),
     }
 }

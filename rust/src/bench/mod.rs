@@ -2,9 +2,13 @@
 //!
 //! `measure` runs warmup + timed iterations and reports median / p10 / p90
 //! wall time; benches print criterion-style lines so `cargo bench` output
-//! stays familiar.
+//! stays familiar. [`BenchRecord`] + [`write_bench_json`] additionally emit
+//! a machine-readable JSON file (`BENCH_PROJ.json` and friends) so the perf
+//! trajectory is trackable across PRs instead of living in scrollback.
 
 use std::time::Instant;
+
+use crate::util::json::{num, obj, s, Json};
 
 #[derive(Clone, Debug)]
 pub struct BenchStats {
@@ -65,6 +69,61 @@ pub fn measure<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -
     }
 }
 
+/// One machine-readable benchmark sample: a [`BenchStats`] plus the
+/// workload coordinates (group, shape, rank) a tracking tool needs.
+#[derive(Clone, Debug)]
+pub struct BenchRecord {
+    /// Workload family, e.g. "similarity" / "selection" / "svd".
+    pub group: String,
+    /// Variant inside the family, e.g. "makhoul" / "matmul".
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+    pub rank: usize,
+    pub stats: BenchStats,
+}
+
+impl BenchRecord {
+    pub fn new(group: &str, name: &str, rows: usize, cols: usize, rank: usize,
+               stats: BenchStats) -> Self {
+        BenchRecord {
+            group: group.to_string(),
+            name: name.to_string(),
+            rows,
+            cols,
+            rank,
+            stats,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("group", s(&self.group)),
+            ("name", s(&self.name)),
+            ("rows", num(self.rows as f64)),
+            ("cols", num(self.cols as f64)),
+            ("rank", num(self.rank as f64)),
+            ("iters", num(self.stats.iters as f64)),
+            ("median_ns", num((self.stats.median_secs * 1e9).round())),
+            ("p10_ns", num((self.stats.p10_secs * 1e9).round())),
+            ("p90_ns", num((self.stats.p90_secs * 1e9).round())),
+            ("mean_ns", num((self.stats.mean_secs * 1e9).round())),
+        ])
+    }
+}
+
+/// Serialize records to the machine-readable bench file (one top-level
+/// object so a single `Json::parse` reads it back).
+pub fn bench_records_json(records: &[BenchRecord]) -> String {
+    let arr = Json::Arr(records.iter().map(|r| r.to_json()).collect());
+    obj(vec![("version", num(1.0)), ("records", arr)]).to_string()
+}
+
+/// Write records to `path` (e.g. `BENCH_PROJ.json`).
+pub fn write_bench_json(path: &str, records: &[BenchRecord]) -> std::io::Result<()> {
+    std::fs::write(path, bench_records_json(records))
+}
+
 /// Pick an iteration count so a bench takes roughly `budget_secs`.
 pub fn auto_iters<T>(f: &mut impl FnMut() -> T, budget_secs: f64) -> usize {
     let t0 = Instant::now();
@@ -92,6 +151,22 @@ mod tests {
         assert!(fmt_secs(5e-5).contains("µs"));
         assert!(fmt_secs(5e-2).contains("ms"));
         assert!(fmt_secs(5.0).contains(" s"));
+    }
+
+    #[test]
+    fn bench_records_round_trip_through_json() {
+        let stats = measure("x", 0, 5, || 2 + 2);
+        let recs = vec![
+            BenchRecord::new("similarity", "makhoul", 1024, 512, 0, stats.clone()),
+            BenchRecord::new("selection", "partition", 1024, 512, 64, stats),
+        ];
+        let text = bench_records_json(&recs);
+        let parsed = Json::parse(&text).unwrap();
+        let arr = parsed.req("records").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].req("name").unwrap().as_str().unwrap(), "makhoul");
+        assert_eq!(arr[1].req("rank").unwrap().as_usize().unwrap(), 64);
+        assert!(arr[0].req("median_ns").unwrap().as_f64().unwrap() >= 0.0);
     }
 
     #[test]

@@ -1,6 +1,13 @@
 //! Complex FFT: iterative radix-2 Cooley–Tukey with precomputed twiddles,
 //! plus Bluestein's chirp-z algorithm so *any* length (odd `d_model`s
 //! included) runs in O(n log n).
+//!
+//! Plans are allocation-free after construction: the Bluestein embedding
+//! keeps its padded work buffer inside the plan (a `Mutex` keeps `forward`
+//! callable through `&self`/`Arc`; the stack is single-threaded so the
+//! lock is uncontended).
+
+use std::sync::Mutex;
 
 /// Minimal complex number (no `num-complex` offline).
 #[derive(Clone, Copy, Debug, PartialEq, Default)]
@@ -68,6 +75,7 @@ struct BluesteinPlan {
     chirp: Vec<Complex>,      // a_k = exp(-iπk²/n)
     b_fft: Vec<Complex>,      // FFT of the chirp filter
     inner: FftPlan,           // radix-2 plan of length m
+    scratch: Mutex<Vec<Complex>>, // padded work buffer, reused per call
 }
 
 impl FftPlan {
@@ -103,7 +111,13 @@ impl FftPlan {
             FftPlan {
                 n,
                 twiddles: Vec::new(),
-                bluestein: Some(Box::new(BluesteinPlan { m, chirp, b_fft: b, inner })),
+                bluestein: Some(Box::new(BluesteinPlan {
+                    m,
+                    chirp,
+                    b_fft: b,
+                    inner,
+                    scratch: Mutex::new(vec![Complex::ZERO; m]),
+                })),
             }
         }
     }
@@ -151,15 +165,20 @@ impl FftPlan {
     fn bluestein_forward(&self, bp: &BluesteinPlan, buf: &mut [Complex]) {
         let n = self.n;
         let m = bp.m;
-        let mut a = vec![Complex::ZERO; m];
+        // Reuse the plan's padded buffer (uncontended lock; `inner` is
+        // always radix-2, so no nested lock).
+        let mut guard = bp.scratch.lock().unwrap();
+        let a: &mut Vec<Complex> = &mut guard;
+        a.clear();
+        a.resize(m, Complex::ZERO);
         for k in 0..n {
             a[k] = buf[k].mul(bp.chirp[k]);
         }
-        bp.inner.forward(&mut a);
+        bp.inner.forward(a);
         for (av, bv) in a.iter_mut().zip(&bp.b_fft) {
             *av = av.mul(*bv);
         }
-        inverse_given_forward(&bp.inner, &mut a);
+        inverse_given_forward(&bp.inner, a);
         for k in 0..n {
             buf[k] = a[k].mul(bp.chirp[k]);
         }

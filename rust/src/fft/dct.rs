@@ -5,6 +5,9 @@
 //! materialized per device replica at training start (the paper's memory
 //! story: one matrix per GPU for the whole network + r indices per layer).
 
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
 use crate::tensor::Matrix;
 
 /// Orthogonal DCT-III matrix of order `n`.
@@ -27,6 +30,23 @@ pub fn dct3_matrix(n: usize) -> Matrix {
 /// row-wise type-II DCT of `G`.
 pub fn dct2_matrix(n: usize) -> Matrix {
     dct3_matrix(n).transpose()
+}
+
+/// Process-wide cache of DCT-II matrices: `SharedDct::new` is called per
+/// optimizer construction (experiment sweeps build hundreds), and the
+/// matrix is immutable — one `Arc<Matrix>` per order is the "one matrix per
+/// device" of the paper's memory story, taken literally. Like the Makhoul
+/// plan cache, entries are **retained for the process lifetime** (no
+/// eviction): each distinct order keeps a C×C f32 matrix resident (~16 MB
+/// at C=2048), the accepted trade for never recomputing the basis.
+static DCT2_CACHE: Mutex<BTreeMap<usize, Arc<Matrix>>> = Mutex::new(BTreeMap::new());
+
+pub fn cached_dct2_matrix(n: usize) -> Arc<Matrix> {
+    let mut cache = DCT2_CACHE.lock().unwrap();
+    cache
+        .entry(n)
+        .or_insert_with(|| Arc::new(dct2_matrix(n)))
+        .clone()
 }
 
 #[cfg(test)]
@@ -82,6 +102,15 @@ mod tests {
             let rel = (s.fro_norm() - g.fro_norm()).abs() / g.fro_norm().max(1e-9);
             assert!(rel < 1e-5, "rel={rel}");
         });
+    }
+
+    #[test]
+    fn cached_matrix_matches_fresh_and_is_shared() {
+        let fresh = dct2_matrix(24);
+        let c1 = cached_dct2_matrix(24);
+        let c2 = cached_dct2_matrix(24);
+        assert_eq!(*c1, fresh);
+        assert!(Arc::ptr_eq(&c1, &c2));
     }
 
     #[test]

@@ -1,10 +1,14 @@
 //! FFT / DCT substrate — the paper's O(n² log n) fast path.
 //!
 //! * [`complex`] — iterative radix-2 Cooley–Tukey + Bluestein chirp-z for
-//!   arbitrary lengths (the DCT side must work for any `d_model`).
-//! * [`dct`]     — DCT-II/III orthogonal matrices per Appendix A.
+//!   arbitrary lengths (the DCT side must work for any `d_model`); plans
+//!   carry their own scratch and never allocate after construction.
+//! * [`dct`]     — DCT-II/III orthogonal matrices per Appendix A, with a
+//!   per-order [`cached_dct2_matrix`] so replicas share one `Arc<Matrix>`.
 //! * [`makhoul`] — Makhoul's N-point fast DCT-II (Appendix D): permute →
-//!   FFT → multiply by `W_k = exp(-iπk/2N)` → real part → orthonormal scale.
+//!   real-input FFT (N/2-point complex for even N, split butterfly) →
+//!   multiply by `W_k = exp(-iπk/2N)` → real part → orthonormal scale.
+//!   [`cached_plan`] memoizes one plan per length.
 //!
 //! `makhoul::dct2_rows(G)` is bit-for-bit checked against `G · dct::dct2(C)`
 //! in tests and raced against blocked matmul in `bench_makhoul` (Tables 4–5).
@@ -14,5 +18,5 @@ pub mod dct;
 pub mod makhoul;
 
 pub use complex::{fft_inplace, Complex};
-pub use dct::{dct2_matrix, dct3_matrix};
-pub use makhoul::{dct2_rows, MakhoulPlan};
+pub use dct::{cached_dct2_matrix, dct2_matrix, dct3_matrix};
+pub use makhoul::{cached_plan, dct2_rows, MakhoulPlan};

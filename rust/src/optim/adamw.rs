@@ -1,5 +1,9 @@
 //! Dense AdamW (Loshchilov & Hutter, 2019) — the full-rank reference in
 //! every table of the paper.
+//!
+//! Already allocation-free: `AdamState::update` fuses the moment update and
+//! parameter write in one in-place pass, so it needs no [`Workspace`]
+//! (unlike the low-rank optimizers, whose projections produce temporaries).
 
 use std::collections::BTreeMap;
 

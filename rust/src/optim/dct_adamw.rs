@@ -7,16 +7,21 @@
 //! permutation-with-drop, no matmul needed. Per-layer state is two sets of
 //! `r` indices (vs LDAdam's two `C×r` projectors) plus optional quantized
 //! error feedback (8-bit is the paper's lowest non-degrading resolution).
+//!
+//! The step is allocation-free at steady state: every temporary (oriented
+//! gradient, similarities, projection, back-projection, update) lives in
+//! the optimizer's [`Workspace`] pool, enforced by the counting-allocator
+//! test in `tests/alloc_steady_state.rs`.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use crate::projection::{DctSelect, Projection, RankNorm, SharedDct};
-use crate::tensor::Matrix;
+use crate::tensor::{Matrix, Workspace};
 
 use super::common::{
-    deorient, orient, shared_dct_registry, AdamState, LayerMeta,
-    MemoryReport, Optimizer, OptimizerConfig,
+    shared_dct_registry, AdamState, LayerMeta, MemoryReport, Optimizer,
+    OptimizerConfig,
 };
 use super::error_feedback::EfBuffer;
 
@@ -36,6 +41,7 @@ pub struct DctAdamW {
     metas: Vec<LayerMeta>,
     states: Vec<LayerState>,
     shared: BTreeMap<usize, Arc<SharedDct>>,
+    ws: Workspace,
     update_interval: usize,
     beta1: f32,
     beta2: f32,
@@ -48,7 +54,22 @@ pub struct DctAdamW {
 /// `QᵀQ = I`, `R[i][j] = 1 ⇔ idx_prev[i] == idx_crt[j]`, so `m·R` keeps the
 /// columns whose index survives and zeroes the rest.
 pub fn rotate_fixed_basis(m: &Matrix, idx_prev: &[usize], idx_crt: &[usize]) -> Matrix {
-    let mut out = Matrix::zeros(m.rows, idx_crt.len());
+    let mut out = m.clone();
+    let mut ws = Workspace::new();
+    rotate_fixed_basis_into(&mut out, idx_prev, idx_crt, &mut ws);
+    out
+}
+
+/// In-place [`rotate_fixed_basis`]: `m` (R×|prev|) becomes the rotated
+/// R×|crt| matrix, staging through a workspace buffer.
+pub fn rotate_fixed_basis_into(
+    m: &mut Matrix,
+    idx_prev: &[usize],
+    idx_crt: &[usize],
+    ws: &mut Workspace,
+) {
+    debug_assert_eq!(m.cols, idx_prev.len());
+    let mut out = ws.take(m.rows, idx_crt.len());
     // Both index lists are sorted ascending — merge them.
     let (mut a, mut b) = (0usize, 0usize);
     while a < idx_prev.len() && b < idx_crt.len() {
@@ -57,14 +78,15 @@ pub fn rotate_fixed_basis(m: &Matrix, idx_prev: &[usize], idx_crt: &[usize]) -> 
             std::cmp::Ordering::Greater => b += 1,
             std::cmp::Ordering::Equal => {
                 for i in 0..m.rows {
-                    *out.at_mut(i, b) = m.at(i, a);
+                    out.data[i * idx_crt.len() + b] = m.data[i * m.cols + a];
                 }
                 a += 1;
                 b += 1;
             }
         }
     }
-    out
+    m.copy_from(&out);
+    ws.give(out);
 }
 
 impl DctAdamW {
@@ -99,6 +121,7 @@ impl DctAdamW {
             metas: metas.to_vec(),
             states,
             shared,
+            ws: Workspace::new(),
             update_interval: cfg.update_interval.max(1),
             beta1: cfg.beta1,
             beta2: cfg.beta2,
@@ -114,6 +137,7 @@ impl Optimizer for DctAdamW {
         self.step += 1;
         let t = self.step;
         let refresh = t == 1 || t % self.update_interval as u64 == 0;
+        let ws = &mut self.ws;
         for i in 0..params.len() {
             let meta = &self.metas[i];
             match &mut self.states[i] {
@@ -122,34 +146,45 @@ impl Optimizer for DctAdamW {
                     self.eps, self.weight_decay, t,
                 ),
                 LayerState::LowRank { select, idx_prev, m, v, ef, first } => {
-                    let mut g = orient(meta, &grads[i]);
+                    let (rr, cc) = meta.oriented();
+                    let r = select.rank();
+                    // oriented gradient (owned: EF mutates it)
+                    let mut g = ws.take(rr, cc);
+                    if meta.needs_transpose() {
+                        grads[i].transpose_into(&mut g);
+                    } else {
+                        g.copy_from(&grads[i]);
+                    }
                     ef.add_into(&mut g); // G ← G + Ξ
-                    let g_low = if refresh {
-                        let prev = select.indices().to_vec();
-                        let (_s, low) = select.refresh_full(&g);
+                    let mut g_low = ws.take(rr, r);
+                    if refresh {
+                        // remember the outgoing indices, then refresh
+                        idx_prev.clear();
+                        idx_prev.extend_from_slice(select.indices());
+                        select.refresh_and_project_into(&g, &mut g_low, ws);
                         if !*first {
                             // rotation = index matching (fixed basis!)
-                            *m = rotate_fixed_basis(m, &prev, select.indices());
-                            *v = rotate_fixed_basis(v, &prev, select.indices());
+                            rotate_fixed_basis_into(m, idx_prev, select.indices(), ws);
+                            rotate_fixed_basis_into(v, idx_prev, select.indices(), ws);
                             // |v·R| — rotation here is 0/1 so abs is a no-op,
                             // kept for parity with Algorithm 2
                             for x in &mut v.data {
                                 *x = x.abs();
                             }
                         }
-                        *idx_prev = prev;
                         *first = false;
-                        low
                     } else {
-                        select.project(&g)
-                    };
-                    // Ξ ← G − g·Qᵀ
-                    let back = select.back(&g_low);
-                    ef.store(&g.sub(&back));
+                        select.project_into(&g, &mut g_low, ws);
+                    }
+                    // Ξ ← G − g·Qᵀ  (residual built in the back buffer)
+                    let mut back = ws.take(rr, cc);
+                    select.back_into(&g_low, &mut back, ws);
+                    back.sub_from(&g);
+                    ef.store(&back);
                     // AdamW in the subspace
                     let bc1 = 1.0 - self.beta1.powi(t as i32);
                     let bc2 = 1.0 - self.beta2.powi(t as i32);
-                    let mut u_low = Matrix::zeros(g_low.rows, g_low.cols);
+                    let mut u_low = ws.take(rr, r);
                     for k in 0..g_low.data.len() {
                         let gi = g_low.data[k];
                         let mk = self.beta1 * m.data[k] + (1.0 - self.beta1) * gi;
@@ -158,9 +193,19 @@ impl Optimizer for DctAdamW {
                         v.data[k] = vk;
                         u_low.data[k] = (mk / bc1) / ((vk / bc2).sqrt() + self.eps);
                     }
-                    let u_full = deorient(meta, select.back(&u_low));
+                    // U = u·Qᵀ, applied in the original orientation without
+                    // materializing a transpose
+                    select.back_into(&u_low, &mut back, ws);
                     params[i].scale(1.0 - lr * self.weight_decay);
-                    params[i].axpy(-lr, &u_full);
+                    if meta.needs_transpose() {
+                        params[i].axpy_t(-lr, &back);
+                    } else {
+                        params[i].axpy(-lr, &back);
+                    }
+                    ws.give(u_low);
+                    ws.give(back);
+                    ws.give(g_low);
+                    ws.give(g);
                 }
             }
         }
@@ -222,6 +267,17 @@ mod tests {
     }
 
     #[test]
+    fn rotation_into_handles_rank_change() {
+        let mut rng = Pcg64::seed(7);
+        let mut m = Matrix::randn(3, 4, 1.0, &mut rng);
+        let want = rotate_fixed_basis(&m, &[0, 2, 5, 7], &[2, 3, 7]);
+        let mut ws = Workspace::new();
+        rotate_fixed_basis_into(&mut m, &[0, 2, 5, 7], &[2, 3, 7], &mut ws);
+        assert_eq!(m, want);
+        assert_eq!(m.shape(), (3, 3));
+    }
+
+    #[test]
     fn converges_on_quadratic() {
         let mut rng = Pcg64::seed(1);
         let t = Matrix::randn(10, 8, 0.5, &mut rng);
@@ -280,6 +336,25 @@ mod tests {
         if let LayerState::LowRank { idx_prev, .. } = &opt.states[0] {
             assert_eq!(idx_prev, &all_idx[2]);
         }
+    }
+
+    #[test]
+    fn wide_layer_transposed_update_matches_tall_layout() {
+        // A wide layer (orient → transpose) must produce the transpose of
+        // the update its tall twin produces from the transposed gradient.
+        let mut rng = Pcg64::seed(8);
+        let g = Matrix::randn(6, 15, 1.0, &mut rng); // wide 6×15 → oriented 15×6
+        let metas_wide = vec![LayerMeta::new("w", 6, 15, ParamKind::Linear)];
+        let metas_tall = vec![LayerMeta::new("w", 15, 6, ParamKind::Linear)];
+        let mut wide = DctAdamW::new(&metas_wide, &cfg(3));
+        let mut tall = DctAdamW::new(&metas_tall, &cfg(3));
+        let mut pw = vec![Matrix::zeros(6, 15)];
+        let mut pt = vec![Matrix::zeros(15, 6)];
+        for _ in 0..3 {
+            wide.step(&mut pw, &[g.clone()], 0.01);
+            tall.step(&mut pt, &[g.transpose()], 0.01);
+        }
+        assert!(pw[0].max_abs_diff(&pt[0].transpose()) < 1e-6);
     }
 
     #[test]

@@ -6,11 +6,10 @@
 //! (Table 3: "norm-based scaling").
 
 use crate::projection::{Projection, ProjectionKind};
-use crate::tensor::Matrix;
+use crate::tensor::{Matrix, Workspace};
 
 use super::common::{
-    deorient, orient, AdamState, LayerMeta, MemoryReport, Optimizer,
-    OptimizerConfig,
+    AdamState, LayerMeta, MemoryReport, Optimizer, OptimizerConfig,
 };
 
 enum LayerState {
@@ -25,6 +24,7 @@ enum LayerState {
 pub struct Fira {
     metas: Vec<LayerMeta>,
     states: Vec<LayerState>,
+    ws: Workspace,
     update_interval: usize,
     beta1: f32,
     beta2: f32,
@@ -67,6 +67,7 @@ impl Fira {
         Fira {
             metas: metas.to_vec(),
             states,
+            ws: Workspace::new(),
             update_interval: cfg.update_interval.max(1),
             beta1: cfg.beta1,
             beta2: cfg.beta2,
@@ -83,6 +84,7 @@ impl Optimizer for Fira {
         self.step += 1;
         let t = self.step;
         let refresh = t == 1 || t % self.update_interval as u64 == 0;
+        let ws = &mut self.ws;
         for i in 0..params.len() {
             let meta = &self.metas[i];
             match &mut self.states[i] {
@@ -91,15 +93,23 @@ impl Optimizer for Fira {
                     self.eps, self.weight_decay, t,
                 ),
                 LayerState::LowRank { proj, m, v } => {
-                    let g = orient(meta, &grads[i]);
-                    let g_low = if refresh {
-                        proj.refresh_and_project(&g)
+                    let (rr, cc) = meta.oriented();
+                    let mut obuf = ws.take(if meta.needs_transpose() { rr } else { 0 }, cc);
+                    let g: &Matrix = if meta.needs_transpose() {
+                        grads[i].transpose_into(&mut obuf);
+                        &obuf
                     } else {
-                        proj.project(&g)
+                        &grads[i]
                     };
+                    let mut g_low = ws.take(rr, proj.rank());
+                    if refresh {
+                        proj.refresh_and_project_into(g, &mut g_low, ws);
+                    } else {
+                        proj.project_into(g, &mut g_low, ws);
+                    }
                     let bc1 = 1.0 - self.beta1.powi(t as i32);
                     let bc2 = 1.0 - self.beta2.powi(t as i32);
-                    let mut u_low = Matrix::zeros(g_low.rows, g_low.cols);
+                    let mut u_low = ws.take(g_low.rows, g_low.cols);
                     for k in 0..g_low.data.len() {
                         let gi = g_low.data[k];
                         let mk = self.beta1 * m.data[k] + (1.0 - self.beta1) * gi;
@@ -111,13 +121,24 @@ impl Optimizer for Fira {
                     // φ = ‖u_low‖ / ‖g_low‖ — Adam-calibrated scaling for the
                     // residual (FIRA's norm-based scaling)
                     let phi = (u_low.fro_norm() / (g_low.fro_norm() + 1e-12)) as f32;
-                    let mut u = proj.back(&u_low);
-                    let back_g = proj.back(&g_low);
-                    let resid = g.sub(&back_g);
+                    let mut u = ws.take(rr, cc);
+                    proj.back_into(&u_low, &mut u, ws);
+                    // residual = g − back(g_low), built in place
+                    let mut resid = ws.take(rr, cc);
+                    proj.back_into(&g_low, &mut resid, ws);
+                    resid.sub_from(g);
                     u.axpy(phi, &resid);
-                    let u_full = deorient(meta, u);
                     params[i].scale(1.0 - lr * self.weight_decay);
-                    params[i].axpy(-lr, &u_full);
+                    if meta.needs_transpose() {
+                        params[i].axpy_t(-lr, &u);
+                    } else {
+                        params[i].axpy(-lr, &u);
+                    }
+                    ws.give(resid);
+                    ws.give(u);
+                    ws.give(u_low);
+                    ws.give(g_low);
+                    ws.give(obuf);
                 }
             }
         }

@@ -5,11 +5,10 @@
 //! Table 6 / Figure 4a.
 
 use crate::projection::{Projection, ProjectionKind};
-use crate::tensor::Matrix;
+use crate::tensor::{Matrix, Workspace};
 
 use super::common::{
-    deorient, orient, AdamState, LayerMeta, MemoryReport, Optimizer,
-    OptimizerConfig,
+    AdamState, LayerMeta, MemoryReport, Optimizer, OptimizerConfig,
 };
 
 enum LayerState {
@@ -24,6 +23,7 @@ enum LayerState {
 pub struct Frugal {
     metas: Vec<LayerMeta>,
     states: Vec<LayerState>,
+    ws: Workspace,
     update_interval: usize,
     beta1: f32,
     beta2: f32,
@@ -68,6 +68,7 @@ impl Frugal {
         Frugal {
             metas: metas.to_vec(),
             states,
+            ws: Workspace::new(),
             update_interval: cfg.update_interval.max(1),
             beta1: cfg.beta1,
             beta2: cfg.beta2,
@@ -85,6 +86,7 @@ impl Optimizer for Frugal {
         self.step += 1;
         let t = self.step;
         let refresh = t == 1 || t % self.update_interval as u64 == 0;
+        let ws = &mut self.ws;
         for i in 0..params.len() {
             let meta = &self.metas[i];
             match &mut self.states[i] {
@@ -93,16 +95,24 @@ impl Optimizer for Frugal {
                     self.eps, self.weight_decay, t,
                 ),
                 LayerState::LowRank { proj, m, v } => {
-                    let g = orient(meta, &grads[i]);
-                    let g_low = if refresh {
-                        proj.refresh_and_project(&g)
+                    let (rr, cc) = meta.oriented();
+                    let mut obuf = ws.take(if meta.needs_transpose() { rr } else { 0 }, cc);
+                    let g: &Matrix = if meta.needs_transpose() {
+                        grads[i].transpose_into(&mut obuf);
+                        &obuf
                     } else {
-                        proj.project(&g)
+                        &grads[i]
                     };
+                    let mut g_low = ws.take(rr, proj.rank());
+                    if refresh {
+                        proj.refresh_and_project_into(g, &mut g_low, ws);
+                    } else {
+                        proj.project_into(g, &mut g_low, ws);
+                    }
                     // state-full branch: AdamW on the subspace gradient
                     let bc1 = 1.0 - self.beta1.powi(t as i32);
                     let bc2 = 1.0 - self.beta2.powi(t as i32);
-                    let mut u_low = Matrix::zeros(g_low.rows, g_low.cols);
+                    let mut u_low = ws.take(g_low.rows, g_low.cols);
                     for k in 0..g_low.data.len() {
                         let gi = g_low.data[k];
                         let mk = self.beta1 * m.data[k] + (1.0 - self.beta1) * gi;
@@ -111,19 +121,29 @@ impl Optimizer for Frugal {
                         v.data[k] = vk;
                         u_low.data[k] = (mk / bc1) / ((vk / bc2).sqrt() + self.eps);
                     }
-                    let mut u = proj.back(&u_low);
+                    let mut u = ws.take(rr, cc);
+                    proj.back_into(&u_low, &mut u, ws);
                     // state-free branch: SignSGD on the residual
-                    let back_g = proj.back(&g_low);
-                    let resid = g.sub(&back_g);
+                    let mut resid = ws.take(rr, cc);
+                    proj.back_into(&g_low, &mut resid, ws);
+                    resid.sub_from(g);
                     for (uv, &rv) in u.data.iter_mut().zip(resid.data.iter()) {
                         // rust's signum(0.0) == 1.0; SignSGD wants sign(0) = 0
                         if rv != 0.0 {
                             *uv += self.sign_lr_scale * rv.signum();
                         }
                     }
-                    let u_full = deorient(meta, u);
                     params[i].scale(1.0 - lr * self.weight_decay);
-                    params[i].axpy(-lr, &u_full);
+                    if meta.needs_transpose() {
+                        params[i].axpy_t(-lr, &u);
+                    } else {
+                        params[i].axpy(-lr, &u);
+                    }
+                    ws.give(resid);
+                    ws.give(u);
+                    ws.give(u_low);
+                    ws.give(g_low);
+                    ws.give(obuf);
                 }
             }
         }

@@ -5,11 +5,10 @@
 //! memory overhead DCT-AdamW's index-only state removes.
 
 use crate::projection::{BlockPower, Projection};
-use crate::tensor::{matmul, Matrix};
+use crate::tensor::{matmul_into, Matrix, Workspace};
 
 use super::common::{
-    deorient, orient, AdamState, LayerMeta, MemoryReport, Optimizer,
-    OptimizerConfig,
+    AdamState, LayerMeta, MemoryReport, Optimizer, OptimizerConfig,
 };
 use super::error_feedback::EfBuffer;
 use crate::optim::common::EfMode;
@@ -29,6 +28,7 @@ enum LayerState {
 pub struct LdAdamW {
     metas: Vec<LayerMeta>,
     states: Vec<LayerState>,
+    ws: Workspace,
     beta1: f32,
     beta2: f32,
     eps: f32,
@@ -61,6 +61,7 @@ impl LdAdamW {
         LdAdamW {
             metas: metas.to_vec(),
             states,
+            ws: Workspace::new(),
             beta1: cfg.beta1,
             beta2: cfg.beta2,
             eps: cfg.eps,
@@ -74,6 +75,7 @@ impl Optimizer for LdAdamW {
     fn step(&mut self, params: &mut [Matrix], grads: &[Matrix], lr: f32) {
         self.step += 1;
         let t = self.step;
+        let ws = &mut self.ws;
         for i in 0..params.len() {
             let meta = &self.metas[i];
             match &mut self.states[i] {
@@ -82,29 +84,46 @@ impl Optimizer for LdAdamW {
                     self.eps, self.weight_decay, t,
                 ),
                 LayerState::LowRank { proj, prev_basis, m, v, ef, first } => {
-                    let mut g = orient(meta, &grads[i]);
+                    let (rr, cc) = meta.oriented();
+                    let r = proj.rank();
+                    // oriented gradient (owned: EF mutates it)
+                    let mut g = ws.take(rr, cc);
+                    if meta.needs_transpose() {
+                        grads[i].transpose_into(&mut g);
+                    } else {
+                        g.copy_from(&grads[i]);
+                    }
                     // G ← G + Ξ (error feedback)
                     ef.add_into(&mut g);
                     // refresh subspace every step (block power, warm start)
-                    let g_low = proj.refresh_and_project(&g);
+                    let mut g_low = ws.take(rr, r);
+                    proj.refresh_and_project_into(&g, &mut g_low, ws);
                     // rotate moments into the new subspace
                     if !*first {
-                        let rot = proj.rotation_from(prev_basis); // r×r
-                        *m = matmul(m, &rot);
-                        *v = matmul(v, &rot);
+                        let mut rot = ws.take(r, r);
+                        proj.rotation_into(prev_basis, &mut rot, ws);
+                        let mut tmp = ws.take(rr, r);
+                        matmul_into(m, &rot, &mut tmp);
+                        m.copy_from(&tmp);
+                        matmul_into(v, &rot, &mut tmp);
+                        v.copy_from(&tmp);
                         for x in &mut v.data {
                             *x = x.abs();
                         }
+                        ws.give(tmp);
+                        ws.give(rot);
                     }
                     *first = false;
-                    *prev_basis = proj.basis();
-                    // store new projection error
-                    let back = proj.back(&g_low);
-                    ef.store(&g.sub(&back));
+                    proj.basis_into(prev_basis);
+                    // store new projection error (residual in `back`)
+                    let mut back = ws.take(rr, cc);
+                    proj.back_into(&g_low, &mut back, ws);
+                    back.sub_from(&g);
+                    ef.store(&back);
                     // Adam math in the subspace
                     let bc1 = 1.0 - self.beta1.powi(t as i32);
                     let bc2 = 1.0 - self.beta2.powi(t as i32);
-                    let mut u_low = Matrix::zeros(g_low.rows, g_low.cols);
+                    let mut u_low = ws.take(rr, r);
                     for k in 0..g_low.data.len() {
                         let gi = g_low.data[k];
                         let mk = self.beta1 * m.data[k] + (1.0 - self.beta1) * gi;
@@ -113,9 +132,17 @@ impl Optimizer for LdAdamW {
                         v.data[k] = vk;
                         u_low.data[k] = (mk / bc1) / ((vk / bc2).sqrt() + self.eps);
                     }
-                    let u_full = deorient(meta, proj.back(&u_low));
+                    proj.back_into(&u_low, &mut back, ws);
                     params[i].scale(1.0 - lr * self.weight_decay);
-                    params[i].axpy(-lr, &u_full);
+                    if meta.needs_transpose() {
+                        params[i].axpy_t(-lr, &back);
+                    } else {
+                        params[i].axpy(-lr, &back);
+                    }
+                    ws.give(u_low);
+                    ws.give(back);
+                    ws.give(g_low);
+                    ws.give(g);
                 }
             }
         }

@@ -20,11 +20,11 @@ use std::sync::Arc;
 
 use crate::linalg::newton_schulz;
 use crate::projection::{DctSelect, Projection, RankNorm, SharedDct};
-use crate::tensor::Matrix;
+use crate::tensor::{Matrix, Workspace};
 
 use super::common::{
-    deorient, orient, shape_factor, shared_dct_registry, AdamState, LayerMeta,
-    MemoryReport, Optimizer, OptimizerConfig,
+    shape_factor, shared_dct_registry, AdamState, LayerMeta, MemoryReport,
+    Optimizer, OptimizerConfig,
 };
 
 enum LayerState {
@@ -39,6 +39,7 @@ pub struct Trion {
     metas: Vec<LayerMeta>,
     states: Vec<LayerState>,
     shared: BTreeMap<usize, Arc<SharedDct>>,
+    ws: Workspace,
     rank: usize,
     mu: f32,
     ns_steps: usize,
@@ -81,6 +82,7 @@ impl Trion {
             metas: metas.to_vec(),
             states,
             shared,
+            ws: Workspace::new(),
             rank: cfg.rank,
             mu: cfg.mu,
             ns_steps: cfg.ns_steps,
@@ -106,6 +108,7 @@ impl Trion {
 impl Optimizer for Trion {
     fn step(&mut self, params: &mut [Matrix], grads: &[Matrix], lr: f32) {
         self.step += 1;
+        let ws = &mut self.ws;
         for i in 0..params.len() {
             let meta = &self.metas[i];
             match &mut self.states[i] {
@@ -114,28 +117,47 @@ impl Optimizer for Trion {
                     self.eps, 0.0, self.step,
                 ),
                 LayerState::LowRank { momentum, select } => {
-                    let g = orient(meta, &grads[i]);
-                    // B = M + G
-                    momentum.axpy(1.0, &g);
+                    let (rr, cc) = meta.oriented();
+                    let r = select.rank();
+                    // B = M + G — accumulate the gradient straight into the
+                    // momentum, transposing on the fly for wide layers
+                    if meta.needs_transpose() {
+                        momentum.axpy_t(1.0, &grads[i]);
+                    } else {
+                        momentum.axpy(1.0, &grads[i]);
+                    }
                     // S = DCT(B); select top-r; b = S[:, i_t]  (one pass)
-                    let (_s, b_low) = select.refresh_full(momentum);
+                    let mut b_low = ws.take(rr, r);
+                    select.refresh_and_project_into(momentum, &mut b_low, ws);
                     // error feedback: M = B − (1−μ)·b·Qᵀ
-                    let back = select.back(&b_low);
+                    let mut back = ws.take(rr, cc);
+                    select.back_into(&b_low, &mut back, ws);
                     momentum.axpy(-(1.0 - self.mu), &back);
                     // Newton–Schulz on the LOW-RANK momentum (R×r)
                     let o_low = newton_schulz(&b_low, self.ns_steps);
-                    // O = o·Qᵀ
-                    let o = select.back(&o_low);
                     if self.instrument {
-                        let mut b_now = momentum.clone();
-                        b_now.axpy(1.0 - self.mu, &back); // restore B
-                        self.errors
-                            .insert(meta.name.clone(), b_now.sub(&o).fro_norm());
+                        // restore B while `back` still holds back(b_low),
+                        // then repurpose `back` for O — computed only once
+                        let mut b_now = ws.take(rr, cc);
+                        b_now.copy_from(momentum);
+                        b_now.axpy(1.0 - self.mu, &back);
+                        select.back_into(&o_low, &mut back, ws); // back = O
+                        b_now.axpy(-1.0, &back);
+                        self.errors.insert(meta.name.clone(), b_now.fro_norm());
+                        ws.give(b_now);
+                    } else {
+                        // O = o·Qᵀ, applied without materializing the transpose
+                        select.back_into(&o_low, &mut back, ws);
                     }
-                    let (rr, cc) = o.shape();
-                    let o_full = deorient(meta, o);
                     params[i].scale(1.0 - lr * self.weight_decay);
-                    params[i].axpy(-lr * shape_factor(rr, cc), &o_full);
+                    let scale = -lr * shape_factor(rr, cc);
+                    if meta.needs_transpose() {
+                        params[i].axpy_t(scale, &back);
+                    } else {
+                        params[i].axpy(scale, &back);
+                    }
+                    ws.give(back);
+                    ws.give(b_low);
                 }
             }
         }

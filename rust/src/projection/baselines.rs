@@ -3,12 +3,17 @@
 //! permutation (FRUGAL's ablations).
 
 use crate::linalg::{block_power_iter, qr_thin, svd_thin};
-use crate::tensor::{matmul, matmul_a_bt, Matrix};
+use crate::tensor::{
+    matmul, matmul_a_bt, matmul_a_bt_into, matmul_at_b_into, matmul_into,
+    Matrix, Workspace,
+};
 use crate::util::Pcg64;
 
 use super::Projection;
 
-/// Shared implementation for methods that materialize `Q_r (C×r)`.
+/// Shared implementation for methods that materialize `Q_r (C×r)` —
+/// including the allocation-free `_into` family (the subspace *refresh*
+/// of these baselines still allocates; project/back are the per-step ops).
 macro_rules! dense_basis_impl {
     () => {
         fn project(&self, g: &Matrix) -> Matrix {
@@ -21,6 +26,22 @@ macro_rules! dense_basis_impl {
 
         fn basis(&self) -> Matrix {
             self.q_r.clone()
+        }
+
+        fn project_into(&self, g: &Matrix, out: &mut Matrix, _ws: &mut Workspace) {
+            matmul_into(g, &self.q_r, out);
+        }
+
+        fn back_into(&self, low: &Matrix, out: &mut Matrix, _ws: &mut Workspace) {
+            matmul_a_bt_into(low, &self.q_r, out);
+        }
+
+        fn basis_into(&self, out: &mut Matrix) {
+            out.copy_from(&self.q_r);
+        }
+
+        fn rotation_into(&self, prev_basis: &Matrix, out: &mut Matrix, _ws: &mut Workspace) {
+            matmul_at_b_into(prev_basis, &self.q_r, out);
         }
 
         fn state_bytes(&self) -> u64 {
@@ -161,14 +182,24 @@ impl Projection for RandPerm {
 
     fn back(&self, low: &Matrix) -> Matrix {
         let mut out = Matrix::zeros(low.rows, self.cols);
+        let mut ws = Workspace::new();
+        self.back_into(low, &mut out, &mut ws);
+        out
+    }
+
+    fn project_into(&self, g: &Matrix, out: &mut Matrix, _ws: &mut Workspace) {
+        g.select_columns_into(&self.idx, out);
+    }
+
+    fn back_into(&self, low: &Matrix, out: &mut Matrix, _ws: &mut Workspace) {
+        out.resize_to(low.rows, self.cols);
         for i in 0..low.rows {
             let src = low.row(i);
-            let dst = out.row_mut(i);
+            let dst = &mut out.data[i * self.cols..(i + 1) * self.cols];
             for (k, &j) in self.idx.iter().enumerate() {
                 dst[j] = src[k];
             }
         }
-        out
     }
 
     fn basis(&self) -> Matrix {

@@ -1,26 +1,33 @@
 //! DCT dynamic column selection (§2.1 + Appendix B) — the paper's method.
 //!
 //! One [`SharedDct`] per device holds the `C×C` DCT-II matrix and a Makhoul
-//! FFT plan, built once at training start. Each layer keeps only the `r`
-//! selected column indices; the effective projector `Q_r = Q[:, idx]` is
-//! re-gathered on demand.
+//! FFT plan (both process-cached per order, built once). Each layer keeps
+//! only the `r` selected column indices; the effective projector
+//! `Q_r = Q[:, idx]` is re-gathered on demand.
+//!
+//! The hot path is fully workspace-backed: `refresh_and_project_into` runs
+//! Makhoul into a pooled buffer, ranks columns with an O(C) partition
+//! (`select_nth_unstable_by`, not a full sort) and gathers the selection in
+//! place — zero heap allocations at steady state.
 
 use std::sync::Arc;
 
-use crate::fft::{dct2_matrix, MakhoulPlan};
-use crate::tensor::{matmul, matmul_a_bt, Matrix};
+use crate::fft::{cached_dct2_matrix, cached_plan, MakhoulPlan};
+use crate::tensor::{matmul, matmul_a_bt, matmul_a_bt_into, matmul_into, Matrix, Workspace};
 
 use super::{Projection, RankNorm};
 
 /// Per-device shared DCT state: the orthogonal matrix + the FFT plan.
+/// Both members come from the per-order process caches, so constructing a
+/// `SharedDct` after the first is index lookups, not trig.
 pub struct SharedDct {
-    q: Matrix,          // DCT-II, C×C
-    plan: MakhoulPlan,  // fast similarity path
+    q: Arc<Matrix>,         // DCT-II, C×C (shared per order)
+    plan: Arc<MakhoulPlan>, // fast similarity path (shared per order)
 }
 
 impl SharedDct {
     pub fn new(dim: usize) -> Self {
-        SharedDct { q: dct2_matrix(dim), plan: MakhoulPlan::new(dim) }
+        SharedDct { q: cached_dct2_matrix(dim), plan: cached_plan(dim) }
     }
 
     pub fn dim(&self) -> usize {
@@ -28,7 +35,7 @@ impl SharedDct {
     }
 
     pub fn matrix(&self) -> &Matrix {
-        &self.q
+        self.q.as_ref()
     }
 
     /// Similarities `S = G·Q` — Makhoul FFT path or plain matmul.
@@ -36,7 +43,16 @@ impl SharedDct {
         if use_makhoul {
             self.plan.run(g)
         } else {
-            matmul(g, &self.q)
+            matmul(g, self.q.as_ref())
+        }
+    }
+
+    /// Allocation-free [`SharedDct::similarities`].
+    pub fn similarities_into(&self, g: &Matrix, use_makhoul: bool, out: &mut Matrix) {
+        if use_makhoul {
+            self.plan.run_into(g, out);
+        } else {
+            matmul_into(g, self.q.as_ref(), out);
         }
     }
 
@@ -49,20 +65,77 @@ impl SharedDct {
 /// `r`, in ascending index order (deterministic tie-break by index — keeps
 /// the rust-native path bit-identical with the AOT graphs).
 pub fn select_top_columns(s: &Matrix, r: usize, norm: RankNorm) -> Vec<usize> {
-    let scores = match norm {
-        RankNorm::L1 => s.col_l1_norms(),
-        RankNorm::L2 => s.col_l2_norms(),
-    };
-    let mut order: Vec<usize> = (0..s.cols).collect();
-    order.sort_by(|&a, &b| {
-        scores[b]
-            .partial_cmp(&scores[a])
-            .unwrap_or(std::cmp::Ordering::Equal)
-            .then(a.cmp(&b))
-    });
-    let mut idx = order[..r.min(order.len())].to_vec();
-    idx.sort_unstable();
+    let mut ws = Workspace::new();
+    let mut idx = Vec::new();
+    select_top_columns_into(s, r, norm, &mut ws, &mut idx);
     idx
+}
+
+/// Allocation-free [`select_top_columns`]: O(C) average instead of
+/// O(C log C) — `select_nth_unstable_by` partitions the top `r` under the
+/// exact comparator the old full sort used (score descending, index
+/// ascending on ties), then only the `r` winners are index-sorted.
+pub fn select_top_columns_into(
+    s: &Matrix,
+    r: usize,
+    norm: RankNorm,
+    ws: &mut Workspace,
+    idx: &mut Vec<usize>,
+) {
+    let c = s.cols;
+    // Column norms, f64-accumulated then narrowed to f32 — exactly what
+    // `col_l1_norms`/`col_l2_norms` produce, so ranking (ties included) is
+    // unchanged from the sorting implementation.
+    let mut acc = ws.take_f64(c);
+    for i in 0..s.rows {
+        let row = s.row(i);
+        match norm {
+            RankNorm::L2 => {
+                for (a, &v) in acc.iter_mut().zip(row) {
+                    *a += (v as f64) * (v as f64);
+                }
+            }
+            RankNorm::L1 => {
+                for (a, &v) in acc.iter_mut().zip(row) {
+                    *a += v.abs() as f64;
+                }
+            }
+        }
+    }
+    let mut scores = ws.take_f32(c);
+    match norm {
+        RankNorm::L2 => {
+            for (sc, &a) in scores.iter_mut().zip(acc.iter()) {
+                *sc = a.sqrt() as f32;
+            }
+        }
+        RankNorm::L1 => {
+            for (sc, &a) in scores.iter_mut().zip(acc.iter()) {
+                *sc = a as f32;
+            }
+        }
+    }
+
+    let k = r.min(c);
+    let mut order = ws.take_usize(c);
+    for (i, o) in order.iter_mut().enumerate() {
+        *o = i;
+    }
+    if k > 0 && k < c {
+        order.select_nth_unstable_by(k - 1, |&a, &b| {
+            scores[b]
+                .partial_cmp(&scores[a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+    }
+    idx.clear();
+    idx.extend_from_slice(&order[..k]);
+    idx.sort_unstable();
+
+    ws.give_usize(order);
+    ws.give_f32(scores);
+    ws.give_f64(acc);
 }
 
 /// One layer's DCT-selection state: `r` column indices into the shared Q.
@@ -93,7 +166,7 @@ impl DctSelect {
     pub fn refresh_full(&mut self, g: &Matrix) -> (Matrix, Matrix) {
         let s = self.shared.similarities(g, self.use_makhoul);
         self.idx = select_top_columns(&s, self.rank, self.norm);
-        self.basis_cache = self.shared.matrix().select_columns(&self.idx);
+        self.shared.matrix().select_columns_into(&self.idx, &mut self.basis_cache);
         let low = s.select_columns(&self.idx);
         (s, low)
     }
@@ -116,6 +189,29 @@ impl Projection for DctSelect {
 
     fn basis(&self) -> Matrix {
         self.basis_cache.clone()
+    }
+
+    // -- workspace-backed hot path ---------------------------------------
+
+    fn refresh_and_project_into(&mut self, g: &Matrix, out: &mut Matrix, ws: &mut Workspace) {
+        let mut s = ws.take(g.rows, self.shared.dim());
+        self.shared.similarities_into(g, self.use_makhoul, &mut s);
+        select_top_columns_into(&s, self.rank, self.norm, ws, &mut self.idx);
+        self.shared.matrix().select_columns_into(&self.idx, &mut self.basis_cache);
+        s.select_columns_into(&self.idx, out);
+        ws.give(s);
+    }
+
+    fn project_into(&self, g: &Matrix, out: &mut Matrix, _ws: &mut Workspace) {
+        matmul_into(g, &self.basis_cache, out);
+    }
+
+    fn back_into(&self, low: &Matrix, out: &mut Matrix, _ws: &mut Workspace) {
+        matmul_a_bt_into(low, &self.basis_cache, out);
+    }
+
+    fn basis_into(&self, out: &mut Matrix) {
+        out.copy_from(&self.basis_cache);
     }
 
     fn state_bytes(&self) -> u64 {
@@ -166,6 +262,64 @@ mod tests {
             sorted.dedup();
             assert_eq!(sorted, idx);
         }
+    }
+
+    /// Reference implementation: the pre-partition full sort.
+    fn select_by_full_sort(s: &Matrix, r: usize, norm: RankNorm) -> Vec<usize> {
+        let scores = match norm {
+            RankNorm::L1 => s.col_l1_norms(),
+            RankNorm::L2 => s.col_l2_norms(),
+        };
+        let mut order: Vec<usize> = (0..s.cols).collect();
+        order.sort_by(|&a, &b| {
+            scores[b]
+                .partial_cmp(&scores[a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        let mut idx = order[..r.min(order.len())].to_vec();
+        idx.sort_unstable();
+        idx
+    }
+
+    #[test]
+    fn prop_partition_matches_full_sort_with_ties() {
+        // The O(C) partition must pick the exact same set as the O(C log C)
+        // sort, including under heavy ties (duplicated columns).
+        proptest::check("partition==sort", 12, |rng| {
+            let rows = proptest::size(rng, 1, 8);
+            let cols = proptest::size(rng, 2, 40);
+            let mut s = Matrix::randn(rows, cols, 1.0, rng);
+            // duplicate a few columns to force exact score ties
+            for _ in 0..cols / 3 {
+                let from = proptest::size(rng, 0, cols - 1);
+                let to = proptest::size(rng, 0, cols - 1);
+                for i in 0..rows {
+                    *s.at_mut(i, to) = s.at(i, from);
+                }
+            }
+            for norm in [RankNorm::L1, RankNorm::L2] {
+                for r in [0usize, 1, cols / 2, cols, cols + 3] {
+                    let got = select_top_columns(&s, r, norm);
+                    let want = select_by_full_sort(&s, r, norm);
+                    assert_eq!(got, want, "cols={cols} r={r} norm={norm:?}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn select_into_reuses_buffers() {
+        let mut rng = Pcg64::seed(2);
+        let s = Matrix::randn(5, 30, 1.0, &mut rng);
+        let mut ws = Workspace::new();
+        let mut idx = Vec::new();
+        select_top_columns_into(&s, 6, RankNorm::L2, &mut ws, &mut idx);
+        let first = idx.clone();
+        // second call reuses idx + pooled scratch and must agree
+        select_top_columns_into(&s, 6, RankNorm::L2, &mut ws, &mut idx);
+        assert_eq!(idx, first);
+        assert_eq!(idx, select_top_columns(&s, 6, RankNorm::L2));
     }
 
     #[test]
@@ -219,6 +373,22 @@ mod tests {
     }
 
     #[test]
+    fn refresh_into_matches_refresh_full() {
+        let mut rng = Pcg64::seed(6);
+        let g = Matrix::randn(9, 26, 1.0, &mut rng);
+        let shared = Arc::new(SharedDct::new(26));
+        let mut p1 = DctSelect::new(shared.clone(), 5, RankNorm::L2, true);
+        let mut p2 = DctSelect::new(shared, 5, RankNorm::L2, true);
+        let (_, low1) = p1.refresh_full(&g);
+        let mut ws = Workspace::new();
+        let mut low2 = Matrix::zeros(1, 1);
+        p2.refresh_and_project_into(&g, &mut low2, &mut ws);
+        assert_eq!(low1, low2);
+        assert_eq!(p1.indices(), p2.indices());
+        assert_eq!(p1.basis(), p2.basis());
+    }
+
+    #[test]
     fn full_rank_selection_is_lossless() {
         let mut rng = Pcg64::seed(5);
         let g = Matrix::randn(9, 16, 1.0, &mut rng);
@@ -226,5 +396,15 @@ mod tests {
         let mut p = DctSelect::new(shared, 16, RankNorm::L2, false);
         let low = p.refresh_and_project(&g);
         assert!(g.sub(&p.back(&low)).fro_norm() < 1e-4);
+    }
+
+    #[test]
+    fn shared_dct_replicas_share_storage() {
+        let a = SharedDct::new(32);
+        let b = SharedDct::new(32);
+        assert!(std::ptr::eq(
+            a.matrix() as *const Matrix,
+            b.matrix() as *const Matrix
+        ));
     }
 }

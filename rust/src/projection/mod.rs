@@ -24,10 +24,12 @@ mod baselines;
 
 use std::sync::Arc;
 
-use crate::tensor::Matrix;
+use crate::tensor::{Matrix, Workspace};
 
 pub use baselines::{BlockPower, RandPerm, RandomSemiOrtho, SvdProj};
-pub use dct_select::{select_top_columns, DctSelect, SharedDct};
+pub use dct_select::{
+    select_top_columns, select_top_columns_into, DctSelect, SharedDct,
+};
 
 /// Ranking norm for dynamic column selection (§2.1: ℓ1 or ℓ2).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -106,6 +108,44 @@ pub trait Projection: Send {
     /// basis and the current one (LDAdam / DCT-AdamW momentum rotation).
     fn rotation_from(&self, prev_basis: &Matrix) -> Matrix {
         crate::tensor::matmul_at_b(prev_basis, &self.basis())
+    }
+
+    // -- workspace-backed variants (the optimizer hot path) ---------------
+    //
+    // Defaults delegate to the allocating methods so every implementation
+    // stays correct; the hot implementations (DctSelect, the dense-basis
+    // baselines) override them with true `_into` kernels. The contract is
+    // bit-identical output in `out` (resized in place) with no allocation
+    // beyond workspace warmup.
+
+    /// Allocation-free [`Projection::refresh_and_project`].
+    fn refresh_and_project_into(&mut self, g: &Matrix, out: &mut Matrix, _ws: &mut Workspace) {
+        let low = self.refresh_and_project(g);
+        out.copy_from(&low);
+    }
+
+    /// Allocation-free [`Projection::project`].
+    fn project_into(&self, g: &Matrix, out: &mut Matrix, _ws: &mut Workspace) {
+        let low = self.project(g);
+        out.copy_from(&low);
+    }
+
+    /// Allocation-free [`Projection::back`].
+    fn back_into(&self, low: &Matrix, out: &mut Matrix, _ws: &mut Workspace) {
+        let full = self.back(low);
+        out.copy_from(&full);
+    }
+
+    /// Allocation-free [`Projection::basis`].
+    fn basis_into(&self, out: &mut Matrix) {
+        let b = self.basis();
+        out.copy_from(&b);
+    }
+
+    /// Allocation-free [`Projection::rotation_from`].
+    fn rotation_into(&self, prev_basis: &Matrix, out: &mut Matrix, _ws: &mut Workspace) {
+        let rot = self.rotation_from(prev_basis);
+        out.copy_from(&rot);
     }
 
     /// Persistent per-layer state bytes (what lives in optimizer memory
@@ -188,6 +228,42 @@ mod tests {
                     "{} not idempotent",
                     kind.name()
                 );
+            }
+        });
+    }
+
+    #[test]
+    fn prop_into_variants_bit_identical_for_all_kinds() {
+        // Every projection family, every `_into` override: outputs must be
+        // bit-identical to the allocating path even into dirty buffers.
+        proptest::check("projection-into==allocating", 6, |rng| {
+            let rows = proptest::size(rng, 2, 20);
+            let cols = proptest::size(rng, 4, 28);
+            let r = proptest::size(rng, 1, cols.min(rows).min(6));
+            let g = Matrix::randn(rows, cols, 1.0, rng);
+            let shared = Arc::new(SharedDct::new(cols));
+            let mut ws = crate::tensor::Workspace::new();
+            let mut out = Matrix::randn(3, 3, 1.0, rng); // dirty
+            for kind in all_kinds() {
+                // two independently-built instances must agree step by step
+                let mut p_alloc = kind.build(cols, r, Some(shared.clone()), 7);
+                let mut p_into = kind.build(cols, r, Some(shared.clone()), 7);
+                let low = p_alloc.refresh_and_project(&g);
+                p_into.refresh_and_project_into(&g, &mut out, &mut ws);
+                assert_eq!(out, low, "{}: refresh_and_project", kind.name());
+
+                p_into.project_into(&g, &mut out, &mut ws);
+                assert_eq!(out, p_alloc.project(&g), "{}: project", kind.name());
+
+                p_into.back_into(&low, &mut out, &mut ws);
+                assert_eq!(out, p_alloc.back(&low), "{}: back", kind.name());
+
+                p_into.basis_into(&mut out);
+                assert_eq!(out, p_alloc.basis(), "{}: basis", kind.name());
+
+                let prev = p_alloc.basis();
+                p_into.rotation_into(&prev, &mut out, &mut ws);
+                assert_eq!(out, p_alloc.rotation_from(&prev), "{}: rotation", kind.name());
             }
         });
     }

@@ -198,16 +198,69 @@ mod tests {
         PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
     }
 
+    /// `None` (→ skip) when `make artifacts` hasn't been run in this
+    /// environment; the parsing logic itself is covered by the synthetic
+    /// manifest test below either way.
+    fn manifest_or_skip() -> Option<Manifest> {
+        match Manifest::load(manifest_dir()) {
+            Ok(m) => Some(m),
+            Err(e) if std::env::var("FFT_SUBSPACE_REQUIRE_PJRT").is_ok_and(|v| !v.is_empty() && v != "0") => {
+                panic!("FFT_SUBSPACE_REQUIRE_PJRT set but artifacts missing: {e}")
+            }
+            Err(e) => {
+                eprintln!("skipping manifest test (run `make artifacts`): {e}");
+                None
+            }
+        }
+    }
+
+    #[test]
+    fn parses_synthetic_manifest() {
+        // A self-contained manifest exercise that needs no artifacts on
+        // disk. Per-process dir: concurrent test runs must not race on the
+        // manifest file.
+        let dir = std::env::temp_dir()
+            .join(format!("fft_subspace_manifest_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"defaults":{"rank":16},"artifacts":[
+                {"name":"fwdbwd_nano","file":"f.hlo.txt","kind":"fwdbwd",
+                 "inputs":[{"name":"w","shape":[2,3]},
+                           {"name":"tokens","shape":[1,4],"dtype":"i32"}],
+                 "outputs":[{"name":"loss","shape":[]}],
+                 "meta":{"d_model":64,"n_layers":1,"seq_len":4,"vocab":257,
+                         "num_params":6,"batch_per_worker":1,
+                         "params":[{"name":"w","shape":[2,3],"kind":"linear"}]}}
+            ]}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.default_rank, 16);
+        assert_eq!(m.presets(), vec!["nano".to_string()]);
+        let spec = m.model_spec("nano").unwrap();
+        assert_eq!(spec.d_model, 64);
+        assert_eq!(spec.params[0].kind, ParamKind::Linear);
+        assert_eq!(m.find("fwdbwd_nano").unwrap().inputs[1].dtype, "i32");
+        assert!(m.optimizer_graph("trion", 2, 3, 16).is_none());
+    }
+
     #[test]
     fn loads_real_manifest() {
-        let m = Manifest::load(manifest_dir()).expect("make artifacts first");
+        let m = match manifest_or_skip() {
+            Some(m) => m,
+            None => return,
+        };
         assert!(m.artifacts.len() >= 10);
         assert!(m.presets().contains(&"nano".to_string()));
     }
 
     #[test]
     fn model_spec_roundtrip() {
-        let m = Manifest::load(manifest_dir()).unwrap();
+        let m = match manifest_or_skip() {
+            Some(m) => m,
+            None => return,
+        };
         let spec = m.model_spec("nano").unwrap();
         assert_eq!(spec.d_model, 64);
         assert_eq!(spec.params[0].name, "embed");
@@ -218,7 +271,10 @@ mod tests {
 
     #[test]
     fn fwdbwd_signature_consistent() {
-        let m = Manifest::load(manifest_dir()).unwrap();
+        let m = match manifest_or_skip() {
+            Some(m) => m,
+            None => return,
+        };
         let spec = m.model_spec("nano").unwrap();
         let art = m.find("fwdbwd_nano").unwrap();
         // inputs = params + tokens; outputs = loss + grads
@@ -230,7 +286,10 @@ mod tests {
 
     #[test]
     fn optimizer_graph_lookup() {
-        let m = Manifest::load(manifest_dir()).unwrap();
+        let m = match manifest_or_skip() {
+            Some(m) => m,
+            None => return,
+        };
         let r = m.default_rank;
         assert!(m.optimizer_graph("trion", 64, 64, r).is_some());
         assert!(m.optimizer_graph("trion", 7, 7, r).is_none());

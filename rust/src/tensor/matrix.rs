@@ -93,14 +93,69 @@ impl Matrix {
     /// Select columns: `self[:, idx]`.
     pub fn select_columns(&self, idx: &[usize]) -> Matrix {
         let mut out = Matrix::zeros(self.rows, idx.len());
+        self.select_columns_into(idx, &mut out);
+        out
+    }
+
+    /// Allocation-free [`Matrix::select_columns`]: gathers into `out`,
+    /// resizing it in place (no realloc once its capacity suffices).
+    pub fn select_columns_into(&self, idx: &[usize], out: &mut Matrix) {
+        out.resize_for_overwrite(self.rows, idx.len());
         for i in 0..self.rows {
             let src = self.row(i);
-            let dst = out.row_mut(i);
+            let dst = &mut out.data[i * idx.len()..(i + 1) * idx.len()];
             for (k, &j) in idx.iter().enumerate() {
                 dst[k] = src[j];
             }
         }
-        out
+    }
+
+    // -- in-place reshaping / copying (workspace hot path) ---------------
+
+    /// Re-shape in place to `rows × cols`, zero-filling. Reuses the existing
+    /// buffer whenever its capacity suffices — for accumulate-style kernels
+    /// (`matmul_into`) that need a clean slate.
+    pub fn resize_to(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.clear();
+        self.data.resize(rows * cols, 0.0);
+    }
+
+    /// Re-shape in place *without* zero-filling the reused prefix — for
+    /// assign-style kernels (`transpose_into`, `select_columns_into`,
+    /// `matmul_a_bt_into`, the Makhoul row transform) that overwrite every
+    /// element anyway; skips a full redundant memory pass per call.
+    /// Contents are unspecified until the caller writes them.
+    pub fn resize_for_overwrite(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.resize(rows * cols, 0.0);
+    }
+
+    /// Become a copy of `other` (shape + data) without reallocating when
+    /// capacity allows.
+    pub fn copy_from(&mut self, other: &Matrix) {
+        self.rows = other.rows;
+        self.cols = other.cols;
+        self.data.clear();
+        self.data.extend_from_slice(&other.data);
+    }
+
+    /// Allocation-free transpose: `out = selfᵀ` (blocked like
+    /// [`Matrix::transpose`]).
+    pub fn transpose_into(&self, out: &mut Matrix) {
+        out.resize_for_overwrite(self.cols, self.rows);
+        const B: usize = 32;
+        for ib in (0..self.rows).step_by(B) {
+            for jb in (0..self.cols).step_by(B) {
+                for i in ib..(ib + B).min(self.rows) {
+                    for j in jb..(jb + B).min(self.cols) {
+                        out.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
     }
 
     // -- elementwise / reductions ---------------------------------------
@@ -122,6 +177,37 @@ impl Matrix {
         assert_eq!(self.shape(), other.shape());
         for (x, y) in self.data.iter_mut().zip(&other.data) {
             *x += a * y;
+        }
+    }
+
+    /// `self += a * otherᵀ` — lets callers apply a transposed update
+    /// without materializing the transpose (blocked for cache locality).
+    pub fn axpy_t(&mut self, a: f32, other: &Matrix) {
+        assert_eq!(
+            (self.rows, self.cols),
+            (other.cols, other.rows),
+            "axpy_t shape mismatch"
+        );
+        const B: usize = 32;
+        for ib in (0..self.rows).step_by(B) {
+            for jb in (0..self.cols).step_by(B) {
+                for i in ib..(ib + B).min(self.rows) {
+                    for j in jb..(jb + B).min(self.cols) {
+                        self.data[i * self.cols + j] +=
+                            a * other.data[j * other.cols + i];
+                    }
+                }
+            }
+        }
+    }
+
+    /// `self = minuend − self`, elementwise in place — used to turn a
+    /// back-projection buffer into the error-feedback residual `G − Ĝ`
+    /// without a third matrix.
+    pub fn sub_from(&mut self, minuend: &Matrix) {
+        assert_eq!(self.shape(), minuend.shape());
+        for (x, m) in self.data.iter_mut().zip(&minuend.data) {
+            *x = m - *x;
         }
     }
 
@@ -232,6 +318,51 @@ mod tests {
         assert!((l2[0] - 5.0).abs() < 1e-6);
         let l1 = m.col_l1_norms();
         assert!((l1[1] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn into_variants_match_allocating() {
+        let mut rng = Pcg64::seed(7);
+        let m = Matrix::randn(9, 13, 1.0, &mut rng);
+        // dirty, wrongly-shaped output buffers must be fully overwritten
+        let mut out = Matrix::from_vec(1, 3, vec![9.0, 9.0, 9.0]);
+        m.transpose_into(&mut out);
+        assert_eq!(out, m.transpose());
+        let idx = [12usize, 0, 5, 5];
+        m.select_columns_into(&idx, &mut out);
+        assert_eq!(out, m.select_columns(&idx));
+        out.copy_from(&m);
+        assert_eq!(out, m);
+    }
+
+    #[test]
+    fn axpy_t_matches_transpose_axpy() {
+        let mut rng = Pcg64::seed(8);
+        let base = Matrix::randn(6, 11, 1.0, &mut rng);
+        let other = Matrix::randn(11, 6, 1.0, &mut rng);
+        let mut a = base.clone();
+        a.axpy_t(0.7, &other);
+        let mut b = base;
+        b.axpy(0.7, &other.transpose());
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn sub_from_is_reverse_subtraction() {
+        let g = Matrix::from_vec(1, 3, vec![5.0, 1.0, -2.0]);
+        let mut back = Matrix::from_vec(1, 3, vec![1.0, 1.0, 1.0]);
+        back.sub_from(&g);
+        assert_eq!(back.data, vec![4.0, 0.0, -3.0]);
+    }
+
+    #[test]
+    fn resize_to_reuses_capacity() {
+        let mut m = Matrix::zeros(10, 10);
+        let ptr = m.data.as_ptr();
+        m.resize_to(4, 6);
+        assert_eq!(m.shape(), (4, 6));
+        assert_eq!(m.data.as_ptr(), ptr);
+        assert!(m.data.iter().all(|&v| v == 0.0));
     }
 
     #[test]

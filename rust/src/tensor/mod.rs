@@ -2,13 +2,21 @@
 //!
 //! Everything numeric in the coordinator (optimizers, projections, FFT,
 //! collectives) operates on [`Matrix`]. The design goal is a small, fully
-//! owned BLAS-free kernel set whose hot paths (blocked matmul, axpy-style
-//! elementwise) are cache-tiled for the single-core testbed; see
-//! EXPERIMENTS.md §Perf for measured throughput.
+//! owned BLAS-free kernel set whose hot paths (register-tiled matmul,
+//! axpy-style elementwise) are cache-tiled for the single-core testbed.
+//! Every hot kernel has an allocation-free `_into` variant writing into a
+//! caller-owned buffer; [`Workspace`] pools those buffers so steady-state
+//! optimizer steps allocate nothing (see ROADMAP.md §Hot-path
+//! architecture).
 
 mod matrix;
 mod ops;
+mod workspace;
 pub mod bf16;
 
 pub use matrix::Matrix;
-pub use ops::{matmul, matmul_at_b, matmul_a_bt};
+pub use ops::{
+    matmul, matmul_a_bt, matmul_a_bt_into, matmul_at_b, matmul_at_b_into,
+    matmul_into,
+};
+pub use workspace::Workspace;

@@ -1,86 +1,204 @@
-//! Matmul kernels: blocked, transpose-aware, single-core cache-tiled.
+//! Matmul kernels: register-tiled, blocked, transpose-aware, single-core.
 //!
-//! Three entry points cover every multiplication the optimizers perform
-//! without materializing transposes:
+//! Each multiplication the optimizers perform has an allocating entry point
+//! and an allocation-free `_into` twin (the hot path — outputs land in
+//! [`Workspace`](super::Workspace)-pooled buffers):
 //!
-//! * [`matmul`]      — `C = A·B`
-//! * [`matmul_at_b`] — `C = Aᵀ·B`   (e.g. Gram matrices `XᵀX`)
-//! * [`matmul_a_bt`] — `C = A·Bᵀ`   (e.g. back-projection `b_t·Q_rᵀ`)
+//! * [`matmul`] / [`matmul_into`]           — `C = A·B`
+//! * [`matmul_at_b`] / [`matmul_at_b_into`] — `C = Aᵀ·B` (Gram matrices)
+//! * [`matmul_a_bt`] / [`matmul_a_bt_into`] — `C = A·Bᵀ` (back-projection)
 //!
-//! The inner loop is an i-k-j kernel over row-major data: the `k`-loop
-//! broadcasts `A[i,k]` and runs a unit-stride fused multiply-add over the
-//! `B` row, which autovectorizes well; blocking keeps the `B` panel in L2.
+//! The i-k-j kernel is register-tiled: four output rows (resp. four `k`
+//! panels / four dot-product accumulators) advance together, so every
+//! loaded `B` element feeds four fused multiply-adds instead of one, and
+//! the inner loops are branch-free unit-stride FMA streams that
+//! autovectorize. The old `aik == 0.0` skip is gone — it broke
+//! vectorization for a case (exact zeros mid-gradient) that essentially
+//! never occurs in training. The allocating wrappers delegate to the
+//! `_into` kernels, so the two are bit-identical by construction. Note
+//! `matmul_at_b_into`'s 4-wide `k` panel sums four contributions per
+//! expression, which regroups floating-point rounding relative to the
+//! pre-tiling kernel — same-run consistency is exact, cross-version
+//! reproducibility is to ULP level only.
 
 use super::Matrix;
 
-/// Panel size (rows of A / rows of B per block). 64×cols f32 panels stay
-/// well inside L2 for the layer sizes we train (cols ≤ ~1k).
+/// Panel sizes. 64×cols f32 panels stay well inside L2 for the layer sizes
+/// we train (cols ≤ ~1k); the 4-row register tile is the micro-kernel.
 const BLOCK_K: usize = 64;
 const BLOCK_I: usize = 64;
+const MR: usize = 4;
 
 /// `A (m×k) · B (k×n) → (m×n)`.
 pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(a.rows, b.cols);
+    matmul_into(a, b, &mut c);
+    c
+}
+
+/// Allocation-free [`matmul`]: resizes `c` in place and overwrites it.
+pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     assert_eq!(a.cols, b.rows, "matmul shape mismatch: {:?}·{:?}", a.shape(), b.shape());
     let (m, kdim, n) = (a.rows, a.cols, b.cols);
-    let mut c = Matrix::zeros(m, n);
+    c.resize_to(m, n);
+    if n == 0 {
+        return;
+    }
     for ib in (0..m).step_by(BLOCK_I) {
         let i_end = (ib + BLOCK_I).min(m);
         for kb in (0..kdim).step_by(BLOCK_K) {
             let k_end = (kb + BLOCK_K).min(kdim);
-            for i in ib..i_end {
+            let mut i = ib;
+            // 4-row micro-kernel: one pass over each B row feeds 4 C rows.
+            while i + MR <= i_end {
+                let block = &mut c.data[i * n..(i + MR) * n];
+                let (c0, rest) = block.split_at_mut(n);
+                let (c1, rest) = rest.split_at_mut(n);
+                let (c2, c3) = rest.split_at_mut(n);
+                let a0 = a.row(i);
+                let a1 = a.row(i + 1);
+                let a2 = a.row(i + 2);
+                let a3 = a.row(i + 3);
+                for k in kb..k_end {
+                    let b_row = &b.data[k * n..k * n + n];
+                    let (x0, x1, x2, x3) = (a0[k], a1[k], a2[k], a3[k]);
+                    for j in 0..n {
+                        let bv = b_row[j];
+                        c0[j] += x0 * bv;
+                        c1[j] += x1 * bv;
+                        c2[j] += x2 * bv;
+                        c3[j] += x3 * bv;
+                    }
+                }
+                i += MR;
+            }
+            // remainder rows
+            while i < i_end {
                 let a_row = a.row(i);
                 let c_row = &mut c.data[i * n..(i + 1) * n];
                 for k in kb..k_end {
                     let aik = a_row[k];
-                    if aik == 0.0 {
-                        continue;
-                    }
-                    let b_row = &b.data[k * n..(k + 1) * n];
+                    let b_row = &b.data[k * n..k * n + n];
                     for (cv, bv) in c_row.iter_mut().zip(b_row) {
                         *cv += aik * bv;
                     }
                 }
+                i += 1;
             }
         }
     }
-    c
 }
 
 /// `Aᵀ (k×m)ᵀ · B (k×n) → (m×n)` — A is stored (k×m); result is m×n.
 pub fn matmul_at_b(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(a.cols, b.cols);
+    matmul_at_b_into(a, b, &mut c);
+    c
+}
+
+/// Allocation-free [`matmul_at_b`]. `k` is the outer loop (both A and B
+/// rows unit-stride); four `k` panels advance together so each C row is
+/// loaded/stored once per four rank-1 updates.
+pub fn matmul_at_b_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     assert_eq!(a.rows, b.rows, "matmul_at_b shape mismatch");
     let (kdim, m, n) = (a.rows, a.cols, b.cols);
-    let mut c = Matrix::zeros(m, n);
-    // k is the outer loop: both A and B rows are unit-stride.
-    for k in 0..kdim {
+    c.resize_to(m, n);
+    if n == 0 {
+        return;
+    }
+    let mut k = 0;
+    while k + MR <= kdim {
+        let a0 = a.row(k);
+        let a1 = a.row(k + 1);
+        let a2 = a.row(k + 2);
+        let a3 = a.row(k + 3);
+        let b0 = &b.data[k * n..k * n + n];
+        let b1 = &b.data[(k + 1) * n..(k + 1) * n + n];
+        let b2 = &b.data[(k + 2) * n..(k + 2) * n + n];
+        let b3 = &b.data[(k + 3) * n..(k + 3) * n + n];
+        for i in 0..m {
+            let (x0, x1, x2, x3) = (a0[i], a1[i], a2[i], a3[i]);
+            let c_row = &mut c.data[i * n..i * n + n];
+            for j in 0..n {
+                c_row[j] += x0 * b0[j] + x1 * b1[j] + x2 * b2[j] + x3 * b3[j];
+            }
+        }
+        k += MR;
+    }
+    while k < kdim {
         let a_row = a.row(k);
-        let b_row = b.row(k);
+        let b_row = &b.data[k * n..k * n + n];
         for i in 0..m {
             let aki = a_row[i];
-            if aki == 0.0 {
-                continue;
-            }
-            let c_row = &mut c.data[i * n..(i + 1) * n];
+            let c_row = &mut c.data[i * n..i * n + n];
             for (cv, bv) in c_row.iter_mut().zip(b_row) {
                 *cv += aki * bv;
             }
         }
+        k += 1;
     }
-    c
 }
 
 /// `A (m×k) · Bᵀ (n×k)ᵀ → (m×n)` — B is stored (n×k).
 pub fn matmul_a_bt(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(a.rows, b.rows);
+    matmul_a_bt_into(a, b, &mut c);
+    c
+}
+
+/// Allocation-free [`matmul_a_bt`]. Four dot products (four B rows) run
+/// against each A row at once, amortizing the A-row loads across four
+/// independent accumulators.
+pub fn matmul_a_bt_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     assert_eq!(a.cols, b.cols, "matmul_a_bt shape mismatch");
     let (m, kdim, n) = (a.rows, a.cols, b.rows);
-    let mut c = Matrix::zeros(m, n);
+    c.resize_for_overwrite(m, n);
     for i in 0..m {
         let a_row = a.row(i);
         let c_row = &mut c.data[i * n..(i + 1) * n];
-        for j in 0..n {
+        let mut j = 0;
+        while j + MR <= n {
+            let b0 = b.row(j);
+            let b1 = b.row(j + 1);
+            let b2 = b.row(j + 2);
+            let b3 = b.row(j + 3);
+            let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            let mut kk = 0;
+            while kk + 4 <= kdim {
+                s0 += a_row[kk] * b0[kk]
+                    + a_row[kk + 1] * b0[kk + 1]
+                    + a_row[kk + 2] * b0[kk + 2]
+                    + a_row[kk + 3] * b0[kk + 3];
+                s1 += a_row[kk] * b1[kk]
+                    + a_row[kk + 1] * b1[kk + 1]
+                    + a_row[kk + 2] * b1[kk + 2]
+                    + a_row[kk + 3] * b1[kk + 3];
+                s2 += a_row[kk] * b2[kk]
+                    + a_row[kk + 1] * b2[kk + 1]
+                    + a_row[kk + 2] * b2[kk + 2]
+                    + a_row[kk + 3] * b2[kk + 3];
+                s3 += a_row[kk] * b3[kk]
+                    + a_row[kk + 1] * b3[kk + 1]
+                    + a_row[kk + 2] * b3[kk + 2]
+                    + a_row[kk + 3] * b3[kk + 3];
+                kk += 4;
+            }
+            while kk < kdim {
+                s0 += a_row[kk] * b0[kk];
+                s1 += a_row[kk] * b1[kk];
+                s2 += a_row[kk] * b2[kk];
+                s3 += a_row[kk] * b3[kk];
+                kk += 1;
+            }
+            c_row[j] = s0;
+            c_row[j + 1] = s1;
+            c_row[j + 2] = s2;
+            c_row[j + 3] = s3;
+            j += MR;
+        }
+        while j < n {
             let b_row = b.row(j);
             let mut acc = 0.0f32;
-            // dot product over unit-stride rows
             let mut kk = 0;
             while kk + 4 <= kdim {
                 acc += a_row[kk] * b_row[kk]
@@ -94,9 +212,9 @@ pub fn matmul_a_bt(a: &Matrix, b: &Matrix) -> Matrix {
                 kk += 1;
             }
             c_row[j] = acc;
+            j += 1;
         }
     }
-    c
 }
 
 #[cfg(test)]
@@ -156,6 +274,44 @@ mod tests {
             let want2 = matmul(&a2, &b2.transpose());
             assert!(got2.max_abs_diff(&want2) < 1e-3);
         });
+    }
+
+    #[test]
+    fn prop_into_variants_bit_identical_to_allocating() {
+        // The `_into` kernels must produce the exact same bits as their
+        // allocating wrappers even when handed dirty, wrongly-shaped
+        // output buffers (the workspace reuse pattern).
+        proptest::check("into==allocating", 12, |rng| {
+            let m = proptest::size(rng, 1, 33);
+            let k = proptest::size(rng, 1, 33);
+            let n = proptest::size(rng, 1, 33);
+            let mut dirty = Matrix::randn(2, 5, 1.0, rng);
+
+            let a = Matrix::randn(m, k, 1.0, rng);
+            let b = Matrix::randn(k, n, 1.0, rng);
+            matmul_into(&a, &b, &mut dirty);
+            assert_eq!(dirty, matmul(&a, &b));
+
+            let at = Matrix::randn(k, m, 1.0, rng);
+            matmul_at_b_into(&at, &b, &mut dirty);
+            assert_eq!(dirty, matmul_at_b(&at, &b));
+
+            let bt = Matrix::randn(n, k, 1.0, rng);
+            matmul_a_bt_into(&a, &bt, &mut dirty);
+            assert_eq!(dirty, matmul_a_bt(&a, &bt));
+        });
+    }
+
+    #[test]
+    fn micro_kernel_handles_remainder_rows() {
+        // sizes straddling the 4-row register tile: 1..=9 rows
+        let mut rng = Pcg64::seed(11);
+        for m in 1..=9usize {
+            let a = Matrix::randn(m, 17, 1.0, &mut rng);
+            let b = Matrix::randn(17, 5, 1.0, &mut rng);
+            let diff = matmul(&a, &b).max_abs_diff(&naive(&a, &b));
+            assert!(diff < 1e-3, "m={m} diff={diff}");
+        }
     }
 
     #[test]

@@ -1,0 +1,192 @@
+//! Reusable scratch buffers for the optimizer hot path.
+//!
+//! Every optimizer step needs a handful of temporaries (oriented gradient,
+//! projected gradient, back-projection, update buffer). Allocating them per
+//! step dominates the small-matrix regime; a [`Workspace`] instead keeps a
+//! pool of retired buffers and hands them back out by *best-fit capacity*,
+//! so a steady-state step performs zero heap allocations once the pool has
+//! warmed up (see `tests/alloc_steady_state.rs` for the enforced proof).
+//!
+//! Ownership rules (also documented in ROADMAP.md §Hot-path architecture):
+//!
+//! * One `Workspace` per optimizer instance; it is transient compute
+//!   scratch, never counted by `MemoryReport` (which tracks persistent
+//!   optimizer *state*).
+//! * `take(rows, cols)` returns a **zeroed** matrix; pair every `take` with
+//!   a `give` in the same scope so the pool stays warm. Forgetting a `give`
+//!   is not a leak — the buffer just gets reallocated next step.
+//! * Buffers are plain `Vec`s; pools never shrink. Peak pool size equals
+//!   the peak number of simultaneously-live temporaries per step.
+
+use super::Matrix;
+
+/// Best-fit pop: the pooled buffer with the smallest sufficient capacity.
+/// First-fit would let a small request steal a large buffer and force the
+/// next large request to allocate — best-fit keeps repeating request
+/// patterns allocation-free.
+fn pop_best_fit<T>(pool: &mut Vec<Vec<T>>, len: usize) -> Vec<T> {
+    if len == 0 {
+        return Vec::new();
+    }
+    let mut best: Option<(usize, usize)> = None; // (position, capacity)
+    for (i, buf) in pool.iter().enumerate() {
+        let cap = buf.capacity();
+        if cap >= len {
+            match best {
+                Some((_, c)) if c <= cap => {}
+                _ => best = Some((i, cap)),
+            }
+        }
+    }
+    match best {
+        Some((i, _)) => pool.swap_remove(i),
+        None => Vec::with_capacity(len),
+    }
+}
+
+fn push_nonempty<T>(pool: &mut Vec<Vec<T>>, buf: Vec<T>) {
+    // Zero-capacity buffers are free to recreate and would otherwise
+    // accumulate (and re-grow the pool vec) every step.
+    if buf.capacity() > 0 {
+        pool.push(buf);
+    }
+}
+
+/// Scratch-buffer pool backing the `_into` kernel family.
+#[derive(Default)]
+pub struct Workspace {
+    f32_pool: Vec<Vec<f32>>,
+    f64_pool: Vec<Vec<f64>>,
+    usize_pool: Vec<Vec<usize>>,
+}
+
+impl Workspace {
+    pub fn new() -> Self {
+        Workspace::default()
+    }
+
+    /// Check out a zeroed `rows × cols` matrix.
+    pub fn take(&mut self, rows: usize, cols: usize) -> Matrix {
+        let len = rows * cols;
+        let mut data = pop_best_fit(&mut self.f32_pool, len);
+        data.clear();
+        data.resize(len, 0.0);
+        Matrix { rows, cols, data }
+    }
+
+    /// Return a matrix's buffer to the pool.
+    pub fn give(&mut self, m: Matrix) {
+        push_nonempty(&mut self.f32_pool, m.data);
+    }
+
+    /// Check out a zeroed f32 buffer of `len`.
+    pub fn take_f32(&mut self, len: usize) -> Vec<f32> {
+        let mut v = pop_best_fit(&mut self.f32_pool, len);
+        v.clear();
+        v.resize(len, 0.0);
+        v
+    }
+
+    pub fn give_f32(&mut self, v: Vec<f32>) {
+        push_nonempty(&mut self.f32_pool, v);
+    }
+
+    /// Check out a zeroed f64 buffer of `len` (norm accumulators).
+    pub fn take_f64(&mut self, len: usize) -> Vec<f64> {
+        let mut v = pop_best_fit(&mut self.f64_pool, len);
+        v.clear();
+        v.resize(len, 0.0);
+        v
+    }
+
+    pub fn give_f64(&mut self, v: Vec<f64>) {
+        push_nonempty(&mut self.f64_pool, v);
+    }
+
+    /// Check out a zeroed usize buffer of `len` (index scratch).
+    pub fn take_usize(&mut self, len: usize) -> Vec<usize> {
+        let mut v = pop_best_fit(&mut self.usize_pool, len);
+        v.clear();
+        v.resize(len, 0);
+        v
+    }
+
+    pub fn give_usize(&mut self, v: Vec<usize>) {
+        push_nonempty(&mut self.usize_pool, v);
+    }
+
+    /// Number of pooled f32 buffers (test/diagnostic hook).
+    pub fn pooled_f32_buffers(&self) -> usize {
+        self.f32_pool.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_returns_zeroed_with_shape() {
+        let mut ws = Workspace::new();
+        let mut m = ws.take(3, 4);
+        assert_eq!(m.shape(), (3, 4));
+        assert!(m.data.iter().all(|&v| v == 0.0));
+        m.data[5] = 7.0;
+        ws.give(m);
+        // reuse returns the same capacity, re-zeroed
+        let m2 = ws.take(3, 4);
+        assert!(m2.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn buffers_are_reused_not_grown() {
+        let mut ws = Workspace::new();
+        let m = ws.take(8, 8);
+        let ptr = m.data.as_ptr();
+        let cap = m.data.capacity();
+        ws.give(m);
+        let m2 = ws.take(4, 4); // smaller request reuses the same buffer
+        assert_eq!(m2.data.as_ptr(), ptr);
+        assert_eq!(m2.data.capacity(), cap);
+        ws.give(m2);
+        assert_eq!(ws.pooled_f32_buffers(), 1);
+    }
+
+    #[test]
+    fn best_fit_prefers_smallest_sufficient() {
+        let mut ws = Workspace::new();
+        let big = ws.take(100, 1);
+        let small = ws.take(10, 1);
+        ws.give(big);
+        ws.give(small);
+        // a 10-element request must take the 10-cap buffer, not the 100-cap
+        let got = ws.take(10, 1);
+        assert!(got.data.capacity() < 100, "stole the big buffer");
+        ws.give(got);
+        // and the 100-element request still finds the big one → no alloc
+        let got = ws.take(100, 1);
+        assert!(got.data.capacity() >= 100);
+    }
+
+    #[test]
+    fn zero_size_requests_do_not_pool() {
+        let mut ws = Workspace::new();
+        for _ in 0..10 {
+            let m = ws.take(0, 5);
+            ws.give(m);
+        }
+        assert_eq!(ws.pooled_f32_buffers(), 0);
+    }
+
+    #[test]
+    fn typed_pools_are_independent() {
+        let mut ws = Workspace::new();
+        let f = ws.take_f64(16);
+        let u = ws.take_usize(16);
+        assert!(f.iter().all(|&v| v == 0.0));
+        assert!(u.iter().all(|&v| v == 0));
+        ws.give_f64(f);
+        ws.give_usize(u);
+        assert_eq!(ws.pooled_f32_buffers(), 0);
+    }
+}
