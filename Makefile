@@ -7,7 +7,7 @@
 CARGO ?= cargo
 RUST_DIR := rust
 
-.PHONY: build test bench bench-proj bench-makhoul bench-optim artifacts clean
+.PHONY: build test bench bench-proj bench-par bench-makhoul bench-optim artifacts clean
 
 build:
 	cd $(RUST_DIR) && $(CARGO) build --release
@@ -16,12 +16,18 @@ test:
 	cd $(RUST_DIR) && $(CARGO) test -q
 
 # Full microbench battery (each bench is a plain binary: harness = false).
-bench: bench-proj bench-makhoul bench-optim
+bench: bench-proj bench-par bench-makhoul bench-optim
 
 # Projection/subspace-step bench; writes rust/BENCH_PROJ.json
-# (override the path with BENCH_PROJ_OUT=...).
+# (override the path with BENCH_PROJ_OUT=...). Includes the `threads`
+# sweep group (1/2/4/8-lane similarity + dct_step).
 bench-proj:
 	cd $(RUST_DIR) && $(CARGO) bench --bench bench_projection
+
+# Parallel-engine sweep (matmul / optimizer step / all-reduce per lane
+# count); writes rust/BENCH_PAR.json (override with BENCH_PAR_OUT=...).
+bench-par:
+	cd $(RUST_DIR) && $(CARGO) bench --bench bench_parallel
 
 bench-makhoul:
 	cd $(RUST_DIR) && $(CARGO) bench --bench bench_makhoul

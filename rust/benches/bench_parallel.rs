@@ -1,0 +1,103 @@
+//! Parallel-engine microbench: thread-count sweeps for the row-blocked
+//! matmuls, the parallel optimizer step (`step_layers_parallel`), and the
+//! threaded ring all-reduce — the wall-clock side of the determinism
+//! contract (the bits are pinned by `tests/parallel_determinism.rs`; this
+//! binary records how much time the threads buy).
+//!
+//! Emits `BENCH_PAR.json` (override with `BENCH_PAR_OUT=path`):
+//!
+//! * group `matmul_par`   — 1024×512·512×512 `matmul_into_on`, per lanes.
+//! * group `optim_step`   — full DctAdamW step over a 24-layer zoo, per
+//!   lanes (the tentpole number: layers step concurrently).
+//! * group `all_reduce`   — 8-worker ring all-reduce of 1M floats, per
+//!   lanes.
+//!
+//! Run via `make bench-par` in a toolchain-equipped environment.
+
+use fft_subspace::bench::{measure, write_bench_json, BenchRecord};
+use fft_subspace::coordinator::{CommModel, Communicator};
+use fft_subspace::optim::{DctAdamW, LayerMeta, Optimizer, OptimizerConfig, ParamKind};
+use fft_subspace::parallel::ThreadPool;
+use fft_subspace::tensor::{matmul_into_on, Matrix};
+use fft_subspace::util::Pcg64;
+use std::sync::Arc;
+
+const LANES: [usize; 4] = [1, 2, 4, 8];
+
+fn main() {
+    println!("== bench_parallel (thread-count sweeps; results bit-identical per lane count) ==\n");
+    let mut records: Vec<BenchRecord> = Vec::new();
+    let mut rng = Pcg64::seed(0);
+
+    // --- row-blocked matmul ---------------------------------------------
+    let (m, k, n) = (1024usize, 512usize, 512usize);
+    let a = Matrix::randn(m, k, 1.0, &mut rng);
+    let b = Matrix::randn(k, n, 1.0, &mut rng);
+    let mut c = Matrix::zeros(m, n);
+    for &t in &LANES {
+        let pool = ThreadPool::new(t);
+        let st = measure(&format!("matmul_par t={t} {m}x{k}x{n}"), 2, 10, || {
+            matmul_into_on(&pool, &a, &b, &mut c);
+        });
+        println!("{}", st.report());
+        records.push(BenchRecord::new("matmul_par", &format!("t{t}"), m, n, 0, st));
+    }
+    println!();
+
+    // --- parallel optimizer step over a transformer-ish layer zoo --------
+    let metas: Vec<LayerMeta> = (0..24)
+        .map(|i| {
+            let (r, c) = match i % 3 {
+                0 => (512, 256),
+                1 => (256, 512), // wide → transpose orientation
+                _ => (256, 256),
+            };
+            LayerMeta::new(&format!("w{i}"), r, c, ParamKind::Linear)
+        })
+        .collect();
+    let grads: Vec<Matrix> = metas
+        .iter()
+        .map(|meta| Matrix::randn(meta.rows, meta.cols, 0.1, &mut rng))
+        .collect();
+    for &t in &LANES {
+        let cfg = OptimizerConfig { rank: 32, threads: Some(t), ..Default::default() };
+        let mut opt = DctAdamW::new(&metas, &cfg);
+        let mut params: Vec<Matrix> = metas
+            .iter()
+            .map(|meta| Matrix::zeros(meta.rows, meta.cols))
+            .collect();
+        // warm the per-shard workspace pools before timing
+        for _ in 0..3 {
+            opt.step(&mut params, &grads, 1e-3);
+        }
+        let st = measure(&format!("dct_adamw_step t={t} L=24"), 1, 8, || {
+            opt.step(&mut params, &grads, 1e-3);
+        });
+        println!("{}", st.report());
+        records.push(BenchRecord::new("optim_step", &format!("t{t}"), 512, 256, 32, st));
+    }
+    println!();
+
+    // --- threaded ring all-reduce ----------------------------------------
+    let world = 8usize;
+    let elems = 1 << 20;
+    let base: Vec<Matrix> = (0..world)
+        .map(|_| Matrix::randn(1, elems, 1.0, &mut rng))
+        .collect();
+    for &t in &LANES {
+        let pool = Arc::new(ThreadPool::new(t));
+        let mut comm = Communicator::with_pool(world, CommModel::default(), pool);
+        let mut bufs = base.clone();
+        let st = measure(&format!("all_reduce t={t} W={world} n={elems}"), 1, 8, || {
+            comm.all_reduce_mean(&mut bufs);
+        });
+        println!("{}", st.report());
+        records.push(BenchRecord::new("all_reduce", &format!("t{t}"), world, elems, 0, st));
+    }
+
+    let out = std::env::var("BENCH_PAR_OUT").unwrap_or_else(|_| "BENCH_PAR.json".into());
+    match write_bench_json(&out, &records) {
+        Ok(()) => println!("\nwrote {} records to {out}", records.len()),
+        Err(e) => eprintln!("failed to write {out}: {e}"),
+    }
+}

@@ -11,12 +11,15 @@
 //! * group `selection`  — O(C) partition column selection, per rank.
 //! * group `dct_step`   — similarities + selection end to end (workspace
 //!   path, zero allocations at steady state).
+//! * group `threads`    — the same similarity / dct_step at 1/2/4/8 pool
+//!   lanes (row-parallel Makhoul; bit-identical across lane counts).
 //! * groups `power_iter_qr` / `block_power` / `svd` — the rank-dependent
 //!   (or rank-independent-but-expensive) baselines.
 
 use fft_subspace::bench::{measure, write_bench_json, BenchRecord};
 use fft_subspace::fft::cached_plan;
 use fft_subspace::linalg::{block_power_iter, power_iter_qr, qr_thin};
+use fft_subspace::parallel::ThreadPool;
 use fft_subspace::projection::{
     select_top_columns_into, RankNorm, SharedDct,
 };
@@ -77,6 +80,37 @@ fn main() {
             println!("{}", sel.report());
             println!("{}", step.report());
             records.push(BenchRecord::new("dct_step", "makhoul+select", rows, cols, rank, step));
+        }
+        println!();
+    }
+
+    // --- threads sweep: row-parallel similarity + full dct_step ---------
+    // Same transform at 1/2/4/8 lanes; 1 lane is the inline sequential
+    // path, so the t=1 row doubles as the parallel-overhead baseline.
+    {
+        let (rows, cols) = (1024usize, 1024usize);
+        let g = Matrix::randn(rows, cols, 1.0, &mut rng);
+        let plan = cached_plan(cols);
+        let mut ws = Workspace::new();
+        let mut s_buf = ws.take(rows, cols);
+        let mut idx = Vec::new();
+        for &t in &[1usize, 2, 4, 8] {
+            let pool = ThreadPool::new(t);
+            let sim = measure(&format!("makhoul_par t={t} {rows}x{cols}"), 2, 10, || {
+                plan.run_into_on(&pool, &g, &mut s_buf);
+            });
+            println!("{}", sim.report());
+            records.push(BenchRecord::new(
+                "threads", &format!("similarity_t{t}"), rows, cols, 0, sim,
+            ));
+            let step = measure(&format!("dct_step_par t={t} r=64"), 1, 10, || {
+                plan.run_into_on(&pool, &g, &mut s_buf);
+                select_top_columns_into(&s_buf, 64, RankNorm::L2, &mut ws, &mut idx);
+            });
+            println!("{}", step.report());
+            records.push(BenchRecord::new(
+                "threads", &format!("dct_step_t{t}"), rows, cols, 64, step,
+            ));
         }
         println!();
     }

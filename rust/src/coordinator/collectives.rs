@@ -5,7 +5,21 @@
 //! [`CommStats`] records the bytes each primitive moved and the α–β time
 //! estimate (`t = hops·α + bytes/β`), which the experiment harness uses to
 //! model the paper's 8×H100 NVLink numbers.
+//!
+//! With a [`ThreadPool`] attached ([`Communicator::with_pool`]), each ring
+//! step's `W` transfers execute on real threads — exactly as the `W`
+//! links of a physical ring move simultaneously. Within one step the
+//! transfers touch disjoint memory (destinations are distinct, and a
+//! buffer's read chunk `(i−s) mod W` never equals its written chunk
+//! `(i−1−s) mod W` for `W > 1`), and the per-element accumulation order
+//! across steps is fixed by the ring schedule, so the parallel path is
+//! **bit-identical** to sequential and the recorded stats are equal to the
+//! byte. Byte/time accounting always runs on the calling thread in ring
+//! order.
 
+use std::sync::Arc;
+
+use crate::parallel::{SendPtr, ThreadPool};
 use crate::tensor::Matrix;
 
 /// α–β interconnect model. Defaults approximate intra-node NVLink
@@ -51,12 +65,22 @@ pub struct Communicator {
     pub world: usize,
     model: CommModel,
     pub stats: CommStats,
+    /// When present, ring-step transfers run on real threads.
+    pool: Option<Arc<ThreadPool>>,
 }
 
 impl Communicator {
     pub fn new(world: usize, model: CommModel) -> Self {
         assert!(world >= 1);
-        Communicator { world, model, stats: CommStats::default() }
+        Communicator { world, model, stats: CommStats::default(), pool: None }
+    }
+
+    /// Communicator whose ring transfers execute on `pool`'s threads
+    /// (bit-identical to [`Communicator::new`], including stats).
+    pub fn with_pool(world: usize, model: CommModel, pool: Arc<ThreadPool>) -> Self {
+        let mut c = Communicator::new(world, model);
+        c.pool = Some(pool);
+        c
     }
 
     /// Ring all-reduce (average) over per-worker gradient replicas.
@@ -80,60 +104,43 @@ impl Communicator {
         let bounds: Vec<(usize, usize)> = (0..w)
             .map(|c| (c * chunk, ((c + 1) * chunk).min(n)))
             .collect();
+        let ptrs: Vec<SendPtr<f32>> =
+            buffers.iter_mut().map(|b| SendPtr(b.data.as_mut_ptr())).collect();
 
         // Phase 1: reduce-scatter. Step s: worker i sends chunk (i−s) to
         // worker i+1, which accumulates. After W−1 steps worker i owns the
         // fully-reduced chunk (i+1 mod W).
         for s in 0..w - 1 {
+            ring_step(self.pool.as_deref(), &ptrs, &bounds, w, s, true);
             for i in 0..w {
-                let src = i;
-                let dst = (i + 1) % w;
-                let c = (i + w - s) % w;
-                let (lo, hi) = bounds[c];
-                if lo >= hi {
-                    continue;
+                let (lo, hi) = bounds[(i + w - s) % w];
+                if lo < hi {
+                    self.account_ar((hi - lo) as u64 * 4);
                 }
-                // move src's partial chunk into dst's accumulator
-                let (a, b) = if src < dst {
-                    let (l, r) = buffers.split_at_mut(dst);
-                    (&l[src], &mut r[0])
-                } else {
-                    let (l, r) = buffers.split_at_mut(src);
-                    (&r[0], &mut l[dst])
-                };
-                for k in lo..hi {
-                    b.data[k] += a.data[k];
-                }
-                self.account_ar((hi - lo) as u64 * 4);
             }
         }
-        // Scale owned chunks to the mean and phase 2: all-gather them.
+        // Scale owned chunks to the mean and phase 2: all-gather them. The
+        // scaling goes through `ptrs` too: re-borrowing `buffers` mutably
+        // here would invalidate the raw pointers' provenance (Stacked
+        // Borrows) before the phase-2 ring steps dereference them.
         let inv = 1.0 / w as f32;
-        for i in 0..w {
-            let c = (i + 1) % w;
-            let (lo, hi) = bounds[c];
-            for k in lo..hi {
-                buffers[i].data[k] *= inv;
+        for (i, p) in ptrs.iter().enumerate() {
+            let (lo, hi) = bounds[(i + 1) % w];
+            if lo < hi {
+                // SAFETY: single-threaded here; `ptrs` covers live buffers.
+                let owned = unsafe { std::slice::from_raw_parts_mut(p.0.add(lo), hi - lo) };
+                for v in owned {
+                    *v *= inv;
+                }
             }
         }
         for s in 0..w - 1 {
+            ring_step(self.pool.as_deref(), &ptrs, &bounds, w, s, false);
             for i in 0..w {
-                let src = i;
-                let dst = (i + 1) % w;
-                let c = (i + 1 + w - s) % w;
-                let (lo, hi) = bounds[c];
-                if lo >= hi {
-                    continue;
+                let (lo, hi) = bounds[(i + 1 + w - s) % w];
+                if lo < hi {
+                    self.account_ar((hi - lo) as u64 * 4);
                 }
-                let (a, b) = if src < dst {
-                    let (l, r) = buffers.split_at_mut(dst);
-                    (&l[src], &mut r[0])
-                } else {
-                    let (l, r) = buffers.split_at_mut(src);
-                    (&r[0], &mut l[dst])
-                };
-                b.data[lo..hi].copy_from_slice(&a.data[lo..hi]);
-                self.account_ar((hi - lo) as u64 * 4);
             }
         }
         self.stats.calls += 1;
@@ -186,6 +193,56 @@ impl Communicator {
     }
 }
 
+/// One ring step: worker `i` moves chunk `c(i)` into worker `i+1` — an
+/// accumulate during reduce-scatter (`reduce`), a copy during all-gather.
+/// The `w` transfers run concurrently when a pool is attached.
+///
+/// Disjointness (the SAFETY argument for the raw slices): within a step the
+/// destinations `i+1 mod w` are all distinct, and buffer `i` is *read* at
+/// chunk `c(i)` while being *written* (by transfer `i−1`) at chunk
+/// `c(i−1)`; `c` is injective in `i` for both phases, so the two ranges
+/// never overlap for `w > 1`. Every transfer therefore touches memory no
+/// other transfer in the same step touches.
+fn ring_step(
+    pool: Option<&ThreadPool>,
+    ptrs: &[SendPtr<f32>],
+    bounds: &[(usize, usize)],
+    w: usize,
+    s: usize,
+    reduce: bool,
+) {
+    let do_one = |i: usize| {
+        let src = i;
+        let dst = (i + 1) % w;
+        let c = if reduce { (i + w - s) % w } else { (i + 1 + w - s) % w };
+        let (lo, hi) = bounds[c];
+        if lo >= hi {
+            return;
+        }
+        // SAFETY: see the disjointness argument above; the underlying
+        // buffers outlive the (blocking) step.
+        unsafe {
+            let sp = std::slice::from_raw_parts(ptrs[src].0.add(lo), hi - lo);
+            let dp = std::slice::from_raw_parts_mut(ptrs[dst].0.add(lo), hi - lo);
+            if reduce {
+                for (d, a) in dp.iter_mut().zip(sp) {
+                    *d += *a;
+                }
+            } else {
+                dp.copy_from_slice(sp);
+            }
+        }
+    };
+    match pool {
+        Some(p) if p.threads() > 1 => p.par_for(w, |i| do_one(i)),
+        _ => {
+            for i in 0..w {
+                do_one(i);
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -212,6 +269,30 @@ mod tests {
                     b.max_abs_diff(&want)
                 );
             }
+        });
+    }
+
+    #[test]
+    fn prop_pooled_all_reduce_bit_identical_with_equal_stats() {
+        let pool = Arc::new(ThreadPool::new(3));
+        proptest::check("pooled-allreduce==sequential", 8, |rng| {
+            let w = proptest::size(rng, 1, 8);
+            let n = proptest::size(rng, 1, 200);
+            let bufs: Vec<Matrix> =
+                (0..w).map(|_| Matrix::randn(1, n, 1.0, rng)).collect();
+            let mut seq = bufs.clone();
+            let mut par = bufs;
+            let mut c_seq = Communicator::new(w, CommModel::default());
+            let mut c_par =
+                Communicator::with_pool(w, CommModel::default(), pool.clone());
+            c_seq.all_reduce_mean(&mut seq);
+            c_par.all_reduce_mean(&mut par);
+            for (a, b) in seq.iter().zip(&par) {
+                assert_eq!(a, b, "w={w} n={n}");
+            }
+            assert_eq!(c_seq.stats.all_reduce_bytes, c_par.stats.all_reduce_bytes);
+            assert_eq!(c_seq.stats.hops, c_par.stats.hops);
+            assert_eq!(c_seq.stats.modeled_secs, c_par.stats.modeled_secs);
         });
     }
 

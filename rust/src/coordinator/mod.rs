@@ -8,9 +8,18 @@
 //! collectives run the real ring/tree algorithms chunk by chunk with exact
 //! byte accounting and an α–β time model — the communication *volume* and
 //! *schedule* are faithful even though the transport is a memcpy.
+//!
+//! Since PR 2 the simulation uses real threads where the workload allows:
+//! [`WorkerSet`] fans per-worker compute across the process thread pool,
+//! and a pool-equipped [`Communicator`] moves each ring step's `W`
+//! transfers concurrently — both bit-identical to the sequential schedule
+//! (see `parallel::` for the determinism contract). PJRT executables stay
+//! on the driver thread (`Rc`-backed upstream client).
 
 pub mod collectives;
+pub mod workers;
 pub mod zero;
 
 pub use collectives::{CommModel, CommStats, Communicator};
+pub use workers::WorkerSet;
 pub use zero::{ZeroSchedule, ZeroStats};

@@ -1,0 +1,90 @@
+//! Real-thread simulated workers.
+//!
+//! A [`WorkerSet`] fans per-worker work (`f(worker_id) → T`) out across a
+//! [`ThreadPool`] and collects results in worker order — the "8×H100"
+//! coordinator's workers actually compute concurrently instead of taking
+//! turns on the driver thread. Determinism is the caller's half of the
+//! contract and is easy to meet: give each worker its own input shard and
+//! RNG substream (as `BatchLoader::worker` already does) and the result
+//! vector is identical for any thread count.
+//!
+//! Scope note: workloads must be `Sync`/`Send`. The PJRT fwd/bwd path is
+//! not — the upstream `xla` client is `Rc`-backed (see `runtime/client.rs`)
+//! — so `Trainer` runs executables on the driver thread and uses the
+//! worker set for the pure-Rust per-worker stages (batch staging) plus the
+//! pool-backed ring all-reduce. When `Send` PJRT bindings land, the fwd/bwd
+//! closure moves in here unchanged (ROADMAP §Parallel runtime).
+
+use std::sync::Arc;
+
+use crate::parallel::{par_for_each_mut, ThreadPool};
+
+/// A fixed-size set of simulated workers executing on real threads.
+pub struct WorkerSet {
+    pool: Arc<ThreadPool>,
+    pub world: usize,
+}
+
+impl WorkerSet {
+    pub fn new(world: usize, pool: Arc<ThreadPool>) -> Self {
+        assert!(world >= 1);
+        WorkerSet { world, pool }
+    }
+
+    /// Run `f(w)` for every worker `w` concurrently; results come back in
+    /// worker order regardless of scheduling.
+    pub fn run<T: Send>(&self, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
+        let mut out: Vec<Option<T>> = (0..self.world).map(|_| None).collect();
+        par_for_each_mut(&self.pool, &mut out, |w, slot| {
+            *slot = Some(f(w));
+        });
+        out.into_iter()
+            .map(|o| o.expect("worker produced no result"))
+            .collect()
+    }
+
+    /// Run `f(w, &mut state[w])` for every worker against its own mutable
+    /// state (per-worker loaders, gradient buffers).
+    pub fn run_mut<S: Send>(&self, states: &mut [S], f: impl Fn(usize, &mut S) + Sync) {
+        assert_eq!(states.len(), self.world, "WorkerSet state count mismatch");
+        par_for_each_mut(&self.pool, states, f);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Matrix;
+    use crate::util::Pcg64;
+
+    /// A worker's "fwd/bwd": deterministic per-worker gradient from its own
+    /// RNG substream — the shape of work the trainer fans out.
+    fn fake_grad(w: usize) -> Matrix {
+        let mut rng = Pcg64::new(7, 0x1000 ^ (w as u64));
+        let mut g = Matrix::randn(8, 8, 1.0, &mut rng);
+        for _ in 0..w {
+            g.scale(0.5); // per-worker-dependent compute
+        }
+        g
+    }
+
+    #[test]
+    fn results_in_worker_order_any_thread_count() {
+        let want: Vec<Matrix> = (0..6).map(fake_grad).collect();
+        for threads in [1usize, 2, 8] {
+            let ws = WorkerSet::new(6, Arc::new(ThreadPool::new(threads)));
+            let got = ws.run(fake_grad);
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn run_mut_gives_each_worker_its_own_state() {
+        let ws = WorkerSet::new(4, Arc::new(ThreadPool::new(4)));
+        let mut counters = vec![0u64; 4];
+        ws.run_mut(&mut counters, |w, c| {
+            *c = (w as u64 + 1) * 10;
+        });
+        assert_eq!(counters, vec![10, 20, 30, 40]);
+    }
+}

@@ -3,9 +3,11 @@
 //! included) runs in O(n log n).
 //!
 //! Plans are allocation-free after construction: the Bluestein embedding
-//! keeps its padded work buffer inside the plan (a `Mutex` keeps `forward`
-//! callable through `&self`/`Arc`; the stack is single-threaded so the
-//! lock is uncontended).
+//! keeps a pool of padded work buffers inside the plan (a `Mutex`-guarded
+//! stack keeps `forward` callable through `&self`/`Arc`). Concurrent
+//! callers pop distinct buffers, so row-parallel Makhoul execution runs
+//! Bluestein widths without serializing; the pool's high-water mark equals
+//! the peak concurrency (one buffer per thread), reached during warmup.
 
 use std::sync::Mutex;
 
@@ -75,7 +77,7 @@ struct BluesteinPlan {
     chirp: Vec<Complex>,      // a_k = exp(-iπk²/n)
     b_fft: Vec<Complex>,      // FFT of the chirp filter
     inner: FftPlan,           // radix-2 plan of length m
-    scratch: Mutex<Vec<Complex>>, // padded work buffer, reused per call
+    scratch: Mutex<Vec<Vec<Complex>>>, // pool of padded work buffers
 }
 
 impl FftPlan {
@@ -116,7 +118,7 @@ impl FftPlan {
                     chirp,
                     b_fft: b,
                     inner,
-                    scratch: Mutex::new(vec![Complex::ZERO; m]),
+                    scratch: Mutex::new(vec![vec![Complex::ZERO; m]]),
                 })),
             }
         }
@@ -165,23 +167,24 @@ impl FftPlan {
     fn bluestein_forward(&self, bp: &BluesteinPlan, buf: &mut [Complex]) {
         let n = self.n;
         let m = bp.m;
-        // Reuse the plan's padded buffer (uncontended lock; `inner` is
-        // always radix-2, so no nested lock).
-        let mut guard = bp.scratch.lock().unwrap();
-        let a: &mut Vec<Complex> = &mut guard;
+        // Pop a padded buffer from the plan's pool (creating one only when
+        // more threads than ever before run this plan concurrently), work
+        // outside the lock, push it back.
+        let mut a = bp.scratch.lock().unwrap().pop().unwrap_or_default();
         a.clear();
         a.resize(m, Complex::ZERO);
         for k in 0..n {
             a[k] = buf[k].mul(bp.chirp[k]);
         }
-        bp.inner.forward(a);
+        bp.inner.forward(&mut a);
         for (av, bv) in a.iter_mut().zip(&bp.b_fft) {
             *av = av.mul(*bv);
         }
-        inverse_given_forward(&bp.inner, a);
+        inverse_given_forward(&bp.inner, &mut a);
         for k in 0..n {
             buf[k] = a[k].mul(bp.chirp[k]);
         }
+        bp.scratch.lock().unwrap().push(a);
     }
 }
 

@@ -15,15 +15,22 @@
 //! Equivalent to `G · dct2_matrix(N)` at O(R·N log N) instead of O(R·N²) —
 //! the object of Tables 4–5 and the Appendix C speedup claim.
 //!
-//! Plans hold their own complex scratch (behind an uncontended `Mutex`, so
-//! `run`/`run_into` work through `&self`/`Arc`): after construction a plan
-//! performs **zero heap allocations**, and [`cached_plan`] memoizes plans
-//! per length so repeated `SharedDct`/`dct2_rows` construction (tests,
-//! experiment sweeps) stops rebuilding twiddles from scratch.
+//! Plans hold a pool of complex scratch buffers (behind a `Mutex`-guarded
+//! stack, so `run`/`run_into` work through `&self`/`Arc`): after warmup a
+//! plan performs **zero heap allocations**, and [`cached_plan`] memoizes
+//! plans per length so repeated `SharedDct`/`dct2_rows` construction
+//! (tests, experiment sweeps) stops rebuilding twiddles from scratch.
+//!
+//! [`MakhoulPlan::run_into_on`] executes the row transforms in parallel:
+//! rows are independent and written to disjoint output slabs, so the
+//! parallel path is bit-identical to sequential for any thread count; each
+//! chunk pops its own [`Scratch`] from the pool (the pool's high-water mark
+//! is the peak chunk concurrency, reached during warmup).
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex, OnceLock};
 
+use crate::parallel::{par_row_slabs, ThreadPool};
 use crate::tensor::Matrix;
 
 use super::complex::{Complex, FftPlan};
@@ -35,11 +42,21 @@ struct SplitPlan {
     twiddle: Vec<Complex>, // k in 0..N/2
 }
 
-/// Per-plan scratch: `z` holds the packed (even) or full (odd) complex
-/// signal, `v` the reconstructed half-spectrum `V[0..=N/2]`.
+/// Per-call scratch: `z` holds the packed (even) or full (odd) complex
+/// signal, `v` the reconstructed half-spectrum `V[0..=N/2]`. Pooled per
+/// plan; concurrent row chunks each pop their own.
 struct Scratch {
     z: Vec<Complex>,
     v: Vec<Complex>,
+}
+
+impl Scratch {
+    fn new(n: usize) -> Scratch {
+        Scratch {
+            z: vec![Complex::ZERO; if n % 2 == 0 { n / 2 } else { n }],
+            v: vec![Complex::ZERO; n / 2 + 1],
+        }
+    }
 }
 
 /// Reusable plan: permutation, twiddle multipliers, FFT plan and scratch are
@@ -60,7 +77,7 @@ pub struct MakhoulPlan {
     /// production plans free of a second Bluestein embedding while keeping
     /// repeated reference runs (benchmarks!) free of per-call plan builds.
     reference: OnceLock<FftPlan>,
-    scratch: Mutex<Scratch>,
+    scratch: Mutex<Vec<Scratch>>,
 }
 
 impl MakhoulPlan {
@@ -97,10 +114,7 @@ impl MakhoulPlan {
         } else {
             None
         };
-        let scratch = Mutex::new(Scratch {
-            z: vec![Complex::ZERO; if n % 2 == 0 { n / 2 } else { n }],
-            v: vec![Complex::ZERO; n / 2 + 1],
-        });
+        let scratch = Mutex::new(vec![Scratch::new(n)]);
         let full = if split.is_none() { Some(FftPlan::new(n)) } else { None };
         MakhoulPlan { n, perm, w, scale, split, full, reference: OnceLock::new(), scratch }
     }
@@ -157,6 +171,29 @@ impl MakhoulPlan {
         }
     }
 
+    /// DCT-II of one row through whichever path the plan carries.
+    fn run_row(&self, sc: &mut Scratch, src: &[f32], dst: &mut [f32]) {
+        match (&self.split, &self.full) {
+            (Some(sp), _) => self.run_row_split(sp, sc, src, dst),
+            (None, Some(fft)) => self.run_row_full(fft, sc, src, dst),
+            (None, None) => unreachable!("plan has neither split nor full path"),
+        }
+    }
+
+    /// Pop a scratch from the plan's pool, creating one only when more
+    /// callers than ever before run concurrently.
+    fn take_scratch(&self) -> Scratch {
+        self.scratch
+            .lock()
+            .unwrap()
+            .pop()
+            .unwrap_or_else(|| Scratch::new(self.n))
+    }
+
+    fn put_scratch(&self, sc: Scratch) {
+        self.scratch.lock().unwrap().push(sc);
+    }
+
     /// Row-wise DCT-II of a matrix (the `S = Makhoul(B)` of Algorithm 1).
     pub fn run(&self, g: &Matrix) -> Matrix {
         let mut out = Matrix::zeros(g.rows, g.cols);
@@ -169,16 +206,33 @@ impl MakhoulPlan {
     pub fn run_into(&self, g: &Matrix, out: &mut Matrix) {
         assert_eq!(g.cols, self.n);
         out.resize_for_overwrite(g.rows, g.cols);
-        let mut sc = self.scratch.lock().unwrap();
+        let mut sc = self.take_scratch();
         for i in 0..g.rows {
             let src = g.row(i);
             let dst = &mut out.data[i * g.cols..(i + 1) * g.cols];
-            match (&self.split, &self.full) {
-                (Some(sp), _) => self.run_row_split(sp, &mut sc, src, dst),
-                (None, Some(fft)) => self.run_row_full(fft, &mut sc, src, dst),
-                (None, None) => unreachable!("plan has neither split nor full path"),
-            }
+            self.run_row(&mut sc, src, dst);
         }
+        self.put_scratch(sc);
+    }
+
+    /// Row-parallel [`MakhoulPlan::run_into`]: rows are partitioned into
+    /// contiguous chunks across the pool, each chunk transforming into its
+    /// disjoint output slab with its own pooled scratch. Rows are
+    /// independent, so the result is bit-identical to sequential for any
+    /// thread count; allocation-free once the scratch pool has seen the
+    /// peak chunk concurrency.
+    pub fn run_into_on(&self, pool: &ThreadPool, g: &Matrix, out: &mut Matrix) {
+        assert_eq!(g.cols, self.n);
+        out.resize_for_overwrite(g.rows, g.cols);
+        let cols = self.n;
+        par_row_slabs(pool, g.rows, cols, &mut out.data, |slab, lo, hi| {
+            let mut sc = self.take_scratch();
+            for i in lo..hi {
+                let dst = &mut slab[(i - lo) * cols..(i - lo + 1) * cols];
+                self.run_row(&mut sc, g.row(i), dst);
+            }
+            self.put_scratch(sc);
+        });
     }
 
     /// Reference transform through the full complex FFT regardless of
@@ -203,12 +257,13 @@ impl MakhoulPlan {
             Some(f) => f,
             None => self.reference.get_or_init(|| FftPlan::new(self.n)),
         };
-        let mut sc = self.scratch.lock().unwrap();
+        let mut sc = self.take_scratch();
         for i in 0..g.rows {
             let src = g.row(i);
             let dst = &mut out.data[i * g.cols..(i + 1) * g.cols];
             self.run_row_full(fft, &mut sc, src, dst);
         }
+        self.put_scratch(sc);
     }
 }
 
@@ -321,6 +376,28 @@ mod tests {
             let mut out = Matrix::randn(2, 3, 1.0, &mut rng); // wrong shape, dirty
             plan.run_into(&g, &mut out);
             assert_eq!(out, plan.run(&g), "n={n}");
+        }
+    }
+
+    #[test]
+    fn run_into_on_bit_identical_any_thread_count() {
+        // Even (split), odd (Bluestein), and pow2 widths; pools 1..8.
+        let mut rng = Pcg64::seed(13);
+        let pools = [
+            crate::parallel::ThreadPool::new(1),
+            crate::parallel::ThreadPool::new(3),
+            crate::parallel::ThreadPool::new(8),
+        ];
+        for n in [6usize, 17, 24, 64] {
+            let plan = MakhoulPlan::new(n);
+            let g = Matrix::randn(11, n, 1.0, &mut rng);
+            let mut want = Matrix::zeros(1, 1);
+            plan.run_into(&g, &mut want);
+            for pool in &pools {
+                let mut got = Matrix::randn(2, 2, 1.0, &mut rng); // dirty
+                plan.run_into_on(pool, &g, &mut got);
+                assert_eq!(got, want, "n={n} threads={}", pool.threads());
+            }
         }
     }
 

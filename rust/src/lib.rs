@@ -22,6 +22,7 @@
 #![allow(clippy::needless_range_loop)]
 
 pub mod util;
+pub mod parallel;
 pub mod tensor;
 pub mod fft;
 pub mod linalg;

@@ -1,12 +1,14 @@
 //! Shared optimizer infrastructure: the [`Optimizer`] trait, layer
-//! metadata, orientation handling (project the smaller dimension), memory
+//! metadata, orientation handling (project the smaller dimension), the
+//! parallel layer-stepping driver ([`step_layers_parallel`]), memory
 //! reports and the optimizer factory.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
+use crate::parallel::{SendPtr, ShardedWorkspace, ThreadPool};
 use crate::projection::{ProjectionKind, RankNorm, SharedDct};
-use crate::tensor::Matrix;
+use crate::tensor::{Matrix, Workspace};
 
 /// What a parameter is; drives the low-rank policy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -74,6 +76,57 @@ pub fn orient(meta: &LayerMeta, g: &Matrix) -> Matrix {
     }
 }
 
+/// Pooled, *owned* oriented gradient — the DctAdamW/LdAdamW idiom (error
+/// feedback mutates the buffer, so a copy is mandatory either way). The
+/// checkout is non-zeroing: `transpose_into`/`copy_from` overwrite every
+/// element. Pair with `ws.give` after the step.
+pub fn take_oriented_owned(meta: &LayerMeta, g: &Matrix, ws: &mut Workspace) -> Matrix {
+    let (rr, cc) = meta.oriented();
+    let mut out = ws.take_uninit(rr, cc);
+    if meta.needs_transpose() {
+        g.transpose_into(&mut out);
+    } else {
+        out.copy_from(g);
+    }
+    out
+}
+
+/// Pooled, *borrowed* oriented gradient — the GaLore/FIRA/FRUGAL idiom:
+/// wide layers get a pooled transpose, tall layers read the gradient in
+/// place through a zero-size staging buffer (which keeps the pool's
+/// take/give sequence identical across layer shapes).
+pub struct OrientedGrad<'g> {
+    buf: Matrix,
+    transposed: bool,
+    orig: &'g Matrix,
+}
+
+impl<'g> OrientedGrad<'g> {
+    pub fn take(meta: &LayerMeta, g: &'g Matrix, ws: &mut Workspace) -> Self {
+        let (rr, cc) = meta.oriented();
+        let transposed = meta.needs_transpose();
+        let mut buf = ws.take_uninit(if transposed { rr } else { 0 }, cc);
+        if transposed {
+            g.transpose_into(&mut buf);
+        }
+        OrientedGrad { buf, transposed, orig: g }
+    }
+
+    /// The oriented gradient to read (R×C in the oriented frame).
+    pub fn matrix(&self) -> &Matrix {
+        if self.transposed {
+            &self.buf
+        } else {
+            self.orig
+        }
+    }
+
+    /// Return the staging buffer to the pool.
+    pub fn give(self, ws: &mut Workspace) {
+        ws.give(self.buf);
+    }
+}
+
 /// Undo [`orient`] on an update.
 pub fn deorient(meta: &LayerMeta, u: Matrix) -> Matrix {
     if meta.needs_transpose() {
@@ -118,7 +171,9 @@ impl MemoryReport {
 
 /// Uniform optimizer interface. `lr` comes from the trainer's schedule.
 /// (Not `Send`: AOT-graph-backed optimizers hold PJRT executables, which
-/// are `Rc`-backed; the whole stack is single-threaded by design.)
+/// are `Rc`-backed, so the optimizer *object* lives on the driver thread.
+/// Rust-native optimizers still fan their per-layer work out across scoped
+/// threads internally via [`step_layers_parallel`].)
 pub trait Optimizer {
     /// Apply one step: update `params[i]` in place from `grads[i]`.
     fn step(&mut self, params: &mut [Matrix], grads: &[Matrix], lr: f32);
@@ -210,6 +265,10 @@ pub struct OptimizerConfig {
     /// Record per-layer projection errors each step (Figure 1).
     pub instrument: bool,
     pub seed: u64,
+    /// Execution lanes for [`step_layers_parallel`]: `None` shares the
+    /// process-global pool (`FFT_SUBSPACE_THREADS` / cores), `Some(n)`
+    /// builds a private n-lane pool (tests pin 1 vs N for bit-identity).
+    pub threads: Option<usize>,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -234,8 +293,69 @@ impl Default for OptimizerConfig {
             ef_mode: EfMode::Q8,
             instrument: false,
             seed: 0,
+            threads: None,
         }
     }
+}
+
+/// Resolve an optimizer's thread pool from its config (global unless a
+/// private lane count was pinned).
+pub fn pool_for(cfg: &OptimizerConfig) -> Arc<ThreadPool> {
+    match cfg.threads {
+        Some(n) => Arc::new(ThreadPool::new(n)),
+        None => crate::parallel::global(),
+    }
+}
+
+/// Step disjoint layers concurrently: `f(i, &mut states[i], &mut params[i],
+/// &grads[i], ws)` runs for every layer, with layers partitioned into
+/// contiguous chunks across the pool and chunk `k` bound to workspace shard
+/// `k` (see `parallel::ShardedWorkspace` for why that binding keeps the
+/// zero-allocation invariant).
+///
+/// **Determinism contract** (property-tested in
+/// `tests/parallel_determinism.rs`): `f`'s output for layer `i` must depend
+/// only on `(i, states[i], params[i], grads[i])` — workspace buffers are
+/// either zeroed on checkout or fully overwritten before being read — so
+/// results are bit-identical for any thread count, including fully
+/// sequential execution (a 1-lane pool).
+pub fn step_layers_parallel<S: Send, F>(
+    pool: &ThreadPool,
+    shards: &mut ShardedWorkspace,
+    states: &mut [S],
+    params: &mut [Matrix],
+    grads: &[Matrix],
+    f: F,
+) where
+    F: Fn(usize, &mut S, &mut Matrix, &Matrix, &mut Workspace) + Sync,
+{
+    let n = states.len();
+    assert_eq!(params.len(), n, "step_layers_parallel: params/states mismatch");
+    assert_eq!(grads.len(), n, "step_layers_parallel: grads/states mismatch");
+    if n == 0 {
+        return;
+    }
+    // Stable layer→chunk→shard partition (the shared `parallel::partition`
+    // rule): constant across steps for a given optimizer instance, so every
+    // shard sees the same take/give sequence each step and stops allocating
+    // after warmup.
+    let (per, n_chunks) = crate::parallel::partition(pool.threads().min(shards.len()), n);
+    let states_p = SendPtr(states.as_mut_ptr());
+    let params_p = SendPtr(params.as_mut_ptr());
+    let cells = shards.cells();
+    pool.par_chunks(n_chunks, |k| {
+        let lo = k * per;
+        let hi = (lo + per).min(n);
+        // SAFETY: chunk k is claimed by exactly one thread; chunks cover
+        // disjoint layer ranges, and shard k is used only by chunk k. All
+        // borrows outlive the blocking par_chunks call.
+        let ws = unsafe { cells.shard(k) };
+        for i in lo..hi {
+            let st = unsafe { &mut *states_p.0.add(i) };
+            let p = unsafe { &mut *params_p.0.add(i) };
+            f(i, st, p, &grads[i], ws);
+        }
+    });
 }
 
 /// Build a shared DCT registry covering every oriented column dimension of
@@ -344,6 +464,60 @@ mod tests {
                 assert!(r >= c, "{}: {r}x{c}", m.name);
             }
         }
+    }
+
+    #[test]
+    fn step_layers_parallel_visits_every_layer_once_any_thread_count() {
+        for threads in [1usize, 3, 8] {
+            let pool = ThreadPool::new(threads);
+            let mut shards = ShardedWorkspace::for_pool(&pool);
+            let mut states: Vec<u64> = vec![0; 7];
+            let mut params: Vec<Matrix> = (0..7).map(|_| Matrix::zeros(2, 2)).collect();
+            let grads: Vec<Matrix> =
+                (0..7).map(|i| Matrix::from_fn(2, 2, |_, _| i as f32)).collect();
+            step_layers_parallel(
+                &pool,
+                &mut shards,
+                &mut states,
+                &mut params,
+                &grads,
+                |i, st, p, g, ws| {
+                    *st += 1;
+                    let tmp = ws.take(2, 2);
+                    p.axpy(1.0, g);
+                    p.axpy(0.0, &tmp);
+                    ws.give(tmp);
+                    assert_eq!(g.at(0, 0), i as f32);
+                },
+            );
+            assert!(states.iter().all(|&s| s == 1), "threads={threads}");
+            for (i, p) in params.iter().enumerate() {
+                assert_eq!(p.at(1, 1), i as f32, "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn oriented_grad_helpers_match_manual_orientation() {
+        let mut ws = Workspace::new();
+        let g_wide = Matrix::from_fn(3, 5, |i, j| (i * 5 + j) as f32);
+        let meta_wide = LayerMeta::new("w", 3, 5, ParamKind::Linear);
+        let owned = take_oriented_owned(&meta_wide, &g_wide, &mut ws);
+        assert_eq!(owned, g_wide.transpose());
+        ws.give(owned);
+        let og = OrientedGrad::take(&meta_wide, &g_wide, &mut ws);
+        assert_eq!(og.matrix(), &g_wide.transpose());
+        og.give(&mut ws);
+
+        let g_tall = Matrix::from_fn(5, 3, |i, j| (i * 3 + j) as f32);
+        let meta_tall = LayerMeta::new("w", 5, 3, ParamKind::Linear);
+        let owned = take_oriented_owned(&meta_tall, &g_tall, &mut ws);
+        assert_eq!(owned, g_tall);
+        ws.give(owned);
+        let og = OrientedGrad::take(&meta_tall, &g_tall, &mut ws);
+        // tall layers are read in place, no copy
+        assert!(std::ptr::eq(og.matrix(), &g_tall));
+        og.give(&mut ws);
     }
 
     #[test]

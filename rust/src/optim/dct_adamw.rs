@@ -10,18 +10,22 @@
 //!
 //! The step is allocation-free at steady state: every temporary (oriented
 //! gradient, similarities, projection, back-projection, update) lives in
-//! the optimizer's [`Workspace`] pool, enforced by the counting-allocator
-//! test in `tests/alloc_steady_state.rs`.
+//! the optimizer's per-shard [`Workspace`] pools, enforced by the
+//! counting-allocator test in `tests/alloc_steady_state.rs`. Layers step
+//! concurrently through `step_layers_parallel` — disjoint layers, one
+//! workspace shard per chunk — and the result is bit-identical for any
+//! thread count (`tests/parallel_determinism.rs`).
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
+use crate::parallel::{ShardedWorkspace, ThreadPool};
 use crate::projection::{DctSelect, Projection, RankNorm, SharedDct};
 use crate::tensor::{Matrix, Workspace};
 
 use super::common::{
-    shared_dct_registry, AdamState, LayerMeta, MemoryReport, Optimizer,
-    OptimizerConfig,
+    pool_for, shared_dct_registry, step_layers_parallel, take_oriented_owned,
+    AdamState, LayerMeta, MemoryReport, Optimizer, OptimizerConfig,
 };
 use super::error_feedback::EfBuffer;
 
@@ -41,7 +45,8 @@ pub struct DctAdamW {
     metas: Vec<LayerMeta>,
     states: Vec<LayerState>,
     shared: BTreeMap<usize, Arc<SharedDct>>,
-    ws: Workspace,
+    pool: Arc<ThreadPool>,
+    shards: ShardedWorkspace,
     update_interval: usize,
     beta1: f32,
     beta2: f32,
@@ -117,11 +122,14 @@ impl DctAdamW {
                 }
             })
             .collect();
+        let pool = pool_for(cfg);
+        let shards = ShardedWorkspace::for_pool(&pool);
         DctAdamW {
             metas: metas.to_vec(),
             states,
             shared,
-            ws: Workspace::new(),
+            pool,
+            shards,
             update_interval: cfg.update_interval.max(1),
             beta1: cfg.beta1,
             beta2: cfg.beta2,
@@ -137,78 +145,82 @@ impl Optimizer for DctAdamW {
         self.step += 1;
         let t = self.step;
         let refresh = t == 1 || t % self.update_interval as u64 == 0;
-        let ws = &mut self.ws;
-        for i in 0..params.len() {
-            let meta = &self.metas[i];
-            match &mut self.states[i] {
-                LayerState::Adam(st) => st.update(
-                    &mut params[i], &grads[i], lr, self.beta1, self.beta2,
-                    self.eps, self.weight_decay, t,
-                ),
-                LayerState::LowRank { select, idx_prev, m, v, ef, first } => {
-                    let (rr, cc) = meta.oriented();
-                    let r = select.rank();
-                    // oriented gradient (owned: EF mutates it)
-                    let mut g = ws.take(rr, cc);
-                    if meta.needs_transpose() {
-                        grads[i].transpose_into(&mut g);
-                    } else {
-                        g.copy_from(&grads[i]);
-                    }
-                    ef.add_into(&mut g); // G ← G + Ξ
-                    let mut g_low = ws.take(rr, r);
-                    if refresh {
-                        // remember the outgoing indices, then refresh
-                        idx_prev.clear();
-                        idx_prev.extend_from_slice(select.indices());
-                        select.refresh_and_project_into(&g, &mut g_low, ws);
-                        if !*first {
-                            // rotation = index matching (fixed basis!)
-                            rotate_fixed_basis_into(m, idx_prev, select.indices(), ws);
-                            rotate_fixed_basis_into(v, idx_prev, select.indices(), ws);
-                            // |v·R| — rotation here is 0/1 so abs is a no-op,
-                            // kept for parity with Algorithm 2
-                            for x in &mut v.data {
-                                *x = x.abs();
+        let (beta1, beta2, eps, weight_decay) =
+            (self.beta1, self.beta2, self.eps, self.weight_decay);
+        let metas = &self.metas;
+        let pool = Arc::clone(&self.pool);
+        step_layers_parallel(
+            &pool,
+            &mut self.shards,
+            &mut self.states,
+            params,
+            grads,
+            |i, state, param, grad, ws| {
+                let meta = &metas[i];
+                match state {
+                    LayerState::Adam(st) => st.update(
+                        param, grad, lr, beta1, beta2, eps, weight_decay, t,
+                    ),
+                    LayerState::LowRank { select, idx_prev, m, v, ef, first } => {
+                        let (rr, cc) = meta.oriented();
+                        let r = select.rank();
+                        // oriented gradient (owned: EF mutates it)
+                        let mut g = take_oriented_owned(meta, grad, ws);
+                        ef.add_into(&mut g); // G ← G + Ξ
+                        let mut g_low = ws.take_uninit(rr, r);
+                        if refresh {
+                            // remember the outgoing indices, then refresh
+                            idx_prev.clear();
+                            idx_prev.extend_from_slice(select.indices());
+                            select.refresh_and_project_into(&g, &mut g_low, ws);
+                            if !*first {
+                                // rotation = index matching (fixed basis!)
+                                rotate_fixed_basis_into(m, idx_prev, select.indices(), ws);
+                                rotate_fixed_basis_into(v, idx_prev, select.indices(), ws);
+                                // |v·R| — rotation here is 0/1 so abs is a
+                                // no-op, kept for parity with Algorithm 2
+                                for x in &mut v.data {
+                                    *x = x.abs();
+                                }
                             }
+                            *first = false;
+                        } else {
+                            select.project_into(&g, &mut g_low, ws);
                         }
-                        *first = false;
-                    } else {
-                        select.project_into(&g, &mut g_low, ws);
+                        // Ξ ← G − g·Qᵀ  (residual built in the back buffer)
+                        let mut back = ws.take_uninit(rr, cc);
+                        select.back_into(&g_low, &mut back, ws);
+                        back.sub_from(&g);
+                        ef.store(&back);
+                        // AdamW in the subspace
+                        let bc1 = 1.0 - beta1.powi(t as i32);
+                        let bc2 = 1.0 - beta2.powi(t as i32);
+                        let mut u_low = ws.take_uninit(rr, r);
+                        for k in 0..g_low.data.len() {
+                            let gi = g_low.data[k];
+                            let mk = beta1 * m.data[k] + (1.0 - beta1) * gi;
+                            let vk = beta2 * v.data[k] + (1.0 - beta2) * gi * gi;
+                            m.data[k] = mk;
+                            v.data[k] = vk;
+                            u_low.data[k] = (mk / bc1) / ((vk / bc2).sqrt() + eps);
+                        }
+                        // U = u·Qᵀ, applied in the original orientation
+                        // without materializing a transpose
+                        select.back_into(&u_low, &mut back, ws);
+                        param.scale(1.0 - lr * weight_decay);
+                        if meta.needs_transpose() {
+                            param.axpy_t(-lr, &back);
+                        } else {
+                            param.axpy(-lr, &back);
+                        }
+                        ws.give(u_low);
+                        ws.give(back);
+                        ws.give(g_low);
+                        ws.give(g);
                     }
-                    // Ξ ← G − g·Qᵀ  (residual built in the back buffer)
-                    let mut back = ws.take(rr, cc);
-                    select.back_into(&g_low, &mut back, ws);
-                    back.sub_from(&g);
-                    ef.store(&back);
-                    // AdamW in the subspace
-                    let bc1 = 1.0 - self.beta1.powi(t as i32);
-                    let bc2 = 1.0 - self.beta2.powi(t as i32);
-                    let mut u_low = ws.take(rr, r);
-                    for k in 0..g_low.data.len() {
-                        let gi = g_low.data[k];
-                        let mk = self.beta1 * m.data[k] + (1.0 - self.beta1) * gi;
-                        let vk = self.beta2 * v.data[k] + (1.0 - self.beta2) * gi * gi;
-                        m.data[k] = mk;
-                        v.data[k] = vk;
-                        u_low.data[k] = (mk / bc1) / ((vk / bc2).sqrt() + self.eps);
-                    }
-                    // U = u·Qᵀ, applied in the original orientation without
-                    // materializing a transpose
-                    select.back_into(&u_low, &mut back, ws);
-                    params[i].scale(1.0 - lr * self.weight_decay);
-                    if meta.needs_transpose() {
-                        params[i].axpy_t(-lr, &back);
-                    } else {
-                        params[i].axpy(-lr, &back);
-                    }
-                    ws.give(u_low);
-                    ws.give(back);
-                    ws.give(g_low);
-                    ws.give(g);
                 }
-            }
-        }
+            },
+        );
     }
 
     fn memory_report(&self) -> MemoryReport {

@@ -5,11 +5,15 @@
 //! so the out-of-subspace signal moves with an Adam-calibrated magnitude
 //! (Table 3: "norm-based scaling").
 
+use std::sync::Arc;
+
+use crate::parallel::{ShardedWorkspace, ThreadPool};
 use crate::projection::{Projection, ProjectionKind};
-use crate::tensor::{Matrix, Workspace};
+use crate::tensor::Matrix;
 
 use super::common::{
-    AdamState, LayerMeta, MemoryReport, Optimizer, OptimizerConfig,
+    pool_for, step_layers_parallel, AdamState, LayerMeta, MemoryReport,
+    Optimizer, OptimizerConfig, OrientedGrad,
 };
 
 enum LayerState {
@@ -24,7 +28,8 @@ enum LayerState {
 pub struct Fira {
     metas: Vec<LayerMeta>,
     states: Vec<LayerState>,
-    ws: Workspace,
+    pool: Arc<ThreadPool>,
+    shards: ShardedWorkspace,
     update_interval: usize,
     beta1: f32,
     beta2: f32,
@@ -64,10 +69,13 @@ impl Fira {
             })
             .collect();
         let proj_name = kind.name();
+        let pool = pool_for(cfg);
+        let shards = ShardedWorkspace::for_pool(&pool);
         Fira {
             metas: metas.to_vec(),
             states,
-            ws: Workspace::new(),
+            pool,
+            shards,
             update_interval: cfg.update_interval.max(1),
             beta1: cfg.beta1,
             beta2: cfg.beta2,
@@ -84,64 +92,68 @@ impl Optimizer for Fira {
         self.step += 1;
         let t = self.step;
         let refresh = t == 1 || t % self.update_interval as u64 == 0;
-        let ws = &mut self.ws;
-        for i in 0..params.len() {
-            let meta = &self.metas[i];
-            match &mut self.states[i] {
-                LayerState::Adam(st) => st.update(
-                    &mut params[i], &grads[i], lr, self.beta1, self.beta2,
-                    self.eps, self.weight_decay, t,
-                ),
-                LayerState::LowRank { proj, m, v } => {
-                    let (rr, cc) = meta.oriented();
-                    let mut obuf = ws.take(if meta.needs_transpose() { rr } else { 0 }, cc);
-                    let g: &Matrix = if meta.needs_transpose() {
-                        grads[i].transpose_into(&mut obuf);
-                        &obuf
-                    } else {
-                        &grads[i]
-                    };
-                    let mut g_low = ws.take(rr, proj.rank());
-                    if refresh {
-                        proj.refresh_and_project_into(g, &mut g_low, ws);
-                    } else {
-                        proj.project_into(g, &mut g_low, ws);
+        let (beta1, beta2, eps, weight_decay) =
+            (self.beta1, self.beta2, self.eps, self.weight_decay);
+        let metas = &self.metas;
+        let pool = Arc::clone(&self.pool);
+        step_layers_parallel(
+            &pool,
+            &mut self.shards,
+            &mut self.states,
+            params,
+            grads,
+            |i, state, param, grad, ws| {
+                let meta = &metas[i];
+                match state {
+                    LayerState::Adam(st) => st.update(
+                        param, grad, lr, beta1, beta2, eps, weight_decay, t,
+                    ),
+                    LayerState::LowRank { proj, m, v } => {
+                        let (rr, cc) = meta.oriented();
+                        let og = OrientedGrad::take(meta, grad, ws);
+                        let g = og.matrix();
+                        let mut g_low = ws.take_uninit(rr, proj.rank());
+                        if refresh {
+                            proj.refresh_and_project_into(g, &mut g_low, ws);
+                        } else {
+                            proj.project_into(g, &mut g_low, ws);
+                        }
+                        let bc1 = 1.0 - beta1.powi(t as i32);
+                        let bc2 = 1.0 - beta2.powi(t as i32);
+                        let mut u_low = ws.take_uninit(g_low.rows, g_low.cols);
+                        for k in 0..g_low.data.len() {
+                            let gi = g_low.data[k];
+                            let mk = beta1 * m.data[k] + (1.0 - beta1) * gi;
+                            let vk = beta2 * v.data[k] + (1.0 - beta2) * gi * gi;
+                            m.data[k] = mk;
+                            v.data[k] = vk;
+                            u_low.data[k] = (mk / bc1) / ((vk / bc2).sqrt() + eps);
+                        }
+                        // φ = ‖u_low‖ / ‖g_low‖ — Adam-calibrated scaling for
+                        // the residual (FIRA's norm-based scaling)
+                        let phi = (u_low.fro_norm() / (g_low.fro_norm() + 1e-12)) as f32;
+                        let mut u = ws.take_uninit(rr, cc);
+                        proj.back_into(&u_low, &mut u, ws);
+                        // residual = g − back(g_low), built in place
+                        let mut resid = ws.take_uninit(rr, cc);
+                        proj.back_into(&g_low, &mut resid, ws);
+                        resid.sub_from(g);
+                        u.axpy(phi, &resid);
+                        param.scale(1.0 - lr * weight_decay);
+                        if meta.needs_transpose() {
+                            param.axpy_t(-lr, &u);
+                        } else {
+                            param.axpy(-lr, &u);
+                        }
+                        ws.give(resid);
+                        ws.give(u);
+                        ws.give(u_low);
+                        ws.give(g_low);
+                        og.give(ws);
                     }
-                    let bc1 = 1.0 - self.beta1.powi(t as i32);
-                    let bc2 = 1.0 - self.beta2.powi(t as i32);
-                    let mut u_low = ws.take(g_low.rows, g_low.cols);
-                    for k in 0..g_low.data.len() {
-                        let gi = g_low.data[k];
-                        let mk = self.beta1 * m.data[k] + (1.0 - self.beta1) * gi;
-                        let vk = self.beta2 * v.data[k] + (1.0 - self.beta2) * gi * gi;
-                        m.data[k] = mk;
-                        v.data[k] = vk;
-                        u_low.data[k] = (mk / bc1) / ((vk / bc2).sqrt() + self.eps);
-                    }
-                    // φ = ‖u_low‖ / ‖g_low‖ — Adam-calibrated scaling for the
-                    // residual (FIRA's norm-based scaling)
-                    let phi = (u_low.fro_norm() / (g_low.fro_norm() + 1e-12)) as f32;
-                    let mut u = ws.take(rr, cc);
-                    proj.back_into(&u_low, &mut u, ws);
-                    // residual = g − back(g_low), built in place
-                    let mut resid = ws.take(rr, cc);
-                    proj.back_into(&g_low, &mut resid, ws);
-                    resid.sub_from(g);
-                    u.axpy(phi, &resid);
-                    params[i].scale(1.0 - lr * self.weight_decay);
-                    if meta.needs_transpose() {
-                        params[i].axpy_t(-lr, &u);
-                    } else {
-                        params[i].axpy(-lr, &u);
-                    }
-                    ws.give(resid);
-                    ws.give(u);
-                    ws.give(u_low);
-                    ws.give(g_low);
-                    ws.give(obuf);
                 }
-            }
-        }
+            },
+        );
     }
 
     fn memory_report(&self) -> MemoryReport {

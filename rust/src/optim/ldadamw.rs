@@ -4,11 +4,15 @@
 //! feedback. Stores *two consecutive projection matrices per layer* — the
 //! memory overhead DCT-AdamW's index-only state removes.
 
+use std::sync::Arc;
+
+use crate::parallel::{ShardedWorkspace, ThreadPool};
 use crate::projection::{BlockPower, Projection};
-use crate::tensor::{matmul_into, Matrix, Workspace};
+use crate::tensor::{matmul_into, Matrix};
 
 use super::common::{
-    AdamState, LayerMeta, MemoryReport, Optimizer, OptimizerConfig,
+    pool_for, step_layers_parallel, take_oriented_owned, AdamState, LayerMeta,
+    MemoryReport, Optimizer, OptimizerConfig,
 };
 use super::error_feedback::EfBuffer;
 use crate::optim::common::EfMode;
@@ -28,7 +32,8 @@ enum LayerState {
 pub struct LdAdamW {
     metas: Vec<LayerMeta>,
     states: Vec<LayerState>,
-    ws: Workspace,
+    pool: Arc<ThreadPool>,
+    shards: ShardedWorkspace,
     beta1: f32,
     beta2: f32,
     eps: f32,
@@ -58,10 +63,13 @@ impl LdAdamW {
                 }
             })
             .collect();
+        let pool = pool_for(cfg);
+        let shards = ShardedWorkspace::for_pool(&pool);
         LdAdamW {
             metas: metas.to_vec(),
             states,
-            ws: Workspace::new(),
+            pool,
+            shards,
             beta1: cfg.beta1,
             beta2: cfg.beta2,
             eps: cfg.eps,
@@ -75,77 +83,81 @@ impl Optimizer for LdAdamW {
     fn step(&mut self, params: &mut [Matrix], grads: &[Matrix], lr: f32) {
         self.step += 1;
         let t = self.step;
-        let ws = &mut self.ws;
-        for i in 0..params.len() {
-            let meta = &self.metas[i];
-            match &mut self.states[i] {
-                LayerState::Adam(st) => st.update(
-                    &mut params[i], &grads[i], lr, self.beta1, self.beta2,
-                    self.eps, self.weight_decay, t,
-                ),
-                LayerState::LowRank { proj, prev_basis, m, v, ef, first } => {
-                    let (rr, cc) = meta.oriented();
-                    let r = proj.rank();
-                    // oriented gradient (owned: EF mutates it)
-                    let mut g = ws.take(rr, cc);
-                    if meta.needs_transpose() {
-                        grads[i].transpose_into(&mut g);
-                    } else {
-                        g.copy_from(&grads[i]);
-                    }
-                    // G ← G + Ξ (error feedback)
-                    ef.add_into(&mut g);
-                    // refresh subspace every step (block power, warm start)
-                    let mut g_low = ws.take(rr, r);
-                    proj.refresh_and_project_into(&g, &mut g_low, ws);
-                    // rotate moments into the new subspace
-                    if !*first {
-                        let mut rot = ws.take(r, r);
-                        proj.rotation_into(prev_basis, &mut rot, ws);
-                        let mut tmp = ws.take(rr, r);
-                        matmul_into(m, &rot, &mut tmp);
-                        m.copy_from(&tmp);
-                        matmul_into(v, &rot, &mut tmp);
-                        v.copy_from(&tmp);
-                        for x in &mut v.data {
-                            *x = x.abs();
+        let (beta1, beta2, eps, weight_decay) =
+            (self.beta1, self.beta2, self.eps, self.weight_decay);
+        let metas = &self.metas;
+        let pool = Arc::clone(&self.pool);
+        step_layers_parallel(
+            &pool,
+            &mut self.shards,
+            &mut self.states,
+            params,
+            grads,
+            |i, state, param, grad, ws| {
+                let meta = &metas[i];
+                match state {
+                    LayerState::Adam(st) => st.update(
+                        param, grad, lr, beta1, beta2, eps, weight_decay, t,
+                    ),
+                    LayerState::LowRank { proj, prev_basis, m, v, ef, first } => {
+                        let (rr, cc) = meta.oriented();
+                        let r = proj.rank();
+                        // oriented gradient (owned: EF mutates it)
+                        let mut g = take_oriented_owned(meta, grad, ws);
+                        // G ← G + Ξ (error feedback)
+                        ef.add_into(&mut g);
+                        // refresh subspace every step (block power, warm start)
+                        let mut g_low = ws.take_uninit(rr, r);
+                        proj.refresh_and_project_into(&g, &mut g_low, ws);
+                        // rotate moments into the new subspace
+                        if !*first {
+                            let mut rot = ws.take_uninit(r, r);
+                            proj.rotation_into(prev_basis, &mut rot, ws);
+                            let mut tmp = ws.take_uninit(rr, r);
+                            matmul_into(m, &rot, &mut tmp);
+                            m.copy_from(&tmp);
+                            matmul_into(v, &rot, &mut tmp);
+                            v.copy_from(&tmp);
+                            for x in &mut v.data {
+                                *x = x.abs();
+                            }
+                            ws.give(tmp);
+                            ws.give(rot);
                         }
-                        ws.give(tmp);
-                        ws.give(rot);
+                        *first = false;
+                        proj.basis_into(prev_basis);
+                        // store new projection error (residual in `back`)
+                        let mut back = ws.take_uninit(rr, cc);
+                        proj.back_into(&g_low, &mut back, ws);
+                        back.sub_from(&g);
+                        ef.store(&back);
+                        // Adam math in the subspace
+                        let bc1 = 1.0 - beta1.powi(t as i32);
+                        let bc2 = 1.0 - beta2.powi(t as i32);
+                        let mut u_low = ws.take_uninit(rr, r);
+                        for k in 0..g_low.data.len() {
+                            let gi = g_low.data[k];
+                            let mk = beta1 * m.data[k] + (1.0 - beta1) * gi;
+                            let vk = beta2 * v.data[k] + (1.0 - beta2) * gi * gi;
+                            m.data[k] = mk;
+                            v.data[k] = vk;
+                            u_low.data[k] = (mk / bc1) / ((vk / bc2).sqrt() + eps);
+                        }
+                        proj.back_into(&u_low, &mut back, ws);
+                        param.scale(1.0 - lr * weight_decay);
+                        if meta.needs_transpose() {
+                            param.axpy_t(-lr, &back);
+                        } else {
+                            param.axpy(-lr, &back);
+                        }
+                        ws.give(u_low);
+                        ws.give(back);
+                        ws.give(g_low);
+                        ws.give(g);
                     }
-                    *first = false;
-                    proj.basis_into(prev_basis);
-                    // store new projection error (residual in `back`)
-                    let mut back = ws.take(rr, cc);
-                    proj.back_into(&g_low, &mut back, ws);
-                    back.sub_from(&g);
-                    ef.store(&back);
-                    // Adam math in the subspace
-                    let bc1 = 1.0 - self.beta1.powi(t as i32);
-                    let bc2 = 1.0 - self.beta2.powi(t as i32);
-                    let mut u_low = ws.take(rr, r);
-                    for k in 0..g_low.data.len() {
-                        let gi = g_low.data[k];
-                        let mk = self.beta1 * m.data[k] + (1.0 - self.beta1) * gi;
-                        let vk = self.beta2 * v.data[k] + (1.0 - self.beta2) * gi * gi;
-                        m.data[k] = mk;
-                        v.data[k] = vk;
-                        u_low.data[k] = (mk / bc1) / ((vk / bc2).sqrt() + self.eps);
-                    }
-                    proj.back_into(&u_low, &mut back, ws);
-                    params[i].scale(1.0 - lr * self.weight_decay);
-                    if meta.needs_transpose() {
-                        params[i].axpy_t(-lr, &back);
-                    } else {
-                        params[i].axpy(-lr, &back);
-                    }
-                    ws.give(u_low);
-                    ws.give(back);
-                    ws.give(g_low);
-                    ws.give(g);
                 }
-            }
-        }
+            },
+        );
     }
 
     fn memory_report(&self) -> MemoryReport {

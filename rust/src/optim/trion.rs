@@ -16,15 +16,16 @@
 //! `O_t` locally from their DCT replica (§2.3).
 
 use std::collections::BTreeMap;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::linalg::newton_schulz;
+use crate::parallel::{ShardedWorkspace, ThreadPool};
 use crate::projection::{DctSelect, Projection, RankNorm, SharedDct};
-use crate::tensor::{Matrix, Workspace};
+use crate::tensor::Matrix;
 
 use super::common::{
-    shape_factor, shared_dct_registry, AdamState, LayerMeta, MemoryReport,
-    Optimizer, OptimizerConfig,
+    pool_for, shape_factor, shared_dct_registry, step_layers_parallel,
+    AdamState, LayerMeta, MemoryReport, Optimizer, OptimizerConfig,
 };
 
 enum LayerState {
@@ -39,7 +40,8 @@ pub struct Trion {
     metas: Vec<LayerMeta>,
     states: Vec<LayerState>,
     shared: BTreeMap<usize, Arc<SharedDct>>,
-    ws: Workspace,
+    pool: Arc<ThreadPool>,
+    shards: ShardedWorkspace,
     rank: usize,
     mu: f32,
     ns_steps: usize,
@@ -78,11 +80,14 @@ impl Trion {
                 }
             })
             .collect();
+        let pool = pool_for(cfg);
+        let shards = ShardedWorkspace::for_pool(&pool);
         Trion {
             metas: metas.to_vec(),
             states,
             shared,
-            ws: Workspace::new(),
+            pool,
+            shards,
             rank: cfg.rank,
             mu: cfg.mu,
             ns_steps: cfg.ns_steps,
@@ -108,59 +113,80 @@ impl Trion {
 impl Optimizer for Trion {
     fn step(&mut self, params: &mut [Matrix], grads: &[Matrix], lr: f32) {
         self.step += 1;
-        let ws = &mut self.ws;
-        for i in 0..params.len() {
-            let meta = &self.metas[i];
-            match &mut self.states[i] {
-                LayerState::Adam(st) => st.update(
-                    &mut params[i], &grads[i], lr, self.beta1, self.beta2,
-                    self.eps, 0.0, self.step,
-                ),
-                LayerState::LowRank { momentum, select } => {
-                    let (rr, cc) = meta.oriented();
-                    let r = select.rank();
-                    // B = M + G — accumulate the gradient straight into the
-                    // momentum, transposing on the fly for wide layers
-                    if meta.needs_transpose() {
-                        momentum.axpy_t(1.0, &grads[i]);
-                    } else {
-                        momentum.axpy(1.0, &grads[i]);
+        let t = self.step;
+        let (beta1, beta2, eps, weight_decay, mu, ns_steps, instrument) = (
+            self.beta1, self.beta2, self.eps, self.weight_decay, self.mu,
+            self.ns_steps, self.instrument,
+        );
+        let metas = &self.metas;
+        // Per-layer errors land in a shared map under a mutex; values are
+        // per-layer-deterministic and BTreeMap orders by key, so the
+        // instrumented output is identical for any thread count.
+        let errors = Mutex::new(std::mem::take(&mut self.errors));
+        let pool = Arc::clone(&self.pool);
+        step_layers_parallel(
+            &pool,
+            &mut self.shards,
+            &mut self.states,
+            params,
+            grads,
+            |i, state, param, grad, ws| {
+                let meta = &metas[i];
+                match state {
+                    LayerState::Adam(st) => {
+                        st.update(param, grad, lr, beta1, beta2, eps, 0.0, t)
                     }
-                    // S = DCT(B); select top-r; b = S[:, i_t]  (one pass)
-                    let mut b_low = ws.take(rr, r);
-                    select.refresh_and_project_into(momentum, &mut b_low, ws);
-                    // error feedback: M = B − (1−μ)·b·Qᵀ
-                    let mut back = ws.take(rr, cc);
-                    select.back_into(&b_low, &mut back, ws);
-                    momentum.axpy(-(1.0 - self.mu), &back);
-                    // Newton–Schulz on the LOW-RANK momentum (R×r)
-                    let o_low = newton_schulz(&b_low, self.ns_steps);
-                    if self.instrument {
-                        // restore B while `back` still holds back(b_low),
-                        // then repurpose `back` for O — computed only once
-                        let mut b_now = ws.take(rr, cc);
-                        b_now.copy_from(momentum);
-                        b_now.axpy(1.0 - self.mu, &back);
-                        select.back_into(&o_low, &mut back, ws); // back = O
-                        b_now.axpy(-1.0, &back);
-                        self.errors.insert(meta.name.clone(), b_now.fro_norm());
-                        ws.give(b_now);
-                    } else {
-                        // O = o·Qᵀ, applied without materializing the transpose
-                        select.back_into(&o_low, &mut back, ws);
+                    LayerState::LowRank { momentum, select } => {
+                        let (rr, cc) = meta.oriented();
+                        let r = select.rank();
+                        // B = M + G — accumulate the gradient straight into
+                        // the momentum, transposing on the fly for wide layers
+                        if meta.needs_transpose() {
+                            momentum.axpy_t(1.0, grad);
+                        } else {
+                            momentum.axpy(1.0, grad);
+                        }
+                        // S = DCT(B); select top-r; b = S[:, i_t]  (one pass)
+                        let mut b_low = ws.take_uninit(rr, r);
+                        select.refresh_and_project_into(momentum, &mut b_low, ws);
+                        // error feedback: M = B − (1−μ)·b·Qᵀ
+                        let mut back = ws.take_uninit(rr, cc);
+                        select.back_into(&b_low, &mut back, ws);
+                        momentum.axpy(-(1.0 - mu), &back);
+                        // Newton–Schulz on the LOW-RANK momentum (R×r)
+                        let o_low = newton_schulz(&b_low, ns_steps);
+                        if instrument {
+                            // restore B while `back` still holds back(b_low),
+                            // then repurpose `back` for O — computed only once
+                            let mut b_now = ws.take_uninit(rr, cc);
+                            b_now.copy_from(momentum);
+                            b_now.axpy(1.0 - mu, &back);
+                            select.back_into(&o_low, &mut back, ws); // back = O
+                            b_now.axpy(-1.0, &back);
+                            errors
+                                .lock()
+                                .unwrap()
+                                .insert(meta.name.clone(), b_now.fro_norm());
+                            ws.give(b_now);
+                        } else {
+                            // O = o·Qᵀ, applied without materializing the
+                            // transpose
+                            select.back_into(&o_low, &mut back, ws);
+                        }
+                        param.scale(1.0 - lr * weight_decay);
+                        let scale = -lr * shape_factor(rr, cc);
+                        if meta.needs_transpose() {
+                            param.axpy_t(scale, &back);
+                        } else {
+                            param.axpy(scale, &back);
+                        }
+                        ws.give(back);
+                        ws.give(b_low);
                     }
-                    params[i].scale(1.0 - lr * self.weight_decay);
-                    let scale = -lr * shape_factor(rr, cc);
-                    if meta.needs_transpose() {
-                        params[i].axpy_t(scale, &back);
-                    } else {
-                        params[i].axpy(scale, &back);
-                    }
-                    ws.give(back);
-                    ws.give(b_low);
                 }
-            }
-        }
+            },
+        );
+        self.errors = errors.into_inner().unwrap();
     }
 
     fn memory_report(&self) -> MemoryReport {

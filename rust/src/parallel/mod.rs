@@ -1,0 +1,164 @@
+//! Deterministic parallel execution engine.
+//!
+//! The paper's headline is rank-independent *runtime*; this module makes
+//! the step loop scale with cores instead of layer count while keeping
+//! every result **bit-identical to sequential execution for any thread
+//! count** (property-tested in `tests/parallel_determinism.rs`). Three
+//! rules make that possible, and every user of this module follows them:
+//!
+//! 1. **Index-deterministic work.** Work is split into indexed chunks whose
+//!    outputs depend only on the chunk index, never on which thread ran
+//!    them or in what order. Row-partitioned kernels keep each output
+//!    element's floating-point summation order exactly as the sequential
+//!    kernel computes it.
+//! 2. **Chunk-bound scratch.** Mutable scratch is bound to the chunk index
+//!    ([`ShardedWorkspace`]: shard `k` ↔ chunk `k`), so pooled-buffer reuse
+//!    replays identically every step and the PR-1 zero-allocation invariant
+//!    holds per shard.
+//! 3. **Disjoint writes.** Chunks write disjoint memory (layer ranges, row
+//!    ranges, ring-transfer chunks); no reductions across chunks exist on
+//!    any hot path.
+//!
+//! Thread count comes from `FFT_SUBSPACE_THREADS` (else
+//! `available_parallelism()`); `FFT_SUBSPACE_THREADS=1` forces the whole
+//! stack sequential. Entry points: [`ThreadPool::par_for`] /
+//! [`ThreadPool::par_chunks`] (allocation-free), [`ThreadPool::scope`]
+//! (convenience), [`par_for_each_mut`] (slice fan-out), and
+//! `optim::common::step_layers_parallel` (disjoint-layer stepping).
+
+mod pool;
+mod sharded;
+
+pub use pool::{default_threads, global, ThreadPool, Scope, SendPtr};
+pub use sharded::{ShardCells, ShardedWorkspace};
+
+/// The one contiguous-partition rule every parallel path uses: split `n`
+/// items over at most `lanes` chunks; chunk `k` covers
+/// `[k·per, min((k+1)·per, n))`. Returns `(per, n_chunks)`. Centralized so
+/// the chunk↔shard binding can never diverge between kernels.
+pub fn partition(lanes: usize, n: usize) -> (usize, usize) {
+    let t = lanes.min(n).max(1);
+    let per = n.div_ceil(t);
+    (per, n.div_ceil(per))
+}
+
+/// Partition `n_rows` rows of `width` elements over the pool and hand each
+/// chunk its disjoint slab of `data` as `body(slab, lo, hi)` (where `slab`
+/// is rows `lo..hi`, indexed `(i - lo) * width`). Runs inline sequentially
+/// when the pool has one lane or there is one chunk — same bits either way
+/// as long as `body` is per-row deterministic.
+pub fn par_row_slabs<T: Send>(
+    pool: &ThreadPool,
+    n_rows: usize,
+    width: usize,
+    data: &mut [T],
+    body: impl Fn(&mut [T], usize, usize) + Sync,
+) {
+    if n_rows == 0 {
+        return;
+    }
+    debug_assert_eq!(data.len(), n_rows * width);
+    let (per, n_chunks) = partition(pool.threads(), n_rows);
+    if n_chunks <= 1 {
+        body(data, 0, n_rows);
+        return;
+    }
+    let base = SendPtr(data.as_mut_ptr());
+    pool.par_chunks(n_chunks, |k| {
+        let lo = k * per;
+        let hi = (lo + per).min(n_rows);
+        // SAFETY: chunk k owns rows [lo, hi) — disjoint across chunks, and
+        // `data` outlives the blocking par_chunks call.
+        let slab = unsafe {
+            std::slice::from_raw_parts_mut(base.0.add(lo * width), (hi - lo) * width)
+        };
+        body(slab, lo, hi);
+    });
+}
+
+/// Run `f(i, &mut items[i])` for every element, partitioned across the
+/// pool in contiguous index ranges. Deterministic as long as each `f`
+/// invocation depends only on `i` and `items[i]`.
+pub fn par_for_each_mut<T: Send>(
+    pool: &ThreadPool,
+    items: &mut [T],
+    f: impl Fn(usize, &mut T) + Sync,
+) {
+    let n = items.len();
+    let base = SendPtr(items.as_mut_ptr());
+    pool.par_for(n, |i| {
+        // SAFETY: par_for hands each index to exactly one thread, and the
+        // slice outlives the (blocking) call.
+        let item = unsafe { &mut *base.0.add(i) };
+        f(i, item);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_covers_exactly_once() {
+        for lanes in [1usize, 3, 8] {
+            for n in [1usize, 2, 7, 8, 9, 100] {
+                let (per, n_chunks) = partition(lanes, n);
+                let mut covered = 0;
+                for k in 0..n_chunks {
+                    let lo = k * per;
+                    let hi = (lo + per).min(n);
+                    assert!(lo < hi, "empty chunk lanes={lanes} n={n} k={k}");
+                    covered += hi - lo;
+                }
+                assert_eq!(covered, n, "lanes={lanes} n={n}");
+                assert!(n_chunks <= lanes.max(1));
+            }
+        }
+    }
+
+    #[test]
+    fn par_row_slabs_writes_every_row_once() {
+        let pool = ThreadPool::new(4);
+        let (rows, width) = (37usize, 5usize);
+        let mut data = vec![0u32; rows * width];
+        par_row_slabs(&pool, rows, width, &mut data, |slab, lo, hi| {
+            for i in lo..hi {
+                for j in 0..width {
+                    slab[(i - lo) * width + j] += (i * width + j) as u32 + 1;
+                }
+            }
+        });
+        for (k, v) in data.iter().enumerate() {
+            assert_eq!(*v, k as u32 + 1);
+        }
+    }
+
+    #[test]
+    fn par_for_each_mut_touches_every_item_once() {
+        let pool = ThreadPool::new(4);
+        let mut items = vec![0u64; 257];
+        par_for_each_mut(&pool, &mut items, |i, v| {
+            *v += i as u64 + 1;
+        });
+        for (i, v) in items.iter().enumerate() {
+            assert_eq!(*v, i as u64 + 1);
+        }
+    }
+
+    #[test]
+    fn par_for_each_mut_matches_sequential() {
+        let pool1 = ThreadPool::new(1);
+        let pool4 = ThreadPool::new(4);
+        let work = |i: usize, v: &mut f32| {
+            // order-sensitive per element, index-deterministic overall
+            for k in 0..=i % 7 {
+                *v += (k as f32 + 0.5) * 1e-3;
+            }
+        };
+        let mut a = vec![0.0f32; 100];
+        let mut b = vec![0.0f32; 100];
+        par_for_each_mut(&pool1, &mut a, work);
+        par_for_each_mut(&pool4, &mut b, work);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,446 @@
+//! Dependency-free fork–join thread pool (no rayon/crossbeam offline).
+//!
+//! Design constraints, in priority order:
+//!
+//! 1. **Determinism** — work is split into *indexed chunks*; which OS thread
+//!    executes a chunk never affects what the chunk computes. Callers bind
+//!    data to chunk indices (e.g. workspace shard `k` ↔ chunk `k`), so
+//!    results are bit-identical for any thread count, including 1.
+//! 2. **Zero allocations at dispatch** — [`ThreadPool::par_chunks`] passes a
+//!    stack-held fat pointer to the workers and synchronizes with a
+//!    mutex/condvar pair; no job boxing, no queue growth. This keeps the
+//!    optimizer hot path inside the counting-allocator proof
+//!    (`tests/alloc_steady_state.rs`).
+//! 3. **Nested calls degrade gracefully** — a `par_*` call made from inside
+//!    a pool task runs inline on the calling thread (same results, no
+//!    deadlock), so library code may parallelize unconditionally.
+//!
+//! The pool spawns `threads − 1` workers; the dispatching thread claims
+//! chunks too, so `threads == 1` means "no workers, everything inline".
+
+use std::cell::Cell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// Worker/dispatcher-shared state. `task` is the address of a stack-held
+/// [`TaskHeader`] in the dispatching thread; it is only dereferenced by
+/// threads that claimed a chunk under the lock, and the dispatcher does not
+/// return (so the header does not die) until every claimed chunk finished.
+struct PoolState {
+    /// Bumped once per `par_chunks` dispatch so parked workers can tell a
+    /// fresh batch from the one they already drained.
+    epoch: u64,
+    /// `&TaskHeader` as `usize`; 0 = no active batch.
+    task: usize,
+    n_chunks: usize,
+    next_chunk: usize,
+    /// Chunks claimed but not yet finished.
+    active: usize,
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct Inner {
+    state: Mutex<PoolState>,
+    /// Workers park here waiting for a new epoch.
+    work_cv: Condvar,
+    /// The dispatcher parks here waiting for `active == 0`.
+    done_cv: Condvar,
+    /// Serializes dispatchers: the pool runs one batch at a time, so
+    /// concurrent `par_chunks` calls from independent threads (parallel
+    /// test runners, trainer + optimizer) queue up instead of corrupting
+    /// the shared batch state. Workers never dispatch (nested calls run
+    /// inline), so this cannot deadlock.
+    dispatch_gate: Mutex<()>,
+}
+
+/// Lifetime-erased handle to the dispatched closure. Lives on the
+/// dispatcher's stack for the duration of one `par_chunks` call.
+struct TaskHeader<'a> {
+    f: &'a (dyn Fn(usize) + Sync),
+}
+
+thread_local! {
+    /// True while this thread is executing a pool chunk — nested `par_*`
+    /// calls check it and run inline instead of deadlocking the pool.
+    static IN_TASK: Cell<bool> = const { Cell::new(false) };
+}
+
+fn run_chunk(f: &(dyn Fn(usize) + Sync), k: usize) -> bool {
+    IN_TASK.with(|c| c.set(true));
+    let ok = catch_unwind(AssertUnwindSafe(|| f(k))).is_ok();
+    IN_TASK.with(|c| c.set(false));
+    ok
+}
+
+fn worker_loop(inner: Arc<Inner>) {
+    let mut seen_epoch = 0u64;
+    let mut st = inner.state.lock().unwrap();
+    loop {
+        if st.shutdown {
+            return;
+        }
+        if st.task != 0 && st.epoch != seen_epoch {
+            seen_epoch = st.epoch;
+            while st.next_chunk < st.n_chunks {
+                let k = st.next_chunk;
+                st.next_chunk += 1;
+                st.active += 1;
+                let task = st.task;
+                drop(st);
+                // SAFETY: the header outlives this deref — we claimed chunk
+                // `k` under the lock, so the dispatcher's completion wait
+                // cannot pass until we decrement `active` below.
+                let f = unsafe { (*(task as *const TaskHeader)).f };
+                let ok = run_chunk(f, k);
+                st = inner.state.lock().unwrap();
+                st.active -= 1;
+                if !ok {
+                    st.panicked = true;
+                }
+                if st.next_chunk >= st.n_chunks && st.active == 0 {
+                    inner.done_cv.notify_all();
+                }
+            }
+        } else {
+            st = inner.work_cv.wait(st).unwrap();
+        }
+    }
+}
+
+/// Scoped fork–join thread pool over indexed chunks. See the module docs
+/// for the determinism / allocation / nesting contract.
+pub struct ThreadPool {
+    inner: Arc<Inner>,
+    handles: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl ThreadPool {
+    /// Pool with `threads` total execution lanes (the dispatching thread is
+    /// one of them, so `threads − 1` OS workers are spawned). `0` is
+    /// clamped to 1.
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let inner = Arc::new(Inner {
+            state: Mutex::new(PoolState {
+                epoch: 0,
+                task: 0,
+                n_chunks: 0,
+                next_chunk: 0,
+                active: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            dispatch_gate: Mutex::new(()),
+        });
+        let handles = (1..threads)
+            .map(|i| {
+                let inner = Arc::clone(&inner);
+                std::thread::Builder::new()
+                    .name(format!("fft-par-{i}"))
+                    .spawn(move || worker_loop(inner))
+                    .expect("spawning thread-pool worker")
+            })
+            .collect();
+        ThreadPool { inner, handles, threads }
+    }
+
+    /// Total execution lanes (≥ 1).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(k)` for every chunk index `k` in `0..n_chunks`, distributing
+    /// chunks across the pool. Blocks until all chunks finished. Inline
+    /// (sequential, identical results) when the pool has one lane, there is
+    /// one chunk, or the caller is itself a pool task. Allocation-free.
+    ///
+    /// Chunks must touch disjoint data (or synchronize internally); the
+    /// execution *order* of chunks is unspecified, so determinism requires
+    /// per-chunk outputs to depend only on the chunk index.
+    pub fn par_chunks(&self, n_chunks: usize, f: impl Fn(usize) + Sync) {
+        if n_chunks == 0 {
+            return;
+        }
+        if self.threads <= 1 || n_chunks == 1 || IN_TASK.with(|c| c.get()) {
+            for k in 0..n_chunks {
+                f(k);
+            }
+            return;
+        }
+        self.dispatch(n_chunks, &f);
+    }
+
+    fn dispatch(&self, n_chunks: usize, f: &(dyn Fn(usize) + Sync)) {
+        let header = TaskHeader { f };
+        let inner = &*self.inner;
+        // One batch at a time; a panicking earlier dispatcher poisons the
+        // gate but leaves the batch state clean (cleanup precedes panic).
+        let _gate = inner
+            .dispatch_gate
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner());
+        let mut st = inner.state.lock().unwrap();
+        debug_assert_eq!(st.task, 0, "ThreadPool::dispatch re-entered");
+        st.epoch = st.epoch.wrapping_add(1);
+        st.task = &header as *const TaskHeader as usize;
+        st.n_chunks = n_chunks;
+        st.next_chunk = 0;
+        st.panicked = false;
+        inner.work_cv.notify_all();
+        // The dispatcher claims chunks alongside the workers.
+        while st.next_chunk < st.n_chunks {
+            let k = st.next_chunk;
+            st.next_chunk += 1;
+            st.active += 1;
+            drop(st);
+            let ok = run_chunk(f, k);
+            st = inner.state.lock().unwrap();
+            st.active -= 1;
+            if !ok {
+                st.panicked = true;
+            }
+        }
+        while st.active > 0 {
+            st = inner.done_cv.wait(st).unwrap();
+        }
+        st.task = 0;
+        let panicked = st.panicked;
+        drop(st);
+        if panicked {
+            panic!("ThreadPool: a parallel chunk panicked");
+        }
+    }
+
+    /// Run `f(i)` for every `i in 0..n`, partitioned into at most
+    /// [`ThreadPool::threads`] contiguous index ranges (chunk `k` covers
+    /// `[k·⌈n/t⌉, (k+1)·⌈n/t⌉)`). Same contract as [`ThreadPool::par_chunks`].
+    pub fn par_for(&self, n: usize, f: impl Fn(usize) + Sync) {
+        if n == 0 {
+            return;
+        }
+        let t = self.threads.min(n);
+        let per = n.div_ceil(t);
+        let n_chunks = n.div_ceil(per);
+        self.par_chunks(n_chunks, |k| {
+            let lo = k * per;
+            let hi = (lo + per).min(n);
+            for i in lo..hi {
+                f(i);
+            }
+        });
+    }
+
+    /// Fork a set of heterogeneous jobs and join them all (convenience API;
+    /// boxes each job, so **not** for allocation-free hot paths — those use
+    /// `par_chunks`/`par_for`). Jobs may borrow from the enclosing scope.
+    pub fn scope<'env>(&self, build: impl FnOnce(&Scope<'env>)) {
+        let scope = Scope { jobs: std::cell::RefCell::new(Vec::new()) };
+        build(&scope);
+        let jobs = scope.jobs.into_inner();
+        if jobs.is_empty() {
+            return;
+        }
+        let slots: Vec<Mutex<Option<Job<'env>>>> =
+            jobs.into_iter().map(|j| Mutex::new(Some(j))).collect();
+        self.par_chunks(slots.len(), |k| {
+            if let Some(job) = slots[k].lock().unwrap().take() {
+                job();
+            }
+        });
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            st.shutdown = true;
+            self.inner.work_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+type Job<'env> = Box<dyn FnOnce() + Send + 'env>;
+
+/// Collects jobs for [`ThreadPool::scope`]; all spawned jobs run (possibly
+/// in parallel, in unspecified order) when the builder closure returns.
+pub struct Scope<'env> {
+    jobs: std::cell::RefCell<Vec<Job<'env>>>,
+}
+
+impl<'env> Scope<'env> {
+    pub fn spawn(&self, f: impl FnOnce() + Send + 'env) {
+        self.jobs.borrow_mut().push(Box::new(f));
+    }
+}
+
+/// Thread count the process-global pool uses: the `FFT_SUBSPACE_THREADS`
+/// environment variable when set to a positive integer, otherwise
+/// [`std::thread::available_parallelism`].
+pub fn default_threads() -> usize {
+    match std::env::var("FFT_SUBSPACE_THREADS") {
+        Ok(v) => match v.trim().parse::<usize>() {
+            Ok(n) if n >= 1 => n,
+            _ => hardware_threads(),
+        },
+        Err(_) => hardware_threads(),
+    }
+}
+
+fn hardware_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+static GLOBAL: OnceLock<Arc<ThreadPool>> = OnceLock::new();
+
+/// Process-global pool, built lazily with [`default_threads`] lanes. All
+/// optimizers and the trainer share it unless explicitly configured with a
+/// private pool (`OptimizerConfig::threads`).
+pub fn global() -> Arc<ThreadPool> {
+    GLOBAL
+        .get_or_init(|| Arc::new(ThreadPool::new(default_threads())))
+        .clone()
+}
+
+/// Raw-pointer wrapper that asserts cross-thread transferability. Used to
+/// hand each chunk a disjoint region of a caller-owned buffer.
+///
+/// # Safety contract (caller's burden)
+/// Every dereference must target memory that (a) outlives the parallel
+/// call and (b) is accessed by at most one chunk — the standard
+/// "disjoint row ranges" argument of the `_on` kernels.
+pub struct SendPtr<T>(pub *mut T);
+
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        SendPtr(self.0)
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn par_for_visits_every_index_once() {
+        let pool = ThreadPool::new(4);
+        let hits: Vec<AtomicUsize> = (0..100).map(|_| AtomicUsize::new(0)).collect();
+        pool.par_for(100, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn par_chunks_single_thread_is_inline() {
+        let pool = ThreadPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        let sum = AtomicUsize::new(0);
+        pool.par_chunks(10, |k| {
+            sum.fetch_add(k, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 45);
+    }
+
+    #[test]
+    fn nested_par_for_runs_inline_without_deadlock() {
+        let pool = ThreadPool::new(3);
+        let total = AtomicUsize::new(0);
+        pool.par_for(6, |_| {
+            // nested call from inside a task: must inline, not deadlock
+            pool.par_for(5, |j| {
+                total.fetch_add(j + 1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 6 * 15);
+    }
+
+    #[test]
+    fn pool_reusable_across_many_batches() {
+        let pool = ThreadPool::new(4);
+        for round in 0..50 {
+            let sum = AtomicUsize::new(0);
+            pool.par_for(round + 1, |i| {
+                sum.fetch_add(i, Ordering::Relaxed);
+            });
+            assert_eq!(sum.load(Ordering::Relaxed), round * (round + 1) / 2);
+        }
+    }
+
+    #[test]
+    fn concurrent_dispatchers_serialize_cleanly() {
+        // Several independent threads dispatching onto ONE pool (the
+        // global-pool situation under parallel test runners / trainer +
+        // optimizer): batches must serialize, never corrupt each other.
+        let pool = Arc::new(ThreadPool::new(3));
+        let total = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let pool = Arc::clone(&pool);
+                let total = Arc::clone(&total);
+                std::thread::spawn(move || {
+                    for _ in 0..25 {
+                        pool.par_for(10, |i| {
+                            total.fetch_add(i + 1, Ordering::Relaxed);
+                        });
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 4 * 25 * 55);
+    }
+
+    #[test]
+    fn panic_in_chunk_propagates_and_pool_survives() {
+        let pool = ThreadPool::new(3);
+        let res = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.par_chunks(8, |k| {
+                if k == 3 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(res.is_err());
+        // the pool still works after a panicked batch
+        let sum = AtomicUsize::new(0);
+        pool.par_for(4, |i| {
+            sum.fetch_add(i, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 6);
+    }
+
+    #[test]
+    fn scope_runs_all_jobs() {
+        let pool = ThreadPool::new(3);
+        let a = AtomicUsize::new(0);
+        let b = AtomicUsize::new(0);
+        pool.scope(|s| {
+            s.spawn(|| a.store(7, Ordering::Relaxed));
+            s.spawn(|| b.store(9, Ordering::Relaxed));
+        });
+        assert_eq!(a.load(Ordering::Relaxed), 7);
+        assert_eq!(b.load(Ordering::Relaxed), 9);
+    }
+
+    #[test]
+    fn default_threads_is_positive() {
+        assert!(default_threads() >= 1);
+        assert!(global().threads() >= 1);
+    }
+}

@@ -1,0 +1,129 @@
+//! Per-chunk workspace shards for parallel layer stepping.
+//!
+//! The PR-1 zero-allocation invariant (ROADMAP §Hot-path architecture) is
+//! per-[`Workspace`]: a pool stays warm only if the same request pattern
+//! replays against the same pool every step. Under parallel stepping the
+//! binding is therefore **chunk → shard**, not thread → shard: chunk `k` of
+//! a `par_chunks` dispatch always uses shard `k`, so whichever OS thread
+//! picks the chunk up, the shard sees the same take/give sequence every
+//! step and stops allocating after warmup.
+
+use std::cell::UnsafeCell;
+
+use crate::tensor::Workspace;
+
+use super::ThreadPool;
+
+/// A fixed set of independent [`Workspace`]s, one per parallel chunk.
+pub struct ShardedWorkspace {
+    shards: Vec<Workspace>,
+}
+
+impl ShardedWorkspace {
+    /// `n` independent shards (clamped to ≥ 1).
+    pub fn new(n: usize) -> Self {
+        ShardedWorkspace {
+            shards: (0..n.max(1)).map(|_| Workspace::new()).collect(),
+        }
+    }
+
+    /// One shard per pool lane — the sizing every optimizer uses.
+    pub fn for_pool(pool: &ThreadPool) -> Self {
+        ShardedWorkspace::new(pool.threads())
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false // ≥ 1 by construction
+    }
+
+    /// Direct access to one shard (sequential call sites use shard 0).
+    pub fn shard_mut(&mut self, k: usize) -> &mut Workspace {
+        &mut self.shards[k]
+    }
+
+    /// Chunk-indexed view for parallel dispatch; see [`ShardCells::shard`].
+    pub fn cells(&mut self) -> ShardCells<'_> {
+        // SAFETY of the cast: `UnsafeCell<T>` is `repr(transparent)` over
+        // `T`, so a `[Workspace]` and a `[UnsafeCell<Workspace>]` have the
+        // same layout; we hold `&mut self`, so handing out interior-mutable
+        // views is sound as long as indices stay disjoint (ShardCells'
+        // contract).
+        let slice: *mut [Workspace] = self.shards.as_mut_slice();
+        ShardCells {
+            cells: unsafe { &*(slice as *const [UnsafeCell<Workspace>]) },
+        }
+    }
+}
+
+/// Borrowed, `Sync` view of the shards that lets each parallel chunk take
+/// `&mut` access to *its own* shard by index.
+pub struct ShardCells<'a> {
+    cells: &'a [UnsafeCell<Workspace>],
+}
+
+// SAFETY: the only access path is `shard`, whose contract requires callers
+// to use disjoint indices across threads.
+unsafe impl Sync for ShardCells<'_> {}
+
+impl ShardCells<'_> {
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+
+    /// Exclusive access to shard `k`.
+    ///
+    /// # Safety
+    /// Each index must be live in at most one thread at a time. The
+    /// `par_chunks` pattern (chunk `k` is claimed by exactly one thread,
+    /// chunk `k` uses only shard `k`) satisfies this by construction.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn shard(&self, k: usize) -> &mut Workspace {
+        &mut *self.cells[k].get()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shards_are_independent_pools() {
+        let mut sw = ShardedWorkspace::new(3);
+        assert_eq!(sw.len(), 3);
+        let m = sw.shard_mut(0).take(4, 4);
+        sw.shard_mut(0).give(m);
+        assert_eq!(sw.shard_mut(0).pooled_f32_buffers(), 1);
+        assert_eq!(sw.shard_mut(1).pooled_f32_buffers(), 0);
+    }
+
+    #[test]
+    fn zero_shards_clamps_to_one() {
+        let sw = ShardedWorkspace::new(0);
+        assert_eq!(sw.len(), 1);
+    }
+
+    #[test]
+    fn cells_give_disjoint_mut_access() {
+        let pool = ThreadPool::new(3);
+        let mut sw = ShardedWorkspace::for_pool(&pool);
+        let n = sw.len();
+        let cells = sw.cells();
+        pool.par_chunks(n, |k| {
+            // SAFETY: chunk k touches only shard k
+            let ws = unsafe { cells.shard(k) };
+            let m = ws.take(2 + k, 2);
+            ws.give(m);
+        });
+        for k in 0..n {
+            assert_eq!(sw.shard_mut(k).pooled_f32_buffers(), 1, "shard {k}");
+        }
+    }
+}

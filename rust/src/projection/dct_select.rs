@@ -13,7 +13,11 @@
 use std::sync::Arc;
 
 use crate::fft::{cached_dct2_matrix, cached_plan, MakhoulPlan};
-use crate::tensor::{matmul, matmul_a_bt, matmul_a_bt_into, matmul_into, Matrix, Workspace};
+use crate::parallel::ThreadPool;
+use crate::tensor::{
+    matmul, matmul_a_bt, matmul_a_bt_into, matmul_into, matmul_into_on, Matrix,
+    Workspace,
+};
 
 use super::{Projection, RankNorm};
 
@@ -56,6 +60,23 @@ impl SharedDct {
         }
     }
 
+    /// Row-parallel [`SharedDct::similarities_into`] — per-row-batched
+    /// Makhoul execution (or row-blocked matmul); bit-identical to the
+    /// sequential path for any thread count.
+    pub fn similarities_into_on(
+        &self,
+        pool: &ThreadPool,
+        g: &Matrix,
+        use_makhoul: bool,
+        out: &mut Matrix,
+    ) {
+        if use_makhoul {
+            self.plan.run_into_on(pool, g, out);
+        } else {
+            matmul_into_on(pool, g, self.q.as_ref(), out);
+        }
+    }
+
     pub fn bytes(&self) -> u64 {
         self.q.bytes()
     }
@@ -83,24 +104,14 @@ pub fn select_top_columns_into(
     idx: &mut Vec<usize>,
 ) {
     let c = s.cols;
-    // Column norms, f64-accumulated then narrowed to f32 — exactly what
-    // `col_l1_norms`/`col_l2_norms` produce, so ranking (ties included) is
-    // unchanged from the sorting implementation.
+    // Column norms through the same shared accumulation kernel
+    // `col_l1_norms`/`col_l2_norms` use (`Matrix::col_{sq,abs}_sums_into`),
+    // so ranking (ties included) is bit-equivalent to the sorting
+    // implementation by construction.
     let mut acc = ws.take_f64(c);
-    for i in 0..s.rows {
-        let row = s.row(i);
-        match norm {
-            RankNorm::L2 => {
-                for (a, &v) in acc.iter_mut().zip(row) {
-                    *a += (v as f64) * (v as f64);
-                }
-            }
-            RankNorm::L1 => {
-                for (a, &v) in acc.iter_mut().zip(row) {
-                    *a += v.abs() as f64;
-                }
-            }
-        }
+    match norm {
+        RankNorm::L2 => s.col_sq_sums_into(&mut acc),
+        RankNorm::L1 => s.col_abs_sums_into(&mut acc),
     }
     let mut scores = ws.take_f32(c);
     match norm {
@@ -194,7 +205,8 @@ impl Projection for DctSelect {
     // -- workspace-backed hot path ---------------------------------------
 
     fn refresh_and_project_into(&mut self, g: &Matrix, out: &mut Matrix, ws: &mut Workspace) {
-        let mut s = ws.take(g.rows, self.shared.dim());
+        // fully overwritten by similarities_into → non-zeroing checkout
+        let mut s = ws.take_uninit(g.rows, self.shared.dim());
         self.shared.similarities_into(g, self.use_makhoul, &mut s);
         select_top_columns_into(&s, self.rank, self.norm, ws, &mut self.idx);
         self.shared.matrix().select_columns_into(&self.idx, &mut self.basis_cache);

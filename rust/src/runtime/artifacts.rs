@@ -193,25 +193,11 @@ impl Manifest {
 mod tests {
     use super::*;
 
-    fn manifest_dir() -> PathBuf {
-        // tests run from the crate root
-        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-    }
-
     /// `None` (→ skip) when `make artifacts` hasn't been run in this
     /// environment; the parsing logic itself is covered by the synthetic
     /// manifest test below either way.
     fn manifest_or_skip() -> Option<Manifest> {
-        match Manifest::load(manifest_dir()) {
-            Ok(m) => Some(m),
-            Err(e) if std::env::var("FFT_SUBSPACE_REQUIRE_PJRT").is_ok_and(|v| !v.is_empty() && v != "0") => {
-                panic!("FFT_SUBSPACE_REQUIRE_PJRT set but artifacts missing: {e}")
-            }
-            Err(e) => {
-                eprintln!("skipping manifest test (run `make artifacts`): {e}");
-                None
-            }
-        }
+        crate::runtime::testing::manifest_or_skip("manifest test")
     }
 
     #[test]

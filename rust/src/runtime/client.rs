@@ -161,31 +161,12 @@ impl Executable {
 mod tests {
     use super::*;
     use crate::runtime::Manifest;
-    use std::path::PathBuf;
 
     /// Artifact-backed tests need `make artifacts` AND a real PJRT plugin;
     /// in environments without either (e.g. the offline stub `xla` crate)
     /// they skip instead of failing.
     fn setup() -> Option<(Manifest, Runtime)> {
-        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        let required = std::env::var("FFT_SUBSPACE_REQUIRE_PJRT").is_ok_and(|v| !v.is_empty() && v != "0");
-        let m = match Manifest::load(dir) {
-            Ok(m) => m,
-            Err(e) if required => panic!("FFT_SUBSPACE_REQUIRE_PJRT set but artifacts missing: {e}"),
-            Err(e) => {
-                eprintln!("skipping PJRT test (run `make artifacts`): {e}");
-                return None;
-            }
-        };
-        let rt = match Runtime::new() {
-            Ok(rt) => rt,
-            Err(e) if required => panic!("FFT_SUBSPACE_REQUIRE_PJRT set but PJRT unavailable: {e:#}"),
-            Err(e) => {
-                eprintln!("skipping PJRT test: {e:#}");
-                return None;
-            }
-        };
-        Some((m, rt))
+        crate::runtime::testing::pjrt_setup("PJRT test")
     }
 
     #[test]

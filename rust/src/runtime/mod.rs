@@ -4,6 +4,8 @@
 
 pub mod artifacts;
 pub mod client;
+#[doc(hidden)]
+pub mod testing;
 
 pub use artifacts::{ArtifactSpec, Manifest, ModelSpec, ParamSpec};
 pub use client::{Executable, Runtime};

@@ -1,0 +1,58 @@
+//! Shared PJRT test-support: the skip-or-require setup helper that was
+//! previously copy-pasted across four test modules (runtime/client,
+//! runtime/artifacts, train/aot_optim, tests/integration).
+//!
+//! Artifact-backed tests need `make artifacts` AND a real PJRT plugin; in
+//! environments without either (e.g. the offline stub `xla` crate) they
+//! *skip* (print + return `None`) instead of failing. Setting
+//! `FFT_SUBSPACE_REQUIRE_PJRT=1` (real-PJRT CI) turns every skip into a
+//! loud panic.
+//!
+//! This module is ordinary `pub` (not `#[cfg(test)]`) because integration
+//! tests under `rust/tests/` link the library like any downstream crate;
+//! it is `doc(hidden)` to stay out of the public API surface.
+
+use std::path::PathBuf;
+
+use super::{Manifest, Runtime};
+
+/// True when `FFT_SUBSPACE_REQUIRE_PJRT` is set non-empty and not "0".
+pub fn pjrt_required() -> bool {
+    std::env::var("FFT_SUBSPACE_REQUIRE_PJRT").is_ok_and(|v| !v.is_empty() && v != "0")
+}
+
+/// The crate-local artifact directory `make artifacts` writes into.
+pub fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Load the artifact manifest, or skip the calling test (`None`, with a
+/// consistent "skipping <what>" message). Panics if PJRT is required.
+pub fn manifest_or_skip(what: &str) -> Option<Manifest> {
+    match Manifest::load(artifacts_dir()) {
+        Ok(m) => Some(m),
+        Err(e) if pjrt_required() => {
+            panic!("FFT_SUBSPACE_REQUIRE_PJRT set but artifacts missing: {e}")
+        }
+        Err(e) => {
+            eprintln!("skipping {what} (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+/// Manifest plus a live PJRT runtime, or skip the calling test (`None`).
+/// Panics if PJRT is required but unavailable.
+pub fn pjrt_setup(what: &str) -> Option<(Manifest, Runtime)> {
+    let m = manifest_or_skip(what)?;
+    match Runtime::new() {
+        Ok(rt) => Some((m, rt)),
+        Err(e) if pjrt_required() => {
+            panic!("FFT_SUBSPACE_REQUIRE_PJRT set but PJRT unavailable: {e:#}")
+        }
+        Err(e) => {
+            eprintln!("skipping {what}: {e:#}");
+            None
+        }
+    }
+}

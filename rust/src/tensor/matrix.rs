@@ -235,27 +235,46 @@ impl Matrix {
         self.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
     }
 
-    /// Per-column ℓ2 norms.
-    pub fn col_l2_norms(&self) -> Vec<f32> {
-        let mut acc = vec![0.0f64; self.cols];
+    /// Per-column squared-ℓ2 sums, f64-accumulated into `acc` (overwritten).
+    /// The single accumulation kernel behind [`Matrix::col_l2_norms`] and
+    /// `projection::select_top_columns_into` — sharing it keeps their
+    /// rankings bit-equivalent by construction (row-major pass, ascending
+    /// rows, one f64 add per element).
+    pub fn col_sq_sums_into(&self, acc: &mut [f64]) {
+        assert_eq!(acc.len(), self.cols, "col_sq_sums_into length mismatch");
+        acc.fill(0.0);
         for i in 0..self.rows {
             let row = self.row(i);
             for (a, &v) in acc.iter_mut().zip(row) {
                 *a += (v as f64) * (v as f64);
             }
         }
-        acc.into_iter().map(|v| v.sqrt() as f32).collect()
     }
 
-    /// Per-column ℓ1 norms.
-    pub fn col_l1_norms(&self) -> Vec<f32> {
-        let mut acc = vec![0.0f64; self.cols];
+    /// Per-column absolute sums (ℓ1), f64-accumulated into `acc`
+    /// (overwritten). Shared like [`Matrix::col_sq_sums_into`].
+    pub fn col_abs_sums_into(&self, acc: &mut [f64]) {
+        assert_eq!(acc.len(), self.cols, "col_abs_sums_into length mismatch");
+        acc.fill(0.0);
         for i in 0..self.rows {
             let row = self.row(i);
             for (a, &v) in acc.iter_mut().zip(row) {
                 *a += v.abs() as f64;
             }
         }
+    }
+
+    /// Per-column ℓ2 norms.
+    pub fn col_l2_norms(&self) -> Vec<f32> {
+        let mut acc = vec![0.0f64; self.cols];
+        self.col_sq_sums_into(&mut acc);
+        acc.into_iter().map(|v| v.sqrt() as f32).collect()
+    }
+
+    /// Per-column ℓ1 norms.
+    pub fn col_l1_norms(&self) -> Vec<f32> {
+        let mut acc = vec![0.0f64; self.cols];
+        self.col_abs_sums_into(&mut acc);
         acc.into_iter().map(|v| v as f32).collect()
     }
 

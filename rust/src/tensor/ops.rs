@@ -1,4 +1,4 @@
-//! Matmul kernels: register-tiled, blocked, transpose-aware, single-core.
+//! Matmul kernels: register-tiled, blocked, transpose-aware, row-parallel.
 //!
 //! Each multiplication the optimizers perform has an allocating entry point
 //! and an allocation-free `_into` twin (the hot path — outputs land in
@@ -20,6 +20,17 @@
 //! expression, which regroups floating-point rounding relative to the
 //! pre-tiling kernel — same-run consistency is exact, cross-version
 //! reproducibility is to ULP level only.
+//!
+//! **Parallelism.** Every kernel body runs over an output-*row* range
+//! (`mm_block` / `mm_at_b_block` / `mm_a_bt_block`); the `_into` entry
+//! points call it with the full range, and the `_into_on` variants
+//! partition rows across a [`ThreadPool`]. Each output element's
+//! floating-point summation order (ascending `k` within the existing
+//! blocking) is a per-row property, so row partitioning yields **the exact
+//! bits of the sequential kernel for any thread count** — enforced by
+//! `tests/parallel_determinism.rs`.
+
+use crate::parallel::{par_row_slabs, ThreadPool};
 
 use super::Matrix;
 
@@ -36,22 +47,23 @@ pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
     c
 }
 
-/// Allocation-free [`matmul`]: resizes `c` in place and overwrites it.
-pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
-    assert_eq!(a.cols, b.rows, "matmul shape mismatch: {:?}·{:?}", a.shape(), b.shape());
-    let (m, kdim, n) = (a.rows, a.cols, b.cols);
-    c.resize_to(m, n);
-    if n == 0 {
-        return;
-    }
-    for ib in (0..m).step_by(BLOCK_I) {
-        let i_end = (ib + BLOCK_I).min(m);
+/// The i-k-j kernel over output rows `i0..i1`; `c_rows` is C's row slab
+/// `[i0·n, i1·n)` and must be zeroed (the kernel accumulates). Per-element
+/// summation order is ascending `k` within `BLOCK_K` panels regardless of
+/// `i0`, which is what makes row partitioning bit-exact.
+fn mm_block(a: &Matrix, b: &Matrix, c_rows: &mut [f32], i0: usize, i1: usize) {
+    let n = b.cols;
+    let kdim = a.cols;
+    debug_assert_eq!(c_rows.len(), (i1 - i0) * n);
+    for ib in (i0..i1).step_by(BLOCK_I) {
+        let i_end = (ib + BLOCK_I).min(i1);
         for kb in (0..kdim).step_by(BLOCK_K) {
             let k_end = (kb + BLOCK_K).min(kdim);
             let mut i = ib;
             // 4-row micro-kernel: one pass over each B row feeds 4 C rows.
             while i + MR <= i_end {
-                let block = &mut c.data[i * n..(i + MR) * n];
+                let base = (i - i0) * n;
+                let block = &mut c_rows[base..base + MR * n];
                 let (c0, rest) = block.split_at_mut(n);
                 let (c1, rest) = rest.split_at_mut(n);
                 let (c2, c3) = rest.split_at_mut(n);
@@ -75,7 +87,8 @@ pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
             // remainder rows
             while i < i_end {
                 let a_row = a.row(i);
-                let c_row = &mut c.data[i * n..(i + 1) * n];
+                let base = (i - i0) * n;
+                let c_row = &mut c_rows[base..base + n];
                 for k in kb..k_end {
                     let aik = a_row[k];
                     let b_row = &b.data[k * n..k * n + n];
@@ -89,6 +102,29 @@ pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     }
 }
 
+/// Allocation-free [`matmul`]: resizes `c` in place and overwrites it.
+pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    assert_eq!(a.cols, b.rows, "matmul shape mismatch: {:?}·{:?}", a.shape(), b.shape());
+    let (m, n) = (a.rows, b.cols);
+    c.resize_to(m, n);
+    if n == 0 {
+        return;
+    }
+    mm_block(a, b, &mut c.data, 0, m);
+}
+
+/// Row-parallel [`matmul_into`]: output rows are partitioned across the
+/// pool; bit-identical to the sequential kernel for any thread count.
+pub fn matmul_into_on(pool: &ThreadPool, a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    assert_eq!(a.cols, b.rows, "matmul shape mismatch: {:?}·{:?}", a.shape(), b.shape());
+    let (m, n) = (a.rows, b.cols);
+    c.resize_to(m, n);
+    if n == 0 || m == 0 {
+        return;
+    }
+    par_rows(pool, m, n, &mut c.data, |rows, lo, hi| mm_block(a, b, rows, lo, hi));
+}
+
 /// `Aᵀ (k×m)ᵀ · B (k×n) → (m×n)` — A is stored (k×m); result is m×n.
 pub fn matmul_at_b(a: &Matrix, b: &Matrix) -> Matrix {
     let mut c = Matrix::zeros(a.cols, b.cols);
@@ -96,16 +132,13 @@ pub fn matmul_at_b(a: &Matrix, b: &Matrix) -> Matrix {
     c
 }
 
-/// Allocation-free [`matmul_at_b`]. `k` is the outer loop (both A and B
-/// rows unit-stride); four `k` panels advance together so each C row is
-/// loaded/stored once per four rank-1 updates.
-pub fn matmul_at_b_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
-    assert_eq!(a.rows, b.rows, "matmul_at_b shape mismatch");
-    let (kdim, m, n) = (a.rows, a.cols, b.cols);
-    c.resize_to(m, n);
-    if n == 0 {
-        return;
-    }
+/// The k-outer rank-1-update kernel over output rows `m0..m1` (columns of
+/// A); `c_rows` must be zeroed. Four `k` panels advance together so each C
+/// row is loaded/stored once per four rank-1 updates; per-element order is
+/// ascending `k` for every output row, independent of `m0`.
+fn mm_at_b_block(a: &Matrix, b: &Matrix, c_rows: &mut [f32], m0: usize, m1: usize) {
+    let (kdim, n) = (a.rows, b.cols);
+    debug_assert_eq!(c_rows.len(), (m1 - m0) * n);
     let mut k = 0;
     while k + MR <= kdim {
         let a0 = a.row(k);
@@ -116,9 +149,10 @@ pub fn matmul_at_b_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
         let b1 = &b.data[(k + 1) * n..(k + 1) * n + n];
         let b2 = &b.data[(k + 2) * n..(k + 2) * n + n];
         let b3 = &b.data[(k + 3) * n..(k + 3) * n + n];
-        for i in 0..m {
+        for i in m0..m1 {
             let (x0, x1, x2, x3) = (a0[i], a1[i], a2[i], a3[i]);
-            let c_row = &mut c.data[i * n..i * n + n];
+            let base = (i - m0) * n;
+            let c_row = &mut c_rows[base..base + n];
             for j in 0..n {
                 c_row[j] += x0 * b0[j] + x1 * b1[j] + x2 * b2[j] + x3 * b3[j];
             }
@@ -128,15 +162,39 @@ pub fn matmul_at_b_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     while k < kdim {
         let a_row = a.row(k);
         let b_row = &b.data[k * n..k * n + n];
-        for i in 0..m {
+        for i in m0..m1 {
             let aki = a_row[i];
-            let c_row = &mut c.data[i * n..i * n + n];
+            let base = (i - m0) * n;
+            let c_row = &mut c_rows[base..base + n];
             for (cv, bv) in c_row.iter_mut().zip(b_row) {
                 *cv += aki * bv;
             }
         }
         k += 1;
     }
+}
+
+/// Allocation-free [`matmul_at_b`].
+pub fn matmul_at_b_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    assert_eq!(a.rows, b.rows, "matmul_at_b shape mismatch");
+    let (m, n) = (a.cols, b.cols);
+    c.resize_to(m, n);
+    if n == 0 {
+        return;
+    }
+    mm_at_b_block(a, b, &mut c.data, 0, m);
+}
+
+/// Row-parallel [`matmul_at_b_into`] (partitioned over A's columns = C's
+/// rows); bit-identical to sequential for any thread count.
+pub fn matmul_at_b_into_on(pool: &ThreadPool, a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    assert_eq!(a.rows, b.rows, "matmul_at_b shape mismatch");
+    let (m, n) = (a.cols, b.cols);
+    c.resize_to(m, n);
+    if n == 0 || m == 0 {
+        return;
+    }
+    par_rows(pool, m, n, &mut c.data, |rows, lo, hi| mm_at_b_block(a, b, rows, lo, hi));
 }
 
 /// `A (m×k) · Bᵀ (n×k)ᵀ → (m×n)` — B is stored (n×k).
@@ -146,16 +204,16 @@ pub fn matmul_a_bt(a: &Matrix, b: &Matrix) -> Matrix {
     c
 }
 
-/// Allocation-free [`matmul_a_bt`]. Four dot products (four B rows) run
-/// against each A row at once, amortizing the A-row loads across four
-/// independent accumulators.
-pub fn matmul_a_bt_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
-    assert_eq!(a.cols, b.cols, "matmul_a_bt shape mismatch");
-    let (m, kdim, n) = (a.rows, a.cols, b.rows);
-    c.resize_for_overwrite(m, n);
-    for i in 0..m {
+/// The dot-product kernel over output rows `i0..i1`; assign-style (`c_rows`
+/// may be dirty — every element is written). Four dot products (four B
+/// rows) run against each A row at once.
+fn mm_a_bt_block(a: &Matrix, b: &Matrix, c_rows: &mut [f32], i0: usize, i1: usize) {
+    let (kdim, n) = (a.cols, b.rows);
+    debug_assert_eq!(c_rows.len(), (i1 - i0) * n);
+    for i in i0..i1 {
         let a_row = a.row(i);
-        let c_row = &mut c.data[i * n..(i + 1) * n];
+        let base = (i - i0) * n;
+        let c_row = &mut c_rows[base..base + n];
         let mut j = 0;
         while j + MR <= n {
             let b0 = b.row(j);
@@ -215,6 +273,39 @@ pub fn matmul_a_bt_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
             j += 1;
         }
     }
+}
+
+/// Allocation-free [`matmul_a_bt`].
+pub fn matmul_a_bt_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    assert_eq!(a.cols, b.cols, "matmul_a_bt shape mismatch");
+    let (m, n) = (a.rows, b.rows);
+    c.resize_for_overwrite(m, n);
+    mm_a_bt_block(a, b, &mut c.data, 0, m);
+}
+
+/// Row-parallel [`matmul_a_bt_into`]; bit-identical to sequential for any
+/// thread count.
+pub fn matmul_a_bt_into_on(pool: &ThreadPool, a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    assert_eq!(a.cols, b.cols, "matmul_a_bt shape mismatch");
+    let (m, n) = (a.rows, b.rows);
+    c.resize_for_overwrite(m, n);
+    if n == 0 || m == 0 {
+        return;
+    }
+    par_rows(pool, m, n, &mut c.data, |rows, lo, hi| mm_a_bt_block(a, b, rows, lo, hi));
+}
+
+/// Partition `m` output rows of width `n` into contiguous chunks (one per
+/// pool lane) and hand each chunk its disjoint slab of `c_data` — a thin
+/// alias over the shared `parallel::par_row_slabs` partitioner.
+fn par_rows(
+    pool: &ThreadPool,
+    m: usize,
+    n: usize,
+    c_data: &mut [f32],
+    body: impl Fn(&mut [f32], usize, usize) + Sync,
+) {
+    par_row_slabs(pool, m, n, c_data, body);
 }
 
 #[cfg(test)]
@@ -299,6 +390,33 @@ mod tests {
             let bt = Matrix::randn(n, k, 1.0, rng);
             matmul_a_bt_into(&a, &bt, &mut dirty);
             assert_eq!(dirty, matmul_a_bt(&a, &bt));
+        });
+    }
+
+    #[test]
+    fn prop_parallel_variants_bit_identical_to_sequential() {
+        // Row-partitioned execution must reproduce the sequential bits for
+        // every thread count, shape, and (dirty) output buffer.
+        let pools = [ThreadPool::new(2), ThreadPool::new(3), ThreadPool::new(8)];
+        proptest::check("on==into", 8, |rng| {
+            let m = proptest::size(rng, 1, 50);
+            let k = proptest::size(rng, 1, 30);
+            let n = proptest::size(rng, 1, 30);
+            let a = Matrix::randn(m, k, 1.0, rng);
+            let b = Matrix::randn(k, n, 1.0, rng);
+            let at = Matrix::randn(k, m, 1.0, rng);
+            let bt = Matrix::randn(n, k, 1.0, rng);
+            let mut out = Matrix::randn(3, 3, 1.0, rng); // dirty
+            for pool in &pools {
+                matmul_into_on(pool, &a, &b, &mut out);
+                assert_eq!(out, matmul(&a, &b), "matmul t={}", pool.threads());
+
+                matmul_at_b_into_on(pool, &at, &b, &mut out);
+                assert_eq!(out, matmul_at_b(&at, &b), "at_b t={}", pool.threads());
+
+                matmul_a_bt_into_on(pool, &a, &bt, &mut out);
+                assert_eq!(out, matmul_a_bt(&a, &bt), "a_bt t={}", pool.threads());
+            }
         });
     }
 

@@ -74,6 +74,21 @@ impl Workspace {
         Matrix { rows, cols, data }
     }
 
+    /// Check out a `rows × cols` matrix with **unspecified contents** — the
+    /// non-zeroing twin of [`Workspace::take`] for buffers whose every
+    /// element the caller overwrites before reading (`copy_from`,
+    /// `transpose_into`, and the assign-style `_into` kernels that
+    /// `resize_for_overwrite`). Skips the full memset per checkout that
+    /// `take` pays; never hand one to an accumulate-in-place kernel.
+    pub fn take_uninit(&mut self, rows: usize, cols: usize) -> Matrix {
+        let len = rows * cols;
+        let mut data = pop_best_fit(&mut self.f32_pool, len);
+        // resize without clear: only growth beyond the buffer's previous
+        // length is written; the reused prefix keeps stale values.
+        data.resize(len, 0.0);
+        Matrix { rows, cols, data }
+    }
+
     /// Return a matrix's buffer to the pool.
     pub fn give(&mut self, m: Matrix) {
         push_nonempty(&mut self.f32_pool, m.data);
@@ -166,6 +181,25 @@ mod tests {
         // and the 100-element request still finds the big one → no alloc
         let got = ws.take(100, 1);
         assert!(got.data.capacity() >= 100);
+    }
+
+    #[test]
+    fn take_uninit_reuses_without_memset() {
+        let mut ws = Workspace::new();
+        let mut m = ws.take(3, 3);
+        m.data[4] = 42.0;
+        ws.give(m);
+        // uninit checkout may expose the stale value — shape is right, the
+        // buffer is the pooled one, and contents are unspecified
+        let m2 = ws.take_uninit(3, 3);
+        assert_eq!(m2.shape(), (3, 3));
+        assert_eq!(m2.data.len(), 9);
+        assert_eq!(m2.data[4], 42.0, "expected the pooled buffer back");
+        ws.give(m2);
+        // growth beyond the previous length is still zero-filled
+        let m3 = ws.take_uninit(4, 4);
+        assert_eq!(m3.data.len(), 16);
+        assert!(m3.data[9..].iter().all(|&v| v == 0.0));
     }
 
     #[test]

@@ -313,30 +313,11 @@ mod tests {
     use super::*;
     use crate::optim::{build_optimizer, OptimizerConfig, ParamKind};
     use crate::projection::{ProjectionKind, RankNorm};
-    use std::path::PathBuf;
 
     /// Skip (rather than fail) when artifacts or a real PJRT plugin are
     /// missing — e.g. under the offline stub `xla` crate.
     fn setup() -> Option<(Manifest, Runtime)> {
-        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        let required = std::env::var("FFT_SUBSPACE_REQUIRE_PJRT").is_ok_and(|v| !v.is_empty() && v != "0");
-        let m = match Manifest::load(dir) {
-            Ok(m) => m,
-            Err(e) if required => panic!("FFT_SUBSPACE_REQUIRE_PJRT set but artifacts missing: {e}"),
-            Err(e) => {
-                eprintln!("skipping AOT test (run `make artifacts`): {e}");
-                return None;
-            }
-        };
-        let rt = match Runtime::new() {
-            Ok(rt) => rt,
-            Err(e) if required => panic!("FFT_SUBSPACE_REQUIRE_PJRT set but PJRT unavailable: {e:#}"),
-            Err(e) => {
-                eprintln!("skipping AOT test: {e:#}");
-                return None;
-            }
-        };
-        Some((m, rt))
+        crate::runtime::testing::pjrt_setup("AOT test")
     }
 
     fn nano_linear_metas() -> Vec<LayerMeta> {

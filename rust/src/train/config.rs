@@ -108,6 +108,8 @@ impl TrainConfig {
                 }),
             ),
             ("use_aot_optimizer", Json::Bool(self.use_aot_optimizer)),
+            // 0 = auto (global pool)
+            ("threads", num(self.opt.threads.unwrap_or(0) as f64)),
         ])
     }
 
@@ -144,6 +146,11 @@ impl TrainConfig {
                 self.opt.update_interval = value.parse()?
             }
             "instrument" => self.opt.instrument = value.parse()?,
+            // 0 = auto (global pool: FFT_SUBSPACE_THREADS / cores)
+            "threads" => {
+                let n: usize = value.parse()?;
+                self.opt.threads = if n == 0 { None } else { Some(n) };
+            }
             "use-aot-optimizer" | "use_aot_optimizer" => {
                 self.use_aot_optimizer = value.parse()?
             }

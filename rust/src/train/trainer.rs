@@ -6,7 +6,7 @@ use std::path::PathBuf;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::{CommModel, Communicator, ZeroSchedule};
+use crate::coordinator::{CommModel, Communicator, WorkerSet, ZeroSchedule};
 use crate::data::{BatchLoader, CorpusConfig, SyntheticCorpus};
 use crate::optim::{build_optimizer, LayerMeta, Optimizer};
 use crate::runtime::{Executable, Manifest, ModelSpec, Runtime};
@@ -110,7 +110,13 @@ impl Trainer {
             min_ratio: 0.1,
         };
         let zero = ZeroSchedule::round_robin(self.metas.len(), cfg.workers);
-        let mut comm = Communicator::new(cfg.workers, CommModel::default());
+        // Real threads wherever the workload is Send: the ring all-reduce
+        // moves its W per-step transfers concurrently, and worker batch
+        // staging fans out across the pool. The PJRT fwd/bwd itself stays on
+        // this thread — the upstream xla client is Rc-backed (not Send).
+        let pool = crate::parallel::global();
+        let worker_set = WorkerSet::new(cfg.workers, pool.clone());
+        let mut comm = Communicator::with_pool(cfg.workers, CommModel::default(), pool);
         let base_loader = BatchLoader::new(&self.corpus.train, self.spec.seq_len, cfg.seed);
         let mut workers: Vec<BatchLoader> = (0..cfg.workers)
             .map(|w| base_loader.worker(w, cfg.seed))
@@ -125,11 +131,24 @@ impl Trainer {
         let mut final_loss = f64::NAN;
 
         for step in 0..cfg.steps {
-            // --- per-worker fwd/bwd through PJRT ------------------------
+            // --- per-worker batch staging on real threads ----------------
+            let bpw = cfg.batch_per_worker;
+            let batches: Vec<(Vec<i32>, Vec<usize>)> = phases.time("batch", || {
+                let mut slots: Vec<Option<(Vec<i32>, Vec<usize>)>> =
+                    (0..cfg.workers).map(|_| None).collect();
+                let mut pairs: Vec<_> =
+                    workers.iter_mut().zip(slots.iter_mut()).collect();
+                worker_set.run_mut(&mut pairs, |_, (wl, slot)| {
+                    **slot = Some(wl.next_batch(bpw));
+                });
+                slots.into_iter().map(|s| s.expect("staged batch")).collect()
+            });
+
+            // --- per-worker fwd/bwd through PJRT (driver thread: the PJRT
+            // client is Rc-backed; see coordinator::workers) --------------
             let mut worker_grads: Vec<Vec<Matrix>> = Vec::with_capacity(cfg.workers);
             let mut step_loss = 0.0f64;
-            for wl in workers.iter_mut() {
-                let (tokens, shape) = wl.next_batch(cfg.batch_per_worker);
+            for (tokens, shape) in batches {
                 let outs = phases.time("fwdbwd", || {
                     let mut inputs: Vec<Value> = self
                         .params

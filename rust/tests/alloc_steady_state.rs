@@ -5,7 +5,13 @@
 //! cycles), counting is switched on and a window of steady-state
 //! `DctAdamW::step` calls — covering both the project-only and the
 //! subspace-refresh path, tall/wide/Bluestein-width layers and Q8 error
-//! feedback — must perform exactly **zero** heap allocations.
+//! feedback — must perform exactly **zero** heap allocations. The proof
+//! runs twice: sequentially (1 thread lane) and through the parallel
+//! `step_layers_parallel` path (3 lanes), because the counter is global
+//! across threads — worker-side allocations would be caught too. The
+//! parallel path stays clean because the pool dispatch boxes nothing and
+//! chunk `k` is permanently bound to workspace shard `k` / its own pooled
+//! FFT scratch (warmed during the uncounted warmup window).
 //!
 //! This file is its own test binary (integration test), so the global
 //! allocator and the single `#[test]` share the process without
@@ -64,39 +70,51 @@ fn dct_adamw_steady_state_step_is_allocation_free() {
         LayerMeta::new("wk", 40, 24, ParamKind::Linear),
         LayerMeta::new("norm", 1, 32, ParamKind::Norm),
     ];
-    let mut cfg = OptimizerConfig { rank: 8, ..Default::default() };
-    cfg.update_interval = 4; // exercise refresh AND project-only steps
-    let mut opt = DctAdamW::new(&metas, &cfg);
-
     let mut rng = Pcg64::seed(0);
     let grads: Vec<Matrix> = metas
         .iter()
         .map(|m| Matrix::randn(m.rows, m.cols, 0.1, &mut rng))
         .collect();
-    let mut params: Vec<Matrix> = metas
-        .iter()
-        .map(|m| Matrix::zeros(m.rows, m.cols))
-        .collect();
 
-    // Warmup: several full refresh cycles fill the workspace pools and the
-    // shared plan caches.
-    for _ in 0..12 {
-        opt.step(&mut params, &grads, 1e-3);
+    // One proof per execution mode: sequential (1 lane) and the parallel
+    // step_layers_parallel path (3 lanes, 4 layers → 2 chunks in flight).
+    // Pool threads spawn at optimizer construction — before counting.
+    for threads in [1usize, 3] {
+        let mut cfg = OptimizerConfig {
+            rank: 8,
+            threads: Some(threads),
+            ..Default::default()
+        };
+        cfg.update_interval = 4; // exercise refresh AND project-only steps
+        let mut opt = DctAdamW::new(&metas, &cfg);
+        let mut params: Vec<Matrix> = metas
+            .iter()
+            .map(|m| Matrix::zeros(m.rows, m.cols))
+            .collect();
+
+        // Warmup: several full refresh cycles fill the per-shard workspace
+        // pools, the shared plan caches and the per-plan scratch pools up
+        // to their parallel high-water mark.
+        for _ in 0..12 {
+            opt.step(&mut params, &grads, 1e-3);
+        }
+
+        ALLOC_CALLS.store(0, Ordering::SeqCst);
+        ENABLED.store(true, Ordering::SeqCst);
+        for _ in 0..8 {
+            opt.step(&mut params, &grads, 1e-3);
+        }
+        ENABLED.store(false, Ordering::SeqCst);
+
+        let allocs = ALLOC_CALLS.load(Ordering::SeqCst);
+        assert_eq!(
+            allocs, 0,
+            "steady-state DctAdamW steps (threads={threads}) performed \
+             {allocs} heap allocations (expected zero — a workspace buffer \
+             is being dropped or resized, or the pool dispatch allocates)"
+        );
+
+        // sanity: the optimizer actually did work in the counted window
+        assert!(params[0].fro_norm() > 0.0);
     }
-
-    ENABLED.store(true, Ordering::SeqCst);
-    for _ in 0..8 {
-        opt.step(&mut params, &grads, 1e-3);
-    }
-    ENABLED.store(false, Ordering::SeqCst);
-
-    let allocs = ALLOC_CALLS.load(Ordering::SeqCst);
-    assert_eq!(
-        allocs, 0,
-        "steady-state DctAdamW steps performed {allocs} heap allocations \
-         (expected zero — a workspace buffer is being dropped or resized)"
-    );
-
-    // sanity: the optimizer actually did work in the counted window
-    assert!(params[0].fro_norm() > 0.0);
 }

@@ -13,27 +13,10 @@ use fft_subspace::train::{checkpoint, TrainConfig, Trainer};
 
 /// These tests need `make artifacts` AND a real PJRT plugin. When either is
 /// missing (e.g. the offline stub `xla` crate) they skip instead of failing;
-/// CI environments with the full stack run them end to end.
+/// CI environments with the full stack run them end to end. The shared
+/// skip-or-require logic lives in `fft_subspace::runtime::testing`.
 fn setup() -> Option<(Manifest, Runtime)> {
-    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    let required = std::env::var("FFT_SUBSPACE_REQUIRE_PJRT").is_ok_and(|v| !v.is_empty() && v != "0");
-    let m = match Manifest::load(dir) {
-        Ok(m) => m,
-        Err(e) if required => panic!("FFT_SUBSPACE_REQUIRE_PJRT set but artifacts missing: {e}"),
-        Err(e) => {
-            eprintln!("skipping integration test (run `make artifacts`): {e}");
-            return None;
-        }
-    };
-    let rt = match Runtime::new() {
-        Ok(rt) => rt,
-        Err(e) if required => panic!("FFT_SUBSPACE_REQUIRE_PJRT set but PJRT unavailable: {e:#}"),
-        Err(e) => {
-            eprintln!("skipping integration test: {e:#}");
-            return None;
-        }
-    };
-    Some((m, rt))
+    fft_subspace::runtime::testing::pjrt_setup("integration test")
 }
 
 fn out_dir() -> String {

@@ -1,0 +1,187 @@
+//! Thread-count invariance proofs for the parallel execution engine.
+//!
+//! The determinism contract (ROADMAP §Parallel runtime): every parallel
+//! path — row-blocked matmuls, per-row-batched Makhoul, disjoint-layer
+//! optimizer stepping, the threaded ring all-reduce — produces **the exact
+//! bits** of its sequential twin for any thread count. These tests pin a
+//! 1-lane pool (fully sequential inline execution) against multi-lane
+//! pools and assert `==` on `f32` buffers, not approximate closeness.
+
+use fft_subspace::coordinator::{CommModel, Communicator, WorkerSet};
+use fft_subspace::optim::{
+    build_optimizer, LayerMeta, Optimizer, OptimizerConfig, OptimizerKind,
+    ParamKind,
+};
+use fft_subspace::parallel::ThreadPool;
+use fft_subspace::projection::{ProjectionKind, RankNorm};
+use fft_subspace::tensor::{
+    matmul_a_bt, matmul_a_bt_into_on, matmul_at_b, matmul_at_b_into_on, matmul,
+    matmul_into_on, Matrix,
+};
+use fft_subspace::util::Pcg64;
+use std::sync::Arc;
+
+/// A small model zoo: tall, wide (transpose orientation), square,
+/// Bluestein-width, and dense-path layers — every orientation branch.
+fn layer_zoo() -> Vec<LayerMeta> {
+    vec![
+        LayerMeta::new("wq", 48, 32, ParamKind::Linear),
+        LayerMeta::new("w_gate", 32, 48, ParamKind::Linear),
+        LayerMeta::new("wk", 40, 24, ParamKind::Linear),
+        LayerMeta::new("wv", 32, 32, ParamKind::Linear),
+        LayerMeta::new("w_down", 56, 28, ParamKind::Linear),
+        LayerMeta::new("norm", 1, 32, ParamKind::Norm),
+        LayerMeta::new("embed", 64, 32, ParamKind::Embed),
+    ]
+}
+
+fn zoo_grads(metas: &[LayerMeta], seed: u64) -> Vec<Vec<Matrix>> {
+    let mut rng = Pcg64::seed(seed);
+    (0..6)
+        .map(|_| {
+            metas
+                .iter()
+                .map(|m| Matrix::randn(m.rows, m.cols, 0.1, &mut rng))
+                .collect()
+        })
+        .collect()
+}
+
+/// Run `steps` optimizer steps at a pinned lane count; return final params.
+fn run_optimizer(kind: &OptimizerKind, threads: usize, metas: &[LayerMeta],
+                 grad_seq: &[Vec<Matrix>]) -> Vec<Matrix> {
+    let cfg = OptimizerConfig {
+        rank: 8,
+        update_interval: 2, // refresh AND project-only steps in the window
+        threads: Some(threads),
+        // SVD/DCT both exercised across the six kinds; keep each kind on
+        // its own default projection except the pluggable three, which get
+        // the paper's DCT so the Makhoul path runs under threading.
+        projection: ProjectionKind::Dct { norm: RankNorm::L2, use_makhoul: true },
+        ..Default::default()
+    };
+    let mut opt = build_optimizer(kind, metas, &cfg);
+    let mut params: Vec<Matrix> = metas
+        .iter()
+        .map(|m| Matrix::zeros(m.rows, m.cols))
+        .collect();
+    for grads in grad_seq {
+        opt.step(&mut params, grads, 1e-3);
+    }
+    params
+}
+
+#[test]
+fn all_six_low_rank_optimizers_bit_identical_1_vs_n_threads() {
+    let metas = layer_zoo();
+    let grad_seq = zoo_grads(&metas, 42);
+    for kind in [
+        OptimizerKind::DctAdamW,
+        OptimizerKind::Trion,
+        OptimizerKind::GaLore,
+        OptimizerKind::Fira,
+        OptimizerKind::Frugal,
+        OptimizerKind::LdAdamW,
+    ] {
+        let sequential = run_optimizer(&kind, 1, &metas, &grad_seq);
+        for threads in [3usize, 8] {
+            let parallel = run_optimizer(&kind, threads, &metas, &grad_seq);
+            for (i, (a, b)) in sequential.iter().zip(&parallel).enumerate() {
+                assert_eq!(
+                    a, b,
+                    "{}: layer {} ({}) diverged at {} threads",
+                    kind.name(),
+                    i,
+                    metas[i].name,
+                    threads
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_parallel_matmul_family_bit_identical() {
+    // Random shapes × pools {2, 3, 8} against the sequential kernels
+    // (which the allocating APIs delegate to).
+    let pools = [ThreadPool::new(2), ThreadPool::new(3), ThreadPool::new(8)];
+    let mut rng = Pcg64::seed(7);
+    for trial in 0..24 {
+        let m = 1 + (rng.next_u64() % 67) as usize;
+        let k = 1 + (rng.next_u64() % 41) as usize;
+        let n = 1 + (rng.next_u64() % 41) as usize;
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(k, n, 1.0, &mut rng);
+        let at = Matrix::randn(k, m, 1.0, &mut rng);
+        let bt = Matrix::randn(n, k, 1.0, &mut rng);
+        let mut out = Matrix::randn(2, 2, 1.0, &mut rng); // dirty buffer
+        for pool in &pools {
+            matmul_into_on(pool, &a, &b, &mut out);
+            assert_eq!(out, matmul(&a, &b), "trial {trial} matmul t={}", pool.threads());
+            matmul_at_b_into_on(pool, &at, &b, &mut out);
+            assert_eq!(out, matmul_at_b(&at, &b), "trial {trial} at_b t={}", pool.threads());
+            matmul_a_bt_into_on(pool, &a, &bt, &mut out);
+            assert_eq!(out, matmul_a_bt(&a, &bt), "trial {trial} a_bt t={}", pool.threads());
+        }
+    }
+}
+
+#[test]
+fn makhoul_parallel_rows_bit_identical() {
+    // Split (even), Bluestein (odd), pow2 — all widths through pools 1..8.
+    let pools = [ThreadPool::new(1), ThreadPool::new(4), ThreadPool::new(8)];
+    let mut rng = Pcg64::seed(11);
+    for n in [8usize, 24, 33, 64, 100] {
+        let plan = fft_subspace::fft::cached_plan(n);
+        let g = Matrix::randn(23, n, 1.0, &mut rng);
+        let mut want = Matrix::zeros(1, 1);
+        plan.run_into(&g, &mut want);
+        for pool in &pools {
+            let mut got = Matrix::randn(3, 3, 1.0, &mut rng);
+            plan.run_into_on(pool, &g, &mut got);
+            assert_eq!(got, want, "n={n} threads={}", pool.threads());
+        }
+    }
+}
+
+#[test]
+fn threaded_ring_all_reduce_bit_identical_with_equal_stats() {
+    let mut rng = Pcg64::seed(3);
+    for w in [2usize, 4, 7] {
+        let bufs: Vec<Matrix> =
+            (0..w).map(|_| Matrix::randn(9, 13, 1.0, &mut rng)).collect();
+        let mut seq = bufs.clone();
+        let mut comm_seq = Communicator::new(w, CommModel::default());
+        comm_seq.all_reduce_mean(&mut seq);
+        for threads in [2usize, 5] {
+            let mut par = bufs.clone();
+            let mut comm_par = Communicator::with_pool(
+                w,
+                CommModel::default(),
+                Arc::new(ThreadPool::new(threads)),
+            );
+            comm_par.all_reduce_mean(&mut par);
+            assert_eq!(seq, par, "w={w} threads={threads}");
+            assert_eq!(
+                comm_seq.stats.all_reduce_bytes,
+                comm_par.stats.all_reduce_bytes
+            );
+            assert_eq!(comm_seq.stats.modeled_secs, comm_par.stats.modeled_secs);
+        }
+    }
+}
+
+#[test]
+fn worker_set_results_independent_of_thread_count() {
+    // Per-worker deterministic "gradients" (own RNG substream) come back in
+    // worker order whatever the pool size — the trainer's staging pattern.
+    let grad = |w: usize| {
+        let mut rng = Pcg64::new(99, w as u64);
+        Matrix::randn(6, 6, 1.0, &mut rng)
+    };
+    let want: Vec<Matrix> = (0..5).map(grad).collect();
+    for threads in [1usize, 3, 8] {
+        let ws = WorkerSet::new(5, Arc::new(ThreadPool::new(threads)));
+        assert_eq!(ws.run(grad), want, "threads={threads}");
+    }
+}
