@@ -7,7 +7,7 @@
 CARGO ?= cargo
 RUST_DIR := rust
 
-.PHONY: build test bench bench-proj bench-par bench-makhoul bench-optim artifacts clean
+.PHONY: build test test-matrix bench bench-proj bench-par bench-simd bench-makhoul bench-optim artifacts clean
 
 build:
 	cd $(RUST_DIR) && $(CARGO) build --release
@@ -15,8 +15,17 @@ build:
 test:
 	cd $(RUST_DIR) && $(CARGO) test -q
 
+# The SIMD × threading conformance matrix: the whole suite under the scalar
+# and vector kernel backends at 1 and 4 pool lanes. Results must be
+# identical in every cell (the bit-identity + determinism contracts).
+test-matrix:
+	cd $(RUST_DIR) && for s in 0 1; do for t in 1 4; do \
+		echo "== FFT_SUBSPACE_SIMD=$$s FFT_SUBSPACE_THREADS=$$t =="; \
+		FFT_SUBSPACE_SIMD=$$s FFT_SUBSPACE_THREADS=$$t $(CARGO) test -q || exit 1; \
+	done; done
+
 # Full microbench battery (each bench is a plain binary: harness = false).
-bench: bench-proj bench-par bench-makhoul bench-optim
+bench: bench-proj bench-par bench-simd bench-makhoul bench-optim
 
 # Projection/subspace-step bench; writes rust/BENCH_PROJ.json
 # (override the path with BENCH_PROJ_OUT=...). Includes the `threads`
@@ -28,6 +37,12 @@ bench-proj:
 # count); writes rust/BENCH_PAR.json (override with BENCH_PAR_OUT=...).
 bench-par:
 	cd $(RUST_DIR) && $(CARGO) bench --bench bench_parallel
+
+# SIMD on/off kernel sweep (matmul family / Makhoul / fused Adam / column
+# norms / Newton-Schulz); writes rust/BENCH_SIMD.json (override with
+# BENCH_SIMD_OUT=...).
+bench-simd:
+	cd $(RUST_DIR) && $(CARGO) bench --bench bench_simd
 
 bench-makhoul:
 	cd $(RUST_DIR) && $(CARGO) bench --bench bench_makhoul

@@ -115,6 +115,33 @@ fn main() {
         println!();
     }
 
+    // --- simd sweep: the composite subspace step with the vector backend
+    // on/off. The scalar leg is the exact `FFT_SUBSPACE_SIMD=0` code path
+    // (forced via the runtime override); results are bit-identical by
+    // contract, so the ratio is pure kernel speedup. Per-kernel
+    // scalar-vs-vector races (matmul family, Makhoul, Adam, column norms)
+    // live in `bench_simd` / BENCH_SIMD.json — only the end-to-end
+    // dct_step composite is measured here to avoid double bookkeeping.
+    {
+        let (rows, cols) = (1024usize, 1024usize);
+        let g = Matrix::randn(rows, cols, 1.0, &mut rng);
+        let plan = cached_plan(cols);
+        let mut ws = Workspace::new();
+        let mut s_buf = ws.take(rows, cols);
+        let mut idx = Vec::new();
+        fft_subspace::bench::with_simd_backends(|be| {
+            let step = measure(&format!("simd[{be}] dct_step r=64"), 1, 10, || {
+                plan.run_into(&g, &mut s_buf);
+                select_top_columns_into(&s_buf, 64, RankNorm::L2, &mut ws, &mut idx);
+            });
+            println!("{}", step.report());
+            records.push(BenchRecord::new(
+                "simd", &format!("dct_step_{be}"), rows, cols, 64, step,
+            ));
+        });
+        println!();
+    }
+
     // --- rank-dependent baselines at the Table-1 shape ------------------
     let (rows, cols) = (1024usize, 256usize);
     let g = Matrix::randn(rows, cols, 1.0, &mut rng);

@@ -1,0 +1,144 @@
+//! SIMD on/off kernel sweep — the baseline for the perf trajectory of the
+//! runtime-dispatched vector layer (`make bench-simd` → `BENCH_SIMD.json`,
+//! override the path with `BENCH_SIMD_OUT=…`).
+//!
+//! Every group races the forced-scalar backend (the exact
+//! `FFT_SUBSPACE_SIMD=0` code path) against the auto-detected backend on
+//! the same buffers. The two are bit-identical by the `crate::simd`
+//! contract (enforced in `tests/simd_bit_identity.rs`), so the printed
+//! ratio is pure ALU/bandwidth speedup:
+//!
+//! * `matmul` / `matmul_at_b` / `matmul_a_bt` — the projection/update GEMMs
+//! * `makhoul` — the split-butterfly DCT row transform (even + odd widths)
+//! * `adam` — the fused dense AdamW elementwise kernel
+//! * `col_norms` — the ℓ2 column accumulator behind selection
+//! * `newton_schulz` — Trion's orthogonalization (matmul-bound)
+
+use fft_subspace::bench::{
+    measure, with_simd_backends, write_bench_json, BenchRecord, BenchStats,
+};
+use fft_subspace::fft::cached_plan;
+use fft_subspace::linalg::newton_schulz_into;
+use fft_subspace::optim::{adam_fused_update, AdamScalars};
+use fft_subspace::simd::backend;
+use fft_subspace::tensor::{
+    matmul_a_bt_into, matmul_at_b_into, matmul_into, Matrix, Workspace,
+};
+use fft_subspace::util::Pcg64;
+
+/// Run `f` under the forced-scalar and the auto backend (shared
+/// `bench::with_simd_backends` driver); returns `[(variant, stats); 2]`.
+fn race(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    mut f: impl FnMut(),
+) -> Vec<(String, BenchStats)> {
+    let mut legs: Vec<(String, BenchStats)> = Vec::new();
+    with_simd_backends(|be| {
+        let st = measure(&format!("{name} [{be}]"), warmup, iters, &mut f);
+        println!("{}", st.report());
+        legs.push((be.to_string(), st));
+    });
+    println!(
+        "  simd speedup: {:.2}x\n",
+        legs[0].1.median_secs / legs[1].1.median_secs
+    );
+    legs
+}
+
+fn push(
+    records: &mut Vec<BenchRecord>,
+    group: &str,
+    rows: usize,
+    cols: usize,
+    rank: usize,
+    raced: Vec<(String, BenchStats)>,
+) {
+    for (variant, stats) in raced {
+        records.push(BenchRecord::new(group, &variant, rows, cols, rank, stats));
+    }
+}
+
+fn main() {
+    println!("== bench_simd (runtime-dispatched kernels, vector vs scalar) ==");
+    println!("auto backend: {}\n", backend().name());
+    let mut records: Vec<BenchRecord> = Vec::new();
+    let mut rng = Pcg64::seed(0);
+    let mut ws = Workspace::new();
+
+    // --- matmul family ---------------------------------------------------
+    for &(m, k, n) in &[(256usize, 256usize, 256usize), (1024, 512, 64)] {
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(k, n, 1.0, &mut rng);
+        let at = Matrix::randn(k, m, 1.0, &mut rng);
+        let bt = Matrix::randn(n, k, 1.0, &mut rng);
+        let mut c = ws.take(m, n);
+        let r = race(&format!("matmul {m}x{k}x{n}"), 1, 10, || {
+            matmul_into(&a, &b, &mut c)
+        });
+        push(&mut records, "matmul", m, n, k, r);
+        let r = race(&format!("matmul_at_b {m}x{k}x{n}"), 1, 10, || {
+            matmul_at_b_into(&at, &b, &mut c)
+        });
+        push(&mut records, "matmul_at_b", m, n, k, r);
+        let r = race(&format!("matmul_a_bt {m}x{k}x{n}"), 1, 10, || {
+            matmul_a_bt_into(&a, &bt, &mut c)
+        });
+        push(&mut records, "matmul_a_bt", m, n, k, r);
+        ws.give(c);
+    }
+
+    // --- Makhoul DCT rows: split (even) and Bluestein (odd) --------------
+    for &cols in &[512usize, 1024, 999] {
+        let rows = 256;
+        let g = Matrix::randn(rows, cols, 1.0, &mut rng);
+        let plan = cached_plan(cols);
+        let mut out = ws.take(rows, cols);
+        let r = race(&format!("makhoul {rows}x{cols}"), 2, 10, || {
+            plan.run_into(&g, &mut out)
+        });
+        push(&mut records, "makhoul", rows, cols, 0, r);
+        ws.give(out);
+    }
+
+    // --- fused AdamW elementwise kernel ----------------------------------
+    {
+        let n = 1 << 20;
+        let g: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+        let mut p = vec![0.5f32; n];
+        let mut m = vec![0.0f32; n];
+        let mut v = vec![0.0f32; n];
+        let sc = AdamScalars::new(0.9, 0.999, 1e-8, 10);
+        let r = race("adam_fused 1M", 2, 20, || {
+            adam_fused_update(&mut p, &g, &mut m, &mut v, 1e-3, 0.01, &sc)
+        });
+        push(&mut records, "adam", 1, n, 0, r);
+    }
+
+    // --- column norms (selection front half) -----------------------------
+    {
+        let m = Matrix::randn(1024, 1024, 1.0, &mut rng);
+        let mut acc = vec![0.0f64; 1024];
+        let r = race("col_sq_sums 1024x1024", 2, 20, || {
+            m.col_sq_sums_into(&mut acc)
+        });
+        push(&mut records, "col_norms", 1024, 1024, 0, r);
+    }
+
+    // --- Newton–Schulz (Trion's per-step orthogonalization) --------------
+    {
+        let x = Matrix::randn(1024, 64, 1.0, &mut rng);
+        let mut out = Matrix::zeros(0, 0);
+        let r = race("newton_schulz 1024x64", 1, 10, || {
+            newton_schulz_into(&x, 5, &mut out, &mut ws)
+        });
+        push(&mut records, "newton_schulz", 1024, 64, 64, r);
+    }
+
+    let out = std::env::var("BENCH_SIMD_OUT").unwrap_or_else(|_| "BENCH_SIMD.json".into());
+    match write_bench_json(&out, &records) {
+        Ok(()) => println!("wrote {} records to {out}", records.len()),
+        Err(e) => eprintln!("failed to write {out}: {e}"),
+    }
+}

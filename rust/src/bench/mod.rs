@@ -8,7 +8,26 @@
 
 use std::time::Instant;
 
+use crate::simd::{backend, set_backend_override, Backend};
 use crate::util::json::{num, obj, s, Json};
+
+/// Run `f(variant)` once under the forced-scalar SIMD backend and once
+/// under auto-detection (override restored afterwards) — the shared driver
+/// for every scalar-vs-vector bench sweep. The variant names are unique
+/// even when auto-detection resolves to scalar (non-AVX2 x86_64), so
+/// `(group, name)` record keys never collide in the emitted JSON.
+pub fn with_simd_backends(mut f: impl FnMut(&str)) {
+    set_backend_override(Some(Backend::Scalar));
+    f("scalar");
+    set_backend_override(None);
+    let auto = if backend() == Backend::Scalar {
+        "scalar_auto"
+    } else {
+        backend().name()
+    };
+    f(auto);
+    set_backend_override(None);
+}
 
 #[derive(Clone, Debug)]
 pub struct BenchStats {

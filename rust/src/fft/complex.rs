@@ -8,11 +8,24 @@
 //! callers pop distinct buffers, so row-parallel Makhoul execution runs
 //! Bluestein widths without serializing; the pool's high-water mark equals
 //! the peak concurrency (one buffer per thread), reached during warmup.
+//!
+//! The butterfly and pointwise-product loops run through the
+//! [`crate::simd`] complex-pair lane layer: radix-2 plans carry
+//! **per-stage contiguous twiddle tables** (copied from the canonical
+//! `exp(-2πik/n)` table, so the values are bit-identical to the strided
+//! lookup they replace) and each butterfly/chirp product is the exact
+//! `Complex::mul`/`add`/`sub` op sequence per pair — every backend and
+//! `FFT_SUBSPACE_SIMD=0` return the same bits.
 
 use std::sync::Mutex;
 
-/// Minimal complex number (no `num-complex` offline).
+use crate::simd::{Simd, C64_LANES};
+
+/// Minimal complex number (no `num-complex` offline). `#[repr(C)]` so a
+/// `&[Complex]` is a valid interleaved `re,im,…` f64 buffer for the
+/// [`crate::simd`] complex-pair lane ops.
 #[derive(Clone, Copy, Debug, PartialEq, Default)]
+#[repr(C)]
 pub struct Complex {
     pub re: f64,
     pub im: f64,
@@ -68,7 +81,14 @@ impl Complex {
 /// Bluestein embedding for non-power-of-two lengths.
 pub struct FftPlan {
     pub n: usize,
-    twiddles: Vec<Complex>,      // radix-2 stage twiddles (size n/2), for pow2 n
+    /// Radix-2 butterfly factors as **per-stage contiguous tables** (stage
+    /// `s` holds the `2^(s+1)`-point butterfly's `2^s` factors
+    /// `exp(-2πik·step/n)` back to back, copied from the canonical size-n/2
+    /// table so the values are bit-identical to the strided lookup they
+    /// replace). Unit-stride twiddle streams are what lets the SIMD
+    /// butterfly run two complex pairs per step. Total size `n − 1`
+    /// complex; empty for Bluestein lengths.
+    stage_twiddles: Vec<Vec<Complex>>,
     bluestein: Option<Box<BluesteinPlan>>,
 }
 
@@ -84,12 +104,21 @@ impl FftPlan {
     pub fn new(n: usize) -> Self {
         assert!(n > 0);
         if n.is_power_of_two() {
-            let twiddles = (0..n / 2)
+            let twiddles: Vec<Complex> = (0..n / 2)
                 .map(|k| {
                     Complex::from_polar(1.0, -2.0 * std::f64::consts::PI * k as f64 / n as f64)
                 })
                 .collect();
-            FftPlan { n, twiddles, bluestein: None }
+            // contiguous per-stage copies of the exact same values
+            let mut stage_twiddles = Vec::new();
+            let mut len = 2;
+            while len <= n {
+                let step = n / len;
+                stage_twiddles
+                    .push((0..len / 2).map(|k| twiddles[k * step]).collect());
+                len <<= 1;
+            }
+            FftPlan { n, stage_twiddles, bluestein: None }
         } else {
             let m = (2 * n - 1).next_power_of_two();
             let inner = FftPlan::new(m);
@@ -112,7 +141,7 @@ impl FftPlan {
             inner.forward(&mut b);
             FftPlan {
                 n,
-                twiddles: Vec::new(),
+                stage_twiddles: Vec::new(),
                 bluestein: Some(Box::new(BluesteinPlan {
                     m,
                     chirp,
@@ -148,20 +177,7 @@ impl FftPlan {
                 buf.swap(i, j);
             }
         }
-        let mut len = 2;
-        while len <= n {
-            let step = n / len;
-            for start in (0..n).step_by(len) {
-                for k in 0..len / 2 {
-                    let w = self.twiddles[k * step];
-                    let u = buf[start + k];
-                    let v = buf[start + k + len / 2].mul(w);
-                    buf[start + k] = u.add(v);
-                    buf[start + k + len / 2] = u.sub(v);
-                }
-            }
-            len <<= 1;
-        }
+        radix2_stages(buf, &self.stage_twiddles);
     }
 
     fn bluestein_forward(&self, bp: &BluesteinPlan, buf: &mut [Complex]) {
@@ -173,31 +189,140 @@ impl FftPlan {
         let mut a = bp.scratch.lock().unwrap().pop().unwrap_or_default();
         a.clear();
         a.resize(m, Complex::ZERO);
-        for k in 0..n {
-            a[k] = buf[k].mul(bp.chirp[k]);
-        }
+        cmul_pairs(&mut a[..n], buf, &bp.chirp);
         bp.inner.forward(&mut a);
-        for (av, bv) in a.iter_mut().zip(&bp.b_fft) {
-            *av = av.mul(*bv);
-        }
+        cmul_inplace(&mut a, &bp.b_fft);
         inverse_given_forward(&bp.inner, &mut a);
-        for k in 0..n {
-            buf[k] = a[k].mul(bp.chirp[k]);
-        }
+        cmul_pairs(buf, &a[..n], &bp.chirp);
         bp.scratch.lock().unwrap().push(a);
     }
 }
 
 /// Inverse DFT via conjugation: `ifft(x) = conj(fft(conj(x)))/n`.
 fn inverse_given_forward(plan: &FftPlan, buf: &mut [Complex]) {
-    for v in buf.iter_mut() {
-        *v = v.conj();
-    }
+    conj_inplace(buf);
     plan.forward(buf);
-    let s = 1.0 / plan.n as f64;
-    for v in buf.iter_mut() {
-        *v = v.conj().scale(s);
+    conj_scale_inplace(buf, 1.0 / plan.n as f64);
+}
+
+// ---- SIMD kernels (see `crate::simd` for the bit-identity contract) ----
+
+/// All butterfly stages over a bit-reversed buffer; `stages[s]` is the
+/// contiguous twiddle table of the `2^(s+1)`-point stage. Two pairs per
+/// lane step; per-element op sequence is exactly `u ± hi·w` in
+/// `Complex::mul`/`add`/`sub` order, identical in the scalar tail.
+#[inline(always)]
+fn radix2_stages_g<S: Simd>(buf: &mut [Complex], stages: &[Vec<Complex>]) {
+    let n = buf.len();
+    let mut len = 2;
+    for tw in stages {
+        let half = len / 2;
+        for start in (0..n).step_by(len) {
+            let (lo, hi) = buf[start..start + len].split_at_mut(half);
+            let mut k = 0;
+            while k + C64_LANES <= half {
+                let u = S::loadc(&lo[k..]);
+                let v = S::cmul(S::loadc(&hi[k..]), S::loadc(&tw[k..]));
+                S::storec(&mut lo[k..], S::add64(u, v));
+                S::storec(&mut hi[k..], S::sub64(u, v));
+                k += C64_LANES;
+            }
+            while k < half {
+                let u = lo[k];
+                let v = hi[k].mul(tw[k]);
+                lo[k] = u.add(v);
+                hi[k] = u.sub(v);
+                k += 1;
+            }
+        }
+        len <<= 1;
     }
+}
+
+crate::simd_dispatch! {
+    fn radix2_stages(buf: &mut [Complex], stages: &[Vec<Complex>]) = radix2_stages_g
+}
+
+/// `out[k] = x[k]·y[k]` (the Bluestein chirp modulation).
+#[inline(always)]
+fn cmul_pairs_g<S: Simd>(out: &mut [Complex], x: &[Complex], y: &[Complex]) {
+    let n = out.len();
+    debug_assert!(x.len() >= n && y.len() >= n);
+    let mut k = 0;
+    while k + C64_LANES <= n {
+        S::storec(&mut out[k..], S::cmul(S::loadc(&x[k..]), S::loadc(&y[k..])));
+        k += C64_LANES;
+    }
+    while k < n {
+        out[k] = x[k].mul(y[k]);
+        k += 1;
+    }
+}
+
+crate::simd_dispatch! {
+    fn cmul_pairs(out: &mut [Complex], x: &[Complex], y: &[Complex]) = cmul_pairs_g
+}
+
+/// `x[k] = x[k]·y[k]` (the Bluestein frequency-domain filter product).
+#[inline(always)]
+fn cmul_inplace_g<S: Simd>(x: &mut [Complex], y: &[Complex]) {
+    let n = x.len();
+    debug_assert!(y.len() >= n);
+    let mut k = 0;
+    while k + C64_LANES <= n {
+        let prod = S::cmul(S::loadc(&x[k..]), S::loadc(&y[k..]));
+        S::storec(&mut x[k..], prod);
+        k += C64_LANES;
+    }
+    while k < n {
+        x[k] = x[k].mul(y[k]);
+        k += 1;
+    }
+}
+
+crate::simd_dispatch! {
+    fn cmul_inplace(x: &mut [Complex], y: &[Complex]) = cmul_inplace_g
+}
+
+/// `x[k] = conj(x[k])` — exact sign flips.
+#[inline(always)]
+fn conj_inplace_g<S: Simd>(x: &mut [Complex]) {
+    let n = x.len();
+    let mut k = 0;
+    while k + C64_LANES <= n {
+        let c = S::conjc(S::loadc(&x[k..]));
+        S::storec(&mut x[k..], c);
+        k += C64_LANES;
+    }
+    while k < n {
+        x[k] = x[k].conj();
+        k += 1;
+    }
+}
+
+crate::simd_dispatch! {
+    fn conj_inplace(x: &mut [Complex]) = conj_inplace_g
+}
+
+/// `x[k] = conj(x[k])·s` (the 1/n inverse normalization).
+#[inline(always)]
+fn conj_scale_inplace_g<S: Simd>(x: &mut [Complex], s: f64) {
+    let n = x.len();
+    let scale = S::splat64(s);
+    let mut k = 0;
+    while k + C64_LANES <= n {
+        let c = S::mul64(S::conjc(S::loadc(&x[k..])), scale);
+        S::storec(&mut x[k..], c);
+        k += C64_LANES;
+    }
+    while k < n {
+        x[k] = x[k].conj().scale(s);
+        k += 1;
+    }
+}
+
+crate::simd_dispatch! {
+    fn conj_scale_inplace(x: &mut [Complex], s: f64) = conj_scale_inplace_g
 }
 
 /// One-shot forward FFT (plans a fresh transform; hot paths should hold a

@@ -26,11 +26,18 @@
 //! parallel path is bit-identical to sequential for any thread count; each
 //! chunk pops its own [`Scratch`] from the pool (the pool's high-water mark
 //! is the peak chunk concurrency, reached during warmup).
+//!
+//! The split butterfly and the `W_k`-twiddle/scale output loops run through
+//! the [`crate::simd`] complex-pair lane layer (two `k` per step, reversed
+//! loads for the conjugate-symmetric operands); every backend and
+//! `FFT_SUBSPACE_SIMD=0` produce the same bits — see `crate::simd` for the
+//! contract.
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::parallel::{par_row_slabs, ThreadPool};
+use crate::simd::{Simd, C64_LANES};
 use crate::tensor::Matrix;
 
 use super::complex::{Complex, FftPlan};
@@ -138,25 +145,15 @@ impl MakhoulPlan {
         // samples, Z[k] = E[k] + i·O[k] and conj(Z[-k]) = E[k] − i·O[k], so
         //   V[k]   = E[k] + t_k·O[k]      (k < h)
         //   V[h]   = E[0] − O[0]
-        for k in 0..h {
-            let zk = sc.z[k];
-            let zc = sc.z[(h - k) % h].conj();
-            let e = zk.add(zc).scale(0.5);
-            let o = zk.sub(zc).mul(Complex::new(0.0, -0.5));
-            sc.v[k] = e.add(sp.twiddle[k].mul(o));
-        }
+        split_butterfly(&sc.z, &sp.twiddle, &mut sc.v[..h]);
         {
             let z0 = sc.z[0];
             // E[0] = Re(Z[0]), O[0] = Im(Z[0])
             sc.v[h] = Complex::new(z0.re - z0.im, 0.0);
         }
         // real part of V[k]·W[k]; upper half via conjugate symmetry
-        for k in 0..=h {
-            out[k] = (sc.v[k].mul(self.w[k]).re * self.scale[k]) as f32;
-        }
-        for k in h + 1..n {
-            out[k] = (sc.v[n - k].conj().mul(self.w[k]).re * self.scale[k]) as f32;
-        }
+        twiddle_scale_forward(&sc.v[..h + 1], &self.w, &self.scale, out, h + 1);
+        twiddle_scale_mirror(&sc.v, &self.w, &self.scale, out, h + 1);
     }
 
     /// DCT-II of one row via the full N-point complex FFT (odd lengths and
@@ -166,9 +163,7 @@ impl MakhoulPlan {
         sc.z
             .extend(self.perm.iter().map(|&p| Complex::new(row[p] as f64, 0.0)));
         fft.forward(&mut sc.z);
-        for k in 0..self.n {
-            out[k] = (sc.z[k].mul(self.w[k]).re * self.scale[k]) as f32;
-        }
+        twiddle_scale_forward(&sc.z, &self.w, &self.scale, out, self.n);
     }
 
     /// DCT-II of one row through whichever path the plan carries.
@@ -265,6 +260,121 @@ impl MakhoulPlan {
         }
         self.put_scratch(sc);
     }
+}
+
+// ---- SIMD kernels (see `crate::simd` for the bit-identity contract) ----
+
+/// The split butterfly `V[k] = E[k] + t_k·O[k]` for `k in 0..h`, two `k`
+/// per lane step. The conjugate-symmetric operand `Z[-k]` is a reversed
+/// contiguous load (`swap_pairs` of `z[h−k−1..]`); every per-element op —
+/// `(z_k + z̄_{−k})·0.5`, `(z_k − z̄_{−k})·(−i/2)`, `e + t·o` — is the exact
+/// `Complex` method sequence, repeated verbatim in the `k = 0` / remainder
+/// scalar path.
+#[inline(always)]
+fn split_butterfly_g<S: Simd>(z: &[Complex], tw: &[Complex], v: &mut [Complex]) {
+    let h = v.len();
+    debug_assert!(z.len() >= h && tw.len() >= h);
+    let neg_half_i = Complex::new(0.0, -0.5);
+    {
+        // k = 0: the conjugate partner is z[0] itself
+        let zk = z[0];
+        let zc = z[0].conj();
+        let e = zk.add(zc).scale(0.5);
+        let o = zk.sub(zc).mul(neg_half_i);
+        v[0] = e.add(tw[0].mul(o));
+    }
+    let half = S::splat64(0.5);
+    let oc = S::splatc(neg_half_i);
+    let mut k = 1;
+    while k + C64_LANES <= h {
+        let zk = S::loadc(&z[k..]);
+        // [z[h−k−1], z[h−k]] reversed → conj(Z[−k]) for lanes k, k+1
+        let zc = S::conjc(S::swap_pairs(S::loadc(&z[h - k - 1..])));
+        let e = S::mul64(S::add64(zk, zc), half);
+        let o = S::cmul(S::sub64(zk, zc), oc);
+        let res = S::add64(e, S::cmul(S::loadc(&tw[k..]), o));
+        S::storec(&mut v[k..], res);
+        k += C64_LANES;
+    }
+    while k < h {
+        let zk = z[k];
+        let zc = z[h - k].conj();
+        let e = zk.add(zc).scale(0.5);
+        let o = zk.sub(zc).mul(neg_half_i);
+        v[k] = e.add(tw[k].mul(o));
+        k += 1;
+    }
+}
+
+crate::simd_dispatch! {
+    fn split_butterfly(z: &[Complex], tw: &[Complex], v: &mut [Complex]) = split_butterfly_g
+}
+
+/// `out[k] = (v[k]·w[k]).re · scale[k]` as f32 for `k in 0..count`: the
+/// complex product runs in lanes, the real-part extract + f64 scale + f32
+/// round run in shared scalar code on the lane array (identical bits on
+/// every backend; the discarded im lanes cost nothing correctness-wise).
+#[inline(always)]
+fn twiddle_scale_forward_g<S: Simd>(
+    v: &[Complex],
+    w: &[Complex],
+    scale: &[f64],
+    out: &mut [f32],
+    count: usize,
+) {
+    debug_assert!(v.len() >= count && w.len() >= count && scale.len() >= count);
+    let mut k = 0;
+    while k + C64_LANES <= count {
+        let m = S::to_array64(S::cmul(S::loadc(&v[k..]), S::loadc(&w[k..])));
+        out[k] = (m[0] * scale[k]) as f32;
+        out[k + 1] = (m[2] * scale[k + 1]) as f32;
+        k += C64_LANES;
+    }
+    while k < count {
+        out[k] = (v[k].mul(w[k]).re * scale[k]) as f32;
+        k += 1;
+    }
+}
+
+crate::simd_dispatch! {
+    fn twiddle_scale_forward(
+        v: &[Complex], w: &[Complex], scale: &[f64], out: &mut [f32], count: usize
+    ) = twiddle_scale_forward_g
+}
+
+/// The conjugate-symmetry upper half `out[k] = (conj(v[n−k])·w[k]).re ·
+/// scale[k]` for `k in start..out.len()` — reversed loads of `v` against
+/// forward loads of `w`/`scale`, same finish as
+/// [`twiddle_scale_forward_g`].
+#[inline(always)]
+fn twiddle_scale_mirror_g<S: Simd>(
+    v: &[Complex],
+    w: &[Complex],
+    scale: &[f64],
+    out: &mut [f32],
+    start: usize,
+) {
+    let n = out.len();
+    debug_assert!(w.len() >= n && scale.len() >= n);
+    let mut k = start;
+    while k + C64_LANES <= n {
+        // [v[n−k−1], v[n−k]] reversed → v[n−k], v[n−(k+1)] for lanes k, k+1
+        let vv = S::conjc(S::swap_pairs(S::loadc(&v[n - k - 1..])));
+        let m = S::to_array64(S::cmul(vv, S::loadc(&w[k..])));
+        out[k] = (m[0] * scale[k]) as f32;
+        out[k + 1] = (m[2] * scale[k + 1]) as f32;
+        k += C64_LANES;
+    }
+    while k < n {
+        out[k] = (v[n - k].conj().mul(w[k]).re * scale[k]) as f32;
+        k += 1;
+    }
+}
+
+crate::simd_dispatch! {
+    fn twiddle_scale_mirror(
+        v: &[Complex], w: &[Complex], scale: &[f64], out: &mut [f32], start: usize
+    ) = twiddle_scale_mirror_g
 }
 
 /// Process-wide plan cache: one immutable plan per length, shared by every

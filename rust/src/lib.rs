@@ -23,6 +23,7 @@
 
 pub mod util;
 pub mod parallel;
+pub mod simd;
 pub mod tensor;
 pub mod fft;
 pub mod linalg;

@@ -8,7 +8,7 @@ pub mod svd;
 pub mod newton_schulz;
 pub mod power_iter;
 
-pub use newton_schulz::newton_schulz;
+pub use newton_schulz::{newton_schulz, newton_schulz_into};
 pub use power_iter::{block_power_iter, power_iter_qr};
 pub use qr::qr_thin;
 pub use svd::{svd_thin, Svd};

@@ -5,36 +5,66 @@
 //! exactly (same coefficients, same frobenius pre-normalization, same
 //! transpose trick for wide inputs) — the rust-native Trion path and the AOT
 //! pallas-kernel path must agree to float tolerance.
+//!
+//! [`newton_schulz_into`] is the workspace-backed hot path (Trion calls it
+//! every step): all four iteration temporaries come from the caller's
+//! [`Workspace`] pool and every multiply is an `_into` kernel, so the
+//! steady-state call performs zero heap allocations (pinned with the rest
+//! of the Trion step in `tests/alloc_steady_state.rs`). The allocating
+//! [`newton_schulz`] delegates to it, so the two are bit-identical by
+//! construction.
 
-use crate::tensor::{matmul, matmul_at_b, Matrix};
+use crate::tensor::{matmul_at_b_into, matmul_into, Matrix, Workspace};
 
 /// Muon's quintic coefficients (Jordan et al., 2024).
 pub const NS_COEFFS: (f32, f32, f32) = (3.4445, -4.7750, 2.0315);
 
 /// Orthogonalize `x` with `steps` Newton–Schulz iterations.
 pub fn newton_schulz(x: &Matrix, steps: usize) -> Matrix {
+    let mut ws = Workspace::new();
+    let mut out = Matrix::zeros(0, 0);
+    newton_schulz_into(x, steps, &mut out, &mut ws);
+    out
+}
+
+/// Allocation-free [`newton_schulz`]: writes the orthogonalized matrix into
+/// `out` (resized in place) using only pooled workspace scratch.
+pub fn newton_schulz_into(x: &Matrix, steps: usize, out: &mut Matrix, ws: &mut Workspace) {
     let (a, b, c) = NS_COEFFS;
     let transposed = x.rows < x.cols;
-    let mut w = if transposed { x.transpose() } else { x.clone() };
+    let (wr, wc) = if transposed { (x.cols, x.rows) } else { (x.rows, x.cols) };
+    // every temporary is fully overwritten before being read
+    let mut w = ws.take_uninit(wr, wc);
+    if transposed {
+        x.transpose_into(&mut w);
+    } else {
+        w.copy_from(x);
+    }
     let norm = w.fro_norm() as f32 + 1e-7;
     w.scale(1.0 / norm);
+    let mut gram = ws.take_uninit(wc, wc);
+    let mut gram2 = ws.take_uninit(wc, wc);
+    let mut w_poly = ws.take_uninit(wr, wc);
     for _ in 0..steps {
-        let gram = matmul_at_b(&w, &w); // r×r
-        let gram2 = matmul(&gram, &gram);
-        // poly = b·A + c·A²
-        let mut poly = gram2;
-        poly.scale(c);
-        poly.axpy(b, &gram);
+        matmul_at_b_into(&w, &w, &mut gram); // r×r
+        matmul_into(&gram, &gram, &mut gram2);
+        // poly = b·A + c·A² (built in gram2)
+        gram2.scale(c);
+        gram2.axpy(b, &gram);
         // w = a·w + w·poly
-        let w_poly = matmul(&w, &poly);
+        matmul_into(&w, &gram2, &mut w_poly);
         w.scale(a);
         w.axpy(1.0, &w_poly);
     }
     if transposed {
-        w.transpose()
+        w.transpose_into(out);
     } else {
-        w
+        out.copy_from(&w);
     }
+    ws.give(w_poly);
+    ws.give(gram2);
+    ws.give(gram);
+    ws.give(w);
 }
 
 #[cfg(test)]

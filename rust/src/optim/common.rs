@@ -8,6 +8,7 @@ use std::sync::Arc;
 
 use crate::parallel::{SendPtr, ShardedWorkspace, ThreadPool};
 use crate::projection::{ProjectionKind, RankNorm, SharedDct};
+use crate::simd::{Simd, F32_LANES};
 use crate::tensor::{Matrix, Workspace};
 
 /// What a parameter is; drives the low-rank policy.
@@ -404,7 +405,9 @@ impl AdamState {
         AdamState { m: Matrix::zeros(rows, cols), v: Matrix::zeros(rows, cols) }
     }
 
-    /// One decoupled-weight-decay Adam step on `p`.
+    /// One decoupled-weight-decay Adam step on `p` (the shared fused
+    /// kernel: moment update, bias correction, decay and parameter write in
+    /// one pass).
     #[allow(clippy::too_many_arguments)]
     pub fn update(
         &mut self,
@@ -417,24 +420,193 @@ impl AdamState {
         weight_decay: f32,
         step: u64,
     ) {
-        let bc1 = 1.0 - beta1.powi(step as i32);
-        let bc2 = 1.0 - beta2.powi(step as i32);
-        let wd = 1.0 - lr * weight_decay;
-        for i in 0..p.data.len() {
-            let gi = g.data[i];
-            let m = beta1 * self.m.data[i] + (1.0 - beta1) * gi;
-            let v = beta2 * self.v.data[i] + (1.0 - beta2) * gi * gi;
-            self.m.data[i] = m;
-            self.v.data[i] = v;
-            let mhat = m / bc1;
-            let vhat = v / bc2;
-            p.data[i] = wd * p.data[i] - lr * mhat / (vhat.sqrt() + eps);
-        }
+        assert_eq!(p.shape(), g.shape(), "adam update shape mismatch");
+        let sc = AdamScalars::new(beta1, beta2, eps, step);
+        adam_fused_update(
+            &mut p.data,
+            &g.data,
+            &mut self.m.data,
+            &mut self.v.data,
+            lr,
+            weight_decay,
+            &sc,
+        );
     }
 
     pub fn bytes(&self) -> u64 {
         self.m.bytes() + self.v.bytes()
     }
+}
+
+/// Per-step Adam constants, precomputed once per layer step: betas, their
+/// complements and the bias corrections `1 − βᵗ`.
+#[derive(Clone, Copy, Debug)]
+pub struct AdamScalars {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub omb1: f32,
+    pub omb2: f32,
+    pub bc1: f32,
+    pub bc2: f32,
+    pub eps: f32,
+}
+
+impl AdamScalars {
+    pub fn new(beta1: f32, beta2: f32, eps: f32, step: u64) -> Self {
+        AdamScalars {
+            beta1,
+            beta2,
+            omb1: 1.0 - beta1,
+            omb2: 1.0 - beta2,
+            bc1: 1.0 - beta1.powi(step as i32),
+            bc2: 1.0 - beta2.powi(step as i32),
+            eps,
+        }
+    }
+}
+
+/// The moment-update core shared by both fused kernels, one lane group at
+/// a time, with the exact scalar op sequence every optimizer's hand-rolled
+/// loop used: `m′ = β₁·m + (1−β₁)·g`, `v′ = β₂·v + ((1−β₂)·g)·g`. Writes
+/// the new moments and returns `(m̂, d) = (m′/bc₁, √(v′/bc₂) + ε)` —
+/// *not* the combined direction, because the two consumers associate the
+/// final ops differently and each must keep its historical rounding:
+/// the subspace loops computed `m̂/d`, the dense loop `(lr·m̂)/d`.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn adam_mhat_den_lanes<S: Simd>(
+    gv: S::F32,
+    m: &mut [f32],
+    v: &mut [f32],
+    b1: S::F32,
+    b2: S::F32,
+    omb1: S::F32,
+    omb2: S::F32,
+    bc1: S::F32,
+    bc2: S::F32,
+    eps: S::F32,
+) -> (S::F32, S::F32) {
+    let mk = S::add(S::mul(b1, S::load(m)), S::mul(omb1, gv));
+    let vk = S::add(S::mul(b2, S::load(v)), S::mul(S::mul(omb2, gv), gv));
+    S::store(m, mk);
+    S::store(v, vk);
+    (S::div(mk, bc1), S::add(S::sqrt(S::div(vk, bc2)), eps))
+}
+
+/// Scalar twin of [`adam_mhat_den_lanes`] for remainder elements —
+/// op-for-op the same IEEE sequence, so scalar and vector lanes agree
+/// bitwise.
+#[inline(always)]
+fn adam_mhat_den_scalar(gi: f32, m: &mut f32, v: &mut f32, sc: &AdamScalars) -> (f32, f32) {
+    let mk = sc.beta1 * *m + sc.omb1 * gi;
+    let vk = sc.beta2 * *v + sc.omb2 * gi * gi;
+    *m = mk;
+    *v = vk;
+    (mk / sc.bc1, (vk / sc.bc2).sqrt() + sc.eps)
+}
+
+/// Subspace Adam moments: update `m`/`v` from `g` and write the
+/// bias-corrected update direction into `u` — the loop every low-rank
+/// optimizer (DctAdamW/LdAdamW/GaLore/FIRA/FRUGAL) previously hand-rolled.
+/// One fused pass, SIMD lanes across elements, bit-identical to the old
+/// scalar loops for every backend.
+#[inline(always)]
+fn adam_moments_g<S: Simd>(
+    u: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    sc: &AdamScalars,
+) {
+    let n = u.len();
+    debug_assert!(g.len() == n && m.len() == n && v.len() == n);
+    let (b1, b2) = (S::splat(sc.beta1), S::splat(sc.beta2));
+    let (omb1, omb2) = (S::splat(sc.omb1), S::splat(sc.omb2));
+    let (bc1, bc2, eps) = (S::splat(sc.bc1), S::splat(sc.bc2), S::splat(sc.eps));
+    let mut k = 0;
+    while k + F32_LANES <= n {
+        let (mhat, den) = adam_mhat_den_lanes::<S>(
+            S::load(&g[k..]),
+            &mut m[k..],
+            &mut v[k..],
+            b1,
+            b2,
+            omb1,
+            omb2,
+            bc1,
+            bc2,
+            eps,
+        );
+        S::store(&mut u[k..], S::div(mhat, den));
+        k += F32_LANES;
+    }
+    while k < n {
+        let (mhat, den) = adam_mhat_den_scalar(g[k], &mut m[k], &mut v[k], sc);
+        u[k] = mhat / den;
+        k += 1;
+    }
+}
+
+crate::simd_dispatch! {
+    /// See [`adam_moments_g`]; `u`, `g`, `m`, `v` must be equal length.
+    pub fn adam_moments_into(
+        u: &mut [f32], g: &[f32], m: &mut [f32], v: &mut [f32], sc: &AdamScalars
+    ) = adam_moments_g
+}
+
+/// Dense fused AdamW: moments + bias correction + decoupled weight decay +
+/// parameter update in one pass — `p′ = (1 − lr·wd)·p − (lr·m̂)/d`, with
+/// `lr·m̂` multiplied *before* the divide to keep the exact rounding of the
+/// scalar loop this kernel replaced (`wd*p − lr*mhat/(√v̂+ε)` parses as
+/// `(lr·mhat)/…`).
+#[inline(always)]
+fn adam_fused_update_g<S: Simd>(
+    p: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    lr: f32,
+    weight_decay: f32,
+    sc: &AdamScalars,
+) {
+    let n = p.len();
+    debug_assert!(g.len() == n && m.len() == n && v.len() == n);
+    let wd = 1.0 - lr * weight_decay;
+    let (b1, b2) = (S::splat(sc.beta1), S::splat(sc.beta2));
+    let (omb1, omb2) = (S::splat(sc.omb1), S::splat(sc.omb2));
+    let (bc1, bc2, eps) = (S::splat(sc.bc1), S::splat(sc.bc2), S::splat(sc.eps));
+    let (wdv, lrv) = (S::splat(wd), S::splat(lr));
+    let mut k = 0;
+    while k + F32_LANES <= n {
+        let (mhat, den) = adam_mhat_den_lanes::<S>(
+            S::load(&g[k..]),
+            &mut m[k..],
+            &mut v[k..],
+            b1,
+            b2,
+            omb1,
+            omb2,
+            bc1,
+            bc2,
+            eps,
+        );
+        let pv = S::sub(S::mul(wdv, S::load(&p[k..])), S::div(S::mul(lrv, mhat), den));
+        S::store(&mut p[k..], pv);
+        k += F32_LANES;
+    }
+    while k < n {
+        let (mhat, den) = adam_mhat_den_scalar(g[k], &mut m[k], &mut v[k], sc);
+        p[k] = wd * p[k] - lr * mhat / den;
+        k += 1;
+    }
+}
+
+crate::simd_dispatch! {
+    /// See [`adam_fused_update_g`]; `p`, `g`, `m`, `v` must be equal length.
+    pub fn adam_fused_update(
+        p: &mut [f32], g: &[f32], m: &mut [f32], v: &mut [f32],
+        lr: f32, weight_decay: f32, sc: &AdamScalars
+    ) = adam_fused_update_g
 }
 
 /// `max(1, sqrt(R/C))` shape factor used by Muon/Dion/Trion updates.

@@ -24,8 +24,9 @@ use crate::projection::{DctSelect, Projection, RankNorm, SharedDct};
 use crate::tensor::{Matrix, Workspace};
 
 use super::common::{
-    pool_for, shared_dct_registry, step_layers_parallel, take_oriented_owned,
-    AdamState, LayerMeta, MemoryReport, Optimizer, OptimizerConfig,
+    adam_moments_into, pool_for, shared_dct_registry, step_layers_parallel,
+    take_oriented_owned, AdamScalars, AdamState, LayerMeta, MemoryReport,
+    Optimizer, OptimizerConfig,
 };
 use super::error_feedback::EfBuffer;
 
@@ -192,18 +193,12 @@ impl Optimizer for DctAdamW {
                         select.back_into(&g_low, &mut back, ws);
                         back.sub_from(&g);
                         ef.store(&back);
-                        // AdamW in the subspace
-                        let bc1 = 1.0 - beta1.powi(t as i32);
-                        let bc2 = 1.0 - beta2.powi(t as i32);
+                        // AdamW in the subspace — the shared fused kernel
+                        let sc = AdamScalars::new(beta1, beta2, eps, t);
                         let mut u_low = ws.take_uninit(rr, r);
-                        for k in 0..g_low.data.len() {
-                            let gi = g_low.data[k];
-                            let mk = beta1 * m.data[k] + (1.0 - beta1) * gi;
-                            let vk = beta2 * v.data[k] + (1.0 - beta2) * gi * gi;
-                            m.data[k] = mk;
-                            v.data[k] = vk;
-                            u_low.data[k] = (mk / bc1) / ((vk / bc2).sqrt() + eps);
-                        }
+                        adam_moments_into(
+                            &mut u_low.data, &g_low.data, &mut m.data, &mut v.data, &sc,
+                        );
                         // U = u·Qᵀ, applied in the original orientation
                         // without materializing a transpose
                         select.back_into(&u_low, &mut back, ws);

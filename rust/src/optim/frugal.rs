@@ -11,8 +11,8 @@ use crate::projection::{Projection, ProjectionKind};
 use crate::tensor::Matrix;
 
 use super::common::{
-    pool_for, step_layers_parallel, AdamState, LayerMeta, MemoryReport,
-    Optimizer, OptimizerConfig, OrientedGrad,
+    adam_moments_into, pool_for, step_layers_parallel, AdamScalars, AdamState,
+    LayerMeta, MemoryReport, Optimizer, OptimizerConfig, OrientedGrad,
 };
 
 enum LayerState {
@@ -123,17 +123,11 @@ impl Optimizer for Frugal {
                             proj.project_into(g, &mut g_low, ws);
                         }
                         // state-full branch: AdamW on the subspace gradient
-                        let bc1 = 1.0 - beta1.powi(t as i32);
-                        let bc2 = 1.0 - beta2.powi(t as i32);
+                        let sc = AdamScalars::new(beta1, beta2, eps, t);
                         let mut u_low = ws.take_uninit(g_low.rows, g_low.cols);
-                        for k in 0..g_low.data.len() {
-                            let gi = g_low.data[k];
-                            let mk = beta1 * m.data[k] + (1.0 - beta1) * gi;
-                            let vk = beta2 * v.data[k] + (1.0 - beta2) * gi * gi;
-                            m.data[k] = mk;
-                            v.data[k] = vk;
-                            u_low.data[k] = (mk / bc1) / ((vk / bc2).sqrt() + eps);
-                        }
+                        adam_moments_into(
+                            &mut u_low.data, &g_low.data, &mut m.data, &mut v.data, &sc,
+                        );
                         let mut u = ws.take_uninit(rr, cc);
                         proj.back_into(&u_low, &mut u, ws);
                         // state-free branch: SignSGD on the residual

@@ -10,8 +10,8 @@ use crate::projection::{Projection, ProjectionKind};
 use crate::tensor::Matrix;
 
 use super::common::{
-    pool_for, step_layers_parallel, AdamState, LayerMeta, MemoryReport,
-    Optimizer, OptimizerConfig, OrientedGrad,
+    adam_moments_into, pool_for, step_layers_parallel, AdamScalars, AdamState,
+    LayerMeta, MemoryReport, Optimizer, OptimizerConfig, OrientedGrad,
 };
 
 enum LayerState {
@@ -131,17 +131,11 @@ impl Optimizer for GaLore {
                         // GaLore does NOT rotate m/v across refreshes (its
                         // T_u is large precisely so stale-subspace mixing is
                         // rare).
-                        let bc1 = 1.0 - beta1.powi(t as i32);
-                        let bc2 = 1.0 - beta2.powi(t as i32);
+                        let sc = AdamScalars::new(beta1, beta2, eps, t);
                         let mut u_low = ws.take_uninit(g_low.rows, g_low.cols);
-                        for k in 0..g_low.data.len() {
-                            let gi = g_low.data[k];
-                            let mk = beta1 * m.data[k] + (1.0 - beta1) * gi;
-                            let vk = beta2 * v.data[k] + (1.0 - beta2) * gi * gi;
-                            m.data[k] = mk;
-                            v.data[k] = vk;
-                            u_low.data[k] = (mk / bc1) / ((vk / bc2).sqrt() + eps);
-                        }
+                        adam_moments_into(
+                            &mut u_low.data, &g_low.data, &mut m.data, &mut v.data, &sc,
+                        );
                         let mut u = ws.take_uninit(rr, cc);
                         proj.back_into(&u_low, &mut u, ws);
                         param.scale(1.0 - lr * weight_decay);

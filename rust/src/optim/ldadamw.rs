@@ -11,8 +11,8 @@ use crate::projection::{BlockPower, Projection};
 use crate::tensor::{matmul_into, Matrix};
 
 use super::common::{
-    pool_for, step_layers_parallel, take_oriented_owned, AdamState, LayerMeta,
-    MemoryReport, Optimizer, OptimizerConfig,
+    adam_moments_into, pool_for, step_layers_parallel, take_oriented_owned,
+    AdamScalars, AdamState, LayerMeta, MemoryReport, Optimizer, OptimizerConfig,
 };
 use super::error_feedback::EfBuffer;
 use crate::optim::common::EfMode;
@@ -131,18 +131,12 @@ impl Optimizer for LdAdamW {
                         proj.back_into(&g_low, &mut back, ws);
                         back.sub_from(&g);
                         ef.store(&back);
-                        // Adam math in the subspace
-                        let bc1 = 1.0 - beta1.powi(t as i32);
-                        let bc2 = 1.0 - beta2.powi(t as i32);
+                        // Adam math in the subspace — the shared fused kernel
+                        let sc = AdamScalars::new(beta1, beta2, eps, t);
                         let mut u_low = ws.take_uninit(rr, r);
-                        for k in 0..g_low.data.len() {
-                            let gi = g_low.data[k];
-                            let mk = beta1 * m.data[k] + (1.0 - beta1) * gi;
-                            let vk = beta2 * v.data[k] + (1.0 - beta2) * gi * gi;
-                            m.data[k] = mk;
-                            v.data[k] = vk;
-                            u_low.data[k] = (mk / bc1) / ((vk / bc2).sqrt() + eps);
-                        }
+                        adam_moments_into(
+                            &mut u_low.data, &g_low.data, &mut m.data, &mut v.data, &sc,
+                        );
                         proj.back_into(&u_low, &mut back, ws);
                         param.scale(1.0 - lr * weight_decay);
                         if meta.needs_transpose() {

@@ -26,8 +26,9 @@ pub mod error_feedback;
 
 pub use adamw::AdamW;
 pub use common::{
-    build_optimizer, shared_dct_registry, step_layers_parallel, LayerMeta,
-    MemoryReport, Optimizer, OptimizerConfig, OptimizerKind, ParamKind,
+    adam_fused_update, adam_moments_into, build_optimizer, shared_dct_registry,
+    step_layers_parallel, AdamScalars, LayerMeta, MemoryReport, Optimizer,
+    OptimizerConfig, OptimizerKind, ParamKind,
 };
 pub use dct_adamw::DctAdamW;
 pub use dion::Dion;

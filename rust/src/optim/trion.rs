@@ -18,7 +18,7 @@
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 
-use crate::linalg::newton_schulz;
+use crate::linalg::newton_schulz_into;
 use crate::parallel::{ShardedWorkspace, ThreadPool};
 use crate::projection::{DctSelect, Projection, RankNorm, SharedDct};
 use crate::tensor::Matrix;
@@ -153,8 +153,11 @@ impl Optimizer for Trion {
                         let mut back = ws.take_uninit(rr, cc);
                         select.back_into(&b_low, &mut back, ws);
                         momentum.axpy(-(1.0 - mu), &back);
-                        // Newton–Schulz on the LOW-RANK momentum (R×r)
-                        let o_low = newton_schulz(&b_low, ns_steps);
+                        // Newton–Schulz on the LOW-RANK momentum (R×r),
+                        // workspace-backed so the whole step stays
+                        // allocation-free (tests/alloc_steady_state.rs)
+                        let mut o_low = ws.take_uninit(rr, r);
+                        newton_schulz_into(&b_low, ns_steps, &mut o_low, ws);
                         if instrument {
                             // restore B while `back` still holds back(b_low),
                             // then repurpose `back` for O — computed only once
@@ -180,6 +183,7 @@ impl Optimizer for Trion {
                         } else {
                             param.axpy(scale, &back);
                         }
+                        ws.give(o_low);
                         ws.give(back);
                         ws.give(b_low);
                     }

@@ -8,7 +8,11 @@
 //! The hot path is fully workspace-backed: `refresh_and_project_into` runs
 //! Makhoul into a pooled buffer, ranks columns with an O(C) partition
 //! (`select_nth_unstable_by`, not a full sort) and gathers the selection in
-//! place — zero heap allocations at steady state.
+//! place — zero heap allocations at steady state. The similarity row batch
+//! and the column-norm ranking are SIMD-vectorized underneath (the Makhoul
+//! plan kernels, the blocked matmul and `Matrix::col_{sq,abs}_sums_into`
+//! all route through `crate::simd`), bit-identical to the scalar path for
+//! every backend.
 
 use std::sync::Arc;
 

@@ -1,0 +1,177 @@
+//! x86_64 AVX2 backend: `__m256` / `__m256d` lanes.
+//!
+//! Every method lowers to a single vector instruction per lane group (or an
+//! exact bit manipulation), mirroring the scalar backend op-for-op:
+//! separate `vmulps`+`vaddps` (never `vfmadd`), correctly-rounded
+//! `vsqrtps`/`vdivps`, sign-bit XOR/ANDNOT for conj/abs, and the
+//! `vmovddup`/`vpermilpd`/`vaddsubpd` sequence for [`Simd::cmul`], whose
+//! even-lane subtract / odd-lane add is exactly `Complex::mul`'s
+//! `re − ·` / `im + ·`.
+//!
+//! Methods are `#[inline(always)]` and contain raw intrinsics; they are
+//! only ever monomorphized inside the `#[target_feature(enable = "avx2")]`
+//! shims that `simd_dispatch!` generates, which the dispatcher enters only
+//! after `is_x86_feature_detected!("avx2")` succeeded.
+
+use std::arch::x86_64::*;
+
+use crate::fft::Complex;
+
+use super::{Simd, F32_LANES, F64_LANES};
+
+/// AVX2 lanes; see module docs.
+#[derive(Clone, Copy)]
+pub struct Avx2;
+
+impl Simd for Avx2 {
+    type F32 = __m256;
+    type F64 = __m256d;
+
+    const NAME: &'static str = "avx2";
+
+    // ---- f32 -----------------------------------------------------------
+
+    #[inline(always)]
+    fn splat(x: f32) -> Self::F32 {
+        unsafe { _mm256_set1_ps(x) }
+    }
+
+    #[inline(always)]
+    fn load(s: &[f32]) -> Self::F32 {
+        let s = &s[..F32_LANES]; // bounds check once, then raw load
+        unsafe { _mm256_loadu_ps(s.as_ptr()) }
+    }
+
+    #[inline(always)]
+    fn store(s: &mut [f32], v: Self::F32) {
+        let s = &mut s[..F32_LANES];
+        unsafe { _mm256_storeu_ps(s.as_mut_ptr(), v) }
+    }
+
+    #[inline(always)]
+    fn add(a: Self::F32, b: Self::F32) -> Self::F32 {
+        unsafe { _mm256_add_ps(a, b) }
+    }
+
+    #[inline(always)]
+    fn sub(a: Self::F32, b: Self::F32) -> Self::F32 {
+        unsafe { _mm256_sub_ps(a, b) }
+    }
+
+    #[inline(always)]
+    fn mul(a: Self::F32, b: Self::F32) -> Self::F32 {
+        unsafe { _mm256_mul_ps(a, b) }
+    }
+
+    #[inline(always)]
+    fn div(a: Self::F32, b: Self::F32) -> Self::F32 {
+        unsafe { _mm256_div_ps(a, b) }
+    }
+
+    #[inline(always)]
+    fn sqrt(a: Self::F32) -> Self::F32 {
+        unsafe { _mm256_sqrt_ps(a) }
+    }
+
+    #[inline(always)]
+    fn to_array(v: Self::F32) -> [f32; F32_LANES] {
+        let mut out = [0.0f32; F32_LANES];
+        unsafe { _mm256_storeu_ps(out.as_mut_ptr(), v) };
+        out
+    }
+
+    // ---- f64 -----------------------------------------------------------
+
+    #[inline(always)]
+    fn splat64(x: f64) -> Self::F64 {
+        unsafe { _mm256_set1_pd(x) }
+    }
+
+    #[inline(always)]
+    fn load64(s: &[f64]) -> Self::F64 {
+        let s = &s[..F64_LANES];
+        unsafe { _mm256_loadu_pd(s.as_ptr()) }
+    }
+
+    #[inline(always)]
+    fn store64(s: &mut [f64], v: Self::F64) {
+        let s = &mut s[..F64_LANES];
+        unsafe { _mm256_storeu_pd(s.as_mut_ptr(), v) }
+    }
+
+    #[inline(always)]
+    fn add64(a: Self::F64, b: Self::F64) -> Self::F64 {
+        unsafe { _mm256_add_pd(a, b) }
+    }
+
+    #[inline(always)]
+    fn sub64(a: Self::F64, b: Self::F64) -> Self::F64 {
+        unsafe { _mm256_sub_pd(a, b) }
+    }
+
+    #[inline(always)]
+    fn mul64(a: Self::F64, b: Self::F64) -> Self::F64 {
+        unsafe { _mm256_mul_pd(a, b) }
+    }
+
+    #[inline(always)]
+    fn abs64(a: Self::F64) -> Self::F64 {
+        // clear the sign bit — exact
+        unsafe { _mm256_andnot_pd(_mm256_set1_pd(-0.0), a) }
+    }
+
+    #[inline(always)]
+    fn widen4(s: &[f32]) -> Self::F64 {
+        let s = &s[..F64_LANES];
+        // vcvtps2pd — exact f32→f64 conversion
+        unsafe { _mm256_cvtps_pd(_mm_loadu_ps(s.as_ptr())) }
+    }
+
+    #[inline(always)]
+    fn to_array64(v: Self::F64) -> [f64; F64_LANES] {
+        let mut out = [0.0f64; F64_LANES];
+        unsafe { _mm256_storeu_pd(out.as_mut_ptr(), v) };
+        out
+    }
+
+    // ---- complex pairs -------------------------------------------------
+
+    #[inline(always)]
+    fn loadc(s: &[Complex]) -> Self::F64 {
+        let s = &s[..2];
+        // Complex is #[repr(C)] { re: f64, im: f64 } — two Complex are four
+        // contiguous f64 lanes.
+        unsafe { _mm256_loadu_pd(s.as_ptr() as *const f64) }
+    }
+
+    #[inline(always)]
+    fn storec(s: &mut [Complex], v: Self::F64) {
+        let s = &mut s[..2];
+        unsafe { _mm256_storeu_pd(s.as_mut_ptr() as *mut f64, v) }
+    }
+
+    #[inline(always)]
+    fn cmul(a: Self::F64, b: Self::F64) -> Self::F64 {
+        unsafe {
+            let ar = _mm256_movedup_pd(a); //       [a0.re, a0.re, a1.re, a1.re]
+            let ai = _mm256_permute_pd(a, 0b1111); // [a0.im, a0.im, a1.im, a1.im]
+            let bs = _mm256_permute_pd(b, 0b0101); // [b0.im, b0.re, b1.im, b1.re]
+            let t1 = _mm256_mul_pd(ar, b); //  [re·re, re·im, …]
+            let t2 = _mm256_mul_pd(ai, bs); // [im·im, im·re, …]
+            // even lanes t1−t2 (= re), odd lanes t1+t2 (= im) — exactly
+            // Complex::mul's one-sub/one-add per component
+            _mm256_addsub_pd(t1, t2)
+        }
+    }
+
+    #[inline(always)]
+    fn conjc(v: Self::F64) -> Self::F64 {
+        // flip the sign bit of the im lanes — exact
+        unsafe { _mm256_xor_pd(v, _mm256_set_pd(-0.0, 0.0, -0.0, 0.0)) }
+    }
+
+    #[inline(always)]
+    fn swap_pairs(v: Self::F64) -> Self::F64 {
+        unsafe { _mm256_permute2f128_pd(v, v, 0x01) }
+    }
+}

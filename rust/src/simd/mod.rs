@@ -1,0 +1,450 @@
+//! Runtime-dispatched SIMD primitive layer with a bit-exact scalar twin.
+//!
+//! Every hot elementwise/inner loop in the crate (matmul micro-kernels, the
+//! Makhoul split butterfly and twiddle loops, the radix-2/Bluestein complex
+//! products, column-norm accumulators, the fused Adam update) is written
+//! once against the [`Simd`] trait and monomorphized per backend:
+//!
+//! * [`Avx2`] — x86_64 AVX2 (8 f32 / 4 f64 lanes), selected at runtime via
+//!   `is_x86_feature_detected!("avx2")`,
+//! * [`Neon`] — aarch64 NEON (2×4 f32 / 2×2 f64 lanes), always available on
+//!   aarch64,
+//! * [`Scalar`] — portable arrays-of-lanes fallback for every other target
+//!   and for `FFT_SUBSPACE_SIMD=0`.
+//!
+//! **The bit-identity contract.** All three backends compute *the exact
+//! same bits*, enforced by `tests/simd_bit_identity.rs`. Three rules make
+//! that possible; every lane op and every kernel written against this
+//! module must follow them:
+//!
+//! 1. **Lane ops are single IEEE-754 operations** (add, sub, mul, div,
+//!    sqrt, abs/conj sign flips, exact f32→f64 widening). All of these are
+//!    correctly rounded or exact, so a lane computes the same bits as the
+//!    equivalent scalar expression. [`Simd::mul_add`] is deliberately a
+//!    *separate* multiply then add — never an FMA, whose single rounding
+//!    would diverge from the scalar kernel.
+//! 2. **Lanes span independent elements** (distinct output columns /
+//!    array slots), so vectorizing never regroups any element's
+//!    floating-point summation order. Where a kernel does keep per-lane
+//!    partial sums (the `matmul_a_bt` dot products), the horizontal
+//!    reduction goes through [`reduce_tree8`] — shared plain-f32 code, so
+//!    the order is identical for every backend by construction.
+//! 3. **Remainder elements run the same op sequence** in plain scalar
+//!    code, which per rule 1 is bit-identical to the lane version.
+//!
+//! Because the per-element summation order is untouched, the PR-2
+//! row-partitioned thread-determinism contract survives unchanged: SIMD ×
+//! any thread count is still bit-identical to scalar × one thread.
+//!
+//! **Dispatch.** Kernels are generic `#[inline(always)]` functions
+//! (`fn foo_g<S: Simd>(…)`); the [`simd_dispatch!`] macro generates the
+//! public entry that selects a backend once per call and, on x86_64, enters
+//! through a `#[target_feature(enable = "avx2")]` shim so the whole
+//! monomorphized kernel body compiles with AVX2 codegen. Dispatch cost is
+//! one relaxed atomic load + an indirect-free match, so kernels dispatch at
+//! the call level (one dispatch per matmul block / FFT row / Adam tensor),
+//! never per element.
+//!
+//! **Adding a new lane op**: implement it in all three backends as the same
+//! single IEEE operation sequence, extend the `lane_ops_agree_with_scalar`
+//! property test below, and document any op-order subtlety at the trait
+//! method. **Adding a new kernel**: write `foo_g<S: Simd>`, keep the scalar
+//! tail identical op-for-op, wrap with `simd_dispatch!`, and add it to
+//! `tests/simd_bit_identity.rs`.
+//!
+//! **Overrides**: `FFT_SUBSPACE_SIMD=0` (or `scalar`) forces the scalar
+//! backend process-wide; [`set_backend_override`] flips backends at runtime
+//! for tests and the `bench-simd` on/off sweeps.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+use crate::fft::Complex;
+
+mod scalar;
+pub use scalar::Scalar;
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+#[cfg(target_arch = "x86_64")]
+pub use avx2::Avx2;
+
+#[cfg(target_arch = "aarch64")]
+mod neon;
+#[cfg(target_arch = "aarch64")]
+pub use neon::Neon;
+
+/// f32 lane width shared by every backend (the scalar backend models the
+/// same 8 lanes with an array, which is what makes it bit-exact).
+pub const F32_LANES: usize = 8;
+/// f64 lane width (= [`C64_LANES`] packed complex numbers).
+pub const F64_LANES: usize = 4;
+/// Complex numbers per f64 vector (interleaved re/im pairs).
+pub const C64_LANES: usize = 2;
+
+/// The f32/f64/complex lane operations the kernels are written against.
+///
+/// Methods must be implemented as **single IEEE-754 operations per lane**
+/// (or exact bit manipulations); see the module docs for the bit-identity
+/// contract. All methods are `#[inline(always)]` in every backend so the
+/// monomorphized kernels inline into their `#[target_feature]` entry shims.
+pub trait Simd: Copy + Send + Sync + 'static {
+    /// 8 f32 lanes.
+    type F32: Copy;
+    /// 4 f64 lanes, also used as 2 interleaved complex numbers.
+    type F64: Copy;
+
+    const NAME: &'static str;
+
+    // ---- f32 lanes -----------------------------------------------------
+
+    fn splat(x: f32) -> Self::F32;
+    /// Load lanes from `s[..8]` (panics if shorter).
+    fn load(s: &[f32]) -> Self::F32;
+    /// Store lanes to `s[..8]` (panics if shorter).
+    fn store(s: &mut [f32], v: Self::F32);
+    fn add(a: Self::F32, b: Self::F32) -> Self::F32;
+    fn sub(a: Self::F32, b: Self::F32) -> Self::F32;
+    fn mul(a: Self::F32, b: Self::F32) -> Self::F32;
+    fn div(a: Self::F32, b: Self::F32) -> Self::F32;
+    /// Correctly-rounded per-lane square root (`vsqrtps` / `fsqrt` — exact
+    /// per IEEE-754, so it matches `f32::sqrt` bitwise).
+    fn sqrt(a: Self::F32) -> Self::F32;
+    fn to_array(v: Self::F32) -> [f32; F32_LANES];
+
+    /// `acc + a·b` as a **separate multiply then add** — two roundings,
+    /// exactly like the scalar kernels. Never implement this with an FMA:
+    /// the fused single rounding would break the scalar↔SIMD bit identity.
+    #[inline(always)]
+    fn mul_add(acc: Self::F32, a: Self::F32, b: Self::F32) -> Self::F32 {
+        Self::add(acc, Self::mul(a, b))
+    }
+
+    // ---- f64 lanes -----------------------------------------------------
+
+    fn splat64(x: f64) -> Self::F64;
+    /// Load lanes from `s[..4]` (panics if shorter).
+    fn load64(s: &[f64]) -> Self::F64;
+    fn store64(s: &mut [f64], v: Self::F64);
+    fn add64(a: Self::F64, b: Self::F64) -> Self::F64;
+    fn sub64(a: Self::F64, b: Self::F64) -> Self::F64;
+    fn mul64(a: Self::F64, b: Self::F64) -> Self::F64;
+    /// Per-lane |x| (sign-bit clear — exact).
+    fn abs64(a: Self::F64) -> Self::F64;
+    /// Widen `s[..4]` f32s to 4 f64 lanes (exact conversion).
+    fn widen4(s: &[f32]) -> Self::F64;
+    fn to_array64(v: Self::F64) -> [f64; F64_LANES];
+
+    // ---- complex pairs (2 × interleaved re,im in an F64) ---------------
+
+    /// Load 2 complex numbers from `s[..2]`.
+    fn loadc(s: &[Complex]) -> Self::F64;
+    fn storec(s: &mut [Complex], v: Self::F64);
+    /// Duplicate one complex number into both pairs.
+    #[inline(always)]
+    fn splatc(c: Complex) -> Self::F64 {
+        Self::loadc(&[c, c])
+    }
+    /// Per-pair complex multiply with the exact op sequence of
+    /// `Complex::mul`: `re = a.re·b.re − a.im·b.im`,
+    /// `im = a.re·b.im + a.im·b.re` (two products, one sub/one add each —
+    /// no FMA, no reassociation).
+    fn cmul(a: Self::F64, b: Self::F64) -> Self::F64;
+    /// Per-pair conjugate (flip the im sign bits — exact).
+    fn conjc(v: Self::F64) -> Self::F64;
+    /// Swap the two complex pairs: `[c0, c1] → [c1, c0]` (for reversed
+    /// traversals like the Makhoul conjugate-symmetry half).
+    fn swap_pairs(v: Self::F64) -> Self::F64;
+}
+
+/// Fixed-order horizontal sum of 8 lanes: `((l0+l1)+(l2+l3)) +
+/// ((l4+l5)+(l6+l7))`. Plain f32 code shared by every backend (kernels call
+/// it on [`Simd::to_array`] output), so partial-sum reductions are
+/// bit-identical across backends by construction.
+#[inline(always)]
+pub fn reduce_tree8(a: [f32; F32_LANES]) -> f32 {
+    ((a[0] + a[1]) + (a[2] + a[3])) + ((a[4] + a[5]) + (a[6] + a[7]))
+}
+
+// ---- runtime backend selection -----------------------------------------
+
+/// Which lane implementation [`backend`] resolved to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    Scalar,
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+    #[cfg(target_arch = "aarch64")]
+    Neon,
+}
+
+impl Backend {
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Scalar => Scalar::NAME,
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 => Avx2::NAME,
+            #[cfg(target_arch = "aarch64")]
+            Backend::Neon => Neon::NAME,
+        }
+    }
+}
+
+const OVERRIDE_NONE: u8 = u8::MAX;
+const OVERRIDE_SCALAR: u8 = 0;
+#[cfg(target_arch = "x86_64")]
+const OVERRIDE_AVX2: u8 = 1;
+#[cfg(target_arch = "aarch64")]
+const OVERRIDE_NEON: u8 = 2;
+
+static OVERRIDE: AtomicU8 = AtomicU8::new(OVERRIDE_NONE);
+
+/// Best instruction set this CPU offers a backend for.
+#[allow(unreachable_code)]
+fn detect_native() -> Backend {
+    #[cfg(target_arch = "aarch64")]
+    {
+        // NEON is part of the aarch64 baseline.
+        return Backend::Neon;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return Backend::Avx2;
+        }
+    }
+    Backend::Scalar
+}
+
+/// Detected-once backend: `FFT_SUBSPACE_SIMD=0|scalar` forces scalar,
+/// otherwise the best instruction set the CPU reports.
+fn detected() -> Backend {
+    static DETECTED: OnceLock<Backend> = OnceLock::new();
+    *DETECTED.get_or_init(|| {
+        if let Ok(v) = std::env::var("FFT_SUBSPACE_SIMD") {
+            let v = v.trim().to_ascii_lowercase();
+            if v == "0" || v == "scalar" || v == "off" {
+                return Backend::Scalar;
+            }
+        }
+        detect_native()
+    })
+}
+
+/// The backend every `simd_dispatch!`-generated entry point uses for this
+/// call: the test/bench override if set, else the process-wide detection.
+#[inline]
+pub fn backend() -> Backend {
+    match OVERRIDE.load(Ordering::Relaxed) {
+        OVERRIDE_NONE => detected(),
+        #[cfg(target_arch = "x86_64")]
+        OVERRIDE_AVX2 => Backend::Avx2,
+        #[cfg(target_arch = "aarch64")]
+        OVERRIDE_NEON => Backend::Neon,
+        _ => Backend::Scalar,
+    }
+}
+
+/// Force a backend process-wide (tests and the `simd` bench sweeps;
+/// production code never calls this). `None` restores auto-detection.
+/// Panics if the requested backend is not supported by this CPU — the
+/// override can therefore never make a dispatched kernel execute illegal
+/// instructions.
+pub fn set_backend_override(b: Option<Backend>) {
+    let code = match b {
+        None => OVERRIDE_NONE,
+        Some(Backend::Scalar) => OVERRIDE_SCALAR,
+        #[cfg(target_arch = "x86_64")]
+        Some(Backend::Avx2) => {
+            assert!(
+                std::arch::is_x86_feature_detected!("avx2"),
+                "AVX2 override requested but the CPU lacks AVX2"
+            );
+            OVERRIDE_AVX2
+        }
+        #[cfg(target_arch = "aarch64")]
+        Some(Backend::Neon) => OVERRIDE_NEON,
+    };
+    OVERRIDE.store(code, Ordering::Relaxed);
+}
+
+/// Generate the runtime-dispatched entry point for a generic SIMD kernel.
+///
+/// ```ignore
+/// #[inline(always)]
+/// fn saxpy_g<S: Simd>(a: f32, x: &[f32], y: &mut [f32]) { … }
+/// crate::simd_dispatch! {
+///     /// `y += a·x`, vectorized.
+///     pub fn saxpy(a: f32, x: &[f32], y: &mut [f32]) = saxpy_g
+/// }
+/// ```
+///
+/// The generated function matches on [`backend`] once and calls the
+/// monomorphized kernel; the AVX2 arm routes through a nested
+/// `#[target_feature(enable = "avx2")]` shim so the whole kernel body —
+/// every `#[inline(always)]` lane op — compiles with AVX2 enabled. The
+/// shim call is sound because [`backend`] only ever returns `Avx2` after a
+/// positive `is_x86_feature_detected!` (enforced again by
+/// [`set_backend_override`]).
+#[macro_export]
+macro_rules! simd_dispatch {
+    ($(#[$meta:meta])* $vis:vis fn $name:ident(
+        $($arg:ident: $ty:ty),* $(,)?
+    ) $(-> $ret:ty)? = $impl_fn:ident) => {
+        $(#[$meta])*
+        $vis fn $name($($arg: $ty),*) $(-> $ret)? {
+            match $crate::simd::backend() {
+                #[cfg(target_arch = "x86_64")]
+                $crate::simd::Backend::Avx2 => {
+                    #[target_feature(enable = "avx2")]
+                    unsafe fn avx2_shim($($arg: $ty),*) $(-> $ret)? {
+                        $impl_fn::<$crate::simd::Avx2>($($arg),*)
+                    }
+                    // SAFETY: Backend::Avx2 is only returned on CPUs where
+                    // AVX2 detection succeeded (see `simd::backend`).
+                    unsafe { avx2_shim($($arg),*) }
+                }
+                #[cfg(target_arch = "aarch64")]
+                $crate::simd::Backend::Neon => {
+                    $impl_fn::<$crate::simd::Neon>($($arg),*)
+                }
+                _ => $impl_fn::<$crate::simd::Scalar>($($arg),*),
+            }
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{proptest, Pcg64};
+
+    /// Tests that touch the process-global override serialize on this lock
+    /// (the rest of the suite is override-agnostic: every backend computes
+    /// the same bits, so a concurrent flip is invisible to it).
+    static OVERRIDE_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+    /// Run `f::<S>()` for every backend this build supports and assert the
+    /// results are bit-identical to the scalar backend's.
+    fn check_all_backends<R: PartialEq + std::fmt::Debug>(f: impl Fn(Backend) -> R) {
+        let want = f(Backend::Scalar);
+        // scalar is deterministic (also keeps `want` used on targets with
+        // no vector backend)
+        assert_eq!(f(Backend::Scalar), want, "scalar not deterministic");
+        #[cfg(target_arch = "x86_64")]
+        if std::arch::is_x86_feature_detected!("avx2") {
+            assert_eq!(f(Backend::Avx2), want, "avx2 != scalar");
+        }
+        #[cfg(target_arch = "aarch64")]
+        assert_eq!(f(Backend::Neon), want, "neon != scalar");
+    }
+
+    /// The whole f32 surface as one dispatched kernel so the test exercises
+    /// the real dispatch path (shims included), not just the trait impls.
+    #[inline(always)]
+    fn f32_ops_g<S: Simd>(a: &[f32], b: &[f32], out: &mut [f32]) {
+        let (va, vb) = (S::load(a), S::load(b));
+        let mut r = S::mul_add(S::div(va, vb), va, vb); // a/b + a·b
+        r = S::sub(S::add(r, S::splat(0.5)), vb);
+        r = S::sqrt(S::mul(r, r));
+        S::store(out, r);
+        out[0] = reduce_tree8(S::to_array(r));
+    }
+    crate::simd_dispatch! {
+        fn f32_ops(a: &[f32], b: &[f32], out: &mut [f32]) = f32_ops_g
+    }
+
+    #[inline(always)]
+    fn f64_ops_g<S: Simd>(x: &[f32], y: &[f64], out: &mut [f64]) {
+        let w = S::widen4(x);
+        let v = S::load64(y);
+        let r = S::add64(S::mul64(w, w), S::abs64(S::sub64(v, S::splat64(0.25))));
+        S::store64(out, r);
+    }
+    crate::simd_dispatch! {
+        fn f64_ops(x: &[f32], y: &[f64], out: &mut [f64]) = f64_ops_g
+    }
+
+    #[inline(always)]
+    fn complex_ops_g<S: Simd>(a: &[Complex], b: &[Complex], out: &mut [Complex]) {
+        let (va, vb) = (S::loadc(a), S::loadc(b));
+        let m = S::cmul(va, vb);
+        let r = S::add64(S::conjc(m), S::swap_pairs(S::cmul(vb, S::splatc(a[1]))));
+        S::storec(out, r);
+    }
+    crate::simd_dispatch! {
+        fn complex_ops(a: &[Complex], b: &[Complex], out: &mut [Complex]) = complex_ops_g
+    }
+
+    #[test]
+    fn lane_ops_agree_with_scalar() {
+        let _guard = OVERRIDE_LOCK.lock().unwrap();
+        proptest::check("simd-lane-ops", 32, |rng| {
+            let a: Vec<f32> = (0..8).map(|_| rng.normal_f32()).collect();
+            let b: Vec<f32> = (0..8).map(|_| rng.normal_f32() + 2.5).collect();
+            let y: Vec<f64> = (0..4).map(|_| rng.normal()).collect();
+            let ca: Vec<Complex> =
+                (0..2).map(|_| Complex::new(rng.normal(), rng.normal())).collect();
+            let cb: Vec<Complex> =
+                (0..2).map(|_| Complex::new(rng.normal(), rng.normal())).collect();
+            check_all_backends(|be| {
+                set_backend_override(Some(be));
+                let mut o32 = vec![0.0f32; 8];
+                f32_ops(&a, &b, &mut o32);
+                let mut o64 = vec![0.0f64; 4];
+                f64_ops(&a, &y, &mut o64);
+                let mut oc = vec![Complex::ZERO; 2];
+                complex_ops(&ca, &cb, &mut oc);
+                set_backend_override(None);
+                (
+                    o32.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    o64.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    oc.iter()
+                        .map(|c| (c.re.to_bits(), c.im.to_bits()))
+                        .collect::<Vec<_>>(),
+                )
+            });
+        });
+    }
+
+    #[test]
+    fn cmul_matches_complex_mul_exactly() {
+        let mut rng = Pcg64::seed(5);
+        for _ in 0..200 {
+            let a = [
+                Complex::new(rng.normal(), rng.normal()),
+                Complex::new(rng.normal(), rng.normal()),
+            ];
+            let b = [
+                Complex::new(rng.normal(), rng.normal()),
+                Complex::new(rng.normal(), rng.normal()),
+            ];
+            // the scalar backend *defines* the contract as Complex::mul
+            let got = Scalar::to_array64(Scalar::cmul(Scalar::loadc(&a), Scalar::loadc(&b)));
+            for p in 0..2 {
+                let want = a[p].mul(b[p]);
+                assert_eq!(got[2 * p].to_bits(), want.re.to_bits());
+                assert_eq!(got[2 * p + 1].to_bits(), want.im.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_tree8_is_fixed_order() {
+        let a = [1e8f32, -1e8, 3.5, 0.25, -7.125, 2.0, 1e-3, -1e-3];
+        // hand-evaluate the documented tree
+        let want = ((a[0] + a[1]) + (a[2] + a[3])) + ((a[4] + a[5]) + (a[6] + a[7]));
+        assert_eq!(reduce_tree8(a).to_bits(), want.to_bits());
+    }
+
+    #[test]
+    fn override_roundtrip_and_names() {
+        let _guard = OVERRIDE_LOCK.lock().unwrap();
+        let auto = backend();
+        set_backend_override(Some(Backend::Scalar));
+        assert_eq!(backend(), Backend::Scalar);
+        assert_eq!(backend().name(), "scalar");
+        set_backend_override(None);
+        assert_eq!(backend(), auto);
+    }
+}

@@ -1,0 +1,202 @@
+//! aarch64 NEON backend: paired 128-bit vectors model the shared 8×f32 /
+//! 4×f64 lane shape (`[float32x4_t; 2]` / `[float64x2_t; 2]`).
+//!
+//! NEON is part of the aarch64 baseline, so no runtime detection is needed
+//! — only the `FFT_SUBSPACE_SIMD=0` escape hatch applies. Per-lane op
+//! sequences mirror the scalar backend exactly: separate `fmul`+`fadd`
+//! (never `fmla`), correctly-rounded `fsqrt`/`fdiv`, sign-bit XOR for
+//! conj, and a `dup`/`ext`/`fsub`+`fadd` lane blend for [`Simd::cmul`] —
+//! a **true subtraction** on the re lane, not `t1 + (−t2)`, because the
+//! two differ bitwise when `t2` is NaN (sign/payload propagation) and the
+//! bit-identity contract has no finite-input carve-out.
+
+use std::arch::aarch64::*;
+
+use crate::fft::Complex;
+
+use super::{Simd, F32_LANES, F64_LANES};
+
+/// NEON lanes; see module docs.
+#[derive(Clone, Copy)]
+pub struct Neon;
+
+/// Sign mask flipping lane 1 only (im component) — for `conjc` (IEEE
+/// negate is a pure sign-bit flip for every value, NaN included, so XOR is
+/// bit-identical to the scalar `-im`).
+#[inline(always)]
+unsafe fn negate_lane1(v: float64x2_t) -> float64x2_t {
+    let mask: uint64x2_t = vsetq_lane_u64(0x8000_0000_0000_0000, vdupq_n_u64(0), 1);
+    vreinterpretq_f64_u64(veorq_u64(vreinterpretq_u64_f64(v), mask))
+}
+
+/// One complex product `a·b` on a single (re, im) vector — the exact op
+/// sequence of `Complex::mul` (see `Simd::cmul`).
+#[inline(always)]
+unsafe fn cmul_one(a: float64x2_t, b: float64x2_t) -> float64x2_t {
+    let ar = vdupq_laneq_f64(a, 0); // [a.re, a.re]
+    let ai = vdupq_laneq_f64(a, 1); // [a.im, a.im]
+    let bs = vextq_f64(b, b, 1); //    [b.im, b.re]
+    let t1 = vmulq_f64(ar, b); //  [re·re, re·im]
+    let t2 = vmulq_f64(ai, bs); // [im·im, im·re]
+    // True per-lane fsub on the re lane / fadd on the im lane, blended.
+    // (Not `t1 + (−t2)`: that diverges from the scalar `t1 − t2` bitwise
+    // when t2 is NaN — sign/payload propagation.)
+    let d = vsubq_f64(t1, t2); // re lane correct
+    let s = vaddq_f64(t1, t2); // im lane correct
+    vsetq_lane_f64(vgetq_lane_f64(s, 1), d, 1)
+}
+
+impl Simd for Neon {
+    type F32 = [float32x4_t; 2];
+    type F64 = [float64x2_t; 2];
+
+    const NAME: &'static str = "neon";
+
+    // ---- f32 -----------------------------------------------------------
+
+    #[inline(always)]
+    fn splat(x: f32) -> Self::F32 {
+        unsafe { [vdupq_n_f32(x), vdupq_n_f32(x)] }
+    }
+
+    #[inline(always)]
+    fn load(s: &[f32]) -> Self::F32 {
+        let s = &s[..F32_LANES]; // bounds check once, then raw loads
+        unsafe { [vld1q_f32(s.as_ptr()), vld1q_f32(s.as_ptr().add(4))] }
+    }
+
+    #[inline(always)]
+    fn store(s: &mut [f32], v: Self::F32) {
+        let s = &mut s[..F32_LANES];
+        unsafe {
+            vst1q_f32(s.as_mut_ptr(), v[0]);
+            vst1q_f32(s.as_mut_ptr().add(4), v[1]);
+        }
+    }
+
+    #[inline(always)]
+    fn add(a: Self::F32, b: Self::F32) -> Self::F32 {
+        unsafe { [vaddq_f32(a[0], b[0]), vaddq_f32(a[1], b[1])] }
+    }
+
+    #[inline(always)]
+    fn sub(a: Self::F32, b: Self::F32) -> Self::F32 {
+        unsafe { [vsubq_f32(a[0], b[0]), vsubq_f32(a[1], b[1])] }
+    }
+
+    #[inline(always)]
+    fn mul(a: Self::F32, b: Self::F32) -> Self::F32 {
+        unsafe { [vmulq_f32(a[0], b[0]), vmulq_f32(a[1], b[1])] }
+    }
+
+    #[inline(always)]
+    fn div(a: Self::F32, b: Self::F32) -> Self::F32 {
+        unsafe { [vdivq_f32(a[0], b[0]), vdivq_f32(a[1], b[1])] }
+    }
+
+    #[inline(always)]
+    fn sqrt(a: Self::F32) -> Self::F32 {
+        unsafe { [vsqrtq_f32(a[0]), vsqrtq_f32(a[1])] }
+    }
+
+    #[inline(always)]
+    fn to_array(v: Self::F32) -> [f32; F32_LANES] {
+        let mut out = [0.0f32; F32_LANES];
+        Self::store(&mut out, v);
+        out
+    }
+
+    // ---- f64 -----------------------------------------------------------
+
+    #[inline(always)]
+    fn splat64(x: f64) -> Self::F64 {
+        unsafe { [vdupq_n_f64(x), vdupq_n_f64(x)] }
+    }
+
+    #[inline(always)]
+    fn load64(s: &[f64]) -> Self::F64 {
+        let s = &s[..F64_LANES];
+        unsafe { [vld1q_f64(s.as_ptr()), vld1q_f64(s.as_ptr().add(2))] }
+    }
+
+    #[inline(always)]
+    fn store64(s: &mut [f64], v: Self::F64) {
+        let s = &mut s[..F64_LANES];
+        unsafe {
+            vst1q_f64(s.as_mut_ptr(), v[0]);
+            vst1q_f64(s.as_mut_ptr().add(2), v[1]);
+        }
+    }
+
+    #[inline(always)]
+    fn add64(a: Self::F64, b: Self::F64) -> Self::F64 {
+        unsafe { [vaddq_f64(a[0], b[0]), vaddq_f64(a[1], b[1])] }
+    }
+
+    #[inline(always)]
+    fn sub64(a: Self::F64, b: Self::F64) -> Self::F64 {
+        unsafe { [vsubq_f64(a[0], b[0]), vsubq_f64(a[1], b[1])] }
+    }
+
+    #[inline(always)]
+    fn mul64(a: Self::F64, b: Self::F64) -> Self::F64 {
+        unsafe { [vmulq_f64(a[0], b[0]), vmulq_f64(a[1], b[1])] }
+    }
+
+    #[inline(always)]
+    fn abs64(a: Self::F64) -> Self::F64 {
+        unsafe { [vabsq_f64(a[0]), vabsq_f64(a[1])] }
+    }
+
+    #[inline(always)]
+    fn widen4(s: &[f32]) -> Self::F64 {
+        let s = &s[..F64_LANES];
+        unsafe {
+            let v = vld1q_f32(s.as_ptr());
+            // fcvtl/fcvtl2 — exact f32→f64 conversion
+            [vcvt_f64_f32(vget_low_f32(v)), vcvt_high_f64_f32(v)]
+        }
+    }
+
+    #[inline(always)]
+    fn to_array64(v: Self::F64) -> [f64; F64_LANES] {
+        let mut out = [0.0f64; F64_LANES];
+        Self::store64(&mut out, v);
+        out
+    }
+
+    // ---- complex pairs -------------------------------------------------
+
+    #[inline(always)]
+    fn loadc(s: &[Complex]) -> Self::F64 {
+        let s = &s[..2];
+        // Complex is #[repr(C)] { re: f64, im: f64 }
+        let p = s.as_ptr() as *const f64;
+        unsafe { [vld1q_f64(p), vld1q_f64(p.add(2))] }
+    }
+
+    #[inline(always)]
+    fn storec(s: &mut [Complex], v: Self::F64) {
+        let s = &mut s[..2];
+        let p = s.as_mut_ptr() as *mut f64;
+        unsafe {
+            vst1q_f64(p, v[0]);
+            vst1q_f64(p.add(2), v[1]);
+        }
+    }
+
+    #[inline(always)]
+    fn cmul(a: Self::F64, b: Self::F64) -> Self::F64 {
+        unsafe { [cmul_one(a[0], b[0]), cmul_one(a[1], b[1])] }
+    }
+
+    #[inline(always)]
+    fn conjc(v: Self::F64) -> Self::F64 {
+        unsafe { [negate_lane1(v[0]), negate_lane1(v[1])] }
+    }
+
+    #[inline(always)]
+    fn swap_pairs(v: Self::F64) -> Self::F64 {
+        [v[1], v[0]]
+    }
+}

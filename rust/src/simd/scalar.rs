@@ -1,0 +1,189 @@
+//! Portable scalar backend: 8/4 lanes modeled as plain arrays.
+//!
+//! This is the **reference semantics** for the whole [`Simd`](super::Simd)
+//! trait — every per-lane expression here is the exact IEEE-754 op sequence
+//! the other backends must reproduce, and it is what runs under
+//! `FFT_SUBSPACE_SIMD=0` or on targets without a vector backend. The
+//! per-lane loops are simple enough that LLVM usually autovectorizes them
+//! anyway; the explicit backends exist so the hot kernels don't depend on
+//! the autovectorizer's mood.
+
+use crate::fft::Complex;
+
+use super::{Simd, F32_LANES, F64_LANES};
+
+/// Arrays-of-lanes fallback; see module docs.
+#[derive(Clone, Copy)]
+pub struct Scalar;
+
+#[inline(always)]
+fn map2_32(
+    a: [f32; F32_LANES],
+    b: [f32; F32_LANES],
+    f: impl Fn(f32, f32) -> f32,
+) -> [f32; F32_LANES] {
+    let mut out = [0.0f32; F32_LANES];
+    for l in 0..F32_LANES {
+        out[l] = f(a[l], b[l]);
+    }
+    out
+}
+
+#[inline(always)]
+fn map2_64(
+    a: [f64; F64_LANES],
+    b: [f64; F64_LANES],
+    f: impl Fn(f64, f64) -> f64,
+) -> [f64; F64_LANES] {
+    let mut out = [0.0f64; F64_LANES];
+    for l in 0..F64_LANES {
+        out[l] = f(a[l], b[l]);
+    }
+    out
+}
+
+impl Simd for Scalar {
+    type F32 = [f32; F32_LANES];
+    type F64 = [f64; F64_LANES];
+
+    const NAME: &'static str = "scalar";
+
+    // ---- f32 -----------------------------------------------------------
+
+    #[inline(always)]
+    fn splat(x: f32) -> Self::F32 {
+        [x; F32_LANES]
+    }
+
+    #[inline(always)]
+    fn load(s: &[f32]) -> Self::F32 {
+        s[..F32_LANES].try_into().unwrap()
+    }
+
+    #[inline(always)]
+    fn store(s: &mut [f32], v: Self::F32) {
+        s[..F32_LANES].copy_from_slice(&v);
+    }
+
+    #[inline(always)]
+    fn add(a: Self::F32, b: Self::F32) -> Self::F32 {
+        map2_32(a, b, |x, y| x + y)
+    }
+
+    #[inline(always)]
+    fn sub(a: Self::F32, b: Self::F32) -> Self::F32 {
+        map2_32(a, b, |x, y| x - y)
+    }
+
+    #[inline(always)]
+    fn mul(a: Self::F32, b: Self::F32) -> Self::F32 {
+        map2_32(a, b, |x, y| x * y)
+    }
+
+    #[inline(always)]
+    fn div(a: Self::F32, b: Self::F32) -> Self::F32 {
+        map2_32(a, b, |x, y| x / y)
+    }
+
+    #[inline(always)]
+    fn sqrt(a: Self::F32) -> Self::F32 {
+        let mut out = a;
+        for v in &mut out {
+            *v = v.sqrt();
+        }
+        out
+    }
+
+    #[inline(always)]
+    fn to_array(v: Self::F32) -> [f32; F32_LANES] {
+        v
+    }
+
+    // ---- f64 -----------------------------------------------------------
+
+    #[inline(always)]
+    fn splat64(x: f64) -> Self::F64 {
+        [x; F64_LANES]
+    }
+
+    #[inline(always)]
+    fn load64(s: &[f64]) -> Self::F64 {
+        s[..F64_LANES].try_into().unwrap()
+    }
+
+    #[inline(always)]
+    fn store64(s: &mut [f64], v: Self::F64) {
+        s[..F64_LANES].copy_from_slice(&v);
+    }
+
+    #[inline(always)]
+    fn add64(a: Self::F64, b: Self::F64) -> Self::F64 {
+        map2_64(a, b, |x, y| x + y)
+    }
+
+    #[inline(always)]
+    fn sub64(a: Self::F64, b: Self::F64) -> Self::F64 {
+        map2_64(a, b, |x, y| x - y)
+    }
+
+    #[inline(always)]
+    fn mul64(a: Self::F64, b: Self::F64) -> Self::F64 {
+        map2_64(a, b, |x, y| x * y)
+    }
+
+    #[inline(always)]
+    fn abs64(a: Self::F64) -> Self::F64 {
+        let mut out = a;
+        for v in &mut out {
+            *v = v.abs();
+        }
+        out
+    }
+
+    #[inline(always)]
+    fn widen4(s: &[f32]) -> Self::F64 {
+        let s: [f32; F64_LANES] = s[..F64_LANES].try_into().unwrap();
+        [s[0] as f64, s[1] as f64, s[2] as f64, s[3] as f64]
+    }
+
+    #[inline(always)]
+    fn to_array64(v: Self::F64) -> [f64; F64_LANES] {
+        v
+    }
+
+    // ---- complex pairs -------------------------------------------------
+
+    #[inline(always)]
+    fn loadc(s: &[Complex]) -> Self::F64 {
+        let s = &s[..2];
+        [s[0].re, s[0].im, s[1].re, s[1].im]
+    }
+
+    #[inline(always)]
+    fn storec(s: &mut [Complex], v: Self::F64) {
+        let s = &mut s[..2];
+        s[0] = Complex::new(v[0], v[1]);
+        s[1] = Complex::new(v[2], v[3]);
+    }
+
+    #[inline(always)]
+    fn cmul(a: Self::F64, b: Self::F64) -> Self::F64 {
+        // Exactly Complex::mul per pair: two products, one sub / one add.
+        [
+            a[0] * b[0] - a[1] * b[1],
+            a[0] * b[1] + a[1] * b[0],
+            a[2] * b[2] - a[3] * b[3],
+            a[2] * b[3] + a[3] * b[2],
+        ]
+    }
+
+    #[inline(always)]
+    fn conjc(v: Self::F64) -> Self::F64 {
+        [v[0], -v[1], v[2], -v[3]]
+    }
+
+    #[inline(always)]
+    fn swap_pairs(v: Self::F64) -> Self::F64 {
+        [v[2], v[3], v[0], v[1]]
+    }
+}

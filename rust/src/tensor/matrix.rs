@@ -1,5 +1,10 @@
 //! Row-major f32 matrix with the small op surface the optimizers need.
+//! The column-norm accumulators run through the [`crate::simd`] lane layer
+//! (lanes span distinct columns, so each column's ascending-row f64
+//! accumulation order is untouched and every backend returns the same
+//! bits).
 
+use crate::simd::{Simd, F64_LANES};
 use crate::util::Pcg64;
 
 /// Dense row-major matrix. `data.len() == rows * cols`.
@@ -242,26 +247,14 @@ impl Matrix {
     /// rows, one f64 add per element).
     pub fn col_sq_sums_into(&self, acc: &mut [f64]) {
         assert_eq!(acc.len(), self.cols, "col_sq_sums_into length mismatch");
-        acc.fill(0.0);
-        for i in 0..self.rows {
-            let row = self.row(i);
-            for (a, &v) in acc.iter_mut().zip(row) {
-                *a += (v as f64) * (v as f64);
-            }
-        }
+        col_sq_sums_kernel(&self.data, self.rows, self.cols, acc);
     }
 
     /// Per-column absolute sums (ℓ1), f64-accumulated into `acc`
     /// (overwritten). Shared like [`Matrix::col_sq_sums_into`].
     pub fn col_abs_sums_into(&self, acc: &mut [f64]) {
         assert_eq!(acc.len(), self.cols, "col_abs_sums_into length mismatch");
-        acc.fill(0.0);
-        for i in 0..self.rows {
-            let row = self.row(i);
-            for (a, &v) in acc.iter_mut().zip(row) {
-                *a += v.abs() as f64;
-            }
-        }
+        col_abs_sums_kernel(&self.data, self.rows, self.cols, acc);
     }
 
     /// Per-column ℓ2 norms.
@@ -291,6 +284,64 @@ impl Matrix {
     pub fn bytes(&self) -> u64 {
         (self.data.len() * std::mem::size_of::<f32>()) as u64
     }
+}
+
+/// Shared column-accumulation kernel behind [`Matrix::col_sq_sums_into`]:
+/// one row-major pass (the matrix is streamed once, like the scalar
+/// original — the f64 accumulator row is small enough to stay L1-resident)
+/// with 4-column lane groups: one exact f32→f64 widen + one multiply + one
+/// add per element, ascending rows — the exact scalar order, so every
+/// backend returns the same bits as the pre-SIMD kernel.
+#[inline(always)]
+fn col_sq_sums_g<S: Simd>(data: &[f32], rows: usize, cols: usize, acc: &mut [f64]) {
+    acc.fill(0.0);
+    for i in 0..rows {
+        let row = &data[i * cols..(i + 1) * cols];
+        let mut j = 0;
+        while j + F64_LANES <= cols {
+            let w = S::widen4(&row[j..]);
+            let a = S::add64(S::load64(&acc[j..]), S::mul64(w, w));
+            S::store64(&mut acc[j..], a);
+            j += F64_LANES;
+        }
+        while j < cols {
+            let v = row[j] as f64;
+            acc[j] += v * v;
+            j += 1;
+        }
+    }
+}
+
+crate::simd_dispatch! {
+    fn col_sq_sums_kernel(data: &[f32], rows: usize, cols: usize, acc: &mut [f64])
+        = col_sq_sums_g
+}
+
+/// ℓ1 twin of [`col_sq_sums_g`] (`|v|` is a sign-bit clear after the exact
+/// widen, so it commutes with the conversion and matches the historical
+/// `v.abs() as f64` bits).
+#[inline(always)]
+fn col_abs_sums_g<S: Simd>(data: &[f32], rows: usize, cols: usize, acc: &mut [f64]) {
+    acc.fill(0.0);
+    for i in 0..rows {
+        let row = &data[i * cols..(i + 1) * cols];
+        let mut j = 0;
+        while j + F64_LANES <= cols {
+            let w = S::widen4(&row[j..]);
+            let a = S::add64(S::load64(&acc[j..]), S::abs64(w));
+            S::store64(&mut acc[j..], a);
+            j += F64_LANES;
+        }
+        while j < cols {
+            acc[j] += (row[j] as f64).abs();
+            j += 1;
+        }
+    }
+}
+
+crate::simd_dispatch! {
+    fn col_abs_sums_kernel(data: &[f32], rows: usize, cols: usize, acc: &mut [f64])
+        = col_abs_sums_g
 }
 
 #[cfg(test)]

@@ -9,17 +9,23 @@
 //! * [`matmul_a_bt`] / [`matmul_a_bt_into`] — `C = A·Bᵀ` (back-projection)
 //!
 //! The i-k-j kernel is register-tiled: four output rows (resp. four `k`
-//! panels / four dot-product accumulators) advance together, so every
-//! loaded `B` element feeds four fused multiply-adds instead of one, and
-//! the inner loops are branch-free unit-stride FMA streams that
-//! autovectorize. The old `aik == 0.0` skip is gone — it broke
-//! vectorization for a case (exact zeros mid-gradient) that essentially
-//! never occurs in training. The allocating wrappers delegate to the
-//! `_into` kernels, so the two are bit-identical by construction. Note
-//! `matmul_at_b_into`'s 4-wide `k` panel sums four contributions per
-//! expression, which regroups floating-point rounding relative to the
-//! pre-tiling kernel — same-run consistency is exact, cross-version
-//! reproducibility is to ULP level only.
+//! panels / four dot-product accumulators) advance together, and the inner
+//! `j` loops are **explicitly vectorized** through the [`crate::simd`]
+//! lane layer — runtime-dispatched AVX2/NEON with a bit-exact scalar
+//! fallback (`FFT_SUBSPACE_SIMD=0`). Lanes span distinct output columns
+//! and every lane op is a separate IEEE multiply/add (no FMA contraction),
+//! so each element's ascending-`k` summation order — and with it the PR-2
+//! thread-count bit-identity contract — is untouched; the `matmul_a_bt`
+//! dot products keep 8 per-lane partial sums folded by the shared
+//! fixed-order tree reduction (`simd::reduce_tree8`), making their order a
+//! function of the inner dimension alone. The old `aik == 0.0` skip is
+//! gone — it broke vectorization for a case (exact zeros mid-gradient)
+//! that essentially never occurs in training. The allocating wrappers
+//! delegate to the `_into` kernels, so the two are bit-identical by
+//! construction. Note the 4-wide `k` panels and the tree reduction regroup
+//! floating-point rounding relative to the pre-tiling kernels —
+//! same-run/same-version consistency is exact (any backend, any thread
+//! count), cross-version reproducibility is to ULP level only.
 //!
 //! **Parallelism.** Every kernel body runs over an output-*row* range
 //! (`mm_block` / `mm_at_b_block` / `mm_a_bt_block`); the `_into` entry
@@ -31,6 +37,7 @@
 //! `tests/parallel_determinism.rs`.
 
 use crate::parallel::{par_row_slabs, ThreadPool};
+use crate::simd::{reduce_tree8, Simd, F32_LANES};
 
 use super::Matrix;
 
@@ -50,8 +57,11 @@ pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
 /// The i-k-j kernel over output rows `i0..i1`; `c_rows` is C's row slab
 /// `[i0·n, i1·n)` and must be zeroed (the kernel accumulates). Per-element
 /// summation order is ascending `k` within `BLOCK_K` panels regardless of
-/// `i0`, which is what makes row partitioning bit-exact.
-fn mm_block(a: &Matrix, b: &Matrix, c_rows: &mut [f32], i0: usize, i1: usize) {
+/// `i0`, which is what makes row partitioning bit-exact. SIMD lanes span
+/// distinct output columns (`j`), so vectorization never touches that
+/// order — every backend produces the same bits (see `crate::simd`).
+#[inline(always)]
+fn mm_block_g<S: Simd>(a: &Matrix, b: &Matrix, c_rows: &mut [f32], i0: usize, i1: usize) {
     let n = b.cols;
     let kdim = a.cols;
     debug_assert_eq!(c_rows.len(), (i1 - i0) * n);
@@ -74,12 +84,28 @@ fn mm_block(a: &Matrix, b: &Matrix, c_rows: &mut [f32], i0: usize, i1: usize) {
                 for k in kb..k_end {
                     let b_row = &b.data[k * n..k * n + n];
                     let (x0, x1, x2, x3) = (a0[k], a1[k], a2[k], a3[k]);
-                    for j in 0..n {
+                    let (v0, v1, v2, v3) =
+                        (S::splat(x0), S::splat(x1), S::splat(x2), S::splat(x3));
+                    let mut j = 0;
+                    while j + F32_LANES <= n {
+                        let bv = S::load(&b_row[j..]);
+                        let t0 = S::mul_add(S::load(&c0[j..]), v0, bv);
+                        S::store(&mut c0[j..], t0);
+                        let t1 = S::mul_add(S::load(&c1[j..]), v1, bv);
+                        S::store(&mut c1[j..], t1);
+                        let t2 = S::mul_add(S::load(&c2[j..]), v2, bv);
+                        S::store(&mut c2[j..], t2);
+                        let t3 = S::mul_add(S::load(&c3[j..]), v3, bv);
+                        S::store(&mut c3[j..], t3);
+                        j += F32_LANES;
+                    }
+                    while j < n {
                         let bv = b_row[j];
                         c0[j] += x0 * bv;
                         c1[j] += x1 * bv;
                         c2[j] += x2 * bv;
                         c3[j] += x3 * bv;
+                        j += 1;
                     }
                 }
                 i += MR;
@@ -92,14 +118,27 @@ fn mm_block(a: &Matrix, b: &Matrix, c_rows: &mut [f32], i0: usize, i1: usize) {
                 for k in kb..k_end {
                     let aik = a_row[k];
                     let b_row = &b.data[k * n..k * n + n];
-                    for (cv, bv) in c_row.iter_mut().zip(b_row) {
-                        *cv += aik * bv;
+                    let va = S::splat(aik);
+                    let mut j = 0;
+                    while j + F32_LANES <= n {
+                        let bv = S::load(&b_row[j..]);
+                        let t = S::mul_add(S::load(&c_row[j..]), va, bv);
+                        S::store(&mut c_row[j..], t);
+                        j += F32_LANES;
+                    }
+                    while j < n {
+                        c_row[j] += aik * b_row[j];
+                        j += 1;
                     }
                 }
                 i += 1;
             }
         }
     }
+}
+
+crate::simd_dispatch! {
+    fn mm_block(a: &Matrix, b: &Matrix, c_rows: &mut [f32], i0: usize, i1: usize) = mm_block_g
 }
 
 /// Allocation-free [`matmul`]: resizes `c` in place and overwrites it.
@@ -135,8 +174,11 @@ pub fn matmul_at_b(a: &Matrix, b: &Matrix) -> Matrix {
 /// The k-outer rank-1-update kernel over output rows `m0..m1` (columns of
 /// A); `c_rows` must be zeroed. Four `k` panels advance together so each C
 /// row is loaded/stored once per four rank-1 updates; per-element order is
-/// ascending `k` for every output row, independent of `m0`.
-fn mm_at_b_block(a: &Matrix, b: &Matrix, c_rows: &mut [f32], m0: usize, m1: usize) {
+/// ascending `k` for every output row, independent of `m0`. SIMD lanes
+/// span distinct output columns; the four panel contributions keep their
+/// scalar left-to-right association (`((x0·b0 + x1·b1) + x2·b2) + x3·b3`).
+#[inline(always)]
+fn mm_at_b_block_g<S: Simd>(a: &Matrix, b: &Matrix, c_rows: &mut [f32], m0: usize, m1: usize) {
     let (kdim, n) = (a.rows, b.cols);
     debug_assert_eq!(c_rows.len(), (m1 - m0) * n);
     let mut k = 0;
@@ -151,10 +193,22 @@ fn mm_at_b_block(a: &Matrix, b: &Matrix, c_rows: &mut [f32], m0: usize, m1: usiz
         let b3 = &b.data[(k + 3) * n..(k + 3) * n + n];
         for i in m0..m1 {
             let (x0, x1, x2, x3) = (a0[i], a1[i], a2[i], a3[i]);
+            let (v0, v1, v2, v3) = (S::splat(x0), S::splat(x1), S::splat(x2), S::splat(x3));
             let base = (i - m0) * n;
             let c_row = &mut c_rows[base..base + n];
-            for j in 0..n {
+            let mut j = 0;
+            while j + F32_LANES <= n {
+                let mut t = S::mul(v0, S::load(&b0[j..]));
+                t = S::mul_add(t, v1, S::load(&b1[j..]));
+                t = S::mul_add(t, v2, S::load(&b2[j..]));
+                t = S::mul_add(t, v3, S::load(&b3[j..]));
+                let c = S::add(S::load(&c_row[j..]), t);
+                S::store(&mut c_row[j..], c);
+                j += F32_LANES;
+            }
+            while j < n {
                 c_row[j] += x0 * b0[j] + x1 * b1[j] + x2 * b2[j] + x3 * b3[j];
+                j += 1;
             }
         }
         k += MR;
@@ -164,14 +218,28 @@ fn mm_at_b_block(a: &Matrix, b: &Matrix, c_rows: &mut [f32], m0: usize, m1: usiz
         let b_row = &b.data[k * n..k * n + n];
         for i in m0..m1 {
             let aki = a_row[i];
+            let va = S::splat(aki);
             let base = (i - m0) * n;
             let c_row = &mut c_rows[base..base + n];
-            for (cv, bv) in c_row.iter_mut().zip(b_row) {
-                *cv += aki * bv;
+            let mut j = 0;
+            while j + F32_LANES <= n {
+                let bv = S::load(&b_row[j..]);
+                let t = S::mul_add(S::load(&c_row[j..]), va, bv);
+                S::store(&mut c_row[j..], t);
+                j += F32_LANES;
+            }
+            while j < n {
+                c_row[j] += aki * b_row[j];
+                j += 1;
             }
         }
         k += 1;
     }
+}
+
+crate::simd_dispatch! {
+    fn mm_at_b_block(a: &Matrix, b: &Matrix, c_rows: &mut [f32], m0: usize, m1: usize)
+        = mm_at_b_block_g
 }
 
 /// Allocation-free [`matmul_at_b`].
@@ -204,10 +272,35 @@ pub fn matmul_a_bt(a: &Matrix, b: &Matrix) -> Matrix {
     c
 }
 
+/// One dot product `a_row · b_row` with the kernel's canonical summation
+/// order: 8 per-lane partial sums over the `F32_LANES`-aligned prefix, the
+/// shared fixed tree reduction ([`reduce_tree8`]), then the tail elements
+/// in ascending order. The order depends only on `kdim`, never on the
+/// output position or thread count, so row partitioning stays bit-exact.
+#[inline(always)]
+fn dot_g<S: Simd>(a_row: &[f32], b_row: &[f32], kdim: usize) -> f32 {
+    let mut acc = S::splat(0.0);
+    let mut kk = 0;
+    while kk + F32_LANES <= kdim {
+        acc = S::mul_add(acc, S::load(&a_row[kk..]), S::load(&b_row[kk..]));
+        kk += F32_LANES;
+    }
+    let mut s = reduce_tree8(S::to_array(acc));
+    while kk < kdim {
+        s += a_row[kk] * b_row[kk];
+        kk += 1;
+    }
+    s
+}
+
 /// The dot-product kernel over output rows `i0..i1`; assign-style (`c_rows`
 /// may be dirty — every element is written). Four dot products (four B
-/// rows) run against each A row at once.
-fn mm_a_bt_block(a: &Matrix, b: &Matrix, c_rows: &mut [f32], i0: usize, i1: usize) {
+/// rows) run against each A row at once, each accumulating `F32_LANES`
+/// per-lane partial sums folded by the shared fixed-order tree reduction —
+/// identical bits for every backend, and per-element order is a function
+/// of `kdim` alone (see [`dot_g`]).
+#[inline(always)]
+fn mm_a_bt_block_g<S: Simd>(a: &Matrix, b: &Matrix, c_rows: &mut [f32], i0: usize, i1: usize) {
     let (kdim, n) = (a.cols, b.rows);
     debug_assert_eq!(c_rows.len(), (i1 - i0) * n);
     for i in i0..i1 {
@@ -220,59 +313,45 @@ fn mm_a_bt_block(a: &Matrix, b: &Matrix, c_rows: &mut [f32], i0: usize, i1: usiz
             let b1 = b.row(j + 1);
             let b2 = b.row(j + 2);
             let b3 = b.row(j + 3);
-            let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            let (mut s0, mut s1, mut s2, mut s3) =
+                (S::splat(0.0), S::splat(0.0), S::splat(0.0), S::splat(0.0));
             let mut kk = 0;
-            while kk + 4 <= kdim {
-                s0 += a_row[kk] * b0[kk]
-                    + a_row[kk + 1] * b0[kk + 1]
-                    + a_row[kk + 2] * b0[kk + 2]
-                    + a_row[kk + 3] * b0[kk + 3];
-                s1 += a_row[kk] * b1[kk]
-                    + a_row[kk + 1] * b1[kk + 1]
-                    + a_row[kk + 2] * b1[kk + 2]
-                    + a_row[kk + 3] * b1[kk + 3];
-                s2 += a_row[kk] * b2[kk]
-                    + a_row[kk + 1] * b2[kk + 1]
-                    + a_row[kk + 2] * b2[kk + 2]
-                    + a_row[kk + 3] * b2[kk + 3];
-                s3 += a_row[kk] * b3[kk]
-                    + a_row[kk + 1] * b3[kk + 1]
-                    + a_row[kk + 2] * b3[kk + 2]
-                    + a_row[kk + 3] * b3[kk + 3];
-                kk += 4;
+            while kk + F32_LANES <= kdim {
+                let av = S::load(&a_row[kk..]);
+                s0 = S::mul_add(s0, av, S::load(&b0[kk..]));
+                s1 = S::mul_add(s1, av, S::load(&b1[kk..]));
+                s2 = S::mul_add(s2, av, S::load(&b2[kk..]));
+                s3 = S::mul_add(s3, av, S::load(&b3[kk..]));
+                kk += F32_LANES;
             }
+            let mut t0 = reduce_tree8(S::to_array(s0));
+            let mut t1 = reduce_tree8(S::to_array(s1));
+            let mut t2 = reduce_tree8(S::to_array(s2));
+            let mut t3 = reduce_tree8(S::to_array(s3));
             while kk < kdim {
-                s0 += a_row[kk] * b0[kk];
-                s1 += a_row[kk] * b1[kk];
-                s2 += a_row[kk] * b2[kk];
-                s3 += a_row[kk] * b3[kk];
+                let av = a_row[kk];
+                t0 += av * b0[kk];
+                t1 += av * b1[kk];
+                t2 += av * b2[kk];
+                t3 += av * b3[kk];
                 kk += 1;
             }
-            c_row[j] = s0;
-            c_row[j + 1] = s1;
-            c_row[j + 2] = s2;
-            c_row[j + 3] = s3;
+            c_row[j] = t0;
+            c_row[j + 1] = t1;
+            c_row[j + 2] = t2;
+            c_row[j + 3] = t3;
             j += MR;
         }
         while j < n {
-            let b_row = b.row(j);
-            let mut acc = 0.0f32;
-            let mut kk = 0;
-            while kk + 4 <= kdim {
-                acc += a_row[kk] * b_row[kk]
-                    + a_row[kk + 1] * b_row[kk + 1]
-                    + a_row[kk + 2] * b_row[kk + 2]
-                    + a_row[kk + 3] * b_row[kk + 3];
-                kk += 4;
-            }
-            while kk < kdim {
-                acc += a_row[kk] * b_row[kk];
-                kk += 1;
-            }
-            c_row[j] = acc;
+            c_row[j] = dot_g::<S>(a_row, b.row(j), kdim);
             j += 1;
         }
     }
+}
+
+crate::simd_dispatch! {
+    fn mm_a_bt_block(a: &Matrix, b: &Matrix, c_rows: &mut [f32], i0: usize, i1: usize)
+        = mm_a_bt_block_g
 }
 
 /// Allocation-free [`matmul_a_bt`].

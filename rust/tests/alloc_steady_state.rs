@@ -2,16 +2,19 @@
 //!
 //! A counting `#[global_allocator]` wraps the system allocator; after a
 //! warmup long enough to fill every workspace pool (several full refresh
-//! cycles), counting is switched on and a window of steady-state
-//! `DctAdamW::step` calls — covering both the project-only and the
-//! subspace-refresh path, tall/wide/Bluestein-width layers and Q8 error
-//! feedback — must perform exactly **zero** heap allocations. The proof
-//! runs twice: sequentially (1 thread lane) and through the parallel
+//! cycles), counting is switched on and a window of steady-state optimizer
+//! steps — covering both the project-only and the subspace-refresh path,
+//! tall/wide/Bluestein-width layers, Q8 error feedback (DctAdamW) and the
+//! workspace-backed Newton–Schulz orthogonalization (Trion) — must perform
+//! exactly **zero** heap allocations. Each optimizer's proof runs twice:
+//! sequentially (1 thread lane) and through the parallel
 //! `step_layers_parallel` path (3 lanes), because the counter is global
 //! across threads — worker-side allocations would be caught too. The
 //! parallel path stays clean because the pool dispatch boxes nothing and
 //! chunk `k` is permanently bound to workspace shard `k` / its own pooled
-//! FFT scratch (warmed during the uncounted warmup window).
+//! FFT scratch (warmed during the uncounted warmup window). The SIMD
+//! dispatch layer is exercised implicitly (every kernel routes through it)
+//! and is allocation-free by construction: one atomic load, no boxing.
 //!
 //! This file is its own test binary (integration test), so the global
 //! allocator and the single `#[test]` share the process without
@@ -20,7 +23,9 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 
-use fft_subspace::optim::{DctAdamW, LayerMeta, Optimizer, OptimizerConfig, ParamKind};
+use fft_subspace::optim::{
+    build_optimizer, LayerMeta, Optimizer, OptimizerConfig, OptimizerKind, ParamKind,
+};
 use fft_subspace::tensor::Matrix;
 use fft_subspace::util::Pcg64;
 
@@ -60,7 +65,7 @@ unsafe impl GlobalAlloc for CountingAlloc {
 static GLOBAL: CountingAlloc = CountingAlloc;
 
 #[test]
-fn dct_adamw_steady_state_step_is_allocation_free() {
+fn steady_state_steps_are_allocation_free() {
     // Layer zoo: tall, wide (transpose orientation), a width whose Makhoul
     // half-plan is non-power-of-two (24 → 12-point Bluestein), and a dense
     // AdamW-path norm parameter.
@@ -76,45 +81,54 @@ fn dct_adamw_steady_state_step_is_allocation_free() {
         .map(|m| Matrix::randn(m.rows, m.cols, 0.1, &mut rng))
         .collect();
 
-    // One proof per execution mode: sequential (1 lane) and the parallel
+    // DctAdamW pins the vectorized project/refresh/EF path; Trion
+    // additionally pins the workspace-backed Newton–Schulz. One proof per
+    // (optimizer, execution mode): sequential (1 lane) and the parallel
     // step_layers_parallel path (3 lanes, 4 layers → 2 chunks in flight).
     // Pool threads spawn at optimizer construction — before counting.
-    for threads in [1usize, 3] {
-        let mut cfg = OptimizerConfig {
-            rank: 8,
-            threads: Some(threads),
-            ..Default::default()
-        };
-        cfg.update_interval = 4; // exercise refresh AND project-only steps
-        let mut opt = DctAdamW::new(&metas, &cfg);
-        let mut params: Vec<Matrix> = metas
-            .iter()
-            .map(|m| Matrix::zeros(m.rows, m.cols))
-            .collect();
+    // (One #[test] for everything: the counter is process-global, so
+    // concurrently-running tests would pollute each other's windows.)
+    for kind in [OptimizerKind::DctAdamW, OptimizerKind::Trion] {
+        for threads in [1usize, 3] {
+            let mut cfg = OptimizerConfig {
+                rank: 8,
+                threads: Some(threads),
+                ..Default::default()
+            };
+            cfg.update_interval = 4; // exercise refresh AND project-only steps
+            let mut opt = build_optimizer(&kind, &metas, &cfg);
+            let mut params: Vec<Matrix> = metas
+                .iter()
+                .map(|m| Matrix::zeros(m.rows, m.cols))
+                .collect();
 
-        // Warmup: several full refresh cycles fill the per-shard workspace
-        // pools, the shared plan caches and the per-plan scratch pools up
-        // to their parallel high-water mark.
-        for _ in 0..12 {
-            opt.step(&mut params, &grads, 1e-3);
+            // Warmup: several full refresh cycles fill the per-shard
+            // workspace pools, the shared plan caches and the per-plan
+            // scratch pools up to their parallel high-water mark.
+            for _ in 0..12 {
+                opt.step(&mut params, &grads, 1e-3);
+            }
+
+            ALLOC_CALLS.store(0, Ordering::SeqCst);
+            ENABLED.store(true, Ordering::SeqCst);
+            for _ in 0..8 {
+                opt.step(&mut params, &grads, 1e-3);
+            }
+            ENABLED.store(false, Ordering::SeqCst);
+
+            let allocs = ALLOC_CALLS.load(Ordering::SeqCst);
+            assert_eq!(
+                allocs,
+                0,
+                "steady-state {} steps (threads={threads}) performed \
+                 {allocs} heap allocations (expected zero — a workspace \
+                 buffer is being dropped or resized, or the pool dispatch \
+                 allocates)",
+                kind.name()
+            );
+
+            // sanity: the optimizer actually did work in the counted window
+            assert!(params[0].fro_norm() > 0.0);
         }
-
-        ALLOC_CALLS.store(0, Ordering::SeqCst);
-        ENABLED.store(true, Ordering::SeqCst);
-        for _ in 0..8 {
-            opt.step(&mut params, &grads, 1e-3);
-        }
-        ENABLED.store(false, Ordering::SeqCst);
-
-        let allocs = ALLOC_CALLS.load(Ordering::SeqCst);
-        assert_eq!(
-            allocs, 0,
-            "steady-state DctAdamW steps (threads={threads}) performed \
-             {allocs} heap allocations (expected zero — a workspace buffer \
-             is being dropped or resized, or the pool dispatch allocates)"
-        );
-
-        // sanity: the optimizer actually did work in the counted window
-        assert!(params[0].fro_norm() > 0.0);
     }
 }

@@ -101,6 +101,36 @@ fn all_six_low_rank_optimizers_bit_identical_1_vs_n_threads() {
 }
 
 #[test]
+fn simd_kernels_by_thread_count_bit_identical() {
+    // SIMD × {1,3,8} threads: the auto-detected backend (vectorized
+    // wherever the CPU allows) must keep the any-thread-count contract —
+    // the SIMD kernels never touch per-element summation order (see
+    // `crate::simd`), so the PR-2 guarantee is backend-independent. This
+    // test deliberately does NOT flip the process-global backend override
+    // (tests in this binary run concurrently and would observe the flip
+    // mid-kernel); the forced-scalar × backend × lane-count cross matrix
+    // lives in tests/simd_bit_identity.rs, which serializes every test on
+    // the override lock, and in `make test-matrix` at the process level.
+    let metas = layer_zoo();
+    let grad_seq = zoo_grads(&metas, 17);
+    println!(
+        "simd × threads matrix under auto backend: {}",
+        fft_subspace::simd::backend().name()
+    );
+    // raw bit patterns, not float PartialEq — `-0.0 == 0.0` must not mask
+    // a sign divergence
+    let bits = |m: &Matrix| -> Vec<u32> { m.data.iter().map(|v| v.to_bits()).collect() };
+    let reference = run_optimizer(&OptimizerKind::DctAdamW, 1, &metas, &grad_seq);
+    for threads in [3usize, 8] {
+        let got = run_optimizer(&OptimizerKind::DctAdamW, threads, &metas, &grad_seq);
+        for (i, (a, b)) in reference.iter().zip(&got).enumerate() {
+            assert_eq!(a.shape(), b.shape(), "layer {i} shape at {threads} threads");
+            assert_eq!(bits(a), bits(b), "dct-adamw layer {i} diverged at {threads} threads");
+        }
+    }
+}
+
+#[test]
 fn prop_parallel_matmul_family_bit_identical() {
     // Random shapes × pools {2, 3, 8} against the sequential kernels
     // (which the allocating APIs delegate to).

@@ -1,0 +1,273 @@
+//! SIMD ↔ scalar bit-identity proofs for every dispatched kernel.
+//!
+//! Each test runs the same computation once under the forced scalar
+//! backend (`FFT_SUBSPACE_SIMD=0`'s code path) and once under the
+//! auto-detected backend (AVX2/NEON where available), then asserts
+//! equality on the **raw bit patterns** (`to_bits`, never float
+//! `PartialEq` — which would let a `-0.0`/`+0.0` divergence slip through
+//! and would choke on NaN). Shapes sweep odd sizes: lane-width remainders,
+//! fewer elements than one vector, empty matrices — the cases where a
+//! vector kernel's scalar tail must take over with the identical op
+//! sequence.
+//!
+//! On machines whose CPU offers no vector backend the comparisons are
+//! scalar-vs-scalar and pass trivially — the `make test-matrix` target
+//! additionally runs the whole suite under `FFT_SUBSPACE_SIMD={0,1}` so CI
+//! covers the env-var path end to end.
+//!
+//! The backend override is process-global, so every test serializes on one
+//! mutex (poison-tolerant: one failed test must not cascade) and a drop
+//! guard restores auto-detection even when an assertion fires mid-run.
+
+use std::sync::Mutex;
+
+use fft_subspace::fft::{cached_plan, fft_inplace, Complex};
+use fft_subspace::optim::common::AdamState;
+use fft_subspace::optim::{
+    adam_moments_into, build_optimizer, AdamScalars, LayerMeta, Optimizer,
+    OptimizerConfig, OptimizerKind, ParamKind,
+};
+use fft_subspace::projection::{select_top_columns, RankNorm};
+use fft_subspace::simd::{backend, set_backend_override, Backend};
+use fft_subspace::tensor::{matmul, matmul_a_bt, matmul_at_b, Matrix};
+use fft_subspace::util::Pcg64;
+
+static OVERRIDE_LOCK: Mutex<()> = Mutex::new(());
+
+/// Restores backend auto-detection on drop — assertion panics inside a
+/// comparison must not leave the process forced to one backend.
+struct OverrideGuard;
+impl Drop for OverrideGuard {
+    fn drop(&mut self) {
+        set_backend_override(None);
+    }
+}
+
+/// Run `f` once per backend (scalar forced, then auto) and return both
+/// results; the caller asserts bitwise equality. Holds the (poison-
+/// tolerant) override lock for the whole comparison.
+fn scalar_vs_auto<R>(mut f: impl FnMut() -> R) -> (R, R) {
+    let _lock = OVERRIDE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let _restore = OverrideGuard;
+    set_backend_override(Some(Backend::Scalar));
+    let scalar = f();
+    set_backend_override(None);
+    let auto = f();
+    (scalar, auto)
+}
+
+// ---- bit-pattern projections (float PartialEq is NOT bit identity) -----
+
+fn mat_bits(m: &Matrix) -> (usize, usize, Vec<u32>) {
+    (m.rows, m.cols, m.data.iter().map(|v| v.to_bits()).collect())
+}
+
+fn f32_bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn f64_bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn complex_bits(z: &[Complex]) -> Vec<(u64, u64)> {
+    z.iter().map(|c| (c.re.to_bits(), c.im.to_bits())).collect()
+}
+
+#[test]
+fn report_backend() {
+    // Not an assertion — documents in the test log which backend the auto
+    // path exercised on this machine.
+    println!("simd_bit_identity: auto backend = {}", backend().name());
+}
+
+#[test]
+fn matmul_family_bit_identical_over_odd_shapes() {
+    // Shapes straddle every lane boundary: below one vector, exact
+    // multiples, +1/-1 remainders, empty dimensions.
+    let dims = [0usize, 1, 3, 4, 7, 8, 9, 16, 17, 31];
+    let mut rng = Pcg64::seed(1);
+    for trial in 0..60 {
+        let pick = |rng: &mut Pcg64| dims[(rng.next_u64() % dims.len() as u64) as usize];
+        let (m, k, n) = (pick(&mut rng), pick(&mut rng), pick(&mut rng));
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(k, n, 1.0, &mut rng);
+        let at = Matrix::randn(k, m, 1.0, &mut rng);
+        let bt = Matrix::randn(n, k, 1.0, &mut rng);
+        let (s, v) = scalar_vs_auto(|| {
+            (
+                mat_bits(&matmul(&a, &b)),
+                mat_bits(&matmul_at_b(&at, &b)),
+                mat_bits(&matmul_a_bt(&a, &bt)),
+            )
+        });
+        assert_eq!(s.0, v.0, "matmul trial={trial} {m}x{k}x{n}");
+        assert_eq!(s.1, v.1, "matmul_at_b trial={trial} {m}x{k}x{n}");
+        assert_eq!(s.2, v.2, "matmul_a_bt trial={trial} {m}x{k}x{n}");
+    }
+}
+
+#[test]
+fn makhoul_bit_identical_over_widths() {
+    // pow2 (radix-2), even non-pow2 (split + Bluestein half), odd
+    // (full-complex Bluestein), tiny widths below one complex lane pair.
+    let mut rng = Pcg64::seed(2);
+    for n in [1usize, 2, 3, 4, 5, 6, 7, 8, 12, 17, 24, 33, 64, 100] {
+        let g = Matrix::randn(5, n, 1.0, &mut rng);
+        let plan = cached_plan(n);
+        let (s, v) = scalar_vs_auto(|| mat_bits(&plan.run(&g)));
+        assert_eq!(s, v, "makhoul n={n}");
+        let (s, v) = scalar_vs_auto(|| mat_bits(&plan.run_full_complex(&g)));
+        assert_eq!(s, v, "makhoul full-complex n={n}");
+    }
+}
+
+#[test]
+fn fft_roundtrip_bit_identical() {
+    let mut rng = Pcg64::seed(3);
+    for n in [1usize, 2, 5, 8, 13, 16, 27, 64, 100] {
+        let x: Vec<Complex> =
+            (0..n).map(|_| Complex::new(rng.normal(), rng.normal())).collect();
+        let (s, v) = scalar_vs_auto(|| {
+            let mut y = x.clone();
+            fft_inplace(&mut y);
+            complex_bits(&y)
+        });
+        assert_eq!(s, v, "fft n={n}");
+    }
+}
+
+#[test]
+fn column_norms_and_selection_bit_identical() {
+    let mut rng = Pcg64::seed(4);
+    for (rows, cols) in [(0usize, 5usize), (1, 1), (3, 3), (7, 4), (9, 5), (6, 23), (11, 32)] {
+        let m = Matrix::randn(rows, cols, 1.0, &mut rng);
+        let mut acc = vec![0.0f64; cols];
+        let (s, v) = scalar_vs_auto(|| {
+            m.col_sq_sums_into(&mut acc);
+            let sq = f64_bits(&acc);
+            m.col_abs_sums_into(&mut acc);
+            (
+                sq,
+                f64_bits(&acc),
+                f32_bits(&m.col_l2_norms()),
+                f32_bits(&m.col_l1_norms()),
+                select_top_columns(&m, cols / 2 + 1, RankNorm::L2),
+                select_top_columns(&m, cols / 2 + 1, RankNorm::L1),
+            )
+        });
+        assert_eq!(s, v, "col norms/selection {rows}x{cols}");
+    }
+}
+
+#[test]
+fn fused_adam_kernels_bit_identical_over_odd_lengths() {
+    let mut rng = Pcg64::seed(5);
+    for len in [0usize, 1, 5, 7, 8, 9, 15, 16, 23, 64, 70] {
+        let g: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
+        let m0: Vec<f32> = (0..len).map(|_| rng.normal_f32() * 0.1).collect();
+        let v0: Vec<f32> = (0..len).map(|_| rng.normal_f32().abs() * 0.01).collect();
+        let p0: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
+        for step in [1u64, 7, 400] {
+            let sc = AdamScalars::new(0.9, 0.999, 1e-8, step);
+            // subspace moments kernel
+            let (s, v) = scalar_vs_auto(|| {
+                let (mut m, mut vv, mut u) = (m0.clone(), v0.clone(), vec![0.0f32; len]);
+                adam_moments_into(&mut u, &g, &mut m, &mut vv, &sc);
+                (f32_bits(&u), f32_bits(&m), f32_bits(&vv))
+            });
+            assert_eq!(s, v, "adam_moments len={len} step={step}");
+            // dense fused kernel through AdamState
+            let (s, v) = scalar_vs_auto(|| {
+                let mut st = AdamState::new(1, len);
+                st.m.data.copy_from_slice(&m0);
+                st.v.data.copy_from_slice(&v0);
+                let mut p = Matrix::from_vec(1, len, p0.clone());
+                let gm = Matrix::from_vec(1, len, g.clone());
+                st.update(&mut p, &gm, 0.01, 0.9, 0.999, 1e-8, 0.01, step);
+                (mat_bits(&p), mat_bits(&st.m), mat_bits(&st.v))
+            });
+            assert_eq!(s, v, "adam_fused len={len} step={step}");
+        }
+    }
+}
+
+/// The layer zoo shared by the end-to-end tests below: tall, wide
+/// (transpose orientation), a Bluestein width, and a dense-path parameter.
+fn zoo() -> (Vec<LayerMeta>, Vec<Vec<Matrix>>) {
+    let metas = vec![
+        LayerMeta::new("wq", 48, 32, ParamKind::Linear),
+        LayerMeta::new("w_gate", 32, 48, ParamKind::Linear),
+        LayerMeta::new("wk", 40, 24, ParamKind::Linear),
+        LayerMeta::new("norm", 1, 32, ParamKind::Norm),
+    ];
+    let mut rng = Pcg64::seed(6);
+    let grad_seq = (0..5)
+        .map(|_| {
+            metas
+                .iter()
+                .map(|m| Matrix::randn(m.rows, m.cols, 0.1, &mut rng))
+                .collect()
+        })
+        .collect();
+    (metas, grad_seq)
+}
+
+fn run_steps(
+    kind: &OptimizerKind,
+    threads: usize,
+    metas: &[LayerMeta],
+    grad_seq: &[Vec<Matrix>],
+) -> Vec<(usize, usize, Vec<u32>)> {
+    let cfg = OptimizerConfig {
+        rank: 8,
+        update_interval: 2,
+        threads: Some(threads),
+        ..Default::default()
+    };
+    let mut opt = build_optimizer(kind, metas, &cfg);
+    let mut params: Vec<Matrix> =
+        metas.iter().map(|m| Matrix::zeros(m.rows, m.cols)).collect();
+    for grads in grad_seq {
+        opt.step(&mut params, grads, 1e-3);
+    }
+    params.iter().map(mat_bits).collect()
+}
+
+#[test]
+fn optimizer_steps_bit_identical_end_to_end() {
+    // Whole-step integration: every dispatched kernel (orient, Makhoul,
+    // selection, matmuls, Newton–Schulz, fused Adam) in one pass, for the
+    // paper's two optimizers plus a dense baseline.
+    let (metas, grad_seq) = zoo();
+    for kind in [OptimizerKind::DctAdamW, OptimizerKind::Trion, OptimizerKind::AdamW] {
+        let (s, v) = scalar_vs_auto(|| run_steps(&kind, 1, &metas, &grad_seq));
+        assert_eq!(s, v, "{} end-to-end", kind.name());
+    }
+}
+
+#[test]
+fn backend_by_thread_count_matrix_bit_identical() {
+    // The full cross matrix the ISSUE pins: {scalar, auto} × {1, 3, 8}
+    // pool lanes must all land on the same bits — the SIMD kernels never
+    // touch per-element summation order, so the PR-2 thread-determinism
+    // contract is backend-independent. Lives in this binary (not
+    // parallel_determinism.rs) because it must flip the process-global
+    // backend override, which every test here serializes on.
+    let (metas, grad_seq) = zoo();
+    let _lock = OVERRIDE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let _restore = OverrideGuard;
+    set_backend_override(None);
+    let reference = run_steps(&OptimizerKind::DctAdamW, 1, &metas, &grad_seq);
+    for be in [Some(Backend::Scalar), None] {
+        set_backend_override(be);
+        for threads in [1usize, 3, 8] {
+            let got = run_steps(&OptimizerKind::DctAdamW, threads, &metas, &grad_seq);
+            assert_eq!(
+                got, reference,
+                "dct-adamw diverged: backend={be:?} threads={threads}"
+            );
+        }
+        set_backend_override(None);
+    }
+}
