@@ -47,6 +47,9 @@ bench-simd:
 bench-makhoul:
 	cd $(RUST_DIR) && $(CARGO) bench --bench bench_makhoul
 
+# Engine-preset optimizer-step sweep (six presets × {dense fallback,
+# low-rank} × 1 vs 4 lanes); writes rust/BENCH_OPTIM.json (override with
+# BENCH_OPTIM_OUT=...).
 bench-optim:
 	cd $(RUST_DIR) && $(CARGO) bench --bench bench_optim_step
 

@@ -1,62 +1,118 @@
-//! End-to-end optimizer-step bench across the whole family at a fixed
+//! End-to-end optimizer-step bench across the engine presets at a fixed
 //! synthetic model: the per-step optimizer cost columns behind Tables 1/2/6
 //! (compute only — comm is bench_collectives, fwd/bwd is bench_runtime).
+//!
+//! Emits `BENCH_OPTIM.json` (override with `BENCH_OPTIM_OUT=path`), one
+//! group per preset (`dct-adamw`, `trion`, `galore`, `fira`, `frugal`,
+//! `ldadamw`), each with variants `{low-rank, dense}/t{1,N}`:
+//!
+//! * `low-rank` — every layer eligible (hidden linears), the composed
+//!   subspace step.
+//! * `dense`   — the same shapes flagged non-eligible, so every layer takes
+//!   the engine's dense-AdamW fallback.
+//! * `t1` vs `tN` — sequential vs the parallel `step_layers_parallel` path
+//!   (results are bit-identical; this records what the lanes buy).
+//!
+//! Run via `make bench-optim` in a toolchain-equipped environment.
 
-use fft_subspace::bench::measure;
+use fft_subspace::bench::{measure, write_bench_json, BenchRecord};
 use fft_subspace::optim::{
     build_optimizer, LayerMeta, OptimizerConfig, OptimizerKind, ParamKind,
 };
 use fft_subspace::tensor::Matrix;
 use fft_subspace::util::Pcg64;
 
-fn model(d: usize, layers: usize) -> Vec<LayerMeta> {
+/// Transformer-ish layer zoo; `kind` flips between the low-rank path
+/// (Linear) and the dense-AdamW fallback (Head) for the same shapes.
+fn model(d: usize, layers: usize, kind: ParamKind) -> Vec<LayerMeta> {
     let ff = d * 11 / 4;
-    let mut metas = vec![LayerMeta::new("embed", 257, d, ParamKind::Embed)];
+    let mut metas = Vec::new();
     for l in 0..layers {
         for w in ["wq", "wk", "wv", "wo"] {
-            metas.push(LayerMeta::new(&format!("b{l}.{w}"), d, d, ParamKind::Linear));
+            metas.push(LayerMeta::new(&format!("b{l}.{w}"), d, d, kind));
         }
-        metas.push(LayerMeta::new(&format!("b{l}.gate"), d, ff, ParamKind::Linear));
-        metas.push(LayerMeta::new(&format!("b{l}.down"), ff, d, ParamKind::Linear));
+        metas.push(LayerMeta::new(&format!("b{l}.gate"), d, ff, kind));
+        metas.push(LayerMeta::new(&format!("b{l}.down"), ff, d, kind));
     }
-    metas.push(LayerMeta::new("head", d, 257, ParamKind::Head));
     metas
 }
 
 fn main() {
-    println!("== bench_optim_step (per-step optimizer cost, d=128, 4 blocks) ==\n");
-    let metas = model(128, 4);
-    let mut rng = Pcg64::seed(0);
-    let grads: Vec<Matrix> = metas
-        .iter()
-        .map(|m| Matrix::randn(m.rows, m.cols, 0.02, &mut rng))
-        .collect();
+    let d = 128usize;
+    let blocks = 4usize;
+    let rank = 32usize;
+    let lanes = [1usize, 4];
+    println!(
+        "== bench_optim_step (per-step cost, d={d}, {blocks} blocks, rank {rank}; \
+         six engine presets × {{low-rank, dense}} × lanes {{1, 4}}) ==\n"
+    );
+    let mut records: Vec<BenchRecord> = Vec::new();
 
-    for rank in [16usize, 64] {
-        println!("rank {rank}:");
-        for kind in [
-            OptimizerKind::AdamW,
-            OptimizerKind::Muon,
-            OptimizerKind::Dion,
-            OptimizerKind::Trion,
-            OptimizerKind::GaLore,
-            OptimizerKind::LdAdamW,
-            OptimizerKind::DctAdamW,
-            OptimizerKind::Frugal,
-            OptimizerKind::Fira,
-        ] {
-            let cfg = OptimizerConfig { rank, ..Default::default() };
-            let mut opt = build_optimizer(&kind, &metas, &cfg);
-            let mut params: Vec<Matrix> = metas
+    for kind in [
+        OptimizerKind::DctAdamW,
+        OptimizerKind::Trion,
+        OptimizerKind::GaLore,
+        OptimizerKind::Fira,
+        OptimizerKind::Frugal,
+        OptimizerKind::LdAdamW,
+    ] {
+        for (variant, param_kind) in [("low-rank", ParamKind::Linear), ("dense", ParamKind::Head)]
+        {
+            let metas = model(d, blocks, param_kind);
+            let mut rng = Pcg64::seed(0);
+            let grads: Vec<Matrix> = metas
                 .iter()
-                .map(|m| Matrix::zeros(m.rows, m.cols))
+                .map(|m| Matrix::randn(m.rows, m.cols, 0.02, &mut rng))
                 .collect();
-            let stats = measure(&format!("{} r={rank}", kind.name()), 2, 8, || {
-                opt.step(&mut params, &grads, 1e-3);
-            });
-            let mem = opt.memory_report().total();
-            println!("{}  state={}", stats.report(), fft_subspace::util::human::bytes(mem));
+            for &t in &lanes {
+                // each preset at its published cadence: GaLore T_u=200 (so
+                // its timed steps are the project-only steady state it
+                // actually runs), everything else T_u=1 — DctAdamW/Fira/
+                // Frugal refresh every timed step, which IS their default
+                // per-step cost (Trion/LDAdamW pin T_u=1 regardless)
+                let cfg = OptimizerConfig {
+                    rank,
+                    threads: Some(t),
+                    update_interval: if kind == OptimizerKind::GaLore { 200 } else { 1 },
+                    ..Default::default()
+                };
+                let mut opt = build_optimizer(&kind, &metas, &cfg);
+                let mut params: Vec<Matrix> = metas
+                    .iter()
+                    .map(|m| Matrix::zeros(m.rows, m.cols))
+                    .collect();
+                // warm the per-shard workspace pools (and take the one-off
+                // subspace refresh) outside the timed window
+                for _ in 0..3 {
+                    opt.step(&mut params, &grads, 1e-3);
+                }
+                let label = format!("{} {variant} t={t} r={rank}", kind.name());
+                let stats = measure(&label, 2, 8, || {
+                    opt.step(&mut params, &grads, 1e-3);
+                });
+                let mem = opt.memory_report().total();
+                println!(
+                    "{}  state={}",
+                    stats.report(),
+                    fft_subspace::util::human::bytes(mem)
+                );
+                records.push(BenchRecord::new(
+                    kind.name(),
+                    &format!("{variant}/t{t}"),
+                    d,
+                    d,
+                    rank,
+                    stats,
+                ));
+            }
         }
         println!();
+    }
+
+    let out =
+        std::env::var("BENCH_OPTIM_OUT").unwrap_or_else(|_| "BENCH_OPTIM.json".into());
+    match write_bench_json(&out, &records) {
+        Ok(()) => println!("wrote {} records to {out}", records.len()),
+        Err(e) => eprintln!("failed to write {out}: {e}"),
     }
 }

@@ -16,7 +16,7 @@
 
 use fft_subspace::bench::{measure, write_bench_json, BenchRecord};
 use fft_subspace::coordinator::{CommModel, Communicator};
-use fft_subspace::optim::{DctAdamW, LayerMeta, Optimizer, OptimizerConfig, ParamKind};
+use fft_subspace::optim::{LayerMeta, Optimizer, OptimizerSpec, ParamKind};
 use fft_subspace::parallel::ThreadPool;
 use fft_subspace::tensor::{matmul_into_on, Matrix};
 use fft_subspace::util::Pcg64;
@@ -60,8 +60,7 @@ fn main() {
         .map(|meta| Matrix::randn(meta.rows, meta.cols, 0.1, &mut rng))
         .collect();
     for &t in &LANES {
-        let cfg = OptimizerConfig { rank: 32, threads: Some(t), ..Default::default() };
-        let mut opt = DctAdamW::new(&metas, &cfg);
+        let mut opt = OptimizerSpec::dct_adamw(32).threads(Some(t)).build(&metas);
         let mut params: Vec<Matrix> = metas
             .iter()
             .map(|meta| Matrix::zeros(meta.rows, meta.cols))

@@ -10,5 +10,5 @@ pub mod power_iter;
 
 pub use newton_schulz::{newton_schulz, newton_schulz_into};
 pub use power_iter::{block_power_iter, power_iter_qr};
-pub use qr::qr_thin;
+pub use qr::{qr_q_into, qr_thin};
 pub use svd::{svd_thin, Svd};

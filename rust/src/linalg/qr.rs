@@ -5,7 +5,90 @@
 //! Rank-revealing enough for our use: zero columns yield zero R diagonal and
 //! an orthonormal completion from the remaining reflectors.
 
-use crate::tensor::Matrix;
+use crate::tensor::{Matrix, Workspace};
+
+/// Workspace-backed Q factor of the thin QR — bit-identical to
+/// [`qr_thin`]'s Q (same f64 Householder sweep, same summation orders; the
+/// per-column reflector vectors live in one flat pooled buffer instead of a
+/// `Vec<Vec<f64>>`, which changes storage, not arithmetic). Skips building
+/// R. Zero heap allocations once `ws` is warm — this is what lets the
+/// LDAdamW block-power refresh run inside the allocation-free step loop.
+pub fn qr_q_into(a: &Matrix, q_out: &mut Matrix, ws: &mut Workspace) {
+    let (m, n) = a.shape();
+    assert!(m >= n, "qr_q_into needs m >= n, got {m}x{n}");
+    let mut r = ws.take_f64(m * n);
+    for (dst, &src) in r.iter_mut().zip(a.data.iter()) {
+        *dst = src as f64;
+    }
+    // Householder vector for column k occupies vs[k*m .. k*m + (m-k)];
+    // take_f64 zeroes the buffer, matching qr_thin's `vec![0.0; m-k]` init.
+    let mut vs = ws.take_f64(m * n);
+
+    for k in 0..n {
+        let mut norm2 = 0.0f64;
+        for i in k..m {
+            let v = r[i * n + k];
+            norm2 += v * v;
+        }
+        let norm = norm2.sqrt();
+        let v = &mut vs[k * m..k * m + (m - k)];
+        if norm > 0.0 {
+            let alpha = if r[k * n + k] >= 0.0 { -norm } else { norm };
+            v[0] = r[k * n + k] - alpha;
+            for i in k + 1..m {
+                v[i - k] = r[i * n + k];
+            }
+            let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+            if vnorm2 > 1e-300 {
+                for j in k..n {
+                    let mut dot = 0.0f64;
+                    for i in k..m {
+                        dot += v[i - k] * r[i * n + j];
+                    }
+                    let f = 2.0 * dot / vnorm2;
+                    for i in k..m {
+                        r[i * n + j] -= f * v[i - k];
+                    }
+                }
+            } else {
+                for x in v.iter_mut() {
+                    *x = 0.0;
+                }
+            }
+        }
+    }
+
+    // Accumulate Q = H_0 H_1 ... H_{n-1} applied to the thin identity.
+    let mut q = ws.take_f64(m * n);
+    for j in 0..n {
+        q[j * n + j] = 1.0;
+    }
+    for k in (0..n).rev() {
+        let v = &vs[k * m..k * m + (m - k)];
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm2 <= 1e-300 {
+            continue;
+        }
+        for j in 0..n {
+            let mut dot = 0.0f64;
+            for i in k..m {
+                dot += v[i - k] * q[i * n + j];
+            }
+            let f = 2.0 * dot / vnorm2;
+            for i in k..m {
+                q[i * n + j] -= f * v[i - k];
+            }
+        }
+    }
+
+    q_out.resize_to(m, n);
+    for (dst, &src) in q_out.data.iter_mut().zip(q.iter()) {
+        *dst = src as f32;
+    }
+    ws.give_f64(q);
+    ws.give_f64(vs);
+    ws.give_f64(r);
+}
 
 /// Thin QR of `a (m×n)`, `m ≥ n`: returns `(Q (m×n), R (n×n))` with
 /// `Q·R == a` and `QᵀQ == I`.
@@ -129,6 +212,31 @@ mod tests {
         assert!(matmul(&q, &r).max_abs_diff(&a) < 1e-4);
         // R[1,1] ≈ 0 reveals the deficiency
         assert!(r.at(1, 1).abs() < 1e-4);
+    }
+
+    #[test]
+    fn prop_q_into_bit_identical_to_qr_thin() {
+        // qr_q_into must produce qr_thin's Q to the bit, including
+        // rank-deficient inputs (duplicated columns) and reused workspaces.
+        proptest::check("qr_q_into==qr_thin.0", 10, |rng| {
+            let n = proptest::size(rng, 1, 16);
+            let m = n + proptest::size(rng, 0, 24);
+            let mut a = Matrix::randn(m, n, 1.0, rng);
+            if n >= 2 && rng.next_u64() % 2 == 0 {
+                // force a zero R diagonal via a duplicated column
+                for i in 0..m {
+                    *a.at_mut(i, 1) = a.at(i, 0);
+                }
+            }
+            let (want, _) = qr_thin(&a);
+            let mut ws = Workspace::new();
+            let mut got = Matrix::zeros(1, 1);
+            qr_q_into(&a, &mut got, &mut ws);
+            assert_eq!(got, want, "first pass {m}x{n}");
+            // pooled buffers must not leak state into a second factorization
+            qr_q_into(&a, &mut got, &mut ws);
+            assert_eq!(got, want, "warm-workspace pass {m}x{n}");
+        });
     }
 
     #[test]

@@ -15,7 +15,7 @@
 use anyhow::{bail, Context, Result};
 
 use fft_subspace::experiments::{self, ExpOptions};
-use fft_subspace::optim::{build_optimizer, OptimizerConfig, OptimizerKind};
+use fft_subspace::optim::{build_optimizer, OptimizerConfig, OptimizerKind, OptimizerSpec};
 use fft_subspace::runtime::{Manifest, Runtime};
 use fft_subspace::train::finetune::Finetuner;
 use fft_subspace::train::{checkpoint, TrainConfig, Trainer};
@@ -207,7 +207,9 @@ fn cmd_info() -> Result<()> {
             human::params(spec.num_params as u64),
         );
     }
-    // optimizer memory table for the default preset (paper's memory story)
+    // optimizer memory table for the default preset (paper's memory story),
+    // with each low-rank preset's engine composition spelled out — any
+    // other grid point is the same axes via source=/residual=/rotation=
     let spec = manifest.model_spec("micro")?;
     let metas: Vec<_> = spec.params.iter().map(|p| p.layer_meta()).collect();
     let cfg = OptimizerConfig { rank: 32, ..Default::default() };
@@ -225,7 +227,15 @@ fn cmd_info() -> Result<()> {
     ] {
         let opt = build_optimizer(&kind, &metas, &cfg);
         let rep = opt.memory_report();
-        println!("  {:<10} {}", kind.name(), human::bytes(rep.total()));
+        let composition = OptimizerSpec::from_kind(&kind, &cfg)
+            .map(|s| format!("  [{}]", s.describe()))
+            .unwrap_or_default();
+        println!(
+            "  {:<10} {}{}",
+            kind.name(),
+            human::bytes(rep.total()),
+            composition
+        );
     }
     Ok(())
 }

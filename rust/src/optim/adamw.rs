@@ -63,7 +63,7 @@ impl Optimizer for AdamW {
         r
     }
 
-    fn name(&self) -> &'static str {
+    fn name(&self) -> &str {
         "adamw"
     }
 

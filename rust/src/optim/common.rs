@@ -182,7 +182,10 @@ pub trait Optimizer {
     /// Exact persistent state accounting.
     fn memory_report(&self) -> MemoryReport;
 
-    fn name(&self) -> &'static str;
+    /// Reported optimizer name. Engine-built optimizers derive it from
+    /// their policy composition, so it is a borrowed `&str` rather than a
+    /// `&'static str`.
+    fn name(&self) -> &str;
 
     /// Figure-1 instrumentation: after a step, the projection error
     /// `‖B_t − O_t‖₂` per low-rank layer (None for dense optimizers).
@@ -299,10 +302,10 @@ impl Default for OptimizerConfig {
     }
 }
 
-/// Resolve an optimizer's thread pool from its config (global unless a
-/// private lane count was pinned).
-pub fn pool_for(cfg: &OptimizerConfig) -> Arc<ThreadPool> {
-    match cfg.threads {
+/// Resolve an optimizer's thread pool (global unless a private lane count
+/// was pinned).
+pub fn pool_for_threads(threads: Option<usize>) -> Arc<ThreadPool> {
+    match threads {
         Some(n) => Arc::new(ThreadPool::new(n)),
         None => crate::parallel::global(),
     }
@@ -373,22 +376,34 @@ pub fn shared_dct_registry(metas: &[LayerMeta]) -> BTreeMap<usize, Arc<SharedDct
     map
 }
 
-/// Optimizer factory.
+/// Optimizer factory — a thin preset alias over the composable engine.
+/// The six low-rank kinds resolve to [`OptimizerSpec::from_kind`] presets
+/// (bit-identical to the pre-engine hand-written optimizers, pinned by
+/// `tests/engine_equivalence.rs`); the dense/full-momentum kinds stay
+/// hand-written. New grid points should use [`OptimizerSpec`] directly
+/// rather than growing this enum.
 pub fn build_optimizer(
     kind: &OptimizerKind,
     metas: &[LayerMeta],
     cfg: &OptimizerConfig,
 ) -> Box<dyn Optimizer> {
+    if let Some(spec) = crate::optim::OptimizerSpec::from_kind(kind, cfg) {
+        return Box::new(spec.build(metas));
+    }
     match kind {
         OptimizerKind::AdamW => Box::new(crate::optim::AdamW::new(metas, cfg)),
         OptimizerKind::Muon => Box::new(crate::optim::Muon::new(metas, cfg)),
         OptimizerKind::Dion => Box::new(crate::optim::Dion::new(metas, cfg)),
-        OptimizerKind::Trion => Box::new(crate::optim::Trion::new(metas, cfg)),
-        OptimizerKind::GaLore => Box::new(crate::optim::GaLore::new(metas, cfg)),
-        OptimizerKind::LdAdamW => Box::new(crate::optim::LdAdamW::new(metas, cfg)),
-        OptimizerKind::DctAdamW => Box::new(crate::optim::DctAdamW::new(metas, cfg)),
-        OptimizerKind::Frugal => Box::new(crate::optim::Frugal::new(metas, cfg)),
-        OptimizerKind::Fira => Box::new(crate::optim::Fira::new(metas, cfg)),
+        // exhaustive on purpose: a new OptimizerKind must either get a
+        // from_kind preset or a hand-written arm, at compile time
+        OptimizerKind::Trion
+        | OptimizerKind::GaLore
+        | OptimizerKind::LdAdamW
+        | OptimizerKind::DctAdamW
+        | OptimizerKind::Frugal
+        | OptimizerKind::Fira => {
+            unreachable!("{kind:?} resolves via OptimizerSpec::from_kind")
+        }
     }
 }
 

@@ -145,7 +145,7 @@ impl Optimizer for Dion {
         r
     }
 
-    fn name(&self) -> &'static str {
+    fn name(&self) -> &str {
         "dion"
     }
 

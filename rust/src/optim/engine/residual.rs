@@ -1,0 +1,167 @@
+//! [`ResidualPolicy`] — what happens to the out-of-subspace gradient
+//! `Ξ = G − (G·Q_r)·Q_rᵀ` (Table 3's "residual handling" axis):
+//!
+//! * [`DiscardResidual`] — GaLore: thrown away.
+//! * [`EfResidual`] — LDAdam / DCT-AdamW: accumulated in an error-feedback
+//!   buffer (f32 or the paper's 8-bit quantized form) and added back to the
+//!   next gradient before projection.
+//! * [`FiraResidual`] — FIRA: added to the update, norm-scaled by
+//!   `φ = ‖u_low‖/‖g_low‖` so it moves with an Adam-calibrated magnitude.
+//! * [`SignResidual`] — FRUGAL: fed to stateless SignSGD.
+//!
+//! The hooks mirror where the legacy optimizers touched the residual:
+//! `add_into_grad` before projection (EF replay), `store_residual` right
+//! after projection (EF capture — before the Adam moments are touched,
+//! exactly like the legacy loops), and `finish_update` which back-projects
+//! the subspace update and folds in the policy's residual contribution.
+
+use crate::optim::common::MemoryReport;
+use crate::optim::error_feedback::EfBuffer;
+use crate::optim::EfMode;
+use crate::tensor::{Matrix, Workspace};
+
+use super::source::SubspaceSource;
+
+pub trait ResidualPolicy: Send {
+    /// Whether the policy mutates the oriented gradient in place (error
+    /// feedback) — drives the owned-vs-borrowed gradient checkout in the
+    /// update rule.
+    fn wants_owned_grad(&self) -> bool {
+        false
+    }
+
+    /// `G ← G + Ξ` before projection (EF replay).
+    fn add_into_grad(&self, _g: &mut Matrix) {}
+
+    /// Capture the new residual right after projection. `full` is an
+    /// uninitialized R×C scratch the policy may clobber (the update rule
+    /// fully overwrites it afterwards).
+    fn store_residual(
+        &mut self,
+        _source: &SubspaceSource,
+        _g_low: &Matrix,
+        _g: &Matrix,
+        _full: &mut Matrix,
+        _ws: &mut Workspace,
+    ) {
+    }
+
+    /// Back-project the subspace update `u_low` into `full (R×C)` and fold
+    /// in the policy's residual contribution. The default discards the
+    /// residual (GaLore).
+    fn finish_update(
+        &mut self,
+        source: &SubspaceSource,
+        _g: &Matrix,
+        _g_low: &Matrix,
+        u_low: &Matrix,
+        full: &mut Matrix,
+        ws: &mut Workspace,
+    ) {
+        source.back_into(u_low, full, ws);
+    }
+
+    /// Persistent per-layer residual state (the "ef" memory-report family).
+    fn memory(&self, _rep: &mut MemoryReport) {}
+}
+
+/// GaLore: the residual is discarded.
+pub struct DiscardResidual;
+
+impl ResidualPolicy for DiscardResidual {}
+
+/// LDAdam / DCT-AdamW error feedback. `EfMode::None` still routes the
+/// gradient through the owned checkout (matching the legacy DCT-AdamW loop
+/// exactly); the buffer itself is empty and both hooks are no-ops.
+pub struct EfResidual {
+    buf: EfBuffer,
+}
+
+impl EfResidual {
+    pub fn new(mode: EfMode, rows: usize, cols: usize) -> Self {
+        EfResidual { buf: EfBuffer::new(mode, rows, cols) }
+    }
+}
+
+impl ResidualPolicy for EfResidual {
+    fn wants_owned_grad(&self) -> bool {
+        true
+    }
+
+    fn add_into_grad(&self, g: &mut Matrix) {
+        self.buf.add_into(g);
+    }
+
+    fn store_residual(
+        &mut self,
+        source: &SubspaceSource,
+        g_low: &Matrix,
+        g: &Matrix,
+        full: &mut Matrix,
+        ws: &mut Workspace,
+    ) {
+        // Ξ ← G − g·Qᵀ (residual built in the scratch buffer)
+        source.back_into(g_low, full, ws);
+        full.sub_from(g);
+        self.buf.store(full);
+    }
+
+    fn memory(&self, rep: &mut MemoryReport) {
+        rep.add("ef", self.buf.bytes());
+    }
+}
+
+/// FIRA: residual added back norm-scaled by `φ = ‖u_low‖/‖g_low‖`.
+pub struct FiraResidual;
+
+impl ResidualPolicy for FiraResidual {
+    fn finish_update(
+        &mut self,
+        source: &SubspaceSource,
+        g: &Matrix,
+        g_low: &Matrix,
+        u_low: &Matrix,
+        full: &mut Matrix,
+        ws: &mut Workspace,
+    ) {
+        // φ = ‖u_low‖ / ‖g_low‖ — Adam-calibrated scaling for the residual
+        // (FIRA's norm-based scaling)
+        let phi = (u_low.fro_norm() / (g_low.fro_norm() + 1e-12)) as f32;
+        source.back_into(u_low, full, ws);
+        let mut resid = ws.take_uninit(full.rows, full.cols);
+        source.back_into(g_low, &mut resid, ws);
+        resid.sub_from(g);
+        full.axpy(phi, &resid);
+        ws.give(resid);
+    }
+}
+
+/// FRUGAL: the "state-free" branch — SignSGD on the residual.
+pub struct SignResidual {
+    /// state-free learning-rate multiplier for the SignSGD branch
+    pub scale: f32,
+}
+
+impl ResidualPolicy for SignResidual {
+    fn finish_update(
+        &mut self,
+        source: &SubspaceSource,
+        g: &Matrix,
+        g_low: &Matrix,
+        u_low: &Matrix,
+        full: &mut Matrix,
+        ws: &mut Workspace,
+    ) {
+        source.back_into(u_low, full, ws);
+        let mut resid = ws.take_uninit(full.rows, full.cols);
+        source.back_into(g_low, &mut resid, ws);
+        resid.sub_from(g);
+        for (uv, &rv) in full.data.iter_mut().zip(resid.data.iter()) {
+            // rust's signum(0.0) == 1.0; SignSGD wants sign(0) = 0
+            if rv != 0.0 {
+                *uv += self.scale * rv.signum();
+            }
+        }
+        ws.give(resid);
+    }
+}

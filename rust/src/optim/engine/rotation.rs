@@ -1,0 +1,258 @@
+//! [`RotationPolicy`] — what happens to the subspace Adam moments when the
+//! subspace changes (Algorithm 2's smooth transition, Table 3's "moment
+//! rotation" axis):
+//!
+//! * [`NoRotation`] — GaLore/FRUGAL/FIRA: moments are left in the stale
+//!   frame (their large `T_u` makes cross-refresh mixing rare).
+//! * [`DenseRotation`] — LDAdam: `R = Q_prevᵀ·Q_crt (r×r)`, `m ← m·R`,
+//!   `v ← |v·R|`; stores the previous basis (`C×r` floats per layer).
+//! * [`FixedBasisRotation`] — DCT-AdamW: for a *fixed orthogonal* basis the
+//!   rotation collapses to 0/1 index matching (`R[i][j] = 1 ⇔
+//!   idx_prev[i] == idx_crt[j]`) — a permutation-with-drop, no matmul;
+//!   stores `r` previous indices per layer.
+//!
+//! The engine calls [`RotationPolicy::before_refresh`] immediately before a
+//! subspace refresh (snapshot the outgoing frame) and
+//! [`RotationPolicy::rotate_moments`] immediately after it. Policies skip
+//! the very first refresh themselves — there are no moments to carry into
+//! the initial subspace.
+
+use crate::optim::common::MemoryReport;
+use crate::tensor::{matmul_into, Matrix, Workspace};
+
+use super::source::SubspaceSource;
+
+pub trait RotationPolicy: Send {
+    /// Snapshot whatever the rotation needs from the *outgoing* subspace.
+    /// Called right before every refresh.
+    fn before_refresh(&mut self, source: &SubspaceSource);
+
+    /// Rotate the subspace moments into the just-refreshed subspace.
+    /// Called right after every refresh.
+    fn rotate_moments(
+        &mut self,
+        source: &SubspaceSource,
+        m: &mut Matrix,
+        v: &mut Matrix,
+        ws: &mut Workspace,
+    );
+
+    /// Persistent per-layer rotation state ("indices_prev" /
+    /// "projector_prev" memory-report families).
+    fn memory(&self, _rep: &mut MemoryReport) {}
+
+    /// The snapshotted indices (fixed-basis policy only) — test hook.
+    fn snapshot_indices(&self) -> Option<&[usize]> {
+        None
+    }
+}
+
+/// Rotate subspace moments for a *fixed orthogonal basis*: since
+/// `QᵀQ = I`, `R[i][j] = 1 ⇔ idx_prev[i] == idx_crt[j]`, so `m·R` keeps the
+/// columns whose index survives and zeroes the rest.
+pub fn rotate_fixed_basis(m: &Matrix, idx_prev: &[usize], idx_crt: &[usize]) -> Matrix {
+    debug_assert_eq!(m.cols, idx_prev.len());
+    let mut out = Matrix::zeros(m.rows, idx_crt.len());
+    rotate_fixed_basis_core(m, idx_prev, idx_crt, &mut out);
+    out
+}
+
+/// In-place [`rotate_fixed_basis`]: `m` (R×|prev|) becomes the rotated
+/// R×|crt| matrix, staging through a pooled workspace buffer.
+pub fn rotate_fixed_basis_into(
+    m: &mut Matrix,
+    idx_prev: &[usize],
+    idx_crt: &[usize],
+    ws: &mut Workspace,
+) {
+    debug_assert_eq!(m.cols, idx_prev.len());
+    let mut out = ws.take(m.rows, idx_crt.len());
+    rotate_fixed_basis_core(m, idx_prev, idx_crt, &mut out);
+    m.copy_from(&out);
+    ws.give(out);
+}
+
+/// Shared merge kernel: both index lists are sorted ascending; `out` must
+/// arrive zeroed (dropped columns stay zero).
+fn rotate_fixed_basis_core(m: &Matrix, idx_prev: &[usize], idx_crt: &[usize], out: &mut Matrix) {
+    let (mut a, mut b) = (0usize, 0usize);
+    while a < idx_prev.len() && b < idx_crt.len() {
+        match idx_prev[a].cmp(&idx_crt[b]) {
+            std::cmp::Ordering::Less => a += 1,
+            std::cmp::Ordering::Greater => b += 1,
+            std::cmp::Ordering::Equal => {
+                for i in 0..m.rows {
+                    out.data[i * idx_crt.len() + b] = m.data[i * m.cols + a];
+                }
+                a += 1;
+                b += 1;
+            }
+        }
+    }
+}
+
+/// Leave moments in the stale frame (GaLore / FRUGAL / FIRA).
+pub struct NoRotation;
+
+impl RotationPolicy for NoRotation {
+    fn before_refresh(&mut self, _source: &SubspaceSource) {}
+
+    fn rotate_moments(
+        &mut self,
+        _source: &SubspaceSource,
+        _m: &mut Matrix,
+        _v: &mut Matrix,
+        _ws: &mut Workspace,
+    ) {
+    }
+}
+
+/// DCT-AdamW's index-matching rotation for fixed orthogonal bases.
+pub struct FixedBasisRotation {
+    idx_prev: Vec<usize>,
+    first: bool,
+}
+
+impl FixedBasisRotation {
+    pub fn new(rank: usize) -> Self {
+        // Matches the initial index set of the selection sources (0..r), so
+        // the "indices_prev" byte accounting is exact from step 0.
+        FixedBasisRotation { idx_prev: (0..rank).collect(), first: true }
+    }
+}
+
+impl RotationPolicy for FixedBasisRotation {
+    fn before_refresh(&mut self, source: &SubspaceSource) {
+        let idx = source
+            .indices()
+            .expect("fixed-basis rotation needs an index-selection source");
+        self.idx_prev.clear();
+        self.idx_prev.extend_from_slice(idx);
+    }
+
+    fn rotate_moments(
+        &mut self,
+        source: &SubspaceSource,
+        m: &mut Matrix,
+        v: &mut Matrix,
+        ws: &mut Workspace,
+    ) {
+        if !self.first {
+            let idx_crt = source
+                .indices()
+                .expect("fixed-basis rotation needs an index-selection source");
+            rotate_fixed_basis_into(m, &self.idx_prev, idx_crt, ws);
+            rotate_fixed_basis_into(v, &self.idx_prev, idx_crt, ws);
+            // |v·R| — the rotation here is 0/1 so abs is a no-op, kept for
+            // parity with Algorithm 2
+            for x in &mut v.data {
+                *x = x.abs();
+            }
+        }
+        self.first = false;
+    }
+
+    fn memory(&self, rep: &mut MemoryReport) {
+        rep.add("indices_prev", (self.idx_prev.len() * 4) as u64);
+    }
+
+    fn snapshot_indices(&self) -> Option<&[usize]> {
+        Some(&self.idx_prev)
+    }
+}
+
+/// LDAdam's dense rotation `R = Q_prevᵀ·Q_crt`; costs a second `C×r`
+/// projector per layer — exactly the overhead the fixed-basis variant
+/// removes.
+pub struct DenseRotation {
+    prev_basis: Matrix, // C×r
+    first: bool,
+}
+
+impl DenseRotation {
+    pub fn new(cols: usize, rank: usize) -> Self {
+        DenseRotation { prev_basis: Matrix::zeros(cols, rank), first: true }
+    }
+}
+
+impl RotationPolicy for DenseRotation {
+    fn before_refresh(&mut self, source: &SubspaceSource) {
+        source.basis_into(&mut self.prev_basis);
+    }
+
+    fn rotate_moments(
+        &mut self,
+        source: &SubspaceSource,
+        m: &mut Matrix,
+        v: &mut Matrix,
+        ws: &mut Workspace,
+    ) {
+        if !self.first {
+            let r = m.cols;
+            let mut rot = ws.take_uninit(r, r);
+            source.rotation_into(&self.prev_basis, &mut rot, ws);
+            let mut tmp = ws.take_uninit(m.rows, r);
+            matmul_into(m, &rot, &mut tmp);
+            m.copy_from(&tmp);
+            matmul_into(v, &rot, &mut tmp);
+            v.copy_from(&tmp);
+            for x in &mut v.data {
+                *x = x.abs();
+            }
+            ws.give(tmp);
+            ws.give(rot);
+        }
+        self.first = false;
+    }
+
+    fn memory(&self, rep: &mut MemoryReport) {
+        rep.add("projector_prev", self.prev_basis.bytes());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{matmul, matmul_at_b};
+    use crate::util::Pcg64;
+
+    #[test]
+    fn rotation_matches_matmul_definition() {
+        // rotate_fixed_basis == m · (Q[:,prev]ᵀ Q[:,crt]) for orthogonal Q
+        let mut rng = Pcg64::seed(0);
+        let q = crate::fft::dct2_matrix(12);
+        let prev = vec![0, 3, 5, 9];
+        let crt = vec![3, 4, 9, 11];
+        let m = Matrix::randn(6, 4, 1.0, &mut rng);
+        let got = rotate_fixed_basis(&m, &prev, &crt);
+        let qp = q.select_columns(&prev);
+        let qc = q.select_columns(&crt);
+        let rot = matmul_at_b(&qp, &qc);
+        let want = matmul(&m, &rot);
+        assert!(got.max_abs_diff(&want) < 1e-5);
+    }
+
+    #[test]
+    fn rotation_into_handles_rank_change() {
+        let mut rng = Pcg64::seed(7);
+        let mut m = Matrix::randn(3, 4, 1.0, &mut rng);
+        let want = rotate_fixed_basis(&m, &[0, 2, 5, 7], &[2, 3, 7]);
+        let mut ws = Workspace::new();
+        rotate_fixed_basis_into(&mut m, &[0, 2, 5, 7], &[2, 3, 7], &mut ws);
+        assert_eq!(m, want);
+        assert_eq!(m.shape(), (3, 3));
+    }
+
+    #[test]
+    fn allocating_twin_needs_no_workspace_and_matches_into() {
+        let mut rng = Pcg64::seed(9);
+        let m = Matrix::randn(5, 3, 1.0, &mut rng);
+        let prev = vec![1, 4, 6];
+        let crt = vec![0, 4, 6, 9];
+        let want = rotate_fixed_basis(&m, &prev, &crt);
+        let mut m2 = m.clone();
+        let mut ws = Workspace::new();
+        rotate_fixed_basis_into(&mut m2, &prev, &crt, &mut ws);
+        assert_eq!(m2, want);
+    }
+}

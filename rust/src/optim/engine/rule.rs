@@ -1,0 +1,255 @@
+//! [`UpdateRule`] — the inner optimizer applied once the subspace policies
+//! are fixed. Two families cover the paper:
+//!
+//! * [`SubspaceAdamW`] — AdamW on the projected gradient (GaLore / LDAdam /
+//!   DCT-AdamW / FIRA / FRUGAL). Owns the `R×r` moments and drives the
+//!   shared step skeleton: orient → EF replay → project (+rotate on
+//!   refresh) → EF capture → fused Adam moments → residual-aware
+//!   back-projection → decoupled-decay parameter write.
+//! * [`NewtonSchulzMomentum`] — Trion/Dion-style orthogonalized momentum
+//!   (Algorithm 1). Owns the full `R×C` momentum; the residual handling is
+//!   inherent (`M ← B − (1−μ)·b·Qᵀ` keeps everything the subspace missed),
+//!   so it composes with a source and cadence but not with the
+//!   rotation/residual policies.
+//!
+//! The rule is the per-layer step driver: `step_layer` receives the layer's
+//! source, rotation and residual policies plus the shared [`StepCtx`] and
+//! must stay allocation-free at steady state (every temporary from `ws`).
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::linalg::newton_schulz_into;
+use crate::optim::common::{
+    adam_moments_into, shape_factor, take_oriented_owned, AdamScalars, LayerMeta,
+    MemoryReport, OrientedGrad,
+};
+use crate::tensor::{Matrix, Workspace};
+
+use super::residual::ResidualPolicy;
+use super::rotation::RotationPolicy;
+use super::source::SubspaceSource;
+
+/// Per-step shared scalars, one instance per `Optimizer::step` call.
+#[derive(Clone, Copy)]
+pub struct Hyper {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+}
+
+pub struct StepCtx<'a> {
+    pub t: u64,
+    pub lr: f32,
+    pub hyper: Hyper,
+    /// Figure-1 instrumentation sink (Newton–Schulz rule only): per-layer
+    /// `‖B_t − O_t‖` keyed by layer name. Values are per-layer
+    /// deterministic and `BTreeMap` orders by key, so the instrumented
+    /// output is identical for any thread count.
+    pub errors: Option<&'a Mutex<BTreeMap<String, f64>>>,
+}
+
+pub trait UpdateRule: Send {
+    /// One low-rank layer step: update `param` in place from `grad`.
+    #[allow(clippy::too_many_arguments)]
+    fn step_layer(
+        &mut self,
+        meta: &LayerMeta,
+        source: &mut SubspaceSource,
+        rotation: &mut dyn RotationPolicy,
+        residual: &mut dyn ResidualPolicy,
+        param: &mut Matrix,
+        grad: &Matrix,
+        ctx: &StepCtx,
+        ws: &mut Workspace,
+    );
+
+    /// Persistent per-layer rule state ("adam_m_low"/"adam_v_low" or
+    /// "momentum" memory-report families).
+    fn memory(&self, rep: &mut MemoryReport);
+
+    /// The full-rank momentum buffer (Newton–Schulz rule) — test hook.
+    fn momentum(&self) -> Option<&Matrix> {
+        None
+    }
+}
+
+/// AdamW on the projected gradient; the skeleton every AdamW-family preset
+/// shares, with the rotation/residual hooks at the exact points the legacy
+/// loops touched them (pinned by `tests/engine_equivalence.rs`).
+pub struct SubspaceAdamW {
+    m: Matrix, // R×r
+    v: Matrix, // R×r
+}
+
+impl SubspaceAdamW {
+    pub fn new(rows: usize, rank: usize) -> Self {
+        SubspaceAdamW { m: Matrix::zeros(rows, rank), v: Matrix::zeros(rows, rank) }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn core(
+        &mut self,
+        meta: &LayerMeta,
+        source: &mut SubspaceSource,
+        rotation: &mut dyn RotationPolicy,
+        residual: &mut dyn ResidualPolicy,
+        param: &mut Matrix,
+        g: &Matrix,
+        ctx: &StepCtx,
+        ws: &mut Workspace,
+    ) {
+        let (rr, cc) = meta.oriented();
+        let r = source.rank();
+        let mut g_low = ws.take_uninit(rr, r);
+        if source.refresh_due(ctx.t) {
+            rotation.before_refresh(source);
+            source.refresh_and_project_into(g, &mut g_low, ws);
+            rotation.rotate_moments(source, &mut self.m, &mut self.v, ws);
+        } else {
+            source.project_into(g, &mut g_low, ws);
+        }
+        // residual capture happens before the moments move, as in the
+        // legacy EF loops; `full` doubles as the back-projection buffer
+        let mut full = ws.take_uninit(rr, cc);
+        residual.store_residual(source, &g_low, g, &mut full, ws);
+        // AdamW in the subspace — the shared fused kernel
+        let sc = AdamScalars::new(ctx.hyper.beta1, ctx.hyper.beta2, ctx.hyper.eps, ctx.t);
+        let mut u_low = ws.take_uninit(rr, r);
+        adam_moments_into(&mut u_low.data, &g_low.data, &mut self.m.data, &mut self.v.data, &sc);
+        // U = u·Qᵀ (+ the policy's residual term), applied in the original
+        // orientation without materializing a transpose
+        residual.finish_update(source, g, &g_low, &u_low, &mut full, ws);
+        param.scale(1.0 - ctx.lr * ctx.hyper.weight_decay);
+        if meta.needs_transpose() {
+            param.axpy_t(-ctx.lr, &full);
+        } else {
+            param.axpy(-ctx.lr, &full);
+        }
+        ws.give(u_low);
+        ws.give(full);
+        ws.give(g_low);
+    }
+}
+
+impl UpdateRule for SubspaceAdamW {
+    fn step_layer(
+        &mut self,
+        meta: &LayerMeta,
+        source: &mut SubspaceSource,
+        rotation: &mut dyn RotationPolicy,
+        residual: &mut dyn ResidualPolicy,
+        param: &mut Matrix,
+        grad: &Matrix,
+        ctx: &StepCtx,
+        ws: &mut Workspace,
+    ) {
+        if residual.wants_owned_grad() {
+            // oriented gradient, owned: error feedback mutates it
+            let mut g = take_oriented_owned(meta, grad, ws);
+            residual.add_into_grad(&mut g);
+            self.core(meta, source, rotation, residual, param, &g, ctx, ws);
+            ws.give(g);
+        } else {
+            // borrow in place unless transposed
+            let og = OrientedGrad::take(meta, grad, ws);
+            self.core(meta, source, rotation, residual, param, og.matrix(), ctx, ws);
+            og.give(ws);
+        }
+    }
+
+    fn memory(&self, rep: &mut MemoryReport) {
+        rep.add("adam_m_low", self.m.bytes());
+        rep.add("adam_v_low", self.v.bytes());
+    }
+}
+
+/// Trion's orthogonalized-momentum rule (Algorithm 1): accumulate the
+/// gradient into the full momentum, extract the subspace factor, feed the
+/// extraction error back (`M ← B − (1−μ)·b·Qᵀ`), Newton–Schulz the
+/// low-rank factor and apply `−η·max(1,√(R/C))·o·Qᵀ`.
+pub struct NewtonSchulzMomentum {
+    momentum: Matrix, // R×C (oriented)
+    mu: f32,
+    ns_steps: usize,
+}
+
+impl NewtonSchulzMomentum {
+    pub fn new(rows: usize, cols: usize, mu: f32, ns_steps: usize) -> Self {
+        NewtonSchulzMomentum { momentum: Matrix::zeros(rows, cols), mu, ns_steps }
+    }
+}
+
+impl UpdateRule for NewtonSchulzMomentum {
+    fn step_layer(
+        &mut self,
+        meta: &LayerMeta,
+        source: &mut SubspaceSource,
+        _rotation: &mut dyn RotationPolicy,
+        _residual: &mut dyn ResidualPolicy,
+        param: &mut Matrix,
+        grad: &Matrix,
+        ctx: &StepCtx,
+        ws: &mut Workspace,
+    ) {
+        let (rr, cc) = meta.oriented();
+        let r = source.rank();
+        // B = M + G — accumulate the gradient straight into the momentum,
+        // transposing on the fly for wide layers
+        if meta.needs_transpose() {
+            self.momentum.axpy_t(1.0, grad);
+        } else {
+            self.momentum.axpy(1.0, grad);
+        }
+        // S = DCT(B); select top-r; b = S[:, i_t] (one pass). A cadence > 1
+        // (a non-Trion grid point) reuses the held subspace between
+        // refreshes.
+        let mut b_low = ws.take_uninit(rr, r);
+        if source.refresh_due(ctx.t) {
+            source.refresh_and_project_into(&self.momentum, &mut b_low, ws);
+        } else {
+            source.project_into(&self.momentum, &mut b_low, ws);
+        }
+        // error feedback: M = B − (1−μ)·b·Qᵀ
+        let mut back = ws.take_uninit(rr, cc);
+        source.back_into(&b_low, &mut back, ws);
+        self.momentum.axpy(-(1.0 - self.mu), &back);
+        // Newton–Schulz on the LOW-RANK momentum (R×r), workspace-backed so
+        // the whole step stays allocation-free (tests/alloc_steady_state.rs)
+        let mut o_low = ws.take_uninit(rr, r);
+        newton_schulz_into(&b_low, self.ns_steps, &mut o_low, ws);
+        if let Some(errors) = ctx.errors {
+            // restore B while `back` still holds back(b_low), then
+            // repurpose `back` for O — computed only once
+            let mut b_now = ws.take_uninit(rr, cc);
+            b_now.copy_from(&self.momentum);
+            b_now.axpy(1.0 - self.mu, &back);
+            source.back_into(&o_low, &mut back, ws); // back = O
+            b_now.axpy(-1.0, &back);
+            errors.lock().unwrap().insert(meta.name.clone(), b_now.fro_norm());
+            ws.give(b_now);
+        } else {
+            // O = o·Qᵀ, applied without materializing the transpose
+            source.back_into(&o_low, &mut back, ws);
+        }
+        param.scale(1.0 - ctx.lr * ctx.hyper.weight_decay);
+        let scale = -ctx.lr * shape_factor(rr, cc);
+        if meta.needs_transpose() {
+            param.axpy_t(scale, &back);
+        } else {
+            param.axpy(scale, &back);
+        }
+        ws.give(o_low);
+        ws.give(back);
+        ws.give(b_low);
+    }
+
+    fn memory(&self, rep: &mut MemoryReport) {
+        rep.add("momentum", self.momentum.bytes());
+    }
+
+    fn momentum(&self) -> Option<&Matrix> {
+        Some(&self.momentum)
+    }
+}

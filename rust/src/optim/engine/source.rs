@@ -1,0 +1,77 @@
+//! [`SubspaceSource`] — one layer's subspace provider: a [`Projection`]
+//! plus the refresh schedule that decides *when* the subspace is
+//! recomputed. This is the first of the four policy axes (source, rotation,
+//! residual, update rule) the engine composes; the other three are traits,
+//! this one is a struct because every method is pure delegation and the
+//! schedule is a single integer.
+
+use crate::projection::Projection;
+use crate::tensor::{Matrix, Workspace};
+
+/// A projection plus its refresh cadence `T_u`.
+///
+/// `interval == 1` refreshes every step (LDAdam / Trion regime); larger
+/// intervals are the GaLore regime where the subspace is held fixed between
+/// refreshes. Step 1 always refreshes (every method needs an initial
+/// subspace fitted to real gradients).
+pub struct SubspaceSource {
+    proj: Box<dyn Projection>,
+    interval: u64,
+}
+
+impl SubspaceSource {
+    pub fn new(proj: Box<dyn Projection>, update_interval: usize) -> Self {
+        SubspaceSource { proj, interval: update_interval.max(1) as u64 }
+    }
+
+    /// The legacy cadence shared by every preset: refresh at `t == 1` and
+    /// whenever `t % T_u == 0`.
+    pub fn refresh_due(&self, t: u64) -> bool {
+        t == 1 || t % self.interval == 0
+    }
+
+    pub fn rank(&self) -> usize {
+        self.proj.rank()
+    }
+
+    pub fn refresh_and_project_into(&mut self, g: &Matrix, out: &mut Matrix, ws: &mut Workspace) {
+        self.proj.refresh_and_project_into(g, out, ws);
+    }
+
+    pub fn project_into(&self, g: &Matrix, out: &mut Matrix, ws: &mut Workspace) {
+        self.proj.project_into(g, out, ws);
+    }
+
+    pub fn back_into(&self, low: &Matrix, out: &mut Matrix, ws: &mut Workspace) {
+        self.proj.back_into(low, out, ws);
+    }
+
+    pub fn basis_into(&self, out: &mut Matrix) {
+        self.proj.basis_into(out);
+    }
+
+    pub fn rotation_into(&self, prev_basis: &Matrix, out: &mut Matrix, ws: &mut Workspace) {
+        self.proj.rotation_into(prev_basis, out, ws);
+    }
+
+    /// Selected column indices for index-selection bases (DCT / RandPerm);
+    /// `None` for dense bases. The typed dispatch the fixed-basis rotation
+    /// and the low-rank broadcast payload rely on.
+    pub fn indices(&self) -> Option<&[usize]> {
+        self.proj.indices()
+    }
+
+    /// Materialized basis `Q_r (C×r)` — allocating; test/instrumentation
+    /// hook, not a hot-path method.
+    pub fn basis(&self) -> Matrix {
+        self.proj.basis()
+    }
+
+    /// Per-layer state bytes. Per-device *shared* state is accounted by the
+    /// engine's own shared-DCT registry (`SubspaceEngine::memory_report`),
+    /// not through the source — a new shared-basis projection family must
+    /// be wired in there.
+    pub fn state_bytes(&self) -> u64 {
+        self.proj.state_bytes()
+    }
+}

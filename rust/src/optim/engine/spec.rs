@@ -1,0 +1,508 @@
+//! [`OptimizerSpec`] — the builder that makes the paper's whole ablation
+//! grid expressible as one value: a subspace **source** ([`ProjectionKind`]
+//! + refresh cadence), a moment **rotation** policy, a **residual** policy
+//! and an inner **update rule**, plus the shared hyper-parameters.
+//!
+//! The six published methods are presets
+//! ([`OptimizerSpec::dct_adamw`] … [`OptimizerSpec::ldadamw`]) whose built
+//! engines are bit-identical to the pre-engine hand-written optimizers
+//! (pinned by `tests/engine_equivalence.rs`); any other grid point — e.g.
+//! GaLore cadence + DCT source + Q8 error feedback — is the same builder
+//! with different axes, not a new optimizer file.
+
+use crate::optim::common::{OptimizerConfig, OptimizerKind};
+use crate::optim::EfMode;
+use crate::projection::{ProjectionKind, RankNorm};
+
+/// Residual-handling axis (Table 3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ResidualKind {
+    /// GaLore: discard the out-of-subspace gradient.
+    Discard,
+    /// LDAdam / DCT-AdamW: error-feedback buffer at the given resolution.
+    ErrorFeedback(EfMode),
+    /// FIRA: add the residual back, norm-scaled by ‖u_low‖/‖g_low‖.
+    FiraScale,
+    /// FRUGAL: SignSGD on the residual.
+    SignDescent,
+}
+
+/// Moment-rotation axis (Algorithm 2 / LDAdam §3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RotationKind {
+    /// Leave moments in the stale frame (GaLore / FRUGAL / FIRA).
+    None,
+    /// 0/1 index matching — requires an index-selection source
+    /// (DCT / RandPerm).
+    FixedBasis,
+    /// Dense `Q_prevᵀ·Q_crt` — works with any source, costs a second `C×r`
+    /// projector per layer.
+    Dense,
+}
+
+/// Inner update rule.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UpdateRuleKind {
+    /// Fused subspace AdamW (GaLore / LDAdam / DCT-AdamW / FIRA / FRUGAL).
+    SubspaceAdamW,
+    /// Newton–Schulz orthogonalized momentum (Trion / Dion family).
+    NewtonSchulz,
+}
+
+/// What a ZeRO owner broadcasts after computing a layer's update (§2.3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BroadcastKind {
+    /// The full `R×C` update.
+    Full,
+    /// The low-rank factor + indices (`R×r` floats + `r` int32).
+    LowRankFactor,
+}
+
+/// Builder-style composable optimizer configuration. Construct with a
+/// preset (or [`OptimizerSpec::base`]), adjust axes with the builder
+/// methods, then [`build`](OptimizerSpec::build) against the model's layer
+/// metas.
+#[derive(Clone, Debug)]
+pub struct OptimizerSpec {
+    pub rank: usize,
+    pub projection: ProjectionKind,
+    pub update_interval: usize,
+    pub rotation: RotationKind,
+    pub residual: ResidualKind,
+    pub rule: UpdateRuleKind,
+    pub broadcast: BroadcastKind,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    /// Trion/Dion momentum μ (Newton–Schulz rule only).
+    pub mu: f32,
+    /// Newton–Schulz iterations.
+    pub ns_steps: usize,
+    /// Weight decay for the dense-AdamW fallback layers when it differs
+    /// from `weight_decay` (the momentum presets decay only low-rank
+    /// layers, matching the legacy Trion/Dion behavior).
+    pub dense_weight_decay: Option<f32>,
+    /// Record per-layer projection errors each step (Figure 1;
+    /// Newton–Schulz rule only).
+    pub instrument: bool,
+    pub seed: u64,
+    /// Per-layer seed derivation: layer `i` gets
+    /// `seed ^ ((i as u64) << seed_shift)`. Presets keep their historical
+    /// shifts so seeded projections (Random/RandPerm) reproduce the
+    /// pre-engine trajectories exactly.
+    pub seed_shift: u32,
+    /// Execution lanes: `None` shares the process-global pool, `Some(n)` a
+    /// private n-lane pool (tests pin 1 vs N for bit-identity).
+    pub threads: Option<usize>,
+    name: Option<String>,
+}
+
+impl OptimizerSpec {
+    /// Neutral starting point: DCT source, refresh every step, no rotation,
+    /// residual discarded, subspace AdamW, paper hyper-parameters.
+    pub fn base(rank: usize) -> Self {
+        OptimizerSpec {
+            rank,
+            projection: ProjectionKind::Dct { norm: RankNorm::L2, use_makhoul: true },
+            update_interval: 1,
+            rotation: RotationKind::None,
+            residual: ResidualKind::Discard,
+            rule: UpdateRuleKind::SubspaceAdamW,
+            broadcast: BroadcastKind::Full,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: 0.01,
+            mu: 0.95,
+            ns_steps: 5,
+            dense_weight_decay: None,
+            instrument: false,
+            seed: 0,
+            seed_shift: 8,
+            threads: None,
+            name: None,
+        }
+    }
+
+    // -- the six published presets ---------------------------------------
+
+    /// DCT-AdamW (Algorithms 2–3): DCT column selection, fixed-basis moment
+    /// rotation, quantized error feedback.
+    pub fn dct_adamw(rank: usize) -> Self {
+        Self::base(rank)
+            .rotation(RotationKind::FixedBasis)
+            .residual(ResidualKind::ErrorFeedback(EfMode::Q8))
+    }
+
+    /// Trion (Algorithm 1): DCT column selection over the momentum,
+    /// Newton–Schulz orthogonalization, low-rank ZeRO broadcast.
+    pub fn trion(rank: usize) -> Self {
+        let mut s = Self::base(rank).rule(UpdateRuleKind::NewtonSchulz);
+        s.broadcast = BroadcastKind::LowRankFactor;
+        s.dense_weight_decay = Some(0.0);
+        s
+    }
+
+    /// GaLore: SVD source at a long cadence, residual discarded.
+    pub fn galore(rank: usize) -> Self {
+        Self::base(rank)
+            .projection(ProjectionKind::Svd)
+            .update_interval(200)
+    }
+
+    /// LDAdamW: block power iteration refreshed every step, dense moment
+    /// rotation, full-precision error feedback.
+    pub fn ldadamw(rank: usize) -> Self {
+        Self::base(rank)
+            .projection(ProjectionKind::BlockPower { iters: 2 })
+            .rotation(RotationKind::Dense)
+            .residual(ResidualKind::ErrorFeedback(EfMode::F32))
+    }
+
+    /// FIRA: norm-scaled residual re-injection.
+    pub fn fira(rank: usize) -> Self {
+        let mut s = Self::base(rank).residual(ResidualKind::FiraScale);
+        s.seed_shift = 12;
+        s
+    }
+
+    /// FRUGAL: SignSGD on the residual.
+    pub fn frugal(rank: usize) -> Self {
+        let mut s = Self::base(rank).residual(ResidualKind::SignDescent);
+        s.seed_shift = 4;
+        s
+    }
+
+    // -- builder methods --------------------------------------------------
+
+    pub fn rank(mut self, rank: usize) -> Self {
+        self.rank = rank;
+        self
+    }
+
+    /// Subspace source family (the `SubspaceSource` projection).
+    pub fn projection(mut self, kind: ProjectionKind) -> Self {
+        self.projection = kind;
+        self
+    }
+
+    /// Refresh cadence `T_u` (1 = every step, GaLore default 200).
+    pub fn update_interval(mut self, t: usize) -> Self {
+        self.update_interval = t.max(1);
+        self
+    }
+
+    pub fn rotation(mut self, r: RotationKind) -> Self {
+        self.rotation = r;
+        self
+    }
+
+    pub fn residual(mut self, r: ResidualKind) -> Self {
+        self.residual = r;
+        self
+    }
+
+    pub fn rule(mut self, r: UpdateRuleKind) -> Self {
+        self.rule = r;
+        self
+    }
+
+    pub fn betas(mut self, beta1: f32, beta2: f32) -> Self {
+        self.beta1 = beta1;
+        self.beta2 = beta2;
+        self
+    }
+
+    pub fn eps(mut self, eps: f32) -> Self {
+        self.eps = eps;
+        self
+    }
+
+    pub fn weight_decay(mut self, wd: f32) -> Self {
+        self.weight_decay = wd;
+        self
+    }
+
+    pub fn mu(mut self, mu: f32) -> Self {
+        self.mu = mu;
+        self
+    }
+
+    pub fn ns_steps(mut self, n: usize) -> Self {
+        self.ns_steps = n;
+        self
+    }
+
+    pub fn instrument(mut self, on: bool) -> Self {
+        self.instrument = on;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn threads(mut self, threads: Option<usize>) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// Override the reported optimizer name (otherwise derived from the
+    /// composition, matching the legacy preset names exactly).
+    pub fn named(mut self, name: &str) -> Self {
+        self.name = Some(name.to_string());
+        self
+    }
+
+    // -- preset aliasing ---------------------------------------------------
+
+    /// The spec behind a legacy [`OptimizerKind`] under a given
+    /// [`OptimizerConfig`] — the exact semantics of the pre-engine
+    /// constructors, including which config fields each preset honored
+    /// (Trion/LDAdamW always refresh; GaLore pins SVD; LDAdamW pins f32
+    /// error feedback). `None` for the dense/full-momentum kinds
+    /// (AdamW/Muon/Dion), which stay hand-written.
+    pub fn from_kind(kind: &OptimizerKind, cfg: &OptimizerConfig) -> Option<OptimizerSpec> {
+        let dct = match &cfg.projection {
+            ProjectionKind::Dct { norm, use_makhoul } => {
+                ProjectionKind::Dct { norm: *norm, use_makhoul: *use_makhoul }
+            }
+            _ => ProjectionKind::Dct { norm: RankNorm::L2, use_makhoul: true },
+        };
+        let spec = match kind {
+            OptimizerKind::DctAdamW => Self::dct_adamw(cfg.rank)
+                .projection(dct)
+                .residual(ResidualKind::ErrorFeedback(cfg.ef_mode))
+                .update_interval(cfg.update_interval),
+            OptimizerKind::Trion => Self::trion(cfg.rank).projection(dct),
+            OptimizerKind::GaLore => {
+                Self::galore(cfg.rank).update_interval(cfg.update_interval)
+            }
+            OptimizerKind::LdAdamW => Self::ldadamw(cfg.rank),
+            OptimizerKind::Fira => Self::fira(cfg.rank)
+                .projection(cfg.projection.clone())
+                .update_interval(cfg.update_interval),
+            OptimizerKind::Frugal => Self::frugal(cfg.rank)
+                .projection(cfg.projection.clone())
+                .update_interval(cfg.update_interval),
+            _ => return None,
+        };
+        Some(
+            spec.betas(cfg.beta1, cfg.beta2)
+                .eps(cfg.eps)
+                .weight_decay(cfg.weight_decay)
+                .mu(cfg.mu)
+                .ns_steps(cfg.ns_steps)
+                .instrument(cfg.instrument)
+                .seed(cfg.seed)
+                .threads(cfg.threads),
+        )
+    }
+
+    /// Check that the composition exists: fixed-basis rotation needs an
+    /// index-selection source (DCT / RandPerm), and the Newton–Schulz rule
+    /// handles its residual inherently so the rotation/residual axes must
+    /// stay at their neutral settings. [`build`](OptimizerSpec::build)
+    /// panics on exactly these conditions; config-driven construction calls
+    /// this first to fail with an error instead.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.rotation == RotationKind::FixedBasis
+            && !matches!(
+                self.projection,
+                ProjectionKind::Dct { .. } | ProjectionKind::RandPerm
+            )
+        {
+            return Err(format!(
+                "fixed-basis rotation needs an index-selection source \
+                 (dct/randperm), got {}",
+                self.projection.name()
+            ));
+        }
+        if self.rule == UpdateRuleKind::NewtonSchulz
+            && (self.residual != ResidualKind::Discard
+                || self.rotation != RotationKind::None)
+        {
+            return Err(
+                "the Newton–Schulz momentum rule handles its residual \
+                 inherently (M ← B − (1−μ)·b·Qᵀ); compose it with \
+                 residual=discard, rotation=none"
+                    .to_string(),
+            );
+        }
+        Ok(())
+    }
+
+    // -- naming ------------------------------------------------------------
+
+    /// The engine's reported name: the explicit override if set, else the
+    /// legacy preset name when the composition matches a published method,
+    /// else a synthesized composition string.
+    pub(super) fn resolve_name(&self) -> String {
+        if let Some(n) = &self.name {
+            return n.clone();
+        }
+        let proj = self.projection.name();
+        match (self.rule, self.residual, self.rotation) {
+            (UpdateRuleKind::NewtonSchulz, ResidualKind::Discard, RotationKind::None) => {
+                match self.projection {
+                    ProjectionKind::Dct { .. } => "trion".to_string(),
+                    _ => format!("trion+{proj}"),
+                }
+            }
+            (UpdateRuleKind::SubspaceAdamW, ResidualKind::SignDescent, RotationKind::None) => {
+                match self.projection {
+                    ProjectionKind::BlockPower { .. } => "frugal".to_string(),
+                    _ => format!("frugal+{proj}"),
+                }
+            }
+            (UpdateRuleKind::SubspaceAdamW, ResidualKind::FiraScale, RotationKind::None) => {
+                match self.projection {
+                    ProjectionKind::Dct { .. } | ProjectionKind::Svd => format!("fira+{proj}"),
+                    _ => "fira".to_string(),
+                }
+            }
+            (
+                UpdateRuleKind::SubspaceAdamW,
+                ResidualKind::ErrorFeedback(EfMode::F32),
+                RotationKind::Dense,
+            ) if matches!(self.projection, ProjectionKind::BlockPower { .. }) => {
+                "ldadamw".to_string()
+            }
+            (
+                UpdateRuleKind::SubspaceAdamW,
+                ResidualKind::ErrorFeedback(_),
+                RotationKind::FixedBasis,
+            ) if matches!(self.projection, ProjectionKind::Dct { .. }) => {
+                "dct-adamw".to_string()
+            }
+            (UpdateRuleKind::SubspaceAdamW, ResidualKind::Discard, RotationKind::None) => {
+                match self.projection {
+                    ProjectionKind::Svd => "galore".to_string(),
+                    ProjectionKind::Dct { .. } => "galore+dct".to_string(),
+                    _ => format!("galore+{proj}"),
+                }
+            }
+            _ => self.composed_name(),
+        }
+    }
+
+    /// Human-readable policy composition (the `info` command's view of a
+    /// preset): every axis spelled out.
+    pub fn describe(&self) -> String {
+        let rot = match self.rotation {
+            RotationKind::None => "none",
+            RotationKind::FixedBasis => "fixed-basis",
+            RotationKind::Dense => "dense",
+        };
+        let resid = match self.residual {
+            ResidualKind::Discard => "discard".to_string(),
+            ResidualKind::ErrorFeedback(EfMode::None) => "ef(none)".to_string(),
+            ResidualKind::ErrorFeedback(EfMode::F32) => "ef(f32)".to_string(),
+            ResidualKind::ErrorFeedback(EfMode::Q8) => "ef(q8)".to_string(),
+            ResidualKind::FiraScale => "fira-scale".to_string(),
+            ResidualKind::SignDescent => "sign-sgd".to_string(),
+        };
+        let rule = match self.rule {
+            UpdateRuleKind::SubspaceAdamW => "subspace-adamw",
+            UpdateRuleKind::NewtonSchulz => "newton-schulz",
+        };
+        format!(
+            "source={} T_u={} rotation={} residual={} rule={}",
+            self.projection.name(),
+            self.update_interval,
+            rot,
+            resid,
+            rule
+        )
+    }
+
+    /// Synthesized name for off-grid compositions, e.g.
+    /// `engine(svd+adamw+ef-q8,T200)`.
+    fn composed_name(&self) -> String {
+        let rule = match self.rule {
+            UpdateRuleKind::SubspaceAdamW => "adamw",
+            UpdateRuleKind::NewtonSchulz => "ns",
+        };
+        let resid = match self.residual {
+            ResidualKind::Discard => "discard",
+            ResidualKind::ErrorFeedback(EfMode::None) => "ef-none",
+            ResidualKind::ErrorFeedback(EfMode::F32) => "ef-f32",
+            ResidualKind::ErrorFeedback(EfMode::Q8) => "ef-q8",
+            ResidualKind::FiraScale => "fira",
+            ResidualKind::SignDescent => "sign",
+        };
+        let rot = match self.rotation {
+            RotationKind::None => "",
+            RotationKind::FixedBasis => "+rot-fixed",
+            RotationKind::Dense => "+rot-dense",
+        };
+        format!(
+            "engine({}+{}+{}{},T{})",
+            self.projection.name(),
+            rule,
+            resid,
+            rot,
+            self.update_interval
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve_legacy_names() {
+        assert_eq!(OptimizerSpec::dct_adamw(8).resolve_name(), "dct-adamw");
+        assert_eq!(OptimizerSpec::trion(8).resolve_name(), "trion");
+        assert_eq!(OptimizerSpec::galore(8).resolve_name(), "galore");
+        assert_eq!(OptimizerSpec::ldadamw(8).resolve_name(), "ldadamw");
+        assert_eq!(OptimizerSpec::fira(8).resolve_name(), "fira+dct");
+        assert_eq!(OptimizerSpec::frugal(8).resolve_name(), "frugal+dct");
+        assert_eq!(
+            OptimizerSpec::galore(8)
+                .projection(ProjectionKind::Dct { norm: RankNorm::L2, use_makhoul: true })
+                .resolve_name(),
+            "galore+dct"
+        );
+        assert_eq!(
+            OptimizerSpec::frugal(8).projection(ProjectionKind::RandPerm).resolve_name(),
+            "frugal+randperm"
+        );
+    }
+
+    #[test]
+    fn novel_combo_gets_composed_name() {
+        let s = OptimizerSpec::galore(8)
+            .projection(ProjectionKind::Dct { norm: RankNorm::L2, use_makhoul: true })
+            .residual(ResidualKind::ErrorFeedback(EfMode::Q8))
+            .update_interval(200);
+        assert_eq!(s.resolve_name(), "engine(dct+adamw+ef-q8,T200)");
+        assert_eq!(s.clone().named("my-opt").resolve_name(), "my-opt");
+    }
+
+    #[test]
+    fn from_kind_mirrors_legacy_constructor_quirks() {
+        let mut cfg = OptimizerConfig { rank: 16, update_interval: 7, ..Default::default() };
+        cfg.projection = ProjectionKind::Svd;
+        // GaLore pins SVD whatever the config says, and takes the cadence
+        let g = OptimizerSpec::from_kind(&OptimizerKind::GaLore, &cfg).unwrap();
+        assert_eq!(g.projection, ProjectionKind::Svd);
+        assert_eq!(g.update_interval, 7);
+        // Trion/LDAdamW always refresh every step
+        let t = OptimizerSpec::from_kind(&OptimizerKind::Trion, &cfg).unwrap();
+        assert_eq!(t.update_interval, 1);
+        assert_eq!(t.dense_weight_decay, Some(0.0));
+        let l = OptimizerSpec::from_kind(&OptimizerKind::LdAdamW, &cfg).unwrap();
+        assert_eq!(l.update_interval, 1);
+        assert_eq!(l.residual, ResidualKind::ErrorFeedback(EfMode::F32));
+        // Trion falls back to the default DCT when the config projection
+        // is non-DCT
+        assert!(matches!(t.projection, ProjectionKind::Dct { .. }));
+        // dense kinds are not engine presets
+        assert!(OptimizerSpec::from_kind(&OptimizerKind::AdamW, &cfg).is_none());
+        assert!(OptimizerSpec::from_kind(&OptimizerKind::Dion, &cfg).is_none());
+    }
+}

@@ -2,6 +2,15 @@
 //! baseline it evaluates against (AdamW, Muon, Dion, GaLore, LDAdamW,
 //! FRUGAL, FIRA).
 //!
+//! The low-rank family is built by the composable [`engine`]: a single
+//! [`SubspaceEngine`] step loop parameterized by four policy axes (subspace
+//! source, moment rotation, residual handling, inner update rule) through
+//! the [`OptimizerSpec`] builder. The six published methods are presets of
+//! that builder — `OptimizerSpec::dct_adamw(r)`, `::trion(r)`, … — and
+//! [`build_optimizer`] / [`OptimizerKind`] remain as thin aliases for them.
+//! Only the dense/full-momentum baselines (AdamW, Muon, Dion) stay
+//! hand-written.
+//!
 //! All optimizers implement [`Optimizer`]: they own per-layer state, consume
 //! the (already all-reduced) gradients and update the parameter buffers in
 //! place. Low-rank treatment applies to 2-D `linear` parameters; `embed` /
@@ -16,25 +25,18 @@ pub mod common;
 pub mod adamw;
 pub mod muon;
 pub mod dion;
-pub mod trion;
-pub mod galore;
-pub mod ldadamw;
-pub mod dct_adamw;
-pub mod frugal;
-pub mod fira;
+pub mod engine;
 pub mod error_feedback;
 
 pub use adamw::AdamW;
 pub use common::{
-    adam_fused_update, adam_moments_into, build_optimizer, shared_dct_registry,
-    step_layers_parallel, AdamScalars, LayerMeta, MemoryReport, Optimizer,
-    OptimizerConfig, OptimizerKind, ParamKind,
+    adam_fused_update, adam_moments_into, build_optimizer, pool_for_threads,
+    shared_dct_registry, step_layers_parallel, AdamScalars, EfMode, LayerMeta,
+    MemoryReport, Optimizer, OptimizerConfig, OptimizerKind, ParamKind,
 };
-pub use dct_adamw::DctAdamW;
 pub use dion::Dion;
-pub use fira::Fira;
-pub use frugal::Frugal;
-pub use galore::GaLore;
-pub use ldadamw::LdAdamW;
+pub use engine::{
+    rotate_fixed_basis, rotate_fixed_basis_into, BroadcastKind, OptimizerSpec,
+    ResidualKind, RotationKind, SubspaceEngine, UpdateRuleKind,
+};
 pub use muon::Muon;
-pub use trion::Trion;

@@ -108,7 +108,7 @@ impl Optimizer for Muon {
         r
     }
 
-    fn name(&self) -> &'static str {
+    fn name(&self) -> &str {
         "muon"
     }
 

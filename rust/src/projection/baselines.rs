@@ -2,7 +2,7 @@
 //! FIRA), block power iteration (LDAdam), random semi-orthogonal and random
 //! permutation (FRUGAL's ablations).
 
-use crate::linalg::{block_power_iter, qr_thin, svd_thin};
+use crate::linalg::{block_power_iter, qr_q_into, qr_thin, svd_thin};
 use crate::tensor::{
     matmul, matmul_a_bt, matmul_a_bt_into, matmul_at_b_into, matmul_into,
     Matrix, Workspace,
@@ -111,6 +111,41 @@ impl Projection for BlockPower {
         self.project(g)
     }
 
+    /// Workspace-backed refresh: the same block power sweep as
+    /// [`block_power_iter`] (same matmuls, same `qr_q_into` Householder
+    /// arithmetic — bit-identical; the `_into` property test in
+    /// `projection/mod.rs` pins both the cold-start and the warm-start
+    /// refresh against the allocating path) with every temporary pooled,
+    /// so the LDAdamW-style refresh-every-step loop runs allocation-free
+    /// at steady state. Only the cold-start Gaussian seed (first refresh
+    /// ever) allocates.
+    fn refresh_and_project_into(&mut self, g: &Matrix, out: &mut Matrix, ws: &mut Workspace) {
+        let c = g.cols;
+        let r = self.q_r.cols.min(c);
+        let mut v = ws.take_uninit(c, r);
+        if self.warm && self.q_r.shape() == (c, r) {
+            v.copy_from(&self.q_r);
+        } else {
+            // cold start: the fixed-seed Gaussian block_power_iter uses
+            let mut rng = Pcg64::seed(0x9e3779b97f4a7c15);
+            v.copy_from(&Matrix::randn(c, r, 1.0, &mut rng));
+        }
+        let mut q = ws.take_uninit(c, r);
+        qr_q_into(&v, &mut q, ws);
+        let mut gv = ws.take_uninit(g.rows, r);
+        for _ in 0..self.iters.max(1) {
+            matmul_into(g, &q, &mut gv);
+            matmul_at_b_into(g, &gv, &mut v); // v doubles as the GᵀGV buffer
+            qr_q_into(&v, &mut q, ws);
+        }
+        self.q_r.copy_from(&q);
+        self.warm = true;
+        ws.give(gv);
+        ws.give(q);
+        ws.give(v);
+        matmul_into(g, &self.q_r, out);
+    }
+
     dense_basis_impl!();
 
     fn name(&self) -> &'static str {
@@ -208,6 +243,10 @@ impl Projection for RandPerm {
             *q.at_mut(j, k) = 1.0;
         }
         q
+    }
+
+    fn indices(&self) -> Option<&[usize]> {
+        Some(&self.idx)
     }
 
     fn state_bytes(&self) -> u64 {

@@ -230,6 +230,10 @@ impl Projection for DctSelect {
         out.copy_from(&self.basis_cache);
     }
 
+    fn indices(&self) -> Option<&[usize]> {
+        Some(&self.idx)
+    }
+
     fn state_bytes(&self) -> u64 {
         (self.idx.len() * 4) as u64 // r int32 indices — the paper's claim
     }

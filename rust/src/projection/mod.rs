@@ -148,6 +148,14 @@ pub trait Projection: Send {
         out.copy_from(&rot);
     }
 
+    /// For index-selection bases (DCT column selection, RandPerm): the
+    /// currently selected column indices, ascending. `None` for dense
+    /// bases. Drives the typed fixed-basis rotation dispatch (the engine's
+    /// index-matching moment rotation only exists when this is `Some`).
+    fn indices(&self) -> Option<&[usize]> {
+        None
+    }
+
     /// Persistent per-layer state bytes (what lives in optimizer memory
     /// between steps — *not* transient compute buffers).
     fn state_bytes(&self) -> u64;
@@ -264,6 +272,15 @@ mod tests {
                 let prev = p_alloc.basis();
                 p_into.rotation_into(&prev, &mut out, &mut ws);
                 assert_eq!(out, p_alloc.rotation_from(&prev), "{}: rotation", kind.name());
+
+                // a second refresh pins the warm-start branches too
+                // (BlockPower seeds from its previous basis; the seeded
+                // kinds advance their RNGs in lockstep)
+                let low2 = p_alloc.refresh_and_project(&g);
+                p_into.refresh_and_project_into(&g, &mut out, &mut ws);
+                assert_eq!(out, low2, "{}: warm refresh_and_project", kind.name());
+                p_into.basis_into(&mut out);
+                assert_eq!(out, p_alloc.basis(), "{}: warm basis", kind.name());
             }
         });
     }

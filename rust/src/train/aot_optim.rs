@@ -63,6 +63,20 @@ pub fn maybe_wrap_aot(
     manifest: &Manifest,
     rt: &Runtime,
 ) -> Result<Box<dyn Optimizer>> {
+    // The exported update graphs encode the stock presets; an engine grid
+    // point (source=/residual=/rotation=/rank-norm= overrides) has no
+    // matching artifact, so keep the rust-native engine rather than
+    // silently running the wrong optimizer.
+    if cfg.has_engine_overrides() || cfg.rank_norm_override.is_some() {
+        eprintln!(
+            "warning: no AOT artifacts exist for engine policy overrides \
+             (source/residual/rotation/rank-norm) — the overrides are \
+             honored, but {} runs on the rust-native path instead of the \
+             AOT graphs",
+            inner.name()
+        );
+        return Ok(inner);
+    }
     let family = match cfg.optimizer {
         OptimizerKind::Trion => "trion",
         OptimizerKind::DctAdamW => "dctadamw",
@@ -261,7 +275,7 @@ impl Optimizer for AotOptimizer {
         r
     }
 
-    fn name(&self) -> &'static str {
+    fn name(&self) -> &str {
         match self.kind {
             OptimizerKind::Trion => "trion(aot)",
             OptimizerKind::DctAdamW => "dct-adamw(aot)",

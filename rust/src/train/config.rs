@@ -5,9 +5,33 @@
 use anyhow::Result;
 
 use crate::optim::common::EfMode;
-use crate::optim::{OptimizerConfig, OptimizerKind};
+use crate::optim::{
+    build_optimizer, LayerMeta, Optimizer, OptimizerConfig, OptimizerKind,
+    OptimizerSpec, ResidualKind, RotationKind,
+};
 use crate::projection::{ProjectionKind, RankNorm};
 use crate::util::json::{num, obj, s, Json};
+
+/// Config-level residual choice: resolved against `ef-mode` at build time
+/// (so `residual=ef ef-mode=q8` works in either key order).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ResidualChoice {
+    Discard,
+    Ef,
+    Fira,
+    Sign,
+}
+
+impl ResidualChoice {
+    fn name(self) -> &'static str {
+        match self {
+            ResidualChoice::Discard => "discard",
+            ResidualChoice::Ef => "ef",
+            ResidualChoice::Fira => "fira",
+            ResidualChoice::Sign => "sign",
+        }
+    }
+}
 
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
@@ -31,6 +55,19 @@ pub struct TrainConfig {
     /// a matching artifact exists (three-layer composition) instead of the
     /// rust-native math.
     pub use_aot_optimizer: bool,
+    /// Engine policy overrides (`source=` / `residual=` / `rotation=` keys):
+    /// `None` keeps the preset's own axis; any `Some` switches construction
+    /// to the [`OptimizerSpec`] grid, so arbitrary combinations — e.g.
+    /// GaLore cadence + DCT source + Q8 error feedback — are one config
+    /// line, not a new optimizer file.
+    pub source_override: Option<ProjectionKind>,
+    pub residual_override: Option<ResidualChoice>,
+    pub rotation_override: Option<RotationKind>,
+    /// `rank-norm=` key: a deferred override of the DCT ranking norm,
+    /// applied at build/dump time to whatever DCT projection ends up
+    /// configured (`projection=` and `source=` alike) — so the key composes
+    /// with them in any order and always wins over the `dct:l1|l2` grammar.
+    pub rank_norm_override: Option<RankNorm>,
 }
 
 impl Default for TrainConfig {
@@ -53,11 +90,117 @@ impl Default for TrainConfig {
             run_name: String::new(),
             opt: OptimizerConfig::default(),
             use_aot_optimizer: false,
+            source_override: None,
+            residual_override: None,
+            rotation_override: None,
+            rank_norm_override: None,
         }
     }
 }
 
+/// Shared projection-value grammar for the `projection=` and `source=`
+/// keys: `dct[:l1|:l2][:fft|:matmul]`, `svd`, `random`, `randperm`,
+/// `block_power`.
+pub fn parse_projection(value: &str) -> Result<ProjectionKind> {
+    if value == "dct" || value.starts_with("dct:") {
+        let mut norm = RankNorm::L2;
+        let mut use_makhoul = true;
+        for part in value.split(':').skip(1) {
+            match part {
+                "l1" => norm = RankNorm::L1,
+                "l2" => norm = RankNorm::L2,
+                "fft" | "makhoul" => use_makhoul = true,
+                "matmul" => use_makhoul = false,
+                other => anyhow::bail!("unknown dct projection option {other:?}"),
+            }
+        }
+        return Ok(ProjectionKind::Dct { norm, use_makhoul });
+    }
+    if let Some(n) = value
+        .strip_prefix("block_power:")
+        .or_else(|| value.strip_prefix("block-power:"))
+    {
+        return Ok(ProjectionKind::BlockPower { iters: n.parse()? });
+    }
+    Ok(match value {
+        "svd" => ProjectionKind::Svd,
+        "random" => ProjectionKind::Random,
+        "randperm" => ProjectionKind::RandPerm,
+        "block_power" | "block-power" => ProjectionKind::BlockPower { iters: 2 },
+        _ => anyhow::bail!("unknown projection {value:?}"),
+    })
+}
+
 impl TrainConfig {
+    /// Whether any engine policy override key (`source=` / `residual=` /
+    /// `rotation=`) is set — i.e. the run is an [`OptimizerSpec`] grid
+    /// point rather than a plain preset.
+    pub fn has_engine_overrides(&self) -> bool {
+        self.source_override.is_some()
+            || self.residual_override.is_some()
+            || self.rotation_override.is_some()
+    }
+
+    /// `kind` with the deferred `rank-norm=` override folded in (no-op on
+    /// non-DCT kinds).
+    fn with_rank_norm(&self, kind: &ProjectionKind) -> ProjectionKind {
+        match (self.rank_norm_override, kind) {
+            (Some(n), ProjectionKind::Dct { use_makhoul, .. }) => {
+                ProjectionKind::Dct { norm: n, use_makhoul: *use_makhoul }
+            }
+            _ => kind.clone(),
+        }
+    }
+
+    /// Construct the run's optimizer. Without engine overrides this is the
+    /// legacy preset path ([`build_optimizer`], bit-identical to the
+    /// pre-engine optimizers); with any `source=`/`residual=`/`rotation=`/
+    /// `rank-norm=` override it resolves the preset's [`OptimizerSpec`] and
+    /// rebinds the overridden axes. `rank-norm` is folded into the
+    /// *resolved* source — after preset resolution and the `source=`
+    /// override — and errors if that source is not DCT, so the override can
+    /// never be dropped silently (presets like GaLore/LDAdamW pin non-DCT
+    /// sources and ignore `projection=`).
+    pub fn build_optimizer(&self, metas: &[LayerMeta]) -> Result<Box<dyn Optimizer>> {
+        if !self.has_engine_overrides() && self.rank_norm_override.is_none() {
+            return Ok(build_optimizer(&self.optimizer, metas, &self.opt));
+        }
+        let Some(mut spec) = OptimizerSpec::from_kind(&self.optimizer, &self.opt) else {
+            anyhow::bail!(
+                "engine overrides (source/residual/rotation/rank-norm) need \
+                 a low-rank optimizer preset, not {}",
+                self.optimizer.name()
+            );
+        };
+        if let Some(p) = &self.source_override {
+            spec = spec.projection(p.clone());
+        }
+        if self.rank_norm_override.is_some() {
+            let folded = self.with_rank_norm(&spec.projection);
+            if !matches!(folded, ProjectionKind::Dct { .. }) {
+                anyhow::bail!(
+                    "rank-norm is set but the resolved subspace source is {} \
+                     — it only applies to dct",
+                    folded.name()
+                );
+            }
+            spec = spec.projection(folded);
+        }
+        if let Some(r) = self.residual_override {
+            spec = spec.residual(match r {
+                ResidualChoice::Discard => ResidualKind::Discard,
+                ResidualChoice::Ef => ResidualKind::ErrorFeedback(self.opt.ef_mode),
+                ResidualChoice::Fira => ResidualKind::FiraScale,
+                ResidualChoice::Sign => ResidualKind::SignDescent,
+            });
+        }
+        if let Some(r) = self.rotation_override {
+            spec = spec.rotation(r);
+        }
+        spec.validate().map_err(anyhow::Error::msg)?;
+        Ok(Box::new(spec.build(metas)))
+    }
+
     pub fn run_name(&self) -> String {
         if self.run_name.is_empty() {
             format!(
@@ -72,8 +215,11 @@ impl TrainConfig {
         }
     }
 
-    pub fn to_json(&self) -> Json {
-        let proj = match &self.opt.projection {
+    /// The `projection=`/`source=` value string for a [`ProjectionKind`] —
+    /// parseable back through [`parse_projection`], so the JSON snapshot
+    /// round-trips through [`TrainConfig::apply`].
+    fn projection_string(kind: &ProjectionKind) -> String {
+        match kind {
             ProjectionKind::Dct { norm, use_makhoul } => format!(
                 "dct:{}:{}",
                 if *norm == RankNorm::L1 { "l1" } else { "l2" },
@@ -83,8 +229,44 @@ impl TrainConfig {
             ProjectionKind::BlockPower { iters } => format!("block_power:{iters}"),
             ProjectionKind::Random => "random".into(),
             ProjectionKind::RandPerm => "randperm".into(),
-        };
-        obj(vec![
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        // dump *effective* kinds — the deferred rank-norm override folded
+        // in — so the recorded config matches what the run executes
+        let proj = Self::projection_string(&self.with_rank_norm(&self.opt.projection));
+        let mut extra = Vec::new();
+        // the rank_norm key is dumped only when the override was set: the
+        // norm is always recorded inside the projection/source strings, and
+        // an unconditional key would flip a replayed preset run onto the
+        // engine-override construction path (skipping e.g. AOT wrapping)
+        if let Some(n) = self.rank_norm_override {
+            extra.push((
+                "rank_norm",
+                s(if n == RankNorm::L1 { "l1" } else { "l2" }),
+            ));
+        }
+        if let Some(src) = &self.source_override {
+            extra.push((
+                "source",
+                s(&Self::projection_string(&self.with_rank_norm(src))),
+            ));
+        }
+        if let Some(r) = self.residual_override {
+            extra.push(("residual", s(r.name())));
+        }
+        if let Some(r) = self.rotation_override {
+            extra.push((
+                "rotation",
+                s(match r {
+                    RotationKind::None => "none",
+                    RotationKind::FixedBasis => "fixed-basis",
+                    RotationKind::Dense => "dense",
+                }),
+            ));
+        }
+        let mut fields = vec![
             ("preset", s(&self.preset)),
             ("optimizer", s(self.optimizer.name())),
             ("steps", num(self.steps as f64)),
@@ -110,7 +292,9 @@ impl TrainConfig {
             ("use_aot_optimizer", Json::Bool(self.use_aot_optimizer)),
             // 0 = auto (global pool)
             ("threads", num(self.opt.threads.unwrap_or(0) as f64)),
-        ])
+        ];
+        fields.extend(extra);
+        obj(fields)
     }
 
     /// Parse a `key=value` override (CLI plumbing).
@@ -154,28 +338,20 @@ impl TrainConfig {
             "use-aot-optimizer" | "use_aot_optimizer" => {
                 self.use_aot_optimizer = value.parse()?
             }
-            "projection" => {
-                self.opt.projection = match value {
-                    "svd" => ProjectionKind::Svd,
-                    "random" => ProjectionKind::Random,
-                    "randperm" => ProjectionKind::RandPerm,
-                    "block_power" | "block-power" => {
-                        ProjectionKind::BlockPower { iters: 2 }
-                    }
-                    "dct" | "dct:l2:fft" => ProjectionKind::Dct {
-                        norm: RankNorm::L2,
-                        use_makhoul: true,
-                    },
-                    "dct:l1" => ProjectionKind::Dct {
-                        norm: RankNorm::L1,
-                        use_makhoul: true,
-                    },
-                    "dct:l2:matmul" => ProjectionKind::Dct {
-                        norm: RankNorm::L2,
-                        use_makhoul: false,
-                    },
-                    _ => anyhow::bail!("unknown projection {value}"),
-                }
+            "projection" => self.opt.projection = parse_projection(value)?,
+            // ranking norm for DCT column selection (§2.1: ℓ1 or ℓ2) — a
+            // deferred override folded into the *resolved* DCT source at
+            // build/dump time (build_optimizer is the single authority:
+            // presets may fall back to DCT from a non-DCT `projection=`, so
+            // applicability can't be judged here), composing with
+            // `projection=` / `source=` in any key order and winning over
+            // their `dct:l1|l2` grammar
+            "rank-norm" | "rank_norm" => {
+                self.rank_norm_override = Some(match value {
+                    "l1" => RankNorm::L1,
+                    "l2" => RankNorm::L2,
+                    _ => anyhow::bail!("unknown rank norm {value:?} (l1|l2)"),
+                })
             }
             "ef-mode" | "ef_mode" => {
                 self.opt.ef_mode = match value {
@@ -184,6 +360,29 @@ impl TrainConfig {
                     "q8" => EfMode::Q8,
                     _ => anyhow::bail!("unknown ef mode {value}"),
                 }
+            }
+            // engine policy overrides — any grid point from config alone
+            "source" => self.source_override = Some(parse_projection(value)?),
+            "residual" => {
+                self.residual_override = Some(match value {
+                    "discard" => ResidualChoice::Discard,
+                    "ef" => ResidualChoice::Ef,
+                    "fira" => ResidualChoice::Fira,
+                    "sign" => ResidualChoice::Sign,
+                    _ => anyhow::bail!(
+                        "unknown residual policy {value:?} (discard|ef|fira|sign)"
+                    ),
+                })
+            }
+            "rotation" => {
+                self.rotation_override = Some(match value {
+                    "none" => RotationKind::None,
+                    "fixed-basis" | "fixed_basis" | "fixed" => RotationKind::FixedBasis,
+                    "dense" => RotationKind::Dense,
+                    _ => anyhow::bail!(
+                        "unknown rotation policy {value:?} (none|fixed-basis|dense)"
+                    ),
+                })
             }
             _ => anyhow::bail!("unknown config key {key:?}"),
         }
@@ -225,5 +424,177 @@ mod tests {
         let back = Json::parse(&j).unwrap();
         assert_eq!(back.req("optimizer").unwrap().as_str().unwrap(), "trion");
         assert_eq!(back.req("rank").unwrap().as_usize().unwrap(), 32);
+        // the previously unreachable ef axis is in the dump; the rank-norm
+        // key appears only when explicitly overridden (the norm itself is
+        // inside the projection string), so preset dumps replay on the
+        // preset path
+        assert_eq!(back.req("ef_mode").unwrap().as_str().unwrap(), "q8");
+        assert!(back.get("rank_norm").is_none());
+        assert_eq!(
+            back.req("projection").unwrap().as_str().unwrap(),
+            "dct:l2:fft"
+        );
+    }
+
+    #[test]
+    fn rank_norm_key_round_trips() {
+        let mut c = TrainConfig::default();
+        c.apply("rank-norm", "l1").unwrap();
+        assert_eq!(c.rank_norm_override, Some(RankNorm::L1));
+        let j = c.to_json().to_string();
+        let back = Json::parse(&j).unwrap();
+        assert_eq!(back.req("rank_norm").unwrap().as_str().unwrap(), "l1");
+        assert_eq!(back.req("projection").unwrap().as_str().unwrap(), "dct:l1:fft");
+        // the dumped (effective) projection string parses back to the
+        // effective kind
+        let mut c2 = TrainConfig::default();
+        c2.apply("projection", back.req("projection").unwrap().as_str().unwrap())
+            .unwrap();
+        assert_eq!(
+            c2.opt.projection,
+            ProjectionKind::Dct { norm: RankNorm::L1, use_makhoul: true }
+        );
+        // bad values are rejected at parse time; non-dct applicability is
+        // resolved at build time (presets may fall back to dct) — see the
+        // order-independence test
+        assert!(c.apply("rank-norm", "linf").is_err());
+    }
+
+    #[test]
+    fn rank_norm_is_order_independent_and_covers_source() {
+        use crate::optim::ParamKind;
+        let metas = vec![LayerMeta::new("w", 10, 8, ParamKind::Linear)];
+        // rank-norm BEFORE a projection= that would otherwise default to l2
+        let mut c = TrainConfig::default();
+        c.apply("rank-norm", "l1").unwrap();
+        c.apply("projection", "dct:matmul").unwrap();
+        let back = Json::parse(&c.to_json().to_string()).unwrap();
+        assert_eq!(back.req("rank_norm").unwrap().as_str().unwrap(), "l1");
+        assert_eq!(
+            back.req("projection").unwrap().as_str().unwrap(),
+            "dct:l1:matmul"
+        );
+        assert!(c.build_optimizer(&metas).is_ok());
+        // rank-norm also rewrites a dct source= override
+        let mut c = TrainConfig::default();
+        c.apply("optimizer", "galore").unwrap();
+        c.apply("source", "dct").unwrap();
+        c.apply("rank-norm", "l1").unwrap();
+        let back = Json::parse(&c.to_json().to_string()).unwrap();
+        assert_eq!(back.req("source").unwrap().as_str().unwrap(), "dct:l1:fft");
+        assert!(c.build_optimizer(&metas).is_ok());
+        // presets that pin a non-dct source reject a dangling rank-norm at
+        // build time instead of dropping it silently
+        let mut c = TrainConfig::default();
+        c.apply("optimizer", "galore").unwrap();
+        c.apply("rank-norm", "l1").unwrap();
+        assert!(c.build_optimizer(&metas).is_err());
+        // ... and a plain galore run records no rank_norm at all (its
+        // resolved source is SVD), so its dump replays cleanly
+        let mut c = TrainConfig::default();
+        c.apply("optimizer", "galore").unwrap();
+        let back = Json::parse(&c.to_json().to_string()).unwrap();
+        assert!(back.get("rank_norm").is_none());
+        assert!(c.build_optimizer(&metas).is_ok());
+        // ... and so does shadowing the dct projection with a non-dct source
+        let mut c = TrainConfig::default();
+        c.apply("optimizer", "fira").unwrap();
+        c.apply("rank-norm", "l1").unwrap();
+        c.apply("source", "svd").unwrap();
+        assert!(c.build_optimizer(&metas).is_err());
+        // a dump from a dct-fallback run (dct-adamw ignores a non-dct
+        // projection=) carries no rank_norm key and replays through
+        // apply + build without error
+        let mut c = TrainConfig::default();
+        c.apply("optimizer", "dct-adamw").unwrap();
+        c.apply("projection", "svd").unwrap();
+        assert!(c.build_optimizer(&metas).is_ok());
+        let dump = Json::parse(&c.to_json().to_string()).unwrap();
+        assert!(dump.get("rank_norm").is_none());
+        let mut replay = TrainConfig::default();
+        replay.apply("optimizer", "dct-adamw").unwrap();
+        replay
+            .apply("projection", dump.req("projection").unwrap().as_str().unwrap())
+            .unwrap();
+        assert!(replay.build_optimizer(&metas).is_ok());
+    }
+
+    #[test]
+    fn ef_mode_key_round_trips() {
+        let mut c = TrainConfig::default();
+        for (v, want) in
+            [("none", EfMode::None), ("f32", EfMode::F32), ("q8", EfMode::Q8)]
+        {
+            c.apply("ef-mode", v).unwrap();
+            assert_eq!(c.opt.ef_mode, want);
+            let back = Json::parse(&c.to_json().to_string()).unwrap();
+            assert_eq!(back.req("ef_mode").unwrap().as_str().unwrap(), v);
+        }
+        assert!(c.apply("ef-mode", "q4").is_err());
+    }
+
+    #[test]
+    fn dct_projection_grammar_covers_the_full_grid() {
+        for (v, norm, mk) in [
+            ("dct", RankNorm::L2, true),
+            ("dct:l1", RankNorm::L1, true),
+            ("dct:l1:matmul", RankNorm::L1, false),
+            ("dct:l2:matmul", RankNorm::L2, false),
+            ("dct:l2:fft", RankNorm::L2, true),
+        ] {
+            let got = parse_projection(v).unwrap();
+            assert_eq!(got, ProjectionKind::Dct { norm, use_makhoul: mk }, "{v}");
+        }
+        assert!(parse_projection("dct:l3").is_err());
+        // block_power round-trips its iteration count
+        assert_eq!(
+            parse_projection("block_power:5").unwrap(),
+            ProjectionKind::BlockPower { iters: 5 }
+        );
+        assert_eq!(
+            parse_projection("block_power").unwrap(),
+            ProjectionKind::BlockPower { iters: 2 }
+        );
+        assert_eq!(
+            TrainConfig::projection_string(&ProjectionKind::BlockPower { iters: 5 }),
+            "block_power:5"
+        );
+        assert!(parse_projection("block_power:x").is_err());
+    }
+
+    #[test]
+    fn engine_override_keys_build_a_grid_point() {
+        use crate::optim::ParamKind;
+        let mut c = TrainConfig::default();
+        c.apply("optimizer", "galore").unwrap();
+        c.apply("update-interval", "50").unwrap();
+        c.apply("source", "dct").unwrap();
+        c.apply("residual", "ef").unwrap();
+        c.apply("ef-mode", "q8").unwrap();
+        let metas = vec![LayerMeta::new("w", 10, 8, ParamKind::Linear)];
+        let opt = c.build_optimizer(&metas).unwrap();
+        assert_eq!(opt.name(), "engine(dct+adamw+ef-q8,T50)");
+        // round-trips through the JSON dump
+        let back = Json::parse(&c.to_json().to_string()).unwrap();
+        assert_eq!(back.req("source").unwrap().as_str().unwrap(), "dct:l2:fft");
+        assert_eq!(back.req("residual").unwrap().as_str().unwrap(), "ef");
+        // invalid compositions error instead of panicking
+        c.apply("rotation", "fixed-basis").unwrap();
+        c.apply("source", "svd").unwrap();
+        assert!(c.build_optimizer(&metas).is_err());
+        // overrides on a dense preset error
+        let mut d = TrainConfig::default();
+        d.apply("optimizer", "adamw").unwrap();
+        d.apply("residual", "ef").unwrap();
+        assert!(d.build_optimizer(&metas).is_err());
+    }
+
+    #[test]
+    fn no_overrides_takes_the_preset_path() {
+        use crate::optim::ParamKind;
+        let c = TrainConfig::default();
+        let metas = vec![LayerMeta::new("w", 10, 8, ParamKind::Linear)];
+        let opt = c.build_optimizer(&metas).unwrap();
+        assert_eq!(opt.name(), "trion");
     }
 }

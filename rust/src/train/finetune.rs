@@ -6,7 +6,7 @@
 use anyhow::Result;
 
 use crate::data::TaskCorpus;
-use crate::optim::{build_optimizer, LayerMeta, Optimizer};
+use crate::optim::{LayerMeta, Optimizer};
 use crate::runtime::client::Value;
 use crate::runtime::{Executable, Manifest, ModelSpec, Runtime};
 use crate::tensor::Matrix;
@@ -60,8 +60,7 @@ impl Finetuner {
 
     pub fn run(&mut self, manifest: &Manifest, rt: &Runtime) -> Result<FinetuneSummary> {
         let cfg = self.cfg.clone();
-        let mut opt: Box<dyn Optimizer> =
-            build_optimizer(&cfg.optimizer, &self.metas, &cfg.opt);
+        let mut opt: Box<dyn Optimizer> = cfg.build_optimizer(&self.metas)?;
         if cfg.use_aot_optimizer {
             opt = maybe_wrap_aot(opt, &self.metas, &cfg, manifest, rt)?;
         }

@@ -8,7 +8,7 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::{CommModel, Communicator, WorkerSet, ZeroSchedule};
 use crate::data::{BatchLoader, CorpusConfig, SyntheticCorpus};
-use crate::optim::{build_optimizer, LayerMeta, Optimizer};
+use crate::optim::{LayerMeta, Optimizer};
 use crate::runtime::{Executable, Manifest, ModelSpec, Runtime};
 use crate::runtime::client::Value;
 use crate::tensor::Matrix;
@@ -96,9 +96,10 @@ impl Trainer {
         std::fs::write(run_dir.join("config.json"), cfg.to_json().to_string())?;
         let mut metrics = JsonlWriter::create(run_dir.join("metrics.jsonl"))?;
 
-        // optimizer (optionally AOT-graph-backed for the paper's methods)
-        let mut opt: Box<dyn Optimizer> =
-            build_optimizer(&cfg.optimizer, &self.metas, &cfg.opt);
+        // optimizer — preset or engine grid point, per the config's
+        // source/residual/rotation overrides (optionally AOT-graph-backed
+        // for the paper's methods)
+        let mut opt: Box<dyn Optimizer> = cfg.build_optimizer(&self.metas)?;
         if cfg.use_aot_optimizer {
             opt = maybe_wrap_aot(opt, &self.metas, &cfg, manifest, rt)?;
         }

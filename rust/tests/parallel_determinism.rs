@@ -9,8 +9,8 @@
 
 use fft_subspace::coordinator::{CommModel, Communicator, WorkerSet};
 use fft_subspace::optim::{
-    build_optimizer, LayerMeta, Optimizer, OptimizerConfig, OptimizerKind,
-    ParamKind,
+    build_optimizer, EfMode, LayerMeta, Optimizer, OptimizerConfig, OptimizerKind,
+    OptimizerSpec, ParamKind, ResidualKind,
 };
 use fft_subspace::parallel::ThreadPool;
 use fft_subspace::projection::{ProjectionKind, RankNorm};
@@ -96,6 +96,43 @@ fn all_six_low_rank_optimizers_bit_identical_1_vs_n_threads() {
                     threads
                 );
             }
+        }
+    }
+}
+
+#[test]
+fn engine_grid_combo_bit_identical_1_vs_n_threads() {
+    // A non-preset engine composition (DCT source + GaLore cadence + Q8
+    // error feedback) must satisfy the same any-thread-count contract as
+    // the six presets — the determinism property belongs to the engine's
+    // step loop, not to any particular policy combination.
+    let metas = layer_zoo();
+    let grad_seq = zoo_grads(&metas, 23);
+    let combo = |threads: usize| {
+        OptimizerSpec::galore(8)
+            .projection(ProjectionKind::Dct { norm: RankNorm::L2, use_makhoul: true })
+            .residual(ResidualKind::ErrorFeedback(EfMode::Q8))
+            .update_interval(2)
+            .threads(Some(threads))
+    };
+    let mut params_by_lanes = Vec::new();
+    for threads in [1usize, 3, 8] {
+        let mut opt = combo(threads).build(&metas);
+        let mut params: Vec<Matrix> =
+            metas.iter().map(|m| Matrix::zeros(m.rows, m.cols)).collect();
+        for grads in &grad_seq {
+            opt.step(&mut params, grads, 1e-3);
+        }
+        params_by_lanes.push((threads, params));
+    }
+    let (_, reference) = &params_by_lanes[0];
+    for (threads, params) in &params_by_lanes[1..] {
+        for (i, (a, b)) in reference.iter().zip(params).enumerate() {
+            assert_eq!(
+                a, b,
+                "engine combo: layer {} ({}) diverged at {} threads",
+                i, metas[i].name, threads
+            );
         }
     }
 }
