@@ -7,7 +7,7 @@
 CARGO ?= cargo
 RUST_DIR := rust
 
-.PHONY: build test test-matrix bench bench-proj bench-par bench-simd bench-makhoul bench-optim artifacts clean
+.PHONY: build test test-matrix bench bench-proj bench-par bench-simd bench-makhoul bench-optim bench-mem artifacts clean
 
 build:
 	cd $(RUST_DIR) && $(CARGO) build --release
@@ -18,14 +18,24 @@ test:
 # The SIMD × threading conformance matrix: the whole suite under the scalar
 # and vector kernel backends at 1 and 4 pool lanes. Results must be
 # identical in every cell (the bit-identity + determinism contracts).
+# The second loop sweeps the typed-storage axis over the engine suites:
+# FFT_SUBSPACE_STATE_DTYPE drives the dtype the resume/alloc/parallel
+# engine tests exercise (f32 is the bit-exact default, bf16 the staging
+# path) — determinism and zero-allocation must hold for every dtype.
 test-matrix:
 	cd $(RUST_DIR) && for s in 0 1; do for t in 1 4; do \
 		echo "== FFT_SUBSPACE_SIMD=$$s FFT_SUBSPACE_THREADS=$$t =="; \
 		FFT_SUBSPACE_SIMD=$$s FFT_SUBSPACE_THREADS=$$t $(CARGO) test -q || exit 1; \
 	done; done
+	cd $(RUST_DIR) && for d in f32 bf16; do \
+		echo "== FFT_SUBSPACE_STATE_DTYPE=$$d (engine suites) =="; \
+		FFT_SUBSPACE_STATE_DTYPE=$$d $(CARGO) test -q \
+			--test resume_determinism --test alloc_steady_state \
+			--test parallel_determinism || exit 1; \
+	done
 
 # Full microbench battery (each bench is a plain binary: harness = false).
-bench: bench-proj bench-par bench-simd bench-makhoul bench-optim
+bench: bench-proj bench-par bench-simd bench-makhoul bench-optim bench-mem
 
 # Projection/subspace-step bench; writes rust/BENCH_PROJ.json
 # (override the path with BENCH_PROJ_OUT=...). Includes the `threads`
@@ -52,6 +62,13 @@ bench-makhoul:
 # BENCH_OPTIM_OUT=...).
 bench-optim:
 	cd $(RUST_DIR) && $(CARGO) bench --bench bench_optim_step
+
+# Optimizer-state memory sweep (exact bytes: six presets × state-dtype
+# {f32,bf16,q8} × two model sizes vs the dense Adam f32 baseline — the
+# paper's ≤25%-memory claim as an artifact); writes rust/BENCH_MEM.json
+# (override with BENCH_MEM_OUT=...). Deterministic byte counts, no timing.
+bench-mem:
+	cd $(RUST_DIR) && $(CARGO) bench --bench bench_mem
 
 # Lower the JAX/Pallas graphs to HLO text + manifest (Layer 1+2 → Layer 3
 # contract). Requires jax; see python/compile/aot.py --help for presets.

@@ -1,0 +1,99 @@
+"""Mirror of rust/benches/bench_mem.rs byte accounting (exact, deterministic).
+
+Regenerate the authoritative file with `make bench-mem` in a
+toolchain-equipped environment; this mirror exists because the build
+container has no cargo.
+"""
+import json
+
+RANK = 32
+
+def model(name, d, blocks, vocab):
+    ff = d * 11 // 4
+    metas = [("embed", vocab, d, "Embed"), ("head", d, vocab, "Head")]
+    for l in range(blocks):
+        for w in ["wq", "wk", "wv", "wo"]:
+            metas.append((f"b{l}.{w}", d, d, "Linear"))
+        metas.append((f"b{l}.gate", d, ff, "Linear"))
+        metas.append((f"b{l}.down", ff, d, "Linear"))
+        metas.append((f"b{l}.norm", 1, d, "Norm"))
+    return name, metas
+
+def oriented(rows, cols):
+    return (cols, rows) if cols > rows else (rows, cols)
+
+def store_bytes(elems, dtype):
+    return {"f32": elems * 4, "bf16": elems * 2, "q8": elems + 4}[dtype]
+
+def adam_state(rows, cols, dtype):
+    return 2 * store_bytes(rows * cols, dtype)
+
+# preset axes (OptimizerSpec::from_kind with default OptimizerConfig: ef_mode=q8)
+PRESETS = {
+    "dct-adamw": dict(source="dct", rotation="fixed", residual=("ef", "q8"), rule="adamw"),
+    "trion":     dict(source="dct", rotation="none",  residual=None,          rule="ns"),
+    "galore":    dict(source="svd", rotation="none",  residual=None,          rule="adamw"),
+    "fira":      dict(source="dct", rotation="none",  residual=None,          rule="adamw"),
+    "frugal":    dict(source="dct", rotation="none",  residual=None,          rule="adamw"),
+    "ldadamw":   dict(source="block_power", rotation="dense", residual=("ef", "f32"), rule="adamw"),
+}
+
+def preset_total(metas, preset, dtype):
+    ax = PRESETS[preset]
+    total = 0
+    shared_dims = set()
+    for (_, rows, cols, kind) in metas:
+        if kind != "Linear":
+            total += adam_state(rows, cols, dtype)
+            continue
+        rr, cc = oriented(rows, cols)
+        r = min(RANK, cc)
+        # rule state
+        if ax["rule"] == "adamw":
+            total += 2 * store_bytes(rr * r, dtype)   # m + v (R×r)
+        else:
+            total += store_bytes(rr * cc, dtype)       # NS momentum (R×C)
+        # source state
+        if ax["source"] == "dct":
+            total += r * 4                             # indices
+            shared_dims.add(cc)
+        else:                                          # svd / block_power
+            total += cc * r * 4                        # dense projector (f32)
+        # rotation state
+        if ax["rotation"] == "fixed":
+            total += r * 4                             # idx_prev
+        elif ax["rotation"] == "dense":
+            total += cc * r * 4                        # prev basis (f32)
+        # residual state
+        if ax["residual"] is not None:
+            _, ef = ax["residual"]
+            total += rr * cc * 4 if ef == "f32" else rr * cc + 4
+    for dim in shared_dims:
+        total += dim * dim * 4                         # shared DCT matrix
+    return total
+
+records = []
+for (name, metas) in [model("bench-small", 128, 4, 256), model("bench-large", 256, 8, 256)]:
+    params = sum(r * c for (_, r, c, _) in metas)
+    adam_f32 = sum(adam_state(r, c, "f32") for (_, r, c, _) in metas)
+    print(f"{name}: {params} params, adam(f32) = {adam_f32} bytes")
+    def push(opt, dtype, total):
+        ratio = total / adam_f32
+        print(f"  {opt:<10} state={dtype:<4} {total:>12} bytes  ({ratio*100:5.1f}% of adam-f32)")
+        records.append({
+            "model": name, "params": params, "optimizer": opt,
+            "state_dtype": dtype, "rank": RANK, "total_bytes": total,
+            "adam_f32_bytes": adam_f32, "ratio_vs_adam_f32": round(ratio, 6),
+        })
+    for dtype in ["f32", "bf16", "q8"]:
+        push("adamw", dtype, sum(adam_state(r, c, dtype) for (_, r, c, _) in metas))
+        for preset in PRESETS:
+            push(preset, dtype, preset_total(metas, preset, dtype))
+    print()
+
+import os
+out = os.path.join(os.path.dirname(__file__), "..", "..", "rust", "BENCH_MEM.json")
+with open(out, "w") as f:
+    json.dump({"version": 1, "records": records}, f, indent=1)
+    f.write("\n")
+print(f"wrote {out}")

@@ -31,6 +31,18 @@ impl<'a> BatchLoader<'a> {
         (out, vec![batch, self.seq_len])
     }
 
+    /// Advance the loader past `batches` batches of size `batch` without
+    /// materializing them: consumes exactly the RNG draws
+    /// [`BatchLoader::next_batch`] would (one window start per row), so a
+    /// resumed run's loader lands on the identical stream position at zero
+    /// allocation cost (checkpoint-v2 fast-forward).
+    pub fn skip_batches(&mut self, batches: usize, batch: usize) {
+        let max_start = self.tokens.len() - self.seq_len - 1;
+        for _ in 0..batches * batch {
+            let _ = self.rng.usize_below(max_start);
+        }
+    }
+
     /// Worker-sharded batch: worker `w` draws from a disjoint stream (same
     /// global seed, per-worker substream) so DDP shards never collide.
     pub fn worker(&self, w: usize, global_seed: u64) -> BatchLoader<'a> {
@@ -88,6 +100,19 @@ mod tests {
         let mut a = BatchLoader::new(&t, 16, 7);
         let mut b = BatchLoader::new(&t, 16, 7);
         assert_eq!(a.next_batch(2).0, b.next_batch(2).0);
+    }
+
+    #[test]
+    fn skip_batches_matches_discarded_draws() {
+        let t = toks(10_000);
+        let mut a = BatchLoader::new(&t, 16, 7);
+        let mut b = BatchLoader::new(&t, 16, 7);
+        for _ in 0..5 {
+            let _ = a.next_batch(3);
+        }
+        b.skip_batches(5, 3);
+        // both loaders continue from the identical stream position
+        assert_eq!(a.next_batch(3).0, b.next_batch(3).0);
     }
 
     #[test]

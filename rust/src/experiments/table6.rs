@@ -24,26 +24,30 @@ pub fn run(manifest: &Manifest, rt: &Runtime, opts: &ExpOptions) -> Result<()> {
     let rank = if opts.quick || !micro { 16 } else { 32 };
     let dct = ProjectionKind::Dct { norm: RankNorm::L2, use_makhoul: true };
 
-    // (kind, projection, engine grid point?) — the last case is an
-    // `OptimizerSpec` combination no published method covers (GaLore
-    // cadence + DCT source + Q8 error feedback), expressed purely through
-    // the config override keys `source=` / `residual=` / `ef-mode=`.
-    let mut cases: Vec<(OptimizerKind, Option<ProjectionKind>, bool)> = vec![
-        (OptimizerKind::AdamW, None, false),
-        (OptimizerKind::Frugal, Some(ProjectionKind::Svd), false),
-        (OptimizerKind::Frugal, Some(dct.clone()), false),
-        (OptimizerKind::Frugal, Some(ProjectionKind::RandPerm), false),
-        (OptimizerKind::Frugal, Some(ProjectionKind::Random), false),
-        (OptimizerKind::Fira, Some(ProjectionKind::Svd), false),
-        (OptimizerKind::Fira, Some(dct.clone()), false),
-        (OptimizerKind::GaLore, None, true),
+    // (kind, projection, engine grid point?, state dtype) — the GaLore
+    // case is an `OptimizerSpec` combination no published method covers
+    // (GaLore cadence + DCT source + Q8 error feedback), expressed purely
+    // through the config override keys `source=` / `residual=` /
+    // `ef-mode=`; the final DCT-AdamW row flips the fifth composition axis
+    // (`state-dtype=bf16`) to record the typed-storage memory saving next
+    // to its quality cost in the same table.
+    let mut cases: Vec<(OptimizerKind, Option<ProjectionKind>, bool, Option<&str>)> = vec![
+        (OptimizerKind::AdamW, None, false, None),
+        (OptimizerKind::Frugal, Some(ProjectionKind::Svd), false, None),
+        (OptimizerKind::Frugal, Some(dct.clone()), false, None),
+        (OptimizerKind::Frugal, Some(ProjectionKind::RandPerm), false, None),
+        (OptimizerKind::Frugal, Some(ProjectionKind::Random), false, None),
+        (OptimizerKind::Fira, Some(ProjectionKind::Svd), false, None),
+        (OptimizerKind::Fira, Some(dct.clone()), false, None),
+        (OptimizerKind::GaLore, None, true, None),
+        (OptimizerKind::DctAdamW, Some(dct.clone()), false, Some("bf16")),
     ];
     if opts.quick {
         cases.truncate(5);
     }
 
     let mut rows = Vec::new();
-    for (kind, proj, engine_combo) in cases {
+    for (kind, proj, engine_combo, state_dtype) in cases {
         let mut cfg = TrainConfig {
             preset: preset.into(),
             optimizer: kind.clone(),
@@ -64,6 +68,9 @@ pub fn run(manifest: &Manifest, rt: &Runtime, opts: &ExpOptions) -> Result<()> {
             cfg.apply("source", "dct")?;
             cfg.apply("residual", "ef")?;
             cfg.apply("ef-mode", "q8")?;
+        }
+        if let Some(d) = state_dtype {
+            cfg.apply("state-dtype", d)?;
         }
         let mut tr = Trainer::new(manifest, rt, cfg)?;
         let sum = tr.run(manifest, rt)?;

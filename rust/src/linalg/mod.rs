@@ -11,4 +11,4 @@ pub mod power_iter;
 pub use newton_schulz::{newton_schulz, newton_schulz_into};
 pub use power_iter::{block_power_iter, power_iter_qr};
 pub use qr::{qr_q_into, qr_thin};
-pub use svd::{svd_thin, Svd};
+pub use svd::{svd_right_vectors_into, svd_thin, Svd};

@@ -5,7 +5,7 @@
 //! (works column-by-column on AᵀA implicitly) and fast enough at the layer
 //! sizes we train; convergence is quadratic once rotations get small.
 
-use crate::tensor::Matrix;
+use crate::tensor::{Matrix, Workspace};
 
 /// Thin SVD result: `a == u · diag(s) · vᵀ` with singular values sorted
 /// descending.
@@ -117,6 +117,132 @@ pub fn svd_thin(a: &Matrix) -> Svd {
     }
 }
 
+/// Workspace-backed top-r right singular vectors: writes
+/// `svd_thin(a).right_vectors(r)` into `out` **bit-identically** (pinned by
+/// the `_into` property test in `projection/mod.rs`) with every temporary
+/// pooled, so the GaLore-style SVD refresh runs allocation-free at steady
+/// state (`tests/alloc_steady_state.rs`).
+///
+/// Same one-sided Jacobi sweep as [`svd_thin`] — identical constants,
+/// identical per-element f64 summation orders — with two storage-only
+/// differences: the rotated-U/V work matrices live in pooled `f64` buffers,
+/// and the sorted right vectors are gathered column-by-column into `out`
+/// instead of materializing the full sorted factors. The descending sort
+/// uses `sort_unstable_by` with an ascending-index tie-break, which is the
+/// exact total order of [`svd_thin`]'s stable sort (stable sort preserves
+/// the ascending initial order on ties), so ranking matches to the bit and
+/// the in-place sort never allocates a merge buffer.
+pub fn svd_right_vectors_into(a: &Matrix, r: usize, out: &mut Matrix, ws: &mut Workspace) {
+    let (m, n) = a.shape();
+    let transposed = m < n;
+    // Work on a tall matrix (m >= n) in f64.
+    let (wm, wn) = if transposed { (n, m) } else { (m, n) };
+    let mut u = ws.take_f64(wm * wn);
+    if transposed {
+        // exact widen of aᵀ, matching `a.transpose()` element for element
+        for i in 0..wm {
+            for j in 0..wn {
+                u[i * wn + j] = a.at(j, i) as f64;
+            }
+        }
+    } else {
+        for (dst, &src) in u.iter_mut().zip(a.data.iter()) {
+            *dst = src as f64;
+        }
+    }
+    // v accumulates the right rotations: starts as identity (wn×wn);
+    // take_f64 zeroes the buffer.
+    let mut v = ws.take_f64(wn * wn);
+    for i in 0..wn {
+        v[i * wn + i] = 1.0;
+    }
+
+    let max_sweeps = 60;
+    let eps = 1e-12;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..wn {
+            for q in (p + 1)..wn {
+                // Compute the 2x2 Gram block for columns p, q.
+                let (mut app, mut aqq, mut apq) = (0.0f64, 0.0f64, 0.0f64);
+                for i in 0..wm {
+                    let up = u[i * wn + p];
+                    let uq = u[i * wn + q];
+                    app += up * up;
+                    aqq += uq * uq;
+                    apq += up * uq;
+                }
+                if apq.abs() <= eps * (app * aqq).sqrt() + 1e-300 {
+                    continue;
+                }
+                off += apq.abs();
+                // Jacobi rotation zeroing the off-diagonal.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..wm {
+                    let up = u[i * wn + p];
+                    let uq = u[i * wn + q];
+                    u[i * wn + p] = c * up - s * uq;
+                    u[i * wn + q] = s * up + c * uq;
+                }
+                for i in 0..wn {
+                    let vp = v[i * wn + p];
+                    let vq = v[i * wn + q];
+                    v[i * wn + p] = c * vp - s * vq;
+                    v[i * wn + q] = s * vp + c * vq;
+                }
+            }
+        }
+        if off < 1e-14 {
+            break;
+        }
+    }
+
+    // Singular values = column norms of the rotated U.
+    let mut s = ws.take_f64(wn);
+    for (j, sj) in s.iter_mut().enumerate() {
+        *sj = (0..wm)
+            .map(|i| u[i * wn + j] * u[i * wn + j])
+            .sum::<f64>()
+            .sqrt();
+    }
+    // Descending order; ties broken by ascending index — the stable-sort
+    // total order of svd_thin, without the stable sort's allocation.
+    let mut order = ws.take_usize(wn);
+    for (i, o) in order.iter_mut().enumerate() {
+        *o = i;
+    }
+    order.sort_unstable_by(|&x, &y| {
+        s[y].partial_cmp(&s[x]).unwrap().then(x.cmp(&y))
+    });
+
+    // Right vectors live in C-space (n rows): the rotated/normalized U
+    // columns in the transposed case, the accumulated V columns otherwise —
+    // exactly what svd_thin's u_sorted/v_sorted → right_vectors(r) yields.
+    let rr = r.min(wn);
+    out.resize_for_overwrite(n, rr);
+    for (newj, &oldj) in order[..rr].iter().enumerate() {
+        if transposed {
+            let sv = s[oldj];
+            let inv = if sv > 1e-300 { 1.0 / sv } else { 0.0 };
+            for i in 0..wm {
+                out.data[i * rr + newj] = (u[i * wn + oldj] * inv) as f32;
+            }
+        } else {
+            for i in 0..wn {
+                out.data[i * rr + newj] = v[i * wn + oldj] as f32;
+            }
+        }
+    }
+
+    ws.give_usize(order);
+    ws.give_f64(s);
+    ws.give_f64(v);
+    ws.give_f64(u);
+}
+
 impl Svd {
     /// Top-r left singular vectors (m×r) — GaLore's left projector.
     pub fn left_vectors(&self, r: usize) -> Matrix {
@@ -208,6 +334,26 @@ mod tests {
         let err_svd = a.sub(&proj).fro_norm_sq();
         let tail: f64 = svd.s[2..].iter().map(|&s| (s as f64) * (s as f64)).sum();
         assert!((err_svd - tail).abs() < 1e-3 * tail.max(1.0));
+    }
+
+    #[test]
+    fn prop_right_vectors_into_bit_identical() {
+        // the workspace-backed gather must reproduce
+        // svd_thin(a).right_vectors(r) to the bit, tall and wide, with
+        // reused (dirty) workspaces
+        proptest::check("svd_right_vectors_into==svd_thin", 8, |rng| {
+            let m = proptest::size(rng, 2, 24);
+            let n = proptest::size(rng, 2, 24);
+            let r = proptest::size(rng, 1, n.min(m));
+            let a = Matrix::randn(m, n, 1.0, rng);
+            let want = svd_thin(&a).right_vectors(r);
+            let mut ws = crate::tensor::Workspace::new();
+            let mut got = Matrix::zeros(1, 1);
+            svd_right_vectors_into(&a, r, &mut got, &mut ws);
+            assert_eq!(got, want, "{m}x{n} r={r}");
+            svd_right_vectors_into(&a, r, &mut got, &mut ws);
+            assert_eq!(got, want, "warm workspace {m}x{n} r={r}");
+        });
     }
 
     #[test]

@@ -1,13 +1,18 @@
 //! Dense AdamW (Loshchilov & Hutter, 2019) — the full-rank reference in
 //! every table of the paper.
 //!
-//! Already allocation-free: `AdamState::update` fuses the moment update and
-//! parameter write in one in-place pass, so it needs no [`Workspace`]
-//! (unlike the low-rank optimizers, whose projections produce temporaries).
+//! Allocation-free at steady state: `AdamState::update_ws` fuses the moment
+//! update and parameter write in one in-place pass for f32 stores, and
+//! stages non-f32 stores through the owned [`Workspace`] pool. With
+//! `state-dtype=bf16|q8` this baseline becomes the "low-precision Adam"
+//! reference row of the memory sweep (`make bench-mem`).
 
 use std::collections::BTreeMap;
 
-use crate::tensor::Matrix;
+use anyhow::{ensure, Result};
+
+use crate::tensor::{Matrix, StateDtype, Workspace};
+use crate::util::codec::{self, ByteReader};
 
 use super::common::{AdamState, LayerMeta, MemoryReport, Optimizer, OptimizerConfig};
 
@@ -18,20 +23,43 @@ pub struct AdamW {
     beta2: f32,
     eps: f32,
     weight_decay: f32,
+    state_dtype: StateDtype,
     step: u64,
+    /// De/quantization scratch for non-f32 moment stores (unused — and
+    /// never touched — on the f32 default path).
+    ws: Workspace,
 }
 
 impl AdamW {
     pub fn new(metas: &[LayerMeta], cfg: &OptimizerConfig) -> Self {
         AdamW {
-            states: metas.iter().map(|m| AdamState::new(m.rows, m.cols)).collect(),
+            states: metas
+                .iter()
+                .map(|m| AdamState::with_dtype(cfg.state_dtype, m.rows, m.cols))
+                .collect(),
             metas: metas.to_vec(),
             beta1: cfg.beta1,
             beta2: cfg.beta2,
             eps: cfg.eps,
             weight_decay: cfg.weight_decay,
+            state_dtype: cfg.state_dtype,
             step: 0,
+            ws: Workspace::new(),
         }
+    }
+
+    fn fingerprint(&self) -> String {
+        // hyper-parameters feed every post-resume step, so they are part
+        // of the resume contract (per-store shape checks cover the rest)
+        format!(
+            "adamw layers={} state={} b1={} b2={} eps={} wd={}",
+            self.metas.len(),
+            self.state_dtype.name(),
+            self.beta1,
+            self.beta2,
+            self.eps,
+            self.weight_decay
+        )
     }
 }
 
@@ -50,7 +78,7 @@ impl Optimizer for AdamW {
             } else {
                 self.weight_decay
             };
-            st.update(p, g, lr, self.beta1, self.beta2, self.eps, wd, self.step);
+            st.update_ws(p, g, lr, self.beta1, self.beta2, self.eps, wd, self.step, &mut self.ws);
         }
     }
 
@@ -69,6 +97,31 @@ impl Optimizer for AdamW {
 
     fn projection_errors(&self) -> Option<&BTreeMap<String, f64>> {
         None
+    }
+
+    fn save_state(&self) -> Option<Vec<u8>> {
+        let mut out = Vec::new();
+        codec::put_str(&mut out, &self.fingerprint());
+        codec::put_u64(&mut out, self.step);
+        for st in &self.states {
+            st.save(&mut out);
+        }
+        Some(out)
+    }
+
+    fn load_state(&mut self, bytes: &[u8]) -> Result<()> {
+        let mut r = ByteReader::new(bytes);
+        let fp = r.take_str()?;
+        ensure!(
+            fp == self.fingerprint(),
+            "checkpoint fingerprint {fp:?} != this optimizer {:?}",
+            self.fingerprint()
+        );
+        self.step = r.take_u64()?;
+        for st in &mut self.states {
+            st.load_from(&mut r)?;
+        }
+        r.finish()
     }
 }
 

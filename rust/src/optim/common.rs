@@ -6,10 +6,13 @@
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
+use anyhow::Result;
+
 use crate::parallel::{SendPtr, ShardedWorkspace, ThreadPool};
 use crate::projection::{ProjectionKind, RankNorm, SharedDct};
 use crate::simd::{Simd, F32_LANES};
-use crate::tensor::{Matrix, Workspace};
+use crate::tensor::{Matrix, StateDtype, StateStore, Workspace};
+use crate::util::codec::ByteReader;
 
 /// What a parameter is; drives the low-rank policy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -199,6 +202,21 @@ pub trait Optimizer {
     fn broadcast_bytes(&self, meta: &LayerMeta) -> u64 {
         (meta.rows * meta.cols * 4) as u64
     }
+
+    /// Serialize every piece of resumable optimizer state (step counter,
+    /// typed stores, subspace/rotation/residual auxiliaries) for checkpoint
+    /// v2. `None` = this optimizer does not support state checkpointing
+    /// (the AOT-wrapped and hand-written momentum baselines).
+    fn save_state(&self) -> Option<Vec<u8>> {
+        None
+    }
+
+    /// Restore state written by [`Optimizer::save_state`]. Implementations
+    /// error on fingerprint/dtype/shape mismatch so a resumed run can never
+    /// silently continue with the wrong composition.
+    fn load_state(&mut self, _bytes: &[u8]) -> Result<()> {
+        anyhow::bail!("{} does not support checkpoint resume", self.name())
+    }
 }
 
 /// Which optimizer to build.
@@ -266,6 +284,11 @@ pub struct OptimizerConfig {
     pub projection: ProjectionKind,
     /// Error feedback for DCT-AdamW: None | f32 | quantized-u8.
     pub ef_mode: EfMode,
+    /// Storage precision of persistent optimizer state (Adam moments, NS
+    /// momentum, dense-fallback moments). `F32` is the exact, bit-invisible
+    /// default; `Bf16`/`Q8` trade state fidelity for the paper's memory
+    /// savings. The EF buffer keeps its own `ef_mode` resolution.
+    pub state_dtype: StateDtype,
     /// Record per-layer projection errors each step (Figure 1).
     pub instrument: bool,
     pub seed: u64,
@@ -295,6 +318,7 @@ impl Default for OptimizerConfig {
             update_interval: 1,
             projection: ProjectionKind::Dct { norm: RankNorm::L2, use_makhoul: true },
             ef_mode: EfMode::Q8,
+            state_dtype: StateDtype::F32,
             instrument: false,
             seed: 0,
             threads: None,
@@ -408,21 +432,32 @@ pub fn build_optimizer(
 }
 
 /// Dense AdamW state for a single tensor — embedded by every low-rank
-/// optimizer for its non-eligible parameters.
+/// optimizer for its non-eligible parameters. The moments live in typed
+/// [`StateStore`]s; the default f32 stores compute fully in place, so the
+/// pre-store behavior (and its bits) are unchanged.
 #[derive(Clone, Debug)]
 pub struct AdamState {
-    pub m: Matrix,
-    pub v: Matrix,
+    pub m: StateStore,
+    pub v: StateStore,
 }
 
 impl AdamState {
     pub fn new(rows: usize, cols: usize) -> Self {
-        AdamState { m: Matrix::zeros(rows, cols), v: Matrix::zeros(rows, cols) }
+        Self::with_dtype(StateDtype::F32, rows, cols)
+    }
+
+    pub fn with_dtype(dtype: StateDtype, rows: usize, cols: usize) -> Self {
+        AdamState {
+            m: StateStore::zeros(dtype, rows, cols),
+            v: StateStore::zeros(dtype, rows, cols),
+        }
     }
 
     /// One decoupled-weight-decay Adam step on `p` (the shared fused
     /// kernel: moment update, bias correction, decay and parameter write in
-    /// one pass).
+    /// one pass). F32 stores run fully in place; lower-precision stores
+    /// stage through a transient buffer — hot paths with non-f32 state use
+    /// [`AdamState::update_ws`] so the staging is pooled.
     #[allow(clippy::too_many_arguments)]
     pub fn update(
         &mut self,
@@ -437,19 +472,82 @@ impl AdamState {
     ) {
         assert_eq!(p.shape(), g.shape(), "adam update shape mismatch");
         let sc = AdamScalars::new(beta1, beta2, eps, step);
+        match (&mut self.m, &mut self.v) {
+            (StateStore::F32(m), StateStore::F32(v)) => adam_fused_update(
+                &mut p.data,
+                &g.data,
+                &mut m.data,
+                &mut v.data,
+                lr,
+                weight_decay,
+                &sc,
+            ),
+            (m_store, v_store) => {
+                let mut ws = Workspace::new();
+                let mut m = m_store.checkout(&mut ws);
+                let mut v = v_store.checkout(&mut ws);
+                adam_fused_update(
+                    &mut p.data,
+                    &g.data,
+                    &mut m.data,
+                    &mut v.data,
+                    lr,
+                    weight_decay,
+                    &sc,
+                );
+                m_store.commit(m, &mut ws);
+                v_store.commit(v, &mut ws);
+            }
+        }
+    }
+
+    /// [`AdamState::update`] with pooled de/quantization scratch — the
+    /// engine's dense-fallback path (allocation-free at steady state for
+    /// every dtype).
+    #[allow(clippy::too_many_arguments)]
+    pub fn update_ws(
+        &mut self,
+        p: &mut Matrix,
+        g: &Matrix,
+        lr: f32,
+        beta1: f32,
+        beta2: f32,
+        eps: f32,
+        weight_decay: f32,
+        step: u64,
+        ws: &mut Workspace,
+    ) {
+        assert_eq!(p.shape(), g.shape(), "adam update shape mismatch");
+        let sc = AdamScalars::new(beta1, beta2, eps, step);
+        let mut m = self.m.checkout(ws);
+        let mut v = self.v.checkout(ws);
         adam_fused_update(
             &mut p.data,
             &g.data,
-            &mut self.m.data,
-            &mut self.v.data,
+            &mut m.data,
+            &mut v.data,
             lr,
             weight_decay,
             &sc,
         );
+        self.m.commit(m, ws);
+        self.v.commit(v, ws);
     }
 
     pub fn bytes(&self) -> u64 {
         self.m.bytes() + self.v.bytes()
+    }
+
+    /// Checkpoint-v2 serialization of both moment stores (bit-exact).
+    pub fn save(&self, out: &mut Vec<u8>) {
+        self.m.save(out);
+        self.v.save(out);
+    }
+
+    /// Twin of [`AdamState::save`].
+    pub fn load_from(&mut self, r: &mut ByteReader) -> Result<()> {
+        self.m.load_from(r)?;
+        self.v.load_from(r)
     }
 }
 
@@ -742,7 +840,57 @@ mod tests {
         st.update(&mut p, &g, 0.1, 0.9, 0.999, 1e-8, 0.0, 1);
         // m=0.05, v=0.00025; mhat=0.5, vhat=0.25; p = 1 - 0.1*0.5/0.5 = 0.9
         assert!((p.data[0] - 0.9).abs() < 1e-5, "{}", p.data[0]);
-        assert!((st.m.data[0] - 0.05).abs() < 1e-7);
+        assert!((st.m.as_f32().unwrap().data[0] - 0.05).abs() < 1e-7);
+    }
+
+    #[test]
+    fn adam_state_typed_storage_tracks_f32_closely() {
+        // bf16/q8 moments follow the f32 trajectory approximately and
+        // report the reduced byte counts exactly
+        let mut rng = Pcg64::seed(11);
+        let g_seq: Vec<Matrix> = (0..20).map(|_| Matrix::randn(4, 6, 0.5, &mut rng)).collect();
+        let mut exact = AdamState::new(4, 6);
+        let mut p_exact = Matrix::zeros(4, 6);
+        let mut ws = Workspace::new();
+        for dtype in [StateDtype::Bf16, StateDtype::Q8] {
+            let mut st = AdamState::with_dtype(dtype, 4, 6);
+            let mut p = Matrix::zeros(4, 6);
+            for g in &g_seq {
+                st.update_ws(&mut p, g, 0.01, 0.9, 0.999, 1e-8, 0.0, 1, &mut ws);
+            }
+            assert!(p.fro_norm() > 0.0);
+            match dtype {
+                StateDtype::Bf16 => assert_eq!(st.bytes(), 2 * 4 * 6 * 2),
+                _ => assert_eq!(st.bytes(), 2 * (4 * 6 + 4)),
+            }
+        }
+        for g in &g_seq {
+            exact.update(&mut p_exact, g, 0.01, 0.9, 0.999, 1e-8, 0.0, 1);
+        }
+        assert_eq!(exact.bytes(), 2 * 4 * 6 * 4);
+    }
+
+    #[test]
+    fn adam_state_save_load_roundtrip() {
+        use crate::util::codec::ByteReader;
+        let mut rng = Pcg64::seed(12);
+        for dtype in [StateDtype::F32, StateDtype::Bf16, StateDtype::Q8] {
+            let mut st = AdamState::with_dtype(dtype, 3, 5);
+            let mut p = Matrix::zeros(3, 5);
+            let g = Matrix::randn(3, 5, 1.0, &mut rng);
+            st.update(&mut p, &g, 0.01, 0.9, 0.999, 1e-8, 0.0, 1);
+            let mut blob = Vec::new();
+            st.save(&mut blob);
+            let mut fresh = AdamState::with_dtype(dtype, 3, 5);
+            let mut r = ByteReader::new(&blob);
+            fresh.load_from(&mut r).unwrap();
+            r.finish().unwrap();
+            assert_eq!(
+                st.m.to_matrix().data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                fresh.m.to_matrix().data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "{dtype:?}"
+            );
+        }
     }
 
     #[test]

@@ -12,6 +12,14 @@
 //! | moment rotation | [`RotationPolicy`] | none / fixed-basis index matching / dense `QᵀQ` |
 //! | residual        | [`ResidualPolicy`] | discard / error feedback (f32, Q8) / FIRA scaling / SignSGD |
 //! | update rule     | [`UpdateRule`]     | fused subspace AdamW / Newton–Schulz momentum |
+//! | state storage   | [`StateDtype`](crate::tensor::StateDtype) | f32 (bit-exact) / bf16 / q8 typed stores |
+//!
+//! The engine is also durable: [`SubspaceEngine::serialize_state`] /
+//! [`SubspaceEngine::restore_state`] round-trip every cross-step byte
+//! (step counter, typed stores, subspace/rotation/residual auxiliaries),
+//! which is the substrate of the checkpoint-v2 `resume=` contract — a
+//! restored engine continues the uninterrupted trajectory to the bit
+//! (`tests/resume_determinism.rs`).
 //!
 //! Configurations are built with the [`OptimizerSpec`] builder; the six
 //! published methods are presets whose engines are **bit-identical** to the
@@ -31,9 +39,12 @@ pub mod spec;
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 
+use anyhow::{ensure, Result};
+
 use crate::parallel::{ShardedWorkspace, ThreadPool};
 use crate::projection::{ProjectionKind, SharedDct};
 use crate::tensor::Matrix;
+use crate::util::codec::{self, ByteReader};
 
 use super::common::{
     pool_for_threads, shared_dct_registry, step_layers_parallel, AdamState,
@@ -127,14 +138,24 @@ impl OptimizerSpec {
                         ResidualKind::SignDescent => Box::new(SignResidual { scale: 1.0 }),
                     };
                     let rule: Box<dyn UpdateRule> = match self.rule {
-                        UpdateRuleKind::SubspaceAdamW => Box::new(SubspaceAdamW::new(rr, r)),
-                        UpdateRuleKind::NewtonSchulz => {
-                            Box::new(NewtonSchulzMomentum::new(rr, cc, self.mu, self.ns_steps))
+                        UpdateRuleKind::SubspaceAdamW => {
+                            Box::new(SubspaceAdamW::new(self.state_dtype, rr, r))
                         }
+                        UpdateRuleKind::NewtonSchulz => Box::new(NewtonSchulzMomentum::new(
+                            self.state_dtype,
+                            rr,
+                            cc,
+                            self.mu,
+                            self.ns_steps,
+                        )),
                     };
                     EngineLayer::LowRank(LowRankLayer { source, rotation, residual, rule })
                 } else {
-                    EngineLayer::Dense(AdamState::new(meta.rows, meta.cols))
+                    EngineLayer::Dense(AdamState::with_dtype(
+                        self.state_dtype,
+                        meta.rows,
+                        meta.cols,
+                    ))
                 }
             })
             .collect();
@@ -202,12 +223,100 @@ impl SubspaceEngine {
         }
     }
 
-    /// Full-rank momentum of a layer (Newton–Schulz rule) — test hook.
-    pub fn momentum(&self, layer: usize) -> Option<&Matrix> {
+    /// Full-rank momentum of a layer (Newton–Schulz rule), materialized to
+    /// f32 — test hook.
+    pub fn momentum(&self, layer: usize) -> Option<Matrix> {
         match &self.states[layer] {
             EngineLayer::LowRank(l) => l.rule.momentum(),
             EngineLayer::Dense(_) => None,
         }
+    }
+
+    /// Composition fingerprint written into checkpoint-v2 state blobs:
+    /// resuming requires the identical composition — same axes, same rank,
+    /// same seed, same state dtype AND the same numeric hyper-parameters
+    /// (betas/eps/decay/μ/NS steps feed every post-resume step, so a
+    /// mismatch would silently break the bit-identical-resume contract).
+    pub fn fingerprint(&self) -> String {
+        let s = &self.spec;
+        format!(
+            "{} rank={} seed={} shift={} b1={} b2={} eps={} wd={} dwd={:?} \
+             mu={} ns={} {}",
+            self.name,
+            s.rank,
+            s.seed,
+            s.seed_shift,
+            s.beta1,
+            s.beta2,
+            s.eps,
+            s.weight_decay,
+            s.dense_weight_decay,
+            s.mu,
+            s.ns_steps,
+            s.describe()
+        )
+    }
+
+    /// Serialize every piece of resumable state: the step counter plus, per
+    /// layer, the rule stores, the subspace source (indices / bases / RNG
+    /// streams / warm flags), the rotation snapshot and the residual buffer
+    /// — everything `step` reads across step boundaries, so a fresh engine
+    /// restored from this blob continues the trajectory to the bit
+    /// (`tests/resume_determinism.rs`).
+    pub fn serialize_state(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        codec::put_str(&mut out, &self.fingerprint());
+        codec::put_u64(&mut out, self.step);
+        codec::put_u32(&mut out, self.states.len() as u32);
+        for st in &self.states {
+            match st {
+                EngineLayer::Dense(a) => {
+                    codec::put_u8(&mut out, 0);
+                    a.save(&mut out);
+                }
+                EngineLayer::LowRank(l) => {
+                    codec::put_u8(&mut out, 1);
+                    l.source.save_state(&mut out);
+                    l.rotation.save_state(&mut out);
+                    l.residual.save_state(&mut out);
+                    l.rule.save_state(&mut out);
+                }
+            }
+        }
+        out
+    }
+
+    /// Twin of [`SubspaceEngine::serialize_state`].
+    pub fn restore_state(&mut self, bytes: &[u8]) -> Result<()> {
+        let mut r = ByteReader::new(bytes);
+        let fp = r.take_str()?;
+        ensure!(
+            fp == self.fingerprint(),
+            "checkpoint was saved by {fp:?}, this engine is {:?} — resume \
+             needs the identical composition (preset, rank, seed, \
+             state-dtype)",
+            self.fingerprint()
+        );
+        self.step = r.take_u64()?;
+        let n = r.take_u32()? as usize;
+        ensure!(n == self.states.len(), "checkpoint has {n} layers, model has {}", self.states.len());
+        for st in &mut self.states {
+            let tag = r.take_u8()?;
+            match st {
+                EngineLayer::Dense(a) => {
+                    ensure!(tag == 0, "layer tag mismatch (dense expected)");
+                    a.load_from(&mut r)?;
+                }
+                EngineLayer::LowRank(l) => {
+                    ensure!(tag == 1, "layer tag mismatch (low-rank expected)");
+                    l.source.load_state(&mut r)?;
+                    l.rotation.load_state(&mut r)?;
+                    l.residual.load_state(&mut r)?;
+                    l.rule.load_state(&mut r)?;
+                }
+            }
+        }
+        r.finish()
     }
 }
 
@@ -233,8 +342,8 @@ impl Optimizer for SubspaceEngine {
             params,
             grads,
             |i, state, param, grad, ws| match state {
-                EngineLayer::Dense(st) => st.update(
-                    param, grad, lr, hyper.beta1, hyper.beta2, hyper.eps, dense_wd, t,
+                EngineLayer::Dense(st) => st.update_ws(
+                    param, grad, lr, hyper.beta1, hyper.beta2, hyper.eps, dense_wd, t, ws,
                 ),
                 EngineLayer::LowRank(l) => {
                     let ctx = StepCtx { t, lr, hyper, errors: errors_ref };
@@ -290,6 +399,14 @@ impl Optimizer for SubspaceEngine {
         } else {
             None
         }
+    }
+
+    fn save_state(&self) -> Option<Vec<u8>> {
+        Some(self.serialize_state())
+    }
+
+    fn load_state(&mut self, bytes: &[u8]) -> Result<()> {
+        self.restore_state(bytes)
     }
 
     fn broadcast_bytes(&self, meta: &LayerMeta) -> u64 {

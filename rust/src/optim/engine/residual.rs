@@ -3,8 +3,9 @@
 //!
 //! * [`DiscardResidual`] — GaLore: thrown away.
 //! * [`EfResidual`] — LDAdam / DCT-AdamW: accumulated in an error-feedback
-//!   buffer (f32 or the paper's 8-bit quantized form) and added back to the
-//!   next gradient before projection.
+//!   buffer (a typed [`StateStore`]: f32 or the paper's 8-bit quantized
+//!   form, per [`EfMode`]) and added back to the next gradient before
+//!   projection.
 //! * [`FiraResidual`] — FIRA: added to the update, norm-scaled by
 //!   `φ = ‖u_low‖/‖g_low‖` so it moves with an Adam-calibrated magnitude.
 //! * [`SignResidual`] — FRUGAL: fed to stateless SignSGD.
@@ -15,10 +16,12 @@
 //! exactly like the legacy loops), and `finish_update` which back-projects
 //! the subspace update and folds in the policy's residual contribution.
 
+use anyhow::Result;
+
 use crate::optim::common::MemoryReport;
-use crate::optim::error_feedback::EfBuffer;
 use crate::optim::EfMode;
-use crate::tensor::{Matrix, Workspace};
+use crate::tensor::{Matrix, StateStore, Workspace};
+use crate::util::codec::ByteReader;
 
 use super::source::SubspaceSource;
 
@@ -63,6 +66,15 @@ pub trait ResidualPolicy: Send {
 
     /// Persistent per-layer residual state (the "ef" memory-report family).
     fn memory(&self, _rep: &mut MemoryReport) {}
+
+    /// Checkpoint-v2 serialization of the policy's persistent state
+    /// (bit-exact). Stateless policies write nothing.
+    fn save_state(&self, _out: &mut Vec<u8>) {}
+
+    /// Twin of [`ResidualPolicy::save_state`].
+    fn load_state(&mut self, _r: &mut ByteReader) -> Result<()> {
+        Ok(())
+    }
 }
 
 /// GaLore: the residual is discarded.
@@ -72,14 +84,16 @@ impl ResidualPolicy for DiscardResidual {}
 
 /// LDAdam / DCT-AdamW error feedback. `EfMode::None` still routes the
 /// gradient through the owned checkout (matching the legacy DCT-AdamW loop
-/// exactly); the buffer itself is empty and both hooks are no-ops.
+/// exactly); the buffer itself is absent and both hooks are no-ops.
 pub struct EfResidual {
-    buf: EfBuffer,
+    store: Option<StateStore>,
 }
 
 impl EfResidual {
     pub fn new(mode: EfMode, rows: usize, cols: usize) -> Self {
-        EfResidual { buf: EfBuffer::new(mode, rows, cols) }
+        EfResidual {
+            store: mode.state_dtype().map(|d| StateStore::zeros(d, rows, cols)),
+        }
     }
 }
 
@@ -89,7 +103,9 @@ impl ResidualPolicy for EfResidual {
     }
 
     fn add_into_grad(&self, g: &mut Matrix) {
-        self.buf.add_into(g);
+        if let Some(st) = &self.store {
+            st.add_into(g);
+        }
     }
 
     fn store_residual(
@@ -103,11 +119,26 @@ impl ResidualPolicy for EfResidual {
         // Ξ ← G − g·Qᵀ (residual built in the scratch buffer)
         source.back_into(g_low, full, ws);
         full.sub_from(g);
-        self.buf.store(full);
+        if let Some(st) = &mut self.store {
+            st.store_from(full);
+        }
     }
 
     fn memory(&self, rep: &mut MemoryReport) {
-        rep.add("ef", self.buf.bytes());
+        rep.add("ef", self.store.as_ref().map_or(0, |st| st.bytes()));
+    }
+
+    fn save_state(&self, out: &mut Vec<u8>) {
+        if let Some(st) = &self.store {
+            st.save(out);
+        }
+    }
+
+    fn load_state(&mut self, r: &mut ByteReader) -> Result<()> {
+        match &mut self.store {
+            Some(st) => st.load_from(r),
+            None => Ok(()),
+        }
     }
 }
 

@@ -17,8 +17,11 @@
 //! the very first refresh themselves — there are no moments to carry into
 //! the initial subspace.
 
+use anyhow::Result;
+
 use crate::optim::common::MemoryReport;
 use crate::tensor::{matmul_into, Matrix, Workspace};
+use crate::util::codec::{self, ByteReader};
 
 use super::source::SubspaceSource;
 
@@ -44,6 +47,17 @@ pub trait RotationPolicy: Send {
     /// The snapshotted indices (fixed-basis policy only) — test hook.
     fn snapshot_indices(&self) -> Option<&[usize]> {
         None
+    }
+
+    /// Checkpoint-v2 serialization of the rotation's cross-refresh state
+    /// (snapshots + first-refresh flags — both feed the *next* refresh, so
+    /// a bit-identical resume must carry them). Stateless policies write
+    /// nothing.
+    fn save_state(&self, _out: &mut Vec<u8>) {}
+
+    /// Twin of [`RotationPolicy::save_state`].
+    fn load_state(&mut self, _r: &mut ByteReader) -> Result<()> {
+        Ok(())
     }
 }
 
@@ -159,6 +173,17 @@ impl RotationPolicy for FixedBasisRotation {
     fn snapshot_indices(&self) -> Option<&[usize]> {
         Some(&self.idx_prev)
     }
+
+    fn save_state(&self, out: &mut Vec<u8>) {
+        codec::put_indices(out, &self.idx_prev);
+        codec::put_u8(out, self.first as u8);
+    }
+
+    fn load_state(&mut self, r: &mut ByteReader) -> Result<()> {
+        self.idx_prev = r.take_indices()?;
+        self.first = r.take_u8()? != 0;
+        Ok(())
+    }
 }
 
 /// LDAdam's dense rotation `R = Q_prevᵀ·Q_crt`; costs a second `C×r`
@@ -207,6 +232,17 @@ impl RotationPolicy for DenseRotation {
 
     fn memory(&self, rep: &mut MemoryReport) {
         rep.add("projector_prev", self.prev_basis.bytes());
+    }
+
+    fn save_state(&self, out: &mut Vec<u8>) {
+        codec::put_matrix(out, &self.prev_basis);
+        codec::put_u8(out, self.first as u8);
+    }
+
+    fn load_state(&mut self, r: &mut ByteReader) -> Result<()> {
+        r.take_matrix_into(&mut self.prev_basis)?;
+        self.first = r.take_u8()? != 0;
+        Ok(())
     }
 }
 

@@ -15,16 +15,26 @@
 //! The rule is the per-layer step driver: `step_layer` receives the layer's
 //! source, rotation and residual policies plus the shared [`StepCtx`] and
 //! must stay allocation-free at steady state (every temporary from `ws`).
+//!
+//! Persistent rule state lives in typed [`StateStore`]s (the
+//! `state-dtype` axis): each step checks the moments out as f32, computes,
+//! and commits back. F32 stores hand their buffer out by move — zero cost,
+//! bit-identical to the pre-store code — while bf16/Q8 stores stage through
+//! pooled scratch, which is where the paper's optimizer-memory savings
+//! come from.
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
+
+use anyhow::Result;
 
 use crate::linalg::newton_schulz_into;
 use crate::optim::common::{
     adam_moments_into, shape_factor, take_oriented_owned, AdamScalars, LayerMeta,
     MemoryReport, OrientedGrad,
 };
-use crate::tensor::{Matrix, Workspace};
+use crate::tensor::{Matrix, StateDtype, StateStore, Workspace};
+use crate::util::codec::ByteReader;
 
 use super::residual::ResidualPolicy;
 use super::rotation::RotationPolicy;
@@ -69,23 +79,33 @@ pub trait UpdateRule: Send {
     /// "momentum" memory-report families).
     fn memory(&self, rep: &mut MemoryReport);
 
-    /// The full-rank momentum buffer (Newton–Schulz rule) — test hook.
-    fn momentum(&self) -> Option<&Matrix> {
+    /// The full-rank momentum, materialized to f32 (Newton–Schulz rule) —
+    /// test hook.
+    fn momentum(&self) -> Option<Matrix> {
         None
     }
+
+    /// Checkpoint-v2 serialization of the rule's stores (bit-exact).
+    fn save_state(&self, out: &mut Vec<u8>);
+
+    /// Twin of [`UpdateRule::save_state`].
+    fn load_state(&mut self, r: &mut ByteReader) -> Result<()>;
 }
 
 /// AdamW on the projected gradient; the skeleton every AdamW-family preset
 /// shares, with the rotation/residual hooks at the exact points the legacy
 /// loops touched them (pinned by `tests/engine_equivalence.rs`).
 pub struct SubspaceAdamW {
-    m: Matrix, // R×r
-    v: Matrix, // R×r
+    m: StateStore, // R×r
+    v: StateStore, // R×r
 }
 
 impl SubspaceAdamW {
-    pub fn new(rows: usize, rank: usize) -> Self {
-        SubspaceAdamW { m: Matrix::zeros(rows, rank), v: Matrix::zeros(rows, rank) }
+    pub fn new(dtype: StateDtype, rows: usize, rank: usize) -> Self {
+        SubspaceAdamW {
+            m: StateStore::zeros(dtype, rows, rank),
+            v: StateStore::zeros(dtype, rows, rank),
+        }
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -102,11 +122,15 @@ impl SubspaceAdamW {
     ) {
         let (rr, cc) = meta.oriented();
         let r = source.rank();
+        // moments out of their typed stores: f32 by move (no copy), lower
+        // precisions dequantized into pooled scratch
+        let mut m = self.m.checkout(ws);
+        let mut v = self.v.checkout(ws);
         let mut g_low = ws.take_uninit(rr, r);
         if source.refresh_due(ctx.t) {
             rotation.before_refresh(source);
             source.refresh_and_project_into(g, &mut g_low, ws);
-            rotation.rotate_moments(source, &mut self.m, &mut self.v, ws);
+            rotation.rotate_moments(source, &mut m, &mut v, ws);
         } else {
             source.project_into(g, &mut g_low, ws);
         }
@@ -117,7 +141,7 @@ impl SubspaceAdamW {
         // AdamW in the subspace — the shared fused kernel
         let sc = AdamScalars::new(ctx.hyper.beta1, ctx.hyper.beta2, ctx.hyper.eps, ctx.t);
         let mut u_low = ws.take_uninit(rr, r);
-        adam_moments_into(&mut u_low.data, &g_low.data, &mut self.m.data, &mut self.v.data, &sc);
+        adam_moments_into(&mut u_low.data, &g_low.data, &mut m.data, &mut v.data, &sc);
         // U = u·Qᵀ (+ the policy's residual term), applied in the original
         // orientation without materializing a transpose
         residual.finish_update(source, g, &g_low, &u_low, &mut full, ws);
@@ -130,6 +154,8 @@ impl SubspaceAdamW {
         ws.give(u_low);
         ws.give(full);
         ws.give(g_low);
+        self.v.commit(v, ws);
+        self.m.commit(m, ws);
     }
 }
 
@@ -163,6 +189,16 @@ impl UpdateRule for SubspaceAdamW {
         rep.add("adam_m_low", self.m.bytes());
         rep.add("adam_v_low", self.v.bytes());
     }
+
+    fn save_state(&self, out: &mut Vec<u8>) {
+        self.m.save(out);
+        self.v.save(out);
+    }
+
+    fn load_state(&mut self, r: &mut ByteReader) -> Result<()> {
+        self.m.load_from(r)?;
+        self.v.load_from(r)
+    }
 }
 
 /// Trion's orthogonalized-momentum rule (Algorithm 1): accumulate the
@@ -170,14 +206,14 @@ impl UpdateRule for SubspaceAdamW {
 /// extraction error back (`M ← B − (1−μ)·b·Qᵀ`), Newton–Schulz the
 /// low-rank factor and apply `−η·max(1,√(R/C))·o·Qᵀ`.
 pub struct NewtonSchulzMomentum {
-    momentum: Matrix, // R×C (oriented)
+    momentum: StateStore, // R×C (oriented)
     mu: f32,
     ns_steps: usize,
 }
 
 impl NewtonSchulzMomentum {
-    pub fn new(rows: usize, cols: usize, mu: f32, ns_steps: usize) -> Self {
-        NewtonSchulzMomentum { momentum: Matrix::zeros(rows, cols), mu, ns_steps }
+    pub fn new(dtype: StateDtype, rows: usize, cols: usize, mu: f32, ns_steps: usize) -> Self {
+        NewtonSchulzMomentum { momentum: StateStore::zeros(dtype, rows, cols), mu, ns_steps }
     }
 }
 
@@ -195,26 +231,28 @@ impl UpdateRule for NewtonSchulzMomentum {
     ) {
         let (rr, cc) = meta.oriented();
         let r = source.rank();
+        // momentum out of its typed store for the whole step (f32 by move)
+        let mut momentum = self.momentum.checkout(ws);
         // B = M + G — accumulate the gradient straight into the momentum,
         // transposing on the fly for wide layers
         if meta.needs_transpose() {
-            self.momentum.axpy_t(1.0, grad);
+            momentum.axpy_t(1.0, grad);
         } else {
-            self.momentum.axpy(1.0, grad);
+            momentum.axpy(1.0, grad);
         }
         // S = DCT(B); select top-r; b = S[:, i_t] (one pass). A cadence > 1
         // (a non-Trion grid point) reuses the held subspace between
         // refreshes.
         let mut b_low = ws.take_uninit(rr, r);
         if source.refresh_due(ctx.t) {
-            source.refresh_and_project_into(&self.momentum, &mut b_low, ws);
+            source.refresh_and_project_into(&momentum, &mut b_low, ws);
         } else {
-            source.project_into(&self.momentum, &mut b_low, ws);
+            source.project_into(&momentum, &mut b_low, ws);
         }
         // error feedback: M = B − (1−μ)·b·Qᵀ
         let mut back = ws.take_uninit(rr, cc);
         source.back_into(&b_low, &mut back, ws);
-        self.momentum.axpy(-(1.0 - self.mu), &back);
+        momentum.axpy(-(1.0 - self.mu), &back);
         // Newton–Schulz on the LOW-RANK momentum (R×r), workspace-backed so
         // the whole step stays allocation-free (tests/alloc_steady_state.rs)
         let mut o_low = ws.take_uninit(rr, r);
@@ -223,7 +261,7 @@ impl UpdateRule for NewtonSchulzMomentum {
             // restore B while `back` still holds back(b_low), then
             // repurpose `back` for O — computed only once
             let mut b_now = ws.take_uninit(rr, cc);
-            b_now.copy_from(&self.momentum);
+            b_now.copy_from(&momentum);
             b_now.axpy(1.0 - self.mu, &back);
             source.back_into(&o_low, &mut back, ws); // back = O
             b_now.axpy(-1.0, &back);
@@ -243,13 +281,22 @@ impl UpdateRule for NewtonSchulzMomentum {
         ws.give(o_low);
         ws.give(back);
         ws.give(b_low);
+        self.momentum.commit(momentum, ws);
     }
 
     fn memory(&self, rep: &mut MemoryReport) {
         rep.add("momentum", self.momentum.bytes());
     }
 
-    fn momentum(&self) -> Option<&Matrix> {
-        Some(&self.momentum)
+    fn momentum(&self) -> Option<Matrix> {
+        Some(self.momentum.to_matrix())
+    }
+
+    fn save_state(&self, out: &mut Vec<u8>) {
+        self.momentum.save(out);
+    }
+
+    fn load_state(&mut self, r: &mut ByteReader) -> Result<()> {
+        self.momentum.load_from(r)
     }
 }

@@ -5,8 +5,11 @@
 //! this one is a struct because every method is pure delegation and the
 //! schedule is a single integer.
 
+use anyhow::Result;
+
 use crate::projection::Projection;
 use crate::tensor::{Matrix, Workspace};
+use crate::util::codec::ByteReader;
 
 /// A projection plus its refresh cadence `T_u`.
 ///
@@ -73,5 +76,16 @@ impl SubspaceSource {
     /// be wired in there.
     pub fn state_bytes(&self) -> u64 {
         self.proj.state_bytes()
+    }
+
+    /// Checkpoint-v2 serialization of the projection's persistent state
+    /// (selected indices / dense bases / warm-start flags / RNG streams).
+    pub fn save_state(&self, out: &mut Vec<u8>) {
+        self.proj.save_state(out);
+    }
+
+    /// Twin of [`SubspaceSource::save_state`].
+    pub fn load_state(&mut self, r: &mut ByteReader) -> Result<()> {
+        self.proj.load_state(r)
     }
 }

@@ -13,6 +13,7 @@
 use crate::optim::common::{OptimizerConfig, OptimizerKind};
 use crate::optim::EfMode;
 use crate::projection::{ProjectionKind, RankNorm};
+use crate::tensor::StateDtype;
 
 /// Residual-handling axis (Table 3).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -70,6 +71,13 @@ pub struct OptimizerSpec {
     pub rotation: RotationKind,
     pub residual: ResidualKind,
     pub rule: UpdateRuleKind,
+    /// Storage precision of the rule's persistent state (Adam moments / NS
+    /// momentum) and the dense-fallback moments — the fifth composition
+    /// axis (`state-dtype=f32|bf16|q8`). `F32` is bit-invisible (the
+    /// preset-equivalence contract); lower precisions are the measurable
+    /// side of the paper's optimizer-memory claim. The EF buffer keeps its
+    /// own `ErrorFeedback(mode)` resolution.
+    pub state_dtype: StateDtype,
     pub broadcast: BroadcastKind,
     pub beta1: f32,
     pub beta2: f32,
@@ -109,6 +117,7 @@ impl OptimizerSpec {
             rotation: RotationKind::None,
             residual: ResidualKind::Discard,
             rule: UpdateRuleKind::SubspaceAdamW,
+            state_dtype: StateDtype::F32,
             broadcast: BroadcastKind::Full,
             beta1: 0.9,
             beta2: 0.999,
@@ -208,6 +217,12 @@ impl OptimizerSpec {
         self
     }
 
+    /// Storage precision of the persistent rule + dense-fallback state.
+    pub fn state_dtype(mut self, d: StateDtype) -> Self {
+        self.state_dtype = d;
+        self
+    }
+
     pub fn betas(mut self, beta1: f32, beta2: f32) -> Self {
         self.beta1 = beta1;
         self.beta2 = beta2;
@@ -295,6 +310,7 @@ impl OptimizerSpec {
                 .weight_decay(cfg.weight_decay)
                 .mu(cfg.mu)
                 .ns_steps(cfg.ns_steps)
+                .state_dtype(cfg.state_dtype)
                 .instrument(cfg.instrument)
                 .seed(cfg.seed)
                 .threads(cfg.threads),
@@ -337,14 +353,28 @@ impl OptimizerSpec {
     // -- naming ------------------------------------------------------------
 
     /// The engine's reported name: the explicit override if set, else the
-    /// legacy preset name when the composition matches a published method,
-    /// else a synthesized composition string.
+    /// legacy preset name when the composition matches a published method
+    /// (suffixed `+m:bf16`/`+m:q8` when the state dtype departs from the
+    /// bit-exact f32 default), else a synthesized composition string.
     pub(super) fn resolve_name(&self) -> String {
         if let Some(n) = &self.name {
             return n.clone();
         }
+        let Some(base) = self.resolve_preset_name() else {
+            // off-grid compositions carry the dtype inside the parens
+            return self.composed_name();
+        };
+        match self.state_dtype {
+            StateDtype::F32 => base,
+            d => format!("{base}+m:{}", d.name()),
+        }
+    }
+
+    /// The legacy preset name when the composition matches a published
+    /// method; `None` for off-grid compositions.
+    fn resolve_preset_name(&self) -> Option<String> {
         let proj = self.projection.name();
-        match (self.rule, self.residual, self.rotation) {
+        Some(match (self.rule, self.residual, self.rotation) {
             (UpdateRuleKind::NewtonSchulz, ResidualKind::Discard, RotationKind::None) => {
                 match self.projection {
                     ProjectionKind::Dct { .. } => "trion".to_string(),
@@ -384,8 +414,8 @@ impl OptimizerSpec {
                     _ => format!("galore+{proj}"),
                 }
             }
-            _ => self.composed_name(),
-        }
+            _ => return None,
+        })
     }
 
     /// Human-readable policy composition (the `info` command's view of a
@@ -409,17 +439,19 @@ impl OptimizerSpec {
             UpdateRuleKind::NewtonSchulz => "newton-schulz",
         };
         format!(
-            "source={} T_u={} rotation={} residual={} rule={}",
+            "source={} T_u={} rotation={} residual={} rule={} state={}",
             self.projection.name(),
             self.update_interval,
             rot,
             resid,
-            rule
+            rule,
+            self.state_dtype.name()
         )
     }
 
     /// Synthesized name for off-grid compositions, e.g.
-    /// `engine(svd+adamw+ef-q8,T200)`.
+    /// `engine(svd+adamw+ef-q8,T200)` — non-f32 state dtypes appear as a
+    /// trailing `,m:bf16` / `,m:q8` segment.
     fn composed_name(&self) -> String {
         let rule = match self.rule {
             UpdateRuleKind::SubspaceAdamW => "adamw",
@@ -438,13 +470,18 @@ impl OptimizerSpec {
             RotationKind::FixedBasis => "+rot-fixed",
             RotationKind::Dense => "+rot-dense",
         };
+        let state = match self.state_dtype {
+            StateDtype::F32 => String::new(),
+            d => format!(",m:{}", d.name()),
+        };
         format!(
-            "engine({}+{}+{}{},T{})",
+            "engine({}+{}+{}{},T{}{})",
             self.projection.name(),
             rule,
             resid,
             rot,
-            self.update_interval
+            self.update_interval,
+            state
         )
     }
 }
@@ -471,6 +508,33 @@ mod tests {
             OptimizerSpec::frugal(8).projection(ProjectionKind::RandPerm).resolve_name(),
             "frugal+randperm"
         );
+    }
+
+    #[test]
+    fn state_dtype_is_part_of_the_name() {
+        // f32 is the bit-exact default and invisible in names
+        assert_eq!(OptimizerSpec::trion(8).state_dtype, StateDtype::F32);
+        assert_eq!(
+            OptimizerSpec::trion(8).state_dtype(StateDtype::Bf16).resolve_name(),
+            "trion+m:bf16"
+        );
+        assert_eq!(
+            OptimizerSpec::dct_adamw(8).state_dtype(StateDtype::Q8).resolve_name(),
+            "dct-adamw+m:q8"
+        );
+        // off-grid compositions fold it inside the parens
+        let s = OptimizerSpec::galore(8)
+            .update_interval(200)
+            .state_dtype(StateDtype::Bf16)
+            .projection(ProjectionKind::Dct { norm: RankNorm::L2, use_makhoul: true })
+            .residual(ResidualKind::ErrorFeedback(EfMode::Q8));
+        assert_eq!(s.resolve_name(), "engine(dct+adamw+ef-q8,T200,m:bf16)");
+        assert!(s.describe().contains("state=bf16"));
+        // cfg threading: from_kind picks the config's dtype up
+        let cfg = OptimizerConfig { state_dtype: StateDtype::Bf16, ..Default::default() };
+        let t = OptimizerSpec::from_kind(&OptimizerKind::Trion, &cfg).unwrap();
+        assert_eq!(t.state_dtype, StateDtype::Bf16);
+        assert_eq!(t.resolve_name(), "trion+m:bf16");
     }
 
     #[test]

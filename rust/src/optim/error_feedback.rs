@@ -1,70 +1,56 @@
 //! Error-feedback buffers (§2.4): full-precision f32 or 8-bit quantized
 //! (MicroAdam-style symmetric per-tensor quantization — the paper reports
 //! 8 bits as the lowest resolution that does not degrade the optimizer).
+//!
+//! Since the typed-storage refactor this is a thin facade over
+//! [`StateStore`] — the f32/Q8 pack/unpack code that used to live here is
+//! the store's (SIMD-dispatched) implementation now, byte-for-byte the same
+//! arithmetic. The engine's `EfResidual` policy holds a `StateStore`
+//! directly; this wrapper keeps the historical `EfBuffer` API for the
+//! frozen legacy step loops in `tests/engine_equivalence.rs` and maps
+//! [`EfMode`] onto the matching [`StateDtype`] (`None` ⇒ no store at all).
 
 use crate::optim::common::EfMode;
-use crate::tensor::Matrix;
+use crate::tensor::{Matrix, StateDtype, StateStore};
 
-/// A single layer's EF buffer.
-pub enum EfBuffer {
-    None { rows: usize, cols: usize },
-    F32(Matrix),
-    /// int8 payload + per-tensor scale.
-    Q8 { q: Vec<i8>, scale: f32, rows: usize, cols: usize },
+impl EfMode {
+    /// The storage dtype backing this EF resolution (`None` ⇒ no buffer).
+    pub fn state_dtype(self) -> Option<StateDtype> {
+        match self {
+            EfMode::None => None,
+            EfMode::F32 => Some(StateDtype::F32),
+            EfMode::Q8 => Some(StateDtype::Q8),
+        }
+    }
+}
+
+/// A single layer's EF buffer — an optional typed store.
+pub struct EfBuffer {
+    store: Option<StateStore>,
 }
 
 impl EfBuffer {
     pub fn new(mode: EfMode, rows: usize, cols: usize) -> Self {
-        match mode {
-            EfMode::None => EfBuffer::None { rows, cols },
-            EfMode::F32 => EfBuffer::F32(Matrix::zeros(rows, cols)),
-            EfMode::Q8 => EfBuffer::Q8 {
-                q: vec![0; rows * cols],
-                scale: 0.0,
-                rows,
-                cols,
-            },
-        }
+        EfBuffer { store: mode.state_dtype().map(|d| StateStore::zeros(d, rows, cols)) }
     }
 
     /// Add the stored error into `g` in place (`G ← G + Ξ`).
     pub fn add_into(&self, g: &mut Matrix) {
-        match self {
-            EfBuffer::None { .. } => {}
-            EfBuffer::F32(e) => g.axpy(1.0, e),
-            EfBuffer::Q8 { q, scale, .. } => {
-                if *scale != 0.0 {
-                    for (gv, &qv) in g.data.iter_mut().zip(q.iter()) {
-                        *gv += qv as f32 * scale;
-                    }
-                }
-            }
+        if let Some(st) = &self.store {
+            st.add_into(g);
         }
     }
 
     /// Store a new error (`Ξ ← err`), quantizing if configured.
     pub fn store(&mut self, err: &Matrix) {
-        match self {
-            EfBuffer::None { .. } => {}
-            EfBuffer::F32(e) => e.data.copy_from_slice(&err.data),
-            EfBuffer::Q8 { q, scale, .. } => {
-                let max = err.abs_max();
-                let s = max / 127.0 + 1e-12;
-                *scale = s;
-                for (qv, &ev) in q.iter_mut().zip(err.data.iter()) {
-                    *qv = (ev / s).round().clamp(-127.0, 127.0) as i8;
-                }
-            }
+        if let Some(st) = &mut self.store {
+            st.store_from(err);
         }
     }
 
     /// Persistent bytes of this buffer.
     pub fn bytes(&self) -> u64 {
-        match self {
-            EfBuffer::None { .. } => 0,
-            EfBuffer::F32(m) => m.bytes(),
-            EfBuffer::Q8 { q, .. } => q.len() as u64 + 4,
-        }
+        self.store.as_ref().map_or(0, |st| st.bytes())
     }
 }
 

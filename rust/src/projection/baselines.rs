@@ -2,18 +2,23 @@
 //! FIRA), block power iteration (LDAdam), random semi-orthogonal and random
 //! permutation (FRUGAL's ablations).
 
-use crate::linalg::{block_power_iter, qr_q_into, qr_thin, svd_thin};
+use anyhow::Result;
+
+use crate::linalg::{block_power_iter, qr_q_into, qr_thin, svd_right_vectors_into, svd_thin};
 use crate::tensor::{
     matmul, matmul_a_bt, matmul_a_bt_into, matmul_at_b_into, matmul_into,
     Matrix, Workspace,
 };
+use crate::util::codec::{self, ByteReader};
 use crate::util::Pcg64;
 
 use super::Projection;
 
 /// Shared implementation for methods that materialize `Q_r (C×r)` —
-/// including the allocation-free `_into` family (the subspace *refresh*
-/// of these baselines still allocates; project/back are the per-step ops).
+/// including the allocation-free `_into` family. Each baseline overrides
+/// `refresh_and_project_into` with a workspace-backed refresh as well
+/// (Jacobi SVD, block power + `qr_q_into`, QR-of-Gaussian), so refresh
+/// *and* project steps are allocation-free at steady state.
 macro_rules! dense_basis_impl {
     () => {
         fn project(&self, g: &Matrix) -> Matrix {
@@ -78,7 +83,39 @@ impl Projection for SvdProj {
         self.project(g)
     }
 
+    /// Workspace-backed refresh: the identical Jacobi sweep as
+    /// [`svd_thin`] (`svd_right_vectors_into` — bit-identical, pinned by
+    /// the `_into` property test in `projection/mod.rs`) with every f64
+    /// work buffer pooled, so the GaLore refresh step is allocation-free at
+    /// steady state.
+    fn refresh_and_project_into(&mut self, g: &Matrix, out: &mut Matrix, ws: &mut Workspace) {
+        svd_right_vectors_into(g, self.q_r.cols, &mut self.q_r, ws);
+        matmul_into(g, &self.q_r, out);
+    }
+
     dense_basis_impl!();
+
+    fn save_state(&self, out: &mut Vec<u8>) {
+        codec::put_matrix(out, &self.q_r);
+    }
+
+    fn load_state(&mut self, r: &mut ByteReader) -> Result<()> {
+        // rank can shrink below the configured r when the gradient is
+        // wider than tall (right_vectors clamps to min(m, n)) — accept the
+        // checkpointed shape as long as the C dimension matches and the
+        // rank never exceeds the configured one
+        let q = r.take_matrix()?;
+        anyhow::ensure!(
+            q.rows == self.q_r.rows && q.cols <= self.q_r.cols,
+            "checkpointed SVD basis is {}x{}, expected {}x(≤{})",
+            q.rows,
+            q.cols,
+            self.q_r.rows,
+            self.q_r.cols
+        );
+        self.q_r = q;
+        Ok(())
+    }
 
     fn name(&self) -> &'static str {
         "svd"
@@ -148,6 +185,17 @@ impl Projection for BlockPower {
 
     dense_basis_impl!();
 
+    fn save_state(&self, out: &mut Vec<u8>) {
+        codec::put_matrix(out, &self.q_r);
+        codec::put_u8(out, self.warm as u8);
+    }
+
+    fn load_state(&mut self, r: &mut ByteReader) -> Result<()> {
+        r.take_matrix_into(&mut self.q_r)?;
+        self.warm = r.take_u8()? != 0;
+        Ok(())
+    }
+
     fn name(&self) -> &'static str {
         "block_power"
     }
@@ -178,7 +226,35 @@ impl Projection for RandomSemiOrtho {
         self.project(g)
     }
 
+    /// Workspace-backed refresh: the fresh Gaussian draws into a pooled
+    /// buffer (same RNG consumption as `Matrix::randn`) and the Q factor
+    /// comes from `qr_q_into` — bit-identical to `qr_thin`'s Q (property-
+    /// pinned in `linalg/qr.rs`), with zero steady-state allocations.
+    fn refresh_and_project_into(&mut self, g: &Matrix, out: &mut Matrix, ws: &mut Workspace) {
+        let (c, r) = self.q_r.shape();
+        let mut fresh = ws.take_uninit(c, r);
+        self.rng.fill_normal(&mut fresh.data, 1.0);
+        qr_q_into(&fresh, &mut self.q_r, ws);
+        ws.give(fresh);
+        matmul_into(g, &self.q_r, out);
+    }
+
     dense_basis_impl!();
+
+    fn save_state(&self, out: &mut Vec<u8>) {
+        codec::put_matrix(out, &self.q_r);
+        let (state, inc) = self.rng.state_parts();
+        codec::put_u128(out, state);
+        codec::put_u128(out, inc);
+    }
+
+    fn load_state(&mut self, r: &mut ByteReader) -> Result<()> {
+        r.take_matrix_into(&mut self.q_r)?;
+        let state = r.take_u128()?;
+        let inc = r.take_u128()?;
+        self.rng = Pcg64::from_state_parts(state, inc);
+        Ok(())
+    }
 
     fn name(&self) -> &'static str {
         "random"
@@ -247,6 +323,35 @@ impl Projection for RandPerm {
 
     fn indices(&self) -> Option<&[usize]> {
         Some(&self.idx)
+    }
+
+    fn save_state(&self, out: &mut Vec<u8>) {
+        codec::put_indices(out, &self.idx);
+        let (state, inc) = self.rng.state_parts();
+        codec::put_u128(out, state);
+        codec::put_u128(out, inc);
+    }
+
+    fn load_state(&mut self, r: &mut ByteReader) -> Result<()> {
+        let idx = r.take_indices()?;
+        // validate against the built config before installing: a corrupt
+        // blob must surface as Err, never as an OOB gather later
+        anyhow::ensure!(
+            idx.len() == self.idx.len(),
+            "checkpointed randperm has {} indices, expected {}",
+            idx.len(),
+            self.idx.len()
+        );
+        anyhow::ensure!(
+            idx.iter().all(|&i| i < self.cols),
+            "checkpointed randperm indices out of range for dim {}",
+            self.cols
+        );
+        self.idx = idx;
+        let state = r.take_u128()?;
+        let inc = r.take_u128()?;
+        self.rng = Pcg64::from_state_parts(state, inc);
+        Ok(())
     }
 
     fn state_bytes(&self) -> u64 {

@@ -16,12 +16,15 @@
 
 use std::sync::Arc;
 
+use anyhow::Result;
+
 use crate::fft::{cached_dct2_matrix, cached_plan, MakhoulPlan};
 use crate::parallel::ThreadPool;
 use crate::tensor::{
     matmul, matmul_a_bt, matmul_a_bt_into, matmul_into, matmul_into_on, Matrix,
     Workspace,
 };
+use crate::util::codec::{self, ByteReader};
 
 use super::{Projection, RankNorm};
 
@@ -232,6 +235,31 @@ impl Projection for DctSelect {
 
     fn indices(&self) -> Option<&[usize]> {
         Some(&self.idx)
+    }
+
+    fn save_state(&self, out: &mut Vec<u8>) {
+        codec::put_indices(out, &self.idx);
+    }
+
+    fn load_state(&mut self, r: &mut ByteReader) -> Result<()> {
+        let idx = r.take_indices()?;
+        // validate before installing: a corrupt blob must be Err, not a
+        // later OOB gather or a silently different rank
+        anyhow::ensure!(
+            idx.len() == self.rank,
+            "checkpointed DCT selection has {} indices, expected rank {}",
+            idx.len(),
+            self.rank
+        );
+        anyhow::ensure!(
+            idx.iter().all(|&i| i < self.shared.dim()),
+            "checkpointed DCT indices out of range for dim {}",
+            self.shared.dim()
+        );
+        self.idx = idx;
+        // the basis cache is derived state — rebuild it from the indices
+        self.shared.matrix().select_columns_into(&self.idx, &mut self.basis_cache);
+        Ok(())
     }
 
     fn state_bytes(&self) -> u64 {

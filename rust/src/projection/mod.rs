@@ -24,7 +24,10 @@ mod baselines;
 
 use std::sync::Arc;
 
+use anyhow::Result;
+
 use crate::tensor::{Matrix, Workspace};
+use crate::util::codec::ByteReader;
 
 pub use baselines::{BlockPower, RandPerm, RandomSemiOrtho, SvdProj};
 pub use dct_select::{
@@ -154,6 +157,20 @@ pub trait Projection: Send {
     /// index-matching moment rotation only exists when this is `Some`).
     fn indices(&self) -> Option<&[usize]> {
         None
+    }
+
+    /// Serialize the persistent subspace state for checkpoint v2: selected
+    /// indices, dense bases, warm-start flags and RNG streams — everything
+    /// a later step reads, so a restored projection continues bit-
+    /// identically. Implementations with cross-step state must override
+    /// both hooks (the defaults write/read nothing, correct only for
+    /// genuinely stateless projections).
+    fn save_state(&self, _out: &mut Vec<u8>) {}
+
+    /// Twin of [`Projection::save_state`]; the receiver was built from the
+    /// same spec, so shapes/config are already in place.
+    fn load_state(&mut self, _r: &mut ByteReader) -> Result<()> {
+        Ok(())
     }
 
     /// Persistent per-layer state bytes (what lives in optimizer memory

@@ -174,4 +174,74 @@ impl Simd for Avx2 {
     fn swap_pairs(v: Self::F64) -> Self::F64 {
         unsafe { _mm256_permute2f128_pd(v, v, 0x01) }
     }
+
+    // ---- u32 -----------------------------------------------------------
+
+    type U32 = __m256i;
+
+    #[inline(always)]
+    fn splat_u32(x: u32) -> Self::U32 {
+        unsafe { _mm256_set1_epi32(x as i32) }
+    }
+
+    #[inline(always)]
+    fn f32_bits(v: Self::F32) -> Self::U32 {
+        unsafe { _mm256_castps_si256(v) }
+    }
+
+    #[inline(always)]
+    fn bits_f32(v: Self::U32) -> Self::F32 {
+        unsafe { _mm256_castsi256_ps(v) }
+    }
+
+    #[inline(always)]
+    fn shr16_u32(v: Self::U32) -> Self::U32 {
+        unsafe { _mm256_srli_epi32::<16>(v) }
+    }
+
+    #[inline(always)]
+    fn shl16_u32(v: Self::U32) -> Self::U32 {
+        unsafe { _mm256_slli_epi32::<16>(v) }
+    }
+
+    #[inline(always)]
+    fn and_u32(a: Self::U32, b: Self::U32) -> Self::U32 {
+        unsafe { _mm256_and_si256(a, b) }
+    }
+
+    #[inline(always)]
+    fn or_u32(a: Self::U32, b: Self::U32) -> Self::U32 {
+        unsafe { _mm256_or_si256(a, b) }
+    }
+
+    #[inline(always)]
+    fn add_u32(a: Self::U32, b: Self::U32) -> Self::U32 {
+        unsafe { _mm256_add_epi32(a, b) }
+    }
+
+    #[inline(always)]
+    fn nan_mask_u32(v: Self::F32) -> Self::U32 {
+        // unordered self-compare: all-ones exactly on NaN lanes
+        unsafe { _mm256_castps_si256(_mm256_cmp_ps::<_CMP_UNORD_Q>(v, v)) }
+    }
+
+    #[inline(always)]
+    fn select_u32(mask: Self::U32, a: Self::U32, b: Self::U32) -> Self::U32 {
+        // per-byte blend is per-lane correct because mask lanes are
+        // all-ones / all-zero
+        unsafe { _mm256_blendv_epi8(b, a, mask) }
+    }
+
+    #[inline(always)]
+    fn widen_u16(s: &[u16]) -> Self::U32 {
+        let s = &s[..F32_LANES]; // bounds check once, then raw 16-byte load
+        unsafe { _mm256_cvtepu16_epi32(_mm_loadu_si128(s.as_ptr() as *const __m128i)) }
+    }
+
+    #[inline(always)]
+    fn to_array_u32(v: Self::U32) -> [u32; F32_LANES] {
+        let mut out = [0u32; F32_LANES];
+        unsafe { _mm256_storeu_si256(out.as_mut_ptr() as *mut __m256i, v) };
+        out
+    }
 }

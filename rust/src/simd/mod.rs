@@ -155,6 +155,38 @@ pub trait Simd: Copy + Send + Sync + 'static {
     /// Swap the two complex pairs: `[c0, c1] → [c1, c0]` (for reversed
     /// traversals like the Makhoul conjugate-symmetry half).
     fn swap_pairs(v: Self::F64) -> Self::F64;
+
+    // ---- u32 lanes (8, mirroring the f32 lanes) ------------------------
+    //
+    // Bit-manipulation surface for the typed-storage pack/unpack kernels
+    // (`tensor::store`): every op is an exact integer/bit operation, so the
+    // bit-identity contract holds trivially — there is no rounding anywhere
+    // in this group.
+
+    /// 8 u32 lanes, the bit-pattern view of [`Simd::F32`].
+    type U32: Copy;
+
+    fn splat_u32(x: u32) -> Self::U32;
+    /// Reinterpret f32 lanes as their raw IEEE-754 bit patterns (exact).
+    fn f32_bits(v: Self::F32) -> Self::U32;
+    /// Inverse of [`Simd::f32_bits`] (exact).
+    fn bits_f32(v: Self::U32) -> Self::F32;
+    /// Per-lane logical shift right by 16.
+    fn shr16_u32(v: Self::U32) -> Self::U32;
+    /// Per-lane shift left by 16.
+    fn shl16_u32(v: Self::U32) -> Self::U32;
+    fn and_u32(a: Self::U32, b: Self::U32) -> Self::U32;
+    fn or_u32(a: Self::U32, b: Self::U32) -> Self::U32;
+    /// Per-lane wrapping add.
+    fn add_u32(a: Self::U32, b: Self::U32) -> Self::U32;
+    /// All-ones lanes where the f32 lane is NaN, all-zero elsewhere
+    /// (unordered self-compare).
+    fn nan_mask_u32(v: Self::F32) -> Self::U32;
+    /// Per-lane `mask ? a : b`; mask lanes must be all-ones or all-zero.
+    fn select_u32(mask: Self::U32, a: Self::U32, b: Self::U32) -> Self::U32;
+    /// Widen `s[..8]` u16 values to 8 u32 lanes (panics if shorter).
+    fn widen_u16(s: &[u16]) -> Self::U32;
+    fn to_array_u32(v: Self::U32) -> [u32; F32_LANES];
 }
 
 /// Fixed-order horizontal sum of 8 lanes: `((l0+l1)+(l2+l3)) +
@@ -376,6 +408,25 @@ mod tests {
         fn complex_ops(a: &[Complex], b: &[Complex], out: &mut [Complex]) = complex_ops_g
     }
 
+    /// The whole u32 surface as one dispatched kernel: widen u16 → bit
+    /// games mirroring the bf16 pack (shift/and/or/add/select on the NaN
+    /// mask) → reinterpret back to f32.
+    #[inline(always)]
+    fn u32_ops_g<S: Simd>(f: &[f32], h: &[u16], out: &mut [u32]) {
+        let v = S::load(f);
+        let bits = S::f32_bits(v);
+        let hi = S::shr16_u32(bits);
+        let lsb = S::and_u32(hi, S::splat_u32(1));
+        let rne = S::shr16_u32(S::add_u32(bits, S::add_u32(lsb, S::splat_u32(0x7FFF))));
+        let sel = S::select_u32(S::nan_mask_u32(v), S::or_u32(hi, S::splat_u32(0x40)), rne);
+        let w = S::add_u32(S::widen_u16(h), sel);
+        let arr = S::to_array_u32(S::f32_bits(S::bits_f32(S::shl16_u32(w))));
+        out[..F32_LANES].copy_from_slice(&arr);
+    }
+    crate::simd_dispatch! {
+        fn u32_ops(f: &[f32], h: &[u16], out: &mut [u32]) = u32_ops_g
+    }
+
     #[test]
     fn lane_ops_agree_with_scalar() {
         let _guard = OVERRIDE_LOCK.lock().unwrap();
@@ -387,6 +438,9 @@ mod tests {
                 (0..2).map(|_| Complex::new(rng.normal(), rng.normal())).collect();
             let cb: Vec<Complex> =
                 (0..2).map(|_| Complex::new(rng.normal(), rng.normal())).collect();
+            let mut f: Vec<f32> = (0..8).map(|_| rng.normal_f32() * 1e3).collect();
+            f[rng.usize_below(8)] = f32::NAN; // exercise the NaN-mask select
+            let h: Vec<u16> = (0..8).map(|_| rng.next_u64() as u16).collect();
             check_all_backends(|be| {
                 set_backend_override(Some(be));
                 let mut o32 = vec![0.0f32; 8];
@@ -395,6 +449,8 @@ mod tests {
                 f64_ops(&a, &y, &mut o64);
                 let mut oc = vec![Complex::ZERO; 2];
                 complex_ops(&ca, &cb, &mut oc);
+                let mut ou = vec![0u32; 8];
+                u32_ops(&f, &h, &mut ou);
                 set_backend_override(None);
                 (
                     o32.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
@@ -402,6 +458,7 @@ mod tests {
                     oc.iter()
                         .map(|c| (c.re.to_bits(), c.im.to_bits()))
                         .collect::<Vec<_>>(),
+                    ou,
                 )
             });
         });

@@ -199,4 +199,81 @@ impl Simd for Neon {
     fn swap_pairs(v: Self::F64) -> Self::F64 {
         [v[1], v[0]]
     }
+
+    // ---- u32 -----------------------------------------------------------
+
+    type U32 = [uint32x4_t; 2];
+
+    #[inline(always)]
+    fn splat_u32(x: u32) -> Self::U32 {
+        unsafe { [vdupq_n_u32(x), vdupq_n_u32(x)] }
+    }
+
+    #[inline(always)]
+    fn f32_bits(v: Self::F32) -> Self::U32 {
+        unsafe { [vreinterpretq_u32_f32(v[0]), vreinterpretq_u32_f32(v[1])] }
+    }
+
+    #[inline(always)]
+    fn bits_f32(v: Self::U32) -> Self::F32 {
+        unsafe { [vreinterpretq_f32_u32(v[0]), vreinterpretq_f32_u32(v[1])] }
+    }
+
+    #[inline(always)]
+    fn shr16_u32(v: Self::U32) -> Self::U32 {
+        unsafe { [vshrq_n_u32::<16>(v[0]), vshrq_n_u32::<16>(v[1])] }
+    }
+
+    #[inline(always)]
+    fn shl16_u32(v: Self::U32) -> Self::U32 {
+        unsafe { [vshlq_n_u32::<16>(v[0]), vshlq_n_u32::<16>(v[1])] }
+    }
+
+    #[inline(always)]
+    fn and_u32(a: Self::U32, b: Self::U32) -> Self::U32 {
+        unsafe { [vandq_u32(a[0], b[0]), vandq_u32(a[1], b[1])] }
+    }
+
+    #[inline(always)]
+    fn or_u32(a: Self::U32, b: Self::U32) -> Self::U32 {
+        unsafe { [vorrq_u32(a[0], b[0]), vorrq_u32(a[1], b[1])] }
+    }
+
+    #[inline(always)]
+    fn add_u32(a: Self::U32, b: Self::U32) -> Self::U32 {
+        unsafe { [vaddq_u32(a[0], b[0]), vaddq_u32(a[1], b[1])] }
+    }
+
+    #[inline(always)]
+    fn nan_mask_u32(v: Self::F32) -> Self::U32 {
+        // vceqq is all-ones exactly on non-NaN lanes; invert
+        unsafe {
+            [
+                vmvnq_u32(vceqq_f32(v[0], v[0])),
+                vmvnq_u32(vceqq_f32(v[1], v[1])),
+            ]
+        }
+    }
+
+    #[inline(always)]
+    fn select_u32(mask: Self::U32, a: Self::U32, b: Self::U32) -> Self::U32 {
+        unsafe { [vbslq_u32(mask[0], a[0], b[0]), vbslq_u32(mask[1], a[1], b[1])] }
+    }
+
+    #[inline(always)]
+    fn widen_u16(s: &[u16]) -> Self::U32 {
+        let s = &s[..F32_LANES];
+        let p = s.as_ptr();
+        unsafe { [vmovl_u16(vld1_u16(p)), vmovl_u16(vld1_u16(p.add(4)))] }
+    }
+
+    #[inline(always)]
+    fn to_array_u32(v: Self::U32) -> [u32; F32_LANES] {
+        let mut out = [0u32; F32_LANES];
+        unsafe {
+            vst1q_u32(out.as_mut_ptr(), v[0]);
+            vst1q_u32(out.as_mut_ptr().add(4), v[1]);
+        }
+        out
+    }
 }

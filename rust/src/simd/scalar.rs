@@ -186,4 +186,109 @@ impl Simd for Scalar {
     fn swap_pairs(v: Self::F64) -> Self::F64 {
         [v[2], v[3], v[0], v[1]]
     }
+
+    // ---- u32 -----------------------------------------------------------
+
+    type U32 = [u32; F32_LANES];
+
+    #[inline(always)]
+    fn splat_u32(x: u32) -> Self::U32 {
+        [x; F32_LANES]
+    }
+
+    #[inline(always)]
+    fn f32_bits(v: Self::F32) -> Self::U32 {
+        let mut out = [0u32; F32_LANES];
+        for l in 0..F32_LANES {
+            out[l] = v[l].to_bits();
+        }
+        out
+    }
+
+    #[inline(always)]
+    fn bits_f32(v: Self::U32) -> Self::F32 {
+        let mut out = [0.0f32; F32_LANES];
+        for l in 0..F32_LANES {
+            out[l] = f32::from_bits(v[l]);
+        }
+        out
+    }
+
+    #[inline(always)]
+    fn shr16_u32(v: Self::U32) -> Self::U32 {
+        let mut out = v;
+        for x in &mut out {
+            *x >>= 16;
+        }
+        out
+    }
+
+    #[inline(always)]
+    fn shl16_u32(v: Self::U32) -> Self::U32 {
+        let mut out = v;
+        for x in &mut out {
+            *x <<= 16;
+        }
+        out
+    }
+
+    #[inline(always)]
+    fn and_u32(a: Self::U32, b: Self::U32) -> Self::U32 {
+        let mut out = [0u32; F32_LANES];
+        for l in 0..F32_LANES {
+            out[l] = a[l] & b[l];
+        }
+        out
+    }
+
+    #[inline(always)]
+    fn or_u32(a: Self::U32, b: Self::U32) -> Self::U32 {
+        let mut out = [0u32; F32_LANES];
+        for l in 0..F32_LANES {
+            out[l] = a[l] | b[l];
+        }
+        out
+    }
+
+    #[inline(always)]
+    fn add_u32(a: Self::U32, b: Self::U32) -> Self::U32 {
+        let mut out = [0u32; F32_LANES];
+        for l in 0..F32_LANES {
+            out[l] = a[l].wrapping_add(b[l]);
+        }
+        out
+    }
+
+    #[inline(always)]
+    fn nan_mask_u32(v: Self::F32) -> Self::U32 {
+        let mut out = [0u32; F32_LANES];
+        for l in 0..F32_LANES {
+            out[l] = if v[l].is_nan() { u32::MAX } else { 0 };
+        }
+        out
+    }
+
+    #[inline(always)]
+    fn select_u32(mask: Self::U32, a: Self::U32, b: Self::U32) -> Self::U32 {
+        let mut out = [0u32; F32_LANES];
+        for l in 0..F32_LANES {
+            out[l] = (mask[l] & a[l]) | (!mask[l] & b[l]);
+        }
+        out
+    }
+
+    #[inline(always)]
+    fn widen_u16(s: &[u16]) -> Self::U32 {
+        let s = &s[..F32_LANES];
+        let mut out = [0u32; F32_LANES];
+        for l in 0..F32_LANES {
+            out[l] = s[l] as u32;
+        }
+        out
+    }
+
+    #[inline(always)]
+    fn to_array_u32(v: Self::U32) -> [u32; F32_LANES] {
+        v
+    }
 }

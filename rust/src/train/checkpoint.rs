@@ -1,23 +1,53 @@
-//! Parameter checkpointing: a minimal binary format (magic, count, per-
-//! tensor rows/cols + f32 payload, little-endian) so the fine-tuning
-//! experiments can load the pre-trained weights the pre-training runs save.
+//! Training checkpoints.
+//!
+//! Two on-disk formats, both little-endian:
+//!
+//! * **v1 (`FFTSUBv1`)** — params only: magic, tensor count, per-tensor
+//!   rows/cols + f32 payload. What the fine-tuning experiments consume.
+//! * **v2 (`FFTSUBv2`)** — full training state: the v1 params section
+//!   followed by the step counter, the optimizer's reported name, and the
+//!   optimizer's opaque state blob (`Optimizer::save_state` — typed stores,
+//!   subspace/rotation/residual auxiliaries, RNG streams, all bit-exact).
+//!   `resume=` restores it and continues the uninterrupted trajectory to
+//!   the bit (`tests/resume_determinism.rs`).
+//!
+//! [`load`] / [`load_full`] accept both versions (v1 yields `state: None`).
+//! Every header field read from the file is validated against the bytes
+//! actually remaining **before** any allocation is sized from it, so a
+//! truncated or corrupt file fails with context instead of attempting a
+//! huge allocation and erroring at EOF.
 
 use std::io::{Read, Write};
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::tensor::Matrix;
 
-const MAGIC: &[u8; 8] = b"FFTSUBv1";
+const MAGIC_V1: &[u8; 8] = b"FFTSUBv1";
+const MAGIC_V2: &[u8; 8] = b"FFTSUBv2";
 
-pub fn save(path: impl AsRef<Path>, params: &[Matrix]) -> Result<()> {
-    let path = path.as_ref();
-    if let Some(dir) = path.parent() {
-        std::fs::create_dir_all(dir)?;
-    }
-    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-    f.write_all(MAGIC)?;
+/// The resumable-state section of a v2 checkpoint.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainState {
+    /// Completed optimizer steps at save time.
+    pub step: u64,
+    /// The optimizer's reported name at save time (a human-readable sanity
+    /// label; the opaque blob carries its own strict fingerprint).
+    pub optimizer: String,
+    /// `Optimizer::save_state` payload (empty = params-only resume).
+    pub opt_state: Vec<u8>,
+}
+
+/// A parsed checkpoint of either version.
+#[derive(Debug)]
+pub struct Checkpoint {
+    pub params: Vec<Matrix>,
+    /// `Some` for v2 files, `None` for v1 (params-only).
+    pub state: Option<TrainState>,
+}
+
+fn write_params(f: &mut impl Write, params: &[Matrix]) -> Result<()> {
     f.write_all(&(params.len() as u32).to_le_bytes())?;
     for p in params {
         f.write_all(&(p.rows as u32).to_le_bytes())?;
@@ -29,34 +59,145 @@ pub fn save(path: impl AsRef<Path>, params: &[Matrix]) -> Result<()> {
     Ok(())
 }
 
+/// Save a params-only (v1) checkpoint.
+pub fn save(path: impl AsRef<Path>, params: &[Matrix]) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC_V1)?;
+    write_params(&mut f, params)
+}
+
+/// Save a full-state (v2) checkpoint: params + step + optimizer state.
+pub fn save_v2(path: impl AsRef<Path>, params: &[Matrix], state: &TrainState) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC_V2)?;
+    write_params(&mut f, params)?;
+    f.write_all(&state.step.to_le_bytes())?;
+    f.write_all(&(state.optimizer.len() as u32).to_le_bytes())?;
+    f.write_all(state.optimizer.as_bytes())?;
+    f.write_all(&(state.opt_state.len() as u64).to_le_bytes())?;
+    f.write_all(&state.opt_state)?;
+    Ok(())
+}
+
+/// Load the parameter tensors of a checkpoint (either version).
 pub fn load(path: impl AsRef<Path>) -> Result<Vec<Matrix>> {
-    let mut f = std::io::BufReader::new(
-        std::fs::File::open(path.as_ref())
-            .with_context(|| format!("opening checkpoint {:?}", path.as_ref()))?,
-    );
+    Ok(load_full(path)?.params)
+}
+
+/// Load a checkpoint, including the v2 training state when present.
+pub fn load_full(path: impl AsRef<Path>) -> Result<Checkpoint> {
+    let path = path.as_ref();
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("opening checkpoint {path:?}"))?;
+    // Every count/shape read below is checked against `remaining` before
+    // sizing an allocation from it — the untrusted-header hardening.
+    let mut remaining = file.metadata()?.len();
+    let mut f = std::io::BufReader::new(file);
+
     let mut magic = [0u8; 8];
     f.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        bail!("bad checkpoint magic");
-    }
+    ensure!(remaining >= 8, "checkpoint shorter than its magic");
+    remaining -= 8;
+    let v2 = match &magic {
+        m if m == MAGIC_V1 => false,
+        m if m == MAGIC_V2 => true,
+        _ => bail!("bad checkpoint magic"),
+    };
+
     let mut u32buf = [0u8; 4];
+    let mut u64buf = [0u8; 8];
     f.read_exact(&mut u32buf)?;
-    let count = u32::from_le_bytes(u32buf) as usize;
-    let mut out = Vec::with_capacity(count);
-    for _ in 0..count {
+    remaining -= 4;
+    let count = u32::from_le_bytes(u32buf) as u64;
+    // each tensor needs at least its 8-byte shape header
+    ensure!(
+        count * 8 <= remaining,
+        "corrupt checkpoint: header claims {count} tensors but only \
+         {remaining} bytes remain"
+    );
+    let mut params = Vec::with_capacity(count as usize);
+    for i in 0..count {
         f.read_exact(&mut u32buf)?;
-        let rows = u32::from_le_bytes(u32buf) as usize;
+        let rows = u32::from_le_bytes(u32buf) as u64;
         f.read_exact(&mut u32buf)?;
-        let cols = u32::from_le_bytes(u32buf) as usize;
-        let mut data = vec![0f32; rows * cols];
-        let mut fbuf = [0u8; 4];
-        for v in &mut data {
-            f.read_exact(&mut fbuf)?;
-            *v = f32::from_le_bytes(fbuf);
-        }
-        out.push(Matrix::from_vec(rows, cols, data));
+        let cols = u32::from_le_bytes(u32buf) as u64;
+        remaining -= 8;
+        let bytes = rows
+            .checked_mul(cols)
+            .and_then(|e| e.checked_mul(4))
+            .filter(|&b| b <= remaining)
+            .with_context(|| {
+                format!(
+                    "corrupt checkpoint: tensor {i} claims {rows}x{cols} \
+                     but only {remaining} bytes remain"
+                )
+            })?;
+        let mut raw = vec![0u8; bytes as usize];
+        f.read_exact(&mut raw)?;
+        remaining -= bytes;
+        let data: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        params.push(Matrix::from_vec(rows as usize, cols as usize, data));
     }
-    Ok(out)
+    if !v2 {
+        // strict framing: bytes after the declared tensors mean a corrupt
+        // or doubly-written file, not a usable checkpoint
+        ensure!(
+            remaining == 0,
+            "corrupt checkpoint: {remaining} trailing bytes after the \
+             declared {count} tensors"
+        );
+        return Ok(Checkpoint { params, state: None });
+    }
+
+    ensure!(remaining >= 8 + 4, "corrupt checkpoint: v2 trailer truncated");
+    f.read_exact(&mut u64buf)?;
+    remaining -= 8;
+    let step = u64::from_le_bytes(u64buf);
+    f.read_exact(&mut u32buf)?;
+    remaining -= 4;
+    let name_len = u32::from_le_bytes(u32buf) as u64;
+    ensure!(
+        name_len <= remaining,
+        "corrupt checkpoint: optimizer name claims {name_len} bytes, \
+         {remaining} remain"
+    );
+    let mut name = vec![0u8; name_len as usize];
+    f.read_exact(&mut name)?;
+    remaining -= name_len;
+    let optimizer =
+        String::from_utf8(name).context("checkpoint optimizer name not UTF-8")?;
+    ensure!(remaining >= 8, "corrupt checkpoint: state length truncated");
+    f.read_exact(&mut u64buf)?;
+    remaining -= 8;
+    let state_len = u64::from_le_bytes(u64buf);
+    ensure!(
+        state_len <= remaining,
+        "corrupt checkpoint: optimizer state claims {state_len} bytes, \
+         {remaining} remain"
+    );
+    let mut opt_state = vec![0u8; state_len as usize];
+    f.read_exact(&mut opt_state)?;
+    remaining -= state_len;
+    ensure!(
+        remaining == 0,
+        "corrupt checkpoint: {remaining} trailing bytes after the optimizer \
+         state"
+    );
+    Ok(Checkpoint {
+        params,
+        state: Some(TrainState { step, optimizer, opt_state }),
+    })
 }
 
 #[cfg(test)]
@@ -64,23 +205,110 @@ mod tests {
     use super::*;
     use crate::util::Pcg64;
 
-    #[test]
-    fn roundtrip() {
+    fn params() -> Vec<Matrix> {
         let mut rng = Pcg64::seed(0);
-        let params = vec![
+        vec![
             Matrix::randn(3, 5, 1.0, &mut rng),
             Matrix::randn(1, 7, 1.0, &mut rng),
-        ];
+        ]
+    }
+
+    #[test]
+    fn roundtrip() {
+        let params = params();
         let path = std::env::temp_dir().join("fft_subspace_ckpt_test.bin");
         save(&path, &params).unwrap();
         let back = load(&path).unwrap();
         assert_eq!(params, back);
+        // v1 files carry no state
+        assert!(load_full(&path).unwrap().state.is_none());
+    }
+
+    #[test]
+    fn v2_roundtrip_preserves_state() {
+        let params = params();
+        let state = TrainState {
+            step: 123,
+            optimizer: "dct-adamw".into(),
+            opt_state: vec![7, 0, 255, 1, 2, 3],
+        };
+        let path = std::env::temp_dir().join("fft_subspace_ckpt_v2_test.bin");
+        save_v2(&path, &params, &state).unwrap();
+        let ck = load_full(&path).unwrap();
+        assert_eq!(ck.params, params);
+        assert_eq!(ck.state.unwrap(), state);
+        // and the params-only reader accepts v2 files too
+        assert_eq!(load(&path).unwrap(), params);
     }
 
     #[test]
     fn rejects_garbage() {
         let path = std::env::temp_dir().join("fft_subspace_ckpt_bad.bin");
         std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(load(&path).is_err());
+    }
+
+    #[test]
+    fn rejects_oversized_count_without_allocating() {
+        // valid magic, then a tensor count far beyond the file length: the
+        // loader must bail on the header check, not Vec::with_capacity(4B)
+        let path = std::env::temp_dir().join("fft_subspace_ckpt_count.bin");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"FFTSUBv1");
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("corrupt"), "{err}");
+    }
+
+    #[test]
+    fn rejects_oversized_tensor_shape() {
+        // one tensor claiming u32::MAX × u32::MAX (rows*cols*4 overflows
+        // u64's headroom for the file) in a tiny file
+        let path = std::env::temp_dir().join("fft_subspace_ckpt_shape.bin");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"FFTSUBv1");
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+        bytes.extend_from_slice(&[0u8; 16]);
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("corrupt"), "{err}");
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        // two checkpoints concatenated (or any appended bytes) must not
+        // silently load as the first one
+        let params = params();
+        let path = std::env::temp_dir().join("fft_subspace_ckpt_trail.bin");
+        save(&path, &params).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.extend_from_slice(b"junk");
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("trailing"), "{err}");
+    }
+
+    #[test]
+    fn rejects_truncated_v2_trailer() {
+        let params = params();
+        let state = TrainState {
+            step: 9,
+            optimizer: "trion".into(),
+            opt_state: vec![1; 64],
+        };
+        let path = std::env::temp_dir().join("fft_subspace_ckpt_trunc.bin");
+        save_v2(&path, &params, &state).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        // chop into the state payload: the declared length now overruns
+        std::fs::write(&path, &full[..full.len() - 32]).unwrap();
+        let err = load_full(&path).unwrap_err().to_string();
+        assert!(err.contains("corrupt"), "{err}");
+        // params are intact, so the params-only path still... also errors:
+        // the file declares state it doesn't carry. That is deliberate —
+        // a truncated file should never be silently usable.
         assert!(load(&path).is_err());
     }
 }

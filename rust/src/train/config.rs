@@ -10,6 +10,7 @@ use crate::optim::{
     OptimizerSpec, ResidualKind, RotationKind,
 };
 use crate::projection::{ProjectionKind, RankNorm};
+use crate::tensor::StateDtype;
 use crate::util::json::{num, obj, s, Json};
 
 /// Config-level residual choice: resolved against `ef-mode` at build time
@@ -68,6 +69,11 @@ pub struct TrainConfig {
     /// configured (`projection=` and `source=` alike) — so the key composes
     /// with them in any order and always wins over the `dct:l1|l2` grammar.
     pub rank_norm_override: Option<RankNorm>,
+    /// `resume=PATH`: load a v2 checkpoint (params + step + optimizer
+    /// state) and continue the run bit-identically from its step counter.
+    pub resume: Option<String>,
+    /// `save-state=PATH`: write a v2 checkpoint at the end of the run.
+    pub save_state_to: Option<String>,
 }
 
 impl Default for TrainConfig {
@@ -94,6 +100,8 @@ impl Default for TrainConfig {
             residual_override: None,
             rotation_override: None,
             rank_norm_override: None,
+            resume: None,
+            save_state_to: None,
         }
     }
 }
@@ -266,6 +274,12 @@ impl TrainConfig {
                 }),
             ));
         }
+        if let Some(p) = &self.resume {
+            extra.push(("resume", s(p)));
+        }
+        if let Some(p) = &self.save_state_to {
+            extra.push(("save_state", s(p)));
+        }
         let mut fields = vec![
             ("preset", s(&self.preset)),
             ("optimizer", s(self.optimizer.name())),
@@ -289,6 +303,7 @@ impl TrainConfig {
                     EfMode::Q8 => "q8",
                 }),
             ),
+            ("state_dtype", s(self.opt.state_dtype.name())),
             ("use_aot_optimizer", Json::Bool(self.use_aot_optimizer)),
             // 0 = auto (global pool)
             ("threads", num(self.opt.threads.unwrap_or(0) as f64)),
@@ -361,6 +376,16 @@ impl TrainConfig {
                     _ => anyhow::bail!("unknown ef mode {value}"),
                 }
             }
+            // storage precision of persistent optimizer state (the fifth
+            // engine axis — moments/momentum/dense-fallback; ef-mode keeps
+            // governing the EF buffer's own resolution)
+            "state-dtype" | "state_dtype" => {
+                self.opt.state_dtype = StateDtype::parse(value).ok_or_else(|| {
+                    anyhow::anyhow!("unknown state dtype {value:?} (f32|bf16|q8)")
+                })?
+            }
+            "resume" => self.resume = Some(value.into()),
+            "save-state" | "save_state" => self.save_state_to = Some(value.into()),
             // engine policy overrides — any grid point from config alone
             "source" => self.source_override = Some(parse_projection(value)?),
             "residual" => {
@@ -517,6 +542,56 @@ mod tests {
             .apply("projection", dump.req("projection").unwrap().as_str().unwrap())
             .unwrap();
         assert!(replay.build_optimizer(&metas).is_ok());
+    }
+
+    #[test]
+    fn state_dtype_key_round_trips_and_builds() {
+        use crate::optim::ParamKind;
+        let mut c = TrainConfig::default();
+        // default dumps as f32 and takes the preset (bit-exact) path
+        let back = Json::parse(&c.to_json().to_string()).unwrap();
+        assert_eq!(back.req("state_dtype").unwrap().as_str().unwrap(), "f32");
+        for (v, want) in [
+            ("f32", StateDtype::F32),
+            ("bf16", StateDtype::Bf16),
+            ("q8", StateDtype::Q8),
+        ] {
+            c.apply("state-dtype", v).unwrap();
+            assert_eq!(c.opt.state_dtype, want);
+            let back = Json::parse(&c.to_json().to_string()).unwrap();
+            assert_eq!(back.req("state_dtype").unwrap().as_str().unwrap(), v);
+        }
+        assert!(c.apply("state-dtype", "fp8").is_err());
+        // the dtype reaches the built optimizer's name (trion default)
+        let metas = vec![LayerMeta::new("w", 10, 8, ParamKind::Linear)];
+        c.apply("state-dtype", "bf16").unwrap();
+        let opt = c.build_optimizer(&metas).unwrap();
+        assert_eq!(opt.name(), "trion+m:bf16");
+        // ... and composes with the engine-override grid (off-grid combos
+        // carry the dtype inside the composed name)
+        c.apply("optimizer", "galore").unwrap();
+        c.apply("source", "dct").unwrap();
+        c.apply("residual", "ef").unwrap();
+        c.apply("ef-mode", "q8").unwrap();
+        c.apply("update-interval", "50").unwrap();
+        let opt = c.build_optimizer(&metas).unwrap();
+        assert_eq!(opt.name(), "engine(dct+adamw+ef-q8,T50,m:bf16)");
+    }
+
+    #[test]
+    fn resume_and_save_state_keys_parse() {
+        let mut c = TrainConfig::default();
+        c.apply("resume", "runs/a/ckpt.bin").unwrap();
+        c.apply("save-state", "runs/a/ckpt2.bin").unwrap();
+        assert_eq!(c.resume.as_deref(), Some("runs/a/ckpt.bin"));
+        assert_eq!(c.save_state_to.as_deref(), Some("runs/a/ckpt2.bin"));
+        let back = Json::parse(&c.to_json().to_string()).unwrap();
+        assert_eq!(back.req("resume").unwrap().as_str().unwrap(), "runs/a/ckpt.bin");
+        assert_eq!(back.req("save_state").unwrap().as_str().unwrap(), "runs/a/ckpt2.bin");
+        // absent by default
+        let d = Json::parse(&TrainConfig::default().to_json().to_string()).unwrap();
+        assert!(d.get("resume").is_none());
+        assert!(d.get("save_state").is_none());
     }
 
     #[test]

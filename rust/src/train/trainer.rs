@@ -13,7 +13,7 @@ use crate::runtime::{Executable, Manifest, ModelSpec, Runtime};
 use crate::runtime::client::Value;
 use crate::tensor::Matrix;
 use crate::train::aot_optim::maybe_wrap_aot;
-use crate::train::{LrSchedule, TrainConfig};
+use crate::train::{checkpoint, LrSchedule, TrainConfig};
 use crate::util::csv::JsonlWriter;
 use crate::util::json::{num, obj, s};
 use crate::util::timer::PhaseTimes;
@@ -124,6 +124,48 @@ impl Trainer {
             .collect();
         let val_loader = BatchLoader::new(&self.corpus.val, self.spec.seq_len, cfg.seed);
 
+        // --- checkpoint resume (v2): params + optimizer state + step ----
+        // The data loaders fast-forward deterministically, so the resumed
+        // run consumes the exact batches the uninterrupted run would have —
+        // together with the restored optimizer state this makes resumption
+        // bit-identical (tests/resume_determinism.rs pins the optimizer
+        // layer; the loader replay is plain RNG determinism).
+        let mut start_step = 0usize;
+        if let Some(path) = &cfg.resume {
+            let ck = checkpoint::load_full(path)
+                .with_context(|| format!("loading resume checkpoint {path}"))?;
+            anyhow::ensure!(
+                ck.params.len() == self.params.len(),
+                "resume checkpoint has {} params, model has {}",
+                ck.params.len(),
+                self.params.len()
+            );
+            let state = ck.state.as_ref().filter(|st| !st.opt_state.is_empty());
+            let Some(state) = state else {
+                anyhow::bail!(
+                    "resume={path} is a params-only checkpoint — use \
+                     from-checkpoint for warm starts, resume needs the v2 \
+                     optimizer state (save-state=)"
+                );
+            };
+            self.params = ck.params;
+            opt.load_state(&state.opt_state)
+                .with_context(|| format!("restoring optimizer state from {path}"))?;
+            start_step = state.step as usize;
+            anyhow::ensure!(
+                start_step < cfg.steps,
+                "checkpoint is already at step {start_step} of steps={} — \
+                 nothing to train; raise steps= to continue the run",
+                cfg.steps
+            );
+            // advance each worker's loader RNG to where the uninterrupted
+            // run would be, without materializing the skipped batches
+            for wl in workers.iter_mut() {
+                wl.skip_batches(start_step, cfg.batch_per_worker);
+            }
+            println!("resumed {} at step {start_step}/{}", opt.name(), cfg.steps);
+        }
+
         let timer = Timer::start();
         let mut phases = PhaseTimes::new();
         let mut tail_losses: Vec<f64> = Vec::new();
@@ -131,7 +173,7 @@ impl Trainer {
         let mut full_bytes = 0u64;
         let mut final_loss = f64::NAN;
 
-        for step in 0..cfg.steps {
+        for step in start_step..cfg.steps {
             // --- per-worker batch staging on real threads ----------------
             let bpw = cfg.batch_per_worker;
             let batches: Vec<(Vec<i32>, Vec<usize>)> = phases.time("batch", || {
@@ -251,6 +293,25 @@ impl Trainer {
             ("wall_secs", num(wall)),
         ]))?;
         metrics.flush()?;
+
+        // --- full-state checkpoint (v2) ---------------------------------
+        if let Some(path) = &cfg.save_state_to {
+            let Some(opt_state) = opt.save_state() else {
+                anyhow::bail!(
+                    "save-state={path}: optimizer {} does not support state \
+                     checkpointing (use save-checkpoint for params only)",
+                    opt.name()
+                );
+            };
+            let state = checkpoint::TrainState {
+                step: cfg.steps as u64,
+                optimizer: opt.name().to_string(),
+                opt_state,
+            };
+            checkpoint::save_v2(path, &self.params, &state)
+                .with_context(|| format!("writing save-state checkpoint {path}"))?;
+            println!("state checkpoint: {path} (resume={path} to continue)");
+        }
 
         Ok(RunSummary {
             run_name,

@@ -1,0 +1,311 @@
+//! Minimal little-endian binary codec for checkpoint serialization.
+//!
+//! The optimizer-state layer (checkpoint v2) serializes heterogeneous
+//! per-layer state — typed stores, index lists, RNG streams, dense bases —
+//! through these helpers so every writer has a bounds-checked reader twin.
+//! The format is positional: each policy reads exactly what it wrote, and
+//! the enclosing blob carries a spec fingerprint so a reader can never be
+//! paired with a writer of a different composition.
+//!
+//! Writers are free functions appending to a `Vec<u8>`; [`ByteReader`] is a
+//! cursor over a borrowed slice whose every `take_*` is bounds-checked and
+//! fails with context instead of panicking — corrupt or truncated blobs
+//! surface as `Err`, never as OOB reads or huge allocations (readers of
+//! length-prefixed payloads validate the prefix against the bytes actually
+//! remaining before allocating).
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::tensor::Matrix;
+
+// ---- writers -----------------------------------------------------------
+
+pub fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_u128(out: &mut Vec<u8>, v: u128) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// u32 length prefix + UTF-8 bytes.
+pub fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+/// u32 rows + u32 cols + f32 payload (bit-exact).
+pub fn put_matrix(out: &mut Vec<u8>, m: &Matrix) {
+    put_u32(out, m.rows as u32);
+    put_u32(out, m.cols as u32);
+    out.reserve(m.data.len() * 4);
+    for &v in &m.data {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// u32 count + u32 per index (column indices are always < 2³²).
+pub fn put_indices(out: &mut Vec<u8>, idx: &[usize]) {
+    put_u32(out, idx.len() as u32);
+    for &i in idx {
+        put_u32(out, i as u32);
+    }
+}
+
+/// u32 count + raw f32 payload (bit-exact).
+pub fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    put_u32(out, xs.len() as u32);
+    out.reserve(xs.len() * 4);
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// u32 count + raw u16 payload.
+pub fn put_u16s(out: &mut Vec<u8>, xs: &[u16]) {
+    put_u32(out, xs.len() as u32);
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// u32 count + raw i8 payload.
+pub fn put_i8s(out: &mut Vec<u8>, xs: &[i8]) {
+    put_u32(out, xs.len() as u32);
+    out.extend(xs.iter().map(|&x| x as u8));
+}
+
+// ---- reader ------------------------------------------------------------
+
+/// Bounds-checked cursor over a serialized state blob.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        ByteReader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            n <= self.remaining(),
+            "state blob truncated: need {n} bytes at offset {}, have {}",
+            self.pos,
+            self.remaining()
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn take_u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn take_u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn take_u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn take_u128(&mut self) -> Result<u128> {
+        Ok(u128::from_le_bytes(self.take(16)?.try_into().unwrap()))
+    }
+
+    pub fn take_f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn take_str(&mut self) -> Result<String> {
+        let len = self.take_u32()? as usize;
+        let bytes = self.take(len).context("reading string payload")?;
+        String::from_utf8(bytes.to_vec()).context("state blob string not UTF-8")
+    }
+
+    /// Twin of [`put_matrix`], allocating (the length prefix is validated
+    /// against the remaining bytes before the buffer is sized).
+    pub fn take_matrix(&mut self) -> Result<Matrix> {
+        let rows = self.take_u32()? as usize;
+        let cols = self.take_u32()? as usize;
+        let elems = rows
+            .checked_mul(cols)
+            .filter(|&e| e.checked_mul(4).is_some_and(|b| b <= self.remaining()))
+            .with_context(|| {
+                format!("matrix header claims {rows}x{cols} but only {} bytes remain", self.remaining())
+            })?;
+        let mut data = Vec::with_capacity(elems);
+        for _ in 0..elems {
+            data.push(self.take_f32()?);
+        }
+        Ok(Matrix::from_vec(rows, cols, data))
+    }
+
+    /// Twin of [`put_matrix`] writing into an existing matrix of the same
+    /// shape (the shape is part of the optimizer spec, so a mismatch means
+    /// the blob belongs to a different model).
+    pub fn take_matrix_into(&mut self, m: &mut Matrix) -> Result<()> {
+        let rows = self.take_u32()? as usize;
+        let cols = self.take_u32()? as usize;
+        ensure!(
+            (rows, cols) == m.shape(),
+            "checkpointed matrix is {rows}x{cols}, expected {}x{}",
+            m.rows,
+            m.cols
+        );
+        for v in &mut m.data {
+            *v = self.take_f32()?;
+        }
+        Ok(())
+    }
+
+    pub fn take_indices(&mut self) -> Result<Vec<usize>> {
+        let n = self.take_u32()? as usize;
+        ensure!(n * 4 <= self.remaining(), "index list truncated");
+        (0..n).map(|_| Ok(self.take_u32()? as usize)).collect()
+    }
+
+    /// Twin of [`put_f32s`] writing into an existing buffer of equal length
+    /// (one bounds check for the whole payload, not one per element).
+    pub fn take_f32s_into(&mut self, xs: &mut [f32]) -> Result<()> {
+        let n = self.take_u32()? as usize;
+        ensure!(n == xs.len(), "f32 payload is {n} elements, expected {}", xs.len());
+        let bytes = self.take(n * 4)?;
+        for (x, c) in xs.iter_mut().zip(bytes.chunks_exact(4)) {
+            *x = f32::from_le_bytes(c.try_into().unwrap());
+        }
+        Ok(())
+    }
+
+    /// Twin of [`put_u16s`] writing into an existing buffer of equal length.
+    pub fn take_u16s_into(&mut self, xs: &mut [u16]) -> Result<()> {
+        let n = self.take_u32()? as usize;
+        ensure!(n == xs.len(), "u16 payload is {n} elements, expected {}", xs.len());
+        let bytes = self.take(n * 2)?;
+        for (x, c) in xs.iter_mut().zip(bytes.chunks_exact(2)) {
+            *x = u16::from_le_bytes(c.try_into().unwrap());
+        }
+        Ok(())
+    }
+
+    /// Twin of [`put_i8s`] writing into an existing buffer of equal length.
+    pub fn take_i8s_into(&mut self, xs: &mut [i8]) -> Result<()> {
+        let n = self.take_u32()? as usize;
+        ensure!(n == xs.len(), "i8 payload is {n} elements, expected {}", xs.len());
+        let bytes = self.take(n)?;
+        for (x, &b) in xs.iter_mut().zip(bytes) {
+            *x = b as i8;
+        }
+        Ok(())
+    }
+
+    /// Assert the blob was fully consumed — trailing bytes mean the writer
+    /// and reader disagree about the format.
+    pub fn finish(&self) -> Result<()> {
+        if self.remaining() != 0 {
+            bail!("state blob has {} unread trailing bytes", self.remaining());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn roundtrip_all_types() {
+        let mut rng = Pcg64::seed(0);
+        let m = Matrix::randn(3, 5, 1.0, &mut rng);
+        let mut out = Vec::new();
+        put_u8(&mut out, 7);
+        put_u32(&mut out, 0xdead_beef);
+        put_u64(&mut out, u64::MAX - 1);
+        put_u128(&mut out, u128::MAX / 3);
+        put_f32(&mut out, -0.0);
+        put_str(&mut out, "fingerprint ü");
+        put_matrix(&mut out, &m);
+        put_indices(&mut out, &[0, 5, 17]);
+        put_f32s(&mut out, &[-0.0, 3.5, f32::MIN_POSITIVE]);
+        put_u16s(&mut out, &[1, 2, 65535]);
+        put_i8s(&mut out, &[-128, 0, 127]);
+
+        let mut r = ByteReader::new(&out);
+        assert_eq!(r.take_u8().unwrap(), 7);
+        assert_eq!(r.take_u32().unwrap(), 0xdead_beef);
+        assert_eq!(r.take_u64().unwrap(), u64::MAX - 1);
+        assert_eq!(r.take_u128().unwrap(), u128::MAX / 3);
+        assert_eq!(r.take_f32().unwrap().to_bits(), (-0.0f32).to_bits());
+        assert_eq!(r.take_str().unwrap(), "fingerprint ü");
+        assert_eq!(r.take_matrix().unwrap(), m);
+        assert_eq!(r.take_indices().unwrap(), vec![0, 5, 17]);
+        let mut f32s = [0f32; 3];
+        r.take_f32s_into(&mut f32s).unwrap();
+        assert_eq!(f32s[0].to_bits(), (-0.0f32).to_bits());
+        assert_eq!(f32s[1], 3.5);
+        assert_eq!(f32s[2], f32::MIN_POSITIVE);
+        let mut u16s = [0u16; 3];
+        r.take_u16s_into(&mut u16s).unwrap();
+        assert_eq!(u16s, [1, 2, 65535]);
+        let mut i8s = [0i8; 3];
+        r.take_i8s_into(&mut i8s).unwrap();
+        assert_eq!(i8s, [-128, 0, 127]);
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn truncation_is_an_error_not_a_panic() {
+        let mut out = Vec::new();
+        put_u64(&mut out, 9);
+        let mut r = ByteReader::new(&out[..5]);
+        assert!(r.take_u64().is_err());
+    }
+
+    #[test]
+    fn oversized_matrix_header_rejected_before_allocating() {
+        let mut out = Vec::new();
+        put_u32(&mut out, u32::MAX); // rows
+        put_u32(&mut out, u32::MAX); // cols — rows*cols overflows usize too
+        put_f32(&mut out, 1.0);
+        let mut r = ByteReader::new(&out);
+        assert!(r.take_matrix().is_err());
+    }
+
+    #[test]
+    fn matrix_into_checks_shape() {
+        let mut out = Vec::new();
+        put_matrix(&mut out, &Matrix::zeros(2, 2));
+        let mut dst = Matrix::zeros(3, 3);
+        assert!(ByteReader::new(&out).take_matrix_into(&mut dst).is_err());
+    }
+
+    #[test]
+    fn trailing_bytes_detected() {
+        let mut out = Vec::new();
+        put_u32(&mut out, 1);
+        put_u8(&mut out, 0);
+        let mut r = ByteReader::new(&out);
+        r.take_u32().unwrap();
+        assert!(r.finish().is_err());
+    }
+}

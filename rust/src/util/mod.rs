@@ -4,6 +4,7 @@
 
 pub mod rng;
 pub mod json;
+pub mod codec;
 pub mod csv;
 pub mod timer;
 pub mod human;

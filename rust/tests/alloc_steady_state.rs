@@ -7,8 +7,10 @@
 //! allocations — for **all six** low-rank presets (DctAdamW, Trion, GaLore,
 //! Fira, Frugal, LdAdamW), covering the project-only and subspace-refresh
 //! paths, tall/wide/Bluestein-width layers, Q8/f32 error feedback, the
-//! workspace-backed Newton–Schulz orthogonalization and the workspace-backed
-//! block-power refresh (`qr_q_into`). Each preset's proof runs twice:
+//! workspace-backed Newton–Schulz orthogonalization, the workspace-backed
+//! block-power refresh (`qr_q_into`) and — since the typed-storage PR —
+//! GaLore's Jacobi SVD refresh (`svd_right_vectors_into`), which closed the
+//! last refresh-path carve-out. Each preset's proof runs twice:
 //! sequentially (1 thread lane) and through the parallel
 //! `step_layers_parallel` path (3 lanes), because the counter is global
 //! across threads — worker-side allocations would be caught too. The
@@ -18,11 +20,11 @@
 //! dispatch layer is exercised implicitly (every kernel routes through it)
 //! and is allocation-free by construction: one atomic load, no boxing.
 //!
-//! One carve-out: GaLore's SVD *refresh* still allocates (Jacobi SVD
-//! internals — the remaining ROADMAP open item), so its counted window is
-//! pinned between refreshes (`update_interval` beyond the window); the
-//! steady-state step GaLore actually runs at its T_u = 200 cadence is the
-//! project-only one proven here.
+//! The sweep also runs under two state dtypes (`f32` and `bf16` — plus
+//! whatever `FFT_SUBSPACE_STATE_DTYPE` adds in `make test-matrix`): non-f32
+//! stores stage their de/quantization through `Workspace` scratch, so the
+//! typed-storage layer must not cost a single steady-state allocation
+//! either.
 //!
 //! This file is its own test binary (integration test), so the global
 //! allocator and the single `#[test]` share the process without
@@ -34,7 +36,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use fft_subspace::optim::{
     build_optimizer, LayerMeta, Optimizer, OptimizerConfig, OptimizerKind, ParamKind,
 };
-use fft_subspace::tensor::Matrix;
+use fft_subspace::tensor::{Matrix, StateDtype};
 use fft_subspace::util::Pcg64;
 
 struct CountingAlloc;
@@ -89,16 +91,27 @@ fn steady_state_steps_are_allocation_free() {
         .map(|m| Matrix::randn(m.rows, m.cols, 0.1, &mut rng))
         .collect();
 
-    // One proof per (preset, execution mode): sequential (1 lane) and the
-    // parallel step_layers_parallel path (3 lanes, 4 layers → 2 chunks in
-    // flight). DctAdamW pins the vectorized project/refresh/EF path, Trion
-    // the workspace-backed Newton–Schulz, LdAdamW the workspace-backed
-    // block-power refresh (refresh every step), Fira/Frugal the residual
-    // policies over the DCT source, GaLore the dense-basis project-only
-    // step (its SVD refresh is excluded — see the module docs). Pool
-    // threads spawn at optimizer construction — before counting. (One
-    // #[test] for everything: the counter is process-global, so
-    // concurrently-running tests would pollute each other's windows.)
+    // f32 (the bit-exact default) + bf16 (typed-storage staging); the
+    // test-matrix env knob can swap the non-f32 point to q8.
+    let mut dtypes = vec![StateDtype::F32, StateDtype::Bf16];
+    if let Some(d) = StateDtype::from_env() {
+        if !dtypes.contains(&d) {
+            dtypes.push(d);
+        }
+    }
+
+    // One proof per (preset, dtype, execution mode): sequential (1 lane)
+    // and the parallel step_layers_parallel path (3 lanes, 4 layers → 2
+    // chunks in flight). DctAdamW pins the vectorized project/refresh/EF
+    // path, Trion the workspace-backed Newton–Schulz, LdAdamW the
+    // workspace-backed block-power refresh (refresh every step), Fira/
+    // Frugal the residual policies over the DCT source, GaLore the
+    // workspace-backed Jacobi SVD refresh (update_interval=4 puts two
+    // refreshes inside the counted window — the carve-out the ROADMAP used
+    // to list is closed). Pool threads spawn at optimizer construction —
+    // before counting. (One #[test] for everything: the counter is
+    // process-global, so concurrently-running tests would pollute each
+    // other's windows.)
     for kind in [
         OptimizerKind::DctAdamW,
         OptimizerKind::Trion,
@@ -107,50 +120,53 @@ fn steady_state_steps_are_allocation_free() {
         OptimizerKind::Frugal,
         OptimizerKind::LdAdamW,
     ] {
-        for threads in [1usize, 3] {
-            let mut cfg = OptimizerConfig {
-                rank: 8,
-                threads: Some(threads),
-                ..Default::default()
-            };
-            // exercise refresh AND project-only steps inside the counted
-            // window — except GaLore, whose allocating SVD refresh is
-            // pushed past the window (t=1 only)
-            cfg.update_interval =
-                if kind == OptimizerKind::GaLore { 1_000 } else { 4 };
-            let mut opt = build_optimizer(&kind, &metas, &cfg);
-            let mut params: Vec<Matrix> = metas
-                .iter()
-                .map(|m| Matrix::zeros(m.rows, m.cols))
-                .collect();
+        for &state_dtype in &dtypes {
+            for threads in [1usize, 3] {
+                let cfg = OptimizerConfig {
+                    rank: 8,
+                    threads: Some(threads),
+                    state_dtype,
+                    // exercise refresh AND project-only steps inside the
+                    // counted window for every preset
+                    update_interval: 4,
+                    ..Default::default()
+                };
+                let mut opt = build_optimizer(&kind, &metas, &cfg);
+                let mut params: Vec<Matrix> = metas
+                    .iter()
+                    .map(|m| Matrix::zeros(m.rows, m.cols))
+                    .collect();
 
-            // Warmup: several full refresh cycles fill the per-shard
-            // workspace pools, the shared plan caches and the per-plan
-            // scratch pools up to their parallel high-water mark.
-            for _ in 0..12 {
-                opt.step(&mut params, &grads, 1e-3);
+                // Warmup: several full refresh cycles fill the per-shard
+                // workspace pools, the shared plan caches and the per-plan
+                // scratch pools up to their parallel high-water mark.
+                for _ in 0..12 {
+                    opt.step(&mut params, &grads, 1e-3);
+                }
+
+                ALLOC_CALLS.store(0, Ordering::SeqCst);
+                ENABLED.store(true, Ordering::SeqCst);
+                for _ in 0..8 {
+                    opt.step(&mut params, &grads, 1e-3);
+                }
+                ENABLED.store(false, Ordering::SeqCst);
+
+                let allocs = ALLOC_CALLS.load(Ordering::SeqCst);
+                assert_eq!(
+                    allocs,
+                    0,
+                    "steady-state {} steps (threads={threads}, \
+                     state-dtype={}) performed {allocs} heap allocations \
+                     (expected zero — a workspace buffer is being dropped \
+                     or resized, or the pool dispatch allocates)",
+                    kind.name(),
+                    state_dtype.name()
+                );
+
+                // sanity: the optimizer actually did work in the counted
+                // window
+                assert!(params[0].fro_norm() > 0.0);
             }
-
-            ALLOC_CALLS.store(0, Ordering::SeqCst);
-            ENABLED.store(true, Ordering::SeqCst);
-            for _ in 0..8 {
-                opt.step(&mut params, &grads, 1e-3);
-            }
-            ENABLED.store(false, Ordering::SeqCst);
-
-            let allocs = ALLOC_CALLS.load(Ordering::SeqCst);
-            assert_eq!(
-                allocs,
-                0,
-                "steady-state {} steps (threads={threads}) performed \
-                 {allocs} heap allocations (expected zero — a workspace \
-                 buffer is being dropped or resized, or the pool dispatch \
-                 allocates)",
-                kind.name()
-            );
-
-            // sanity: the optimizer actually did work in the counted window
-            assert!(params[0].fro_norm() > 0.0);
         }
     }
 }

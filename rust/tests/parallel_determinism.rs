@@ -108,11 +108,16 @@ fn engine_grid_combo_bit_identical_1_vs_n_threads() {
     // step loop, not to any particular policy combination.
     let metas = layer_zoo();
     let grad_seq = zoo_grads(&metas, 23);
+    // determinism must hold for every state dtype (typed stores quantize
+    // per layer, never across layers); `make test-matrix` sweeps this knob
+    let dtype = fft_subspace::tensor::StateDtype::from_env()
+        .unwrap_or(fft_subspace::tensor::StateDtype::Bf16);
     let combo = |threads: usize| {
         OptimizerSpec::galore(8)
             .projection(ProjectionKind::Dct { norm: RankNorm::L2, use_makhoul: true })
             .residual(ResidualKind::ErrorFeedback(EfMode::Q8))
             .update_interval(2)
+            .state_dtype(dtype)
             .threads(Some(threads))
     };
     let mut params_by_lanes = Vec::new();

@@ -1,0 +1,317 @@
+//! The checkpoint-v2 resume contract: saving mid-run and restoring into a
+//! **freshly built** optimizer must reproduce the uninterrupted trajectory
+//! to the bit — for all six engine presets, the dense AdamW baseline, and
+//! every state dtype.
+//!
+//! The interruption point (k=5 of N=11, cadence T_u=3) deliberately sits
+//! between subspace refreshes, so the blob must carry everything a later
+//! step reads: the step counter, the typed moment/momentum stores, the
+//! held subspace (indices / dense bases / warm flags / RNG streams), the
+//! rotation snapshots and the error-feedback residuals. Comparisons are on
+//! raw `to_bits` patterns — a missing or re-quantized byte anywhere shows
+//! up as a divergence within a step or two.
+//!
+//! The file-level format (`FFTSUBv2` roundtrip, v1 backward compat,
+//! corrupt-file rejection) is covered in `train::checkpoint`'s unit tests;
+//! this suite additionally pins the end-to-end file path for one preset.
+
+use fft_subspace::optim::{
+    build_optimizer, LayerMeta, Optimizer, OptimizerConfig, OptimizerKind, ParamKind,
+};
+use fft_subspace::tensor::{Matrix, StateDtype};
+use fft_subspace::train::checkpoint::{self, TrainState};
+use fft_subspace::util::Pcg64;
+
+/// Mixed layer zoo: tall, wide (transpose orientation), a Bluestein width
+/// (24), square, plus dense-path params — the shapes the equivalence suite
+/// uses.
+fn layer_zoo() -> Vec<LayerMeta> {
+    vec![
+        LayerMeta::new("wq", 48, 32, ParamKind::Linear),
+        LayerMeta::new("w_gate", 32, 48, ParamKind::Linear),
+        LayerMeta::new("wk", 40, 24, ParamKind::Linear),
+        LayerMeta::new("wv", 32, 32, ParamKind::Linear),
+        LayerMeta::new("norm", 1, 32, ParamKind::Norm),
+        LayerMeta::new("embed", 64, 32, ParamKind::Embed),
+    ]
+}
+
+fn grad_seq(metas: &[LayerMeta], steps: usize, seed: u64) -> Vec<Vec<Matrix>> {
+    let mut rng = Pcg64::seed(seed);
+    (0..steps)
+        .map(|_| {
+            metas
+                .iter()
+                .map(|m| Matrix::randn(m.rows, m.cols, 0.1, &mut rng))
+                .collect()
+        })
+        .collect()
+}
+
+fn bits(params: &[Matrix]) -> Vec<Vec<u32>> {
+    params
+        .iter()
+        .map(|p| p.data.iter().map(|v| v.to_bits()).collect())
+        .collect()
+}
+
+fn decaying_lr(step: usize) -> f32 {
+    1e-2 / (1.0 + step as f32 * 0.1)
+}
+
+fn cfg_for(state_dtype: StateDtype) -> OptimizerConfig {
+    OptimizerConfig {
+        rank: 8,
+        threads: Some(1),
+        // refresh cadence 3: the save point (k=5) sits mid-cycle, and the
+        // resumed run crosses two more refreshes (t=6, t=9) — Trion and
+        // LDAdamW pin T_u=1 and refresh every step regardless
+        update_interval: 3,
+        state_dtype,
+        ..Default::default()
+    }
+}
+
+const SIX_PRESETS: [OptimizerKind; 6] = [
+    OptimizerKind::DctAdamW,
+    OptimizerKind::Trion,
+    OptimizerKind::GaLore,
+    OptimizerKind::Fira,
+    OptimizerKind::Frugal,
+    OptimizerKind::LdAdamW,
+];
+
+/// Core property: train N uninterrupted vs. train k → save_state → fresh
+/// optimizer → load_state → train N−k. Bit-equal params, and bit-equal
+/// state blobs at the end.
+fn assert_resume_bit_identical(kind: &OptimizerKind, state_dtype: StateDtype) {
+    let metas = layer_zoo();
+    let (n, k) = (11usize, 5usize);
+    let grads = grad_seq(&metas, n, 42);
+    let cfg = cfg_for(state_dtype);
+
+    // uninterrupted reference
+    let mut ref_opt = build_optimizer(kind, &metas, &cfg);
+    let mut ref_params: Vec<Matrix> =
+        metas.iter().map(|m| Matrix::zeros(m.rows, m.cols)).collect();
+    for (step, g) in grads.iter().enumerate() {
+        ref_opt.step(&mut ref_params, g, decaying_lr(step));
+    }
+
+    // interrupted at k, resumed into a FRESH optimizer
+    let mut opt_a = build_optimizer(kind, &metas, &cfg);
+    let mut params: Vec<Matrix> =
+        metas.iter().map(|m| Matrix::zeros(m.rows, m.cols)).collect();
+    for (step, g) in grads.iter().take(k).enumerate() {
+        opt_a.step(&mut params, g, decaying_lr(step));
+    }
+    let blob = opt_a
+        .save_state()
+        .expect("engine presets support state checkpointing");
+    drop(opt_a);
+    let mut opt_b = build_optimizer(kind, &metas, &cfg);
+    opt_b
+        .load_state(&blob)
+        .unwrap_or_else(|e| panic!("{} restore failed: {e:#}", kind.name()));
+    for (step, g) in grads.iter().enumerate().skip(k) {
+        opt_b.step(&mut params, g, decaying_lr(step));
+    }
+
+    assert_eq!(
+        bits(&ref_params),
+        bits(&params),
+        "{} (state-dtype={}): resumed trajectory diverged",
+        kind.name(),
+        state_dtype.name()
+    );
+    // the final optimizer states agree byte-for-byte too
+    assert_eq!(
+        ref_opt.save_state().unwrap(),
+        opt_b.save_state().unwrap(),
+        "{} (state-dtype={}): final state blobs differ",
+        kind.name(),
+        state_dtype.name()
+    );
+}
+
+#[test]
+fn six_presets_resume_bit_identically_f32() {
+    for kind in &SIX_PRESETS {
+        assert_resume_bit_identical(kind, StateDtype::F32);
+    }
+}
+
+#[test]
+fn six_presets_resume_bit_identically_bf16() {
+    for kind in &SIX_PRESETS {
+        assert_resume_bit_identical(kind, StateDtype::Bf16);
+    }
+}
+
+#[test]
+fn six_presets_resume_bit_identically_q8() {
+    for kind in &SIX_PRESETS {
+        assert_resume_bit_identical(kind, StateDtype::Q8);
+    }
+}
+
+#[test]
+fn env_selected_dtype_resumes_bit_identically() {
+    // `make test-matrix` drives FFT_SUBSPACE_STATE_DTYPE over {f32, bf16};
+    // redundant with the fixed sweeps above but keeps the knob honest.
+    let d = StateDtype::from_env().unwrap_or(StateDtype::F32);
+    assert_resume_bit_identical(&OptimizerKind::DctAdamW, d);
+}
+
+#[test]
+fn dense_adamw_resumes_bit_identically() {
+    let metas = layer_zoo();
+    let (n, k) = (9usize, 4usize);
+    let grads = grad_seq(&metas, n, 7);
+    for state_dtype in [StateDtype::F32, StateDtype::Bf16] {
+        let cfg = cfg_for(state_dtype);
+        let kind = OptimizerKind::AdamW;
+        let mut ref_opt = build_optimizer(&kind, &metas, &cfg);
+        let mut ref_params: Vec<Matrix> =
+            metas.iter().map(|m| Matrix::zeros(m.rows, m.cols)).collect();
+        for (step, g) in grads.iter().enumerate() {
+            ref_opt.step(&mut ref_params, g, decaying_lr(step));
+        }
+        let mut opt_a = build_optimizer(&kind, &metas, &cfg);
+        let mut params: Vec<Matrix> =
+            metas.iter().map(|m| Matrix::zeros(m.rows, m.cols)).collect();
+        for (step, g) in grads.iter().take(k).enumerate() {
+            opt_a.step(&mut params, g, decaying_lr(step));
+        }
+        let blob = opt_a.save_state().unwrap();
+        let mut opt_b = build_optimizer(&kind, &metas, &cfg);
+        opt_b.load_state(&blob).unwrap();
+        for (step, g) in grads.iter().enumerate().skip(k) {
+            opt_b.step(&mut params, g, decaying_lr(step));
+        }
+        assert_eq!(bits(&ref_params), bits(&params), "adamw {state_dtype:?}");
+    }
+}
+
+#[test]
+fn resume_rejects_mismatched_composition() {
+    let metas = layer_zoo();
+    let grads = grad_seq(&metas, 2, 3);
+    let cfg = cfg_for(StateDtype::F32);
+    let mut opt = build_optimizer(&OptimizerKind::DctAdamW, &metas, &cfg);
+    let mut params: Vec<Matrix> =
+        metas.iter().map(|m| Matrix::zeros(m.rows, m.cols)).collect();
+    for g in &grads {
+        opt.step(&mut params, g, 1e-2);
+    }
+    let blob = opt.save_state().unwrap();
+    // different preset
+    let mut other = build_optimizer(&OptimizerKind::Trion, &metas, &cfg);
+    assert!(other.load_state(&blob).is_err());
+    // different rank
+    let cfg_r = OptimizerConfig { rank: 4, ..cfg_for(StateDtype::F32) };
+    let mut other = build_optimizer(&OptimizerKind::DctAdamW, &metas, &cfg_r);
+    assert!(other.load_state(&blob).is_err());
+    // different state dtype
+    let mut other =
+        build_optimizer(&OptimizerKind::DctAdamW, &metas, &cfg_for(StateDtype::Q8));
+    assert!(other.load_state(&blob).is_err());
+    // corrupt blob
+    let mut same = build_optimizer(&OptimizerKind::DctAdamW, &metas, &cfg);
+    assert!(same.load_state(&blob[..blob.len() / 2]).is_err());
+    let mut garbage = blob.clone();
+    for b in garbage.iter_mut().skip(blob.len() - 16) {
+        *b ^= 0xA5;
+    }
+    let mut same = build_optimizer(&OptimizerKind::DctAdamW, &metas, &cfg);
+    // trailing-byte corruption either fails a payload read or survives into
+    // a store whose dtype/shape check rejects it — never a panic
+    let _ = same.load_state(&garbage);
+}
+
+#[test]
+fn v2_checkpoint_file_roundtrips_the_resume_state() {
+    // end-to-end through the on-disk format: save_v2 → load_full →
+    // load_state reproduces the exact optimizer state
+    let metas = layer_zoo();
+    let grads = grad_seq(&metas, 6, 99);
+    let cfg = cfg_for(StateDtype::Bf16);
+    let mut opt = build_optimizer(&OptimizerKind::DctAdamW, &metas, &cfg);
+    let mut params: Vec<Matrix> =
+        metas.iter().map(|m| Matrix::zeros(m.rows, m.cols)).collect();
+    for (step, g) in grads.iter().take(4).enumerate() {
+        opt.step(&mut params, g, decaying_lr(step));
+    }
+    let state = TrainState {
+        step: 4,
+        optimizer: opt.name().to_string(),
+        opt_state: opt.save_state().unwrap(),
+    };
+    let path = std::env::temp_dir().join("fft_subspace_resume_e2e.bin");
+    checkpoint::save_v2(&path, &params, &state).unwrap();
+
+    let ck = checkpoint::load_full(&path).unwrap();
+    assert_eq!(bits(&ck.params), bits(&params));
+    let restored = ck.state.unwrap();
+    assert_eq!(restored.step, 4);
+    assert_eq!(restored.optimizer, "dct-adamw+m:bf16");
+    let mut opt_b = build_optimizer(&OptimizerKind::DctAdamW, &metas, &cfg);
+    opt_b.load_state(&restored.opt_state).unwrap();
+    let mut params_b = ck.params;
+    // both finish the run; trajectories agree to the bit
+    for (step, g) in grads.iter().enumerate().skip(4) {
+        opt.step(&mut params, g, decaying_lr(step));
+        opt_b.step(&mut params_b, g, decaying_lr(step));
+    }
+    assert_eq!(bits(&params), bits(&params_b));
+
+    // v1 files still load as params-only (backward compat)
+    let v1_path = std::env::temp_dir().join("fft_subspace_resume_v1.bin");
+    checkpoint::save(&v1_path, &params).unwrap();
+    let v1 = checkpoint::load_full(&v1_path).unwrap();
+    assert!(v1.state.is_none());
+    assert_eq!(bits(&v1.params), bits(&params));
+}
+
+#[test]
+fn seeded_sources_resume_their_rng_streams() {
+    // Random / RandPerm sources draw from per-layer RNG streams on every
+    // refresh — the blob must carry the stream state, not just the current
+    // basis, or the first post-resume refresh diverges.
+    use fft_subspace::optim::OptimizerSpec;
+    use fft_subspace::projection::ProjectionKind;
+    let metas = layer_zoo();
+    let (n, k) = (11usize, 5usize);
+    let grads = grad_seq(&metas, n, 17);
+    for proj in [ProjectionKind::Random, ProjectionKind::RandPerm] {
+        let spec = OptimizerSpec::frugal(8)
+            .projection(proj.clone())
+            .update_interval(3)
+            .threads(Some(1))
+            .seed(5);
+        let mut ref_opt = spec.build(&metas);
+        let mut ref_params: Vec<Matrix> =
+            metas.iter().map(|m| Matrix::zeros(m.rows, m.cols)).collect();
+        for (step, g) in grads.iter().enumerate() {
+            ref_opt.step(&mut ref_params, g, decaying_lr(step));
+        }
+        let mut opt_a = spec.build(&metas);
+        let mut params: Vec<Matrix> =
+            metas.iter().map(|m| Matrix::zeros(m.rows, m.cols)).collect();
+        for (step, g) in grads.iter().take(k).enumerate() {
+            opt_a.step(&mut params, g, decaying_lr(step));
+        }
+        let blob = opt_a.serialize_state();
+        let mut opt_b = spec.build(&metas);
+        opt_b.restore_state(&blob).unwrap();
+        for (step, g) in grads.iter().enumerate().skip(k) {
+            opt_b.step(&mut params, g, decaying_lr(step));
+        }
+        assert_eq!(
+            bits(&ref_params),
+            bits(&params),
+            "{}: seeded source diverged after resume",
+            proj.name()
+        );
+    }
+}

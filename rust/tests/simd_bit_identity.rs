@@ -177,15 +177,15 @@ fn fused_adam_kernels_bit_identical_over_odd_lengths() {
                 (f32_bits(&u), f32_bits(&m), f32_bits(&vv))
             });
             assert_eq!(s, v, "adam_moments len={len} step={step}");
-            // dense fused kernel through AdamState
+            // dense fused kernel through AdamState (f32 stores in place)
             let (s, v) = scalar_vs_auto(|| {
                 let mut st = AdamState::new(1, len);
-                st.m.data.copy_from_slice(&m0);
-                st.v.data.copy_from_slice(&v0);
+                st.m.as_f32_mut().unwrap().data.copy_from_slice(&m0);
+                st.v.as_f32_mut().unwrap().data.copy_from_slice(&v0);
                 let mut p = Matrix::from_vec(1, len, p0.clone());
                 let gm = Matrix::from_vec(1, len, g.clone());
                 st.update(&mut p, &gm, 0.01, 0.9, 0.999, 1e-8, 0.01, step);
-                (mat_bits(&p), mat_bits(&st.m), mat_bits(&st.v))
+                (mat_bits(&p), mat_bits(st.m.as_f32().unwrap()), mat_bits(st.v.as_f32().unwrap()))
             });
             assert_eq!(s, v, "adam_fused len={len} step={step}");
         }
@@ -270,4 +270,127 @@ fn backend_by_thread_count_matrix_bit_identical() {
         }
         set_backend_override(None);
     }
+}
+
+// ---- typed-storage pack/unpack kernels (tensor::store) -----------------
+
+#[test]
+fn storage_pack_kernels_bit_identical_over_odd_lengths() {
+    use fft_subspace::tensor::store::{
+        bf16_add_into, bf16_pack_into, bf16_unpack_into, q8_add_into,
+        q8_dequantize_into, q8_quantize_into,
+    };
+    let mut rng = Pcg64::seed(11);
+    for len in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 31, 64, 70] {
+        let mut src: Vec<f32> = (0..len).map(|_| rng.normal_f32() * 10.0).collect();
+        // salt the edge cases into random lanes (vector body AND tail)
+        for (i, v) in [f32::NAN, f32::INFINITY, -0.0, f32::MIN_POSITIVE / 4.0]
+            .iter()
+            .enumerate()
+        {
+            if len > i {
+                let at = (rng.next_u64() as usize) % len;
+                src[at] = *v;
+            }
+        }
+        let base: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
+        let scale = 0.173f32;
+
+        let (s, v) = scalar_vs_auto(|| {
+            let mut packed = vec![0u16; len];
+            bf16_pack_into(&mut packed, &src);
+            let mut unpacked = vec![0.0f32; len];
+            bf16_unpack_into(&mut unpacked, &packed);
+            let mut added = base.clone();
+            bf16_add_into(&mut added, &packed);
+            let mut q = vec![0i8; len];
+            q8_quantize_into(&mut q, &src, scale);
+            let mut deq = vec![0.0f32; len];
+            q8_dequantize_into(&mut deq, &q, scale);
+            let mut qadd = base.clone();
+            q8_add_into(&mut qadd, &q, scale);
+            (packed, f32_bits(&unpacked), f32_bits(&added), q, f32_bits(&deq), f32_bits(&qadd))
+        });
+        assert_eq!(s, v, "len={len}");
+    }
+}
+
+#[test]
+fn bf16_pack_is_round_to_nearest_even() {
+    use fft_subspace::tensor::bf16::{bf16_bits_to_f32, f32_to_bf16_bits};
+    use fft_subspace::tensor::store::bf16_pack_into;
+    // Midpoint values: f32 bit patterns exactly halfway between two
+    // adjacent bf16 values (low 16 bits = 0x8000) must round to the EVEN
+    // bf16 mantissa, in both the vector body and the scalar tail.
+    let mids: Vec<f32> = (0..9)
+        .map(|i| {
+            let hi = 0x3F80u32 + i; // 1.0 + i·2⁻⁷ region, alternating parity
+            f32::from_bits((hi << 16) | 0x8000)
+        })
+        .collect();
+    let mut packed = vec![0u16; mids.len()];
+    bf16_pack_into(&mut packed, &mids);
+    for (i, (&p, &m)) in packed.iter().zip(mids.iter()).enumerate() {
+        assert_eq!(p, f32_to_bf16_bits(m), "lane {i}");
+        // round-to-nearest-even: the result's LSB is always 0 on exact ties
+        assert_eq!(p & 1, 0, "lane {i}: tie did not round to even ({p:#06x})");
+        // and the rounding error is exactly half a ULP of the bf16 grid
+        let back = bf16_bits_to_f32(p);
+        let ulp = f32::from_bits(((p as u32) << 16) & 0x7F80_0000) * (1.0 / 128.0);
+        assert!((back - m).abs() <= ulp * 0.5 + f32::EPSILON, "lane {i}");
+    }
+}
+
+#[test]
+fn q8_roundtrip_error_bounded_by_half_step() {
+    use fft_subspace::tensor::{Matrix as M, StateDtype, StateStore};
+    let mut rng = Pcg64::seed(12);
+    for _ in 0..20 {
+        let m = M::randn(7, 9, (rng.next_f32() + 0.1) * 4.0, &mut rng);
+        let mut st = StateStore::zeros(StateDtype::Q8, 7, 9);
+        st.store_from(&m);
+        let back = st.to_matrix();
+        let step = m.abs_max() / 127.0 + 1e-12;
+        assert!(
+            back.max_abs_diff(&m) <= step * 0.5 + 1e-7,
+            "err {} > half-step {}",
+            back.max_abs_diff(&m),
+            step * 0.5
+        );
+    }
+}
+
+#[test]
+fn engine_step_bit_identical_across_backends_with_typed_state() {
+    use fft_subspace::optim::OptimizerSpec;
+    use fft_subspace::tensor::StateDtype;
+    // the full DCT-AdamW engine step with bf16 stores: pack/unpack kernels
+    // sit on the hot path, so scalar and vector backends must agree on the
+    // entire trajectory
+    let metas = vec![
+        LayerMeta::new("w", 20, 12, ParamKind::Linear),
+        LayerMeta::new("norm", 1, 12, ParamKind::Norm),
+    ];
+    let mut rng = Pcg64::seed(13);
+    let grads: Vec<Vec<Matrix>> = (0..4)
+        .map(|_| {
+            metas
+                .iter()
+                .map(|m| Matrix::randn(m.rows, m.cols, 0.1, &mut rng))
+                .collect()
+        })
+        .collect();
+    let (s, v) = scalar_vs_auto(|| {
+        let mut opt = OptimizerSpec::dct_adamw(3)
+            .state_dtype(StateDtype::Bf16)
+            .threads(Some(1))
+            .build(&metas);
+        let mut params: Vec<Matrix> =
+            metas.iter().map(|m| Matrix::zeros(m.rows, m.cols)).collect();
+        for g in &grads {
+            opt.step(&mut params, g, 1e-2);
+        }
+        params.iter().map(mat_bits).collect::<Vec<_>>()
+    });
+    assert_eq!(s, v);
 }
