@@ -7,13 +7,18 @@
 CARGO ?= cargo
 RUST_DIR := rust
 
-.PHONY: build test test-matrix bench bench-proj bench-par bench-simd bench-makhoul bench-optim bench-mem artifacts clean
+.PHONY: build test test-faults test-matrix bench bench-proj bench-par bench-simd bench-makhoul bench-optim bench-mem artifacts clean
 
 build:
 	cd $(RUST_DIR) && $(CARGO) build --release
 
 test:
 	cd $(RUST_DIR) && $(CARGO) test -q
+
+# Fault-injection suite on its own: guard skip/rollback bit-equality,
+# torn-checkpoint recovery, worker-lane retry (tests/fault_recovery.rs).
+test-faults:
+	cd $(RUST_DIR) && $(CARGO) test -q --test fault_recovery
 
 # The SIMD × threading conformance matrix: the whole suite under the scalar
 # and vector kernel backends at 1 and 4 pool lanes. Results must be
@@ -22,6 +27,9 @@ test:
 # FFT_SUBSPACE_STATE_DTYPE drives the dtype the resume/alloc/parallel
 # engine tests exercise (f32 is the bit-exact default, bf16 the staging
 # path) — determinism and zero-allocation must hold for every dtype.
+# The third loop sweeps the fault-injection axis: FFT_SUBSPACE_FAULT picks
+# which deterministic fault the recovery suite injects (NaN vs +Inf, seeded
+# vs pinned layer) — every cell must still converge to the fault-free bits.
 test-matrix:
 	cd $(RUST_DIR) && for s in 0 1; do for t in 1 4; do \
 		echo "== FFT_SUBSPACE_SIMD=$$s FFT_SUBSPACE_THREADS=$$t =="; \
@@ -32,6 +40,10 @@ test-matrix:
 		FFT_SUBSPACE_STATE_DTYPE=$$d $(CARGO) test -q \
 			--test resume_determinism --test alloc_steady_state \
 			--test parallel_determinism || exit 1; \
+	done
+	cd $(RUST_DIR) && for f in "grad-nan@3" "grad-inf@6.1" "grad-nan@4,seed@9"; do \
+		echo "== FFT_SUBSPACE_FAULT=$$f (fault recovery) =="; \
+		FFT_SUBSPACE_FAULT=$$f $(CARGO) test -q --test fault_recovery || exit 1; \
 	done
 
 # Full microbench battery (each bench is a plain binary: harness = false).

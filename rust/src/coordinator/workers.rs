@@ -14,10 +14,46 @@
 //! worker set for the pure-Rust per-worker stages (batch staging) plus the
 //! pool-backed ring all-reduce. When `Send` PJRT bindings land, the fwd/bwd
 //! closure moves in here unchanged (ROADMAP §Parallel runtime).
+//!
+//! **Lane retry.** A panic inside one lane's closure no longer takes the
+//! whole run down: each lane retries its work up to [`MAX_ATTEMPTS`] times
+//! (catching the unwind *inside* the pool closure, so the pool itself never
+//! sees it), and only a lane that fails every attempt propagates. Retried
+//! work must therefore be idempotent or fail before mutating its state —
+//! the trainer's batch staging qualifies (the injected lane fault fires
+//! before the loader draws), and `tests/fault_recovery.rs` pins both the
+//! recovery and the exhaustion path.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Arc;
 
 use crate::parallel::{par_for_each_mut, ThreadPool};
+
+/// Attempts per lane before a persistent failure is allowed to propagate.
+pub const MAX_ATTEMPTS: usize = 3;
+
+/// Run `attempt()` with bounded retry: the first `MAX_ATTEMPTS - 1`
+/// failures are caught and logged, the final attempt runs uncaught so a
+/// persistent failure propagates as the panic it is.
+fn with_retry(lane: usize, mut attempt: impl FnMut()) {
+    for tried in 1..MAX_ATTEMPTS {
+        match catch_unwind(AssertUnwindSafe(&mut attempt)) {
+            Ok(()) => return,
+            Err(cause) => {
+                let msg = cause
+                    .downcast_ref::<String>()
+                    .map(String::as_str)
+                    .or_else(|| cause.downcast_ref::<&str>().copied())
+                    .unwrap_or("<non-string panic>");
+                eprintln!(
+                    "warning: worker lane {lane} failed attempt \
+                     {tried}/{MAX_ATTEMPTS} ({msg}) — retrying"
+                );
+            }
+        }
+    }
+    attempt();
+}
 
 /// A fixed-size set of simulated workers executing on real threads.
 pub struct WorkerSet {
@@ -32,11 +68,14 @@ impl WorkerSet {
     }
 
     /// Run `f(w)` for every worker `w` concurrently; results come back in
-    /// worker order regardless of scheduling.
+    /// worker order regardless of scheduling. A lane that panics is retried
+    /// (bounded, see module docs) before the failure propagates.
     pub fn run<T: Send>(&self, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
         let mut out: Vec<Option<T>> = (0..self.world).map(|_| None).collect();
         par_for_each_mut(&self.pool, &mut out, |w, slot| {
-            *slot = Some(f(w));
+            with_retry(w, || {
+                *slot = Some(f(w));
+            });
         });
         out.into_iter()
             .map(|o| o.expect("worker produced no result"))
@@ -44,10 +83,14 @@ impl WorkerSet {
     }
 
     /// Run `f(w, &mut state[w])` for every worker against its own mutable
-    /// state (per-worker loaders, gradient buffers).
+    /// state (per-worker loaders, gradient buffers). Same bounded lane
+    /// retry as [`WorkerSet::run`] — `f` must be idempotent on its state
+    /// or fail before mutating it.
     pub fn run_mut<S: Send>(&self, states: &mut [S], f: impl Fn(usize, &mut S) + Sync) {
         assert_eq!(states.len(), self.world, "WorkerSet state count mismatch");
-        par_for_each_mut(&self.pool, states, f);
+        par_for_each_mut(&self.pool, states, |w, state| {
+            with_retry(w, || f(w, &mut *state));
+        });
     }
 }
 
@@ -86,5 +129,22 @@ mod tests {
             *c = (w as u64 + 1) * 10;
         });
         assert_eq!(counters, vec![10, 20, 30, 40]);
+    }
+
+    #[test]
+    fn flaky_lane_recovers_via_retry() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let ws = WorkerSet::new(3, Arc::new(ThreadPool::new(2)));
+        // lane 1 panics on its first attempt only — the bounded retry must
+        // absorb the failure and still return every lane's result in order
+        let lane1_calls = AtomicUsize::new(0);
+        let got = ws.run(|w| {
+            if w == 1 && lane1_calls.fetch_add(1, Ordering::SeqCst) == 0 {
+                panic!("injected transient lane failure");
+            }
+            w * 2
+        });
+        assert_eq!(got, vec![0, 2, 4]);
+        assert_eq!(lane1_calls.load(Ordering::SeqCst), 2);
     }
 }

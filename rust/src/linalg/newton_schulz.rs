@@ -14,7 +14,7 @@
 //! [`newton_schulz`] delegates to it, so the two are bit-identical by
 //! construction.
 
-use crate::tensor::{matmul_at_b_into, matmul_into, Matrix, Workspace};
+use crate::tensor::{all_finite, matmul_at_b_into, matmul_into, Matrix, Workspace};
 
 /// Muon's quintic coefficients (Jordan et al., 2024).
 pub const NS_COEFFS: (f32, f32, f32) = (3.4445, -4.7750, 2.0315);
@@ -30,6 +30,14 @@ pub fn newton_schulz(x: &Matrix, steps: usize) -> Matrix {
 /// Allocation-free [`newton_schulz`]: writes the orthogonalized matrix into
 /// `out` (resized in place) using only pooled workspace scratch.
 pub fn newton_schulz_into(x: &Matrix, steps: usize, out: &mut Matrix, ws: &mut Workspace) {
+    // Non-finite input: the iteration can only amplify NaN/Inf (the Gram
+    // products smear a single poisoned entry across the whole matrix), so
+    // pass the input through untouched and let the caller's guard decide
+    // what to do with the step (ROADMAP §Fault tolerance).
+    if !all_finite(&x.data) {
+        out.copy_from(x);
+        return;
+    }
     let (a, b, c) = NS_COEFFS;
     let transposed = x.rows < x.cols;
     let (wr, wc) = if transposed { (x.cols, x.rows) } else { (x.rows, x.cols) };
@@ -121,6 +129,18 @@ mod tests {
             let bound = ((m.min(n)) as f64).sqrt() * 1.6;
             assert!(o.fro_norm() <= bound, "norm={} bound={bound}", o.fro_norm());
         });
+    }
+
+    #[test]
+    fn non_finite_input_passes_through_unmodified() {
+        let mut rng = Pcg64::seed(3);
+        let mut x = Matrix::randn(10, 6, 1.0, &mut rng);
+        x.data[17] = f32::NAN;
+        let o = newton_schulz(&x, 5);
+        assert_eq!(o.shape(), x.shape());
+        for (a, b) in o.data.iter().zip(x.data.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]

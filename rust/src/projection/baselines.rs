@@ -6,8 +6,8 @@ use anyhow::Result;
 
 use crate::linalg::{block_power_iter, qr_q_into, qr_thin, svd_right_vectors_into, svd_thin};
 use crate::tensor::{
-    matmul, matmul_a_bt, matmul_a_bt_into, matmul_at_b_into, matmul_into,
-    Matrix, Workspace,
+    all_finite, matmul, matmul_a_bt, matmul_a_bt_into, matmul_at_b_into,
+    matmul_into, Matrix, Workspace,
 };
 use crate::util::codec::{self, ByteReader};
 use crate::util::Pcg64;
@@ -78,6 +78,13 @@ impl SvdProj {
 
 impl Projection for SvdProj {
     fn refresh_and_project(&mut self, g: &Matrix) -> Matrix {
+        // Non-finite input would poison the Jacobi sweep (NaN rotations →
+        // NaN basis, corrupting every later projection). Keep the previous
+        // basis and project only — graceful degradation, same contract as
+        // every refresh path (see ROADMAP §Fault tolerance).
+        if !all_finite(&g.data) {
+            return self.project(g);
+        }
         let svd = svd_thin(g);
         self.q_r = svd.right_vectors(self.q_r.cols);
         self.project(g)
@@ -89,6 +96,10 @@ impl Projection for SvdProj {
     /// work buffer pooled, so the GaLore refresh step is allocation-free at
     /// steady state.
     fn refresh_and_project_into(&mut self, g: &Matrix, out: &mut Matrix, ws: &mut Workspace) {
+        if !all_finite(&g.data) {
+            matmul_into(g, &self.q_r, out);
+            return;
+        }
         svd_right_vectors_into(g, self.q_r.cols, &mut self.q_r, ws);
         matmul_into(g, &self.q_r, out);
     }
@@ -142,6 +153,10 @@ impl BlockPower {
 
 impl Projection for BlockPower {
     fn refresh_and_project(&mut self, g: &Matrix) -> Matrix {
+        // non-finite input: keep the previous basis (see SvdProj)
+        if !all_finite(&g.data) {
+            return self.project(g);
+        }
         let warm = if self.warm { Some(&self.q_r) } else { None };
         self.q_r = block_power_iter(g, self.q_r.cols, self.iters, warm);
         self.warm = true;
@@ -157,6 +172,10 @@ impl Projection for BlockPower {
     /// at steady state. Only the cold-start Gaussian seed (first refresh
     /// ever) allocates.
     fn refresh_and_project_into(&mut self, g: &Matrix, out: &mut Matrix, ws: &mut Workspace) {
+        if !all_finite(&g.data) {
+            matmul_into(g, &self.q_r, out);
+            return;
+        }
         let c = g.cols;
         let r = self.q_r.cols.min(c);
         let mut v = ws.take_uninit(c, r);
@@ -220,6 +239,13 @@ impl RandomSemiOrtho {
 
 impl Projection for RandomSemiOrtho {
     fn refresh_and_project(&mut self, g: &Matrix) -> Matrix {
+        // The Gaussian refresh itself never sees g, but a poisoned step's
+        // refresh must not advance the RNG either — a rolled-back replay
+        // (or a skip-equivalent reference run) has to land on the same
+        // draw sequence. Uniform rule: non-finite input refreshes nothing.
+        if !all_finite(&g.data) {
+            return self.project(g);
+        }
         let fresh = Matrix::randn(self.q_r.rows, self.q_r.cols, 1.0, &mut self.rng);
         let (q, _) = qr_thin(&fresh);
         self.q_r = q;
@@ -231,6 +257,10 @@ impl Projection for RandomSemiOrtho {
     /// comes from `qr_q_into` — bit-identical to `qr_thin`'s Q (property-
     /// pinned in `linalg/qr.rs`), with zero steady-state allocations.
     fn refresh_and_project_into(&mut self, g: &Matrix, out: &mut Matrix, ws: &mut Workspace) {
+        if !all_finite(&g.data) {
+            matmul_into(g, &self.q_r, out);
+            return;
+        }
         let (c, r) = self.q_r.shape();
         let mut fresh = ws.take_uninit(c, r);
         self.rng.fill_normal(&mut fresh.data, 1.0);
@@ -281,6 +311,11 @@ impl RandPerm {
 
 impl Projection for RandPerm {
     fn refresh_and_project(&mut self, g: &Matrix) -> Matrix {
+        // non-finite input: keep the current coordinate subset and don't
+        // advance the RNG (see RandomSemiOrtho)
+        if !all_finite(&g.data) {
+            return self.project(g);
+        }
         let mut idx = self.rng.sample_indices(self.cols, self.idx.len());
         idx.sort_unstable();
         self.idx = idx;

@@ -21,8 +21,8 @@ use anyhow::Result;
 use crate::fft::{cached_dct2_matrix, cached_plan, MakhoulPlan};
 use crate::parallel::ThreadPool;
 use crate::tensor::{
-    matmul, matmul_a_bt, matmul_a_bt_into, matmul_into, matmul_into_on, Matrix,
-    Workspace,
+    all_finite, matmul, matmul_a_bt, matmul_a_bt_into, matmul_into,
+    matmul_into_on, Matrix, Workspace,
 };
 use crate::util::codec::{self, ByteReader};
 
@@ -183,6 +183,14 @@ impl DctSelect {
     /// Trion consumes `S` for the momentum error feedback as well.
     pub fn refresh_full(&mut self, g: &Matrix) -> (Matrix, Matrix) {
         let s = self.shared.similarities(g, self.use_makhoul);
+        // Non-finite input: NaN column norms would rank arbitrarily
+        // (partial_cmp ties), silently replacing a good selection with a
+        // garbage one. Keep the previous indices/basis; callers still get
+        // S (itself non-finite) and the gathered columns.
+        if !all_finite(&g.data) {
+            let low = s.select_columns(&self.idx);
+            return (s, low);
+        }
         self.idx = select_top_columns(&s, self.rank, self.norm);
         self.shared.matrix().select_columns_into(&self.idx, &mut self.basis_cache);
         let low = s.select_columns(&self.idx);
@@ -212,6 +220,12 @@ impl Projection for DctSelect {
     // -- workspace-backed hot path ---------------------------------------
 
     fn refresh_and_project_into(&mut self, g: &Matrix, out: &mut Matrix, ws: &mut Workspace) {
+        // Non-finite gradient: keep the previous selection/basis instead of
+        // re-ranking columns on NaN norms (ROADMAP §Fault tolerance).
+        if !all_finite(&g.data) {
+            matmul_into(g, &self.basis_cache, out);
+            return;
+        }
         // fully overwritten by similarities_into → non-zeroing checkout
         let mut s = ws.take_uninit(g.rows, self.shared.dim());
         self.shared.similarities_into(g, self.use_makhoul, &mut s);

@@ -18,7 +18,8 @@ pub mod store;
 pub use matrix::Matrix;
 pub use store::{StateDtype, StateStore};
 pub use ops::{
-    matmul, matmul_a_bt, matmul_a_bt_into, matmul_a_bt_into_on, matmul_at_b,
-    matmul_at_b_into, matmul_at_b_into_on, matmul_into, matmul_into_on,
+    all_finite, matmul, matmul_a_bt, matmul_a_bt_into, matmul_a_bt_into_on,
+    matmul_at_b, matmul_at_b_into, matmul_at_b_into_on, matmul_into,
+    matmul_into_on,
 };
 pub use workspace::Workspace;

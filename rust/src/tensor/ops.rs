@@ -374,6 +374,48 @@ pub fn matmul_a_bt_into_on(pool: &ThreadPool, a: &Matrix, b: &Matrix, c: &mut Ma
     par_rows(pool, m, n, &mut c.data, |rows, lo, hi| mm_a_bt_block(a, b, rows, lo, hi));
 }
 
+/// Non-finite (NaN/±Inf) detection: an f32 is non-finite iff its exponent
+/// bits are all ones, i.e. `bits & 0x7F80_0000 == 0x7F80_0000`. The lane
+/// version expresses the equality test with the existing exact u32 ops
+/// (no compare lane op needed): `masked + 0x0080_0000` carries into the
+/// sign bit iff `masked == 0x7F80_0000` (masked can never exceed it), so
+/// `(masked.wrapping_add(0x0080_0000)) & 0x8000_0000` is the per-lane
+/// non-finite flag. Flags are OR-accumulated — pure bit manipulation end
+/// to end, so the SIMD bit-identity contract holds trivially, and the
+/// scalar tail runs the identical op sequence on `f32::to_bits`.
+#[inline(always)]
+fn all_finite_g<S: Simd>(data: &[f32]) -> bool {
+    const EXP: u32 = 0x7F80_0000;
+    const CARRY: u32 = 0x0080_0000;
+    const SIGN: u32 = 0x8000_0000;
+    let exp = S::splat_u32(EXP);
+    let carry = S::splat_u32(CARRY);
+    let sign = S::splat_u32(SIGN);
+    let mut acc = S::splat_u32(0);
+    let n = data.len();
+    let mut i = 0;
+    while i + F32_LANES <= n {
+        let bits = S::f32_bits(S::load(&data[i..]));
+        let flag = S::and_u32(S::add_u32(S::and_u32(bits, exp), carry), sign);
+        acc = S::or_u32(acc, flag);
+        i += F32_LANES;
+    }
+    let mut any = S::to_array_u32(acc).iter().fold(0u32, |a, &b| a | b);
+    while i < n {
+        any |= (data[i].to_bits() & EXP).wrapping_add(CARRY) & SIGN;
+        i += 1;
+    }
+    any == 0
+}
+
+crate::simd_dispatch! {
+    /// `true` iff every element of `data` is finite (no NaN, no ±Inf).
+    /// Allocation-free single pass; the numerical-health guard scans every
+    /// gradient through this before the optimizer step, and the `linalg`
+    /// refresh gates use it to keep the previous basis on poisoned input.
+    pub fn all_finite(data: &[f32]) -> bool = all_finite_g
+}
+
 /// Partition `m` output rows of width `n` into contiguous chunks (one per
 /// pool lane) and hand each chunk its disjoint slab of `c_data` — a thin
 /// alias over the shared `parallel::par_row_slabs` partitioner.

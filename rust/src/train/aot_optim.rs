@@ -174,6 +174,10 @@ impl Optimizer for AotOptimizer {
     fn step(&mut self, params: &mut [Matrix], grads: &[Matrix], lr: f32) {
         self.step += 1;
         let t = self.step;
+        // Layers whose AOT graph errored this step: demoted to the dense
+        // AdamW fallback *after* the loop (replacing states[i] mid-match
+        // would fight the borrow on self.states).
+        let mut fall_back: Vec<usize> = Vec::new();
         for i in 0..params.len() {
             let meta = &self.metas[i];
             match &mut self.states[i] {
@@ -184,13 +188,23 @@ impl Optimizer for AotOptimizer {
                 LayerState::Trion { exe, momentum, dim } => {
                     let g = orient(meta, &grads[i]);
                     let q = self.dct[dim].clone();
-                    let outs = exe
-                        .run(&[
-                            Value::F32(momentum.clone()),
-                            Value::F32(g),
-                            Value::F32(q),
-                        ])
-                        .expect("trion AOT graph failed");
+                    let outs = match exe.run(&[
+                        Value::F32(momentum.clone()),
+                        Value::F32(g),
+                        Value::F32(q),
+                    ]) {
+                        Ok(outs) => outs,
+                        Err(e) => {
+                            eprintln!(
+                                "warning: trion AOT graph failed for layer \
+                                 {} at step {t} ({e:#}) — falling back to \
+                                 dense AdamW for this layer",
+                                meta.name
+                            );
+                            fall_back.push(i);
+                            continue;
+                        }
+                    };
                     // outputs: m_new, o_full, o_low, idx
                     *momentum = outs.values[0].clone();
                     let o_full = deorient(meta, outs.values[1].clone());
@@ -202,17 +216,27 @@ impl Optimizer for AotOptimizer {
                     let g = orient(meta, &grads[i]);
                     let q = self.dct[dim].clone();
                     let idx_vals: Vec<i32> = idx.clone();
-                    let outs = exe
-                        .run(&[
-                            Value::F32(g),
-                            Value::F32(q),
-                            Value::F32(m.clone()),
-                            Value::F32(v.clone()),
-                            Value::F32(ef.clone()),
-                            Value::I32(idx_vals, vec![*rank]),
-                            Value::Scalar(t as f32),
-                        ])
-                        .expect("dctadamw AOT graph failed");
+                    let outs = match exe.run(&[
+                        Value::F32(g),
+                        Value::F32(q),
+                        Value::F32(m.clone()),
+                        Value::F32(v.clone()),
+                        Value::F32(ef.clone()),
+                        Value::I32(idx_vals, vec![*rank]),
+                        Value::Scalar(t as f32),
+                    ]) {
+                        Ok(outs) => outs,
+                        Err(e) => {
+                            eprintln!(
+                                "warning: dctadamw AOT graph failed for \
+                                 layer {} at step {t} ({e:#}) — falling \
+                                 back to dense AdamW for this layer",
+                                meta.name
+                            );
+                            fall_back.push(i);
+                            continue;
+                        }
+                    };
                     // outputs: update_full, m, v, ef, idx
                     let update = deorient(meta, outs.values[0].clone());
                     *m = outs.values[1].clone();
@@ -227,13 +251,23 @@ impl Optimizer for AotOptimizer {
                 }
                 LayerState::Dion { exe, momentum, q } => {
                     let g = orient(meta, &grads[i]);
-                    let outs = exe
-                        .run(&[
-                            Value::F32(momentum.clone()),
-                            Value::F32(g),
-                            Value::F32(q.clone()),
-                        ])
-                        .expect("dion AOT graph failed");
+                    let outs = match exe.run(&[
+                        Value::F32(momentum.clone()),
+                        Value::F32(g),
+                        Value::F32(q.clone()),
+                    ]) {
+                        Ok(outs) => outs,
+                        Err(e) => {
+                            eprintln!(
+                                "warning: dion AOT graph failed for layer \
+                                 {} at step {t} ({e:#}) — falling back to \
+                                 dense AdamW for this layer",
+                                meta.name
+                            );
+                            fall_back.push(i);
+                            continue;
+                        }
+                    };
                     *momentum = outs.values[0].clone();
                     let o_full = deorient(meta, outs.values[1].clone());
                     *q = outs.values[2].clone();
@@ -242,6 +276,19 @@ impl Optimizer for AotOptimizer {
                     params[i].axpy(-lr * shape_factor(rr, cc), &o_full);
                 }
             }
+        }
+        // Permanent demotion: a graph that failed once (lost plugin, bad
+        // artifact) is not retried — the layer continues on the rust-native
+        // dense path, starting with this step's update.
+        for i in fall_back {
+            let meta = &self.metas[i];
+            let mut st = AdamState::new(meta.rows, meta.cols);
+            st.update(
+                &mut params[i], &grads[i], lr, self.beta1, self.beta2,
+                self.eps, 0.0, t,
+            );
+            self.states[i] = LayerState::Adam(st);
+            self.aot_layers -= 1;
         }
     }
 

@@ -11,6 +11,7 @@ use crate::optim::{
 };
 use crate::projection::{ProjectionKind, RankNorm};
 use crate::tensor::StateDtype;
+use crate::train::guard::GuardPolicy;
 use crate::util::json::{num, obj, s, Json};
 
 /// Config-level residual choice: resolved against `ef-mode` at build time
@@ -74,6 +75,24 @@ pub struct TrainConfig {
     pub resume: Option<String>,
     /// `save-state=PATH`: write a v2 checkpoint at the end of the run.
     pub save_state_to: Option<String>,
+    /// `guard=off|skip|rollback`: the numerical-health policy applied to
+    /// every step's loss and post-clip gradients (see `train::guard`).
+    pub guard: GuardPolicy,
+    /// `guard-threshold=X`: trip the guard when loss > X × EMA(loss);
+    /// `0` disables spike detection (non-finite checks still run).
+    pub guard_threshold: f32,
+    /// `checkpoint-interval=N`: write an atomic in-run v2 snapshot every
+    /// N completed steps; `0` disables periodic snapshots (rollback still
+    /// forces an initial one).
+    pub checkpoint_interval: usize,
+    /// `checkpoint-dir=PATH`: snapshot directory; defaults to
+    /// `{run_dir}/checkpoints`.
+    pub checkpoint_dir: Option<String>,
+    /// `checkpoint-keep=K`: retain the newest K snapshots (≥ 1).
+    pub checkpoint_keep: usize,
+    /// `fault=SPEC`: deterministic fault-injection plan (see
+    /// `train::fault` for the grammar); wins over `FFT_SUBSPACE_FAULT`.
+    pub fault: Option<String>,
 }
 
 impl Default for TrainConfig {
@@ -102,6 +121,12 @@ impl Default for TrainConfig {
             rank_norm_override: None,
             resume: None,
             save_state_to: None,
+            guard: GuardPolicy::Off,
+            guard_threshold: 0.0,
+            checkpoint_interval: 0,
+            checkpoint_dir: None,
+            checkpoint_keep: 3,
+            fault: None,
         }
     }
 }
@@ -280,6 +305,12 @@ impl TrainConfig {
         if let Some(p) = &self.save_state_to {
             extra.push(("save_state", s(p)));
         }
+        if let Some(d) = &self.checkpoint_dir {
+            extra.push(("checkpoint_dir", s(d)));
+        }
+        if let Some(f) = &self.fault {
+            extra.push(("fault", s(f)));
+        }
         let mut fields = vec![
             ("preset", s(&self.preset)),
             ("optimizer", s(self.optimizer.name())),
@@ -307,6 +338,10 @@ impl TrainConfig {
             ("use_aot_optimizer", Json::Bool(self.use_aot_optimizer)),
             // 0 = auto (global pool)
             ("threads", num(self.opt.threads.unwrap_or(0) as f64)),
+            ("guard", s(self.guard.name())),
+            ("guard_threshold", num(self.guard_threshold as f64)),
+            ("checkpoint_interval", num(self.checkpoint_interval as f64)),
+            ("checkpoint_keep", num(self.checkpoint_keep as f64)),
         ];
         fields.extend(extra);
         obj(fields)
@@ -386,6 +421,30 @@ impl TrainConfig {
             }
             "resume" => self.resume = Some(value.into()),
             "save-state" | "save_state" => self.save_state_to = Some(value.into()),
+            // fault-tolerance: numerical-health guard + in-run snapshots
+            "guard" => {
+                self.guard = GuardPolicy::parse(value).ok_or_else(|| {
+                    anyhow::anyhow!("unknown guard policy {value:?} (off|skip|rollback)")
+                })?
+            }
+            "guard-threshold" | "guard_threshold" => {
+                self.guard_threshold = value.parse()?
+            }
+            "checkpoint-interval" | "checkpoint_interval" => {
+                self.checkpoint_interval = value.parse()?
+            }
+            "checkpoint-dir" | "checkpoint_dir" => {
+                self.checkpoint_dir = Some(value.into())
+            }
+            "checkpoint-keep" | "checkpoint_keep" => {
+                self.checkpoint_keep = value.parse()?
+            }
+            // deterministic fault injection (validated at parse time so a
+            // typo'd spec fails the CLI, not the mid-run injection point)
+            "fault" => {
+                crate::train::fault::FaultPlan::parse(value)?;
+                self.fault = Some(value.into());
+            }
             // engine policy overrides — any grid point from config alone
             "source" => self.source_override = Some(parse_projection(value)?),
             "residual" => {
@@ -592,6 +651,62 @@ mod tests {
         let d = Json::parse(&TrainConfig::default().to_json().to_string()).unwrap();
         assert!(d.get("resume").is_none());
         assert!(d.get("save_state").is_none());
+    }
+
+    #[test]
+    fn guard_and_checkpoint_keys_round_trip() {
+        let mut c = TrainConfig::default();
+        c.apply("guard", "rollback").unwrap();
+        c.apply("guard-threshold", "3.5").unwrap();
+        c.apply("checkpoint-interval", "25").unwrap();
+        c.apply("checkpoint-dir", "runs/a/snaps").unwrap();
+        c.apply("checkpoint-keep", "5").unwrap();
+        c.apply("fault", "grad-nan@7.2,ckpt-tear@64").unwrap();
+        assert_eq!(c.guard, GuardPolicy::Rollback);
+        assert_eq!(c.guard_threshold, 3.5);
+        assert_eq!(c.checkpoint_interval, 25);
+        assert_eq!(c.checkpoint_dir.as_deref(), Some("runs/a/snaps"));
+        assert_eq!(c.checkpoint_keep, 5);
+        assert_eq!(c.fault.as_deref(), Some("grad-nan@7.2,ckpt-tear@64"));
+
+        // the config.json dump records the effective values and replays
+        // through apply()
+        let back = Json::parse(&c.to_json().to_string()).unwrap();
+        assert_eq!(back.req("guard").unwrap().as_str().unwrap(), "rollback");
+        // numeric field, not a string
+        assert!(back.req("guard_threshold").unwrap().as_str().is_err());
+        assert_eq!(back.req("guard_threshold").unwrap().as_f64().unwrap(), 3.5);
+        let mut replay = TrainConfig::default();
+        for key in [
+            "guard",
+            "checkpoint_dir",
+            "fault",
+        ] {
+            replay
+                .apply(key, back.req(key).unwrap().as_str().unwrap())
+                .unwrap();
+        }
+        assert_eq!(replay.guard, GuardPolicy::Rollback);
+        assert_eq!(replay.checkpoint_dir.as_deref(), Some("runs/a/snaps"));
+        assert_eq!(replay.fault.as_deref(), Some("grad-nan@7.2,ckpt-tear@64"));
+        assert_eq!(
+            back.req("checkpoint_interval").unwrap().as_usize().unwrap(),
+            25
+        );
+        assert_eq!(back.req("checkpoint_keep").unwrap().as_usize().unwrap(), 5);
+
+        // defaults: guard off, snapshots off, optional keys absent
+        let d = Json::parse(&TrainConfig::default().to_json().to_string()).unwrap();
+        assert_eq!(d.req("guard").unwrap().as_str().unwrap(), "off");
+        assert_eq!(d.req("checkpoint_interval").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(d.req("checkpoint_keep").unwrap().as_usize().unwrap(), 3);
+        assert!(d.get("checkpoint_dir").is_none());
+        assert!(d.get("fault").is_none());
+
+        // bad values are rejected at parse time
+        assert!(c.apply("guard", "retry").is_err());
+        assert!(c.apply("fault", "bogus@1").is_err());
+        assert!(c.apply("checkpoint-interval", "x").is_err());
     }
 
     #[test]

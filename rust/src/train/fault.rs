@@ -1,0 +1,297 @@
+//! Deterministic fault injection for the recovery paths.
+//!
+//! Every fault-tolerance mechanism in this repo (guards, atomic
+//! checkpoint writes, worker-lane retry) is exercised by *injected*
+//! faults, not by luck: a seeded [`FaultInjector`] built from a
+//! [`FaultPlan`] corrupts exactly the step/byte/lane the plan names, and
+//! nothing else. Plans come from the `fault=` config key or the
+//! `FFT_SUBSPACE_FAULT` environment variable (config wins), with a tiny
+//! grammar of comma-separated directives:
+//!
+//! ```text
+//! grad-nan@STEP          poison one element of a gradient at STEP (NaN)
+//! grad-nan@STEP.LAYER    …of layer LAYER specifically
+//! grad-inf@STEP[.LAYER]  same, with +Inf
+//! ckpt-tear@BYTES        truncate the next checkpoint write at BYTES
+//! worker-fail@STEP.LANE  panic worker lane LANE once at STEP
+//! seed@N                 seed for the corrupted-element choice
+//! ```
+//!
+//! e.g. `FFT_SUBSPACE_FAULT=grad-nan@7.2,ckpt-tear@64`. Steps are 0-based
+//! trainer steps. **Every fault is one-shot**: after it fires once it is
+//! disarmed, which is what lets a `guard=rollback` run replay through the
+//! faulted step cleanly and converge to the fault-free bits.
+//!
+//! The checkpoint tear is armed through a process-global latch rather
+//! than threaded through the checkpoint API: `checkpoint::write_atomic`
+//! consults [`take_checkpoint_tear`] (a destructive read) right before
+//! writing, so the injection point lives exactly where a real crash
+//! would, without the production signature carrying test plumbing.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Matrix;
+use crate::util::Pcg64;
+
+/// Parsed fault specification. `None`/`usize::MAX` fields mean "not
+/// armed". See the module docs for the grammar.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Step whose gradient gets one poisoned element.
+    pub grad_step: Option<usize>,
+    /// `false` → NaN, `true` → +Inf.
+    pub grad_inf: bool,
+    /// Layer index to poison; `usize::MAX` → seeded choice over layers.
+    pub grad_layer: usize,
+    /// Truncate the next checkpoint write after this many bytes.
+    pub tear_at: Option<usize>,
+    /// `(step, lane)`: panic this worker lane once at this step.
+    pub worker_fail: Option<(usize, usize)>,
+    /// Seed for the corrupted-element (and layer) choice.
+    pub seed: u64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        Self {
+            grad_step: None,
+            grad_inf: false,
+            grad_layer: usize::MAX,
+            tear_at: None,
+            worker_fail: None,
+            seed: 0,
+        }
+    }
+}
+
+fn parse_num(s: &str, what: &str) -> Result<usize> {
+    s.parse::<usize>()
+        .with_context(|| format!("fault spec: bad {what} {s:?}"))
+}
+
+impl FaultPlan {
+    /// Parse a spec string (see module docs). Empty string → empty plan.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut plan = Self::default();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (name, arg) = part
+                .split_once('@')
+                .with_context(|| format!("fault spec: {part:?} is not NAME@ARG"))?;
+            match name {
+                "grad-nan" | "grad-inf" => {
+                    let (step, layer) = match arg.split_once('.') {
+                        Some((s, l)) => {
+                            (parse_num(s, "step")?, parse_num(l, "layer")?)
+                        }
+                        None => (parse_num(arg, "step")?, usize::MAX),
+                    };
+                    plan.grad_step = Some(step);
+                    plan.grad_layer = layer;
+                    plan.grad_inf = name == "grad-inf";
+                }
+                "ckpt-tear" => plan.tear_at = Some(parse_num(arg, "byte offset")?),
+                "worker-fail" => {
+                    let (s, l) = arg.split_once('.').with_context(|| {
+                        format!("fault spec: worker-fail wants STEP.LANE, got {arg:?}")
+                    })?;
+                    plan.worker_fail =
+                        Some((parse_num(s, "step")?, parse_num(l, "lane")?));
+                }
+                "seed" => plan.seed = parse_num(arg, "seed")? as u64,
+                _ => bail!("fault spec: unknown directive {name:?} in {part:?}"),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Plan from `FFT_SUBSPACE_FAULT`, or the empty plan if unset.
+    pub fn from_env() -> Result<Self> {
+        match std::env::var("FFT_SUBSPACE_FAULT") {
+            Ok(spec) => Self::parse(&spec),
+            Err(_) => Ok(Self::default()),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.grad_step.is_none()
+            && self.tear_at.is_none()
+            && self.worker_fail.is_none()
+    }
+}
+
+/// Stream constant separating the injector's RNG from data/init streams.
+const FAULT_STREAM: u64 = 0xfa017;
+
+/// Runtime injector: a plan plus one-shot latches. Shared by reference
+/// between the trainer and its worker closures (all methods take `&self`).
+pub struct FaultInjector {
+    plan: FaultPlan,
+    grad_fired: AtomicBool,
+    worker_fired: AtomicBool,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan) -> Self {
+        Self {
+            plan,
+            grad_fired: AtomicBool::new(false),
+            worker_fired: AtomicBool::new(false),
+        }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// If the plan poisons `step`'s gradient and hasn't fired yet, write
+    /// NaN/+Inf into one seeded element and return the poison's name.
+    /// Deterministic: the element is chosen by a fresh `Pcg64` from the
+    /// plan seed, independent of call history.
+    pub fn corrupt_grads(
+        &self,
+        step: usize,
+        grads: &mut [Matrix],
+    ) -> Option<&'static str> {
+        if self.plan.grad_step != Some(step) || grads.is_empty() {
+            return None;
+        }
+        if self.grad_fired.swap(true, Ordering::SeqCst) {
+            return None;
+        }
+        let mut rng = Pcg64::new(self.plan.seed, FAULT_STREAM);
+        let layer = if self.plan.grad_layer == usize::MAX {
+            rng.usize_below(grads.len())
+        } else {
+            self.plan.grad_layer.min(grads.len() - 1)
+        };
+        let g = &mut grads[layer];
+        let at = rng.usize_below(g.data.len().max(1));
+        let (poison, name) = if self.plan.grad_inf {
+            (f32::INFINITY, "grad-inf")
+        } else {
+            (f32::NAN, "grad-nan")
+        };
+        g.data[at] = poison;
+        Some(name)
+    }
+
+    /// Panic once if the plan fails worker `lane` at `step`. Called from
+    /// inside the pool closure so the `WorkerSet` retry path sees it as a
+    /// real lane failure.
+    pub fn maybe_fail_worker(&self, step: usize, lane: usize) {
+        if self.plan.worker_fail == Some((step, lane))
+            && !self.worker_fired.swap(true, Ordering::SeqCst)
+        {
+            panic!("injected fault: worker lane {lane} failed at step {step}");
+        }
+    }
+
+    /// Arm the global checkpoint-tear latch from this plan (no-op if the
+    /// plan has no tear). One-shot overall: combined with the destructive
+    /// read in `take_checkpoint_tear`, only the first write after arming
+    /// tears.
+    pub fn arm_checkpoint_tear(&self) {
+        if let Some(at) = self.plan.tear_at {
+            arm_checkpoint_tear(at);
+        }
+    }
+}
+
+/// `usize::MAX` = disarmed. A global latch (not a field on the injector)
+/// so `checkpoint::write_atomic` can consult it without its signature
+/// carrying test plumbing.
+static TEAR_AT: AtomicUsize = AtomicUsize::new(usize::MAX);
+
+/// Arm the next checkpoint write to stop after `at` bytes (no rename).
+pub fn arm_checkpoint_tear(at: usize) {
+    TEAR_AT.store(at, Ordering::SeqCst);
+}
+
+/// Destructive read of the tear latch: returns the armed byte count and
+/// disarms. Called by `checkpoint::write_atomic` before each write.
+pub fn take_checkpoint_tear() -> Option<usize> {
+    let at = TEAR_AT.swap(usize::MAX, Ordering::SeqCst);
+    (at != usize::MAX).then_some(at)
+}
+
+/// The latch is process-global, so in-crate tests that arm it serialize
+/// on this lock (unit tests share one process and run concurrently).
+/// Poison-tolerant like the SIMD override lock.
+#[cfg(test)]
+pub(crate) static TEAR_TEST_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_spec() {
+        let plan =
+            FaultPlan::parse("grad-nan@7.2, ckpt-tear@64,worker-fail@3.1,seed@9")
+                .unwrap();
+        assert_eq!(plan.grad_step, Some(7));
+        assert_eq!(plan.grad_layer, 2);
+        assert!(!plan.grad_inf);
+        assert_eq!(plan.tear_at, Some(64));
+        assert_eq!(plan.worker_fail, Some((3, 1)));
+        assert_eq!(plan.seed, 9);
+    }
+
+    #[test]
+    fn parses_inf_without_layer_and_empty() {
+        let plan = FaultPlan::parse("grad-inf@5").unwrap();
+        assert_eq!(plan.grad_step, Some(5));
+        assert_eq!(plan.grad_layer, usize::MAX);
+        assert!(plan.grad_inf);
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse("  ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in ["grad-nan", "grad-nan@x", "worker-fail@3", "bogus@1"] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad:?} should fail");
+        }
+    }
+
+    #[test]
+    fn grad_corruption_is_one_shot_and_deterministic() {
+        let plan = FaultPlan::parse("grad-nan@2.0,seed@5").unwrap();
+        let mk = || vec![Matrix::zeros(4, 4), Matrix::zeros(3, 3)];
+
+        let inj_a = FaultInjector::new(plan.clone());
+        let mut g_a = mk();
+        assert_eq!(inj_a.corrupt_grads(1, &mut g_a), None); // wrong step
+        assert_eq!(inj_a.corrupt_grads(2, &mut g_a), Some("grad-nan"));
+        let poisoned: Vec<usize> = g_a[0]
+            .data
+            .iter()
+            .enumerate()
+            .filter(|(_, x)| x.is_nan())
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(poisoned.len(), 1);
+        assert!(g_a[1].data.iter().all(|x| x.is_finite()));
+        // one-shot: the replayed step is clean
+        let mut g_b = mk();
+        assert_eq!(inj_a.corrupt_grads(2, &mut g_b), None);
+        assert!(g_b[0].data.iter().all(|x| x.is_finite()));
+
+        // a fresh injector with the same plan poisons the same element
+        let inj_b = FaultInjector::new(plan);
+        let mut g_c = mk();
+        inj_b.corrupt_grads(2, &mut g_c);
+        assert!(g_c[0].data[poisoned[0]].is_nan());
+    }
+
+    #[test]
+    fn tear_latch_is_destructive() {
+        let _guard =
+            TEAR_TEST_LOCK.lock().unwrap_or_else(|poison| poison.into_inner());
+        arm_checkpoint_tear(17);
+        assert_eq!(take_checkpoint_tear(), Some(17));
+        assert_eq!(take_checkpoint_tear(), None);
+    }
+}

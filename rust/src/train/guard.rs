@@ -1,0 +1,217 @@
+//! Numerical-health guard for the training loop.
+//!
+//! Each step, [`StepGuard::check`] scans every gradient with the
+//! allocation-free SIMD finite-scan kernel ([`crate::tensor::all_finite`])
+//! and validates the step loss — both against non-finites and, optionally,
+//! against a loss *spike* relative to a smoothed history. The verdict
+//! carries no heap data (layer identity is an index, not a name), so a
+//! guarded steady-state step stays allocation-free — pinned by
+//! `tests/alloc_steady_state.rs`.
+//!
+//! The policy decides what the trainer does with a trip:
+//!
+//! * [`GuardPolicy::Off`]      — no scanning at all (zero overhead).
+//! * [`GuardPolicy::Skip`]     — drop the poisoned step: no optimizer
+//!   update, no state mutation, training continues at the next batch.
+//! * [`GuardPolicy::Rollback`] — restore the latest good in-run snapshot
+//!   and replay from there (see `train::trainer`).
+//!
+//! The loss EMA only absorbs *healthy* losses, so one spike can't drag the
+//! baseline up and mask a second spike; on rollback the trainer calls
+//! [`StepGuard::reset`] because the replayed window re-reports its losses.
+
+use crate::tensor::{all_finite, Matrix};
+
+/// What the trainer does when the guard trips.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GuardPolicy {
+    /// No health checks (the pre-guard behavior).
+    Off,
+    /// Drop the step: optimizer state and params stay untouched.
+    Skip,
+    /// Restore the latest good checkpoint and replay.
+    Rollback,
+}
+
+impl GuardPolicy {
+    /// Parse a `guard=` config value.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "off" => Some(Self::Off),
+            "skip" => Some(Self::Skip),
+            "rollback" => Some(Self::Rollback),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Off => "off",
+            Self::Skip => "skip",
+            Self::Rollback => "rollback",
+        }
+    }
+}
+
+/// Outcome of one health check. `Healthy` is the hot-path answer; the trip
+/// variants identify the first failure found (gradients are scanned in
+/// layer order, loss after gradients, spike last).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum GuardVerdict {
+    Healthy,
+    /// Gradient of layer `layer` (index into the meta/grad slices) holds a
+    /// NaN or ±Inf.
+    NonFiniteGrad { layer: usize },
+    /// The reduced step loss itself is NaN or ±Inf.
+    NonFiniteLoss,
+    /// Loss is finite but exceeds `limit` = threshold × EMA(loss).
+    LossSpike { loss: f64, limit: f64 },
+}
+
+impl GuardVerdict {
+    pub fn is_healthy(&self) -> bool {
+        matches!(self, Self::Healthy)
+    }
+
+    /// Static-str reason tag for metrics/JSONL (no allocation).
+    pub fn reason(&self) -> &'static str {
+        match self {
+            Self::Healthy => "healthy",
+            Self::NonFiniteGrad { .. } => "non-finite-grad",
+            Self::NonFiniteLoss => "non-finite-loss",
+            Self::LossSpike { .. } => "loss-spike",
+        }
+    }
+}
+
+/// EMA smoothing for the spike baseline. Warm enough after a handful of
+/// steps, slow enough that a genuine loss plateau shift doesn't trip.
+const EMA_BETA: f64 = 0.9;
+
+/// Per-run guard state: policy, spike threshold, smoothed loss history.
+pub struct StepGuard {
+    policy: GuardPolicy,
+    /// Spike trip point as a multiple of the loss EMA; `0.0` disables
+    /// spike detection (non-finite checks still run).
+    threshold: f32,
+    ema_loss: Option<f64>,
+}
+
+impl StepGuard {
+    pub fn new(policy: GuardPolicy, threshold: f32) -> Self {
+        Self { policy, threshold, ema_loss: None }
+    }
+
+    pub fn policy(&self) -> GuardPolicy {
+        self.policy
+    }
+
+    /// Check one step's reduced loss and post-clip gradients. Allocation-
+    /// free. With `GuardPolicy::Off` this is a single branch — no scan.
+    pub fn check(&mut self, loss: f64, grads: &[Matrix]) -> GuardVerdict {
+        if self.policy == GuardPolicy::Off {
+            return GuardVerdict::Healthy;
+        }
+        for (i, g) in grads.iter().enumerate() {
+            if !all_finite(&g.data) {
+                return GuardVerdict::NonFiniteGrad { layer: i };
+            }
+        }
+        if !loss.is_finite() {
+            return GuardVerdict::NonFiniteLoss;
+        }
+        if self.threshold > 0.0 {
+            if let Some(ema) = self.ema_loss {
+                let limit = self.threshold as f64 * ema;
+                if loss > limit {
+                    return GuardVerdict::LossSpike { loss, limit };
+                }
+            }
+        }
+        // Only healthy losses feed the baseline — a spike that slipped
+        // under the limit still moves it, but a tripped step never does.
+        self.ema_loss = Some(match self.ema_loss {
+            Some(ema) => EMA_BETA * ema + (1.0 - EMA_BETA) * loss,
+            None => loss,
+        });
+        GuardVerdict::Healthy
+    }
+
+    /// Forget the loss history (called after a rollback: the replayed
+    /// window re-reports its losses from the snapshot point).
+    pub fn reset(&mut self) {
+        self.ema_loss = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finite_grads() -> Vec<Matrix> {
+        let mut g = Matrix::zeros(3, 4);
+        for (i, x) in g.data.iter_mut().enumerate() {
+            *x = 0.01 * i as f32 - 0.05;
+        }
+        vec![g, Matrix::zeros(2, 2)]
+    }
+
+    #[test]
+    fn off_never_trips() {
+        let mut guard = StepGuard::new(GuardPolicy::Off, 2.0);
+        let mut grads = finite_grads();
+        grads[1].data[0] = f32::NAN;
+        assert_eq!(guard.check(f64::NAN, &grads), GuardVerdict::Healthy);
+    }
+
+    #[test]
+    fn reports_first_nonfinite_layer() {
+        let mut guard = StepGuard::new(GuardPolicy::Skip, 0.0);
+        let mut grads = finite_grads();
+        grads[1].data[3] = f32::NEG_INFINITY;
+        assert_eq!(
+            guard.check(1.0, &grads),
+            GuardVerdict::NonFiniteGrad { layer: 1 }
+        );
+        grads[0].data[7] = f32::NAN;
+        assert_eq!(
+            guard.check(1.0, &grads),
+            GuardVerdict::NonFiniteGrad { layer: 0 }
+        );
+    }
+
+    #[test]
+    fn nonfinite_loss_trips_after_grads_pass() {
+        let mut guard = StepGuard::new(GuardPolicy::Rollback, 0.0);
+        assert_eq!(
+            guard.check(f64::INFINITY, &finite_grads()),
+            GuardVerdict::NonFiniteLoss
+        );
+    }
+
+    #[test]
+    fn spike_detection_needs_warm_ema_and_threshold() {
+        let grads = finite_grads();
+        // threshold 0 → spikes ignored
+        let mut off = StepGuard::new(GuardPolicy::Skip, 0.0);
+        assert!(off.check(1.0, &grads).is_healthy());
+        assert!(off.check(1e9, &grads).is_healthy());
+
+        let mut guard = StepGuard::new(GuardPolicy::Skip, 2.0);
+        // first loss seeds the EMA — can't spike with no baseline
+        assert!(guard.check(4.0, &grads).is_healthy());
+        // within 2× of the baseline
+        assert!(guard.check(6.0, &grads).is_healthy());
+        // way above 2× EMA → trip, and the EMA must NOT absorb it
+        let verdict = guard.check(100.0, &grads);
+        assert!(matches!(verdict, GuardVerdict::LossSpike { .. }));
+        // baseline unchanged by the trip: same spike trips again
+        assert!(matches!(
+            guard.check(100.0, &grads),
+            GuardVerdict::LossSpike { .. }
+        ));
+        // reset clears history: the next loss re-seeds instead of tripping
+        guard.reset();
+        assert!(guard.check(100.0, &grads).is_healthy());
+    }
+}

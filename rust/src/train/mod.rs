@@ -5,10 +5,14 @@
 pub mod aot_optim;
 pub mod checkpoint;
 pub mod config;
+pub mod fault;
 pub mod finetune;
+pub mod guard;
 pub mod schedule;
 pub mod trainer;
 
 pub use config::TrainConfig;
+pub use fault::{FaultInjector, FaultPlan};
+pub use guard::{GuardPolicy, GuardVerdict, StepGuard};
 pub use schedule::LrSchedule;
 pub use trainer::{RunSummary, Trainer};

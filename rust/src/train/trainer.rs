@@ -13,6 +13,8 @@ use crate::runtime::{Executable, Manifest, ModelSpec, Runtime};
 use crate::runtime::client::Value;
 use crate::tensor::Matrix;
 use crate::train::aot_optim::maybe_wrap_aot;
+use crate::train::fault::{FaultInjector, FaultPlan};
+use crate::train::guard::{GuardPolicy, StepGuard};
 use crate::train::{checkpoint, LrSchedule, TrainConfig};
 use crate::util::csv::JsonlWriter;
 use crate::util::json::{num, obj, s};
@@ -166,6 +168,54 @@ impl Trainer {
             println!("resumed {} at step {start_step}/{}", opt.name(), cfg.steps);
         }
 
+        // --- fault tolerance: health guard, in-run snapshots, injection --
+        let mut guard = StepGuard::new(cfg.guard, cfg.guard_threshold);
+        let fault_plan = match &cfg.fault {
+            Some(spec) => FaultPlan::parse(spec)?,
+            None => FaultPlan::from_env()?,
+        };
+        let injector = FaultInjector::new(fault_plan);
+        let rollback = cfg.guard == GuardPolicy::Rollback;
+        let rotation = if cfg.checkpoint_interval > 0 || rollback {
+            let dir = cfg
+                .checkpoint_dir
+                .clone()
+                .map(PathBuf::from)
+                .unwrap_or_else(|| run_dir.join("checkpoints"));
+            Some(checkpoint::CheckpointRotation::new(dir, cfg.checkpoint_keep))
+        } else {
+            None
+        };
+        if let Some(rot) = &rotation {
+            // snapshots need resumable optimizer state; discover that now,
+            // not at the first mid-run save
+            let Some(opt_state) = opt.save_state() else {
+                anyhow::bail!(
+                    "checkpoint-interval/guard=rollback need an optimizer \
+                     with state checkpointing, {} has none",
+                    opt.name()
+                );
+            };
+            if rollback {
+                // guarantee a restore point exists before the first step —
+                // a trip at step start_step must have somewhere to go
+                let state = checkpoint::TrainState {
+                    step: start_step as u64,
+                    optimizer: opt.name().to_string(),
+                    opt_state,
+                };
+                rot.save(start_step as u64, &self.params, &state)
+                    .context("writing the initial rollback snapshot")?;
+            }
+        }
+        // arm the injected checkpoint tear only now: the initial rollback
+        // snapshot above must land, the tear targets a mid-run save
+        injector.arm_checkpoint_tear();
+        // a genuinely unhealthy model trips on every replay — bound the
+        // rollback→replay cycles instead of looping forever
+        const MAX_ROLLBACKS: usize = 8;
+        let mut rollbacks = 0usize;
+
         let timer = Timer::start();
         let mut phases = PhaseTimes::new();
         let mut tail_losses: Vec<f64> = Vec::new();
@@ -173,7 +223,8 @@ impl Trainer {
         let mut full_bytes = 0u64;
         let mut final_loss = f64::NAN;
 
-        for step in start_step..cfg.steps {
+        let mut step = start_step;
+        while step < cfg.steps {
             // --- per-worker batch staging on real threads ----------------
             let bpw = cfg.batch_per_worker;
             let batches: Vec<(Vec<i32>, Vec<usize>)> = phases.time("batch", || {
@@ -181,7 +232,10 @@ impl Trainer {
                     (0..cfg.workers).map(|_| None).collect();
                 let mut pairs: Vec<_> =
                     workers.iter_mut().zip(slots.iter_mut()).collect();
-                worker_set.run_mut(&mut pairs, |_, (wl, slot)| {
+                worker_set.run_mut(&mut pairs, |w, (wl, slot)| {
+                    // injected lane failure fires *before* the loader draws,
+                    // so the bounded retry replays the exact same batch
+                    injector.maybe_fail_worker(step, w);
                     **slot = Some(wl.next_batch(bpw));
                 });
                 slots.into_iter().map(|s| s.expect("staged batch")).collect()
@@ -205,7 +259,6 @@ impl Trainer {
                 worker_grads.push(outs.values.into_iter().skip(1).collect());
             }
             step_loss /= cfg.workers as f64;
-            final_loss = step_loss;
 
             // --- ring all-reduce per parameter --------------------------
             let grads: Vec<Matrix> = phases.time("allreduce", || {
@@ -222,8 +275,83 @@ impl Trainer {
                 reduced
             });
 
+            // --- deterministic fault injection (post-reduce, pre-clip) --
+            let mut grads = grads;
+            if let Some(kind) = injector.corrupt_grads(step, &mut grads) {
+                eprintln!("fault injection: {kind} planted in step {step}'s gradient");
+            }
+
             // --- global gradient clipping -------------------------------
             let grads = clip_grads(grads, cfg.grad_clip);
+
+            // --- numerical-health guard ---------------------------------
+            // Checked after clipping (what the optimizer would consume),
+            // before any state mutation — a tripped step leaves params and
+            // optimizer state exactly as they were.
+            let verdict = guard.check(step_loss, &grads);
+            if !verdict.is_healthy() {
+                // the regular loss record is skipped on tripped steps (a
+                // NaN would poison the JSONL); this event replaces it
+                metrics.record(&obj(vec![
+                    ("step", num(step as f64)),
+                    ("guard", s(verdict.reason())),
+                    ("policy", s(guard.policy().name())),
+                ]))?;
+                if rollback {
+                    rollbacks += 1;
+                    anyhow::ensure!(
+                        rollbacks <= MAX_ROLLBACKS,
+                        "guard tripped {rollbacks} times under rollback \
+                         ({} at step {step}) — the model is unhealthy, not \
+                         the step; aborting",
+                        verdict.reason()
+                    );
+                    let rot = rotation.as_ref().expect("rollback implies rotation");
+                    let Some((_, snap_path)) = rot.latest()? else {
+                        anyhow::bail!(
+                            "guard tripped at step {step} but no rollback \
+                             snapshot exists in {:?}",
+                            rot.dir()
+                        );
+                    };
+                    let ck = checkpoint::load_full(&snap_path).with_context(|| {
+                        format!("restoring rollback snapshot {snap_path:?}")
+                    })?;
+                    let state = ck.state.with_context(|| {
+                        format!("rollback snapshot {snap_path:?} has no state")
+                    })?;
+                    self.params = ck.params;
+                    opt.load_state(&state.opt_state).with_context(|| {
+                        format!("restoring optimizer state from {snap_path:?}")
+                    })?;
+                    let snap_step = state.step as usize;
+                    // fresh loaders fast-forwarded to the snapshot: the
+                    // replayed window consumes the exact batches the
+                    // original pass did (same RNG draws)
+                    workers = (0..cfg.workers)
+                        .map(|w| base_loader.worker(w, cfg.seed))
+                        .collect();
+                    for wl in workers.iter_mut() {
+                        wl.skip_batches(snap_step, cfg.batch_per_worker);
+                    }
+                    guard.reset();
+                    eprintln!(
+                        "guard: {} at step {step} — rolled back to step \
+                         {snap_step} ({snap_path:?})",
+                        verdict.reason()
+                    );
+                    step = snap_step;
+                } else {
+                    // skip: drop the poisoned step on the floor and move on
+                    eprintln!(
+                        "guard: {} at step {step} — step skipped",
+                        verdict.reason()
+                    );
+                    step += 1;
+                }
+                continue;
+            }
+            final_loss = step_loss;
 
             // --- optimizer step (ZeRO owner-computes + broadcast model) --
             let lr = sched.at(step);
@@ -233,6 +361,34 @@ impl Trainer {
             let zstats = zero.account_step(&self.metas, opt.as_ref(), &mut comm);
             update_bytes += zstats.update_broadcast_bytes;
             full_bytes += zstats.full_broadcast_bytes;
+
+            // --- periodic atomic snapshot (completed-steps semantics) ----
+            if let Some(rot) = &rotation {
+                let completed = step + 1;
+                if cfg.checkpoint_interval > 0
+                    && completed % cfg.checkpoint_interval == 0
+                {
+                    // save_state is Some: checked at rotation setup
+                    if let Some(opt_state) = opt.save_state() {
+                        let state = checkpoint::TrainState {
+                            step: completed as u64,
+                            optimizer: opt.name().to_string(),
+                            opt_state,
+                        };
+                        if let Err(e) =
+                            rot.save(completed as u64, &self.params, &state)
+                        {
+                            // a failed (torn) snapshot must not kill the
+                            // run: the previous good snapshot is intact
+                            eprintln!(
+                                "warning: snapshot at step {completed} \
+                                 failed ({e:#}) — continuing on the \
+                                 previous snapshot"
+                            );
+                        }
+                    }
+                }
+            }
 
             if step < 5 || step % 10 == 0 || step + 1 == cfg.steps {
                 let mut rec = vec![
@@ -275,6 +431,8 @@ impl Trainer {
                     ("wall_secs", num(timer.elapsed_secs())),
                 ]))?;
             }
+
+            step += 1;
         }
 
         let (val_loss, val_ppl) =

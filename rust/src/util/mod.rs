@@ -5,6 +5,7 @@
 pub mod rng;
 pub mod json;
 pub mod codec;
+pub mod crc;
 pub mod csv;
 pub mod timer;
 pub mod human;

@@ -19,6 +19,9 @@
 //! FFT scratch (warmed during the uncounted warmup window). The SIMD
 //! dispatch layer is exercised implicitly (every kernel routes through it)
 //! and is allocation-free by construction: one atomic load, no boxing.
+//! Every counted step also runs the numerical-health guard
+//! (`StepGuard::check` → the `all_finite` SIMD scan over all gradients),
+//! pinning that a guarded training step costs zero allocations too.
 //!
 //! The sweep also runs under two state dtypes (`f32` and `bf16` — plus
 //! whatever `FFT_SUBSPACE_STATE_DTYPE` adds in `make test-matrix`): non-f32
@@ -37,6 +40,7 @@ use fft_subspace::optim::{
     build_optimizer, LayerMeta, Optimizer, OptimizerConfig, OptimizerKind, ParamKind,
 };
 use fft_subspace::tensor::{Matrix, StateDtype};
+use fft_subspace::train::{GuardPolicy, StepGuard};
 use fft_subspace::util::Pcg64;
 
 struct CountingAlloc;
@@ -136,17 +140,24 @@ fn steady_state_steps_are_allocation_free() {
                     .iter()
                     .map(|m| Matrix::zeros(m.rows, m.cols))
                     .collect();
+                // The numerical-health guard rides the hot path when
+                // enabled (`guard=skip|rollback`), so a guarded step must
+                // be allocation-free too: the finite scan is a pure SIMD
+                // reduction and the EMA update is two scalar ops.
+                let mut guard = StepGuard::new(GuardPolicy::Skip, 2.0);
 
                 // Warmup: several full refresh cycles fill the per-shard
                 // workspace pools, the shared plan caches and the per-plan
                 // scratch pools up to their parallel high-water mark.
                 for _ in 0..12 {
+                    assert!(guard.check(1.0, &grads).is_healthy());
                     opt.step(&mut params, &grads, 1e-3);
                 }
 
                 ALLOC_CALLS.store(0, Ordering::SeqCst);
                 ENABLED.store(true, Ordering::SeqCst);
                 for _ in 0..8 {
+                    assert!(guard.check(1.0, &grads).is_healthy());
                     opt.step(&mut params, &grads, 1e-3);
                 }
                 ENABLED.store(false, Ordering::SeqCst);

@@ -161,6 +161,39 @@ fn column_norms_and_selection_bit_identical() {
 }
 
 #[test]
+fn all_finite_scan_bit_identical_over_odd_lengths() {
+    use fft_subspace::tensor::all_finite;
+    // The guard's finite scan is a pure bit-ops reduction, so scalar and
+    // vector backends must agree exactly — including poison planted in the
+    // vector body, on a lane boundary, and in the scalar tail.
+    let mut rng = Pcg64::seed(14);
+    for len in [0usize, 1, 5, 7, 8, 9, 15, 16, 17, 31, 64, 70] {
+        let clean: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
+        let (s, v) = scalar_vs_auto(|| all_finite(&clean));
+        assert_eq!(s, v, "clean len={len}");
+        assert!(s, "clean data must scan finite (len={len})");
+        for poison in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            for at in [0usize, len.saturating_sub(1), len / 2, len.saturating_sub(3)] {
+                if len == 0 {
+                    continue;
+                }
+                let mut bad = clean.clone();
+                bad[at.min(len - 1)] = poison;
+                let (s, v) = scalar_vs_auto(|| all_finite(&bad));
+                assert_eq!(s, v, "len={len} poison={poison} at={at}");
+                assert!(!s, "poison missed (len={len} at={at})");
+            }
+        }
+        // subnormals, ±0, MAX are finite — the exponent trick must not
+        // misclassify the edges of the finite range
+        let edges = [f32::MIN_POSITIVE / 4.0, -0.0, 0.0, f32::MAX, f32::MIN];
+        let (s, v) = scalar_vs_auto(|| all_finite(&edges));
+        assert_eq!(s, v, "edge values");
+        assert!(s, "finite edge values misclassified");
+    }
+}
+
+#[test]
 fn fused_adam_kernels_bit_identical_over_odd_lengths() {
     let mut rng = Pcg64::seed(5);
     for len in [0usize, 1, 5, 7, 8, 9, 15, 16, 23, 64, 70] {
