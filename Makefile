@@ -7,7 +7,7 @@
 CARGO ?= cargo
 RUST_DIR := rust
 
-.PHONY: build test test-faults test-matrix bench bench-proj bench-par bench-simd bench-makhoul bench-optim bench-mem artifacts clean
+.PHONY: build test test-faults test-matrix bench bench-proj bench-par bench-simd bench-makhoul bench-optim bench-mem bench-obs artifacts clean
 
 build:
 	cd $(RUST_DIR) && $(CARGO) build --release
@@ -30,6 +30,9 @@ test-faults:
 # The third loop sweeps the fault-injection axis: FFT_SUBSPACE_FAULT picks
 # which deterministic fault the recovery suite injects (NaN vs +Inf, seeded
 # vs pinned layer) — every cell must still converge to the fault-free bits.
+# The fourth loop sweeps the observability axis: FFT_SUBSPACE_OBS at the
+# extremes (off / trace) over the determinism + zero-allocation suites —
+# telemetry must never change the bits or cost a steady-state allocation.
 test-matrix:
 	cd $(RUST_DIR) && for s in 0 1; do for t in 1 4; do \
 		echo "== FFT_SUBSPACE_SIMD=$$s FFT_SUBSPACE_THREADS=$$t =="; \
@@ -45,9 +48,14 @@ test-matrix:
 		echo "== FFT_SUBSPACE_FAULT=$$f (fault recovery) =="; \
 		FFT_SUBSPACE_FAULT=$$f $(CARGO) test -q --test fault_recovery || exit 1; \
 	done
+	cd $(RUST_DIR) && for o in off trace; do \
+		echo "== FFT_SUBSPACE_OBS=$$o (observability) =="; \
+		FFT_SUBSPACE_OBS=$$o $(CARGO) test -q \
+			--test obs_determinism --test alloc_steady_state || exit 1; \
+	done
 
 # Full microbench battery (each bench is a plain binary: harness = false).
-bench: bench-proj bench-par bench-simd bench-makhoul bench-optim bench-mem
+bench: bench-proj bench-par bench-simd bench-makhoul bench-optim bench-mem bench-obs
 
 # Projection/subspace-step bench; writes rust/BENCH_PROJ.json
 # (override the path with BENCH_PROJ_OUT=...). Includes the `threads`
@@ -81,6 +89,12 @@ bench-optim:
 # (override with BENCH_MEM_OUT=...). Deterministic byte counts, no timing.
 bench-mem:
 	cd $(RUST_DIR) && $(CARGO) bench --bench bench_mem
+
+# Telemetry overhead sweep (per-step time under obs={off,counters,trace},
+# 1 vs 4 lanes; the off→counters delta must stay within the ≤1% budget);
+# writes rust/BENCH_OBS.json (override with BENCH_OBS_OUT=...).
+bench-obs:
+	cd $(RUST_DIR) && $(CARGO) bench --bench bench_obs
 
 # Lower the JAX/Pallas graphs to HLO text + manifest (Layer 1+2 → Layer 3
 # contract). Requires jax; see python/compile/aot.py --help for presets.

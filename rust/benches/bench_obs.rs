@@ -1,0 +1,118 @@
+//! Telemetry overhead sweep — the PR-7 "obs=off costs ≤1%" budget as a
+//! tracked artifact.
+//!
+//! Times steady-state engine steps (DctAdamW, the paper's method) under
+//! each observability tier, sequential and parallel, and reports per-step
+//! time plus the overhead ratio against the same configuration with
+//! telemetry compiled to its disabled fast path. Under `trace` the timed
+//! loop also drains the event rings every step, exactly like the trainer,
+//! so the number is the real end-to-end cost and not just the span pushes.
+//!
+//! Emits `BENCH_OBS.json` (override with `BENCH_OBS_OUT=path`) via
+//! `make bench-obs`. Wall-clock numbers vary by machine; the *ratios* are
+//! the tracked quantity.
+
+use std::time::Instant;
+
+use fft_subspace::obs::{self, ObsTier};
+use fft_subspace::optim::{
+    build_optimizer, LayerMeta, Optimizer, OptimizerConfig, OptimizerKind, ParamKind,
+};
+use fft_subspace::tensor::Matrix;
+use fft_subspace::util::json::{num, obj, s, Json};
+use fft_subspace::util::Pcg64;
+
+/// Small transformer-ish zoo: enough layers that the parallel path has
+/// real chunks, small enough that a tier sweep finishes in seconds.
+fn model(d: usize, blocks: usize) -> Vec<LayerMeta> {
+    let mut metas = vec![LayerMeta::new("embed", 4 * d, d, ParamKind::Embed)];
+    for l in 0..blocks {
+        for w in ["wq", "wk", "wv", "wo"] {
+            metas.push(LayerMeta::new(&format!("b{l}.{w}"), d, d, ParamKind::Linear));
+        }
+        metas.push(LayerMeta::new(&format!("b{l}.norm"), 1, d, ParamKind::Norm));
+    }
+    metas
+}
+
+fn main() {
+    let metas = model(96, 4);
+    let mut rng = Pcg64::seed(3);
+    let grads: Vec<Matrix> = metas
+        .iter()
+        .map(|m| Matrix::randn(m.rows, m.cols, 0.1, &mut rng))
+        .collect();
+    let (warmup, timed) = (20usize, 120usize);
+
+    println!(
+        "== bench_obs (per-step telemetry overhead, DctAdamW rank 16, \
+         {} layers, {timed} timed steps) ==\n",
+        metas.len()
+    );
+
+    let mut records: Vec<Json> = Vec::new();
+    for threads in [1usize, 4] {
+        let mut off_ns = f64::NAN;
+        for tier in [ObsTier::Off, ObsTier::Counters, ObsTier::Trace] {
+            obs::set_tier(tier);
+            obs::set_sample(1);
+            obs::counters().reset();
+            let cfg = OptimizerConfig {
+                rank: 16,
+                threads: Some(threads),
+                update_interval: 4,
+                ..Default::default()
+            };
+            let mut opt = build_optimizer(&OptimizerKind::DctAdamW, &metas, &cfg);
+            let mut params: Vec<Matrix> =
+                metas.iter().map(|m| Matrix::zeros(m.rows, m.cols)).collect();
+            let mut events: Vec<obs::Event> = Vec::new();
+            for step in 0..warmup {
+                opt.step(&mut params, &grads, 1e-3);
+                if tier == ObsTier::Trace {
+                    events.clear();
+                    opt.drain_events(&mut events);
+                }
+                let _ = step;
+            }
+            let t0 = Instant::now();
+            for _ in 0..timed {
+                opt.step(&mut params, &grads, 1e-3);
+                if tier == ObsTier::Trace {
+                    events.clear();
+                    opt.drain_events(&mut events);
+                }
+            }
+            let ns_per_step = t0.elapsed().as_nanos() as f64 / timed as f64;
+            if tier == ObsTier::Off {
+                off_ns = ns_per_step;
+            }
+            let overhead = ns_per_step / off_ns - 1.0;
+            println!(
+                "  threads={threads} obs={:<8} {:>12.0} ns/step  \
+                 ({:+.2}% vs off)",
+                tier.name(),
+                ns_per_step,
+                overhead * 100.0
+            );
+            records.push(obj(vec![
+                ("optimizer", s("dct_adamw")),
+                ("threads", num(threads as f64)),
+                ("obs", s(tier.name())),
+                ("timed_steps", num(timed as f64)),
+                ("ns_per_step", num(ns_per_step)),
+                ("steps_per_sec", num(1e9 / ns_per_step)),
+                ("overhead_vs_off", num(overhead)),
+            ]));
+        }
+        println!();
+    }
+    obs::set_tier(ObsTier::Off);
+
+    let out = std::env::var("BENCH_OBS_OUT").unwrap_or_else(|_| "BENCH_OBS.json".into());
+    let doc = obj(vec![("version", num(1.0)), ("records", Json::Arr(records))]);
+    match std::fs::write(&out, doc.to_string()) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("failed to write {out}: {e}"),
+    }
+}

@@ -186,10 +186,15 @@ impl Communicator {
         self.stats.calls += 1;
     }
 
+    /// Byte/time accounting runs on the calling thread in ring order and
+    /// depends only on data sizes — so the `obs::allreduce_bytes` mirror
+    /// is identical for any pool size (pinned in
+    /// `tests/obs_determinism.rs`).
     fn account_ar(&mut self, bytes: u64) {
         self.stats.all_reduce_bytes += bytes;
         self.stats.hops += 1;
         self.stats.modeled_secs += self.model.time_secs(1, bytes);
+        crate::obs::count_allreduce_bytes(bytes);
     }
 }
 

@@ -40,6 +40,7 @@ fn with_retry(lane: usize, mut attempt: impl FnMut()) {
         match catch_unwind(AssertUnwindSafe(&mut attempt)) {
             Ok(()) => return,
             Err(cause) => {
+                crate::obs::count_worker_retry();
                 let msg = cause
                     .downcast_ref::<String>()
                     .map(String::as_str)

@@ -43,6 +43,7 @@ static DCT2_CACHE: Mutex<BTreeMap<usize, Arc<Matrix>>> = Mutex::new(BTreeMap::ne
 
 pub fn cached_dct2_matrix(n: usize) -> Arc<Matrix> {
     let mut cache = DCT2_CACHE.lock().unwrap();
+    crate::obs::count_dct2_cache(cache.contains_key(&n));
     cache
         .entry(n)
         .or_insert_with(|| Arc::new(dct2_matrix(n)))

@@ -389,6 +389,7 @@ static PLAN_CACHE: Mutex<BTreeMap<usize, Arc<MakhoulPlan>>> = Mutex::new(BTreeMa
 
 pub fn cached_plan(n: usize) -> Arc<MakhoulPlan> {
     let mut cache = PLAN_CACHE.lock().unwrap();
+    crate::obs::count_fft_plan(cache.contains_key(&n));
     cache
         .entry(n)
         .or_insert_with(|| Arc::new(MakhoulPlan::new(n)))

@@ -12,6 +12,10 @@
 //!
 //! `makhoul::dct2_rows(G)` is bit-for-bit checked against `G · dct::dct2(C)`
 //! in tests and raced against blocked matmul in `bench_makhoul` (Tables 4–5).
+//!
+//! Both process caches report hit/build counts through `obs`
+//! (`fft_plan_*` / `dct2_cache_*`), so a run can show whether plan reuse
+//! actually happens (it should: hits ≫ builds after the first step).
 
 pub mod complex;
 pub mod dct;

@@ -22,6 +22,7 @@
 #![allow(clippy::needless_range_loop)]
 
 pub mod util;
+pub mod obs;
 pub mod parallel;
 pub mod simd;
 pub mod tensor;

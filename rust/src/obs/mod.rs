@@ -1,0 +1,697 @@
+//! Run-wide telemetry: tiered observability that never touches the math.
+//!
+//! Three tiers, selected once per run (`obs=off|counters|trace`, or the
+//! `FFT_SUBSPACE_OBS` env knob when the config sets none):
+//!
+//! * **off** (default) — every hook site is a single relaxed atomic load
+//!   plus a predictable branch; nothing is recorded.
+//! * **counters** — monotonic process-global [`Counters`] (workspace pool
+//!   hits/misses, FFT plan-cache hits, all-reduce bytes, guard trips,
+//!   fault firings, rollbacks, worker retries) and the per-refresh
+//!   [`SubspaceQuality`] gauges.
+//! * **trace** — everything above plus span timing of every step phase
+//!   into per-lane preallocated [`EventRing`]s, exported as a Chrome-trace
+//!   `trace.json` ([`trace::TraceWriter`]).
+//!
+//! **The two contracts every hook must keep** (see ROADMAP
+//! "Observability"):
+//!
+//! 1. *Strictly read-only.* Telemetry may observe values the step already
+//!    computes; it may never change what is computed. The training
+//!    trajectory is `to_bits`-identical across all three tiers
+//!    (`tests/obs_determinism.rs`).
+//! 2. *Zero steady-state allocation.* Counters are `static` atomics;
+//!    rings are sized at optimizer build time and events are plain-`Copy`
+//!    index writes (`tests/alloc_steady_state.rs` counts steps under
+//!    every tier). A ring that fills between drains *drops* events (and
+//!    counts the drops) rather than growing.
+//!
+//! Determinism across thread counts follows the `ShardedWorkspace` idiom:
+//! ring `k` is bound to chunk `k` of `step_layers_parallel` (not to an OS
+//! thread), and [`RingSet::drain_all`] merges rings in fixed ascending
+//! lane order — so *which events exist* is identical for any lane count
+//! (only the wall-clock timestamps differ, as they must).
+
+pub mod trace;
+
+use std::cell::{Cell, UnsafeCell};
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+// ---------------------------------------------------------------------------
+// Tier selection
+// ---------------------------------------------------------------------------
+
+/// Observability tier. Ordered: `Counters` includes everything `Off`
+/// omits, `Trace` includes everything `Counters` records.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ObsTier {
+    Off = 0,
+    Counters = 1,
+    Trace = 2,
+}
+
+impl ObsTier {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "off" | "0" => ObsTier::Off,
+            "counters" | "1" => ObsTier::Counters,
+            "trace" | "2" => ObsTier::Trace,
+            other => bail!("unknown obs tier {other:?} (off|counters|trace)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ObsTier::Off => "off",
+            ObsTier::Counters => "counters",
+            ObsTier::Trace => "trace",
+        }
+    }
+
+    /// Tier from `FFT_SUBSPACE_OBS`, or `Off` when unset. The trainer
+    /// lets the `obs=` config key win over the environment (same
+    /// precedence as `fault=` vs `FFT_SUBSPACE_FAULT`).
+    pub fn from_env() -> Result<Self> {
+        match std::env::var("FFT_SUBSPACE_OBS") {
+            Ok(s) => Self::parse(&s),
+            Err(_) => Ok(ObsTier::Off),
+        }
+    }
+}
+
+/// Process-global tier. `u8` repr of [`ObsTier`]; relaxed loads are the
+/// whole cost of a disabled hook site.
+static TIER: AtomicU8 = AtomicU8::new(0);
+
+/// Per-layer sample interval for gauges and per-layer trace spans
+/// (`obs-sample=N`: record only on steps where `t % N == 0`). Step-level
+/// trainer phases are always recorded under `trace`.
+static SAMPLE: AtomicU64 = AtomicU64::new(1);
+
+pub fn set_tier(t: ObsTier) {
+    TIER.store(t as u8, Ordering::Relaxed);
+    // Pin the epoch before any hot-path span asks for a timestamp.
+    let _ = now_us();
+}
+
+#[inline]
+pub fn tier() -> ObsTier {
+    match TIER.load(Ordering::Relaxed) {
+        0 => ObsTier::Off,
+        1 => ObsTier::Counters,
+        _ => ObsTier::Trace,
+    }
+}
+
+/// `true` when any telemetry is on (`counters` or `trace`).
+#[inline]
+pub fn enabled() -> bool {
+    TIER.load(Ordering::Relaxed) != 0
+}
+
+/// `true` only under the `trace` tier.
+#[inline]
+pub fn tracing() -> bool {
+    TIER.load(Ordering::Relaxed) == 2
+}
+
+pub fn set_sample(n: u64) {
+    SAMPLE.store(n.max(1), Ordering::Relaxed);
+}
+
+/// Deterministic sampling gate for per-layer records at step `t`.
+#[inline]
+pub fn sample_hit(t: u64) -> bool {
+    t % SAMPLE.load(Ordering::Relaxed) == 0
+}
+
+// ---------------------------------------------------------------------------
+// Timestamps
+// ---------------------------------------------------------------------------
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Microseconds since the process-local trace epoch (first telemetry
+/// touch). `Instant` reads don't allocate, so spans are hot-path safe.
+#[inline]
+pub fn now_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+// ---------------------------------------------------------------------------
+// Counters
+// ---------------------------------------------------------------------------
+
+/// Monotonic subsystem counters. One process-global instance
+/// ([`counters`]); hook sites are free functions so subsystems don't
+/// thread a handle. All increments are gated on [`enabled`].
+#[derive(Debug, Default)]
+pub struct Counters {
+    /// `Workspace` buffer requests served from a pool.
+    pub ws_pool_hits: AtomicU64,
+    /// `Workspace` buffer requests that had to allocate.
+    pub ws_pool_misses: AtomicU64,
+    /// Cumulative bytes allocated by pool misses. Pools never shrink, so
+    /// this is also the workspace high-water mark.
+    pub ws_pool_bytes: AtomicU64,
+    /// `fft::cached_plan` served from the process cache / built fresh.
+    pub fft_plan_hits: AtomicU64,
+    pub fft_plan_builds: AtomicU64,
+    /// `fft::cached_dct2_matrix` served from the process cache / built.
+    pub dct2_cache_hits: AtomicU64,
+    pub dct2_cache_builds: AtomicU64,
+    /// Bytes moved by ring all-reduce (mirrors `CommStats`, which is
+    /// per-communicator; this is the run-wide total).
+    pub allreduce_bytes: AtomicU64,
+    /// `StepGuard` verdicts that were not healthy.
+    pub guard_trips: AtomicU64,
+    /// Injected faults that actually fired.
+    pub fault_firings: AtomicU64,
+    /// Trainer rollback-restore events.
+    pub rollbacks: AtomicU64,
+    /// Worker-lane attempts that failed and were retried.
+    pub worker_retries: AtomicU64,
+}
+
+static COUNTERS: Counters = Counters {
+    ws_pool_hits: AtomicU64::new(0),
+    ws_pool_misses: AtomicU64::new(0),
+    ws_pool_bytes: AtomicU64::new(0),
+    fft_plan_hits: AtomicU64::new(0),
+    fft_plan_builds: AtomicU64::new(0),
+    dct2_cache_hits: AtomicU64::new(0),
+    dct2_cache_builds: AtomicU64::new(0),
+    allreduce_bytes: AtomicU64::new(0),
+    guard_trips: AtomicU64::new(0),
+    fault_firings: AtomicU64::new(0),
+    rollbacks: AtomicU64::new(0),
+    worker_retries: AtomicU64::new(0),
+};
+
+/// The process-global counter block (read-only access; increment through
+/// the `count_*` hooks).
+pub fn counters() -> &'static Counters {
+    &COUNTERS
+}
+
+impl Counters {
+    pub fn snapshot(&self) -> CounterSnapshot {
+        let ld = |a: &AtomicU64| a.load(Ordering::Relaxed);
+        CounterSnapshot {
+            ws_pool_hits: ld(&self.ws_pool_hits),
+            ws_pool_misses: ld(&self.ws_pool_misses),
+            ws_pool_bytes: ld(&self.ws_pool_bytes),
+            fft_plan_hits: ld(&self.fft_plan_hits),
+            fft_plan_builds: ld(&self.fft_plan_builds),
+            dct2_cache_hits: ld(&self.dct2_cache_hits),
+            dct2_cache_builds: ld(&self.dct2_cache_builds),
+            allreduce_bytes: ld(&self.allreduce_bytes),
+            guard_trips: ld(&self.guard_trips),
+            fault_firings: ld(&self.fault_firings),
+            rollbacks: ld(&self.rollbacks),
+            worker_retries: ld(&self.worker_retries),
+        }
+    }
+
+    /// Zero every counter (tests; runs are per-process so the trainer
+    /// resets at run start for a clean per-run dump).
+    pub fn reset(&self) {
+        for (_, a) in self.cells() {
+            a.store(0, Ordering::Relaxed);
+        }
+    }
+
+    fn cells(&self) -> [(&'static str, &AtomicU64); 12] {
+        [
+            ("ws_pool_hits", &self.ws_pool_hits),
+            ("ws_pool_misses", &self.ws_pool_misses),
+            ("ws_pool_bytes", &self.ws_pool_bytes),
+            ("fft_plan_hits", &self.fft_plan_hits),
+            ("fft_plan_builds", &self.fft_plan_builds),
+            ("dct2_cache_hits", &self.dct2_cache_hits),
+            ("dct2_cache_builds", &self.dct2_cache_builds),
+            ("allreduce_bytes", &self.allreduce_bytes),
+            ("guard_trips", &self.guard_trips),
+            ("fault_firings", &self.fault_firings),
+            ("rollbacks", &self.rollbacks),
+            ("worker_retries", &self.worker_retries),
+        ]
+    }
+}
+
+/// Point-in-time copy of [`Counters`] (plain integers, comparable).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CounterSnapshot {
+    pub ws_pool_hits: u64,
+    pub ws_pool_misses: u64,
+    pub ws_pool_bytes: u64,
+    pub fft_plan_hits: u64,
+    pub fft_plan_builds: u64,
+    pub dct2_cache_hits: u64,
+    pub dct2_cache_builds: u64,
+    pub allreduce_bytes: u64,
+    pub guard_trips: u64,
+    pub fault_firings: u64,
+    pub rollbacks: u64,
+    pub worker_retries: u64,
+}
+
+impl CounterSnapshot {
+    /// Stable (name, value) listing — the exporters' single source of
+    /// field names.
+    pub fn entries(&self) -> [(&'static str, u64); 12] {
+        [
+            ("ws_pool_hits", self.ws_pool_hits),
+            ("ws_pool_misses", self.ws_pool_misses),
+            ("ws_pool_bytes", self.ws_pool_bytes),
+            ("fft_plan_hits", self.fft_plan_hits),
+            ("fft_plan_builds", self.fft_plan_builds),
+            ("dct2_cache_hits", self.dct2_cache_hits),
+            ("dct2_cache_builds", self.dct2_cache_builds),
+            ("allreduce_bytes", self.allreduce_bytes),
+            ("guard_trips", self.guard_trips),
+            ("fault_firings", self.fault_firings),
+            ("rollbacks", self.rollbacks),
+            ("worker_retries", self.worker_retries),
+        ]
+    }
+}
+
+// Hook sites. Each is `if enabled() { one relaxed fetch_add }` — the
+// documented "handful of branch-predictable checks" cost of `obs=off`.
+
+#[inline]
+pub fn count_ws_pool_hit() {
+    if enabled() {
+        COUNTERS.ws_pool_hits.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+#[inline]
+pub fn count_ws_pool_miss(bytes: u64) {
+    if enabled() {
+        COUNTERS.ws_pool_misses.fetch_add(1, Ordering::Relaxed);
+        COUNTERS.ws_pool_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+}
+
+#[inline]
+pub fn count_fft_plan(hit: bool) {
+    if enabled() {
+        let c = if hit { &COUNTERS.fft_plan_hits } else { &COUNTERS.fft_plan_builds };
+        c.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+#[inline]
+pub fn count_dct2_cache(hit: bool) {
+    if enabled() {
+        let c =
+            if hit { &COUNTERS.dct2_cache_hits } else { &COUNTERS.dct2_cache_builds };
+        c.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+#[inline]
+pub fn count_allreduce_bytes(bytes: u64) {
+    if enabled() {
+        COUNTERS.allreduce_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+}
+
+#[inline]
+pub fn count_guard_trip() {
+    if enabled() {
+        COUNTERS.guard_trips.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+#[inline]
+pub fn count_fault_firing() {
+    if enabled() {
+        COUNTERS.fault_firings.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+#[inline]
+pub fn count_rollback() {
+    if enabled() {
+        COUNTERS.rollbacks.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+#[inline]
+pub fn count_worker_retry() {
+    if enabled() {
+        COUNTERS.worker_retries.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Subspace-quality gauges
+// ---------------------------------------------------------------------------
+
+/// Paper-grounded per-layer gauges computed at each subspace refresh,
+/// from quantities the refresh already has in hand (no extra passes):
+///
+/// * `energy_ratio` — Σ of the selected DCT columns' squared L2 norms
+///   over the total (`select_top_columns_into`'s f64 accumulators): the
+///   fraction of gradient energy the new basis captures (the paper's
+///   selection criterion made visible).
+/// * `resid_norm` — `sqrt(total − captured)`: the Frobenius norm of the
+///   projection residual. Exact for the orthonormal DCT basis, where
+///   `‖G‖²_F = ‖S‖²_F` and the residual energy is the unselected mass.
+/// * `overlap` — fraction of the new index set shared with the previous
+///   refresh's (the 0/1 index matching the fixed-basis rotation uses):
+///   basis stability between refreshes. 0.0 on the first refresh.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SubspaceQuality {
+    pub energy_ratio: f32,
+    pub resid_norm: f32,
+    pub overlap: f32,
+}
+
+// ---------------------------------------------------------------------------
+// Per-lane event rings
+// ---------------------------------------------------------------------------
+
+/// One timed span. Plain `Copy` — ring writes are index assignments.
+/// `layer == u32::MAX` means "no layer" (step-level phase).
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    pub name: &'static str,
+    pub layer: u32,
+    pub lane: u32,
+    pub start_us: u64,
+    pub dur_us: u64,
+}
+
+impl Event {
+    pub const NO_LAYER: u32 = u32::MAX;
+}
+
+/// Fixed-capacity event buffer with interior mutability, so spans can
+/// record through the `&StepCtx` the update rules already receive.
+///
+/// Not `Sync`: one ring belongs to one `step_layers_parallel` chunk at a
+/// time ([`RingSet::lane`] carries the disjointness contract). When full
+/// it drops new events (counting them) instead of growing — the
+/// zero-allocation contract outranks completeness, and the trainer
+/// drains every step so a sized ring never fills in practice.
+pub struct EventRing {
+    buf: UnsafeCell<Vec<Event>>,
+    len: Cell<usize>,
+    dropped: Cell<u64>,
+}
+
+// SAFETY: all interior state is plain data; moving a ring between
+// threads is fine. (It is deliberately NOT Sync — see RingSet.)
+unsafe impl Send for EventRing {}
+
+const DUMMY_EVENT: Event =
+    Event { name: "", layer: Event::NO_LAYER, lane: 0, start_us: 0, dur_us: 0 };
+
+impl EventRing {
+    /// Preallocate space for `cap` events (the only allocation this ring
+    /// ever performs).
+    pub fn with_capacity(cap: usize) -> Self {
+        EventRing {
+            buf: UnsafeCell::new(vec![DUMMY_EVENT; cap]),
+            len: Cell::new(0),
+            dropped: Cell::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn push(&self, e: Event) {
+        // SAFETY: `&self` access is exclusive per the RingSet contract
+        // (one chunk/thread per ring); the buffer is never resized here.
+        let buf = unsafe { &mut *self.buf.get() };
+        let len = self.len.get();
+        if len < buf.len() {
+            buf[len] = e;
+            self.len.set(len + 1);
+        } else {
+            self.dropped.set(self.dropped.get() + 1);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len.get()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len.get() == 0
+    }
+
+    /// Events dropped because the ring was full (cleared by [`Self::clear`]).
+    pub fn dropped(&self) -> u64 {
+        self.dropped.get()
+    }
+
+    pub fn clear(&self) {
+        self.len.set(0);
+        self.dropped.set(0);
+    }
+
+    /// Copy out the recorded events and reset. `out` may grow — drains
+    /// run on the trainer thread between steps, not on the hot path.
+    pub fn drain_into(&self, out: &mut Vec<Event>) {
+        // SAFETY: exclusive access per the RingSet contract.
+        let buf = unsafe { &*self.buf.get() };
+        out.extend_from_slice(&buf[..self.len.get()]);
+        self.len.set(0);
+    }
+}
+
+/// The engine's per-lane rings, chunk-indexed exactly like
+/// [`crate::parallel::ShardedWorkspace`]: chunk `k` of a
+/// `step_layers_parallel` dispatch records only into ring `k`, so the
+/// recorded event set is identical for any thread count, and
+/// [`Self::drain_all`] merges in fixed ascending lane order.
+pub struct RingSet {
+    rings: Vec<EventRing>,
+}
+
+// SAFETY: `lane` is the only shared access path and its contract
+// requires disjoint indices across threads (the par_chunks pattern).
+unsafe impl Sync for RingSet {}
+
+impl RingSet {
+    /// `lanes` rings of `cap` events each. Pass `cap = 0` when the run's
+    /// tier can never trace (pushes become counted drops) — building is
+    /// then free and enabling `trace` mid-process stays allocation-safe.
+    pub fn new(lanes: usize, cap: usize) -> Self {
+        RingSet {
+            rings: (0..lanes.max(1)).map(|_| EventRing::with_capacity(cap)).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.rings.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rings.is_empty()
+    }
+
+    /// Ring `k`, for chunk `k` of a parallel dispatch.
+    ///
+    /// # Safety
+    /// Each index must be live in at most one thread at a time — the
+    /// `par_chunks` pattern (chunk `k` is claimed by exactly one thread
+    /// and uses only ring `k`) satisfies this by construction.
+    pub unsafe fn lane(&self, k: usize) -> &EventRing {
+        &self.rings[k]
+    }
+
+    /// Drain every ring into `out` in ascending lane order (deterministic
+    /// merge for any thread count). Requires `&mut self`, so no chunk can
+    /// be writing concurrently. Returns the number of dropped events.
+    pub fn drain_all(&mut self, out: &mut Vec<Event>) -> u64 {
+        let mut dropped = 0;
+        for r in &self.rings {
+            dropped += r.dropped();
+            r.drain_into(out);
+            r.clear();
+        }
+        dropped
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Span handle threaded through the step
+// ---------------------------------------------------------------------------
+
+/// Per-layer span recorder carried by `StepCtx`. `Copy` and two words —
+/// an absent lane (`ring: None`, or `sampled: false`) makes
+/// [`Self::span`] a direct call of its closure.
+#[derive(Clone, Copy)]
+pub struct ObsLane<'a> {
+    pub ring: Option<&'a EventRing>,
+    pub lane: u32,
+    pub layer: u32,
+    /// Precomputed `tracing() && sample_hit(t)` for this step.
+    pub sampled: bool,
+}
+
+impl ObsLane<'_> {
+    /// The disabled lane (sequential helpers, tests, frozen loops).
+    pub fn none() -> ObsLane<'static> {
+        ObsLane { ring: None, lane: 0, layer: Event::NO_LAYER, sampled: false }
+    }
+
+    /// Run `f`, recording a span into the lane's ring when sampled.
+    /// Recording is a `Cell` index write — no allocation, no lock.
+    #[inline]
+    pub fn span<T>(&self, name: &'static str, f: impl FnOnce() -> T) -> T {
+        match self.ring {
+            Some(ring) if self.sampled => {
+                let t0 = now_us();
+                let out = f();
+                ring.push(Event {
+                    name,
+                    layer: self.layer,
+                    lane: self.lane,
+                    start_us: t0,
+                    dur_us: now_us().saturating_sub(t0),
+                });
+                out
+            }
+            _ => f(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The tier/sample/counter statics are process-global; in-crate tests
+    /// that touch them serialize here (same idiom as the fault-latch and
+    /// SIMD-override locks).
+    pub(crate) static OBS_TEST_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+    fn lock() -> std::sync::MutexGuard<'static, ()> {
+        OBS_TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    #[test]
+    fn tier_parse_and_names_round_trip() {
+        for t in [ObsTier::Off, ObsTier::Counters, ObsTier::Trace] {
+            assert_eq!(ObsTier::parse(t.name()).unwrap(), t);
+        }
+        assert!(ObsTier::parse("verbose").is_err());
+        assert!(ObsTier::Off < ObsTier::Counters);
+        assert!(ObsTier::Counters < ObsTier::Trace);
+    }
+
+    #[test]
+    fn disabled_hooks_record_nothing() {
+        let _g = lock();
+        set_tier(ObsTier::Off);
+        counters().reset();
+        count_ws_pool_hit();
+        count_allreduce_bytes(1024);
+        count_guard_trip();
+        assert_eq!(counters().snapshot(), CounterSnapshot::default());
+    }
+
+    #[test]
+    fn enabled_hooks_accumulate_and_reset() {
+        let _g = lock();
+        set_tier(ObsTier::Counters);
+        counters().reset();
+        count_ws_pool_hit();
+        count_ws_pool_hit();
+        count_ws_pool_miss(256);
+        count_fft_plan(true);
+        count_fft_plan(false);
+        count_allreduce_bytes(100);
+        count_allreduce_bytes(24);
+        let snap = counters().snapshot();
+        assert_eq!(snap.ws_pool_hits, 2);
+        assert_eq!(snap.ws_pool_misses, 1);
+        assert_eq!(snap.ws_pool_bytes, 256);
+        assert_eq!(snap.fft_plan_hits, 1);
+        assert_eq!(snap.fft_plan_builds, 1);
+        assert_eq!(snap.allreduce_bytes, 124);
+        counters().reset();
+        assert_eq!(counters().snapshot(), CounterSnapshot::default());
+        set_tier(ObsTier::Off);
+    }
+
+    #[test]
+    fn ring_push_drain_and_overflow() {
+        let ring = EventRing::with_capacity(2);
+        let mk = |n| Event { name: n, layer: 0, lane: 0, start_us: 0, dur_us: 1 };
+        ring.push(mk("a"));
+        ring.push(mk("b"));
+        ring.push(mk("c")); // full → dropped, not grown
+        assert_eq!(ring.len(), 2);
+        assert_eq!(ring.dropped(), 1);
+        let mut out = Vec::new();
+        ring.drain_into(&mut out);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].name, "a");
+        assert_eq!(out[1].name, "b");
+        assert!(ring.is_empty());
+    }
+
+    #[test]
+    fn ring_set_drains_in_lane_order() {
+        let mut rs = RingSet::new(3, 4);
+        for k in [2usize, 0, 1] {
+            // SAFETY: single-threaded test.
+            let ring = unsafe { rs.lane(k) };
+            ring.push(Event {
+                name: "x",
+                layer: k as u32,
+                lane: k as u32,
+                start_us: 0,
+                dur_us: 0,
+            });
+        }
+        let mut out = Vec::new();
+        let dropped = rs.drain_all(&mut out);
+        assert_eq!(dropped, 0);
+        let lanes: Vec<u32> = out.iter().map(|e| e.lane).collect();
+        assert_eq!(lanes, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn span_records_only_when_sampled() {
+        let ring = EventRing::with_capacity(4);
+        let on = ObsLane { ring: Some(&ring), lane: 1, layer: 7, sampled: true };
+        let off = ObsLane { ring: Some(&ring), lane: 1, layer: 7, sampled: false };
+        assert_eq!(off.span("skipped", || 1 + 1), 2);
+        assert_eq!(ring.len(), 0);
+        assert_eq!(on.span("kept", || 21 * 2), 42);
+        assert_eq!(ring.len(), 1);
+        let mut out = Vec::new();
+        ring.drain_into(&mut out);
+        assert_eq!(out[0].name, "kept");
+        assert_eq!(out[0].layer, 7);
+        assert_eq!(out[0].lane, 1);
+        assert_eq!(ObsLane::none().span("nothing", || 5), 5);
+    }
+
+    #[test]
+    fn sample_gate_is_modular() {
+        let _g = lock();
+        set_sample(4);
+        assert!(sample_hit(0));
+        assert!(!sample_hit(1));
+        assert!(sample_hit(8));
+        set_sample(0); // clamps to 1: every step sampled
+        assert!(sample_hit(3));
+        set_sample(1);
+    }
+}

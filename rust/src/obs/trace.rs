@@ -1,0 +1,161 @@
+//! Telemetry exporters: streaming Chrome-trace JSON, a Prometheus-style
+//! text dump, and the end-of-run terminal summary table.
+//!
+//! The trace file is the Trace Event Format's JSON-array flavor —
+//! loadable by `chrome://tracing` / Perfetto and by our own
+//! `util::json::Json::parse` (which `tests/obs_determinism.rs` uses to
+//! prove the file is well-formed). Events stream to disk as they drain,
+//! so a crashed run keeps its trace prefix; [`TraceWriter::finish`]
+//! closes the array, but Chrome also accepts an unterminated array, so
+//! even the unfinished file is inspectable.
+
+use std::fmt::Write as _;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use super::{CounterSnapshot, Event};
+
+/// Streaming Chrome-trace writer. One complete event (`"ph":"X"`) per
+/// span; `tid` 0 is the trainer thread, engine lane `k` maps to
+/// `tid = k + 1`.
+pub struct TraceWriter {
+    out: BufWriter<File>,
+    first: bool,
+    line: String,
+    pub path: PathBuf,
+}
+
+impl TraceWriter {
+    pub fn create(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating {}", dir.display()))?;
+            }
+        }
+        let file = File::create(&path)
+            .with_context(|| format!("creating trace file {}", path.display()))?;
+        let mut out = BufWriter::new(file);
+        out.write_all(b"[\n")?;
+        Ok(TraceWriter { out, first: true, line: String::new(), path })
+    }
+
+    /// Write one complete span. `layer == Event::NO_LAYER` omits the
+    /// layer arg; `step` tags which trainer step the span belongs to.
+    pub fn emit(
+        &mut self,
+        name: &str,
+        tid: u32,
+        start_us: u64,
+        dur_us: u64,
+        step: u64,
+        layer: u32,
+    ) -> Result<()> {
+        self.line.clear();
+        let _ = write!(
+            self.line,
+            "{}{{\"name\":\"{}\",\"cat\":\"step\",\"ph\":\"X\",\"ts\":{},\
+             \"dur\":{},\"pid\":0,\"tid\":{},\"args\":{{\"step\":{}",
+            if self.first { "" } else { ",\n" },
+            name,
+            start_us,
+            dur_us,
+            tid,
+            step,
+        );
+        if layer != Event::NO_LAYER {
+            let _ = write!(self.line, ",\"layer\":{layer}");
+        }
+        self.line.push_str("}}");
+        self.first = false;
+        self.out.write_all(self.line.as_bytes())?;
+        Ok(())
+    }
+
+    /// Write a drained engine [`Event`] (lane `k` → `tid k+1`).
+    pub fn emit_event(&mut self, e: &Event, step: u64) -> Result<()> {
+        self.emit(e.name, e.lane + 1, e.start_us, e.dur_us, step, e.layer)
+    }
+
+    /// Close the JSON array and flush to disk.
+    pub fn finish(&mut self) -> Result<()> {
+        self.out.write_all(b"\n]\n")?;
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+/// Prometheus text-exposition dump of the counters (written to
+/// `<run-dir>/metrics.prom` at run end). Monotonic counters get the
+/// conventional `_total` suffix under a shared `fft_subspace_` prefix.
+pub fn prometheus_text(snap: &CounterSnapshot) -> String {
+    let mut out = String::new();
+    for (name, value) in snap.entries() {
+        let _ = writeln!(out, "# TYPE fft_subspace_{name}_total counter");
+        let _ = writeln!(out, "fft_subspace_{name}_total {value}");
+    }
+    out
+}
+
+/// Fixed-width terminal table printed at run end when telemetry is on.
+pub fn summary_table(snap: &CounterSnapshot) -> String {
+    let mut out = String::from("observability counters:\n");
+    for (name, value) in snap.entries() {
+        let _ = writeln!(out, "  {name:<20} {value:>14}");
+    }
+    out.pop(); // trailing newline
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn trace_file_is_loadable_json_with_expected_fields() {
+        let path = std::env::temp_dir().join(format!(
+            "fft_subspace_trace_test_{}.json",
+            std::process::id()
+        ));
+        let mut tw = TraceWriter::create(&path).unwrap();
+        tw.emit("batch", 0, 10, 5, 0, Event::NO_LAYER).unwrap();
+        tw.emit_event(
+            &Event { name: "project", layer: 3, lane: 1, start_us: 20, dur_us: 2 },
+            1,
+        )
+        .unwrap();
+        tw.finish().unwrap();
+
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = Json::parse(&text).unwrap();
+        let events = doc.as_arr().unwrap();
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].req("name").unwrap().as_str().unwrap(), "batch");
+        assert_eq!(events[0].req("ph").unwrap().as_str().unwrap(), "X");
+        assert!(events[0].req("args").unwrap().get("layer").is_none());
+        assert_eq!(events[1].req("tid").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(
+            events[1].req("args").unwrap().req("layer").unwrap().as_usize().unwrap(),
+            3
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn prometheus_and_summary_cover_every_counter() {
+        let snap = CounterSnapshot { ws_pool_hits: 7, allreduce_bytes: 4096, ..Default::default() };
+        let prom = prometheus_text(&snap);
+        assert!(prom.contains("fft_subspace_ws_pool_hits_total 7"));
+        assert!(prom.contains("fft_subspace_allreduce_bytes_total 4096"));
+        let table = summary_table(&snap);
+        for (name, _) in snap.entries() {
+            assert!(prom.contains(name), "prom missing {name}");
+            assert!(table.contains(name), "table missing {name}");
+        }
+    }
+}

@@ -217,6 +217,23 @@ pub trait Optimizer {
     fn load_state(&mut self, _bytes: &[u8]) -> Result<()> {
         anyhow::bail!("{} does not support checkpoint resume", self.name())
     }
+
+    /// Drain the subspace-quality gauges captured at subspace refreshes
+    /// since the last call: `(layer name, refresh step, gauges)` per
+    /// low-rank layer. Empty for optimizers that don't track them (dense /
+    /// AOT-wrapped). Polled by the trainer outside the step hot path, so
+    /// the returned `Vec` may allocate — the capture itself must not.
+    fn refresh_gauges(&mut self) -> Vec<(String, u64, crate::obs::SubspaceQuality)> {
+        Vec::new()
+    }
+
+    /// Move buffered obs span events into `out` — merged in ascending lane
+    /// order (see `obs::RingSet`), so the stream is deterministic for any
+    /// thread count — and return how many events were dropped to full rings
+    /// since the last drain. Default: no event source.
+    fn drain_events(&mut self, _out: &mut Vec<crate::obs::Event>) -> u64 {
+        0
+    }
 }
 
 /// Which optimizer to build.
@@ -335,16 +352,19 @@ pub fn pool_for_threads(threads: Option<usize>) -> Arc<ThreadPool> {
     }
 }
 
-/// Step disjoint layers concurrently: `f(i, &mut states[i], &mut params[i],
-/// &grads[i], ws)` runs for every layer, with layers partitioned into
-/// contiguous chunks across the pool and chunk `k` bound to workspace shard
-/// `k` (see `parallel::ShardedWorkspace` for why that binding keeps the
-/// zero-allocation invariant).
+/// Step disjoint layers concurrently: `f(k, i, &mut states[i],
+/// &mut params[i], &grads[i], ws)` runs for every layer `i`, with layers
+/// partitioned into contiguous chunks across the pool and chunk `k` bound
+/// to workspace shard `k` (see `parallel::ShardedWorkspace` for why that
+/// binding keeps the zero-allocation invariant). The chunk index is passed
+/// through so lane-scoped telemetry sinks (`obs::RingSet`) can bind to the
+/// same shard identity.
 ///
 /// **Determinism contract** (property-tested in
 /// `tests/parallel_determinism.rs`): `f`'s output for layer `i` must depend
-/// only on `(i, states[i], params[i], grads[i])` — workspace buffers are
-/// either zeroed on checkout or fully overwritten before being read — so
+/// only on `(i, states[i], params[i], grads[i])` — never on `k`, which
+/// exists only to route side-channel telemetry — and workspace buffers are
+/// either zeroed on checkout or fully overwritten before being read, so
 /// results are bit-identical for any thread count, including fully
 /// sequential execution (a 1-lane pool).
 pub fn step_layers_parallel<S: Send, F>(
@@ -355,7 +375,7 @@ pub fn step_layers_parallel<S: Send, F>(
     grads: &[Matrix],
     f: F,
 ) where
-    F: Fn(usize, &mut S, &mut Matrix, &Matrix, &mut Workspace) + Sync,
+    F: Fn(usize, usize, &mut S, &mut Matrix, &Matrix, &mut Workspace) + Sync,
 {
     let n = states.len();
     assert_eq!(params.len(), n, "step_layers_parallel: params/states mismatch");
@@ -381,7 +401,7 @@ pub fn step_layers_parallel<S: Send, F>(
         for i in lo..hi {
             let st = unsafe { &mut *states_p.0.add(i) };
             let p = unsafe { &mut *params_p.0.add(i) };
-            f(i, st, p, &grads[i], ws);
+            f(k, i, st, p, &grads[i], ws);
         }
     });
 }
@@ -766,7 +786,7 @@ mod tests {
                 &mut states,
                 &mut params,
                 &grads,
-                |i, st, p, g, ws| {
+                |_k, i, st, p, g, ws| {
                     *st += 1;
                     let tmp = ws.take(2, 2);
                     p.axpy(1.0, g);

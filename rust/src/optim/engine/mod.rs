@@ -72,6 +72,9 @@ struct LowRankLayer {
     rotation: Box<dyn RotationPolicy>,
     residual: Box<dyn ResidualPolicy>,
     rule: Box<dyn UpdateRule>,
+    /// `(step, gauges)` captured at this layer's most recent subspace
+    /// refresh (obs tiers only); drained by [`Optimizer::refresh_gauges`].
+    last_quality: Option<(u64, crate::obs::SubspaceQuality)>,
 }
 
 /// The single step loop behind every composed low-rank optimizer.
@@ -94,6 +97,11 @@ pub struct SubspaceEngine {
     /// Figure-1 instrumentation (Newton–Schulz rule only).
     instrumented: bool,
     errors: BTreeMap<String, f64>,
+    /// Per-chunk span-event rings, chunk-indexed like `shards` (ring `k` ↔
+    /// workspace shard `k`), merged in fixed lane order by
+    /// [`Optimizer::drain_events`]. Zero-capacity when the process can't
+    /// trace at build time, so `obs=off` runs pay nothing.
+    rings: crate::obs::RingSet,
 }
 
 impl OptimizerSpec {
@@ -149,7 +157,13 @@ impl OptimizerSpec {
                             self.ns_steps,
                         )),
                     };
-                    EngineLayer::LowRank(LowRankLayer { source, rotation, residual, rule })
+                    EngineLayer::LowRank(LowRankLayer {
+                        source,
+                        rotation,
+                        residual,
+                        rule,
+                        last_quality: None,
+                    })
                 } else {
                     EngineLayer::Dense(AdamState::with_dtype(
                         self.state_dtype,
@@ -161,6 +175,18 @@ impl OptimizerSpec {
             .collect();
         let pool = pool_for_threads(self.threads);
         let shards = ShardedWorkspace::for_pool(&pool);
+        // One event ring per possible chunk, capacity covering one step's
+        // spans per chunk (≤ 6 per layer) with headroom — rings are drained
+        // every step by the trainer, so this never fills in practice. When
+        // the run can't trace the rings are zero-capacity (pushes become
+        // counted drops), keeping `obs=off` builds allocation-free here.
+        let lanes = pool.threads();
+        let ring_cap = if crate::obs::tracing() {
+            metas.len().div_ceil(lanes.max(1)) * 8 + 16
+        } else {
+            0
+        };
+        let rings = crate::obs::RingSet::new(lanes, ring_cap);
         let instrumented = self.instrument && self.rule == UpdateRuleKind::NewtonSchulz;
         // The indices-only payload exists iff receivers can rebuild the
         // basis from r int32 (index-selection source) AND the update stays
@@ -188,6 +214,7 @@ impl OptimizerSpec {
             broadcast,
             instrumented,
             errors: BTreeMap::new(),
+            rings,
         }
     }
 }
@@ -335,28 +362,57 @@ impl Optimizer for SubspaceEngine {
         let errors_ref = if self.instrumented { Some(&errors) } else { None };
         let metas = &self.metas;
         let pool = Arc::clone(&self.pool);
+        // Obs decisions once per step, not per layer: span recording only
+        // under `obs=trace` on sampled steps, gauge capture under any
+        // enabled tier. Both are side channels — the update math below is
+        // identical across tiers (`tests/obs_determinism.rs`).
+        let sampled = crate::obs::tracing() && crate::obs::sample_hit(t);
+        let gauge_step = crate::obs::enabled() && crate::obs::sample_hit(t);
+        let rings = &self.rings;
         step_layers_parallel(
             &pool,
             &mut self.shards,
             &mut self.states,
             params,
             grads,
-            |i, state, param, grad, ws| match state {
-                EngineLayer::Dense(st) => st.update_ws(
-                    param, grad, lr, hyper.beta1, hyper.beta2, hyper.eps, dense_wd, t, ws,
-                ),
-                EngineLayer::LowRank(l) => {
-                    let ctx = StepCtx { t, lr, hyper, errors: errors_ref };
-                    l.rule.step_layer(
-                        &metas[i],
-                        &mut l.source,
-                        l.rotation.as_mut(),
-                        l.residual.as_mut(),
-                        param,
-                        grad,
-                        &ctx,
-                        ws,
-                    );
+            |k, i, state, param, grad, ws| {
+                let obs = if sampled {
+                    // SAFETY: chunk `k` is claimed by exactly one thread and
+                    // records only into ring `k` — the same disjointness the
+                    // workspace shard binding relies on.
+                    crate::obs::ObsLane {
+                        ring: Some(unsafe { rings.lane(k) }),
+                        lane: k as u32,
+                        layer: i as u32,
+                        sampled: true,
+                    }
+                } else {
+                    crate::obs::ObsLane::none()
+                };
+                match state {
+                    EngineLayer::Dense(st) => obs.span("dense", || {
+                        st.update_ws(
+                            param, grad, lr, hyper.beta1, hyper.beta2, hyper.eps,
+                            dense_wd, t, ws,
+                        )
+                    }),
+                    EngineLayer::LowRank(l) => {
+                        let refreshed = l.source.refresh_due(t);
+                        let ctx = StepCtx { t, lr, hyper, errors: errors_ref, obs };
+                        l.rule.step_layer(
+                            &metas[i],
+                            &mut l.source,
+                            l.rotation.as_mut(),
+                            l.residual.as_mut(),
+                            param,
+                            grad,
+                            &ctx,
+                            ws,
+                        );
+                        if refreshed && gauge_step {
+                            l.last_quality = l.source.quality().map(|q| (t, q));
+                        }
+                    }
                 }
             },
         );
@@ -418,6 +474,22 @@ impl Optimizer for SubspaceEngine {
         } else {
             (meta.rows * meta.cols * 4) as u64
         }
+    }
+
+    fn refresh_gauges(&mut self) -> Vec<(String, u64, crate::obs::SubspaceQuality)> {
+        let mut out = Vec::new();
+        for (meta, st) in self.metas.iter().zip(self.states.iter_mut()) {
+            if let EngineLayer::LowRank(l) = st {
+                if let Some((t, q)) = l.last_quality.take() {
+                    out.push((meta.name.clone(), t, q));
+                }
+            }
+        }
+        out
+    }
+
+    fn drain_events(&mut self, out: &mut Vec<crate::obs::Event>) -> u64 {
+        self.rings.drain_all(out)
     }
 }
 

@@ -58,6 +58,12 @@ pub struct StepCtx<'a> {
     /// deterministic and `BTreeMap` orders by key, so the instrumented
     /// output is identical for any thread count.
     pub errors: Option<&'a Mutex<BTreeMap<String, f64>>>,
+    /// Per-chunk obs sink: span timing around the rule's phases, recorded
+    /// into this chunk's event ring. [`crate::obs::ObsLane::none`] when
+    /// tracing is off or the step isn't sampled — `span` then just runs the
+    /// closure (one branch of bookkeeping). Timing is side-channel only and
+    /// never feeds back into the update math.
+    pub obs: crate::obs::ObsLane<'a>,
 }
 
 pub trait UpdateRule: Send {
@@ -128,29 +134,38 @@ impl SubspaceAdamW {
         let mut v = self.v.checkout(ws);
         let mut g_low = ws.take_uninit(rr, r);
         if source.refresh_due(ctx.t) {
-            rotation.before_refresh(source);
-            source.refresh_and_project_into(g, &mut g_low, ws);
-            rotation.rotate_moments(source, &mut m, &mut v, ws);
+            ctx.obs.span("refresh", || {
+                rotation.before_refresh(source);
+                source.refresh_and_project_into(g, &mut g_low, ws);
+            });
+            ctx.obs
+                .span("rotate", || rotation.rotate_moments(source, &mut m, &mut v, ws));
         } else {
-            source.project_into(g, &mut g_low, ws);
+            ctx.obs.span("project", || source.project_into(g, &mut g_low, ws));
         }
         // residual capture happens before the moments move, as in the
         // legacy EF loops; `full` doubles as the back-projection buffer
         let mut full = ws.take_uninit(rr, cc);
-        residual.store_residual(source, &g_low, g, &mut full, ws);
+        ctx.obs.span("residual", || {
+            residual.store_residual(source, &g_low, g, &mut full, ws)
+        });
         // AdamW in the subspace — the shared fused kernel
         let sc = AdamScalars::new(ctx.hyper.beta1, ctx.hyper.beta2, ctx.hyper.eps, ctx.t);
         let mut u_low = ws.take_uninit(rr, r);
-        adam_moments_into(&mut u_low.data, &g_low.data, &mut m.data, &mut v.data, &sc);
+        ctx.obs.span("rule", || {
+            adam_moments_into(&mut u_low.data, &g_low.data, &mut m.data, &mut v.data, &sc)
+        });
         // U = u·Qᵀ (+ the policy's residual term), applied in the original
         // orientation without materializing a transpose
-        residual.finish_update(source, g, &g_low, &u_low, &mut full, ws);
-        param.scale(1.0 - ctx.lr * ctx.hyper.weight_decay);
-        if meta.needs_transpose() {
-            param.axpy_t(-ctx.lr, &full);
-        } else {
-            param.axpy(-ctx.lr, &full);
-        }
+        ctx.obs.span("update", || {
+            residual.finish_update(source, g, &g_low, &u_low, &mut full, ws);
+            param.scale(1.0 - ctx.lr * ctx.hyper.weight_decay);
+            if meta.needs_transpose() {
+                param.axpy_t(-ctx.lr, &full);
+            } else {
+                param.axpy(-ctx.lr, &full);
+            }
+        });
         ws.give(u_low);
         ws.give(full);
         ws.give(g_low);
@@ -245,9 +260,12 @@ impl UpdateRule for NewtonSchulzMomentum {
         // refreshes.
         let mut b_low = ws.take_uninit(rr, r);
         if source.refresh_due(ctx.t) {
-            source.refresh_and_project_into(&momentum, &mut b_low, ws);
+            ctx.obs.span("refresh", || {
+                source.refresh_and_project_into(&momentum, &mut b_low, ws)
+            });
         } else {
-            source.project_into(&momentum, &mut b_low, ws);
+            ctx.obs
+                .span("project", || source.project_into(&momentum, &mut b_low, ws));
         }
         // error feedback: M = B − (1−μ)·b·Qᵀ
         let mut back = ws.take_uninit(rr, cc);
@@ -256,28 +274,31 @@ impl UpdateRule for NewtonSchulzMomentum {
         // Newton–Schulz on the LOW-RANK momentum (R×r), workspace-backed so
         // the whole step stays allocation-free (tests/alloc_steady_state.rs)
         let mut o_low = ws.take_uninit(rr, r);
-        newton_schulz_into(&b_low, self.ns_steps, &mut o_low, ws);
-        if let Some(errors) = ctx.errors {
-            // restore B while `back` still holds back(b_low), then
-            // repurpose `back` for O — computed only once
-            let mut b_now = ws.take_uninit(rr, cc);
-            b_now.copy_from(&momentum);
-            b_now.axpy(1.0 - self.mu, &back);
-            source.back_into(&o_low, &mut back, ws); // back = O
-            b_now.axpy(-1.0, &back);
-            errors.lock().unwrap().insert(meta.name.clone(), b_now.fro_norm());
-            ws.give(b_now);
-        } else {
-            // O = o·Qᵀ, applied without materializing the transpose
-            source.back_into(&o_low, &mut back, ws);
-        }
-        param.scale(1.0 - ctx.lr * ctx.hyper.weight_decay);
-        let scale = -ctx.lr * shape_factor(rr, cc);
-        if meta.needs_transpose() {
-            param.axpy_t(scale, &back);
-        } else {
-            param.axpy(scale, &back);
-        }
+        ctx.obs
+            .span("ns", || newton_schulz_into(&b_low, self.ns_steps, &mut o_low, ws));
+        ctx.obs.span("update", || {
+            if let Some(errors) = ctx.errors {
+                // restore B while `back` still holds back(b_low), then
+                // repurpose `back` for O — computed only once
+                let mut b_now = ws.take_uninit(rr, cc);
+                b_now.copy_from(&momentum);
+                b_now.axpy(1.0 - self.mu, &back);
+                source.back_into(&o_low, &mut back, ws); // back = O
+                b_now.axpy(-1.0, &back);
+                errors.lock().unwrap().insert(meta.name.clone(), b_now.fro_norm());
+                ws.give(b_now);
+            } else {
+                // O = o·Qᵀ, applied without materializing the transpose
+                source.back_into(&o_low, &mut back, ws);
+            }
+            param.scale(1.0 - ctx.lr * ctx.hyper.weight_decay);
+            let scale = -ctx.lr * shape_factor(rr, cc);
+            if meta.needs_transpose() {
+                param.axpy_t(scale, &back);
+            } else {
+                param.axpy(scale, &back);
+            }
+        });
         ws.give(o_low);
         ws.give(back);
         ws.give(b_low);

@@ -70,6 +70,13 @@ impl SubspaceSource {
         self.proj.basis()
     }
 
+    /// Subspace-quality gauges from the most recent refresh (see
+    /// [`Projection::quality`]); `None` until the projection has refreshed
+    /// on the workspace path or when the family doesn't track them.
+    pub fn quality(&self) -> Option<crate::obs::SubspaceQuality> {
+        self.proj.quality()
+    }
+
     /// Per-layer state bytes. Per-device *shared* state is accounted by the
     /// engine's own shared-DCT registry (`SubspaceEngine::memory_report`),
     /// not through the source — a new shared-basis projection family must

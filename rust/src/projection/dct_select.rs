@@ -103,13 +103,19 @@ pub fn select_top_columns(s: &Matrix, r: usize, norm: RankNorm) -> Vec<usize> {
 /// O(C log C) — `select_nth_unstable_by` partitions the top `r` under the
 /// exact comparator the old full sort used (score descending, index
 /// ascending on ties), then only the `r` winners are index-sorted.
+///
+/// Returns `(captured, total)`: the score mass of the selected columns and
+/// of all columns, from the same f64 accumulator the ranking uses. Under
+/// `RankNorm::L2` these are Frobenius energies (`‖S[:,idx]‖²F`, `‖S‖²F`),
+/// which is exactly what the obs subspace-quality gauges need; callers that
+/// only want the indices ignore the return value.
 pub fn select_top_columns_into(
     s: &Matrix,
     r: usize,
     norm: RankNorm,
     ws: &mut Workspace,
     idx: &mut Vec<usize>,
-) {
+) -> (f64, f64) {
     let c = s.cols;
     // Column norms through the same shared accumulation kernel
     // `col_l1_norms`/`col_l2_norms` use (`Matrix::col_{sq,abs}_sums_into`),
@@ -151,9 +157,33 @@ pub fn select_top_columns_into(
     idx.extend_from_slice(&order[..k]);
     idx.sort_unstable();
 
+    // Gauge bookkeeping: two reductions over the accumulator we already
+    // computed for the ranking — no extra passes over `s`.
+    let total: f64 = acc.iter().sum();
+    let captured: f64 = idx.iter().map(|&j| acc[j]).sum();
+
     ws.give_usize(order);
     ws.give_f32(scores);
     ws.give_f64(acc);
+    (captured, total)
+}
+
+/// `|a ∩ b|` for two ascending index slices — one merge pass, no
+/// allocation. Feeds the basis-overlap gauge between consecutive refreshes.
+fn sorted_overlap(a: &[usize], b: &[usize]) -> usize {
+    let (mut i, mut j, mut n) = (0usize, 0usize, 0usize);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                n += 1;
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    n
 }
 
 /// One layer's DCT-selection state: `r` column indices into the shared Q.
@@ -164,6 +194,12 @@ pub struct DctSelect {
     use_makhoul: bool,
     idx: Vec<usize>,
     basis_cache: Matrix, // Q[:, idx] (C×r) — transient, rebuilt on refresh
+    /// Previous refresh's selection — overlap gauge input. Preallocated to
+    /// `rank` so steady-state refreshes never grow it.
+    prev_idx: Vec<usize>,
+    /// Gauges from the last workspace-path refresh; `None` until one runs
+    /// (the constructor prefix is not a fitted subspace).
+    quality: Option<crate::obs::SubspaceQuality>,
 }
 
 impl DctSelect {
@@ -172,7 +208,16 @@ impl DctSelect {
         let rank = rank.min(shared.dim());
         let idx: Vec<usize> = (0..rank).collect();
         let basis_cache = shared.matrix().select_columns(&idx);
-        DctSelect { shared, rank, norm, use_makhoul, idx, basis_cache }
+        DctSelect {
+            shared,
+            rank,
+            norm,
+            use_makhoul,
+            idx,
+            basis_cache,
+            prev_idx: Vec::with_capacity(rank),
+            quality: None,
+        }
     }
 
     pub fn indices(&self) -> &[usize] {
@@ -221,7 +266,9 @@ impl Projection for DctSelect {
 
     fn refresh_and_project_into(&mut self, g: &Matrix, out: &mut Matrix, ws: &mut Workspace) {
         // Non-finite gradient: keep the previous selection/basis instead of
-        // re-ranking columns on NaN norms (ROADMAP §Fault tolerance).
+        // re-ranking columns on NaN norms (ROADMAP §Fault tolerance). The
+        // quality gauges also keep their last-good values — a NaN energy
+        // ratio would be noise, not signal.
         if !all_finite(&g.data) {
             matmul_into(g, &self.basis_cache, out);
             return;
@@ -229,7 +276,27 @@ impl Projection for DctSelect {
         // fully overwritten by similarities_into → non-zeroing checkout
         let mut s = ws.take_uninit(g.rows, self.shared.dim());
         self.shared.similarities_into(g, self.use_makhoul, &mut s);
-        select_top_columns_into(&s, self.rank, self.norm, ws, &mut self.idx);
+        let had_refresh = self.quality.is_some();
+        self.prev_idx.clear();
+        self.prev_idx.extend_from_slice(&self.idx);
+        let (captured, total) =
+            select_top_columns_into(&s, self.rank, self.norm, ws, &mut self.idx);
+        // Gauges (§4.1): under L2 ranking, total = ‖S‖²F = ‖G‖²F (Q is
+        // orthonormal) and captured = ‖S[:,idx]‖²F = ‖G·Q_r‖²F, so the
+        // residual √(total−captured) is exactly ‖G − G·Q_r·Q_rᵀ‖F by
+        // Pythagoras. Under L1 the ratio is captured score mass instead.
+        // Overlap against the constructor prefix would be meaningless, so
+        // the first fitted refresh reports 0.
+        let overlap = if had_refresh && !self.idx.is_empty() {
+            sorted_overlap(&self.prev_idx, &self.idx) as f32 / self.idx.len() as f32
+        } else {
+            0.0
+        };
+        self.quality = Some(crate::obs::SubspaceQuality {
+            energy_ratio: if total > 0.0 { (captured / total) as f32 } else { 1.0 },
+            resid_norm: (total - captured).max(0.0).sqrt() as f32,
+            overlap,
+        });
         self.shared.matrix().select_columns_into(&self.idx, &mut self.basis_cache);
         s.select_columns_into(&self.idx, out);
         ws.give(s);
@@ -249,6 +316,10 @@ impl Projection for DctSelect {
 
     fn indices(&self) -> Option<&[usize]> {
         Some(&self.idx)
+    }
+
+    fn quality(&self) -> Option<crate::obs::SubspaceQuality> {
+        self.quality
     }
 
     fn save_state(&self, out: &mut Vec<u8>) {
@@ -448,6 +519,47 @@ mod tests {
         assert_eq!(low1, low2);
         assert_eq!(p1.indices(), p2.indices());
         assert_eq!(p1.basis(), p2.basis());
+    }
+
+    #[test]
+    fn quality_gauges_track_energy_and_overlap() {
+        let mut rng = Pcg64::seed(7);
+        let g = Matrix::randn(10, 24, 1.0, &mut rng);
+        let shared = Arc::new(SharedDct::new(24));
+        let mut p = DctSelect::new(shared.clone(), 6, RankNorm::L2, true);
+        assert!(p.quality().is_none()); // no fitted refresh yet
+        let mut ws = Workspace::new();
+        let mut low = Matrix::zeros(1, 1);
+        p.refresh_and_project_into(&g, &mut low, &mut ws);
+        let q1 = p.quality().unwrap();
+        assert!(q1.energy_ratio > 0.0 && q1.energy_ratio <= 1.0);
+        assert_eq!(q1.overlap, 0.0); // first fitted refresh: no predecessor
+        // the residual gauge must equal the directly computed error
+        // ‖G − G·Q_r·Q_rᵀ‖F (Pythagoras under an orthonormal Q)
+        let err = g.sub(&p.back(&low)).fro_norm();
+        assert!(
+            (q1.resid_norm as f64 - err).abs() < 1e-3 * (1.0 + err),
+            "resid gauge {} vs direct {err}",
+            q1.resid_norm
+        );
+        // same gradient again → same selection → full overlap, same energy
+        p.refresh_and_project_into(&g, &mut low, &mut ws);
+        let q2 = p.quality().unwrap();
+        assert_eq!(q2.overlap, 1.0);
+        assert_eq!(q2.energy_ratio, q1.energy_ratio);
+
+        // a non-finite refresh keeps the last-good gauges
+        let mut bad = g.clone();
+        bad.data[0] = f32::NAN;
+        p.refresh_and_project_into(&bad, &mut low, &mut ws);
+        assert_eq!(p.quality().unwrap(), q2);
+
+        // full-rank selection captures all energy, residual ≈ 0
+        let mut full = DctSelect::new(shared, 24, RankNorm::L2, false);
+        full.refresh_and_project_into(&g, &mut low, &mut ws);
+        let qf = full.quality().unwrap();
+        assert!((qf.energy_ratio - 1.0).abs() < 1e-5);
+        assert!(qf.resid_norm < 1e-2);
     }
 
     #[test]

@@ -159,6 +159,17 @@ pub trait Projection: Send {
         None
     }
 
+    /// Subspace-quality gauges from the most recent refresh (captured-energy
+    /// ratio, projection residual norm, basis overlap with the previous
+    /// selection) — the observability feed for the adaptive-rank open item.
+    /// `None` until a refresh has run, or for families that don't track
+    /// them. Only `DctSelect` reports today: its column-norm ranking already
+    /// computes the per-column energies the gauges need, so reporting costs
+    /// two reductions over data that exists anyway.
+    fn quality(&self) -> Option<crate::obs::SubspaceQuality> {
+        None
+    }
+
     /// Serialize the persistent subspace state for checkpoint v2: selected
     /// indices, dense bases, warm-start flags and RNG streams — everything
     /// a later step reads, so a restored projection continues bit-

@@ -7,7 +7,9 @@
 //! Every hot kernel has an allocation-free `_into` variant writing into a
 //! caller-owned buffer; [`Workspace`] pools those buffers so steady-state
 //! optimizer steps allocate nothing (see ROADMAP.md §Hot-path
-//! architecture).
+//! architecture). Pool hits/misses feed the `obs` counters, so `make
+//! bench-obs` and the run-end summary can show whether a workload's pools
+//! actually stay warm.
 
 mod matrix;
 mod ops;

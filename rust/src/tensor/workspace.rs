@@ -24,6 +24,11 @@ use super::Matrix;
 /// First-fit would let a small request steal a large buffer and force the
 /// next large request to allocate — best-fit keeps repeating request
 /// patterns allocation-free.
+///
+/// This is also the telemetry tap for pool efficiency: a served request
+/// counts as a hit, a fresh allocation as a miss with its byte size
+/// (`obs::count_ws_pool_*`; since pools never shrink, cumulative miss
+/// bytes equal the pool high-water mark).
 fn pop_best_fit<T>(pool: &mut Vec<Vec<T>>, len: usize) -> Vec<T> {
     if len == 0 {
         return Vec::new();
@@ -39,8 +44,14 @@ fn pop_best_fit<T>(pool: &mut Vec<Vec<T>>, len: usize) -> Vec<T> {
         }
     }
     match best {
-        Some((i, _)) => pool.swap_remove(i),
-        None => Vec::with_capacity(len),
+        Some((i, _)) => {
+            crate::obs::count_ws_pool_hit();
+            pool.swap_remove(i)
+        }
+        None => {
+            crate::obs::count_ws_pool_miss((len * std::mem::size_of::<T>()) as u64);
+            Vec::with_capacity(len)
+        }
     }
 }
 

@@ -4,6 +4,7 @@
 
 use anyhow::Result;
 
+use crate::obs::ObsTier;
 use crate::optim::common::EfMode;
 use crate::optim::{
     build_optimizer, LayerMeta, Optimizer, OptimizerConfig, OptimizerKind,
@@ -93,6 +94,16 @@ pub struct TrainConfig {
     /// `fault=SPEC`: deterministic fault-injection plan (see
     /// `train::fault` for the grammar); wins over `FFT_SUBSPACE_FAULT`.
     pub fault: Option<String>,
+    /// `obs=off|counters|trace`: run-wide telemetry tier (see `crate::obs`);
+    /// `Off` here falls back to `FFT_SUBSPACE_OBS` at run start, so the
+    /// config wins when both are set.
+    pub obs: ObsTier,
+    /// `trace-out=PATH`: Chrome-trace JSON destination under `obs=trace`;
+    /// defaults to `{run_dir}/trace.json`.
+    pub trace_out: Option<String>,
+    /// `obs-sample=N`: record span events every Nth step only (counters and
+    /// refresh gauges keep full cadence). `1` = every step.
+    pub obs_sample: usize,
 }
 
 impl Default for TrainConfig {
@@ -127,6 +138,9 @@ impl Default for TrainConfig {
             checkpoint_dir: None,
             checkpoint_keep: 3,
             fault: None,
+            obs: ObsTier::Off,
+            trace_out: None,
+            obs_sample: 1,
         }
     }
 }
@@ -311,6 +325,9 @@ impl TrainConfig {
         if let Some(f) = &self.fault {
             extra.push(("fault", s(f)));
         }
+        if let Some(t) = &self.trace_out {
+            extra.push(("trace_out", s(t)));
+        }
         let mut fields = vec![
             ("preset", s(&self.preset)),
             ("optimizer", s(self.optimizer.name())),
@@ -342,6 +359,8 @@ impl TrainConfig {
             ("guard_threshold", num(self.guard_threshold as f64)),
             ("checkpoint_interval", num(self.checkpoint_interval as f64)),
             ("checkpoint_keep", num(self.checkpoint_keep as f64)),
+            ("obs", s(self.obs.name())),
+            ("obs_sample", num(self.obs_sample as f64)),
         ];
         fields.extend(extra);
         obj(fields)
@@ -444,6 +463,14 @@ impl TrainConfig {
             "fault" => {
                 crate::train::fault::FaultPlan::parse(value)?;
                 self.fault = Some(value.into());
+            }
+            // observability tier + exporters (see `crate::obs`)
+            "obs" => self.obs = ObsTier::parse(value)?,
+            "trace-out" | "trace_out" => self.trace_out = Some(value.into()),
+            "obs-sample" | "obs_sample" => {
+                let n: usize = value.parse()?;
+                anyhow::ensure!(n >= 1, "obs-sample must be >= 1");
+                self.obs_sample = n;
             }
             // engine policy overrides — any grid point from config alone
             "source" => self.source_override = Some(parse_projection(value)?),
@@ -707,6 +734,44 @@ mod tests {
         assert!(c.apply("guard", "retry").is_err());
         assert!(c.apply("fault", "bogus@1").is_err());
         assert!(c.apply("checkpoint-interval", "x").is_err());
+    }
+
+    #[test]
+    fn obs_keys_round_trip() {
+        let mut c = TrainConfig::default();
+        c.apply("obs", "trace").unwrap();
+        c.apply("trace-out", "runs/a/trace.json").unwrap();
+        c.apply("obs-sample", "10").unwrap();
+        assert_eq!(c.obs, ObsTier::Trace);
+        assert_eq!(c.trace_out.as_deref(), Some("runs/a/trace.json"));
+        assert_eq!(c.obs_sample, 10);
+
+        // the config.json dump records the effective values and replays
+        let back = Json::parse(&c.to_json().to_string()).unwrap();
+        assert_eq!(back.req("obs").unwrap().as_str().unwrap(), "trace");
+        assert_eq!(
+            back.req("trace_out").unwrap().as_str().unwrap(),
+            "runs/a/trace.json"
+        );
+        assert_eq!(back.req("obs_sample").unwrap().as_usize().unwrap(), 10);
+        let mut replay = TrainConfig::default();
+        replay.apply("obs", back.req("obs").unwrap().as_str().unwrap()).unwrap();
+        replay
+            .apply("trace_out", back.req("trace_out").unwrap().as_str().unwrap())
+            .unwrap();
+        assert_eq!(replay.obs, ObsTier::Trace);
+        assert_eq!(replay.trace_out.as_deref(), Some("runs/a/trace.json"));
+
+        // defaults: off, sample 1, no trace path
+        let d = Json::parse(&TrainConfig::default().to_json().to_string()).unwrap();
+        assert_eq!(d.req("obs").unwrap().as_str().unwrap(), "off");
+        assert_eq!(d.req("obs_sample").unwrap().as_usize().unwrap(), 1);
+        assert!(d.get("trace_out").is_none());
+
+        // bad values are rejected at parse time
+        assert!(c.apply("obs", "verbose").is_err());
+        assert!(c.apply("obs-sample", "0").is_err());
+        assert!(c.apply("obs-sample", "x").is_err());
     }
 
     #[test]

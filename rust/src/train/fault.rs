@@ -174,6 +174,7 @@ impl FaultInjector {
             (f32::NAN, "grad-nan")
         };
         g.data[at] = poison;
+        crate::obs::count_fault_firing();
         Some(name)
     }
 
@@ -184,6 +185,7 @@ impl FaultInjector {
         if self.plan.worker_fail == Some((step, lane))
             && !self.worker_fired.swap(true, Ordering::SeqCst)
         {
+            crate::obs::count_fault_firing();
             panic!("injected fault: worker lane {lane} failed at step {step}");
         }
     }

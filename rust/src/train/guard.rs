@@ -108,10 +108,20 @@ impl StepGuard {
 
     /// Check one step's reduced loss and post-clip gradients. Allocation-
     /// free. With `GuardPolicy::Off` this is a single branch — no scan.
+    /// Trips feed the `obs::guard_trips` counter (an atomic bump — the
+    /// verdict itself stays heap-free).
     pub fn check(&mut self, loss: f64, grads: &[Matrix]) -> GuardVerdict {
         if self.policy == GuardPolicy::Off {
             return GuardVerdict::Healthy;
         }
+        let verdict = self.scan(loss, grads);
+        if !verdict.is_healthy() {
+            crate::obs::count_guard_trip();
+        }
+        verdict
+    }
+
+    fn scan(&mut self, loss: f64, grads: &[Matrix]) -> GuardVerdict {
         for (i, g) in grads.iter().enumerate() {
             if !all_finite(&g.data) {
                 return GuardVerdict::NonFiniteGrad { layer: i };

@@ -8,6 +8,7 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::{CommModel, Communicator, WorkerSet, ZeroSchedule};
 use crate::data::{BatchLoader, CorpusConfig, SyntheticCorpus};
+use crate::obs::{self, trace::TraceWriter, ObsTier};
 use crate::optim::{LayerMeta, Optimizer};
 use crate::runtime::{Executable, Manifest, ModelSpec, Runtime};
 use crate::runtime::client::Value;
@@ -97,6 +98,30 @@ impl Trainer {
         std::fs::create_dir_all(&run_dir)?;
         std::fs::write(run_dir.join("config.json"), cfg.to_json().to_string())?;
         let mut metrics = JsonlWriter::create(run_dir.join("metrics.jsonl"))?;
+
+        // --- observability: resolve the tier before the optimizer builds --
+        // (the engine sizes its event rings at build time from the active
+        // tier). `obs=` in the config wins over FFT_SUBSPACE_OBS, same
+        // precedence as `fault=` vs its env knob.
+        let tier =
+            if cfg.obs != ObsTier::Off { cfg.obs } else { ObsTier::from_env()? };
+        obs::set_tier(tier);
+        obs::set_sample(cfg.obs_sample as u64);
+        obs::counters().reset();
+        let mut tracer = if tier == ObsTier::Trace {
+            let path = cfg
+                .trace_out
+                .clone()
+                .map(PathBuf::from)
+                .unwrap_or_else(|| run_dir.join("trace.json"));
+            Some(TraceWriter::create(&path)?)
+        } else {
+            None
+        };
+        // reused drain buffer: per-step engine-event export without a
+        // per-step allocation once it reaches steady size
+        let mut drained: Vec<obs::Event> = Vec::new();
+        let mut trace_dropped = 0u64;
 
         // optimizer — preset or engine grid point, per the config's
         // source/residual/rotation overrides (optionally AOT-graph-backed
@@ -216,6 +241,26 @@ impl Trainer {
         const MAX_ROLLBACKS: usize = 8;
         let mut rollbacks = 0usize;
 
+        // --- structured memory report at run start (step 0 / resume step) --
+        // Always emitted, every tier: the memory table is the paper's
+        // headline comparison and costs one record.
+        {
+            let rep = opt.memory_report();
+            let to_obj = |m: &std::collections::BTreeMap<String, u64>| {
+                crate::util::json::Json::Obj(
+                    m.iter().map(|(k, v)| (k.clone(), num(*v as f64))).collect(),
+                )
+            };
+            metrics.record(&obj(vec![
+                ("kind", s("memory_report")),
+                ("step", num(start_step as f64)),
+                ("optimizer", s(opt.name())),
+                ("total_bytes", num(rep.total() as f64)),
+                ("per_layer", to_obj(&rep.per_layer)),
+                ("shared", to_obj(&rep.shared)),
+            ]))?;
+        }
+
         let timer = Timer::start();
         let mut phases = PhaseTimes::new();
         let mut tail_losses: Vec<f64> = Vec::new();
@@ -227,6 +272,7 @@ impl Trainer {
         while step < cfg.steps {
             // --- per-worker batch staging on real threads ----------------
             let bpw = cfg.batch_per_worker;
+            let t0 = obs::now_us();
             let batches: Vec<(Vec<i32>, Vec<usize>)> = phases.time("batch", || {
                 let mut slots: Vec<Option<(Vec<i32>, Vec<usize>)>> =
                     (0..cfg.workers).map(|_| None).collect();
@@ -240,12 +286,14 @@ impl Trainer {
                 });
                 slots.into_iter().map(|s| s.expect("staged batch")).collect()
             });
+            trace_phase(&mut tracer, "batch", t0, step)?;
 
             // --- per-worker fwd/bwd through PJRT (driver thread: the PJRT
             // client is Rc-backed; see coordinator::workers) --------------
             let mut worker_grads: Vec<Vec<Matrix>> = Vec::with_capacity(cfg.workers);
             let mut step_loss = 0.0f64;
             for (tokens, shape) in batches {
+                let t0 = obs::now_us();
                 let outs = phases.time("fwdbwd", || {
                     let mut inputs: Vec<Value> = self
                         .params
@@ -255,12 +303,14 @@ impl Trainer {
                     inputs.push(Value::tokens(tokens, shape));
                     self.fwdbwd.run(&inputs)
                 })?;
+                trace_phase(&mut tracer, "fwdbwd", t0, step)?;
                 step_loss += outs.scalar(0) as f64;
                 worker_grads.push(outs.values.into_iter().skip(1).collect());
             }
             step_loss /= cfg.workers as f64;
 
             // --- ring all-reduce per parameter --------------------------
+            let t0 = obs::now_us();
             let grads: Vec<Matrix> = phases.time("allreduce", || {
                 let n_params = self.params.len();
                 let mut reduced = Vec::with_capacity(n_params);
@@ -274,6 +324,7 @@ impl Trainer {
                 }
                 reduced
             });
+            trace_phase(&mut tracer, "allreduce", t0, step)?;
 
             // --- deterministic fault injection (post-reduce, pre-clip) --
             let mut grads = grads;
@@ -288,17 +339,22 @@ impl Trainer {
             // Checked after clipping (what the optimizer would consume),
             // before any state mutation — a tripped step leaves params and
             // optimizer state exactly as they were.
+            let t0 = obs::now_us();
             let verdict = guard.check(step_loss, &grads);
+            trace_phase(&mut tracer, "guard", t0, step)?;
             if !verdict.is_healthy() {
                 // the regular loss record is skipped on tripped steps (a
-                // NaN would poison the JSONL); this event replaces it
+                // NaN would poison the JSONL); this event replaces it —
+                // and flushes, so a run killed mid-incident keeps it
                 metrics.record(&obj(vec![
                     ("step", num(step as f64)),
                     ("guard", s(verdict.reason())),
                     ("policy", s(guard.policy().name())),
                 ]))?;
+                metrics.flush()?;
                 if rollback {
                     rollbacks += 1;
+                    obs::count_rollback();
                     anyhow::ensure!(
                         rollbacks <= MAX_ROLLBACKS,
                         "guard tripped {rollbacks} times under rollback \
@@ -355,9 +411,32 @@ impl Trainer {
 
             // --- optimizer step (ZeRO owner-computes + broadcast model) --
             let lr = sched.at(step);
+            let t0 = obs::now_us();
             phases.time("optimizer", || {
                 opt.step(&mut self.params, &grads, lr);
             });
+            trace_phase(&mut tracer, "optimizer", t0, step)?;
+            // per-layer engine spans recorded inside opt.step drain here,
+            // off the hot path; gauges land in metrics.jsonl
+            if let Some(tw) = tracer.as_mut() {
+                drained.clear();
+                trace_dropped += opt.drain_events(&mut drained);
+                for e in &drained {
+                    tw.emit_event(e, step as u64)?;
+                }
+            }
+            if obs::enabled() {
+                for (layer, t, q) in opt.refresh_gauges() {
+                    metrics.record(&obj(vec![
+                        ("kind", s("subspace_quality")),
+                        ("step", num(t as f64)),
+                        ("layer", s(&layer)),
+                        ("energy_ratio", num(q.energy_ratio as f64)),
+                        ("resid_norm", num(q.resid_norm as f64)),
+                        ("overlap", num(q.overlap as f64)),
+                    ]))?;
+                }
+            }
             let zstats = zero.account_step(&self.metas, opt.as_ref(), &mut comm);
             update_bytes += zstats.update_broadcast_bytes;
             full_bytes += zstats.full_broadcast_bytes;
@@ -375,9 +454,10 @@ impl Trainer {
                             optimizer: opt.name().to_string(),
                             opt_state,
                         };
-                        if let Err(e) =
-                            rot.save(completed as u64, &self.params, &state)
-                        {
+                        let t0 = obs::now_us();
+                        let saved = rot.save(completed as u64, &self.params, &state);
+                        trace_phase(&mut tracer, "checkpoint", t0, step)?;
+                        if let Err(e) = saved {
                             // a failed (torn) snapshot must not kill the
                             // run: the previous good snapshot is intact
                             eprintln!(
@@ -450,6 +530,27 @@ impl Trainer {
             ("val_ppl", num(val_ppl)),
             ("wall_secs", num(wall)),
         ]))?;
+        // --- telemetry exporters (counters tier and up) ------------------
+        if obs::enabled() {
+            let snap = obs::counters().snapshot();
+            let mut rec = vec![("kind", s("obs_counters"))];
+            for (name, value) in snap.entries() {
+                rec.push((name, num(value as f64)));
+            }
+            if trace_dropped > 0 {
+                rec.push(("trace_dropped", num(trace_dropped as f64)));
+            }
+            metrics.record(&obj(rec))?;
+            std::fs::write(
+                run_dir.join("metrics.prom"),
+                obs::trace::prometheus_text(&snap),
+            )?;
+            println!("{}", obs::trace::summary_table(&snap));
+        }
+        if let Some(tw) = tracer.as_mut() {
+            tw.finish()?;
+            println!("trace: {}", tw.path.display());
+        }
         metrics.flush()?;
 
         // --- full-state checkpoint (v2) ---------------------------------
@@ -540,6 +641,27 @@ pub fn init_params(spec: &ModelSpec, seed: u64) -> Vec<Matrix> {
             }
         })
         .collect()
+}
+
+/// Emit a trainer-thread phase span (`tid` 0) when the run is tracing.
+/// `t0` is the `obs::now_us()` reading taken just before the phase ran.
+fn trace_phase(
+    tw: &mut Option<TraceWriter>,
+    name: &str,
+    t0: u64,
+    step: usize,
+) -> Result<()> {
+    if let Some(tw) = tw {
+        tw.emit(
+            name,
+            0,
+            t0,
+            obs::now_us().saturating_sub(t0),
+            step as u64,
+            obs::Event::NO_LAYER,
+        )?;
+    }
+    Ok(())
 }
 
 /// Global-norm gradient clipping.

@@ -50,27 +50,47 @@ impl CsvWriter {
 }
 
 /// JSONL sink for per-step metric records.
+///
+/// Records auto-flush every [`JsonlWriter::FLUSH_EVERY`] lines (and callers
+/// flush explicitly at noteworthy events — guard trips, rollbacks, run
+/// end), so a killed run leaves a valid JSONL prefix on disk instead of
+/// whatever happened to escape the `BufWriter` — pinned by the mid-stream
+/// kill test in `tests/obs_determinism.rs`.
 pub struct JsonlWriter {
     out: BufWriter<File>,
     pub path: PathBuf,
+    since_flush: usize,
 }
 
 impl JsonlWriter {
+    /// Flush cadence in records — small enough that a crash loses seconds
+    /// of telemetry, large enough that flushing never shows up in profiles.
+    pub const FLUSH_EVERY: usize = 32;
+
     pub fn create(path: impl AsRef<Path>) -> Result<Self> {
         let path = path.as_ref().to_path_buf();
         if let Some(dir) = path.parent() {
             fs::create_dir_all(dir)?;
         }
-        Ok(JsonlWriter { out: BufWriter::new(File::create(&path)?), path })
+        Ok(JsonlWriter {
+            out: BufWriter::new(File::create(&path)?),
+            path,
+            since_flush: 0,
+        })
     }
 
     pub fn record(&mut self, v: &Json) -> Result<()> {
         writeln!(self.out, "{}", v.to_string())?;
+        self.since_flush += 1;
+        if self.since_flush >= Self::FLUSH_EVERY {
+            self.flush()?;
+        }
         Ok(())
     }
 
     pub fn flush(&mut self) -> Result<()> {
         self.out.flush()?;
+        self.since_flush = 0;
         Ok(())
     }
 }

@@ -29,6 +29,12 @@
 //! typed-storage layer must not cost a single steady-state allocation
 //! either.
 //!
+//! Since the observability PR the whole sweep additionally runs under all
+//! three telemetry tiers (`obs=off|counters|trace`): counters are static
+//! atomics and trace spans write into rings the engine preallocated at
+//! build time, so full telemetry must not cost a single steady-state
+//! allocation either.
+//!
 //! This file is its own test binary (integration test), so the global
 //! allocator and the single `#[test]` share the process without
 //! interference from the rest of the suite.
@@ -36,6 +42,7 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 
+use fft_subspace::obs::{self, ObsTier};
 use fft_subspace::optim::{
     build_optimizer, LayerMeta, Optimizer, OptimizerConfig, OptimizerKind, ParamKind,
 };
@@ -116,68 +123,81 @@ fn steady_state_steps_are_allocation_free() {
     // before counting. (One #[test] for everything: the counter is
     // process-global, so concurrently-running tests would pollute each
     // other's windows.)
-    for kind in [
-        OptimizerKind::DctAdamW,
-        OptimizerKind::Trion,
-        OptimizerKind::GaLore,
-        OptimizerKind::Fira,
-        OptimizerKind::Frugal,
-        OptimizerKind::LdAdamW,
-    ] {
-        for &state_dtype in &dtypes {
-            for threads in [1usize, 3] {
-                let cfg = OptimizerConfig {
-                    rank: 8,
-                    threads: Some(threads),
-                    state_dtype,
-                    // exercise refresh AND project-only steps inside the
-                    // counted window for every preset
-                    update_interval: 4,
-                    ..Default::default()
-                };
-                let mut opt = build_optimizer(&kind, &metas, &cfg);
-                let mut params: Vec<Matrix> = metas
-                    .iter()
-                    .map(|m| Matrix::zeros(m.rows, m.cols))
-                    .collect();
-                // The numerical-health guard rides the hot path when
-                // enabled (`guard=skip|rollback`), so a guarded step must
-                // be allocation-free too: the finite scan is a pure SIMD
-                // reduction and the EMA update is two scalar ops.
-                let mut guard = StepGuard::new(GuardPolicy::Skip, 2.0);
+    // Every proof runs under all three observability tiers (PR 7): the
+    // zero-allocation contract holds with telemetry fully on. `counters`
+    // adds relaxed atomic increments (no heap); `trace` adds span pushes
+    // into the engine's preallocated event rings — the tier must be
+    // active at *build* time, because the engine sizes its rings then.
+    // Nobody drains the rings here, so they fill and start dropping
+    // (a Cell increment, not a realloc) — exactly the contract.
+    for tier in [ObsTier::Off, ObsTier::Counters, ObsTier::Trace] {
+        obs::set_tier(tier);
+        for kind in [
+            OptimizerKind::DctAdamW,
+            OptimizerKind::Trion,
+            OptimizerKind::GaLore,
+            OptimizerKind::Fira,
+            OptimizerKind::Frugal,
+            OptimizerKind::LdAdamW,
+        ] {
+            for &state_dtype in &dtypes {
+                for threads in [1usize, 3] {
+                    let cfg = OptimizerConfig {
+                        rank: 8,
+                        threads: Some(threads),
+                        state_dtype,
+                        // exercise refresh AND project-only steps inside the
+                        // counted window for every preset
+                        update_interval: 4,
+                        ..Default::default()
+                    };
+                    let mut opt = build_optimizer(&kind, &metas, &cfg);
+                    let mut params: Vec<Matrix> = metas
+                        .iter()
+                        .map(|m| Matrix::zeros(m.rows, m.cols))
+                        .collect();
+                    // The numerical-health guard rides the hot path when
+                    // enabled (`guard=skip|rollback`), so a guarded step must
+                    // be allocation-free too: the finite scan is a pure SIMD
+                    // reduction and the EMA update is two scalar ops.
+                    let mut guard = StepGuard::new(GuardPolicy::Skip, 2.0);
 
-                // Warmup: several full refresh cycles fill the per-shard
-                // workspace pools, the shared plan caches and the per-plan
-                // scratch pools up to their parallel high-water mark.
-                for _ in 0..12 {
-                    assert!(guard.check(1.0, &grads).is_healthy());
-                    opt.step(&mut params, &grads, 1e-3);
+                    // Warmup: several full refresh cycles fill the per-shard
+                    // workspace pools, the shared plan caches and the per-plan
+                    // scratch pools up to their parallel high-water mark.
+                    for _ in 0..12 {
+                        assert!(guard.check(1.0, &grads).is_healthy());
+                        opt.step(&mut params, &grads, 1e-3);
+                    }
+
+                    ALLOC_CALLS.store(0, Ordering::SeqCst);
+                    ENABLED.store(true, Ordering::SeqCst);
+                    for _ in 0..8 {
+                        assert!(guard.check(1.0, &grads).is_healthy());
+                        opt.step(&mut params, &grads, 1e-3);
+                    }
+                    ENABLED.store(false, Ordering::SeqCst);
+
+                    let allocs = ALLOC_CALLS.load(Ordering::SeqCst);
+                    assert_eq!(
+                        allocs,
+                        0,
+                        "steady-state {} steps (threads={threads}, \
+                         state-dtype={}, obs={}) performed {allocs} heap \
+                         allocations (expected zero — a workspace buffer is \
+                         being dropped or resized, the pool dispatch \
+                         allocates, or a telemetry hook heap-allocates)",
+                        kind.name(),
+                        state_dtype.name(),
+                        tier.name()
+                    );
+
+                    // sanity: the optimizer actually did work in the counted
+                    // window
+                    assert!(params[0].fro_norm() > 0.0);
                 }
-
-                ALLOC_CALLS.store(0, Ordering::SeqCst);
-                ENABLED.store(true, Ordering::SeqCst);
-                for _ in 0..8 {
-                    assert!(guard.check(1.0, &grads).is_healthy());
-                    opt.step(&mut params, &grads, 1e-3);
-                }
-                ENABLED.store(false, Ordering::SeqCst);
-
-                let allocs = ALLOC_CALLS.load(Ordering::SeqCst);
-                assert_eq!(
-                    allocs,
-                    0,
-                    "steady-state {} steps (threads={threads}, \
-                     state-dtype={}) performed {allocs} heap allocations \
-                     (expected zero — a workspace buffer is being dropped \
-                     or resized, or the pool dispatch allocates)",
-                    kind.name(),
-                    state_dtype.name()
-                );
-
-                // sanity: the optimizer actually did work in the counted
-                // window
-                assert!(params[0].fro_norm() > 0.0);
             }
         }
     }
+    obs::set_tier(ObsTier::Off);
 }

@@ -1,0 +1,339 @@
+//! Observability contracts (PR 7):
+//!
+//! 1. **Read-only telemetry** — the training trajectory is
+//!    `to_bits`-identical across `obs=off|counters|trace` for every
+//!    engine preset: hooks observe values the step already computes and
+//!    never feed back into the math.
+//! 2. **Deterministic counters** — quantities that are functions of the
+//!    data (ring all-reduce bytes) are identical for any thread-pool
+//!    size, because the ring schedule depends only on shapes.
+//! 3. **Deterministic event sets** — the per-lane ring merge
+//!    (`RingSet::drain_all`, fixed ascending lane order; chunk `k` ↔
+//!    ring `k`) records the same (name, layer) span set for 1 or 3
+//!    lanes; only wall-clock timestamps may differ.
+//! 4. **Loadable exports** — a traced run produces a Chrome-trace JSON
+//!    array our own parser accepts, and per-refresh subspace-quality
+//!    gauges for the low-rank layers.
+//! 5. **Crash-durable metrics** — `JsonlWriter` flushes every
+//!    `FLUSH_EVERY` records, so a run killed mid-stream (via the fault
+//!    injector's worker-lane panic) leaves a valid JSONL prefix of
+//!    exactly the flushed records, not a torn tail.
+//!
+//! The tier/sample/counter statics are process-global, so the tests that
+//! touch them serialize on a file-local mutex.
+
+use std::sync::{Arc, Mutex};
+
+use fft_subspace::coordinator::{CommModel, Communicator};
+use fft_subspace::obs::{self, trace::TraceWriter, ObsTier};
+use fft_subspace::optim::{
+    build_optimizer, LayerMeta, Optimizer, OptimizerConfig, OptimizerKind, ParamKind,
+};
+use fft_subspace::parallel::ThreadPool;
+use fft_subspace::tensor::{Matrix, StateDtype};
+use fft_subspace::train::{FaultInjector, FaultPlan};
+use fft_subspace::util::csv::JsonlWriter;
+use fft_subspace::util::json::{num, obj, s, Json};
+use fft_subspace::util::Pcg64;
+
+static OBS_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    OBS_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Same mixed layer zoo as `tests/fault_recovery.rs`.
+fn layer_zoo() -> Vec<LayerMeta> {
+    vec![
+        LayerMeta::new("wq", 48, 32, ParamKind::Linear),
+        LayerMeta::new("w_gate", 32, 48, ParamKind::Linear),
+        LayerMeta::new("wk", 40, 24, ParamKind::Linear),
+        LayerMeta::new("wv", 32, 32, ParamKind::Linear),
+        LayerMeta::new("norm", 1, 32, ParamKind::Norm),
+        LayerMeta::new("embed", 64, 32, ParamKind::Embed),
+    ]
+}
+
+fn grad_seq(metas: &[LayerMeta], steps: usize, seed: u64) -> Vec<Vec<Matrix>> {
+    let mut rng = Pcg64::seed(seed);
+    (0..steps)
+        .map(|_| {
+            metas
+                .iter()
+                .map(|m| Matrix::randn(m.rows, m.cols, 0.1, &mut rng))
+                .collect()
+        })
+        .collect()
+}
+
+fn bits(params: &[Matrix]) -> Vec<Vec<u32>> {
+    params
+        .iter()
+        .map(|p| p.data.iter().map(|v| v.to_bits()).collect())
+        .collect()
+}
+
+fn cfg_with_threads(threads: usize) -> OptimizerConfig {
+    OptimizerConfig {
+        rank: 8,
+        threads: Some(threads),
+        update_interval: 3,
+        state_dtype: StateDtype::F32,
+        ..Default::default()
+    }
+}
+
+fn zero_params(metas: &[LayerMeta]) -> Vec<Matrix> {
+    metas.iter().map(|m| Matrix::zeros(m.rows, m.cols)).collect()
+}
+
+const SIX_PRESETS: [OptimizerKind; 6] = [
+    OptimizerKind::DctAdamW,
+    OptimizerKind::Trion,
+    OptimizerKind::GaLore,
+    OptimizerKind::Fira,
+    OptimizerKind::Frugal,
+    OptimizerKind::LdAdamW,
+];
+
+/// Contract 1: for every preset, 10 steps under each tier end on the
+/// exact same parameter bits. The tier is set *before* the optimizer
+/// builds (the engine sizes its rings then), exactly as the trainer does.
+#[test]
+fn trajectory_bits_identical_across_tiers() {
+    let _g = lock();
+    let metas = layer_zoo();
+    let grads = grad_seq(&metas, 10, 42);
+    for threads in [1usize, 3] {
+        let cfg = cfg_with_threads(threads);
+        for kind in &SIX_PRESETS {
+            let mut reference: Option<Vec<Vec<u32>>> = None;
+            for tier in [ObsTier::Off, ObsTier::Counters, ObsTier::Trace] {
+                obs::set_tier(tier);
+                obs::set_sample(1);
+                obs::counters().reset();
+                let mut opt = build_optimizer(kind, &metas, &cfg);
+                let mut params = zero_params(&metas);
+                for (step, g) in grads.iter().enumerate() {
+                    opt.step(&mut params, g, 1e-2 / (1.0 + step as f32 * 0.1));
+                }
+                let b = bits(&params);
+                match &reference {
+                    None => reference = Some(b),
+                    Some(r) => assert_eq!(
+                        r,
+                        &b,
+                        "{} (threads={threads}): obs={} changed the trajectory",
+                        kind.name(),
+                        tier.name()
+                    ),
+                }
+            }
+        }
+    }
+    obs::set_tier(ObsTier::Off);
+}
+
+/// Contract 2: the `allreduce_bytes` counter is a pure function of the
+/// reduced shapes and world size — identical for pool sizes 1, 3 and 8.
+#[test]
+fn allreduce_bytes_counter_stable_across_pool_sizes() {
+    let _g = lock();
+    obs::set_tier(ObsTier::Counters);
+    let world = 4usize;
+    let mut rng = Pcg64::seed(7);
+    let shapes = [(48usize, 32usize), (40, 24), (1, 32)];
+    let mut per_pool = Vec::new();
+    for pool_n in [1usize, 3, 8] {
+        obs::counters().reset();
+        let pool = Arc::new(ThreadPool::new(pool_n));
+        let mut comm = Communicator::with_pool(world, CommModel::default(), pool);
+        for &(r, c) in &shapes {
+            let proto = Matrix::randn(r, c, 0.5, &mut rng);
+            let mut replicas: Vec<Matrix> =
+                (0..world).map(|_| proto.clone()).collect();
+            comm.all_reduce_mean(&mut replicas);
+        }
+        let counted = obs::counters().snapshot().allreduce_bytes;
+        assert_eq!(
+            counted, comm.stats.all_reduce_bytes,
+            "pool={pool_n}: obs mirror diverged from CommStats"
+        );
+        assert!(counted > 0, "pool={pool_n}: nothing counted");
+        per_pool.push(counted);
+    }
+    assert_eq!(per_pool[0], per_pool[1], "pool size changed all-reduce bytes");
+    assert_eq!(per_pool[0], per_pool[2], "pool size changed all-reduce bytes");
+    obs::set_tier(ObsTier::Off);
+}
+
+/// Drive `steps` engine steps under `obs=trace`, draining the rings after
+/// every step. Returns the per-step sorted (name, layer) span sets and
+/// the flat event list.
+fn traced_run(
+    threads: usize,
+    steps: usize,
+) -> (Vec<Vec<(String, u32)>>, Vec<obs::Event>) {
+    let metas = layer_zoo();
+    let grads = grad_seq(&metas, steps, 42);
+    let cfg = cfg_with_threads(threads);
+    let mut opt = build_optimizer(&OptimizerKind::DctAdamW, &metas, &cfg);
+    let mut params = zero_params(&metas);
+    let mut per_step = Vec::new();
+    let mut all = Vec::new();
+    let mut dropped = 0u64;
+    for (step, g) in grads.iter().enumerate() {
+        opt.step(&mut params, g, 1e-2 / (1.0 + step as f32 * 0.1));
+        let mut events: Vec<obs::Event> = Vec::new();
+        dropped += opt.drain_events(&mut events);
+        let mut set: Vec<(String, u32)> =
+            events.iter().map(|e| (e.name.to_string(), e.layer)).collect();
+        set.sort();
+        per_step.push(set);
+        all.extend(events);
+    }
+    assert_eq!(dropped, 0, "rings drained every step must never drop");
+    (per_step, all)
+}
+
+/// Contract 3: the recorded span set is identical for 1 and 3 lanes —
+/// chunk-indexed rings merged in fixed lane order make the event set a
+/// function of the layer list, not of the thread count.
+#[test]
+fn event_set_identical_across_lane_counts() {
+    let _g = lock();
+    obs::set_tier(ObsTier::Trace);
+    obs::set_sample(1);
+    let (seq, _) = traced_run(1, 8);
+    let (par, _) = traced_run(3, 8);
+    assert_eq!(seq, par, "span set depends on lane count");
+    obs::set_tier(ObsTier::Off);
+}
+
+/// Contract 4: the Chrome-trace export parses back, and every DCT
+/// low-rank layer reports in-range subspace-quality gauges at refreshes.
+#[test]
+fn trace_export_loads_and_gauges_cover_low_rank_layers() {
+    let _g = lock();
+    obs::set_tier(ObsTier::Trace);
+    obs::set_sample(1);
+    let metas = layer_zoo();
+    let steps = 8usize;
+    let grads = grad_seq(&metas, steps, 42);
+    let cfg = cfg_with_threads(3);
+    let mut opt = build_optimizer(&OptimizerKind::DctAdamW, &metas, &cfg);
+    let mut params = zero_params(&metas);
+
+    let path = std::env::temp_dir().join(format!(
+        "fft_subspace_obs_trace_{}.json",
+        std::process::id()
+    ));
+    let mut tw = TraceWriter::create(&path).unwrap();
+    let mut gauges: std::collections::BTreeMap<String, Vec<obs::SubspaceQuality>> =
+        Default::default();
+    let mut names: std::collections::BTreeSet<&'static str> = Default::default();
+    for (step, g) in grads.iter().enumerate() {
+        opt.step(&mut params, g, 1e-2);
+        let mut events: Vec<obs::Event> = Vec::new();
+        opt.drain_events(&mut events);
+        for e in &events {
+            names.insert(e.name);
+            tw.emit_event(e, step as u64).unwrap();
+        }
+        for (layer, _t, q) in opt.refresh_gauges() {
+            gauges.entry(layer).or_default().push(q);
+        }
+    }
+    tw.finish().unwrap();
+
+    // span vocabulary: refresh steps and project-only steps both occurred
+    for want in ["refresh", "project", "rule", "update", "dense"] {
+        assert!(names.contains(want), "no {want:?} span recorded ({names:?})");
+    }
+
+    // the export is a loadable JSON array of complete events
+    let text = std::fs::read_to_string(&path).unwrap();
+    let doc = Json::parse(&text).unwrap();
+    let events = doc.as_arr().unwrap();
+    assert!(!events.is_empty());
+    for e in events.iter().take(4) {
+        assert_eq!(e.req("ph").unwrap().as_str().unwrap(), "X");
+        assert!(e.req("name").unwrap().as_str().is_some());
+        assert!(e.req("args").unwrap().req("step").unwrap().as_usize().is_some());
+    }
+    let _ = std::fs::remove_file(&path);
+
+    // every DCT low-rank layer reported gauges, with multiple refreshes
+    // inside 8 steps at update_interval=3, and all values in range
+    for layer in ["wq", "w_gate", "wk", "wv"] {
+        let qs = gauges.get(layer).unwrap_or_else(|| {
+            panic!("no subspace-quality gauges for layer {layer} ({gauges:?})")
+        });
+        assert!(qs.len() >= 2, "{layer}: expected >=2 refreshes, got {}", qs.len());
+        for q in qs {
+            assert!(
+                q.energy_ratio > 0.0 && q.energy_ratio <= 1.0 + 1e-6,
+                "{layer}: energy_ratio {} out of range",
+                q.energy_ratio
+            );
+            assert!(q.resid_norm.is_finite() && q.resid_norm >= 0.0);
+            assert!(
+                (0.0..=1.0).contains(&q.overlap),
+                "{layer}: overlap {} out of range",
+                q.overlap
+            );
+        }
+        // the first refresh has no predecessor basis by definition
+        assert_eq!(qs[0].overlap, 0.0, "{layer}: first refresh overlap");
+    }
+    obs::set_tier(ObsTier::Off);
+}
+
+/// Contract 5 (satellite 1): a run killed mid-stream keeps a valid JSONL
+/// prefix of exactly the records the periodic flush already landed. The
+/// kill is the fault injector's worker-lane panic; "losing the process"
+/// is modeled by forgetting the writer so its `BufWriter` never flushes
+/// the unflushed tail.
+#[test]
+fn mid_stream_kill_leaves_valid_jsonl_prefix() {
+    let dir = std::env::temp_dir()
+        .join(format!("fft_subspace_obs_kill_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let path = dir.join("metrics.jsonl");
+    let mut writer = JsonlWriter::create(&path).unwrap();
+    let kill_step = 50usize;
+    let injector = FaultInjector::new(
+        FaultPlan::parse(&format!("worker-fail@{kill_step}.0")).unwrap(),
+    );
+
+    let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        for step in 0..60usize {
+            injector.maybe_fail_worker(step, 0);
+            writer
+                .record(&obj(vec![
+                    ("step", num(step as f64)),
+                    ("tag", s("alive")),
+                ]))
+                .unwrap();
+        }
+    }));
+    assert!(run.is_err(), "the injected worker fault must fire");
+    // the "process died": nothing flushes the buffered tail
+    std::mem::forget(writer);
+
+    // 50 records made it in before the kill; one periodic flush landed at
+    // FLUSH_EVERY, the buffered remainder died with the writer
+    let text = std::fs::read_to_string(&path).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(
+        lines.len(),
+        JsonlWriter::FLUSH_EVERY,
+        "expected exactly one flush window on disk"
+    );
+    for (i, line) in lines.iter().enumerate() {
+        let rec = Json::parse(line)
+            .unwrap_or_else(|e| panic!("line {i} is torn: {e:#} ({line:?})"));
+        assert_eq!(rec.req("step").unwrap().as_usize().unwrap(), i);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
