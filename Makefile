@@ -33,6 +33,11 @@ test-faults:
 # The fourth loop sweeps the observability axis: FFT_SUBSPACE_OBS at the
 # extremes (off / trace) over the determinism + zero-allocation suites —
 # telemetry must never change the bits or cost a steady-state allocation.
+# The fifth loop sweeps the step-plan axis: FFT_SUBSPACE_STEP_PLAN runs the
+# engine suites under the fused shape-batched group programs and under the
+# interpreted per-layer oracle — resume, fault recovery, thread-count
+# determinism and the fused-vs-interpreted equivalence suite must all hold
+# in both cells.
 test-matrix:
 	cd $(RUST_DIR) && for s in 0 1; do for t in 1 4; do \
 		echo "== FFT_SUBSPACE_SIMD=$$s FFT_SUBSPACE_THREADS=$$t =="; \
@@ -52,6 +57,12 @@ test-matrix:
 		echo "== FFT_SUBSPACE_OBS=$$o (observability) =="; \
 		FFT_SUBSPACE_OBS=$$o $(CARGO) test -q \
 			--test obs_determinism --test alloc_steady_state || exit 1; \
+	done
+	cd $(RUST_DIR) && for p in fused interpreted; do \
+		echo "== FFT_SUBSPACE_STEP_PLAN=$$p (step plans) =="; \
+		FFT_SUBSPACE_STEP_PLAN=$$p $(CARGO) test -q \
+			--test step_plan_equivalence --test resume_determinism \
+			--test fault_recovery --test parallel_determinism || exit 1; \
 	done
 
 # Full microbench battery (each bench is a plain binary: harness = false).
@@ -78,7 +89,9 @@ bench-makhoul:
 	cd $(RUST_DIR) && $(CARGO) bench --bench bench_makhoul
 
 # Engine-preset optimizer-step sweep (six presets × {dense fallback,
-# low-rank} × 1 vs 4 lanes); writes rust/BENCH_OPTIM.json (override with
+# low-rank} × 1 vs 4 lanes), plus the stack24 group: a 24-block transformer
+# stack timed under step-plan fused vs interpreted — the compiled-plan
+# headline rows; writes rust/BENCH_OPTIM.json (override with
 # BENCH_OPTIM_OUT=...).
 bench-optim:
 	cd $(RUST_DIR) && $(CARGO) bench --bench bench_optim_step

@@ -3,10 +3,9 @@
 //! `o_t` + indices instead of the full update).
 
 use fft_subspace::bench::measure;
+use fft_subspace::bench::models::square_stack;
 use fft_subspace::coordinator::{CommModel, Communicator, ZeroSchedule};
-use fft_subspace::optim::{
-    build_optimizer, LayerMeta, OptimizerConfig, OptimizerKind, ParamKind,
-};
+use fft_subspace::optim::{build_optimizer, LayerMeta, OptimizerConfig, OptimizerKind};
 use fft_subspace::tensor::Matrix;
 use fft_subspace::util::{human, Pcg64};
 
@@ -32,9 +31,7 @@ fn main() {
     println!();
 
     // ZeRO broadcast volume per optimizer step (micro-like model, rank 32)
-    let metas: Vec<LayerMeta> = (0..24)
-        .map(|i| LayerMeta::new(&format!("w{i}"), 128, 128, ParamKind::Linear))
-        .collect();
+    let metas: Vec<LayerMeta> = square_stack(24, 128);
     let cfg = OptimizerConfig { rank: 32, ..Default::default() };
     println!("ZeRO post-update broadcast volume (24 layers 128x128, W=8, r=32):");
     for kind in [OptimizerKind::AdamW, OptimizerKind::Dion, OptimizerKind::Trion] {

@@ -14,30 +14,16 @@
 //! pins the headline claim (low-rank + bf16 ≥ 20% below Adam) in the test
 //! suite so drift fails CI, not just the artifact.
 
-use fft_subspace::optim::{
-    build_optimizer, LayerMeta, OptimizerConfig, OptimizerKind, ParamKind,
-};
+use fft_subspace::bench::models::transformer_stack;
+use fft_subspace::optim::{build_optimizer, LayerMeta, OptimizerConfig, OptimizerKind};
 use fft_subspace::tensor::StateDtype;
 use fft_subspace::util::json::{num, obj, s, Json};
 
-/// Transformer-ish model: embed + head + per-block attention/MLP linears
-/// and a norm. Mirrored by the python regenerator comment in BENCH_MEM.json
-/// — keep the shapes in sync with the engine test above.
+/// Transformer-ish model (shared `bench::models::transformer_stack` zoo,
+/// mirrored by the python regenerator comment in BENCH_MEM.json — keep the
+/// shapes in sync with the engine test above).
 fn model(name: &str, d: usize, blocks: usize, vocab: usize) -> (String, Vec<LayerMeta>) {
-    let ff = d * 11 / 4;
-    let mut metas = vec![
-        LayerMeta::new("embed", vocab, d, ParamKind::Embed),
-        LayerMeta::new("head", d, vocab, ParamKind::Head),
-    ];
-    for l in 0..blocks {
-        for w in ["wq", "wk", "wv", "wo"] {
-            metas.push(LayerMeta::new(&format!("b{l}.{w}"), d, d, ParamKind::Linear));
-        }
-        metas.push(LayerMeta::new(&format!("b{l}.gate"), d, ff, ParamKind::Linear));
-        metas.push(LayerMeta::new(&format!("b{l}.down"), ff, d, ParamKind::Linear));
-        metas.push(LayerMeta::new(&format!("b{l}.norm"), 1, d, ParamKind::Norm));
-    }
-    (name.to_string(), metas)
+    (name.to_string(), transformer_stack(d, blocks, vocab))
 }
 
 fn main() {

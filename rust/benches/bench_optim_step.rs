@@ -15,26 +15,18 @@
 //!
 //! Run via `make bench-optim` in a toolchain-equipped environment.
 
+use fft_subspace::bench::models::{linear_blocks, transformer_stack};
 use fft_subspace::bench::{measure, write_bench_json, BenchRecord};
 use fft_subspace::optim::{
-    build_optimizer, LayerMeta, OptimizerConfig, OptimizerKind, ParamKind,
+    build_optimizer, LayerMeta, OptimizerConfig, OptimizerKind, ParamKind, StepPlanMode,
 };
 use fft_subspace::tensor::Matrix;
 use fft_subspace::util::Pcg64;
 
-/// Transformer-ish layer zoo; `kind` flips between the low-rank path
-/// (Linear) and the dense-AdamW fallback (Head) for the same shapes.
+/// Transformer-ish layer zoo (shared `bench::models` shapes); `kind` flips
+/// between the low-rank path (Linear) and the dense-AdamW fallback (Head).
 fn model(d: usize, layers: usize, kind: ParamKind) -> Vec<LayerMeta> {
-    let ff = d * 11 / 4;
-    let mut metas = Vec::new();
-    for l in 0..layers {
-        for w in ["wq", "wk", "wv", "wo"] {
-            metas.push(LayerMeta::new(&format!("b{l}.{w}"), d, d, kind));
-        }
-        metas.push(LayerMeta::new(&format!("b{l}.gate"), d, ff, kind));
-        metas.push(LayerMeta::new(&format!("b{l}.down"), ff, d, kind));
-    }
-    metas
+    linear_blocks(d, layers, kind)
 }
 
 fn main() {
@@ -104,6 +96,65 @@ fn main() {
                     rank,
                     stats,
                 ));
+            }
+        }
+        println!();
+    }
+
+    // Many-layer stack: the shape-batched step-plan target. 24 repeated
+    // transformer blocks (24× d×d attention, 24× d×ff gate, 24× ff×d down,
+    // plus dense embed/head/norms) — fused vs interpreted per-step cost at
+    // the published cadences, the compiled-plan headline rows.
+    {
+        let d = 64usize;
+        let blocks = 24usize;
+        let metas = transformer_stack(d, blocks, 256);
+        let mut rng = Pcg64::seed(1);
+        let grads: Vec<Matrix> = metas
+            .iter()
+            .map(|m| Matrix::randn(m.rows, m.cols, 0.02, &mut rng))
+            .collect();
+        println!(
+            "== stack24 (d={d}, {blocks} blocks; fused vs interpreted step plans) =="
+        );
+        for kind in [OptimizerKind::DctAdamW, OptimizerKind::Trion, OptimizerKind::GaLore]
+        {
+            for plan in [StepPlanMode::Fused, StepPlanMode::Interpreted] {
+                for &t in &lanes {
+                    let cfg = OptimizerConfig {
+                        rank,
+                        threads: Some(t),
+                        step_plan: plan,
+                        update_interval: if kind == OptimizerKind::GaLore {
+                            200
+                        } else {
+                            1
+                        },
+                        ..Default::default()
+                    };
+                    let mut opt = build_optimizer(&kind, &metas, &cfg);
+                    let mut params: Vec<Matrix> = metas
+                        .iter()
+                        .map(|m| Matrix::zeros(m.rows, m.cols))
+                        .collect();
+                    for _ in 0..3 {
+                        opt.step(&mut params, &grads, 1e-3);
+                    }
+                    let label =
+                        format!("stack24 {} {} t={t}", kind.name(), plan.name());
+                    let stats = measure(&label, 2, 8, || {
+                        opt.step(&mut params, &grads, 1e-3);
+                    });
+                    println!("{}", stats.report());
+                    records.push(BenchRecord::new(
+                        &format!("stack24-{}", kind.name()),
+                        &format!("{}/t{t}", plan.name()),
+                        d,
+                        d,
+                        rank,
+                        stats,
+                    ));
+                }
             }
         }
         println!();

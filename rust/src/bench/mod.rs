@@ -6,6 +6,8 @@
 //! a machine-readable JSON file (`BENCH_PROJ.json` and friends) so the perf
 //! trajectory is trackable across PRs instead of living in scrollback.
 
+pub mod models;
+
 use std::time::Instant;
 
 use crate::simd::{backend, set_backend_override, Backend};

@@ -1,0 +1,78 @@
+//! Shared synthetic model constructors for the bench binaries.
+//!
+//! `bench_mem`, `bench_optim_step` and `bench_collectives` used to carry
+//! private copies of the same transformer-ish layer zoo; shapes live here
+//! once so the benches stay comparable (and BENCH_MEM.json's regenerator
+//! comment has a single source of truth to mirror).
+
+use crate::optim::{LayerMeta, ParamKind};
+
+/// Full transformer-ish stack: embed + head + per-block attention/MLP
+/// linears and a norm. `d` is the model width, `vocab` the embed/head
+/// vocabulary. Attention projections are `d×d`, the MLP is `d×ff`/`ff×d`
+/// with `ff = d·11/4`.
+pub fn transformer_stack(d: usize, blocks: usize, vocab: usize) -> Vec<LayerMeta> {
+    let ff = d * 11 / 4;
+    let mut metas = vec![
+        LayerMeta::new("embed", vocab, d, ParamKind::Embed),
+        LayerMeta::new("head", d, vocab, ParamKind::Head),
+    ];
+    for l in 0..blocks {
+        push_block(&mut metas, l, d, ff, ParamKind::Linear);
+        metas.push(LayerMeta::new(&format!("b{l}.norm"), 1, d, ParamKind::Norm));
+    }
+    metas
+}
+
+/// Just the per-block linear set (no embed/head/norm), with a selectable
+/// param kind so step benches can flip the same shapes between the
+/// low-rank path (`Linear`) and the dense-AdamW fallback (`Head`).
+pub fn linear_blocks(d: usize, blocks: usize, kind: ParamKind) -> Vec<LayerMeta> {
+    let ff = d * 11 / 4;
+    let mut metas = Vec::with_capacity(blocks * 6);
+    for l in 0..blocks {
+        push_block(&mut metas, l, d, ff, kind);
+    }
+    metas
+}
+
+/// Uniform square-layer model (collectives / ZeRO accounting benches).
+pub fn square_stack(layers: usize, d: usize) -> Vec<LayerMeta> {
+    (0..layers)
+        .map(|i| LayerMeta::new(&format!("w{i}"), d, d, ParamKind::Linear))
+        .collect()
+}
+
+fn push_block(metas: &mut Vec<LayerMeta>, l: usize, d: usize, ff: usize, kind: ParamKind) {
+    for w in ["wq", "wk", "wv", "wo"] {
+        metas.push(LayerMeta::new(&format!("b{l}.{w}"), d, d, kind));
+    }
+    metas.push(LayerMeta::new(&format!("b{l}.gate"), d, ff, kind));
+    metas.push(LayerMeta::new(&format!("b{l}.down"), ff, d, kind));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_counts() {
+        let m = transformer_stack(128, 4, 256);
+        // embed + head + 4 × (6 linears + norm)
+        assert_eq!(m.len(), 2 + 4 * 7);
+        assert_eq!((m[0].rows, m[0].cols), (256, 128));
+        let linears = m.iter().filter(|l| l.kind == ParamKind::Linear).count();
+        assert_eq!(linears, 24);
+
+        let lb = linear_blocks(128, 4, ParamKind::Head);
+        assert_eq!(lb.len(), 24);
+        assert!(lb.iter().all(|l| l.kind == ParamKind::Head));
+        // the MLP pair gives the stack its tall + wide shapes
+        assert!(lb.iter().any(|l| (l.rows, l.cols) == (128, 352)));
+        assert!(lb.iter().any(|l| (l.rows, l.cols) == (352, 128)));
+
+        let sq = square_stack(24, 128);
+        assert_eq!(sq.len(), 24);
+        assert!(sq.iter().all(|l| l.rows == 128 && l.cols == 128));
+    }
+}

@@ -36,7 +36,7 @@
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex, OnceLock};
 
-use crate::parallel::{par_row_slabs, ThreadPool};
+use crate::parallel::{par_row_slabs, SendPtr, ThreadPool};
 use crate::simd::{Simd, C64_LANES};
 use crate::tensor::Matrix;
 
@@ -224,6 +224,49 @@ impl MakhoulPlan {
             let mut sc = self.take_scratch();
             for i in lo..hi {
                 let dst = &mut slab[(i - lo) * cols..(i - lo + 1) * cols];
+                self.run_row(&mut sc, g.row(i), dst);
+            }
+            self.put_scratch(sc);
+        });
+    }
+
+    /// Group-batched [`MakhoulPlan::run_into_on`]: `dsts.len()` independent
+    /// row-wise transforms of `rows_per_job` rows each (all width `self.n`),
+    /// stacked into **one** pool dispatch partitioned over the concatenated
+    /// rows — the fused step plans' refresh pass. Job `l` reads `src(l)` and
+    /// writes through `dsts[l]` (a writable `rows_per_job × n` slab; slabs
+    /// must be mutually disjoint). Each row transform is independent and
+    /// fully overwrites its output row, so any chunking of the flattened row
+    /// space is bit-identical to per-job [`MakhoulPlan::run_into`] calls.
+    pub fn run_rows_batched_on<'a>(
+        &self,
+        pool: &ThreadPool,
+        rows_per_job: usize,
+        src: &(impl Fn(usize) -> &'a Matrix + Sync),
+        dsts: &[SendPtr<f32>],
+    ) {
+        let n = self.n;
+        let total = dsts.len() * rows_per_job;
+        if total == 0 {
+            return;
+        }
+        let (per, n_chunks) = crate::parallel::partition(pool.threads(), total);
+        pool.par_chunks(n_chunks, |c| {
+            let lo = c * per;
+            let hi = (lo + per).min(total);
+            let mut sc = self.take_scratch();
+            for f in lo..hi {
+                let l = f / rows_per_job;
+                let i = f % rows_per_job;
+                let g = src(l);
+                debug_assert_eq!(g.cols, n);
+                debug_assert_eq!(g.rows, rows_per_job);
+                // SAFETY: row i of job l's slab — chunks cover disjoint
+                // ranges of the flattened row space and slabs are disjoint
+                // per the caller contract, so no two chunks alias.
+                let dst = unsafe {
+                    std::slice::from_raw_parts_mut(dsts[l].0.add(i * n), n)
+                };
                 self.run_row(&mut sc, g.row(i), dst);
             }
             self.put_scratch(sc);
@@ -508,6 +551,34 @@ mod tests {
                 let mut got = Matrix::randn(2, 2, 1.0, &mut rng); // dirty
                 plan.run_into_on(pool, &g, &mut got);
                 assert_eq!(got, want, "n={n} threads={}", pool.threads());
+            }
+        }
+    }
+
+    #[test]
+    fn rows_batched_bit_identical_to_per_job() {
+        // The stacked group dispatch must reproduce the exact bits of
+        // per-job run_into calls for every thread count and chunking.
+        let mut rng = Pcg64::seed(21);
+        let pools = [
+            crate::parallel::ThreadPool::new(1),
+            crate::parallel::ThreadPool::new(3),
+            crate::parallel::ThreadPool::new(8),
+        ];
+        for n in [6usize, 17, 64] {
+            let plan = MakhoulPlan::new(n);
+            let jobs: Vec<Matrix> =
+                (0..5).map(|_| Matrix::randn(7, n, 1.0, &mut rng)).collect();
+            let want: Vec<Matrix> = jobs.iter().map(|g| plan.run(g)).collect();
+            let mut outs: Vec<Matrix> =
+                (0..5).map(|_| Matrix::randn(7, n, 1.0, &mut rng)).collect(); // dirty
+            for pool in &pools {
+                let dsts: Vec<SendPtr<f32>> =
+                    outs.iter_mut().map(|o| SendPtr(o.data.as_mut_ptr())).collect();
+                plan.run_rows_batched_on(pool, 7, &|l| &jobs[l], &dsts);
+                for (o, w) in outs.iter().zip(&want) {
+                    assert_eq!(o, w, "n={n} threads={}", pool.threads());
+                }
             }
         }
     }

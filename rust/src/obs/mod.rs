@@ -178,6 +178,13 @@ pub struct Counters {
     pub rollbacks: AtomicU64,
     /// Worker-lane attempts that failed and were retried.
     pub worker_retries: AtomicU64,
+    /// Fused step-plan compilations (engine build + every `load_state`
+    /// rebuild — plans are derived state).
+    pub plan_builds: AtomicU64,
+    /// Shape groups across all plan builds.
+    pub plan_groups: AtomicU64,
+    /// Low-rank layers covered by those groups.
+    pub plan_grouped_layers: AtomicU64,
 }
 
 static COUNTERS: Counters = Counters {
@@ -193,6 +200,9 @@ static COUNTERS: Counters = Counters {
     fault_firings: AtomicU64::new(0),
     rollbacks: AtomicU64::new(0),
     worker_retries: AtomicU64::new(0),
+    plan_builds: AtomicU64::new(0),
+    plan_groups: AtomicU64::new(0),
+    plan_grouped_layers: AtomicU64::new(0),
 };
 
 /// The process-global counter block (read-only access; increment through
@@ -217,6 +227,9 @@ impl Counters {
             fault_firings: ld(&self.fault_firings),
             rollbacks: ld(&self.rollbacks),
             worker_retries: ld(&self.worker_retries),
+            plan_builds: ld(&self.plan_builds),
+            plan_groups: ld(&self.plan_groups),
+            plan_grouped_layers: ld(&self.plan_grouped_layers),
         }
     }
 
@@ -228,7 +241,7 @@ impl Counters {
         }
     }
 
-    fn cells(&self) -> [(&'static str, &AtomicU64); 12] {
+    fn cells(&self) -> [(&'static str, &AtomicU64); 15] {
         [
             ("ws_pool_hits", &self.ws_pool_hits),
             ("ws_pool_misses", &self.ws_pool_misses),
@@ -242,6 +255,9 @@ impl Counters {
             ("fault_firings", &self.fault_firings),
             ("rollbacks", &self.rollbacks),
             ("worker_retries", &self.worker_retries),
+            ("plan_builds", &self.plan_builds),
+            ("plan_groups", &self.plan_groups),
+            ("plan_grouped_layers", &self.plan_grouped_layers),
         ]
     }
 }
@@ -261,12 +277,15 @@ pub struct CounterSnapshot {
     pub fault_firings: u64,
     pub rollbacks: u64,
     pub worker_retries: u64,
+    pub plan_builds: u64,
+    pub plan_groups: u64,
+    pub plan_grouped_layers: u64,
 }
 
 impl CounterSnapshot {
     /// Stable (name, value) listing — the exporters' single source of
     /// field names.
-    pub fn entries(&self) -> [(&'static str, u64); 12] {
+    pub fn entries(&self) -> [(&'static str, u64); 15] {
         [
             ("ws_pool_hits", self.ws_pool_hits),
             ("ws_pool_misses", self.ws_pool_misses),
@@ -280,6 +299,9 @@ impl CounterSnapshot {
             ("fault_firings", self.fault_firings),
             ("rollbacks", self.rollbacks),
             ("worker_retries", self.worker_retries),
+            ("plan_builds", self.plan_builds),
+            ("plan_groups", self.plan_groups),
+            ("plan_grouped_layers", self.plan_grouped_layers),
         ]
     }
 }
@@ -351,6 +373,17 @@ pub fn count_rollback() {
 pub fn count_worker_retry() {
     if enabled() {
         COUNTERS.worker_retries.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// One fused step-plan compilation (engine build or `load_state` rebuild —
+/// restore rebuilds count too, which is the intended rollback signal).
+#[inline]
+pub fn count_plan_build(groups: u64, grouped_layers: u64) {
+    if enabled() {
+        COUNTERS.plan_builds.fetch_add(1, Ordering::Relaxed);
+        COUNTERS.plan_groups.fetch_add(groups, Ordering::Relaxed);
+        COUNTERS.plan_grouped_layers.fetch_add(grouped_layers, Ordering::Relaxed);
     }
 }
 

@@ -313,6 +313,11 @@ pub struct OptimizerConfig {
     /// process-global pool (`FFT_SUBSPACE_THREADS` / cores), `Some(n)`
     /// builds a private n-lane pool (tests pin 1 vs N for bit-identity).
     pub threads: Option<usize>,
+    /// Engine step execution: compiled shape-batched programs (`fused`,
+    /// default) or the per-layer loop (`interpreted`, the differential-
+    /// testing oracle). Bit-identical by contract; config key `step-plan`,
+    /// env `FFT_SUBSPACE_STEP_PLAN`.
+    pub step_plan: crate::optim::engine::StepPlanMode,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -339,6 +344,7 @@ impl Default for OptimizerConfig {
             instrument: false,
             seed: 0,
             threads: None,
+            step_plan: crate::optim::engine::StepPlanMode::from_env(),
         }
     }
 }

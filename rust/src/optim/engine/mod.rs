@@ -30,6 +30,7 @@
 //! [`step_layers_parallel`] with every temporary pooled per shard
 //! (`tests/alloc_steady_state.rs`, `tests/parallel_determinism.rs`).
 
+pub mod plan;
 pub mod residual;
 pub mod rotation;
 pub mod rule;
@@ -51,12 +52,15 @@ use super::common::{
     LayerMeta, MemoryReport, Optimizer,
 };
 
-pub use residual::{DiscardResidual, EfResidual, FiraResidual, ResidualPolicy, SignResidual};
+pub use plan::StepPlanMode;
+pub use residual::{
+    DiscardResidual, EfResidual, FiraResidual, Residual, ResidualPolicy, SignResidual,
+};
 pub use rotation::{
     rotate_fixed_basis, rotate_fixed_basis_into, DenseRotation, FixedBasisRotation,
-    NoRotation, RotationPolicy,
+    NoRotation, Rotation, RotationPolicy,
 };
-pub use rule::{Hyper, NewtonSchulzMomentum, StepCtx, SubspaceAdamW, UpdateRule};
+pub use rule::{Hyper, NewtonSchulzMomentum, Rule, StepCtx, SubspaceAdamW, UpdateRule};
 pub use source::SubspaceSource;
 pub use spec::{BroadcastKind, OptimizerSpec, ResidualKind, RotationKind, UpdateRuleKind};
 
@@ -69,9 +73,12 @@ enum EngineLayer {
 
 struct LowRankLayer {
     source: SubspaceSource,
-    rotation: Box<dyn RotationPolicy>,
-    residual: Box<dyn ResidualPolicy>,
-    rule: Box<dyn UpdateRule>,
+    // Closed policy enums, not `Box<dyn>`: the step plan (engine/plan.rs)
+    // monomorphizes each group's chain over them, so the hot loop pays no
+    // virtual hops and `Rule`'s fused entry points stay reachable.
+    rotation: Rotation,
+    residual: Residual,
+    rule: Rule,
     /// `(step, gauges)` captured at this layer's most recent subspace
     /// refresh (obs tiers only); drained by [`Optimizer::refresh_gauges`].
     last_quality: Option<(u64, crate::obs::SubspaceQuality)>,
@@ -102,6 +109,10 @@ pub struct SubspaceEngine {
     /// [`Optimizer::drain_events`]. Zero-capacity when the process can't
     /// trace at build time, so `obs=off` runs pay nothing.
     rings: crate::obs::RingSet,
+    /// Compiled step program (`step-plan=fused`, the default). Derived
+    /// state: rebuilt on [`SubspaceEngine::restore_state`], invisible to
+    /// the checkpoint fingerprint, empty under `step-plan=interpreted`.
+    plan: plan::EnginePlan,
 }
 
 impl OptimizerSpec {
@@ -132,24 +143,28 @@ impl OptimizerSpec {
                         self.seed ^ ((i as u64) << self.seed_shift),
                     );
                     let source = SubspaceSource::new(proj, self.update_interval);
-                    let rotation: Box<dyn RotationPolicy> = match self.rotation {
-                        RotationKind::None => Box::new(NoRotation),
-                        RotationKind::FixedBasis => Box::new(FixedBasisRotation::new(r)),
-                        RotationKind::Dense => Box::new(DenseRotation::new(cc, r)),
+                    let rotation = match self.rotation {
+                        RotationKind::None => Rotation::None(NoRotation),
+                        RotationKind::FixedBasis => {
+                            Rotation::Fixed(FixedBasisRotation::new(r))
+                        }
+                        RotationKind::Dense => Rotation::Dense(DenseRotation::new(cc, r)),
                     };
-                    let residual: Box<dyn ResidualPolicy> = match self.residual {
-                        ResidualKind::Discard => Box::new(DiscardResidual),
+                    let residual = match self.residual {
+                        ResidualKind::Discard => Residual::Discard(DiscardResidual),
                         ResidualKind::ErrorFeedback(mode) => {
-                            Box::new(EfResidual::new(mode, rr, cc))
+                            Residual::Ef(EfResidual::new(mode, rr, cc))
                         }
-                        ResidualKind::FiraScale => Box::new(FiraResidual),
-                        ResidualKind::SignDescent => Box::new(SignResidual { scale: 1.0 }),
+                        ResidualKind::FiraScale => Residual::Fira(FiraResidual),
+                        ResidualKind::SignDescent => {
+                            Residual::Sign(SignResidual { scale: 1.0 })
+                        }
                     };
-                    let rule: Box<dyn UpdateRule> = match self.rule {
+                    let rule = match self.rule {
                         UpdateRuleKind::SubspaceAdamW => {
-                            Box::new(SubspaceAdamW::new(self.state_dtype, rr, r))
+                            Rule::Adam(SubspaceAdamW::new(self.state_dtype, rr, r))
                         }
-                        UpdateRuleKind::NewtonSchulz => Box::new(NewtonSchulzMomentum::new(
+                        UpdateRuleKind::NewtonSchulz => Rule::Ns(NewtonSchulzMomentum::new(
                             self.state_dtype,
                             rr,
                             cc,
@@ -175,18 +190,38 @@ impl OptimizerSpec {
             .collect();
         let pool = pool_for_threads(self.threads);
         let shards = ShardedWorkspace::for_pool(&pool);
+        let plan_start = crate::obs::now_us();
+        let plan = match self.step_plan {
+            StepPlanMode::Fused => plan::EnginePlan::build(self, metas, &states, &shared),
+            StepPlanMode::Interpreted => plan::EnginePlan::empty(),
+        };
+        let plan_dur = crate::obs::now_us().saturating_sub(plan_start);
         // One event ring per possible chunk, capacity covering one step's
         // spans per chunk (≤ 6 per layer) with headroom — rings are drained
-        // every step by the trainer, so this never fills in practice. When
-        // the run can't trace the rings are zero-capacity (pushes become
-        // counted drops), keeping `obs=off` builds allocation-free here.
+        // every step by the trainer, so this never fills in practice. The
+        // fused plan splits a chunk's layers across per-group dispatches,
+        // so ring k can absorb up to one extra partial chunk per group
+        // (plus the group-level batch spans on ring 0) — hence the
+        // group-count term. When the run can't trace the rings are
+        // zero-capacity (pushes become counted drops), keeping `obs=off`
+        // builds allocation-free here.
         let lanes = pool.threads();
         let ring_cap = if crate::obs::tracing() {
-            metas.len().div_ceil(lanes.max(1)) * 8 + 16
+            metas.len().div_ceil(lanes.max(1)) * 8 + 16 + 8 * (plan.group_count() + 1)
         } else {
             0
         };
         let rings = crate::obs::RingSet::new(lanes, ring_cap);
+        if crate::obs::tracing() && ring_cap > 0 {
+            // SAFETY: the rings were just built; no other thread holds them.
+            unsafe { rings.lane(0) }.push(crate::obs::Event {
+                name: "plan-build",
+                layer: crate::obs::Event::NO_LAYER,
+                lane: 0,
+                start_us: plan_start,
+                dur_us: plan_dur,
+            });
+        }
         let instrumented = self.instrument && self.rule == UpdateRuleKind::NewtonSchulz;
         // The indices-only payload exists iff receivers can rebuild the
         // basis from r int32 (index-selection source) AND the update stays
@@ -215,6 +250,7 @@ impl OptimizerSpec {
             instrumented,
             errors: BTreeMap::new(),
             rings,
+            plan,
         }
     }
 }
@@ -343,6 +379,15 @@ impl SubspaceEngine {
                 }
             }
         }
+        // Plans are derived state — never in the blob, never in the
+        // fingerprint — so rebuild here (this also covers trainer rollback,
+        // which restores through `load_state`).
+        self.plan = match self.spec.step_plan {
+            StepPlanMode::Fused => {
+                plan::EnginePlan::build(&self.spec, &self.metas, &self.states, &self.shared)
+            }
+            StepPlanMode::Interpreted => plan::EnginePlan::empty(),
+        };
         r.finish()
     }
 }
@@ -369,53 +414,74 @@ impl Optimizer for SubspaceEngine {
         let sampled = crate::obs::tracing() && crate::obs::sample_hit(t);
         let gauge_step = crate::obs::enabled() && crate::obs::sample_hit(t);
         let rings = &self.rings;
-        step_layers_parallel(
-            &pool,
-            &mut self.shards,
-            &mut self.states,
-            params,
-            grads,
-            |k, i, state, param, grad, ws| {
-                let obs = if sampled {
-                    // SAFETY: chunk `k` is claimed by exactly one thread and
-                    // records only into ring `k` — the same disjointness the
-                    // workspace shard binding relies on.
-                    crate::obs::ObsLane {
-                        ring: Some(unsafe { rings.lane(k) }),
-                        lane: k as u32,
-                        layer: i as u32,
-                        sampled: true,
-                    }
-                } else {
-                    crate::obs::ObsLane::none()
-                };
-                match state {
-                    EngineLayer::Dense(st) => obs.span("dense", || {
-                        st.update_ws(
-                            param, grad, lr, hyper.beta1, hyper.beta2, hyper.eps,
-                            dense_wd, t, ws,
-                        )
-                    }),
-                    EngineLayer::LowRank(l) => {
-                        let refreshed = l.source.refresh_due(t);
-                        let ctx = StepCtx { t, lr, hyper, errors: errors_ref, obs };
-                        l.rule.step_layer(
-                            &metas[i],
-                            &mut l.source,
-                            l.rotation.as_mut(),
-                            l.residual.as_mut(),
-                            param,
-                            grad,
-                            &ctx,
-                            ws,
-                        );
-                        if refreshed && gauge_step {
-                            l.last_quality = l.source.quality().map(|q| (t, q));
+        match self.spec.step_plan {
+            StepPlanMode::Fused => self.plan.run_step(
+                metas,
+                &mut self.states,
+                params,
+                grads,
+                &pool,
+                &mut self.shards,
+                rings,
+                sampled,
+                gauge_step,
+                t,
+                lr,
+                hyper,
+                dense_wd,
+                errors_ref,
+            ),
+            // The interpreted per-layer loop: retained verbatim as the
+            // differential-testing oracle for the fused plan
+            // (`tests/step_plan_equivalence.rs`).
+            StepPlanMode::Interpreted => step_layers_parallel(
+                &pool,
+                &mut self.shards,
+                &mut self.states,
+                params,
+                grads,
+                |k, i, state, param, grad, ws| {
+                    let obs = if sampled {
+                        // SAFETY: chunk `k` is claimed by exactly one thread
+                        // and records only into ring `k` — the same
+                        // disjointness the workspace shard binding relies on.
+                        crate::obs::ObsLane {
+                            ring: Some(unsafe { rings.lane(k) }),
+                            lane: k as u32,
+                            layer: i as u32,
+                            sampled: true,
+                        }
+                    } else {
+                        crate::obs::ObsLane::none()
+                    };
+                    match state {
+                        EngineLayer::Dense(st) => obs.span("dense", || {
+                            st.update_ws(
+                                param, grad, lr, hyper.beta1, hyper.beta2, hyper.eps,
+                                dense_wd, t, ws,
+                            )
+                        }),
+                        EngineLayer::LowRank(l) => {
+                            let refreshed = l.source.refresh_due(t);
+                            let ctx = StepCtx { t, lr, hyper, errors: errors_ref, obs };
+                            l.rule.step_layer(
+                                &metas[i],
+                                &mut l.source,
+                                &mut l.rotation,
+                                &mut l.residual,
+                                param,
+                                grad,
+                                &ctx,
+                                ws,
+                            );
+                            if refreshed && gauge_step {
+                                l.last_quality = l.source.quality().map(|q| (t, q));
+                            }
                         }
                     }
-                }
-            },
-        );
+                },
+            ),
+        }
         self.errors = errors.into_inner().unwrap();
     }
 

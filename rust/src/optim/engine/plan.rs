@@ -1,0 +1,509 @@
+//! Shape-batched fused step plans (PR 8).
+//!
+//! At engine build, eligible layers are partitioned into [`StepGroup`]s
+//! keyed by `(rows, cols, orientation)` — rank, policy composition and
+//! state dtype are engine-wide invariants, so they are part of the key by
+//! construction — and each group's policy chain is lowered into a
+//! monomorphized step program: the policy axes live in closed enums
+//! ([`super::rotation::Rotation`], [`super::residual::Residual`],
+//! [`super::rule::Rule`]), so the per-step `Box<dyn>` virtual hops are gone
+//! from the hot loop, and the expensive projection pass of every layer in a
+//! group is stacked into **one** batched kernel dispatch over the group's
+//! concatenated rows ([`SharedDct::similarities_rows_batched_on`] on
+//! refresh, [`matmul_rows_batched_on`] against the cached dense bases
+//! otherwise) instead of one pool dispatch per layer.
+//!
+//! Bit-identity is the contract, not a goal: row-partitioned stacking never
+//! regroups any element's FP summation order (the underlying kernels are
+//! per-row transforms / ascending-`k` row kernels), the group phases reuse
+//! the exact same chunk↔shard partition as the interpreted loop so every
+//! workspace and typed-store checkout replays on the same shard, and the
+//! interpreted per-layer loop is retained behind `step-plan=interpreted`
+//! (`FFT_SUBSPACE_STEP_PLAN`) as the differential-testing oracle —
+//! `tests/step_plan_equivalence.rs` pins fused `to_bits`-equal to
+//! interpreted for every preset × state dtype × lane count.
+//!
+//! A fused step runs up to three phases per group:
+//!
+//! 1. **Stage** (one `dispatch_subset`): materialize the oriented gradient
+//!    (+ error-feedback replay) into plan-owned staging buffers, or for the
+//!    Newton–Schulz rule check the momentum out and accumulate the gradient
+//!    ([`NewtonSchulzMomentum::begin_accumulate`]). Skipped when layers can
+//!    borrow their gradient as-is.
+//! 2. **Batch** (one kernel call): the group's projection pass over the
+//!    concatenated rows, written into plan-owned `sims`/`lows` buffers via
+//!    raw [`SendPtr`] destinations refilled in place each step.
+//! 3. **Finish** (one `dispatch_subset`): the remaining per-layer chain —
+//!    selection tail / rotation / residual / moments / parameter write —
+//!    through [`ProjIn::Sims`] / [`ProjIn::Low`], which skip exactly the
+//!    pass phase 2 already ran.
+//!
+//! Groups whose pass can't batch (no similarity hook and no cached dense
+//! basis, e.g. block-power refreshes or gather-based RandPerm projections)
+//! degrade to the **grouped** program: the unchanged per-layer chain inside
+//! one dispatch — still enum-dispatched, trivially bit-identical.
+//!
+//! Memory trade: batching holds one `R×C` staging and/or similarity buffer
+//! per layer of a group alive for the step (transient, plan-owned, never
+//! checkpointed). For the models here that is bounded by the gradient set
+//! itself; group-size capping is future work (see ROADMAP).
+//!
+//! Plans are **derived state**: rebuilt on `load_state` (and therefore on
+//! trainer rollback), invisible to the checkpoint fingerprint and blobs.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use crate::obs::{Event, ObsLane, RingSet};
+use crate::parallel::{partition, SendPtr, ShardedWorkspace, ThreadPool};
+use crate::projection::SharedDct;
+use crate::tensor::{matmul_rows_batched_on, Matrix, Workspace};
+
+use crate::optim::common::LayerMeta;
+
+use super::residual::ResidualPolicy;
+use super::rule::{Hyper, ProjIn, Rule, StepCtx, UpdateRule};
+use super::spec::{OptimizerSpec, UpdateRuleKind};
+use super::{EngineLayer, LowRankLayer};
+
+/// How the engine executes a step: compiled shape-batched programs or the
+/// per-layer interpreted loop (the differential-testing oracle). Config key
+/// `step-plan`, env `FFT_SUBSPACE_STEP_PLAN`; default fused. Never part of
+/// the checkpoint fingerprint — the two modes are bit-identical.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepPlanMode {
+    Fused,
+    Interpreted,
+}
+
+impl StepPlanMode {
+    pub fn parse(s: &str) -> anyhow::Result<StepPlanMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "fused" => Ok(StepPlanMode::Fused),
+            "interpreted" | "interp" => Ok(StepPlanMode::Interpreted),
+            other => anyhow::bail!(
+                "unknown step-plan mode {other:?} (expected fused | interpreted)"
+            ),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            StepPlanMode::Fused => "fused",
+            StepPlanMode::Interpreted => "interpreted",
+        }
+    }
+
+    /// Env resolution (`FFT_SUBSPACE_STEP_PLAN`): unset or unrecognized
+    /// falls back to the fused default — the strict surface is the config
+    /// key (`step-plan=`), which goes through [`StepPlanMode::parse`].
+    pub fn from_env() -> StepPlanMode {
+        match std::env::var("FFT_SUBSPACE_STEP_PLAN") {
+            Ok(v) => StepPlanMode::parse(&v).unwrap_or(StepPlanMode::Fused),
+            Err(_) => StepPlanMode::Fused,
+        }
+    }
+}
+
+/// One shape group's compiled program: membership, the mode its batched
+/// passes run in, and the plan-owned transient buffers (allocated once at
+/// build, reused every step — the steady-state step stays allocation-free).
+struct StepGroup {
+    /// Engine layer indices, ascending (build order).
+    layers: Vec<usize>,
+    /// Oriented shape (every member identical).
+    rr: usize,
+    cc: usize,
+    rank: usize,
+    transposed: bool,
+    /// Phase 1 materializes the oriented/EF gradient (AdamW-family rules
+    /// with transposed layers or owned-gradient residual policies).
+    staged: bool,
+    /// Newton–Schulz rule: phase 1 holds the accumulated momentum instead.
+    ns: bool,
+    /// `Some(use_makhoul)` when refresh similarities can be group-batched
+    /// (the DCT family); `None` degrades refresh steps to grouped.
+    batch_sims: Option<bool>,
+    /// Non-refresh projections can be group-batched against the source's
+    /// cached dense basis (`basis_ref`).
+    batch_project: bool,
+    dct: Option<Arc<SharedDct>>,
+    /// Oriented/EF-replayed gradients, `layers.len() × (rr×cc)`.
+    stage: Vec<Matrix>,
+    /// Batched refresh similarities `S = G·Q`, `layers.len() × (rr×cc)`.
+    sims: Vec<Matrix>,
+    /// Batched projections `g_low = G·Q_r`, `layers.len() × (rr×rank)`.
+    lows: Vec<Matrix>,
+    /// Momenta checked out in phase 1 (Newton–Schulz rule), handed back to
+    /// `finish_from` in phase 3 under the same chunk↔shard binding.
+    held: Vec<Option<Matrix>>,
+    /// Raw batch-kernel destinations, refilled in place each step.
+    dst_ptrs: Vec<SendPtr<f32>>,
+}
+
+/// The engine's compiled step program: shape groups plus the dense-fallback
+/// layer list. Derived state — rebuilt on `load_state`, never serialized.
+pub(crate) struct EnginePlan {
+    groups: Vec<StepGroup>,
+    dense: Vec<usize>,
+}
+
+/// Pin a closure to the `for<'a> Fn(usize) -> &'a Matrix` shape the batched
+/// kernels expect (plain inference ties the return lifetime to the closure
+/// body otherwise).
+fn as_src<'a, F: Fn(usize) -> &'a Matrix + Sync>(f: F) -> F {
+    f
+}
+
+/// [`super::common::step_layers_parallel`] over a subset of layers: chunk
+/// `k` of the subset binds to workspace shard `k`. Phases 1 and 3 of a
+/// group run over the **same** subset with the same partition rule, so a
+/// typed-store checkout in phase 1 and its commit in phase 3 land on the
+/// same shard — the allocation-free replay the PR-1 contract requires.
+fn dispatch_subset(
+    pool: &ThreadPool,
+    shards: &mut ShardedWorkspace,
+    layers: &[usize],
+    states: &mut [EngineLayer],
+    params: &mut [Matrix],
+    f: impl Fn(usize, usize, usize, &mut EngineLayer, &mut Matrix, &mut Workspace) + Sync,
+) {
+    let n = layers.len();
+    if n == 0 {
+        return;
+    }
+    let (per, n_chunks) = partition(pool.threads().min(shards.len()), n);
+    let states_p = SendPtr(states.as_mut_ptr());
+    let params_p = SendPtr(params.as_mut_ptr());
+    let cells = shards.cells();
+    pool.par_chunks(n_chunks, |k| {
+        let lo = k * per;
+        let hi = (lo + per).min(n);
+        // SAFETY: chunk k is claimed by exactly one thread; chunks cover
+        // disjoint slot ranges and `layers` holds distinct indices, so the
+        // state/param derefs never alias. Shard k is used only by chunk k.
+        let ws = unsafe { cells.shard(k) };
+        for slot in lo..hi {
+            let i = layers[slot];
+            let st = unsafe { &mut *states_p.0.add(i) };
+            let p = unsafe { &mut *params_p.0.add(i) };
+            f(k, slot, i, st, p, ws);
+        }
+    });
+}
+
+/// Per-chunk obs lane, identical to the interpreted loop's construction.
+fn lane_obs(rings: &RingSet, sampled: bool, k: usize, layer: u32) -> ObsLane<'_> {
+    if sampled {
+        // SAFETY: chunk `k` is claimed by exactly one thread and records
+        // only into ring `k` — the same disjointness the workspace shard
+        // binding relies on.
+        ObsLane { ring: Some(unsafe { rings.lane(k) }), lane: k as u32, layer, sampled: true }
+    } else {
+        ObsLane::none()
+    }
+}
+
+impl EnginePlan {
+    pub(crate) fn empty() -> EnginePlan {
+        EnginePlan { groups: Vec::new(), dense: Vec::new() }
+    }
+
+    pub(crate) fn group_count(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Partition layers into shape groups and preallocate each group's
+    /// batch buffers. Pure function of the spec and the layer shapes — the
+    /// same plan falls out after any `load_state`.
+    pub(crate) fn build(
+        spec: &OptimizerSpec,
+        metas: &[LayerMeta],
+        states: &[EngineLayer],
+        shared: &BTreeMap<usize, Arc<SharedDct>>,
+    ) -> EnginePlan {
+        let mut dense = Vec::new();
+        let mut groups: Vec<StepGroup> = Vec::new();
+        let ns = spec.rule == UpdateRuleKind::NewtonSchulz;
+        let interval = spec.update_interval.max(1);
+        for (i, (meta, st)) in metas.iter().zip(states).enumerate() {
+            let l = match st {
+                EngineLayer::Dense(_) => {
+                    dense.push(i);
+                    continue;
+                }
+                EngineLayer::LowRank(l) => l,
+            };
+            let (rr, cc) = meta.oriented();
+            let transposed = meta.needs_transpose();
+            if let Some(g) = groups
+                .iter_mut()
+                .find(|g| g.rr == rr && g.cc == cc && g.transposed == transposed)
+            {
+                g.layers.push(i);
+                continue;
+            }
+            groups.push(StepGroup {
+                layers: vec![i],
+                rr,
+                cc,
+                rank: l.source.rank(),
+                transposed,
+                staged: transposed || l.residual.wants_owned_grad(),
+                ns,
+                batch_sims: l.source.batched_sims(),
+                batch_project: l.source.basis_ref().is_some(),
+                dct: shared.get(&cc).cloned(),
+                stage: Vec::new(),
+                sims: Vec::new(),
+                lows: Vec::new(),
+                held: Vec::new(),
+                dst_ptrs: Vec::new(),
+            });
+        }
+        for g in &mut groups {
+            if g.dct.is_none() {
+                g.batch_sims = None;
+            }
+            let n = g.layers.len();
+            // Refresh steps batch iff the source exposes the similarity
+            // hook; non-refresh steps batch iff a cached dense basis exists
+            // AND non-refresh steps can occur at all (interval > 1).
+            let refresh_batched = g.batch_sims.is_some();
+            let project_batched = g.batch_project && interval > 1;
+            if !refresh_batched && !project_batched {
+                continue; // always grouped — no batch buffers needed
+            }
+            if g.ns {
+                g.held = (0..n).map(|_| None).collect();
+            } else if g.staged {
+                g.stage = (0..n).map(|_| Matrix::zeros(g.rr, g.cc)).collect();
+            }
+            if refresh_batched {
+                g.sims = (0..n).map(|_| Matrix::zeros(g.rr, g.cc)).collect();
+            }
+            if project_batched {
+                g.lows = (0..n).map(|_| Matrix::zeros(g.rr, g.rank)).collect();
+            }
+            g.dst_ptrs = vec![SendPtr(std::ptr::null_mut()); n];
+        }
+        crate::obs::count_plan_build(
+            groups.len() as u64,
+            groups.iter().map(|g| g.layers.len() as u64).sum(),
+        );
+        EnginePlan { groups, dense }
+    }
+
+    /// One fused engine step: per-group three-phase programs plus the dense
+    /// fallback dispatch. Bit-identical to the interpreted loop (the
+    /// `step-plan=interpreted` oracle) for every composition, dtype and
+    /// thread count — `tests/step_plan_equivalence.rs`.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn run_step(
+        &mut self,
+        metas: &[LayerMeta],
+        states: &mut [EngineLayer],
+        params: &mut [Matrix],
+        grads: &[Matrix],
+        pool: &ThreadPool,
+        shards: &mut ShardedWorkspace,
+        rings: &RingSet,
+        sampled: bool,
+        gauge_step: bool,
+        t: u64,
+        lr: f32,
+        hyper: Hyper,
+        dense_wd: f32,
+        errors: Option<&Mutex<BTreeMap<String, f64>>>,
+    ) {
+        for g in &mut self.groups {
+            let refresh = {
+                let EngineLayer::LowRank(l0) = &states[g.layers[0]] else {
+                    unreachable!("step group holds a dense layer")
+                };
+                // uniform across the group: the cadence is spec-wide
+                l0.source.refresh_due(t)
+            };
+            let batched = if refresh {
+                g.batch_sims.is_some() && !g.sims.is_empty()
+            } else {
+                g.batch_project && !g.lows.is_empty()
+            };
+            if !batched {
+                // Grouped program: the unchanged per-layer chain in one
+                // dispatch — enum-dispatched, trivially bit-identical.
+                let layers: &[usize] = &g.layers;
+                dispatch_subset(pool, shards, layers, states, params, |k, _slot, i, st, param, ws| {
+                    let obs = lane_obs(rings, sampled, k, i as u32);
+                    let EngineLayer::LowRank(l) = st else { unreachable!() };
+                    let ctx = StepCtx { t, lr, hyper, errors, obs };
+                    l.rule.step_layer(
+                        &metas[i],
+                        &mut l.source,
+                        &mut l.rotation,
+                        &mut l.residual,
+                        param,
+                        &grads[i],
+                        &ctx,
+                        ws,
+                    );
+                    if refresh && gauge_step {
+                        l.last_quality = l.source.quality().map(|q| (t, q));
+                    }
+                });
+                continue;
+            }
+
+            // Disjoint field borrows: the dispatch closures write the batch
+            // buffers through raw per-slot pointers while reading group
+            // scalars and the shared slices of *other* fields.
+            let StepGroup {
+                layers,
+                rr,
+                rank,
+                transposed,
+                staged,
+                ns,
+                batch_sims,
+                dct,
+                stage,
+                sims,
+                lows,
+                held,
+                dst_ptrs,
+                ..
+            } = g;
+            let layers: &[usize] = layers;
+            let (rr, rank) = (*rr, *rank);
+            let (transposed, staged, ns) = (*transposed, *staged, *ns);
+
+            // -- phase 1: stage -------------------------------------------
+            if ns {
+                let held_p = SendPtr(held.as_mut_ptr());
+                dispatch_subset(pool, shards, layers, states, params, |_k, slot, i, st, _param, ws| {
+                    let EngineLayer::LowRank(l) = st else { unreachable!() };
+                    let Rule::Ns(rule) = &mut l.rule else { unreachable!() };
+                    // SAFETY: one writer per slot (disjoint slot ranges).
+                    let cell = unsafe { &mut *held_p.0.add(slot) };
+                    *cell = Some(rule.begin_accumulate(&metas[i], &grads[i], ws));
+                });
+            } else if staged {
+                let stage_p = SendPtr(stage.as_mut_ptr());
+                dispatch_subset(pool, shards, layers, states, params, |_k, slot, i, st, _param, _ws| {
+                    let EngineLayer::LowRank(l) = st else { unreachable!() };
+                    // SAFETY: one writer per slot (disjoint slot ranges).
+                    let buf = unsafe { &mut *stage_p.0.add(slot) };
+                    if transposed {
+                        grads[i].transpose_into(buf);
+                    } else {
+                        buf.copy_from(&grads[i]);
+                    }
+                    l.residual.add_into_grad(buf);
+                });
+            }
+
+            // -- phase 2: one batched kernel dispatch for the group -------
+            // Phase 2 runs on the orchestrating thread between dispatches,
+            // so ring 0 is free (SAFETY of `lane_obs(.., 0, ..)`).
+            let gobs = lane_obs(rings, sampled, 0, Event::NO_LAYER);
+            let stage_ro: &[Matrix] = stage;
+            let held_ro: &[Option<Matrix>] = held;
+            if refresh {
+                for (d, s) in dst_ptrs.iter_mut().zip(sims.iter_mut()) {
+                    *d = SendPtr(s.data.as_mut_ptr());
+                }
+                let use_makhoul = batch_sims.expect("batched refresh without sims hook");
+                let dct = dct.as_ref().expect("batched refresh without shared DCT");
+                let dsts: &[SendPtr<f32>] = dst_ptrs;
+                gobs.span("batch-sims", || {
+                    if ns {
+                        let src =
+                            as_src(|l: usize| held_ro[l].as_ref().expect("held momentum"));
+                        dct.similarities_rows_batched_on(pool, rr, use_makhoul, &src, dsts);
+                    } else if staged {
+                        let src = as_src(|l: usize| &stage_ro[l]);
+                        dct.similarities_rows_batched_on(pool, rr, use_makhoul, &src, dsts);
+                    } else {
+                        let src = as_src(|l: usize| &grads[layers[l]]);
+                        dct.similarities_rows_batched_on(pool, rr, use_makhoul, &src, dsts);
+                    }
+                });
+            } else {
+                for (d, m) in dst_ptrs.iter_mut().zip(lows.iter_mut()) {
+                    *d = SendPtr(m.data.as_mut_ptr());
+                }
+                let states_ro: &[EngineLayer] = states;
+                let basis = as_src(|l: usize| {
+                    let EngineLayer::LowRank(ll) = &states_ro[layers[l]] else {
+                        unreachable!()
+                    };
+                    ll.source.basis_ref().expect("batched project without cached basis")
+                });
+                let dsts: &[SendPtr<f32>] = dst_ptrs;
+                gobs.span("batch-project", || {
+                    if ns {
+                        let src =
+                            as_src(|l: usize| held_ro[l].as_ref().expect("held momentum"));
+                        matmul_rows_batched_on(pool, rr, &src, &basis, dsts);
+                    } else if staged {
+                        let src = as_src(|l: usize| &stage_ro[l]);
+                        matmul_rows_batched_on(pool, rr, &src, &basis, dsts);
+                    } else {
+                        let src = as_src(|l: usize| &grads[layers[l]]);
+                        matmul_rows_batched_on(pool, rr, &src, &basis, dsts);
+                    }
+                });
+            }
+            let _ = rank;
+
+            // -- phase 3: finish ------------------------------------------
+            let sims_ro: &[Matrix] = sims;
+            let lows_ro: &[Matrix] = lows;
+            let held_p = SendPtr(held.as_mut_ptr());
+            dispatch_subset(pool, shards, layers, states, params, |k, slot, i, st, param, ws| {
+                let obs = lane_obs(rings, sampled, k, i as u32);
+                let ctx = StepCtx { t, lr, hyper, errors, obs };
+                let EngineLayer::LowRank(l) = st else { unreachable!() };
+                let LowRankLayer { source, rotation, residual, rule, last_quality } = l;
+                let proj = if refresh {
+                    ProjIn::Sims(&sims_ro[slot])
+                } else {
+                    ProjIn::Low(&lows_ro[slot])
+                };
+                match rule {
+                    Rule::Ns(rule) => {
+                        // SAFETY: one writer per slot; same partition as
+                        // phase 1, so the commit replays on the checkout's
+                        // shard.
+                        let cell = unsafe { &mut *held_p.0.add(slot) };
+                        let momentum = cell.take().expect("held momentum");
+                        rule.finish_from(&metas[i], source, param, momentum, proj, &ctx, ws);
+                    }
+                    Rule::Adam(adam) => {
+                        let gmat: &Matrix =
+                            if staged { &stage_ro[slot] } else { &grads[i] };
+                        adam.core_with(
+                            &metas[i], source, rotation, residual, param, gmat, proj,
+                            &ctx, ws,
+                        );
+                    }
+                }
+                if refresh && gauge_step {
+                    *last_quality = source.quality().map(|q| (t, q));
+                }
+            });
+        }
+
+        // -- dense fallback layers, one dispatch over the plan's list -----
+        dispatch_subset(pool, shards, &self.dense, states, params, |k, _slot, i, st, param, ws| {
+            let obs = lane_obs(rings, sampled, k, i as u32);
+            let EngineLayer::Dense(a) = st else { unreachable!() };
+            obs.span("dense", || {
+                a.update_ws(
+                    param, &grads[i], lr, hyper.beta1, hyper.beta2, hyper.eps, dense_wd,
+                    t, ws,
+                )
+            });
+        });
+    }
+}

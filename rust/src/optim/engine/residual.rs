@@ -196,3 +196,92 @@ impl ResidualPolicy for SignResidual {
         ws.give(resid);
     }
 }
+
+/// The closed residual-policy set as a monomorphized enum (fused-plan
+/// dispatch; see `engine/plan.rs`). Delegates [`ResidualPolicy`] verbatim.
+pub enum Residual {
+    Discard(DiscardResidual),
+    Ef(EfResidual),
+    Fira(FiraResidual),
+    Sign(SignResidual),
+}
+
+impl ResidualPolicy for Residual {
+    fn wants_owned_grad(&self) -> bool {
+        match self {
+            Residual::Discard(p) => p.wants_owned_grad(),
+            Residual::Ef(p) => p.wants_owned_grad(),
+            Residual::Fira(p) => p.wants_owned_grad(),
+            Residual::Sign(p) => p.wants_owned_grad(),
+        }
+    }
+
+    fn add_into_grad(&self, g: &mut Matrix) {
+        match self {
+            Residual::Discard(p) => p.add_into_grad(g),
+            Residual::Ef(p) => p.add_into_grad(g),
+            Residual::Fira(p) => p.add_into_grad(g),
+            Residual::Sign(p) => p.add_into_grad(g),
+        }
+    }
+
+    fn store_residual(
+        &mut self,
+        source: &SubspaceSource,
+        g_low: &Matrix,
+        g: &Matrix,
+        full: &mut Matrix,
+        ws: &mut Workspace,
+    ) {
+        match self {
+            Residual::Discard(p) => p.store_residual(source, g_low, g, full, ws),
+            Residual::Ef(p) => p.store_residual(source, g_low, g, full, ws),
+            Residual::Fira(p) => p.store_residual(source, g_low, g, full, ws),
+            Residual::Sign(p) => p.store_residual(source, g_low, g, full, ws),
+        }
+    }
+
+    fn finish_update(
+        &mut self,
+        source: &SubspaceSource,
+        g: &Matrix,
+        g_low: &Matrix,
+        u_low: &Matrix,
+        full: &mut Matrix,
+        ws: &mut Workspace,
+    ) {
+        match self {
+            Residual::Discard(p) => p.finish_update(source, g, g_low, u_low, full, ws),
+            Residual::Ef(p) => p.finish_update(source, g, g_low, u_low, full, ws),
+            Residual::Fira(p) => p.finish_update(source, g, g_low, u_low, full, ws),
+            Residual::Sign(p) => p.finish_update(source, g, g_low, u_low, full, ws),
+        }
+    }
+
+    fn memory(&self, rep: &mut MemoryReport) {
+        match self {
+            Residual::Discard(p) => p.memory(rep),
+            Residual::Ef(p) => p.memory(rep),
+            Residual::Fira(p) => p.memory(rep),
+            Residual::Sign(p) => p.memory(rep),
+        }
+    }
+
+    fn save_state(&self, out: &mut Vec<u8>) {
+        match self {
+            Residual::Discard(p) => p.save_state(out),
+            Residual::Ef(p) => p.save_state(out),
+            Residual::Fira(p) => p.save_state(out),
+            Residual::Sign(p) => p.save_state(out),
+        }
+    }
+
+    fn load_state(&mut self, r: &mut ByteReader) -> Result<()> {
+        match self {
+            Residual::Discard(p) => p.load_state(r),
+            Residual::Ef(p) => p.load_state(r),
+            Residual::Fira(p) => p.load_state(r),
+            Residual::Sign(p) => p.load_state(r),
+        }
+    }
+}

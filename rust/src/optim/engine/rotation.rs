@@ -246,6 +246,70 @@ impl RotationPolicy for DenseRotation {
     }
 }
 
+/// The closed rotation-policy set as a monomorphized enum (fused-plan
+/// dispatch; see `engine/plan.rs`). Delegates [`RotationPolicy`] verbatim.
+pub enum Rotation {
+    None(NoRotation),
+    Fixed(FixedBasisRotation),
+    Dense(DenseRotation),
+}
+
+impl RotationPolicy for Rotation {
+    fn before_refresh(&mut self, source: &SubspaceSource) {
+        match self {
+            Rotation::None(p) => p.before_refresh(source),
+            Rotation::Fixed(p) => p.before_refresh(source),
+            Rotation::Dense(p) => p.before_refresh(source),
+        }
+    }
+
+    fn rotate_moments(
+        &mut self,
+        source: &SubspaceSource,
+        m: &mut Matrix,
+        v: &mut Matrix,
+        ws: &mut Workspace,
+    ) {
+        match self {
+            Rotation::None(p) => p.rotate_moments(source, m, v, ws),
+            Rotation::Fixed(p) => p.rotate_moments(source, m, v, ws),
+            Rotation::Dense(p) => p.rotate_moments(source, m, v, ws),
+        }
+    }
+
+    fn memory(&self, rep: &mut MemoryReport) {
+        match self {
+            Rotation::None(p) => p.memory(rep),
+            Rotation::Fixed(p) => p.memory(rep),
+            Rotation::Dense(p) => p.memory(rep),
+        }
+    }
+
+    fn snapshot_indices(&self) -> Option<&[usize]> {
+        match self {
+            Rotation::None(p) => p.snapshot_indices(),
+            Rotation::Fixed(p) => p.snapshot_indices(),
+            Rotation::Dense(p) => p.snapshot_indices(),
+        }
+    }
+
+    fn save_state(&self, out: &mut Vec<u8>) {
+        match self {
+            Rotation::None(p) => p.save_state(out),
+            Rotation::Fixed(p) => p.save_state(out),
+            Rotation::Dense(p) => p.save_state(out),
+        }
+    }
+
+    fn load_state(&mut self, r: &mut ByteReader) -> Result<()> {
+        match self {
+            Rotation::None(p) => p.load_state(r),
+            Rotation::Fixed(p) => p.load_state(r),
+            Rotation::Dense(p) => p.load_state(r),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -66,6 +66,30 @@ pub struct StepCtx<'a> {
     pub obs: crate::obs::ObsLane<'a>,
 }
 
+/// Where a rule's projected gradient comes from. The interpreted engine
+/// always computes it inline; the fused step plans (`engine/plan.rs`)
+/// precompute the expensive pass for a whole shape group in one batched
+/// kernel dispatch and hand each layer its slice:
+///
+/// * [`ProjIn::Inline`] — the rule runs the source itself (the oracle
+///   path; byte-for-byte the pre-plan behavior).
+/// * [`ProjIn::Sims`] — refresh steps: the full similarity row block
+///   `S = G·Q` (R×C) was computed by a group-batched DCT/matmul pass; the
+///   source only runs its selection tail ([`SubspaceSource::refresh_from_sims`]).
+/// * [`ProjIn::Low`] — non-refresh steps: the projected gradient
+///   `g_low = G·Q_r` (R×r) was computed by a group-batched matmul against
+///   the layer's cached dense basis; the rule consumes it directly.
+///
+/// Bit-identity across the three is the fused-plan contract: the batched
+/// kernels partition work by rows, which never regroups any element's FP
+/// summation (`tests/step_plan_equivalence.rs`).
+#[derive(Clone, Copy)]
+pub enum ProjIn<'a> {
+    Inline,
+    Sims(&'a Matrix),
+    Low(&'a Matrix),
+}
+
 pub trait UpdateRule: Send {
     /// One low-rank layer step: update `param` in place from `grad`.
     #[allow(clippy::too_many_arguments)]
@@ -114,8 +138,13 @@ impl SubspaceAdamW {
         }
     }
 
+    /// The step skeleton, parameterized over where the projected gradient
+    /// comes from ([`ProjIn`]). `ProjIn::Inline` is byte-for-byte the
+    /// pre-plan `core`; the other arms skip exactly the pass a fused plan
+    /// already ran, leaving every remaining op (and its workspace take/give
+    /// sequence) in the historical order.
     #[allow(clippy::too_many_arguments)]
-    fn core(
+    pub(crate) fn core_with(
         &mut self,
         meta: &LayerMeta,
         source: &mut SubspaceSource,
@@ -123,6 +152,7 @@ impl SubspaceAdamW {
         residual: &mut dyn ResidualPolicy,
         param: &mut Matrix,
         g: &Matrix,
+        proj: ProjIn<'_>,
         ctx: &StepCtx,
         ws: &mut Workspace,
     ) {
@@ -132,22 +162,36 @@ impl SubspaceAdamW {
         // precisions dequantized into pooled scratch
         let mut m = self.m.checkout(ws);
         let mut v = self.v.checkout(ws);
-        let mut g_low = ws.take_uninit(rr, r);
-        if source.refresh_due(ctx.t) {
-            ctx.obs.span("refresh", || {
-                rotation.before_refresh(source);
-                source.refresh_and_project_into(g, &mut g_low, ws);
-            });
-            ctx.obs
-                .span("rotate", || rotation.rotate_moments(source, &mut m, &mut v, ws));
-        } else {
-            ctx.obs.span("project", || source.project_into(g, &mut g_low, ws));
-        }
+        let mut owned_low: Option<Matrix> = None;
+        let g_low: &Matrix = match proj {
+            ProjIn::Low(low) => low,
+            _ => {
+                let mut gl = ws.take_uninit(rr, r);
+                if source.refresh_due(ctx.t) {
+                    ctx.obs.span("refresh", || {
+                        rotation.before_refresh(source);
+                        match proj {
+                            ProjIn::Sims(s) => {
+                                source.refresh_from_sims(g, s, &mut gl, ws)
+                            }
+                            _ => source.refresh_and_project_into(g, &mut gl, ws),
+                        }
+                    });
+                    ctx.obs.span("rotate", || {
+                        rotation.rotate_moments(source, &mut m, &mut v, ws)
+                    });
+                } else {
+                    ctx.obs.span("project", || source.project_into(g, &mut gl, ws));
+                }
+                owned_low = Some(gl);
+                owned_low.as_ref().unwrap()
+            }
+        };
         // residual capture happens before the moments move, as in the
         // legacy EF loops; `full` doubles as the back-projection buffer
         let mut full = ws.take_uninit(rr, cc);
         ctx.obs.span("residual", || {
-            residual.store_residual(source, &g_low, g, &mut full, ws)
+            residual.store_residual(source, g_low, g, &mut full, ws)
         });
         // AdamW in the subspace — the shared fused kernel
         let sc = AdamScalars::new(ctx.hyper.beta1, ctx.hyper.beta2, ctx.hyper.eps, ctx.t);
@@ -158,7 +202,7 @@ impl SubspaceAdamW {
         // U = u·Qᵀ (+ the policy's residual term), applied in the original
         // orientation without materializing a transpose
         ctx.obs.span("update", || {
-            residual.finish_update(source, g, &g_low, &u_low, &mut full, ws);
+            residual.finish_update(source, g, g_low, &u_low, &mut full, ws);
             param.scale(1.0 - ctx.lr * ctx.hyper.weight_decay);
             if meta.needs_transpose() {
                 param.axpy_t(-ctx.lr, &full);
@@ -168,7 +212,9 @@ impl SubspaceAdamW {
         });
         ws.give(u_low);
         ws.give(full);
-        ws.give(g_low);
+        if let Some(gl) = owned_low {
+            ws.give(gl);
+        }
         self.v.commit(v, ws);
         self.m.commit(m, ws);
     }
@@ -190,12 +236,24 @@ impl UpdateRule for SubspaceAdamW {
             // oriented gradient, owned: error feedback mutates it
             let mut g = take_oriented_owned(meta, grad, ws);
             residual.add_into_grad(&mut g);
-            self.core(meta, source, rotation, residual, param, &g, ctx, ws);
+            self.core_with(
+                meta, source, rotation, residual, param, &g, ProjIn::Inline, ctx, ws,
+            );
             ws.give(g);
         } else {
             // borrow in place unless transposed
             let og = OrientedGrad::take(meta, grad, ws);
-            self.core(meta, source, rotation, residual, param, og.matrix(), ctx, ws);
+            self.core_with(
+                meta,
+                source,
+                rotation,
+                residual,
+                param,
+                og.matrix(),
+                ProjIn::Inline,
+                ctx,
+                ws,
+            );
             og.give(ws);
         }
     }
@@ -230,22 +288,20 @@ impl NewtonSchulzMomentum {
     pub fn new(dtype: StateDtype, rows: usize, cols: usize, mu: f32, ns_steps: usize) -> Self {
         NewtonSchulzMomentum { momentum: StateStore::zeros(dtype, rows, cols), mu, ns_steps }
     }
-}
 
-impl UpdateRule for NewtonSchulzMomentum {
-    fn step_layer(
+    /// First half of the step: check the momentum out of its typed store
+    /// and accumulate the gradient (`B = M + G`, transposing on the fly for
+    /// wide layers). Fused plans run this in their stage-A dispatch, hold
+    /// the returned matrix across the group's batched projection pass, and
+    /// hand it back to [`NewtonSchulzMomentum::finish_from`] under the same
+    /// chunk↔shard binding, so the store's checkout/commit scratch replays
+    /// on one shard exactly as the inline path does.
+    pub(crate) fn begin_accumulate(
         &mut self,
         meta: &LayerMeta,
-        source: &mut SubspaceSource,
-        _rotation: &mut dyn RotationPolicy,
-        _residual: &mut dyn ResidualPolicy,
-        param: &mut Matrix,
         grad: &Matrix,
-        ctx: &StepCtx,
         ws: &mut Workspace,
-    ) {
-        let (rr, cc) = meta.oriented();
-        let r = source.rank();
+    ) -> Matrix {
         // momentum out of its typed store for the whole step (f32 by move)
         let mut momentum = self.momentum.checkout(ws);
         // B = M + G — accumulate the gradient straight into the momentum,
@@ -255,27 +311,57 @@ impl UpdateRule for NewtonSchulzMomentum {
         } else {
             momentum.axpy(1.0, grad);
         }
+        momentum
+    }
+
+    /// Second half: subspace extraction (unless a fused plan already ran
+    /// it — [`ProjIn`]), inherent error feedback, Newton–Schulz and the
+    /// parameter write, then the momentum commit.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn finish_from(
+        &mut self,
+        meta: &LayerMeta,
+        source: &mut SubspaceSource,
+        param: &mut Matrix,
+        mut momentum: Matrix,
+        proj: ProjIn<'_>,
+        ctx: &StepCtx,
+        ws: &mut Workspace,
+    ) {
+        let (rr, cc) = meta.oriented();
+        let r = source.rank();
         // S = DCT(B); select top-r; b = S[:, i_t] (one pass). A cadence > 1
         // (a non-Trion grid point) reuses the held subspace between
         // refreshes.
-        let mut b_low = ws.take_uninit(rr, r);
-        if source.refresh_due(ctx.t) {
-            ctx.obs.span("refresh", || {
-                source.refresh_and_project_into(&momentum, &mut b_low, ws)
-            });
-        } else {
-            ctx.obs
-                .span("project", || source.project_into(&momentum, &mut b_low, ws));
-        }
+        let mut owned_low: Option<Matrix> = None;
+        let b_low: &Matrix = match proj {
+            ProjIn::Low(low) => low,
+            _ => {
+                let mut bl = ws.take_uninit(rr, r);
+                if source.refresh_due(ctx.t) {
+                    ctx.obs.span("refresh", || match proj {
+                        ProjIn::Sims(s) => {
+                            source.refresh_from_sims(&momentum, s, &mut bl, ws)
+                        }
+                        _ => source.refresh_and_project_into(&momentum, &mut bl, ws),
+                    });
+                } else {
+                    ctx.obs
+                        .span("project", || source.project_into(&momentum, &mut bl, ws));
+                }
+                owned_low = Some(bl);
+                owned_low.as_ref().unwrap()
+            }
+        };
         // error feedback: M = B − (1−μ)·b·Qᵀ
         let mut back = ws.take_uninit(rr, cc);
-        source.back_into(&b_low, &mut back, ws);
+        source.back_into(b_low, &mut back, ws);
         momentum.axpy(-(1.0 - self.mu), &back);
         // Newton–Schulz on the LOW-RANK momentum (R×r), workspace-backed so
         // the whole step stays allocation-free (tests/alloc_steady_state.rs)
         let mut o_low = ws.take_uninit(rr, r);
         ctx.obs
-            .span("ns", || newton_schulz_into(&b_low, self.ns_steps, &mut o_low, ws));
+            .span("ns", || newton_schulz_into(b_low, self.ns_steps, &mut o_low, ws));
         ctx.obs.span("update", || {
             if let Some(errors) = ctx.errors {
                 // restore B while `back` still holds back(b_low), then
@@ -301,8 +387,27 @@ impl UpdateRule for NewtonSchulzMomentum {
         });
         ws.give(o_low);
         ws.give(back);
-        ws.give(b_low);
+        if let Some(bl) = owned_low {
+            ws.give(bl);
+        }
         self.momentum.commit(momentum, ws);
+    }
+}
+
+impl UpdateRule for NewtonSchulzMomentum {
+    fn step_layer(
+        &mut self,
+        meta: &LayerMeta,
+        source: &mut SubspaceSource,
+        _rotation: &mut dyn RotationPolicy,
+        _residual: &mut dyn ResidualPolicy,
+        param: &mut Matrix,
+        grad: &Matrix,
+        ctx: &StepCtx,
+        ws: &mut Workspace,
+    ) {
+        let momentum = self.begin_accumulate(meta, grad, ws);
+        self.finish_from(meta, source, param, momentum, ProjIn::Inline, ctx, ws);
     }
 
     fn memory(&self, rep: &mut MemoryReport) {
@@ -319,5 +424,66 @@ impl UpdateRule for NewtonSchulzMomentum {
 
     fn load_state(&mut self, r: &mut ByteReader) -> Result<()> {
         self.momentum.load_from(r)
+    }
+}
+
+/// The closed update-rule set as a monomorphized enum — the fused step
+/// plans dispatch on the variant directly (one predictable branch instead
+/// of a `Box<dyn>` virtual hop per layer per step). Delegates
+/// [`UpdateRule`] verbatim, so the interpreted oracle path drives the same
+/// code through the same representation.
+pub enum Rule {
+    Adam(SubspaceAdamW),
+    Ns(NewtonSchulzMomentum),
+}
+
+impl UpdateRule for Rule {
+    fn step_layer(
+        &mut self,
+        meta: &LayerMeta,
+        source: &mut SubspaceSource,
+        rotation: &mut dyn RotationPolicy,
+        residual: &mut dyn ResidualPolicy,
+        param: &mut Matrix,
+        grad: &Matrix,
+        ctx: &StepCtx,
+        ws: &mut Workspace,
+    ) {
+        match self {
+            Rule::Adam(r) => {
+                r.step_layer(meta, source, rotation, residual, param, grad, ctx, ws)
+            }
+            Rule::Ns(r) => {
+                r.step_layer(meta, source, rotation, residual, param, grad, ctx, ws)
+            }
+        }
+    }
+
+    fn memory(&self, rep: &mut MemoryReport) {
+        match self {
+            Rule::Adam(r) => r.memory(rep),
+            Rule::Ns(r) => r.memory(rep),
+        }
+    }
+
+    fn momentum(&self) -> Option<Matrix> {
+        match self {
+            Rule::Adam(r) => UpdateRule::momentum(r),
+            Rule::Ns(r) => UpdateRule::momentum(r),
+        }
+    }
+
+    fn save_state(&self, out: &mut Vec<u8>) {
+        match self {
+            Rule::Adam(r) => r.save_state(out),
+            Rule::Ns(r) => r.save_state(out),
+        }
+    }
+
+    fn load_state(&mut self, r: &mut ByteReader) -> Result<()> {
+        match self {
+            Rule::Adam(x) => x.load_state(r),
+            Rule::Ns(x) => x.load_state(r),
+        }
     }
 }

@@ -57,6 +57,27 @@ impl SubspaceSource {
         self.proj.rotation_into(prev_basis, out, ws);
     }
 
+    // -- fused-step-plan hooks (engine/plan.rs) --------------------------
+
+    /// Whether the projection's refresh similarity pass can be computed by
+    /// a group-batched kernel call (see [`Projection::batched_sims`]).
+    /// `Some(use_makhoul)` for the DCT family, `None` otherwise.
+    pub fn batched_sims(&self) -> Option<bool> {
+        self.proj.batched_sims()
+    }
+
+    /// Refresh from precomputed similarities `s = g·Q` (only valid when
+    /// [`SubspaceSource::batched_sims`] is `Some`).
+    pub fn refresh_from_sims(&mut self, g: &Matrix, s: &Matrix, out: &mut Matrix, ws: &mut Workspace) {
+        self.proj.refresh_from_sims(g, s, out, ws);
+    }
+
+    /// Borrow of the cached dense basis `Q_r (C×r)` when the projection
+    /// keeps one — feeds the group-batched non-refresh project pass.
+    pub fn basis_ref(&self) -> Option<&Matrix> {
+        self.proj.basis_ref()
+    }
+
     /// Selected column indices for index-selection bases (DCT / RandPerm);
     /// `None` for dense bases. The typed dispatch the fixed-basis rotation
     /// and the low-rank broadcast payload rely on.

@@ -15,6 +15,8 @@ use crate::optim::EfMode;
 use crate::projection::{ProjectionKind, RankNorm};
 use crate::tensor::StateDtype;
 
+use super::plan::StepPlanMode;
+
 /// Residual-handling axis (Table 3).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ResidualKind {
@@ -103,6 +105,12 @@ pub struct OptimizerSpec {
     /// Execution lanes: `None` shares the process-global pool, `Some(n)` a
     /// private n-lane pool (tests pin 1 vs N for bit-identity).
     pub threads: Option<usize>,
+    /// Step execution mode: compiled shape-batched programs (default) or
+    /// the per-layer interpreted loop (the differential-testing oracle).
+    /// Bit-identical by contract, so deliberately **excluded** from
+    /// `describe()`/`resolve_name()` and the checkpoint fingerprint —
+    /// checkpoints resume across modes.
+    pub step_plan: StepPlanMode,
     name: Option<String>,
 }
 
@@ -130,6 +138,7 @@ impl OptimizerSpec {
             seed: 0,
             seed_shift: 8,
             threads: None,
+            step_plan: StepPlanMode::from_env(),
             name: None,
         }
     }
@@ -264,6 +273,12 @@ impl OptimizerSpec {
         self
     }
 
+    /// Step execution mode (`step-plan=fused|interpreted`).
+    pub fn step_plan(mut self, mode: StepPlanMode) -> Self {
+        self.step_plan = mode;
+        self
+    }
+
     /// Override the reported optimizer name (otherwise derived from the
     /// composition, matching the legacy preset names exactly).
     pub fn named(mut self, name: &str) -> Self {
@@ -313,7 +328,8 @@ impl OptimizerSpec {
                 .state_dtype(cfg.state_dtype)
                 .instrument(cfg.instrument)
                 .seed(cfg.seed)
-                .threads(cfg.threads),
+                .threads(cfg.threads)
+                .step_plan(cfg.step_plan),
         )
     }
 

@@ -37,6 +37,6 @@ pub use common::{
 pub use dion::Dion;
 pub use engine::{
     rotate_fixed_basis, rotate_fixed_basis_into, BroadcastKind, OptimizerSpec,
-    ResidualKind, RotationKind, SubspaceEngine, UpdateRuleKind,
+    ResidualKind, RotationKind, StepPlanMode, SubspaceEngine, UpdateRuleKind,
 };
 pub use muon::Muon;

@@ -56,6 +56,10 @@ macro_rules! dense_basis_impl {
         fn rank(&self) -> usize {
             self.q_r.cols
         }
+
+        fn basis_ref(&self) -> Option<&Matrix> {
+            Some(&self.q_r)
+        }
     };
 }
 

@@ -19,10 +19,10 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::fft::{cached_dct2_matrix, cached_plan, MakhoulPlan};
-use crate::parallel::ThreadPool;
+use crate::parallel::{SendPtr, ThreadPool};
 use crate::tensor::{
     all_finite, matmul, matmul_a_bt, matmul_a_bt_into, matmul_into,
-    matmul_into_on, Matrix, Workspace,
+    matmul_into_on, matmul_rows_batched_on, Matrix, Workspace,
 };
 use crate::util::codec::{self, ByteReader};
 
@@ -81,6 +81,29 @@ impl SharedDct {
             self.plan.run_into_on(pool, g, out);
         } else {
             matmul_into_on(pool, g, self.q.as_ref(), out);
+        }
+    }
+
+    /// Group-batched [`SharedDct::similarities_into_on`]: `dsts.len()` jobs
+    /// of `rows_per_job` rows each, stacked into **one** pool dispatch
+    /// partitioned over the concatenated rows (the fused step plans' refresh
+    /// pass). Job `l` reads `src(l)` (`rows_per_job×C`) and writes its
+    /// similarity block through `dsts[l]`. Both underlying kernels are
+    /// per-row transforms, so stacking never regroups any element's FP
+    /// summation — bit-identical to `dsts.len()` per-layer calls.
+    pub fn similarities_rows_batched_on<'a>(
+        &self,
+        pool: &ThreadPool,
+        rows_per_job: usize,
+        use_makhoul: bool,
+        src: &(impl Fn(usize) -> &'a Matrix + Sync),
+        dsts: &[SendPtr<f32>],
+    ) {
+        if use_makhoul {
+            self.plan.run_rows_batched_on(pool, rows_per_job, src, dsts);
+        } else {
+            let q = self.q.as_ref();
+            matmul_rows_batched_on(pool, rows_per_job, src, &|_| q, dsts);
         }
     }
 
@@ -241,6 +264,37 @@ impl DctSelect {
         let low = s.select_columns(&self.idx);
         (s, low)
     }
+
+    /// Selection tail shared by the inline and fused refresh paths: rank
+    /// the columns of `s = g·Q`, roll the gauges, rebuild the basis cache
+    /// and gather `g·Q_r` into `out`. Every op from here on is identical
+    /// whether `s` was computed inline or by a group-batched pass — the
+    /// fused-plan bit-identity hinges on exactly that.
+    fn refresh_tail(&mut self, s: &Matrix, out: &mut Matrix, ws: &mut Workspace) {
+        let had_refresh = self.quality.is_some();
+        self.prev_idx.clear();
+        self.prev_idx.extend_from_slice(&self.idx);
+        let (captured, total) =
+            select_top_columns_into(s, self.rank, self.norm, ws, &mut self.idx);
+        // Gauges (§4.1): under L2 ranking, total = ‖S‖²F = ‖G‖²F (Q is
+        // orthonormal) and captured = ‖S[:,idx]‖²F = ‖G·Q_r‖²F, so the
+        // residual √(total−captured) is exactly ‖G − G·Q_r·Q_rᵀ‖F by
+        // Pythagoras. Under L1 the ratio is captured score mass instead.
+        // Overlap against the constructor prefix would be meaningless, so
+        // the first fitted refresh reports 0.
+        let overlap = if had_refresh && !self.idx.is_empty() {
+            sorted_overlap(&self.prev_idx, &self.idx) as f32 / self.idx.len() as f32
+        } else {
+            0.0
+        };
+        self.quality = Some(crate::obs::SubspaceQuality {
+            energy_ratio: if total > 0.0 { (captured / total) as f32 } else { 1.0 },
+            resid_norm: (total - captured).max(0.0).sqrt() as f32,
+            overlap,
+        });
+        self.shared.matrix().select_columns_into(&self.idx, &mut self.basis_cache);
+        s.select_columns_into(&self.idx, out);
+    }
 }
 
 impl Projection for DctSelect {
@@ -276,30 +330,29 @@ impl Projection for DctSelect {
         // fully overwritten by similarities_into → non-zeroing checkout
         let mut s = ws.take_uninit(g.rows, self.shared.dim());
         self.shared.similarities_into(g, self.use_makhoul, &mut s);
-        let had_refresh = self.quality.is_some();
-        self.prev_idx.clear();
-        self.prev_idx.extend_from_slice(&self.idx);
-        let (captured, total) =
-            select_top_columns_into(&s, self.rank, self.norm, ws, &mut self.idx);
-        // Gauges (§4.1): under L2 ranking, total = ‖S‖²F = ‖G‖²F (Q is
-        // orthonormal) and captured = ‖S[:,idx]‖²F = ‖G·Q_r‖²F, so the
-        // residual √(total−captured) is exactly ‖G − G·Q_r·Q_rᵀ‖F by
-        // Pythagoras. Under L1 the ratio is captured score mass instead.
-        // Overlap against the constructor prefix would be meaningless, so
-        // the first fitted refresh reports 0.
-        let overlap = if had_refresh && !self.idx.is_empty() {
-            sorted_overlap(&self.prev_idx, &self.idx) as f32 / self.idx.len() as f32
-        } else {
-            0.0
-        };
-        self.quality = Some(crate::obs::SubspaceQuality {
-            energy_ratio: if total > 0.0 { (captured / total) as f32 } else { 1.0 },
-            resid_norm: (total - captured).max(0.0).sqrt() as f32,
-            overlap,
-        });
-        self.shared.matrix().select_columns_into(&self.idx, &mut self.basis_cache);
-        s.select_columns_into(&self.idx, out);
+        self.refresh_tail(&s, out, ws);
         ws.give(s);
+    }
+
+    fn batched_sims(&self) -> Option<bool> {
+        Some(self.use_makhoul)
+    }
+
+    fn refresh_from_sims(&mut self, g: &Matrix, s: &Matrix, out: &mut Matrix, ws: &mut Workspace) {
+        // Same non-finite guard as the inline path — the batched similarity
+        // pass ran unconditionally, but ranking on NaN norms must not
+        // replace a good selection (the similarities themselves are cheap
+        // and discarded in that case).
+        if !all_finite(&g.data) {
+            matmul_into(g, &self.basis_cache, out);
+            return;
+        }
+        debug_assert_eq!((s.rows, s.cols), (g.rows, self.shared.dim()));
+        self.refresh_tail(s, out, ws);
+    }
+
+    fn basis_ref(&self) -> Option<&Matrix> {
+        Some(&self.basis_cache)
     }
 
     fn project_into(&self, g: &Matrix, out: &mut Matrix, _ws: &mut Workspace) {

@@ -159,6 +159,40 @@ pub trait Projection: Send {
         None
     }
 
+    // -- fused-step-plan hooks (engine/plan.rs) ---------------------------
+    //
+    // A fused plan batches a whole shape group's expensive pass into one
+    // pool dispatch and hands each layer its precomputed block. These hooks
+    // declare what a family supports; families that support neither fall
+    // back to the grouped per-layer path, which is bit-identical by
+    // construction.
+
+    /// `Some(use_makhoul)` when the refresh's similarity pass is a
+    /// row-independent transform against a shared basis (`S = G·Q`) that a
+    /// plan may compute batched across layers, finishing the refresh with
+    /// [`Projection::refresh_from_sims`]. `None` for every other family
+    /// (their refreshes aren't separable into a stacked row transform).
+    fn batched_sims(&self) -> Option<bool> {
+        None
+    }
+
+    /// Finish a refresh whose similarity block `s = g·Q (R×C)` was computed
+    /// by a batched pass: run the selection tail and write `g·Q_r` into
+    /// `out`. Must be bit-identical to [`Projection::refresh_and_project_into`]
+    /// when `s` holds exactly what the inline pass would have computed.
+    /// Only callable when [`Projection::batched_sims`] is `Some`.
+    fn refresh_from_sims(&mut self, _g: &Matrix, _s: &Matrix, _out: &mut Matrix, _ws: &mut Workspace) {
+        unreachable!("{}: refresh_from_sims without batched_sims support", self.name());
+    }
+
+    /// Borrow the materialized dense basis `Q_r (C×r)` when one is held in
+    /// memory (so a plan can batch `project` as a stacked matmul against
+    /// it). `None` for gather-based projections (RandPerm), whose project
+    /// is not a matmul.
+    fn basis_ref(&self) -> Option<&Matrix> {
+        None
+    }
+
     /// Subspace-quality gauges from the most recent refresh (captured-energy
     /// ratio, projection residual norm, basis overlap with the previous
     /// selection) — the observability feed for the adaptive-rank open item.

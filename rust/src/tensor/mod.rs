@@ -22,6 +22,6 @@ pub use store::{StateDtype, StateStore};
 pub use ops::{
     all_finite, matmul, matmul_a_bt, matmul_a_bt_into, matmul_a_bt_into_on,
     matmul_at_b, matmul_at_b_into, matmul_at_b_into_on, matmul_into,
-    matmul_into_on,
+    matmul_into_on, matmul_rows_batched_on,
 };
 pub use workspace::Workspace;

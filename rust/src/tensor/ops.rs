@@ -36,7 +36,7 @@
 //! bits of the sequential kernel for any thread count** — enforced by
 //! `tests/parallel_determinism.rs`.
 
-use crate::parallel::{par_row_slabs, ThreadPool};
+use crate::parallel::{par_row_slabs, partition, SendPtr, ThreadPool};
 use crate::simd::{reduce_tree8, Simd, F32_LANES};
 
 use super::Matrix;
@@ -374,6 +374,61 @@ pub fn matmul_a_bt_into_on(pool: &ThreadPool, a: &Matrix, b: &Matrix, c: &mut Ma
     par_rows(pool, m, n, &mut c.data, |rows, lo, hi| mm_a_bt_block(a, b, rows, lo, hi));
 }
 
+/// Group-batched [`matmul_into_on`]: `dsts.len()` independent products
+/// `src(l) · b(l)`, each with `rows_per_job` output rows, stacked into one
+/// pool dispatch partitioned over the *concatenated* row space — the fused
+/// step plans' project passes (one dispatch per layer group instead of one
+/// per layer). Job `l` writes its `rows_per_job × b(l).cols` result through
+/// `dsts[l]`; each destination range is zero-filled here before the
+/// accumulating kernel runs, so callers may hand over dirty buffers.
+/// `mm_block`'s per-element summation order is ascending `k` independent of
+/// the starting row, so any chunking of the flattened row space produces
+/// the exact bits of `dsts.len()` sequential [`matmul_into`] calls.
+///
+/// Safety contract (checked only by `debug_assert`): `dsts[l]` must point
+/// to a writable `rows_per_job * b(l).cols` f32 slab and the slabs must be
+/// mutually disjoint; `src(l)` must have `rows_per_job` rows matching
+/// `b(l).rows` columns.
+pub fn matmul_rows_batched_on<'a, 'b>(
+    pool: &ThreadPool,
+    rows_per_job: usize,
+    src: &(impl Fn(usize) -> &'a Matrix + Sync),
+    b: &(impl Fn(usize) -> &'b Matrix + Sync),
+    dsts: &[SendPtr<f32>],
+) {
+    let total = dsts.len() * rows_per_job;
+    if total == 0 {
+        return;
+    }
+    let (per, n_chunks) = partition(pool.threads(), total);
+    pool.par_chunks(n_chunks, |c| {
+        let lo = c * per;
+        let hi = (lo + per).min(total);
+        let mut f = lo;
+        while f < hi {
+            let l = f / rows_per_job;
+            let i0 = f % rows_per_job;
+            let i1 = rows_per_job.min(i0 + (hi - f));
+            let a = src(l);
+            let bm = b(l);
+            debug_assert_eq!(a.rows, rows_per_job, "batched matmul: job {l} row count");
+            debug_assert_eq!(a.cols, bm.rows, "batched matmul: job {l} shape mismatch");
+            let n = bm.cols;
+            // SAFETY: rows [i0, i1) of job l's slab — chunks cover disjoint
+            // ranges of the flattened row space and slabs are disjoint per
+            // the caller contract, so no two chunks alias.
+            let slab = unsafe {
+                std::slice::from_raw_parts_mut(dsts[l].0.add(i0 * n), (i1 - i0) * n)
+            };
+            slab.fill(0.0);
+            if n > 0 {
+                mm_block(a, bm, slab, i0, i1);
+            }
+            f += i1 - i0;
+        }
+    });
+}
+
 /// Non-finite (NaN/±Inf) detection: an f32 is non-finite iff its exponent
 /// bits are all ones, i.e. `bits & 0x7F80_0000 == 0x7F80_0000`. The lane
 /// version expresses the equality test with the existing exact u32 ops
@@ -537,6 +592,33 @@ mod tests {
 
                 matmul_a_bt_into_on(pool, &a, &bt, &mut out);
                 assert_eq!(out, matmul_a_bt(&a, &bt), "a_bt t={}", pool.threads());
+            }
+        });
+    }
+
+    #[test]
+    fn prop_rows_batched_bit_identical_to_per_job() {
+        // The stacked group dispatch must reproduce the exact bits of
+        // per-job matmul_into calls for every thread count and chunking.
+        let pools = [ThreadPool::new(1), ThreadPool::new(3), ThreadPool::new(8)];
+        proptest::check("batched==per-job", 8, |rng| {
+            let jobs = proptest::size(rng, 1, 6);
+            let m = proptest::size(rng, 1, 20);
+            let k = proptest::size(rng, 1, 24);
+            let n = proptest::size(rng, 1, 24);
+            let srcs: Vec<Matrix> =
+                (0..jobs).map(|_| Matrix::randn(m, k, 1.0, rng)).collect();
+            let b = Matrix::randn(k, n, 1.0, rng);
+            let want: Vec<Matrix> = srcs.iter().map(|a| matmul(a, &b)).collect();
+            let mut outs: Vec<Matrix> =
+                (0..jobs).map(|_| Matrix::randn(m, n, 1.0, rng)).collect(); // dirty
+            for pool in &pools {
+                let dsts: Vec<SendPtr<f32>> =
+                    outs.iter_mut().map(|o| SendPtr(o.data.as_mut_ptr())).collect();
+                matmul_rows_batched_on(pool, m, &|l| &srcs[l], &|_| &b, &dsts);
+                for (o, w) in outs.iter().zip(&want) {
+                    assert_eq!(o, w, "t={}", pool.threads());
+                }
             }
         });
     }

@@ -352,6 +352,7 @@ impl TrainConfig {
                 }),
             ),
             ("state_dtype", s(self.opt.state_dtype.name())),
+            ("step_plan", s(self.opt.step_plan.name())),
             ("use_aot_optimizer", Json::Bool(self.use_aot_optimizer)),
             // 0 = auto (global pool)
             ("threads", num(self.opt.threads.unwrap_or(0) as f64)),
@@ -437,6 +438,12 @@ impl TrainConfig {
                 self.opt.state_dtype = StateDtype::parse(value).ok_or_else(|| {
                     anyhow::anyhow!("unknown state dtype {value:?} (f32|bf16|q8)")
                 })?
+            }
+            // engine step execution: fused shape-batched programs (default)
+            // vs the interpreted per-layer oracle — bit-identical, so safe
+            // to flip between runs and across checkpoint resumes
+            "step-plan" | "step_plan" => {
+                self.opt.step_plan = crate::optim::StepPlanMode::parse(value)?
             }
             "resume" => self.resume = Some(value.into()),
             "save-state" | "save_state" => self.save_state_to = Some(value.into()),
@@ -662,6 +669,38 @@ mod tests {
         c.apply("update-interval", "50").unwrap();
         let opt = c.build_optimizer(&metas).unwrap();
         assert_eq!(opt.name(), "engine(dct+adamw+ef-q8,T50,m:bf16)");
+    }
+
+    #[test]
+    fn step_plan_key_round_trips_and_stays_out_of_names() {
+        use crate::optim::{ParamKind, StepPlanMode};
+        let mut c = TrainConfig::default();
+        // default dumps as the env-resolved mode (fused unless the test
+        // environment pinned the interpreted oracle)
+        let back = Json::parse(&c.to_json().to_string()).unwrap();
+        assert_eq!(
+            back.req("step_plan").unwrap().as_str().unwrap(),
+            c.opt.step_plan.name()
+        );
+        for (v, want) in
+            [("fused", StepPlanMode::Fused), ("interpreted", StepPlanMode::Interpreted)]
+        {
+            c.apply("step-plan", v).unwrap();
+            assert_eq!(c.opt.step_plan, want);
+            let back = Json::parse(&c.to_json().to_string()).unwrap();
+            assert_eq!(back.req("step_plan").unwrap().as_str().unwrap(), v);
+            c.apply("step_plan", v).unwrap();
+            assert_eq!(c.opt.step_plan, want);
+        }
+        assert!(c.apply("step-plan", "jit").is_err());
+        // bit-identical modes must not leak into optimizer naming (and so
+        // not into checkpoint fingerprints — resumes cross modes freely)
+        let metas = vec![LayerMeta::new("w", 10, 8, ParamKind::Linear)];
+        c.apply("step-plan", "interpreted").unwrap();
+        let interp = c.build_optimizer(&metas).unwrap().name().to_string();
+        c.apply("step-plan", "fused").unwrap();
+        let fused = c.build_optimizer(&metas).unwrap().name().to_string();
+        assert_eq!(interp, fused);
     }
 
     #[test]

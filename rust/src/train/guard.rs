@@ -122,10 +122,8 @@ impl StepGuard {
     }
 
     fn scan(&mut self, loss: f64, grads: &[Matrix]) -> GuardVerdict {
-        for (i, g) in grads.iter().enumerate() {
-            if !all_finite(&g.data) {
-                return GuardVerdict::NonFiniteGrad { layer: i };
-            }
+        if let Some(layer) = first_nonfinite_layer(grads) {
+            return GuardVerdict::NonFiniteGrad { layer };
         }
         if !loss.is_finite() {
             return GuardVerdict::NonFiniteLoss;
@@ -151,6 +149,38 @@ impl StepGuard {
     /// window re-reports its losses from the snapshot point).
     pub fn reset(&mut self) {
         self.ema_loss = None;
+    }
+}
+
+/// Scan every gradient for non-finites across the global pool, reporting
+/// the **minimum** offending layer index — the same verdict the old serial
+/// sweep produced, regardless of which lane finds its hit first.
+/// Allocation-free: one stack atomic, chunks over the existing pool.
+fn first_nonfinite_layer(grads: &[Matrix]) -> Option<usize> {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    let n = grads.len();
+    if n == 0 {
+        return None;
+    }
+    let pool = crate::parallel::global();
+    let (per, n_chunks) = crate::parallel::partition(pool.threads(), n);
+    let min = AtomicUsize::new(usize::MAX);
+    pool.par_chunks(n_chunks, |k| {
+        let lo = k * per;
+        let hi = (lo + per).min(n);
+        for (i, g) in grads[lo..hi].iter().enumerate() {
+            if !all_finite(&g.data) {
+                // Layers within a chunk scan in ascending order, so the
+                // first hit is this chunk's minimum; fetch_min reduces
+                // across chunks.
+                min.fetch_min(lo + i, Ordering::Relaxed);
+                break;
+            }
+        }
+    });
+    match min.load(Ordering::Relaxed) {
+        usize::MAX => None,
+        i => Some(i),
     }
 }
 
@@ -187,6 +217,23 @@ mod tests {
         assert_eq!(
             guard.check(1.0, &grads),
             GuardVerdict::NonFiniteGrad { layer: 0 }
+        );
+    }
+
+    #[test]
+    fn parallel_sweep_reports_minimum_offender() {
+        let mut guard = StepGuard::new(GuardPolicy::Skip, 0.0);
+        // enough layers that the global pool actually chunks the sweep
+        let mut grads: Vec<Matrix> = (0..37).map(|_| Matrix::zeros(4, 5)).collect();
+        for g in &mut grads {
+            g.data.fill(0.5);
+        }
+        for &i in &[31usize, 7, 22] {
+            grads[i].data[2] = f32::NAN;
+        }
+        assert_eq!(
+            guard.check(1.0, &grads),
+            GuardVerdict::NonFiniteGrad { layer: 7 }
         );
     }
 

@@ -35,6 +35,14 @@
 //! build time, so full telemetry must not cost a single steady-state
 //! allocation either.
 //!
+//! Since the step-plan PR the sweep also covers both execution plans
+//! (`step-plan=fused|interpreted`): the fused shape-batched group programs
+//! own their staging/similarity/low-rank slabs (allocated at plan build)
+//! and refill their `SendPtr` scatter tables in place, so a fused step —
+//! batched refresh included — must be exactly as allocation-free as the
+//! interpreted per-layer loop it replaces. The zoo repeats shapes so the
+//! plan forms multi-layer groups and the batched kernels genuinely stack.
+//!
 //! This file is its own test binary (integration test), so the global
 //! allocator and the single `#[test]` share the process without
 //! interference from the rest of the suite.
@@ -45,6 +53,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use fft_subspace::obs::{self, ObsTier};
 use fft_subspace::optim::{
     build_optimizer, LayerMeta, Optimizer, OptimizerConfig, OptimizerKind, ParamKind,
+    StepPlanMode,
 };
 use fft_subspace::tensor::{Matrix, StateDtype};
 use fft_subspace::train::{GuardPolicy, StepGuard};
@@ -89,12 +98,16 @@ static GLOBAL: CountingAlloc = CountingAlloc;
 fn steady_state_steps_are_allocation_free() {
     // Layer zoo: tall, wide (transpose orientation), a width whose Makhoul
     // half-plan is non-power-of-two (24 → 12-point Bluestein), and a dense
-    // AdamW-path norm parameter.
+    // AdamW-path norm parameter. The tall and wide shapes repeat so the
+    // fused step plan forms multi-layer groups (stacked batched kernels),
+    // not just degenerate singletons.
     let metas = vec![
         LayerMeta::new("wq", 48, 32, ParamKind::Linear),
         LayerMeta::new("w_gate", 32, 48, ParamKind::Linear),
         LayerMeta::new("wk", 40, 24, ParamKind::Linear),
         LayerMeta::new("norm", 1, 32, ParamKind::Norm),
+        LayerMeta::new("wq2", 48, 32, ParamKind::Linear),
+        LayerMeta::new("w_gate2", 32, 48, ParamKind::Linear),
     ];
     let mut rng = Pcg64::seed(0);
     let grads: Vec<Matrix> = metas
@@ -111,9 +124,8 @@ fn steady_state_steps_are_allocation_free() {
         }
     }
 
-    // One proof per (preset, dtype, execution mode): sequential (1 lane)
-    // and the parallel step_layers_parallel path (3 lanes, 4 layers → 2
-    // chunks in flight). DctAdamW pins the vectorized project/refresh/EF
+    // One proof per (preset, dtype, step plan, execution mode): sequential
+    // (1 lane) and the parallel path (3 lanes, 6 layers → 2 per chunk). DctAdamW pins the vectorized project/refresh/EF
     // path, Trion the workspace-backed Newton–Schulz, LdAdamW the
     // workspace-backed block-power refresh (refresh every step), Fira/
     // Frugal the residual policies over the DCT source, GaLore the
@@ -141,11 +153,13 @@ fn steady_state_steps_are_allocation_free() {
             OptimizerKind::LdAdamW,
         ] {
             for &state_dtype in &dtypes {
+                for step_plan in [StepPlanMode::Fused, StepPlanMode::Interpreted] {
                 for threads in [1usize, 3] {
                     let cfg = OptimizerConfig {
                         rank: 8,
                         threads: Some(threads),
                         state_dtype,
+                        step_plan,
                         // exercise refresh AND project-only steps inside the
                         // counted window for every preset
                         update_interval: 4,
@@ -183,18 +197,22 @@ fn steady_state_steps_are_allocation_free() {
                         allocs,
                         0,
                         "steady-state {} steps (threads={threads}, \
-                         state-dtype={}, obs={}) performed {allocs} heap \
-                         allocations (expected zero — a workspace buffer is \
-                         being dropped or resized, the pool dispatch \
-                         allocates, or a telemetry hook heap-allocates)",
+                         state-dtype={}, step-plan={}, obs={}) performed \
+                         {allocs} heap allocations (expected zero — a \
+                         workspace buffer is being dropped or resized, the \
+                         pool dispatch allocates, a fused group program \
+                         resizes a staging slab, or a telemetry hook \
+                         heap-allocates)",
                         kind.name(),
                         state_dtype.name(),
+                        step_plan.name(),
                         tier.name()
                     );
 
                     // sanity: the optimizer actually did work in the counted
                     // window
                     assert!(params[0].fro_norm() > 0.0);
+                }
                 }
             }
         }

@@ -293,6 +293,77 @@ fn rollback_crash_restart_matches_uninterrupted() {
     }
 }
 
+/// Crash-restart across step-plan modes: the run crashes under the fused
+/// shape-batched plan, the restart engine is built `interpreted` (e.g. an
+/// operator flips `FFT_SUBSPACE_STEP_PLAN` while diagnosing the fault) —
+/// and the trajectory still lands on the uninterrupted fused run's bits.
+/// Works because plans are derived state outside the checkpoint
+/// fingerprint, and the two modes are bit-identical step for step.
+#[test]
+fn rollback_restores_across_step_plan_modes() {
+    use fft_subspace::optim::StepPlanMode;
+    let metas = layer_zoo();
+    let (n, k, interval) = (12usize, 7usize, 3usize);
+    let grads = grad_seq(&metas, n, 42);
+    let fused = OptimizerConfig {
+        step_plan: StepPlanMode::Fused,
+        ..cfg_for(StateDtype::Q8)
+    };
+    let interp = OptimizerConfig {
+        step_plan: StepPlanMode::Interpreted,
+        ..cfg_for(StateDtype::Q8)
+    };
+    let kind = OptimizerKind::DctAdamW;
+
+    let mut ref_opt = build_optimizer(&kind, &metas, &fused);
+    let mut ref_params = zero_params(&metas);
+    for (step, g) in grads.iter().enumerate() {
+        ref_opt.step(&mut ref_params, g, decaying_lr(step));
+    }
+
+    let dir = scratch_dir("crossmode");
+    let rot = CheckpointRotation::new(&dir, 2);
+    let injector = FaultInjector::new(FaultPlan::parse(&format!("grad-nan@{k}")).unwrap());
+    let mut guard = StepGuard::new(GuardPolicy::Rollback, 0.0);
+    let mut opt = build_optimizer(&kind, &metas, &fused);
+    let mut params = zero_params(&metas);
+    for (step, g) in grads.iter().enumerate() {
+        let mut g = g.clone();
+        injector.corrupt_grads(step, &mut g);
+        if !guard.check(fake_loss(step), &g).is_healthy() {
+            break;
+        }
+        opt.step(&mut params, &g, decaying_lr(step));
+        let completed = step + 1;
+        if completed % interval == 0 {
+            let state = TrainState {
+                step: completed as u64,
+                optimizer: opt.name().to_string(),
+                opt_state: opt.save_state().unwrap(),
+            };
+            rot.save(completed as u64, &params, &state).unwrap();
+        }
+    }
+    drop(opt);
+
+    let (snap_step, path) = rot.latest().unwrap().expect("snapshot retained");
+    let ck = checkpoint::load_full(&path).unwrap();
+    let state = ck.state.expect("v2 snapshot carries optimizer state");
+    let mut opt = build_optimizer(&kind, &metas, &interp);
+    opt.load_state(&state.opt_state)
+        .expect("fused-mode blob restores into an interpreted engine");
+    let mut params = ck.params;
+    for (step, g) in grads.iter().enumerate().skip(snap_step as usize) {
+        opt.step(&mut params, g, decaying_lr(step));
+    }
+    assert_eq!(
+        bits(&ref_params),
+        bits(&params),
+        "interpreted restart diverged from the uninterrupted fused run"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 /// `guard=rollback`, in-process shape (the trainer's actual loop): same
 /// one-shot injector, restore + replay inside the run. Because the fault
 /// fires exactly once, the replay crosses step `k` cleanly and the run

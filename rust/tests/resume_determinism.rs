@@ -164,6 +164,59 @@ fn env_selected_dtype_resumes_bit_identically() {
 }
 
 #[test]
+fn resume_crosses_step_plan_modes_bit_identically() {
+    // Step plans are derived state: they are rebuilt at load_state and
+    // excluded from the checkpoint fingerprint, so a blob saved under the
+    // fused shape-batched plan restores into an interpreted engine (and
+    // vice versa) and continues the exact trajectory.
+    use fft_subspace::optim::StepPlanMode;
+    let metas = layer_zoo();
+    let (n, k) = (11usize, 5usize);
+    let grads = grad_seq(&metas, n, 42);
+    let fused = OptimizerConfig {
+        step_plan: StepPlanMode::Fused,
+        ..cfg_for(StateDtype::Q8)
+    };
+    let interp = OptimizerConfig {
+        step_plan: StepPlanMode::Interpreted,
+        ..cfg_for(StateDtype::Q8)
+    };
+    for kind in &SIX_PRESETS {
+        // uninterrupted fused reference
+        let mut ref_opt = build_optimizer(kind, &metas, &fused);
+        let mut ref_params: Vec<Matrix> =
+            metas.iter().map(|m| Matrix::zeros(m.rows, m.cols)).collect();
+        for (step, g) in grads.iter().enumerate() {
+            ref_opt.step(&mut ref_params, g, decaying_lr(step));
+        }
+        for (save_cfg, load_cfg, label) in
+            [(&fused, &interp, "fused→interpreted"), (&interp, &fused, "interpreted→fused")]
+        {
+            let mut opt_a = build_optimizer(kind, &metas, save_cfg);
+            let mut params: Vec<Matrix> =
+                metas.iter().map(|m| Matrix::zeros(m.rows, m.cols)).collect();
+            for (step, g) in grads.iter().take(k).enumerate() {
+                opt_a.step(&mut params, g, decaying_lr(step));
+            }
+            let blob = opt_a.save_state().unwrap();
+            let mut opt_b = build_optimizer(kind, &metas, load_cfg);
+            opt_b
+                .load_state(&blob)
+                .unwrap_or_else(|e| panic!("{} {label} restore failed: {e:#}", kind.name()));
+            for (step, g) in grads.iter().enumerate().skip(k) {
+                opt_b.step(&mut params, g, decaying_lr(step));
+            }
+            assert_eq!(
+                bits(&ref_params),
+                bits(&params),
+                "{} ({label}): cross-mode resume diverged",
+                kind.name()
+            );
+        }
+    }
+}
+
+#[test]
 fn dense_adamw_resumes_bit_identically() {
     let metas = layer_zoo();
     let (n, k) = (9usize, 4usize);

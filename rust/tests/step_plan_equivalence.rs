@@ -1,0 +1,227 @@
+//! The fused step-plan contract: `step-plan=fused` (compiled shape-batched
+//! group programs) is **bit-identical** to `step-plan=interpreted` (the
+//! retained per-layer loop, the differential-testing oracle) — for all six
+//! engine presets, every state dtype, and every lane count.
+//!
+//! The layer zoo deliberately repeats shapes so the plan forms multi-layer
+//! groups (the batched kernels actually stack rows), includes wide layers
+//! (transpose orientation → staged gradients), a Bluestein width, and
+//! dense-fallback params. Cadence T_u=3 exercises both group programs:
+//! batched-similarity refresh steps (t=1,3,6,9) and batched-projection
+//! steps in between (Trion/LDAdamW pin T_u=1 and refresh every step).
+//!
+//! Comparisons are on raw `to_bits` parameter trajectories after every
+//! step, plus byte-equal `save_state` blobs at the end — the fused plan is
+//! also invisible to the checkpoint fingerprint, so blobs from the two
+//! modes must be interchangeable.
+
+use fft_subspace::optim::{
+    build_optimizer, LayerMeta, Optimizer, OptimizerConfig, OptimizerKind, ParamKind,
+    StepPlanMode,
+};
+use fft_subspace::tensor::{Matrix, StateDtype};
+use fft_subspace::util::Pcg64;
+
+/// Shape-repeating zoo: three 48×32 + two wide 32×48 (same oriented group,
+/// opposite orientation key) + two 40×24 (Bluestein width 24) + one square
+/// 32×32, plus dense-path norm/embed params interleaved so group layer
+/// indices are non-contiguous.
+fn grouped_zoo() -> Vec<LayerMeta> {
+    vec![
+        LayerMeta::new("b0.wq", 48, 32, ParamKind::Linear),
+        LayerMeta::new("b0.gate", 32, 48, ParamKind::Linear),
+        LayerMeta::new("b0.norm", 1, 32, ParamKind::Norm),
+        LayerMeta::new("b1.wq", 48, 32, ParamKind::Linear),
+        LayerMeta::new("b1.wk", 40, 24, ParamKind::Linear),
+        LayerMeta::new("embed", 64, 32, ParamKind::Embed),
+        LayerMeta::new("b1.gate", 32, 48, ParamKind::Linear),
+        LayerMeta::new("b2.wq", 48, 32, ParamKind::Linear),
+        LayerMeta::new("b2.wk", 40, 24, ParamKind::Linear),
+        LayerMeta::new("b2.wv", 32, 32, ParamKind::Linear),
+    ]
+}
+
+fn grad_seq(metas: &[LayerMeta], steps: usize, seed: u64) -> Vec<Vec<Matrix>> {
+    let mut rng = Pcg64::seed(seed);
+    (0..steps)
+        .map(|_| {
+            metas
+                .iter()
+                .map(|m| Matrix::randn(m.rows, m.cols, 0.1, &mut rng))
+                .collect()
+        })
+        .collect()
+}
+
+fn bits(params: &[Matrix]) -> Vec<Vec<u32>> {
+    params
+        .iter()
+        .map(|p| p.data.iter().map(|v| v.to_bits()).collect())
+        .collect()
+}
+
+fn decaying_lr(step: usize) -> f32 {
+    1e-2 / (1.0 + step as f32 * 0.1)
+}
+
+fn cfg(state_dtype: StateDtype, lanes: usize, plan: StepPlanMode) -> OptimizerConfig {
+    OptimizerConfig {
+        rank: 8,
+        threads: Some(lanes),
+        update_interval: 3,
+        state_dtype,
+        step_plan: plan,
+        ..Default::default()
+    }
+}
+
+const SIX_PRESETS: [OptimizerKind; 6] = [
+    OptimizerKind::DctAdamW,
+    OptimizerKind::Trion,
+    OptimizerKind::GaLore,
+    OptimizerKind::Fira,
+    OptimizerKind::Frugal,
+    OptimizerKind::LdAdamW,
+];
+
+const STEPS: usize = 10;
+
+/// Run one preset at one dtype under (plan, lanes), returning the per-step
+/// parameter bit trajectory and the final state blob.
+fn run(
+    kind: &OptimizerKind,
+    state_dtype: StateDtype,
+    lanes: usize,
+    plan: StepPlanMode,
+    grads: &[Vec<Matrix>],
+    metas: &[LayerMeta],
+) -> (Vec<Vec<Vec<u32>>>, Vec<u8>) {
+    let mut opt = build_optimizer(kind, metas, &cfg(state_dtype, lanes, plan));
+    let mut params: Vec<Matrix> =
+        metas.iter().map(|m| Matrix::zeros(m.rows, m.cols)).collect();
+    let mut traj = Vec::with_capacity(grads.len());
+    for (step, g) in grads.iter().enumerate() {
+        opt.step(&mut params, g, decaying_lr(step));
+        traj.push(bits(&params));
+    }
+    let blob = opt.save_state().expect("engine presets support state blobs");
+    (traj, blob)
+}
+
+fn assert_fused_matches_oracle(state_dtype: StateDtype) {
+    let metas = grouped_zoo();
+    let grads = grad_seq(&metas, STEPS, 42);
+    for kind in &SIX_PRESETS {
+        // the oracle: single-lane interpreted per-layer loop
+        let (oracle_traj, oracle_blob) = run(
+            kind,
+            state_dtype,
+            1,
+            StepPlanMode::Interpreted,
+            &grads,
+            &metas,
+        );
+        for lanes in [1usize, 3, 8] {
+            for plan in [StepPlanMode::Fused, StepPlanMode::Interpreted] {
+                let (traj, blob) = run(kind, state_dtype, lanes, plan, &grads, &metas);
+                for (step, (got, want)) in traj.iter().zip(&oracle_traj).enumerate() {
+                    assert_eq!(
+                        got,
+                        want,
+                        "{} (dtype={}, lanes={lanes}, plan={}): step {} diverged \
+                         from the interpreted oracle",
+                        kind.name(),
+                        state_dtype.name(),
+                        plan.name(),
+                        step + 1
+                    );
+                }
+                // state blobs are mode-invariant (plans are derived state,
+                // outside the fingerprint)
+                assert_eq!(
+                    blob,
+                    oracle_blob,
+                    "{} (dtype={}, lanes={lanes}, plan={}): final state blob \
+                     differs",
+                    kind.name(),
+                    state_dtype.name(),
+                    plan.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn six_presets_fused_equals_interpreted_f32() {
+    assert_fused_matches_oracle(StateDtype::F32);
+}
+
+#[test]
+fn six_presets_fused_equals_interpreted_bf16() {
+    assert_fused_matches_oracle(StateDtype::Bf16);
+}
+
+#[test]
+fn six_presets_fused_equals_interpreted_q8() {
+    assert_fused_matches_oracle(StateDtype::Q8);
+}
+
+#[test]
+fn fused_respects_every_step_cadence_too() {
+    // T_u=1 (refresh every step): the batched-similarity program runs on
+    // every step and the batched-projection program never does — the other
+    // boundary of the cadence space.
+    let metas = grouped_zoo();
+    let grads = grad_seq(&metas, 6, 7);
+    for kind in [OptimizerKind::DctAdamW, OptimizerKind::Fira, OptimizerKind::Frugal] {
+        let every = |plan| OptimizerConfig {
+            update_interval: 1,
+            ..cfg(StateDtype::F32, 3, plan)
+        };
+        let run_with = |c: &OptimizerConfig| {
+            let mut opt = build_optimizer(&kind, &metas, c);
+            let mut params: Vec<Matrix> =
+                metas.iter().map(|m| Matrix::zeros(m.rows, m.cols)).collect();
+            for (step, g) in grads.iter().enumerate() {
+                opt.step(&mut params, g, decaying_lr(step));
+            }
+            bits(&params)
+        };
+        assert_eq!(
+            run_with(&every(StepPlanMode::Fused)),
+            run_with(&every(StepPlanMode::Interpreted)),
+            "{} T_u=1 fused diverged",
+            kind.name()
+        );
+    }
+}
+
+#[test]
+fn fused_engine_rebuilds_plan_on_restore() {
+    // save under fused → restore into a fused engine → the rebuilt plan
+    // continues the exact trajectory (plans are derived, not serialized).
+    let metas = grouped_zoo();
+    let (n, k) = (9usize, 4usize);
+    let grads = grad_seq(&metas, n, 11);
+    let c = cfg(StateDtype::Q8, 3, StepPlanMode::Fused);
+    let mut ref_opt = build_optimizer(&OptimizerKind::DctAdamW, &metas, &c);
+    let mut ref_params: Vec<Matrix> =
+        metas.iter().map(|m| Matrix::zeros(m.rows, m.cols)).collect();
+    for (step, g) in grads.iter().enumerate() {
+        ref_opt.step(&mut ref_params, g, decaying_lr(step));
+    }
+    let mut opt_a = build_optimizer(&OptimizerKind::DctAdamW, &metas, &c);
+    let mut params: Vec<Matrix> =
+        metas.iter().map(|m| Matrix::zeros(m.rows, m.cols)).collect();
+    for (step, g) in grads.iter().take(k).enumerate() {
+        opt_a.step(&mut params, g, decaying_lr(step));
+    }
+    let blob = opt_a.save_state().unwrap();
+    let mut opt_b = build_optimizer(&OptimizerKind::DctAdamW, &metas, &c);
+    opt_b.load_state(&blob).unwrap();
+    for (step, g) in grads.iter().enumerate().skip(k) {
+        opt_b.step(&mut params, g, decaying_lr(step));
+    }
+    assert_eq!(bits(&ref_params), bits(&params));
+}
