@@ -7,7 +7,7 @@
 CARGO ?= cargo
 RUST_DIR := rust
 
-.PHONY: build test test-faults test-matrix bench bench-proj bench-par bench-simd bench-makhoul bench-optim bench-mem bench-obs artifacts clean
+.PHONY: build test test-faults test-matrix bench bench-proj bench-par bench-simd bench-makhoul bench-optim bench-mem bench-obs bench-comm artifacts clean
 
 build:
 	cd $(RUST_DIR) && $(CARGO) build --release
@@ -38,6 +38,10 @@ test-faults:
 # interpreted per-layer oracle — resume, fault recovery, thread-count
 # determinism and the fused-vs-interpreted equivalence suite must all hold
 # in both cells.
+# The sixth loop sweeps the gradient-sync axis: FFT_SUBSPACE_COMM runs the
+# comm, resume and fault suites under dense and subspace-compressed
+# collectives — compression must never change the bits of a fixed
+# (world, comm) point nor break checkpoint/rollback recovery.
 test-matrix:
 	cd $(RUST_DIR) && for s in 0 1; do for t in 1 4; do \
 		echo "== FFT_SUBSPACE_SIMD=$$s FFT_SUBSPACE_THREADS=$$t =="; \
@@ -64,9 +68,15 @@ test-matrix:
 			--test step_plan_equivalence --test resume_determinism \
 			--test fault_recovery --test parallel_determinism || exit 1; \
 	done
+	cd $(RUST_DIR) && for c in dense subspace; do \
+		echo "== FFT_SUBSPACE_COMM=$$c (gradient sync) =="; \
+		FFT_SUBSPACE_COMM=$$c $(CARGO) test -q \
+			--test comm_determinism --test resume_determinism \
+			--test fault_recovery || exit 1; \
+	done
 
 # Full microbench battery (each bench is a plain binary: harness = false).
-bench: bench-proj bench-par bench-simd bench-makhoul bench-optim bench-mem bench-obs
+bench: bench-proj bench-par bench-simd bench-makhoul bench-optim bench-mem bench-obs bench-comm
 
 # Projection/subspace-step bench; writes rust/BENCH_PROJ.json
 # (override the path with BENCH_PROJ_OUT=...). Includes the `threads`
@@ -108,6 +118,13 @@ bench-mem:
 # writes rust/BENCH_OBS.json (override with BENCH_OBS_OUT=...).
 bench-obs:
 	cd $(RUST_DIR) && $(CARGO) bench --bench bench_obs
+
+# Collectives + gradient-sync sweep (ring all-reduce, ZeRO broadcast
+# volume, dense-vs-subspace sync bytes / modeled α–β time / wall time per
+# world size); writes rust/BENCH_COLLECTIVES.json (override with
+# BENCH_COLLECTIVES_OUT=...).
+bench-comm:
+	cd $(RUST_DIR) && $(CARGO) bench --bench bench_collectives
 
 # Lower the JAX/Pallas graphs to HLO text + manifest (Layer 1+2 → Layer 3
 # contract). Requires jax; see python/compile/aot.py --help for presets.

@@ -1,13 +1,39 @@
 //! Collectives bench: ring all-reduce and ZeRO broadcast volume/time across
 //! world sizes — the communication side of §2.3 (Trion broadcasts low-rank
-//! `o_t` + indices instead of the full update).
+//! `o_t` + indices instead of the full update) — plus the dense-vs-subspace
+//! gradient-sync comparison (`comm=` subsystem, PR 9): wire bytes, modeled
+//! α–β time and wall time per world size, emitted machine-readable to
+//! `BENCH_COLLECTIVES.json` (`BENCH_COLLECTIVES_OUT` overrides the path).
+//!
+//! JSON encoding: `grad_sync_wall` records are ordinary wall-time stats;
+//! `grad_sync_modeled` records carry the α–β modeled step time in the same
+//! seconds fields; `grad_sync_bytes` records reuse the nanosecond field as
+//! a plain byte count (`median_ns` == bytes moved per step) — the harness
+//! has no non-time channel, and a self-describing group name beats a
+//! second format.
 
-use fft_subspace::bench::measure;
 use fft_subspace::bench::models::square_stack;
-use fft_subspace::coordinator::{CommModel, Communicator, ZeroSchedule};
+use fft_subspace::bench::{measure, write_bench_json, BenchRecord, BenchStats};
+use fft_subspace::coordinator::{
+    build_grad_sync, CommMode, CommModel, Communicator, ZeroSchedule,
+};
 use fft_subspace::optim::{build_optimizer, LayerMeta, OptimizerConfig, OptimizerKind};
 use fft_subspace::tensor::Matrix;
 use fft_subspace::util::{human, Pcg64};
+
+/// A `BenchRecord` whose stats carry one already-known scalar instead of
+/// measured wall times (see the module docs for the encoding).
+fn scalar_record(group: &str, name: &str, dim: usize, rank: usize, secs: f64) -> BenchRecord {
+    let stats = BenchStats {
+        name: format!("{group} {name}"),
+        iters: 1,
+        median_secs: secs,
+        p10_secs: secs,
+        p90_secs: secs,
+        mean_secs: secs,
+    };
+    BenchRecord::new(group, name, dim, dim, rank, stats)
+}
 
 fn main() {
     println!("== bench_collectives ==\n");
@@ -46,5 +72,91 @@ fn main() {
             human::bytes(z.full_broadcast_bytes),
             z.full_broadcast_bytes as f64 / z.update_broadcast_bytes.max(1) as f64
         );
+    }
+    println!();
+
+    // --- dense vs subspace gradient sync (comm= subsystem, PR 9) --------
+    // A steady-state (non-refresh) sync step over a 12×256×256 stack at
+    // rank 32: subspace moves r/C = 1/8 of the dense volume per layer.
+    let dim = 256usize;
+    let metas: Vec<LayerMeta> = square_stack(12, dim);
+    let cfg = OptimizerConfig {
+        rank: 32,
+        update_interval: 3,
+        threads: Some(1),
+        ..Default::default()
+    };
+    let mut records: Vec<BenchRecord> = Vec::new();
+    println!("gradient sync per step (12 layers 256x256, r=32, steady state):");
+    for world in [2usize, 4, 8] {
+        for mode in [CommMode::Dense, CommMode::Subspace] {
+            let mut opt = build_optimizer(&OptimizerKind::DctAdamW, &metas, &cfg);
+            let mut sync = build_grad_sync(mode, world, &metas);
+            let mut comm = Communicator::new(world, CommModel::default());
+            let mut params: Vec<Matrix> =
+                metas.iter().map(|m| Matrix::zeros(m.rows, m.cols)).collect();
+            let mut rng = Pcg64::seed(11);
+            let base: Vec<Vec<Matrix>> = (0..world)
+                .map(|_| {
+                    metas
+                        .iter()
+                        .map(|m| Matrix::randn(m.rows, m.cols, 0.1, &mut rng))
+                        .collect()
+                })
+                .collect();
+            // warm past the early refreshes (cadence 3: t = 1, 3) so the
+            // measured reduce is a steady compressed step (t+1 = 5)
+            for step in 0..4 {
+                let mut wg = base.clone();
+                let g = sync.reduce(&mut wg, opt.as_ref(), &mut comm);
+                opt.step(&mut params, &g, 1e-3 / (step + 1) as f32);
+                sync.after_step(opt.as_ref(), &mut comm);
+            }
+            // one instrumented step for the byte / modeled-time deltas
+            let b0 = comm.stats.all_reduce_bytes;
+            let m0 = comm.stats.modeled_secs;
+            {
+                let mut wg = base.clone();
+                let _ = sync.reduce(&mut wg, opt.as_ref(), &mut comm);
+            }
+            let step_bytes = comm.stats.all_reduce_bytes - b0;
+            let step_modeled = comm.stats.modeled_secs - m0;
+            // wall time of the reduce itself (clone cost included in both
+            // variants identically; the optimizer is NOT stepped, so every
+            // iteration replays the same steady compressed step)
+            let st = measure(
+                &format!("grad_sync {} W={world}", mode.name()),
+                1,
+                5,
+                || {
+                    let mut wg = base.clone();
+                    sync.reduce(&mut wg, opt.as_ref(), &mut comm)
+                },
+            );
+            println!(
+                "  {:<9} W={world}  bytes/step={:<12} modeled={:>9.1} µs  {}",
+                mode.name(),
+                human::bytes(step_bytes),
+                step_modeled * 1e6,
+                st.report()
+            );
+            let tag = format!("{}_w{world}", mode.name());
+            records.push(BenchRecord::new("grad_sync_wall", &tag, dim, dim, 32, st));
+            records.push(scalar_record("grad_sync_modeled", &tag, dim, 32, step_modeled));
+            records.push(scalar_record(
+                "grad_sync_bytes",
+                &tag,
+                dim,
+                32,
+                step_bytes as f64 * 1e-9, // median_ns == bytes
+            ));
+        }
+    }
+
+    let out = std::env::var("BENCH_COLLECTIVES_OUT")
+        .unwrap_or_else(|_| "BENCH_COLLECTIVES.json".into());
+    match write_bench_json(&out, &records) {
+        Ok(()) => println!("\nwrote {} records to {out}", records.len()),
+        Err(e) => eprintln!("failed to write {out}: {e}"),
     }
 }

@@ -154,12 +154,15 @@ impl Communicator {
         // tree: in round k, 2^k holders each send to one new worker
         let mut holders = 1u64;
         let mut rounds = 0u64;
+        let mut moved = 0u64;
         while holders < w as u64 {
             let sending = holders.min(w as u64 - holders);
-            self.stats.broadcast_bytes += bytes * sending;
+            moved += bytes * sending;
             holders += sending;
             rounds += 1;
         }
+        self.stats.broadcast_bytes += moved;
+        crate::obs::count_broadcast_bytes(moved);
         self.stats.hops += rounds;
         self.stats.modeled_secs += self.model.time_secs(rounds, bytes * rounds);
         let src_data = buffers[src].data.clone();
@@ -179,9 +182,27 @@ impl Communicator {
         if w > 1 {
             let rounds = (w as f64).log2().ceil() as u64;
             self.stats.broadcast_bytes += payload_bytes * (w - 1);
+            crate::obs::count_broadcast_bytes(payload_bytes * (w - 1));
             self.stats.hops += rounds;
             self.stats.modeled_secs +=
                 self.model.time_secs(rounds, payload_bytes * rounds);
+        }
+        self.stats.calls += 1;
+    }
+
+    /// Account a ring all-gather the caller applied itself (e.g. the
+    /// subspace sync layer gathering per-worker basis checksums to verify
+    /// agreement after a refresh broadcast). Each of the `W` workers
+    /// contributes `per_rank_bytes`; the ring moves every contribution
+    /// through `W−1` links, so the wire total is `per_rank · W · (W−1)`.
+    pub fn account_all_gather_payload(&mut self, per_rank_bytes: u64) {
+        let w = self.world as u64;
+        if w > 1 {
+            let moved = per_rank_bytes * w * (w - 1);
+            self.stats.all_gather_bytes += moved;
+            crate::obs::count_all_gather_bytes(moved);
+            self.stats.hops += w - 1;
+            self.stats.modeled_secs += self.model.time_secs(w - 1, moved);
         }
         self.stats.calls += 1;
     }

@@ -17,9 +17,111 @@
 //! on the driver thread (`Rc`-backed upstream client).
 
 pub mod collectives;
+pub mod compressed;
 pub mod workers;
 pub mod zero;
 
 pub use collectives::{CommModel, CommStats, Communicator};
+pub use compressed::{DenseSync, SubspaceSync};
 pub use workers::WorkerSet;
 pub use zero::{ZeroSchedule, ZeroStats};
+
+use crate::optim::Optimizer;
+use crate::tensor::Matrix;
+use anyhow::Result;
+
+/// Which gradient-synchronization path the trainer drives: `dense`
+/// all-reduces full C×R gradients (the PR-2 baseline), `subspace` projects
+/// each worker's gradient into the layer's current basis first and
+/// all-reduces only the r×R coefficients (`coordinator::compressed`).
+/// Config key `comm=`, env `FFT_SUBSPACE_COMM`; default dense. Never part
+/// of the checkpoint fingerprint.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum CommMode {
+    #[default]
+    Dense,
+    Subspace,
+}
+
+impl CommMode {
+    pub fn parse(s: &str) -> Result<CommMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "dense" => Ok(CommMode::Dense),
+            "subspace" => Ok(CommMode::Subspace),
+            other => anyhow::bail!(
+                "unknown comm mode {other:?} (expected dense | subspace)"
+            ),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CommMode::Dense => "dense",
+            CommMode::Subspace => "subspace",
+        }
+    }
+
+    /// Env resolution (`FFT_SUBSPACE_COMM`): unset or unrecognized falls
+    /// back to the dense default — the strict surface is the config key
+    /// (`comm=`), which goes through [`CommMode::parse`].
+    pub fn from_env() -> CommMode {
+        match std::env::var("FFT_SUBSPACE_COMM") {
+            Ok(v) => CommMode::parse(&v).unwrap_or(CommMode::Dense),
+            Err(_) => CommMode::Dense,
+        }
+    }
+}
+
+/// The gradient-synchronization abstraction the trainer steps through:
+/// given every worker's per-parameter gradients, produce the reduced
+/// gradient set the (replicated) optimizer consumes. Implementations own
+/// whatever cross-step state the scheme needs (per-worker error-feedback
+/// residuals for compressed sync) and expose it for checkpoint v2 — the
+/// `sync` section of [`crate::train::TrainState`].
+pub trait GradSync {
+    /// `CommMode::name()` of the scheme (diagnostics / config echo).
+    fn name(&self) -> &'static str;
+
+    /// Reduce `worker_grads[w][pi]` across workers into one gradient per
+    /// parameter. May consume (zero-size-replace) the per-worker buffers.
+    /// All byte movement is accounted on `comm`.
+    fn reduce(
+        &mut self,
+        worker_grads: &mut [Vec<Matrix>],
+        opt: &dyn Optimizer,
+        comm: &mut Communicator,
+    ) -> Vec<Matrix>;
+
+    /// Called after `opt.step()` consumed the reduced gradients — the
+    /// refresh boundary hook where compressed sync accounts the rank-0
+    /// basis broadcast and agreement check.
+    fn after_step(&mut self, _opt: &dyn Optimizer, _comm: &mut Communicator) {}
+
+    /// Serialize cross-step sync state (EF residuals) for checkpoint v2.
+    /// Empty = nothing to persist (dense sync), which keeps dense-mode
+    /// checkpoint files byte-identical to pre-subsystem writers.
+    fn save_state(&self, _out: &mut Vec<u8>) {}
+
+    /// Twin of [`GradSync::save_state`].
+    fn load_state(&mut self, _bytes: &[u8]) -> Result<()> {
+        Ok(())
+    }
+
+    /// Persistent sync-state bytes (memory accounting).
+    fn state_bytes(&self) -> u64 {
+        0
+    }
+}
+
+/// Build the sync scheme for a mode — `world` workers over `n_params`
+/// parameters described by `metas`.
+pub fn build_grad_sync(
+    mode: CommMode,
+    world: usize,
+    metas: &[crate::optim::LayerMeta],
+) -> Box<dyn GradSync> {
+    match mode {
+        CommMode::Dense => Box::new(DenseSync),
+        CommMode::Subspace => Box::new(SubspaceSync::new(world, metas)),
+    }
+}

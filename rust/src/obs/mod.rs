@@ -170,6 +170,12 @@ pub struct Counters {
     /// Bytes moved by ring all-reduce (mirrors `CommStats`, which is
     /// per-communicator; this is the run-wide total).
     pub allreduce_bytes: AtomicU64,
+    /// Bytes moved by tree broadcasts (ZeRO update fan-out, subspace
+    /// basis sync — mirrors `CommStats::broadcast_bytes` run-wide).
+    pub broadcast_bytes: AtomicU64,
+    /// Bytes moved by all-gathers (basis-agreement checks under
+    /// `comm=subspace` — mirrors `CommStats::all_gather_bytes` run-wide).
+    pub all_gather_bytes: AtomicU64,
     /// `StepGuard` verdicts that were not healthy.
     pub guard_trips: AtomicU64,
     /// Injected faults that actually fired.
@@ -196,6 +202,8 @@ static COUNTERS: Counters = Counters {
     dct2_cache_hits: AtomicU64::new(0),
     dct2_cache_builds: AtomicU64::new(0),
     allreduce_bytes: AtomicU64::new(0),
+    broadcast_bytes: AtomicU64::new(0),
+    all_gather_bytes: AtomicU64::new(0),
     guard_trips: AtomicU64::new(0),
     fault_firings: AtomicU64::new(0),
     rollbacks: AtomicU64::new(0),
@@ -223,6 +231,8 @@ impl Counters {
             dct2_cache_hits: ld(&self.dct2_cache_hits),
             dct2_cache_builds: ld(&self.dct2_cache_builds),
             allreduce_bytes: ld(&self.allreduce_bytes),
+            broadcast_bytes: ld(&self.broadcast_bytes),
+            all_gather_bytes: ld(&self.all_gather_bytes),
             guard_trips: ld(&self.guard_trips),
             fault_firings: ld(&self.fault_firings),
             rollbacks: ld(&self.rollbacks),
@@ -241,7 +251,7 @@ impl Counters {
         }
     }
 
-    fn cells(&self) -> [(&'static str, &AtomicU64); 15] {
+    fn cells(&self) -> [(&'static str, &AtomicU64); 17] {
         [
             ("ws_pool_hits", &self.ws_pool_hits),
             ("ws_pool_misses", &self.ws_pool_misses),
@@ -251,6 +261,8 @@ impl Counters {
             ("dct2_cache_hits", &self.dct2_cache_hits),
             ("dct2_cache_builds", &self.dct2_cache_builds),
             ("allreduce_bytes", &self.allreduce_bytes),
+            ("broadcast_bytes", &self.broadcast_bytes),
+            ("all_gather_bytes", &self.all_gather_bytes),
             ("guard_trips", &self.guard_trips),
             ("fault_firings", &self.fault_firings),
             ("rollbacks", &self.rollbacks),
@@ -273,6 +285,8 @@ pub struct CounterSnapshot {
     pub dct2_cache_hits: u64,
     pub dct2_cache_builds: u64,
     pub allreduce_bytes: u64,
+    pub broadcast_bytes: u64,
+    pub all_gather_bytes: u64,
     pub guard_trips: u64,
     pub fault_firings: u64,
     pub rollbacks: u64,
@@ -285,7 +299,7 @@ pub struct CounterSnapshot {
 impl CounterSnapshot {
     /// Stable (name, value) listing — the exporters' single source of
     /// field names.
-    pub fn entries(&self) -> [(&'static str, u64); 15] {
+    pub fn entries(&self) -> [(&'static str, u64); 17] {
         [
             ("ws_pool_hits", self.ws_pool_hits),
             ("ws_pool_misses", self.ws_pool_misses),
@@ -295,6 +309,8 @@ impl CounterSnapshot {
             ("dct2_cache_hits", self.dct2_cache_hits),
             ("dct2_cache_builds", self.dct2_cache_builds),
             ("allreduce_bytes", self.allreduce_bytes),
+            ("broadcast_bytes", self.broadcast_bytes),
+            ("all_gather_bytes", self.all_gather_bytes),
             ("guard_trips", self.guard_trips),
             ("fault_firings", self.fault_firings),
             ("rollbacks", self.rollbacks),
@@ -345,6 +361,20 @@ pub fn count_dct2_cache(hit: bool) {
 pub fn count_allreduce_bytes(bytes: u64) {
     if enabled() {
         COUNTERS.allreduce_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+}
+
+#[inline]
+pub fn count_broadcast_bytes(bytes: u64) {
+    if enabled() {
+        COUNTERS.broadcast_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+}
+
+#[inline]
+pub fn count_all_gather_bytes(bytes: u64) {
+    if enabled() {
+        COUNTERS.all_gather_bytes.fetch_add(bytes, Ordering::Relaxed);
     }
 }
 

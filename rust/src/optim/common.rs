@@ -234,6 +234,43 @@ pub trait Optimizer {
     fn drain_events(&mut self, _out: &mut Vec<crate::obs::Event>) -> u64 {
         0
     }
+
+    /// Per-layer subspace structure for the compressed gradient-sync path
+    /// (`comm=subspace`, `coordinator::compressed`). `None` (the default)
+    /// means the optimizer exposes no projectable subspace and the sync
+    /// layer must reduce dense gradients.
+    fn comm_view(&self) -> Option<&dyn SubspaceCommView> {
+        None
+    }
+}
+
+/// What the subspace-compressed sync layer needs from an optimizer: which
+/// layers have a current basis to project through, the refresh lookahead
+/// (a step that will recompute the basis must see the true dense-reduced
+/// gradient), projection/back-projection through that basis, and the
+/// serialized basis for the post-refresh broadcast. All methods take the
+/// engine's layer index `i` (same indexing as `params`/`grads`) and operate
+/// in the layer's **oriented** frame (see [`LayerMeta::oriented`]).
+pub trait SubspaceCommView {
+    /// `Some(rank)` when layer `i` takes the low-rank path; `None` for
+    /// dense-fallback layers (embed / head / norm).
+    fn layer_rank(&self, i: usize) -> Option<usize>;
+
+    /// True when the **next** optimizer step refreshes layer `i`'s basis —
+    /// projecting through the stale basis would change what the refresh
+    /// sees, so the sync layer falls back to dense reduction for that step.
+    fn refresh_pending(&self, i: usize) -> bool;
+
+    /// Project the oriented gradient `g` (R×C) into the current basis,
+    /// writing R×r coefficients into `out`.
+    fn project_into(&self, i: usize, g: &Matrix, out: &mut Matrix, ws: &mut Workspace);
+
+    /// Map R×r coefficients back through the current basis into R×C `out`.
+    fn back_into(&self, i: usize, low: &Matrix, out: &mut Matrix, ws: &mut Workspace);
+
+    /// Serialize layer `i`'s basis in the `Projection::save_state` wire
+    /// format — the payload a rank-0 refresh tree-broadcasts.
+    fn save_basis(&self, i: usize, out: &mut Vec<u8>);
 }
 
 /// Which optimizer to build.

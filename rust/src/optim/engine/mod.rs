@@ -44,12 +44,12 @@ use anyhow::{ensure, Result};
 
 use crate::parallel::{ShardedWorkspace, ThreadPool};
 use crate::projection::{ProjectionKind, SharedDct};
-use crate::tensor::Matrix;
+use crate::tensor::{Matrix, Workspace};
 use crate::util::codec::{self, ByteReader};
 
 use super::common::{
     pool_for_threads, shared_dct_registry, step_layers_parallel, AdamState,
-    LayerMeta, MemoryReport, Optimizer,
+    LayerMeta, MemoryReport, Optimizer, SubspaceCommView,
 };
 
 pub use plan::StepPlanMode;
@@ -556,6 +556,51 @@ impl Optimizer for SubspaceEngine {
 
     fn drain_events(&mut self, out: &mut Vec<crate::obs::Event>) -> u64 {
         self.rings.drain_all(out)
+    }
+
+    fn comm_view(&self) -> Option<&dyn SubspaceCommView> {
+        Some(self)
+    }
+}
+
+/// The compressed-sync view over the engine: per-layer rank/basis access
+/// plus the refresh lookahead. `step()` increments the counter at entry, so
+/// "the next step" as seen from between steps is `self.step + 1` — exactly
+/// the `t` the schedule will evaluate.
+impl SubspaceCommView for SubspaceEngine {
+    fn layer_rank(&self, i: usize) -> Option<usize> {
+        match &self.states[i] {
+            EngineLayer::LowRank(l) => Some(l.source.rank()),
+            EngineLayer::Dense(_) => None,
+        }
+    }
+
+    fn refresh_pending(&self, i: usize) -> bool {
+        match &self.states[i] {
+            EngineLayer::LowRank(l) => l.source.refresh_due(self.step + 1),
+            EngineLayer::Dense(_) => false,
+        }
+    }
+
+    fn project_into(&self, i: usize, g: &Matrix, out: &mut Matrix, ws: &mut Workspace) {
+        let EngineLayer::LowRank(l) = &self.states[i] else {
+            panic!("project_into on dense layer {i}");
+        };
+        l.source.project_into(g, out, ws);
+    }
+
+    fn back_into(&self, i: usize, low: &Matrix, out: &mut Matrix, ws: &mut Workspace) {
+        let EngineLayer::LowRank(l) = &self.states[i] else {
+            panic!("back_into on dense layer {i}");
+        };
+        l.source.back_into(low, out, ws);
+    }
+
+    fn save_basis(&self, i: usize, out: &mut Vec<u8>) {
+        let EngineLayer::LowRank(l) = &self.states[i] else {
+            panic!("save_basis on dense layer {i}");
+        };
+        l.source.save_state(out);
     }
 }
 

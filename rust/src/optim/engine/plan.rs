@@ -46,7 +46,10 @@
 //! Memory trade: batching holds one `R×C` staging and/or similarity buffer
 //! per layer of a group alive for the step (transient, plan-owned, never
 //! checkpointed). For the models here that is bounded by the gradient set
-//! itself; group-size capping is future work (see ROADMAP).
+//! itself; `FFT_SUBSPACE_MAX_GROUP_ROWS` caps the concatenated row count a
+//! group may stack (the batch kernels' working-set height), splitting
+//! oversized shape classes into several groups — bit-identity holds because
+//! grouping never regroups any element's FP summation order.
 //!
 //! Plans are **derived state**: rebuilt on `load_state` (and therefore on
 //! trainer rollback), invisible to the checkpoint fingerprint and blobs.
@@ -103,6 +106,19 @@ impl StepPlanMode {
             Err(_) => StepPlanMode::Fused,
         }
     }
+}
+
+/// Env resolution of the group-size cap (`FFT_SUBSPACE_MAX_GROUP_ROWS`):
+/// the maximum concatenated oriented rows one [`StepGroup`] may stack.
+/// Unset, `0` or unparseable = unlimited — the lenient env surface, same
+/// contract as [`StepPlanMode::from_env`].
+fn max_group_rows_from_env() -> usize {
+    parse_group_rows(std::env::var("FFT_SUBSPACE_MAX_GROUP_ROWS").ok().as_deref())
+}
+
+/// The pure half of [`max_group_rows_from_env`] (`0` = unlimited).
+fn parse_group_rows(v: Option<&str>) -> usize {
+    v.and_then(|s| s.trim().parse().ok()).unwrap_or(0)
 }
 
 /// One shape group's compiled program: membership, the mode its batched
@@ -214,13 +230,28 @@ impl EnginePlan {
     }
 
     /// Partition layers into shape groups and preallocate each group's
-    /// batch buffers. Pure function of the spec and the layer shapes — the
-    /// same plan falls out after any `load_state`.
+    /// batch buffers. Pure function of the spec, the layer shapes and the
+    /// `FFT_SUBSPACE_MAX_GROUP_ROWS` cap — the same plan falls out after
+    /// any `load_state`.
     pub(crate) fn build(
         spec: &OptimizerSpec,
         metas: &[LayerMeta],
         states: &[EngineLayer],
         shared: &BTreeMap<usize, Arc<SharedDct>>,
+    ) -> EnginePlan {
+        Self::build_with_cap(spec, metas, states, shared, max_group_rows_from_env())
+    }
+
+    /// [`EnginePlan::build`] with an explicit group-size cap: a group may
+    /// stack at most `cap_rows` concatenated oriented rows (`0` =
+    /// unlimited). Capping only splits membership — per-layer math and FP
+    /// summation order are untouched, so every cap is bit-identical.
+    pub(crate) fn build_with_cap(
+        spec: &OptimizerSpec,
+        metas: &[LayerMeta],
+        states: &[EngineLayer],
+        shared: &BTreeMap<usize, Arc<SharedDct>>,
+        cap_rows: usize,
     ) -> EnginePlan {
         let mut dense = Vec::new();
         let mut groups: Vec<StepGroup> = Vec::new();
@@ -236,9 +267,15 @@ impl EnginePlan {
             };
             let (rr, cc) = meta.oriented();
             let transposed = meta.needs_transpose();
+            // last-match, not first-match: once a shape class splits under
+            // the cap, new members must land in its most recent (open)
+            // group, never backfill a closed one — keeps membership a pure
+            // function of build order
             if let Some(g) = groups
                 .iter_mut()
-                .find(|g| g.rr == rr && g.cc == cc && g.transposed == transposed)
+                .filter(|g| g.rr == rr && g.cc == cc && g.transposed == transposed)
+                .last()
+                .filter(|g| cap_rows == 0 || (g.layers.len() + 1) * rr <= cap_rows)
             {
                 g.layers.push(i);
                 continue;
@@ -505,5 +542,47 @@ impl EnginePlan {
                 )
             });
         });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::ParamKind;
+
+    /// Group count of a 6-layer single-shape-class model under `cap_rows`.
+    fn cap_groups(cap: usize) -> usize {
+        let metas: Vec<LayerMeta> = (0..6)
+            .map(|i| LayerMeta::new(&format!("w{i}"), 16, 8, ParamKind::Linear))
+            .collect();
+        let eng = OptimizerSpec::dct_adamw(4)
+            .update_interval(3)
+            .threads(Some(1))
+            .build(&metas);
+        EnginePlan::build_with_cap(&eng.spec, &eng.metas, &eng.states, &eng.shared, cap)
+            .group_count()
+    }
+
+    #[test]
+    fn group_cap_splits_shape_classes() {
+        // unlimited (0) stacks the whole shape class into one group
+        assert_eq!(cap_groups(0), 1);
+        // each layer contributes 16 oriented rows
+        assert_eq!(cap_groups(32), 3); // 2 layers per group
+        assert_eq!(cap_groups(48), 2); // 3 layers per group
+        assert_eq!(cap_groups(1000), 1); // cap above the class: no split
+        // a cap below a single layer's rows degrades to singleton groups
+        // (a layer can never be dropped, only isolated)
+        assert_eq!(cap_groups(8), 6);
+    }
+
+    #[test]
+    fn group_cap_env_parse_is_lenient() {
+        // lenient env surface: unset / 0 / garbage all mean unlimited
+        assert_eq!(parse_group_rows(Some("64")), 64);
+        assert_eq!(parse_group_rows(Some(" 64 ")), 64);
+        assert_eq!(parse_group_rows(Some("not-a-number")), 0);
+        assert_eq!(parse_group_rows(Some("0")), 0);
+        assert_eq!(parse_group_rows(None), 0);
     }
 }

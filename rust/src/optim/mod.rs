@@ -33,6 +33,7 @@ pub use common::{
     adam_fused_update, adam_moments_into, build_optimizer, pool_for_threads,
     shared_dct_registry, step_layers_parallel, AdamScalars, EfMode, LayerMeta,
     MemoryReport, Optimizer, OptimizerConfig, OptimizerKind, ParamKind,
+    SubspaceCommView,
 };
 pub use dion::Dion;
 pub use engine::{

@@ -8,11 +8,14 @@
 //!   followed by the step counter, the optimizer's reported name, and the
 //!   optimizer's opaque state blob (`Optimizer::save_state` — typed stores,
 //!   subspace/rotation/residual auxiliaries, RNG streams, all bit-exact),
-//!   closed by a CRC-32 integrity footer (`CRC2` marker + [`crc32`] of
-//!   every preceding byte). Footer-less v2 files from before the
-//!   fault-tolerance PR still load. `resume=` restores the state and
-//!   continues the uninterrupted trajectory to the bit
-//!   (`tests/resume_determinism.rs`).
+//!   an *optional* gradient-sync section (`SYNC` marker + length + the
+//!   `GradSync::save_state` payload — EF residuals under `comm=subspace`;
+//!   omitted entirely when empty, so dense-mode files stay byte-identical
+//!   to pre-subsystem writers), closed by a CRC-32 integrity footer
+//!   (`CRC2` marker + [`crc32`] of every preceding byte). Footer-less v2
+//!   files from before the fault-tolerance PR still load. `resume=`
+//!   restores the state and continues the uninterrupted trajectory to the
+//!   bit (`tests/resume_determinism.rs`, `tests/comm_determinism.rs`).
 //!
 //! **Every write is atomic**: the encoded bytes land in `<path>.tmp`,
 //! are fsynced, and only then renamed over `path` — so a crash (or the
@@ -41,6 +44,10 @@ const MAGIC_V1: &[u8; 8] = b"FFTSUBv1";
 const MAGIC_V2: &[u8; 8] = b"FFTSUBv2";
 /// v2 integrity footer: this marker, then crc32 of every preceding byte.
 const CRC_MARKER: &[u8; 4] = b"CRC2";
+/// Optional v2 gradient-sync section: this marker, a u64 length, then the
+/// `GradSync::save_state` payload. Only written when the payload is
+/// non-empty.
+const SYNC_MARKER: &[u8; 4] = b"SYNC";
 
 /// The resumable-state section of a v2 checkpoint.
 #[derive(Clone, Debug, PartialEq)]
@@ -52,6 +59,11 @@ pub struct TrainState {
     pub optimizer: String,
     /// `Optimizer::save_state` payload (empty = params-only resume).
     pub opt_state: Vec<u8>,
+    /// `GradSync::save_state` payload (per-worker EF residuals under
+    /// `comm=subspace`). Empty under dense sync — and an empty payload is
+    /// not written at all, keeping dense-mode files byte-identical to
+    /// checkpoints from before the compressed-collectives subsystem.
+    pub sync: Vec<u8>,
 }
 
 /// A parsed checkpoint of either version.
@@ -91,6 +103,11 @@ fn encode_v2(params: &[Matrix], state: &TrainState) -> Vec<u8> {
     out.extend_from_slice(state.optimizer.as_bytes());
     out.extend_from_slice(&(state.opt_state.len() as u64).to_le_bytes());
     out.extend_from_slice(&state.opt_state);
+    if !state.sync.is_empty() {
+        out.extend_from_slice(SYNC_MARKER);
+        out.extend_from_slice(&(state.sync.len() as u64).to_le_bytes());
+        out.extend_from_slice(&state.sync);
+    }
     let crc = crc32(&out);
     out.extend_from_slice(CRC_MARKER);
     out.extend_from_slice(&crc.to_le_bytes());
@@ -255,6 +272,23 @@ pub fn load_full(path: impl AsRef<Path>) -> Result<Checkpoint> {
     );
     let opt_state = bytes[pos..pos + state_len as usize].to_vec();
     pos += state_len as usize;
+    // optional gradient-sync section (absent in dense-mode and pre-PR-9
+    // files): marker + u64 length + payload, before the CRC footer
+    let sync = if remaining(pos) >= 12 && &bytes[pos..pos + 4] == SYNC_MARKER {
+        pos += 4;
+        let sync_len = take_u64(&mut pos)?;
+        ensure!(
+            sync_len <= remaining(pos),
+            "corrupt checkpoint: sync state claims {sync_len} bytes, {} \
+             remain",
+            remaining(pos)
+        );
+        let payload = bytes[pos..pos + sync_len as usize].to_vec();
+        pos += sync_len as usize;
+        payload
+    } else {
+        Vec::new()
+    };
     match remaining(pos) {
         // footer-less v2: written before the fault-tolerance PR
         0 => {}
@@ -281,7 +315,7 @@ pub fn load_full(path: impl AsRef<Path>) -> Result<Checkpoint> {
     }
     Ok(Checkpoint {
         params,
-        state: Some(TrainState { step, optimizer, opt_state }),
+        state: Some(TrainState { step, optimizer, opt_state, sync }),
     })
 }
 
@@ -397,6 +431,7 @@ mod tests {
             step: 123,
             optimizer: "dct-adamw".into(),
             opt_state: vec![7, 0, 255, 1, 2, 3],
+            sync: vec![9, 0, 42],
         }
     }
 
@@ -424,6 +459,23 @@ mod tests {
         assert_eq!(ck.state.unwrap(), state);
         // and the params-only reader accepts v2 files too
         assert_eq!(load(&path).unwrap(), params);
+    }
+
+    #[test]
+    fn empty_sync_keeps_legacy_layout() {
+        // dense-mode state (empty sync) must encode without any SYNC
+        // section — byte-identical to files from before the subsystem
+        let params = params();
+        let st = TrainState { sync: Vec::new(), ..state() };
+        let encoded = encode_v2(&params, &st);
+        assert!(
+            !encoded.windows(4).any(|w| w == SYNC_MARKER),
+            "empty sync must not emit a SYNC section"
+        );
+        let path = std::env::temp_dir().join("fft_subspace_ckpt_nosync.bin");
+        std::fs::write(&path, &encoded).unwrap();
+        let ck = load_full(&path).unwrap();
+        assert_eq!(ck.state.unwrap(), st);
     }
 
     #[test]
@@ -559,6 +611,7 @@ mod tests {
             step: 9,
             optimizer: "trion".into(),
             opt_state: vec![1; 64],
+            sync: Vec::new(),
         };
         let path = std::env::temp_dir().join("fft_subspace_ckpt_trunc.bin");
         save_v2(&path, &params, &state).unwrap();

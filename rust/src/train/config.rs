@@ -4,6 +4,7 @@
 
 use anyhow::Result;
 
+use crate::coordinator::CommMode;
 use crate::obs::ObsTier;
 use crate::optim::common::EfMode;
 use crate::optim::{
@@ -104,6 +105,12 @@ pub struct TrainConfig {
     /// `obs-sample=N`: record span events every Nth step only (counters and
     /// refresh gauges keep full cadence). `1` = every step.
     pub obs_sample: usize,
+    /// `comm=dense|subspace`: gradient-sync scheme (see
+    /// `coordinator::compressed`); `Dense` here falls back to
+    /// `FFT_SUBSPACE_COMM` at run start, so the config wins when both are
+    /// set. Never part of the checkpoint fingerprint — resumes cross modes
+    /// freely.
+    pub comm: CommMode,
 }
 
 impl Default for TrainConfig {
@@ -141,6 +148,7 @@ impl Default for TrainConfig {
             obs: ObsTier::Off,
             trace_out: None,
             obs_sample: 1,
+            comm: CommMode::Dense,
         }
     }
 }
@@ -362,6 +370,7 @@ impl TrainConfig {
             ("checkpoint_keep", num(self.checkpoint_keep as f64)),
             ("obs", s(self.obs.name())),
             ("obs_sample", num(self.obs_sample as f64)),
+            ("comm", s(self.comm.name())),
         ];
         fields.extend(extra);
         obj(fields)
@@ -471,6 +480,8 @@ impl TrainConfig {
                 crate::train::fault::FaultPlan::parse(value)?;
                 self.fault = Some(value.into());
             }
+            // gradient-sync scheme (see `coordinator::compressed`)
+            "comm" => self.comm = CommMode::parse(value)?,
             // observability tier + exporters (see `crate::obs`)
             "obs" => self.obs = ObsTier::parse(value)?,
             "trace-out" | "trace_out" => self.trace_out = Some(value.into()),
@@ -811,6 +822,24 @@ mod tests {
         assert!(c.apply("obs", "verbose").is_err());
         assert!(c.apply("obs-sample", "0").is_err());
         assert!(c.apply("obs-sample", "x").is_err());
+    }
+
+    #[test]
+    fn comm_key_round_trips() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.comm, CommMode::Dense);
+        c.apply("comm", "subspace").unwrap();
+        assert_eq!(c.comm, CommMode::Subspace);
+        let back = Json::parse(&c.to_json().to_string()).unwrap();
+        assert_eq!(back.req("comm").unwrap().as_str().unwrap(), "subspace");
+        let mut replay = TrainConfig::default();
+        replay.apply("comm", back.req("comm").unwrap().as_str().unwrap()).unwrap();
+        assert_eq!(replay.comm, CommMode::Subspace);
+        // default dumps as dense
+        let d = Json::parse(&TrainConfig::default().to_json().to_string()).unwrap();
+        assert_eq!(d.req("comm").unwrap().as_str().unwrap(), "dense");
+        // bad values are rejected at parse time
+        assert!(c.apply("comm", "zip").is_err());
     }
 
     #[test]

@@ -1,12 +1,16 @@
-//! The training driver: PJRT fwd/bwd per simulated worker → ring
-//! all-reduce → (optionally AOT-graph) optimizer step under the ZeRO
+//! The training driver: PJRT fwd/bwd per simulated worker → gradient sync
+//! (dense ring all-reduce, or subspace-compressed coefficients under
+//! `comm=subspace`) → (optionally AOT-graph) optimizer step under the ZeRO
 //! schedule → metrics/eval.
 
 use std::path::PathBuf;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::{CommModel, Communicator, WorkerSet, ZeroSchedule};
+use crate::coordinator::{
+    build_grad_sync, CommMode, CommModel, Communicator, GradSync, WorkerSet,
+    ZeroSchedule,
+};
 use crate::data::{BatchLoader, CorpusConfig, SyntheticCorpus};
 use crate::obs::{self, trace::TraceWriter, ObsTier};
 use crate::optim::{LayerMeta, Optimizer};
@@ -145,6 +149,15 @@ impl Trainer {
         let pool = crate::parallel::global();
         let worker_set = WorkerSet::new(cfg.workers, pool.clone());
         let mut comm = Communicator::with_pool(cfg.workers, CommModel::default(), pool);
+        // gradient-sync scheme: `comm=` in the config wins over
+        // FFT_SUBSPACE_COMM, same precedence as `obs=` / `fault=`
+        let comm_mode = if cfg.comm != CommMode::Dense {
+            cfg.comm
+        } else {
+            CommMode::from_env()
+        };
+        let mut sync: Box<dyn GradSync> =
+            build_grad_sync(comm_mode, cfg.workers, &self.metas);
         let base_loader = BatchLoader::new(&self.corpus.train, self.spec.seq_len, cfg.seed);
         let mut workers: Vec<BatchLoader> = (0..cfg.workers)
             .map(|w| base_loader.worker(w, cfg.seed))
@@ -178,6 +191,10 @@ impl Trainer {
             self.params = ck.params;
             opt.load_state(&state.opt_state)
                 .with_context(|| format!("restoring optimizer state from {path}"))?;
+            if !state.sync.is_empty() {
+                sync.load_state(&state.sync)
+                    .with_context(|| format!("restoring sync state from {path}"))?;
+            }
             start_step = state.step as usize;
             anyhow::ensure!(
                 start_step < cfg.steps,
@@ -228,6 +245,7 @@ impl Trainer {
                     step: start_step as u64,
                     optimizer: opt.name().to_string(),
                     opt_state,
+                    sync: sync_state(sync.as_ref()),
                 };
                 rot.save(start_step as u64, &self.params, &state)
                     .context("writing the initial rollback snapshot")?;
@@ -309,20 +327,11 @@ impl Trainer {
             }
             step_loss /= cfg.workers as f64;
 
-            // --- ring all-reduce per parameter --------------------------
+            // --- gradient sync per parameter (dense ring all-reduce, or
+            // r×R coefficient all-reduce under comm=subspace) -------------
             let t0 = obs::now_us();
             let grads: Vec<Matrix> = phases.time("allreduce", || {
-                let n_params = self.params.len();
-                let mut reduced = Vec::with_capacity(n_params);
-                for pi in 0..n_params {
-                    let mut replicas: Vec<Matrix> = worker_grads
-                        .iter_mut()
-                        .map(|wg| std::mem::replace(&mut wg[pi], Matrix::zeros(0, 0)))
-                        .collect();
-                    comm.all_reduce_mean(&mut replicas);
-                    reduced.push(replicas.swap_remove(0));
-                }
-                reduced
+                sync.reduce(&mut worker_grads, opt.as_ref(), &mut comm)
             });
             trace_phase(&mut tracer, "allreduce", t0, step)?;
 
@@ -380,6 +389,11 @@ impl Trainer {
                     opt.load_state(&state.opt_state).with_context(|| {
                         format!("restoring optimizer state from {snap_path:?}")
                     })?;
+                    if !state.sync.is_empty() {
+                        sync.load_state(&state.sync).with_context(|| {
+                            format!("restoring sync state from {snap_path:?}")
+                        })?;
+                    }
                     let snap_step = state.step as usize;
                     // fresh loaders fast-forwarded to the snapshot: the
                     // replayed window consumes the exact batches the
@@ -416,6 +430,9 @@ impl Trainer {
                 opt.step(&mut self.params, &grads, lr);
             });
             trace_phase(&mut tracer, "optimizer", t0, step)?;
+            // refresh-boundary hook: compressed sync accounts the rank-0
+            // basis broadcast + agreement check for layers that refreshed
+            sync.after_step(opt.as_ref(), &mut comm);
             // per-layer engine spans recorded inside opt.step drain here,
             // off the hot path; gauges land in metrics.jsonl
             if let Some(tw) = tracer.as_mut() {
@@ -453,6 +470,7 @@ impl Trainer {
                             step: completed as u64,
                             optimizer: opt.name().to_string(),
                             opt_state,
+                            sync: sync_state(sync.as_ref()),
                         };
                         let t0 = obs::now_us();
                         let saved = rot.save(completed as u64, &self.params, &state);
@@ -566,6 +584,7 @@ impl Trainer {
                 step: cfg.steps as u64,
                 optimizer: opt.name().to_string(),
                 opt_state,
+                sync: sync_state(sync.as_ref()),
             };
             checkpoint::save_v2(path, &self.params, &state)
                 .with_context(|| format!("writing save-state checkpoint {path}"))?;
@@ -641,6 +660,14 @@ pub fn init_params(spec: &ModelSpec, seed: u64) -> Vec<Matrix> {
             }
         })
         .collect()
+}
+
+/// Serialize a sync scheme's cross-step state for checkpoint v2 (empty for
+/// stateless schemes — the SYNC section is then omitted entirely).
+fn sync_state(sync: &dyn GradSync) -> Vec<u8> {
+    let mut out = Vec::new();
+    sync.save_state(&mut out);
+    out
 }
 
 /// Emit a trainer-thread phase span (`tid` 0) when the run is tracing.

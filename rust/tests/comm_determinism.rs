@@ -1,0 +1,315 @@
+//! The subspace-compressed collectives contract (`comm=subspace`,
+//! `coordinator::compressed`):
+//!
+//! * a fixed `(world, comm)` point is **bit-identical** across thread
+//!   counts — the sync schemes must not introduce any lane-dependent FP
+//!   order on top of the already-pinned collectives and optimizer step;
+//! * at `world == 1` the compressed scheme degenerates to the dense
+//!   passthrough, `to_bits`-equal trajectories and zero wire bytes;
+//! * byte accounting is exact: a compressed step moves the r×R coefficient
+//!   volume per low-rank layer (≈ `r/C` of dense), dense-path layers and
+//!   refresh steps move dense volume, and refreshes additionally account
+//!   the basis broadcast + agreement all-gather;
+//! * the scheme composes with the fault-tolerance machinery: worker-lane
+//!   retry and checkpoint-v2 save/restore (the `sync` section) both
+//!   reproduce the clean trajectory to the bit.
+//!
+//! Everything drives `Optimizer` + `GradSync` + `Communicator` directly
+//! with synthetic per-worker gradients (PJRT stays stubbed), mirroring
+//! `tests/resume_determinism.rs` / `tests/fault_recovery.rs`.
+
+use std::sync::Arc;
+
+use fft_subspace::coordinator::{
+    build_grad_sync, CommMode, CommModel, Communicator, GradSync, WorkerSet,
+};
+use fft_subspace::optim::{
+    build_optimizer, LayerMeta, Optimizer, OptimizerConfig, OptimizerKind, ParamKind,
+};
+use fft_subspace::parallel::ThreadPool;
+use fft_subspace::tensor::Matrix;
+use fft_subspace::train::checkpoint::{self, TrainState};
+use fft_subspace::train::{FaultInjector, FaultPlan};
+use fft_subspace::util::Pcg64;
+
+/// Same mixed layer zoo as the resume/fault suites: tall, wide (transpose
+/// orientation), a Bluestein width (24), square, plus dense-path params.
+fn layer_zoo() -> Vec<LayerMeta> {
+    vec![
+        LayerMeta::new("wq", 48, 32, ParamKind::Linear),
+        LayerMeta::new("w_gate", 32, 48, ParamKind::Linear),
+        LayerMeta::new("wk", 40, 24, ParamKind::Linear),
+        LayerMeta::new("wv", 32, 32, ParamKind::Linear),
+        LayerMeta::new("norm", 1, 32, ParamKind::Norm),
+        LayerMeta::new("embed", 64, 32, ParamKind::Embed),
+    ]
+}
+
+/// Worker `w`'s gradient set at `step` — a pure function of `(step, w)`,
+/// so lane retries replay the exact bytes and every run shape (any thread
+/// count, interrupted or not) consumes identical inputs.
+fn grad_for(metas: &[LayerMeta], step: usize, w: usize) -> Vec<Matrix> {
+    metas
+        .iter()
+        .enumerate()
+        .map(|(pi, m)| {
+            let mut rng =
+                Pcg64::new(1_000 + step as u64, ((w as u64) << 16) | pi as u64);
+            Matrix::randn(m.rows, m.cols, 0.1, &mut rng)
+        })
+        .collect()
+}
+
+fn bits(params: &[Matrix]) -> Vec<Vec<u32>> {
+    params
+        .iter()
+        .map(|p| p.data.iter().map(|v| v.to_bits()).collect())
+        .collect()
+}
+
+fn decaying_lr(step: usize) -> f32 {
+    1e-2 / (1.0 + step as f32 * 0.1)
+}
+
+fn zero_params(metas: &[LayerMeta]) -> Vec<Matrix> {
+    metas.iter().map(|m| Matrix::zeros(m.rows, m.cols)).collect()
+}
+
+/// Rank 8, refresh cadence 3 (refreshes at t = 1, 3, 6, 9 — compressed
+/// steps in between), explicit thread count.
+fn opt_for(metas: &[LayerMeta], threads: usize) -> Box<dyn Optimizer> {
+    let cfg = OptimizerConfig {
+        rank: 8,
+        update_interval: 3,
+        threads: Some(threads),
+        ..Default::default()
+    };
+    build_optimizer(&OptimizerKind::DctAdamW, metas, &cfg)
+}
+
+/// Drive `steps` synchronized optimizer steps at one `(mode, world,
+/// threads)` point; returns the final param bits and the wire-byte stats
+/// `(all_reduce, broadcast, all_gather)`.
+fn run_trajectory(
+    mode: CommMode,
+    world: usize,
+    threads: usize,
+    steps: usize,
+) -> (Vec<Vec<u32>>, (u64, u64, u64)) {
+    let metas = layer_zoo();
+    let mut opt = opt_for(&metas, threads);
+    let mut sync = build_grad_sync(mode, world, &metas);
+    let pool = Arc::new(ThreadPool::new(threads));
+    let mut comm = Communicator::with_pool(world, CommModel::default(), pool);
+    let mut params = zero_params(&metas);
+    for step in 0..steps {
+        let mut wg: Vec<Vec<Matrix>> =
+            (0..world).map(|w| grad_for(&metas, step, w)).collect();
+        let g = sync.reduce(&mut wg, opt.as_ref(), &mut comm);
+        opt.step(&mut params, &g, decaying_lr(step));
+        sync.after_step(opt.as_ref(), &mut comm);
+    }
+    (
+        bits(&params),
+        (
+            comm.stats.all_reduce_bytes,
+            comm.stats.broadcast_bytes,
+            comm.stats.all_gather_bytes,
+        ),
+    )
+}
+
+/// Bit-identity across thread counts for every (world, comm) grid point —
+/// including the byte accounting, which must not depend on lanes either.
+#[test]
+fn trajectories_bit_identical_across_lane_counts() {
+    for world in [1usize, 2, 4] {
+        for mode in [CommMode::Dense, CommMode::Subspace] {
+            let (p1, b1) = run_trajectory(mode, world, 1, 8);
+            let (p3, b3) = run_trajectory(mode, world, 3, 8);
+            assert_eq!(p1, p3, "world={world} comm={} params", mode.name());
+            assert_eq!(b1, b3, "world={world} comm={} bytes", mode.name());
+        }
+    }
+}
+
+/// At world=1 the compressed scheme is the dense passthrough: `to_bits`-
+/// equal trajectory, and neither mode moves a single wire byte.
+#[test]
+fn world_one_subspace_equals_dense() {
+    let (pd, bd) = run_trajectory(CommMode::Dense, 1, 1, 9);
+    let (ps, bs) = run_trajectory(CommMode::Subspace, 1, 1, 9);
+    assert_eq!(pd, ps);
+    assert_eq!(bd, (0, 0, 0));
+    assert_eq!(bs, (0, 0, 0));
+}
+
+/// Exact byte accounting at world=4: a compressed step moves the r×R
+/// coefficient ring volume per low-rank layer plus dense volume for the
+/// dense-path params; refresh steps move dense volume everywhere and add
+/// the basis broadcast + agreement all-gather.
+#[test]
+fn compressed_step_bytes_match_rank_ratio() {
+    let world = 4usize;
+    let metas = layer_zoo();
+    let mut opt = opt_for(&metas, 1);
+    let mut sync = build_grad_sync(CommMode::Subspace, world, &metas);
+    let mut comm = Communicator::new(world, CommModel::default());
+    let mut params = zero_params(&metas);
+    let mut step_one = |step: usize,
+                        sync: &mut Box<dyn GradSync>,
+                        opt: &mut Box<dyn Optimizer>,
+                        comm: &mut Communicator,
+                        params: &mut Vec<Matrix>| {
+        let mut wg: Vec<Vec<Matrix>> =
+            (0..world).map(|w| grad_for(&metas, step, w)).collect();
+        let g = sync.reduce(&mut wg, opt.as_ref(), comm);
+        opt.step(params, &g, decaying_lr(step));
+        sync.after_step(opt.as_ref(), comm);
+    };
+    // t = 1 (refresh), 2, 3 (refresh): warm-up; measured step is t = 4,
+    // squarely compressed under cadence 3
+    for step in 0..3 {
+        step_one(step, &mut sync, &mut opt, &mut comm, &mut params);
+    }
+    let before = comm.stats.all_reduce_bytes;
+    step_one(3, &mut sync, &mut opt, &mut comm, &mut params);
+    let moved = comm.stats.all_reduce_bytes - before;
+
+    // ring all-reduce volume for an n-element tensor (f32)
+    let ring = |n: u64| 2 * (world as u64 - 1) * n * 4;
+    // low-rank layers move oriented-rows × rank coefficients; the norm and
+    // embed params reduce dense
+    let want_sub = ring(48 * 8) // wq 48×32
+        + ring(48 * 8) // w_gate 32×48, oriented 48×32
+        + ring(40 * 8) // wk 40×24
+        + ring(32 * 8) // wv 32×32
+        + ring(32) // norm (dense path)
+        + ring(64 * 32); // embed (dense path)
+    // chunk rounding: each ring step over W chunks can round up by at most
+    // one f32 per hop
+    assert!(
+        moved.abs_diff(want_sub) <= want_sub / 8 + 1024,
+        "compressed step moved {moved}, want ≈ {want_sub}"
+    );
+    // the same step under dense sync would have moved the full volume —
+    // the low-rank layers compress to r/C of it, so well under half total
+    let want_dense = ring(48 * 32) * 2 + ring(40 * 24) + ring(32 * 32) + ring(32)
+        + ring(64 * 32);
+    assert!(
+        moved < want_dense / 2,
+        "compressed step moved {moved}, dense would move {want_dense}"
+    );
+    // refresh boundaries accounted the basis broadcast + agreement gather
+    assert!(comm.stats.broadcast_bytes > 0);
+    assert!(comm.stats.all_gather_bytes > 0);
+}
+
+/// Fault-tolerance composition: an injected worker-lane failure during
+/// gradient staging is absorbed by the bounded `WorkerSet` retry, and the
+/// `comm=subspace` run still lands on the clean trajectory's bits (the
+/// per-worker EF residuals see identical inputs either way).
+#[test]
+fn worker_fail_recovers_bit_identical_under_subspace() {
+    let world = 4usize;
+    let steps = 6usize;
+    let metas = layer_zoo();
+    let run = |plan: Option<&str>| {
+        let mut opt = opt_for(&metas, 1);
+        let mut sync = build_grad_sync(CommMode::Subspace, world, &metas);
+        let pool = Arc::new(ThreadPool::new(2));
+        let ws = WorkerSet::new(world, Arc::clone(&pool));
+        let mut comm = Communicator::with_pool(world, CommModel::default(), pool);
+        let injector =
+            plan.map(|p| FaultInjector::new(FaultPlan::parse(p).unwrap()));
+        let mut params = zero_params(&metas);
+        for step in 0..steps {
+            // stage per-worker gradients on the worker lanes, the injected
+            // failure firing before the (pure) draw — the retry replays it
+            let mut wg: Vec<Vec<Matrix>> = ws.run(|w| {
+                if let Some(inj) = &injector {
+                    inj.maybe_fail_worker(step, w);
+                }
+                grad_for(&metas, step, w)
+            });
+            let g = sync.reduce(&mut wg, opt.as_ref(), &mut comm);
+            opt.step(&mut params, &g, decaying_lr(step));
+            sync.after_step(opt.as_ref(), &mut comm);
+        }
+        bits(&params)
+    };
+    let clean = run(None);
+    let faulted = run(Some("worker-fail@2.1"));
+    assert_eq!(clean, faulted);
+}
+
+/// Checkpoint composition: interrupting a `comm=subspace` run mid-cycle
+/// (live EF residuals), writing a v2 checkpoint with the `sync` section,
+/// and restoring into a **fresh** optimizer + sync object reproduces the
+/// uninterrupted trajectory to the bit.
+#[test]
+fn subspace_sync_resumes_bit_identical_through_v2_file() {
+    let world = 2usize;
+    let (n, k) = (9usize, 5usize); // k=5 sits between refreshes (t=3, t=6)
+    let metas = layer_zoo();
+
+    // uninterrupted reference
+    let mut ref_opt = opt_for(&metas, 1);
+    let mut ref_sync = build_grad_sync(CommMode::Subspace, world, &metas);
+    let mut ref_comm = Communicator::new(world, CommModel::default());
+    let mut ref_params = zero_params(&metas);
+    for step in 0..n {
+        let mut wg: Vec<Vec<Matrix>> =
+            (0..world).map(|w| grad_for(&metas, step, w)).collect();
+        let g = ref_sync.reduce(&mut wg, ref_opt.as_ref(), &mut ref_comm);
+        ref_opt.step(&mut ref_params, &g, decaying_lr(step));
+        ref_sync.after_step(ref_opt.as_ref(), &mut ref_comm);
+    }
+
+    // interrupted at k, saved through the on-disk v2 format
+    let mut opt = opt_for(&metas, 1);
+    let mut sync = build_grad_sync(CommMode::Subspace, world, &metas);
+    let mut comm = Communicator::new(world, CommModel::default());
+    let mut params = zero_params(&metas);
+    for step in 0..k {
+        let mut wg: Vec<Vec<Matrix>> =
+            (0..world).map(|w| grad_for(&metas, step, w)).collect();
+        let g = sync.reduce(&mut wg, opt.as_ref(), &mut comm);
+        opt.step(&mut params, &g, decaying_lr(step));
+        sync.after_step(opt.as_ref(), &mut comm);
+    }
+    let mut sync_blob = Vec::new();
+    sync.save_state(&mut sync_blob);
+    assert!(!sync_blob.is_empty(), "live residuals must serialize");
+    let state = TrainState {
+        step: k as u64,
+        optimizer: opt.name().to_string(),
+        opt_state: opt.save_state().unwrap(),
+        sync: sync_blob,
+    };
+    let path = std::env::temp_dir().join(format!(
+        "fft_subspace_comm_resume_{}.bin",
+        std::process::id()
+    ));
+    checkpoint::save_v2(&path, &params, &state).unwrap();
+
+    // restore into FRESH objects and finish the run
+    let ck = checkpoint::load_full(&path).unwrap();
+    let restored = ck.state.unwrap();
+    assert_eq!(restored.step, k as u64);
+    let mut params = ck.params;
+    let mut opt = opt_for(&metas, 1);
+    opt.load_state(&restored.opt_state).unwrap();
+    let mut sync = build_grad_sync(CommMode::Subspace, world, &metas);
+    sync.load_state(&restored.sync).unwrap();
+    let mut comm = Communicator::new(world, CommModel::default());
+    for step in k..n {
+        let mut wg: Vec<Vec<Matrix>> =
+            (0..world).map(|w| grad_for(&metas, step, w)).collect();
+        let g = sync.reduce(&mut wg, opt.as_ref(), &mut comm);
+        opt.step(&mut params, &g, decaying_lr(step));
+        sync.after_step(opt.as_ref(), &mut comm);
+    }
+    assert_eq!(bits(&ref_params), bits(&params));
+    let _ = std::fs::remove_file(&path);
+}

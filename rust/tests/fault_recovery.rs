@@ -258,6 +258,7 @@ fn rollback_crash_restart_matches_uninterrupted() {
                     step: completed as u64,
                     optimizer: opt.name().to_string(),
                     opt_state: opt.save_state().unwrap(),
+                    sync: Vec::new(),
                 };
                 rot.save(completed as u64, &params, &state).unwrap();
             }
@@ -340,6 +341,7 @@ fn rollback_restores_across_step_plan_modes() {
                 step: completed as u64,
                 optimizer: opt.name().to_string(),
                 opt_state: opt.save_state().unwrap(),
+                sync: Vec::new(),
             };
             rot.save(completed as u64, &params, &state).unwrap();
         }
@@ -392,7 +394,12 @@ fn in_process_rollback_with_one_shot_fault_converges() {
     rot.save(
         0,
         &params,
-        &TrainState { step: 0, optimizer: opt.name().to_string(), opt_state: opt.save_state().unwrap() },
+        &TrainState {
+            step: 0,
+            optimizer: opt.name().to_string(),
+            opt_state: opt.save_state().unwrap(),
+            sync: Vec::new(),
+        },
     )
     .unwrap();
     let mut rollbacks = 0usize;
@@ -421,6 +428,7 @@ fn in_process_rollback_with_one_shot_fault_converges() {
                 step: completed as u64,
                 optimizer: opt.name().to_string(),
                 opt_state: opt.save_state().unwrap(),
+                sync: Vec::new(),
             };
             rot.save(completed as u64, &params, &state).unwrap();
         }
@@ -452,6 +460,7 @@ fn torn_snapshot_write_keeps_previous_and_retry_succeeds() {
         step: s,
         optimizer: opt.name().to_string(),
         opt_state: opt.save_state().unwrap(),
+        sync: Vec::new(),
     };
 
     let dir = scratch_dir("tear");

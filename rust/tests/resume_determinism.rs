@@ -299,6 +299,7 @@ fn v2_checkpoint_file_roundtrips_the_resume_state() {
         step: 4,
         optimizer: opt.name().to_string(),
         opt_state: opt.save_state().unwrap(),
+        sync: Vec::new(),
     };
     let path = std::env::temp_dir().join("fft_subspace_resume_e2e.bin");
     checkpoint::save_v2(&path, &params, &state).unwrap();
