@@ -42,6 +42,11 @@ test-faults:
 # comm, resume and fault suites under dense and subspace-compressed
 # collectives — compression must never change the bits of a fixed
 # (world, comm) point nor break checkpoint/rollback recovery.
+# The seventh loop sweeps the wire-format axis: FFT_SUBSPACE_WIRE runs the
+# same suites with the compressed coefficient blocks shipped as raw f32 and
+# as q8 (per-block scale + int8 payload, quantization error folded into the
+# EF residual) — q8 must keep every determinism, resume and recovery
+# contract of a fixed (world, comm, wire) point.
 test-matrix:
 	cd $(RUST_DIR) && for s in 0 1; do for t in 1 4; do \
 		echo "== FFT_SUBSPACE_SIMD=$$s FFT_SUBSPACE_THREADS=$$t =="; \
@@ -71,6 +76,12 @@ test-matrix:
 	cd $(RUST_DIR) && for c in dense subspace; do \
 		echo "== FFT_SUBSPACE_COMM=$$c (gradient sync) =="; \
 		FFT_SUBSPACE_COMM=$$c $(CARGO) test -q \
+			--test comm_determinism --test resume_determinism \
+			--test fault_recovery || exit 1; \
+	done
+	cd $(RUST_DIR) && for w in f32 q8; do \
+		echo "== FFT_SUBSPACE_WIRE=$$w (wire format) =="; \
+		FFT_SUBSPACE_WIRE=$$w $(CARGO) test -q \
 			--test comm_determinism --test resume_determinism \
 			--test fault_recovery || exit 1; \
 	done
@@ -120,9 +131,11 @@ bench-obs:
 	cd $(RUST_DIR) && $(CARGO) bench --bench bench_obs
 
 # Collectives + gradient-sync sweep (ring all-reduce, ZeRO broadcast
-# volume, dense-vs-subspace sync bytes / modeled α–β time / wall time per
-# world size); writes rust/BENCH_COLLECTIVES.json (override with
-# BENCH_COLLECTIVES_OUT=...).
+# volume, dense vs subspace×{f32,q8} sync bytes / T_u-amortized modeled
+# α–β time / wall time per world size, plus the sequential-vs-overlapped
+# refresh-boundary reduce); writes rust/BENCH_COLLECTIVES.json (override
+# with BENCH_COLLECTIVES_OUT=...). The wire sweep is explicit in the bench,
+# so one run covers every format.
 bench-comm:
 	cd $(RUST_DIR) && $(CARGO) bench --bench bench_collectives
 

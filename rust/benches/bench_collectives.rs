@@ -1,23 +1,32 @@
 //! Collectives bench: ring all-reduce and ZeRO broadcast volume/time across
 //! world sizes — the communication side of §2.3 (Trion broadcasts low-rank
 //! `o_t` + indices instead of the full update) — plus the dense-vs-subspace
-//! gradient-sync comparison (`comm=` subsystem, PR 9): wire bytes, modeled
-//! α–β time and wall time per world size, emitted machine-readable to
+//! gradient-sync comparison (`comm=` subsystem, PR 9/10): wire bytes,
+//! modeled α–β time and wall time per world size and wire format
+//! (`subspace_f32_*` vs `subspace_q8_*` tags), emitted machine-readable to
 //! `BENCH_COLLECTIVES.json` (`BENCH_COLLECTIVES_OUT` overrides the path).
+//! `FFT_SUBSPACE_WIRE` is deliberately NOT consulted — the sweep is
+//! explicit so one run covers every wire.
 //!
 //! JSON encoding: `grad_sync_wall` records are ordinary wall-time stats;
 //! `grad_sync_modeled` records carry the α–β modeled step time in the same
-//! seconds fields; `grad_sync_bytes` records reuse the nanosecond field as
-//! a plain byte count (`median_ns` == bytes moved per step) — the harness
-//! has no non-time channel, and a self-describing group name beats a
-//! second format.
+//! seconds fields, amortized over a full `T_u` refresh cycle so the
+//! refresh-boundary basis broadcast and agreement all-gather are counted;
+//! `grad_sync_bytes` records reuse the nanosecond field as a plain byte
+//! count (`median_ns` == bytes moved per steady step) — the harness has no
+//! non-time channel, and a self-describing group name beats a second
+//! format. `grad_sync_refresh_wall` times the refresh-boundary reduce
+//! itself, sequential (`seq_*`) vs pipelined behind staging (`overlap_*`).
+
+use std::sync::Arc;
 
 use fft_subspace::bench::models::square_stack;
 use fft_subspace::bench::{measure, write_bench_json, BenchRecord, BenchStats};
 use fft_subspace::coordinator::{
-    build_grad_sync, CommMode, CommModel, Communicator, ZeroSchedule,
+    build_grad_sync, CommMode, CommModel, Communicator, WireFormat, ZeroSchedule,
 };
 use fft_subspace::optim::{build_optimizer, LayerMeta, OptimizerConfig, OptimizerKind};
+use fft_subspace::parallel::ThreadPool;
 use fft_subspace::tensor::Matrix;
 use fft_subspace::util::{human, Pcg64};
 
@@ -75,23 +84,29 @@ fn main() {
     }
     println!();
 
-    // --- dense vs subspace gradient sync (comm= subsystem, PR 9) --------
+    // --- dense vs subspace gradient sync (comm= subsystem, PR 9/10) -----
     // A steady-state (non-refresh) sync step over a 12×256×256 stack at
-    // rank 32: subspace moves r/C = 1/8 of the dense volume per layer.
+    // rank 32: subspace moves r/C = 1/8 of the dense volume per layer, and
+    // `wire=q8` a further ~4× less on the compressed blocks.
     let dim = 256usize;
+    let t_u = 3usize; // refresh cadence — the modeled-time amortization window
     let metas: Vec<LayerMeta> = square_stack(12, dim);
     let cfg = OptimizerConfig {
         rank: 32,
-        update_interval: 3,
+        update_interval: t_u,
         threads: Some(1),
         ..Default::default()
     };
     let mut records: Vec<BenchRecord> = Vec::new();
     println!("gradient sync per step (12 layers 256x256, r=32, steady state):");
     for world in [2usize, 4, 8] {
-        for mode in [CommMode::Dense, CommMode::Subspace] {
+        for (mode, wire) in [
+            (CommMode::Dense, WireFormat::F32),
+            (CommMode::Subspace, WireFormat::F32),
+            (CommMode::Subspace, WireFormat::Q8),
+        ] {
             let mut opt = build_optimizer(&OptimizerKind::DctAdamW, &metas, &cfg);
-            let mut sync = build_grad_sync(mode, world, &metas);
+            let mut sync = build_grad_sync(mode, wire, world, &metas);
             let mut comm = Communicator::new(world, CommModel::default());
             let mut params: Vec<Matrix> =
                 metas.iter().map(|m| Matrix::zeros(m.rows, m.cols)).collect();
@@ -104,43 +119,60 @@ fn main() {
                         .collect()
                 })
                 .collect();
+            let mut g: Vec<Matrix> = Vec::new();
             // warm past the early refreshes (cadence 3: t = 1, 3) so the
             // measured reduce is a steady compressed step (t+1 = 5)
             for step in 0..4 {
                 let mut wg = base.clone();
-                let g = sync.reduce(&mut wg, opt.as_ref(), &mut comm);
+                sync.reduce(&mut wg, opt.as_ref(), &mut comm, &mut g);
                 opt.step(&mut params, &g, 1e-3 / (step + 1) as f32);
                 sync.after_step(opt.as_ref(), &mut comm);
             }
-            // one instrumented step for the byte / modeled-time deltas
+            // one instrumented reduce for the steady-step byte delta
             let b0 = comm.stats.all_reduce_bytes;
-            let m0 = comm.stats.modeled_secs;
             {
                 let mut wg = base.clone();
-                let _ = sync.reduce(&mut wg, opt.as_ref(), &mut comm);
+                sync.reduce(&mut wg, opt.as_ref(), &mut comm, &mut g);
             }
             let step_bytes = comm.stats.all_reduce_bytes - b0;
-            let step_modeled = comm.stats.modeled_secs - m0;
-            // wall time of the reduce itself (clone cost included in both
+            // modeled α–β time amortized over one full T_u cycle (steps
+            // t = 5, 6, 7 — the t = 6 refresh boundary inside): the dense
+            // refresh reduce, the basis broadcast and the agreement
+            // all-gather are all in the window. The PR-9 bench timed one
+            // steady step and amortized none of them, undercounting
+            // subspace traffic.
+            let m0 = comm.stats.modeled_secs;
+            for step in 4..4 + t_u {
+                let mut wg = base.clone();
+                sync.reduce(&mut wg, opt.as_ref(), &mut comm, &mut g);
+                opt.step(&mut params, &g, 1e-3 / (step + 1) as f32);
+                sync.after_step(opt.as_ref(), &mut comm);
+            }
+            let step_modeled = (comm.stats.modeled_secs - m0) / t_u as f64;
+            // wall time of the reduce itself (clone cost included in all
             // variants identically; the optimizer is NOT stepped, so every
             // iteration replays the same steady compressed step)
-            let st = measure(
-                &format!("grad_sync {} W={world}", mode.name()),
-                1,
-                5,
-                || {
-                    let mut wg = base.clone();
-                    sync.reduce(&mut wg, opt.as_ref(), &mut comm)
-                },
-            );
+            let label = if mode == CommMode::Dense {
+                "dense".to_string()
+            } else {
+                format!("{}:{}", mode.name(), wire.name())
+            };
+            let st = measure(&format!("grad_sync {label} W={world}"), 1, 5, || {
+                let mut wg = base.clone();
+                sync.reduce(&mut wg, opt.as_ref(), &mut comm, &mut g);
+            });
             println!(
-                "  {:<9} W={world}  bytes/step={:<12} modeled={:>9.1} µs  {}",
-                mode.name(),
+                "  {:<13} W={world}  bytes/step={:<12} modeled={:>9.1} µs  {}",
+                label,
                 human::bytes(step_bytes),
                 step_modeled * 1e6,
                 st.report()
             );
-            let tag = format!("{}_w{world}", mode.name());
+            let tag = if mode == CommMode::Dense {
+                format!("dense_w{world}")
+            } else {
+                format!("subspace_{}_w{world}", wire.name())
+            };
             records.push(BenchRecord::new("grad_sync_wall", &tag, dim, dim, 32, st));
             records.push(scalar_record("grad_sync_modeled", &tag, dim, 32, step_modeled));
             records.push(scalar_record(
@@ -149,6 +181,65 @@ fn main() {
                 dim,
                 32,
                 step_bytes as f64 * 1e-9, // median_ns == bytes
+            ));
+        }
+    }
+
+    // --- refresh-boundary reduce: sequential vs overlapped (PR 10) ------
+    // The refresh step's dense all-reduce used to serialize into the p99
+    // spike; with a pool-equipped communicator the per-layer ring transfer
+    // runs behind the next layer's staging, bit-identically.
+    println!("\nrefresh-boundary reduce (dense ring overlapped with staging):");
+    for world in [2usize, 4, 8] {
+        for pooled in [false, true] {
+            let mut opt = build_optimizer(&OptimizerKind::DctAdamW, &metas, &cfg);
+            let mut sync =
+                build_grad_sync(CommMode::Subspace, WireFormat::F32, world, &metas);
+            let mut comm = if pooled {
+                let pool = Arc::new(ThreadPool::new(2));
+                Communicator::with_pool(world, CommModel::default(), pool)
+            } else {
+                Communicator::new(world, CommModel::default())
+            };
+            let mut params: Vec<Matrix> =
+                metas.iter().map(|m| Matrix::zeros(m.rows, m.cols)).collect();
+            let mut rng = Pcg64::seed(11);
+            let base: Vec<Vec<Matrix>> = (0..world)
+                .map(|_| {
+                    metas
+                        .iter()
+                        .map(|m| Matrix::randn(m.rows, m.cols, 0.1, &mut rng))
+                        .collect()
+                })
+                .collect();
+            let mut g: Vec<Matrix> = Vec::new();
+            // warm to t = 2: the next reduce sits on the t = 3 refresh
+            // boundary, and repeating it without stepping the optimizer
+            // replays the refresh-path reduce every iteration
+            for step in 0..2 {
+                let mut wg = base.clone();
+                sync.reduce(&mut wg, opt.as_ref(), &mut comm, &mut g);
+                opt.step(&mut params, &g, 1e-3 / (step + 1) as f32);
+                sync.after_step(opt.as_ref(), &mut comm);
+            }
+            let name = if pooled { "overlap" } else { "seq" };
+            let st = measure(
+                &format!("grad_sync_refresh {name} W={world}"),
+                1,
+                5,
+                || {
+                    let mut wg = base.clone();
+                    sync.reduce(&mut wg, opt.as_ref(), &mut comm, &mut g);
+                },
+            );
+            println!("  {:<8} W={world}  {}", name, st.report());
+            records.push(BenchRecord::new(
+                "grad_sync_refresh_wall",
+                &format!("{name}_w{world}"),
+                dim,
+                dim,
+                32,
+                st,
             ));
         }
     }

@@ -67,12 +67,24 @@ pub struct Communicator {
     pub stats: CommStats,
     /// When present, ring-step transfers run on real threads.
     pool: Option<Arc<ThreadPool>>,
+    /// Reused per-call ring scratch (chunk bounds + buffer pointers) —
+    /// sized on the first all-reduce so steady compressed steps stay
+    /// inside the counting-allocator proof (`tests/alloc_steady_state.rs`).
+    bounds_scratch: Vec<(usize, usize)>,
+    ptr_scratch: Vec<SendPtr<f32>>,
 }
 
 impl Communicator {
     pub fn new(world: usize, model: CommModel) -> Self {
         assert!(world >= 1);
-        Communicator { world, model, stats: CommStats::default(), pool: None }
+        Communicator {
+            world,
+            model,
+            stats: CommStats::default(),
+            pool: None,
+            bounds_scratch: Vec::new(),
+            ptr_scratch: Vec::new(),
+        }
     }
 
     /// Communicator whose ring transfers execute on `pool`'s threads
@@ -83,6 +95,13 @@ impl Communicator {
         c
     }
 
+    /// The attached transfer pool, if any — the subspace sync layer borrows
+    /// it to overlap a refresh-boundary ring transfer with the next layer's
+    /// staging work (`coordinator::compressed`).
+    pub fn pool(&self) -> Option<Arc<ThreadPool>> {
+        self.pool.clone()
+    }
+
     /// Ring all-reduce (average) over per-worker gradient replicas.
     /// `buffers[w]` is worker w's copy; on return all copies hold the mean.
     ///
@@ -90,6 +109,24 @@ impl Communicator {
     /// phase moves `(W−1)/W · N` elements per worker — the standard
     /// `2·(W−1)/W·N` total that the stats record.
     pub fn all_reduce_mean(&mut self, buffers: &mut [Matrix]) {
+        self.all_reduce_mean_wire(buffers, 4, 0);
+    }
+
+    /// [`Communicator::all_reduce_mean`] with an explicit wire model: each
+    /// per-hop transfer of `k` elements is accounted as
+    /// `k·bytes_per_elem + block_overhead` bytes. Dense f32 traffic is
+    /// `(4, 0)` — byte-identical to the historical accounting; the q8
+    /// coefficient wire is `(1, 4)` (one byte per element plus the f32
+    /// scale riding with every block). The *arithmetic* is always f32 and
+    /// bit-identical across wire models — callers quantize the payload
+    /// before handing it to the ring, so only the byte/time model changes
+    /// here.
+    pub fn all_reduce_mean_wire(
+        &mut self,
+        buffers: &mut [Matrix],
+        bytes_per_elem: u64,
+        block_overhead: u64,
+    ) {
         let w = buffers.len();
         assert_eq!(w, self.world);
         if w == 1 {
@@ -101,11 +138,14 @@ impl Communicator {
             assert_eq!(b.data.len(), n, "all_reduce shape mismatch");
         }
         let chunk = n.div_ceil(w);
-        let bounds: Vec<(usize, usize)> = (0..w)
-            .map(|c| (c * chunk, ((c + 1) * chunk).min(n)))
-            .collect();
-        let ptrs: Vec<SendPtr<f32>> =
-            buffers.iter_mut().map(|b| SendPtr(b.data.as_mut_ptr())).collect();
+        // move the scratch out so the borrow checker sees the accounting
+        // calls below as disjoint from it (capacity survives the round trip)
+        let mut bounds = std::mem::take(&mut self.bounds_scratch);
+        let mut ptrs = std::mem::take(&mut self.ptr_scratch);
+        bounds.clear();
+        bounds.extend((0..w).map(|c| (c * chunk, ((c + 1) * chunk).min(n))));
+        ptrs.clear();
+        ptrs.extend(buffers.iter_mut().map(|b| SendPtr(b.data.as_mut_ptr())));
 
         // Phase 1: reduce-scatter. Step s: worker i sends chunk (i−s) to
         // worker i+1, which accumulates. After W−1 steps worker i owns the
@@ -115,7 +155,7 @@ impl Communicator {
             for i in 0..w {
                 let (lo, hi) = bounds[(i + w - s) % w];
                 if lo < hi {
-                    self.account_ar((hi - lo) as u64 * 4);
+                    self.account_ar((hi - lo) as u64 * bytes_per_elem + block_overhead);
                 }
             }
         }
@@ -139,10 +179,12 @@ impl Communicator {
             for i in 0..w {
                 let (lo, hi) = bounds[(i + 1 + w - s) % w];
                 if lo < hi {
-                    self.account_ar((hi - lo) as u64 * 4);
+                    self.account_ar((hi - lo) as u64 * bytes_per_elem + block_overhead);
                 }
             }
         }
+        self.bounds_scratch = bounds;
+        self.ptr_scratch = ptrs;
         self.stats.calls += 1;
     }
 
@@ -336,6 +378,34 @@ mod tests {
         let got = comm.stats.all_reduce_bytes;
         let tol = want / 10; // chunk rounding
         assert!(got.abs_diff(want) <= tol, "got={got} want≈{want}");
+    }
+
+    #[test]
+    fn wire_accounting_models_q8_blocks() {
+        let w = 4;
+        let n = 256usize; // divides evenly: every chunk is n/w, no rounding
+        let mut rng = Pcg64::seed(7);
+        let bufs: Vec<Matrix> =
+            (0..w).map(|_| Matrix::randn(1, n, 1.0, &mut rng)).collect();
+        let mut f32_bufs = bufs.clone();
+        let mut q8_bufs = bufs;
+        let mut c_f = Communicator::new(w, CommModel::default());
+        let mut c_q = Communicator::new(w, CommModel::default());
+        c_f.all_reduce_mean_wire(&mut f32_bufs, 4, 0);
+        c_q.all_reduce_mean_wire(&mut q8_bufs, 1, 4);
+        // the wire model never touches the arithmetic
+        for (a, b) in f32_bufs.iter().zip(&q8_bufs) {
+            assert_eq!(a, b);
+        }
+        // 2·(W−1) ring steps × W transfers, each transfer carrying its
+        // chunk (bytes_per_elem·k) plus the per-block scale (overhead)
+        let transfers = 2 * (w as u64 - 1) * w as u64;
+        assert_eq!(c_f.stats.all_reduce_bytes, 2 * (w as u64 - 1) * n as u64 * 4);
+        assert_eq!(
+            c_q.stats.all_reduce_bytes,
+            2 * (w as u64 - 1) * n as u64 + transfers * 4
+        );
+        assert_eq!(c_f.stats.hops, c_q.stats.hops);
     }
 
     #[test]

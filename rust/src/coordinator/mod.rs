@@ -30,6 +30,51 @@ use crate::optim::Optimizer;
 use crate::tensor::Matrix;
 use anyhow::Result;
 
+/// Wire format of the subspace-compressed coefficient blocks
+/// (`coordinator::compressed`): `f32` ships the r×R blocks as-is, `q8`
+/// quantizes each block through the `StateStore` Q8 kernels before the
+/// ring moves it (per-block scale rides with the payload; the quantization
+/// error folds into the per-worker EF residual). Config key `wire=`, env
+/// `FFT_SUBSPACE_WIRE`; default f32. Dense reductions (comm=dense,
+/// refresh-boundary and fallback layers) always move f32 — the format
+/// only applies to coefficient blocks. Never part of the checkpoint
+/// fingerprint.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum WireFormat {
+    #[default]
+    F32,
+    Q8,
+}
+
+impl WireFormat {
+    pub fn parse(s: &str) -> Result<WireFormat> {
+        match s.to_ascii_lowercase().as_str() {
+            "f32" | "fp32" => Ok(WireFormat::F32),
+            "q8" | "int8" => Ok(WireFormat::Q8),
+            other => anyhow::bail!(
+                "unknown wire format {other:?} (expected f32 | q8)"
+            ),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            WireFormat::F32 => "f32",
+            WireFormat::Q8 => "q8",
+        }
+    }
+
+    /// Env resolution (`FFT_SUBSPACE_WIRE`): unset or unrecognized falls
+    /// back to the f32 default — the strict surface is the config key
+    /// (`wire=`), which goes through [`WireFormat::parse`].
+    pub fn from_env() -> WireFormat {
+        match std::env::var("FFT_SUBSPACE_WIRE") {
+            Ok(v) => WireFormat::parse(&v).unwrap_or(WireFormat::F32),
+            Err(_) => WireFormat::F32,
+        }
+    }
+}
+
 /// Which gradient-synchronization path the trainer drives: `dense`
 /// all-reduces full C×R gradients (the PR-2 baseline), `subspace` projects
 /// each worker's gradient into the layer's current basis first and
@@ -83,14 +128,18 @@ pub trait GradSync {
     fn name(&self) -> &'static str;
 
     /// Reduce `worker_grads[w][pi]` across workers into one gradient per
-    /// parameter. May consume (zero-size-replace) the per-worker buffers.
-    /// All byte movement is accounted on `comm`.
+    /// parameter, delivered into `out` (cleared first — the caller keeps
+    /// one reusable vector so steady compressed steps stay allocation-free,
+    /// `tests/alloc_steady_state.rs`). May consume (zero-size-replace) the
+    /// per-worker buffers; buffers a scheme only stages through are handed
+    /// back. All byte movement is accounted on `comm`.
     fn reduce(
         &mut self,
         worker_grads: &mut [Vec<Matrix>],
         opt: &dyn Optimizer,
         comm: &mut Communicator,
-    ) -> Vec<Matrix>;
+        out: &mut Vec<Matrix>,
+    );
 
     /// Called after `opt.step()` consumed the reduced gradients — the
     /// refresh boundary hook where compressed sync accounts the rank-0
@@ -114,14 +163,17 @@ pub trait GradSync {
 }
 
 /// Build the sync scheme for a mode — `world` workers over `n_params`
-/// parameters described by `metas`.
+/// parameters described by `metas`, coefficient blocks moving as `wire`
+/// (dense sync ignores the wire format: it never forms coefficient
+/// blocks).
 pub fn build_grad_sync(
     mode: CommMode,
+    wire: WireFormat,
     world: usize,
     metas: &[crate::optim::LayerMeta],
 ) -> Box<dyn GradSync> {
     match mode {
         CommMode::Dense => Box::new(DenseSync),
-        CommMode::Subspace => Box::new(SubspaceSync::new(world, metas)),
+        CommMode::Subspace => Box::new(SubspaceSync::new(world, metas, wire)),
     }
 }

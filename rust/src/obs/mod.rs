@@ -168,7 +168,10 @@ pub struct Counters {
     pub dct2_cache_hits: AtomicU64,
     pub dct2_cache_builds: AtomicU64,
     /// Bytes moved by ring all-reduce (mirrors `CommStats`, which is
-    /// per-communicator; this is the run-wide total).
+    /// per-communicator; this is the run-wide total). Under `wire=q8`
+    /// this counts the quantized on-wire volume — 1 B/element plus the
+    /// per-block scale header — not the f32 equivalent, so the q8 wire
+    /// saving is directly visible in the counter.
     pub allreduce_bytes: AtomicU64,
     /// Bytes moved by tree broadcasts (ZeRO update fan-out, subspace
     /// basis sync — mirrors `CommStats::broadcast_bytes` run-wide).

@@ -355,6 +355,12 @@ pub struct OptimizerConfig {
     /// testing oracle). Bit-identical by contract; config key `step-plan`,
     /// env `FFT_SUBSPACE_STEP_PLAN`.
     pub step_plan: crate::optim::engine::StepPlanMode,
+    /// Row cap for shape-batched step-plan groups: groups whose stacked
+    /// row count would exceed the cap are split (bounds transient stack
+    /// memory; bit-identical by the fusion contract). `0` = unlimited.
+    /// Config key `max-group-rows`; the env knob
+    /// `FFT_SUBSPACE_MAX_GROUP_ROWS` still applies when this is 0.
+    pub max_group_rows: usize,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -382,6 +388,7 @@ impl Default for OptimizerConfig {
             seed: 0,
             threads: None,
             step_plan: crate::optim::engine::StepPlanMode::from_env(),
+            max_group_rows: 0,
         }
     }
 }

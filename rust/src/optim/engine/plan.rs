@@ -231,15 +231,22 @@ impl EnginePlan {
 
     /// Partition layers into shape groups and preallocate each group's
     /// batch buffers. Pure function of the spec, the layer shapes and the
-    /// `FFT_SUBSPACE_MAX_GROUP_ROWS` cap — the same plan falls out after
-    /// any `load_state`.
+    /// group-row cap — the same plan falls out after any `load_state`. The
+    /// cap comes from the spec (config key `max-group-rows=`) when set,
+    /// else from the `FFT_SUBSPACE_MAX_GROUP_ROWS` env knob — config wins,
+    /// matching every other dual-surface knob.
     pub(crate) fn build(
         spec: &OptimizerSpec,
         metas: &[LayerMeta],
         states: &[EngineLayer],
         shared: &BTreeMap<usize, Arc<SharedDct>>,
     ) -> EnginePlan {
-        Self::build_with_cap(spec, metas, states, shared, max_group_rows_from_env())
+        let cap = if spec.max_group_rows > 0 {
+            spec.max_group_rows
+        } else {
+            max_group_rows_from_env()
+        };
+        Self::build_with_cap(spec, metas, states, shared, cap)
     }
 
     /// [`EnginePlan::build`] with an explicit group-size cap: a group may
@@ -574,6 +581,23 @@ mod tests {
         // a cap below a single layer's rows degrades to singleton groups
         // (a layer can never be dropped, only isolated)
         assert_eq!(cap_groups(8), 6);
+    }
+
+    #[test]
+    fn spec_group_cap_feeds_plan_build() {
+        // the config-key surface: a spec-carried cap reaches `build`
+        // without the env knob (config wins over env when both are set)
+        let metas: Vec<LayerMeta> = (0..6)
+            .map(|i| LayerMeta::new(&format!("w{i}"), 16, 8, ParamKind::Linear))
+            .collect();
+        let eng = OptimizerSpec::dct_adamw(4)
+            .update_interval(3)
+            .threads(Some(1))
+            .max_group_rows(32)
+            .build(&metas);
+        let plan =
+            EnginePlan::build(&eng.spec, &eng.metas, &eng.states, &eng.shared);
+        assert_eq!(plan.group_count(), 3); // 2 layers (32 rows) per group
     }
 
     #[test]

@@ -111,6 +111,11 @@ pub struct OptimizerSpec {
     /// `describe()`/`resolve_name()` and the checkpoint fingerprint —
     /// checkpoints resume across modes.
     pub step_plan: StepPlanMode,
+    /// Row cap for shape-batched step-plan groups (`0` = unlimited; falls
+    /// back to `FFT_SUBSPACE_MAX_GROUP_ROWS` when unset). Splitting is
+    /// bit-identical by the fusion contract, so this — like `step_plan` —
+    /// stays out of `describe()` and the checkpoint fingerprint.
+    pub max_group_rows: usize,
     name: Option<String>,
 }
 
@@ -139,6 +144,7 @@ impl OptimizerSpec {
             seed_shift: 8,
             threads: None,
             step_plan: StepPlanMode::from_env(),
+            max_group_rows: 0,
             name: None,
         }
     }
@@ -279,6 +285,13 @@ impl OptimizerSpec {
         self
     }
 
+    /// Step-plan group row cap (`max-group-rows=N`; `0` = unlimited /
+    /// defer to the env knob).
+    pub fn max_group_rows(mut self, cap: usize) -> Self {
+        self.max_group_rows = cap;
+        self
+    }
+
     /// Override the reported optimizer name (otherwise derived from the
     /// composition, matching the legacy preset names exactly).
     pub fn named(mut self, name: &str) -> Self {
@@ -329,7 +342,8 @@ impl OptimizerSpec {
                 .instrument(cfg.instrument)
                 .seed(cfg.seed)
                 .threads(cfg.threads)
-                .step_plan(cfg.step_plan),
+                .step_plan(cfg.step_plan)
+                .max_group_rows(cfg.max_group_rows),
         )
     }
 

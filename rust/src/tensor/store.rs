@@ -27,7 +27,11 @@
 //! Q8 arithmetic is exactly the historical `EfBuffer` Q8 arithmetic
 //! (`scale = |x|max/127 + 1e-12`, round-half-away, clamp ±127), so the
 //! DCT-AdamW preset's quantized error feedback is bit-identical to the
-//! pre-store implementation by construction.
+//! pre-store implementation by construction. The same kernel pair also
+//! backs the `wire=q8` collectives encoding
+//! (`coordinator::compressed::q8_wire_encode`): one quantizer, one set of
+//! pinned semantics, whether the bytes persist in optimizer state or ride
+//! the ring.
 //!
 //! Stores serialize bit-exactly ([`StateStore::save`] /
 //! [`StateStore::load_from`]) — the substrate of the checkpoint-v2 resume

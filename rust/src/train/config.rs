@@ -4,7 +4,7 @@
 
 use anyhow::Result;
 
-use crate::coordinator::CommMode;
+use crate::coordinator::{CommMode, WireFormat};
 use crate::obs::ObsTier;
 use crate::optim::common::EfMode;
 use crate::optim::{
@@ -111,6 +111,11 @@ pub struct TrainConfig {
     /// set. Never part of the checkpoint fingerprint — resumes cross modes
     /// freely.
     pub comm: CommMode,
+    /// `wire=f32|q8`: wire format of the subspace-compressed coefficient
+    /// blocks (see `coordinator::compressed`); `F32` here falls back to
+    /// `FFT_SUBSPACE_WIRE` at run start, so the config wins when both are
+    /// set. Like `comm`, never part of the checkpoint fingerprint.
+    pub wire: WireFormat,
 }
 
 impl Default for TrainConfig {
@@ -149,6 +154,7 @@ impl Default for TrainConfig {
             trace_out: None,
             obs_sample: 1,
             comm: CommMode::Dense,
+            wire: WireFormat::F32,
         }
     }
 }
@@ -371,6 +377,8 @@ impl TrainConfig {
             ("obs", s(self.obs.name())),
             ("obs_sample", num(self.obs_sample as f64)),
             ("comm", s(self.comm.name())),
+            ("wire", s(self.wire.name())),
+            ("max_group_rows", num(self.opt.max_group_rows as f64)),
         ];
         fields.extend(extra);
         obj(fields)
@@ -482,6 +490,12 @@ impl TrainConfig {
             }
             // gradient-sync scheme (see `coordinator::compressed`)
             "comm" => self.comm = CommMode::parse(value)?,
+            // coefficient-block wire format for comm=subspace
+            "wire" => self.wire = WireFormat::parse(value)?,
+            // step-plan group row cap (0 = unlimited / defer to env)
+            "max-group-rows" | "max_group_rows" => {
+                self.opt.max_group_rows = value.parse()?
+            }
             // observability tier + exporters (see `crate::obs`)
             "obs" => self.obs = ObsTier::parse(value)?,
             "trace-out" | "trace_out" => self.trace_out = Some(value.into()),
@@ -840,6 +854,42 @@ mod tests {
         assert_eq!(d.req("comm").unwrap().as_str().unwrap(), "dense");
         // bad values are rejected at parse time
         assert!(c.apply("comm", "zip").is_err());
+    }
+
+    #[test]
+    fn wire_key_round_trips() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.wire, WireFormat::F32);
+        c.apply("wire", "q8").unwrap();
+        assert_eq!(c.wire, WireFormat::Q8);
+        let back = Json::parse(&c.to_json().to_string()).unwrap();
+        assert_eq!(back.req("wire").unwrap().as_str().unwrap(), "q8");
+        let mut replay = TrainConfig::default();
+        replay.apply("wire", back.req("wire").unwrap().as_str().unwrap()).unwrap();
+        assert_eq!(replay.wire, WireFormat::Q8);
+        // default dumps as f32
+        let d = Json::parse(&TrainConfig::default().to_json().to_string()).unwrap();
+        assert_eq!(d.req("wire").unwrap().as_str().unwrap(), "f32");
+        // bad values are rejected at parse time
+        assert!(c.apply("wire", "bf16").is_err());
+    }
+
+    #[test]
+    fn max_group_rows_key_round_trips() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.opt.max_group_rows, 0);
+        c.apply("max-group-rows", "128").unwrap();
+        assert_eq!(c.opt.max_group_rows, 128);
+        let back = Json::parse(&c.to_json().to_string()).unwrap();
+        assert_eq!(back.req("max_group_rows").unwrap().as_usize().unwrap(), 128);
+        let mut replay = TrainConfig::default();
+        replay.apply("max_group_rows", "128").unwrap();
+        assert_eq!(replay.opt.max_group_rows, 128);
+        // default dumps as 0 (unlimited / defer to the env knob)
+        let d = Json::parse(&TrainConfig::default().to_json().to_string()).unwrap();
+        assert_eq!(d.req("max_group_rows").unwrap().as_usize().unwrap(), 0);
+        // bad values are rejected at parse time
+        assert!(c.apply("max-group-rows", "lots").is_err());
     }
 
     #[test]

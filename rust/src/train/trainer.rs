@@ -8,8 +8,8 @@ use std::path::PathBuf;
 use anyhow::{Context, Result};
 
 use crate::coordinator::{
-    build_grad_sync, CommMode, CommModel, Communicator, GradSync, WorkerSet,
-    ZeroSchedule,
+    build_grad_sync, CommMode, CommModel, Communicator, GradSync, WireFormat,
+    WorkerSet, ZeroSchedule,
 };
 use crate::data::{BatchLoader, CorpusConfig, SyntheticCorpus};
 use crate::obs::{self, trace::TraceWriter, ObsTier};
@@ -156,8 +156,15 @@ impl Trainer {
         } else {
             CommMode::from_env()
         };
+        // wire format of the compressed coefficient blocks: same
+        // config-wins-over-env precedence as `comm=`
+        let wire = if cfg.wire != WireFormat::F32 {
+            cfg.wire
+        } else {
+            WireFormat::from_env()
+        };
         let mut sync: Box<dyn GradSync> =
-            build_grad_sync(comm_mode, cfg.workers, &self.metas);
+            build_grad_sync(comm_mode, wire, cfg.workers, &self.metas);
         let base_loader = BatchLoader::new(&self.corpus.train, self.spec.seq_len, cfg.seed);
         let mut workers: Vec<BatchLoader> = (0..cfg.workers)
             .map(|w| base_loader.worker(w, cfg.seed))
@@ -276,6 +283,9 @@ impl Trainer {
                 ("total_bytes", num(rep.total() as f64)),
                 ("per_layer", to_obj(&rep.per_layer)),
                 ("shared", to_obj(&rep.shared)),
+                // per-worker persisted sync state (EF residuals): ZeRO-
+                // sharded, so constant in world size under comm=subspace
+                ("sync_state_bytes", num(sync.state_bytes() as f64)),
             ]))?;
         }
 
@@ -331,7 +341,9 @@ impl Trainer {
             // r×R coefficient all-reduce under comm=subspace) -------------
             let t0 = obs::now_us();
             let grads: Vec<Matrix> = phases.time("allreduce", || {
-                sync.reduce(&mut worker_grads, opt.as_ref(), &mut comm)
+                let mut reduced = Vec::new();
+                sync.reduce(&mut worker_grads, opt.as_ref(), &mut comm, &mut reduced);
+                reduced
             });
             trace_phase(&mut tracer, "allreduce", t0, step)?;
 
